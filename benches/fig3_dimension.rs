@@ -1,0 +1,6 @@
+//! Bench: paper Fig 3 / Table 10 — solve time vs matrix dimension.
+use scsf::bench_support::{tables, Scale};
+
+fn main() {
+    tables::fig3_dimension(&Scale::quick(), &[10, 14, 18, 22, 26]).print();
+}

@@ -1,0 +1,97 @@
+//! Micro-benchmarks of the numerical kernels on SCSF's hot path
+//! (EXPERIMENTS.md §Perf): fused-SpMM Chebyshev filter, plain SpMM,
+//! Householder QR, Rayleigh–Ritz Gram product, and the dense symmetric
+//! eigensolver that backs every projected problem.
+
+use scsf::bench_support::harness::{bench_median, gflops};
+use scsf::eig::chebyshev::{chebyshev_filter, filter_flop_cost, FilterParams};
+use scsf::linalg::qr::householder_qr;
+use scsf::linalg::symeig::sym_eig;
+use scsf::linalg::Mat;
+use scsf::operators::{self, GenOptions, OperatorKind};
+use scsf::rng::Xoshiro256pp;
+
+fn main() {
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+
+    for grid in [32usize, 48, 64] {
+        let n = grid * grid;
+        let problem = operators::generate(
+            OperatorKind::Helmholtz,
+            GenOptions {
+                grid,
+                ..Default::default()
+            },
+            1,
+            7,
+        )
+        .remove(0);
+        let a = problem.matrix;
+        let k = 24;
+        let m = 20;
+        let y = Mat::randn(n, k, &mut rng);
+        let params = FilterParams {
+            degree: m,
+            lower: 100.0,
+            upper: a.norm1() * 1.05,
+            target: 10.0,
+        };
+
+        let flops_filter = filter_flop_cost(&a, k, m);
+        let r = bench_median(
+            &format!("chebyshev_filter n={n} k={k} m={m} (fused SpMM)"),
+            1,
+            5,
+            || {
+                std::hint::black_box(chebyshev_filter(&a, &y, &params));
+            },
+        );
+        println!("{}  [{:.2} GF/s]", r.report(), gflops(flops_filter, r.median_secs));
+
+        let r = bench_median(&format!("spmm n={n} k={k}"), 1, 5, || {
+            std::hint::black_box(a.spmm_alloc(&y));
+        });
+        println!(
+            "{}  [{:.2} GF/s]",
+            r.report(),
+            gflops(2 * (a.nnz() * k) as u64, r.median_secs)
+        );
+
+        let r = bench_median(&format!("householder_qr n={n} k={k}"), 1, 5, || {
+            std::hint::black_box(householder_qr(&y));
+        });
+        println!(
+            "{}  [{:.2} GF/s]",
+            r.report(),
+            gflops((8 * n * k * k) as u64, r.median_secs)
+        );
+
+        let ay = a.spmm_alloc(&y);
+        let r = bench_median(&format!("gram (RR) n={n} k={k}"), 1, 5, || {
+            std::hint::black_box(y.t_matmul(&ay));
+        });
+        println!(
+            "{}  [{:.2} GF/s]",
+            r.report(),
+            gflops(2 * (n * k * k) as u64, r.median_secs)
+        );
+    }
+
+    for kdim in [32usize, 64, 128] {
+        let g = {
+            let mut rng = Xoshiro256pp::seed_from_u64(2);
+            let a = Mat::randn(kdim, kdim, &mut rng);
+            let mut s = Mat::zeros(kdim, kdim);
+            for i in 0..kdim {
+                for j in 0..kdim {
+                    s[(i, j)] = 0.5 * (a[(i, j)] + a[(j, i)]);
+                }
+            }
+            s
+        };
+        let r = bench_median(&format!("sym_eig k={kdim}"), 1, 5, || {
+            std::hint::black_box(sym_eig(&g));
+        });
+        println!("{}", r.report());
+    }
+}

@@ -1,0 +1,16 @@
+//! Bench: paper Tables 11–14 — component breakdown and hyperparameter
+//! sweeps (degree m, inherited-subspace size, truncation p0).
+use scsf::bench_support::{tables, Scale};
+
+fn main() {
+    let scale = Scale::quick();
+    tables::table11(&scale).print();
+    println!();
+    tables::table12(&scale, &[12, 16, 20, 24, 28, 32, 36, 40]).print();
+    println!();
+    let l = *scale.ls.last().unwrap();
+    let guards: Vec<usize> = (1..=6).map(|i| i * l / 8 + 1).collect();
+    tables::table13(&scale, &guards).print();
+    println!();
+    tables::table14(&scale, &[2, 4, scale.p0, scale.p0 * 2]).print();
+}

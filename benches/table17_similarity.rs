@@ -1,0 +1,7 @@
+//! Bench: paper Table 17 — dataset similarity (perturbation size) vs
+//! average solve time.
+use scsf::bench_support::{tables, Scale};
+
+fn main() {
+    tables::table17(&Scale::quick()).print();
+}

@@ -1,0 +1,12 @@
+//! Bench: paper Tables 18–20 — discontinuous (mixed) datasets, FEM
+//! parameterization, and high-frequency energy ratios.
+use scsf::bench_support::{tables, Scale};
+
+fn main() {
+    let scale = Scale::quick();
+    tables::table18(&scale, &[(4, 4), (3, 4), (2, 4), (1, 4), (0, 4)]).print();
+    println!();
+    tables::table19(&scale).print();
+    println!();
+    tables::table20(&scale).print();
+}

@@ -1,0 +1,11 @@
+//! Bench: paper Table 1 / Tables 6–9 / Fig 1 (right) — main solver
+//! comparison across all four datasets (quick scale).
+use scsf::bench_support::{tables, Scale};
+
+fn main() {
+    let scale = Scale::quick();
+    for t in tables::table1(&scale) {
+        t.print();
+        println!();
+    }
+}

@@ -1,0 +1,6 @@
+//! Bench: paper Table 2 — warm-started baseline variants (`*`) vs SCSF.
+use scsf::bench_support::{tables, Scale};
+
+fn main() {
+    tables::table2(&Scale::quick()).print();
+}

@@ -1,0 +1,10 @@
+//! Bench: paper Table 3 (sorting ablation: time/iters/flops) and
+//! Table 5 (sort-quality equivalence of greedy vs truncated FFT).
+use scsf::bench_support::{tables, Scale};
+
+fn main() {
+    let scale = Scale::quick();
+    tables::table3(&scale).print();
+    println!();
+    tables::table5(&scale).print();
+}

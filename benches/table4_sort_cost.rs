@@ -1,0 +1,7 @@
+//! Bench: paper Table 4 — sorting cost, full greedy vs truncated FFT,
+//! as dataset size grows.
+use scsf::bench_support::{tables, Scale};
+
+fn main() {
+    tables::table4(&Scale::quick(), &[50, 200, 800]).print();
+}

@@ -1,0 +1,58 @@
+//! Quickstart: generate a small Helmholtz eigenvalue dataset with SCSF
+//! and compare against the plain-ChFSI baseline.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use scsf::coordinator::config::GenConfig;
+use scsf::coordinator::pipeline::{generate_dataset, generate_problems};
+use scsf::eig::chfsi::ChfsiOptions;
+use scsf::eig::scsf::{solve_sequence, ScsfOptions};
+use scsf::eig::EigOptions;
+use scsf::operators::OperatorKind;
+use scsf::sort::SortMethod;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = GenConfig {
+        kind: OperatorKind::Helmholtz,
+        grid: 24,      // matrix dimension 576
+        n_problems: 8, // dataset size N
+        n_eigs: 12,    // L smallest eigenpairs per problem
+        tol: 1e-8,
+        seed: 7,
+        shards: 1, // this container is single-core; shards>1 helps on multi-core
+        ..GenConfig::default()
+    };
+
+    // One call generates, sorts, solves, validates, and writes the
+    // dataset — the paper's Figure 1 end to end.
+    let out = std::env::temp_dir().join("scsf_quickstart");
+    let report = generate_dataset(&cfg, &out)?;
+    println!("SCSF pipeline: {}", report.summary());
+
+    // Baseline for comparison: same problems, random init per problem
+    // (the ChFSI column of the paper's Table 1).
+    let problems = generate_problems(&cfg);
+    let baseline = solve_sequence(
+        &problems,
+        &ScsfOptions {
+            chfsi: ChfsiOptions::from_eig(&EigOptions {
+                n_eigs: cfg.n_eigs,
+                tol: cfg.tol,
+                max_iters: 500,
+                seed: 0,
+            }),
+            sort: SortMethod::None,
+            warm_start: false,
+        },
+    );
+    println!(
+        "ChFSI baseline: avg {:.3}s/problem | SCSF: avg {:.3}s/problem | speedup {:.2}x",
+        baseline.avg_secs(),
+        report.avg_solve_secs,
+        baseline.avg_secs() / report.avg_solve_secs
+    );
+    println!("dataset written to {}", out.display());
+    Ok(())
+}

@@ -1,0 +1,51 @@
+//! Regenerate every paper table/figure in one shot (quick scale by
+//! default; pass `--scale standard` or `--scale paper`).
+//!
+//! ```bash
+//! cargo run --release --example repro_tables [-- --scale standard]
+//! ```
+
+use scsf::bench_support::{tables, Scale};
+
+fn main() {
+    let args: Vec<String> = std::env::args().collect();
+    let scale_name = args
+        .iter()
+        .position(|a| a == "--scale")
+        .and_then(|i| args.get(i + 1).cloned())
+        .unwrap_or_else(|| "quick".to_string());
+    let scale = Scale::parse(&scale_name).expect("scale: quick|standard|paper");
+    println!("# SCSF paper-table reproduction — scale: {scale_name}\n");
+
+    for t in tables::table1(&scale) {
+        t.print();
+        println!();
+    }
+    tables::table2(&scale).print();
+    println!();
+    tables::table3(&scale).print();
+    println!();
+    tables::table4(&scale, &[50, 200]).print();
+    println!();
+    tables::table5(&scale).print();
+    println!();
+    tables::fig3_dimension(&scale, &[10, 14, 18, 22, 26]).print();
+    println!();
+    tables::table11(&scale).print();
+    println!();
+    tables::table12(&scale, &[12, 16, 20, 24, 28, 32, 36, 40]).print();
+    println!();
+    let l = *scale.ls.last().unwrap();
+    let guards: Vec<usize> = (1..=6).map(|i| i * l / 8 + 1).collect();
+    tables::table13(&scale, &guards).print();
+    println!();
+    tables::table14(&scale, &[2, 4, scale.p0, scale.p0 * 2]).print();
+    println!();
+    tables::table17(&scale).print();
+    println!();
+    tables::table18(&scale, &[(4, 4), (3, 4), (2, 4), (1, 4), (0, 4)]).print();
+    println!();
+    tables::table19(&scale).print();
+    println!();
+    tables::table20(&scale).print();
+}

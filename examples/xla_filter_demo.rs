@@ -1,0 +1,96 @@
+//! Three-layer composition demo: run the Chebyshev filter through the
+//! AOT-compiled JAX/Pallas artifact (L1 kernel → L2 graph → L3 rust via
+//! PJRT) and verify bit-level-ish agreement with the native backend.
+//!
+//! Requires built artifacts (`make artifacts`).
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example xla_filter_demo
+//! ```
+
+use scsf::eig::chebyshev::{FilterBackend, FilterParams, NativeFilter};
+use scsf::eig::chfsi::{self, ChfsiOptions};
+use scsf::eig::EigOptions;
+use scsf::linalg::Mat;
+use scsf::operators::{self, GenOptions, OperatorKind};
+use scsf::rng::Xoshiro256pp;
+use scsf::runtime::{XlaFilter, XlaRuntime};
+use std::path::Path;
+use std::rc::Rc;
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = Path::new("artifacts");
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("artifacts/manifest.json not found — run `make artifacts` first");
+        std::process::exit(2);
+    }
+    let runtime = Rc::new(XlaRuntime::load(artifacts)?);
+    println!(
+        "PJRT platform: {} | artifacts: {:?}",
+        runtime.platform(),
+        runtime
+            .metas()
+            .iter()
+            .map(|m| m.name.as_str())
+            .collect::<Vec<_>>()
+    );
+
+    // A Helmholtz problem matching the compiled n=256 variant (grid 16).
+    let problem = operators::generate(
+        OperatorKind::Helmholtz,
+        GenOptions {
+            grid: 16,
+            ..Default::default()
+        },
+        1,
+        42,
+    )
+    .remove(0);
+    let a = &problem.matrix;
+
+    // ---- Single filter application: XLA vs native -------------------------
+    let mut rng = Xoshiro256pp::seed_from_u64(1);
+    let y = Mat::randn(a.rows(), 8, &mut rng);
+    let params = FilterParams {
+        degree: 20,
+        lower: 80.0,
+        upper: a.norm1() * 1.1,
+        target: 10.0,
+    };
+    let mut native = NativeFilter;
+    let mut xla = XlaFilter::new(runtime.clone());
+    let out_native = native.filter(a, &y, &params);
+    let out_xla = xla.filter(a, &y, &params);
+    let diff = out_native.max_abs_diff(&out_xla);
+    let scale = out_native.fro_norm() / (out_native.data().len() as f64).sqrt();
+    println!(
+        "single filter: max |native − xla| = {diff:.3e} (rms magnitude {scale:.3e}) — {}",
+        if diff <= 1e-9 * scale.max(1.0) { "MATCH" } else { "MISMATCH" }
+    );
+    assert!(xla.xla_calls > 0, "XLA path did not run");
+
+    // ---- Full eigensolve on the XLA backend -------------------------------
+    let opts = ChfsiOptions::from_eig(&EigOptions {
+        n_eigs: 12,
+        tol: 1e-8,
+        max_iters: 300,
+        seed: 0,
+    });
+    let r_native = chfsi::solve(a, &opts, None);
+    let r_xla = chfsi::solve_with_backend(a, &opts, None, &mut xla);
+    println!(
+        "ChFSI via XLA backend: {} iters, converged = {}, xla_calls = {}, fallbacks = {}",
+        r_xla.stats.iterations, r_xla.stats.converged, xla.xla_calls, xla.native_fallbacks
+    );
+    let mut worst = 0.0f64;
+    for (x, n) in r_xla.values.iter().zip(&r_native.values) {
+        worst = worst.max((x - n).abs() / n.abs().max(1.0));
+    }
+    println!(
+        "eigenvalues agree to rel {worst:.2e}; λ₁..λ₄ = {:?}",
+        &r_xla.values[..4]
+    );
+    assert!(worst < 1e-7, "backend disagreement {worst}");
+    println!("xla_filter_demo OK — Pallas kernel → JAX graph → PJRT → rust verified");
+    Ok(())
+}

@@ -1,0 +1,157 @@
+"""AOT lowering: JAX graphs -> HLO *text* artifacts for the rust runtime.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >=
+0.5 emits protos with 64-bit instruction ids which the image's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage (invoked by `make artifacts`):
+
+    cd python && python -m compile.aot --out ../artifacts
+
+Emits one `filter_n{n}_k{k}_m{m}.hlo.txt` per compiled shape variant,
+one `residual_n{n}_k{k}.hlo.txt`, and a `manifest.json` the rust
+artifact registry reads.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import model  # noqa: E402
+from .kernels import chebyshev as k_cheb  # noqa: E402
+
+# Shape variants compiled by default. The XLA backend is the small-n
+# composition path (DESIGN.md): n must match the densified operator the
+# coordinator feeds it; k = L + guard of the compiled pipeline config.
+DEFAULT_VARIANTS = [
+    # (n, k, m)
+    (256, 16, 20),
+    (1024, 20, 20),
+]
+
+F64 = jnp.float64
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_filter(n: int, k: int, m: int) -> str:
+    """Lower the degree-m filter at shape (n, k) to HLO text."""
+    tile = k_cheb.choose_tile(n, k)
+
+    def fn(a, y0, target, c, e):
+        return (
+            model.chebyshev_filter(
+                a, y0, target, c, e, degree=m, tile=tile, interpret=True
+            ),
+        )
+
+    scalar = jax.ShapeDtypeStruct((), F64)
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((n, n), F64),
+        jax.ShapeDtypeStruct((n, k), F64),
+        scalar,
+        scalar,
+        scalar,
+    )
+    return to_hlo_text(lowered)
+
+
+def lower_residual(n: int, k: int) -> str:
+    """Lower the residual-norm graph at shape (n, k) to HLO text."""
+
+    def fn(a, v, lams):
+        return (model.residual_norms(a, v, lams),)
+
+    lowered = jax.jit(fn).lower(
+        jax.ShapeDtypeStruct((n, n), F64),
+        jax.ShapeDtypeStruct((n, k), F64),
+        jax.ShapeDtypeStruct((k,), F64),
+    )
+    return to_hlo_text(lowered)
+
+
+def build(out_dir: str, variants=None) -> dict:
+    """Build all artifacts into `out_dir`; returns the manifest dict."""
+    variants = variants or DEFAULT_VARIANTS
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+    for n, k, m in variants:
+        name = f"filter_n{n}_k{k}_m{m}"
+        path = f"{name}.hlo.txt"
+        text = lower_filter(n, k, m)
+        with open(os.path.join(out_dir, path), "w") as f:
+            f.write(text)
+        entries.append(
+            {
+                "kind": "filter",
+                "name": name,
+                "path": path,
+                "n": n,
+                "k": k,
+                "m": m,
+                "tile": k_cheb.choose_tile(n, k),
+                "vmem_bytes": k_cheb.vmem_bytes(n, k, k_cheb.choose_tile(n, k)),
+                "inputs": ["a[n,n]", "y0[n,k]", "target[]", "c[]", "e[]"],
+                "dtype": "f64",
+            }
+        )
+        rname = f"residual_n{n}_k{k}"
+        rpath = f"{rname}.hlo.txt"
+        with open(os.path.join(out_dir, rpath), "w") as f:
+            f.write(lower_residual(n, k))
+        entries.append(
+            {
+                "kind": "residual",
+                "name": rname,
+                "path": rpath,
+                "n": n,
+                "k": k,
+                "inputs": ["a[n,n]", "v[n,k]", "lams[k]"],
+                "dtype": "f64",
+            }
+        )
+    manifest = {"version": 1, "artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--variant",
+        action="append",
+        default=None,
+        metavar="N,K,M",
+        help="shape variant n,k,m (repeatable; default: built-in list)",
+    )
+    args = ap.parse_args()
+    variants = None
+    if args.variant:
+        variants = [tuple(int(x) for x in v.split(",")) for v in args.variant]
+    manifest = build(args.out, variants)
+    total = len(manifest["artifacts"])
+    print(f"wrote {total} artifacts + manifest.json to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

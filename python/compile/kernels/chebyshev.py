@@ -1,0 +1,101 @@
+"""Layer-1 Pallas kernel: the fused Chebyshev three-term recurrence step.
+
+One step of the filter (paper Algorithm 1, line 5) is
+
+    Y_next = a * (A @ Y) + b * Y + c * Z
+
+with per-step scalars (a, b, c) derived from the sigma recurrence. The
+kernel tiles the *rows* of A: each program instance owns a
+(tile_n x n) slab of A plus the matching (tile_n x k) row-tiles of
+Y/Z/out, while the full (n x k) Y block is resident for the matmul.
+
+TPU mapping (DESIGN.md section Hardware-Adaptation): the BlockSpec grid is
+the HBM->VMEM schedule; per program the VMEM working set is
+
+    tile_n*n  (A slab)  +  n*k (Y)  +  3*tile_n*k (Y-tile, Z, out)
+
+and the MXU runs the (tile_n x n)@(n x k) contraction. `vmem_bytes`
+below reports this footprint so `choose_tile` can fit a 16 MiB budget.
+On this image Pallas MUST run `interpret=True` (CPU PJRT cannot execute
+Mosaic custom-calls); numerics are identical either way.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default VMEM budget per core used by `choose_tile` (bytes).
+VMEM_BUDGET = 16 * 1024 * 1024
+
+
+def fused_step_kernel(s_ref, a_ref, yfull_ref, ytile_ref, z_ref, o_ref):
+    """out_tile = s0 * (A_tile @ Y_full) + s1 * Y_tile + s2 * Z_tile."""
+    a, b, c = s_ref[0], s_ref[1], s_ref[2]
+    o_ref[...] = a * (a_ref[...] @ yfull_ref[...]) + b * ytile_ref[...] + c * z_ref[...]
+
+
+def choose_tile(n: int, k: int, dtype_bytes: int = 8, budget: int = VMEM_BUDGET) -> int:
+    """Largest row-tile dividing `n` whose working set fits the budget.
+
+    Working set (bytes) = dtype_bytes * (tile*n + n*k + 3*tile*k).
+    """
+    divisors = sorted({d for d in range(1, n + 1) if n % d == 0}, reverse=True)
+    for tile in divisors:
+        footprint = dtype_bytes * (tile * n + n * k + 3 * tile * k)
+        if footprint <= budget:
+            return tile
+    return 1
+
+
+def vmem_bytes(n: int, k: int, tile: int, dtype_bytes: int = 8) -> int:
+    """VMEM footprint of one program instance (see module docstring)."""
+    return dtype_bytes * (tile * n + n * k + 3 * tile * k)
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "interpret"))
+def fused_step(s, a, y, z, *, tile: int | None = None, interpret: bool = True):
+    """Apply one fused recurrence step via the Pallas kernel.
+
+    Args:
+      s: (3,) scalars [a, b, c].
+      a: (n, n) operator block.
+      y: (n, k) current iterate.
+      z: (n, k) previous iterate.
+      tile: row-tile size (must divide n); default `choose_tile(n, k)`.
+      interpret: run the kernel in interpret mode (required on CPU).
+
+    Returns:
+      (n, k) array `s0*(a@y) + s1*y + s2*z`.
+    """
+    n, k = y.shape
+    if tile is None:
+        tile = choose_tile(n, k)
+    assert n % tile == 0, f"tile {tile} must divide n {n}"
+    grid = (n // tile,)
+    return pl.pallas_call(
+        fused_step_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((3,), lambda i: (0,)),
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+            pl.BlockSpec((n, k), lambda i: (0, 0)),
+            pl.BlockSpec((tile, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile, k), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, k), y.dtype),
+        interpret=interpret,
+    )(s, a, y, y, z)
+
+
+def mxu_utilization_estimate(n: int, k: int, tile: int) -> float:
+    """Crude MXU utilization estimate for the kernel's matmul.
+
+    The MXU is a 128x128 systolic array; utilization is limited by how
+    well (tile, k) fill the array's output stationary dims.
+    """
+    return min(tile / 128.0, 1.0) * min(k / 128.0, 1.0)

@@ -1,0 +1,63 @@
+"""Pure-jnp reference oracle for the Layer-1 kernel and Layer-2 filter.
+
+These are the "obviously correct" implementations the pytest suite
+compares against (and the same math the rust native backend implements,
+so the three implementations triangulate each other).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ref_fused_step(s, a, y, z):
+    """out = s0*(a@y) + s1*y + s2*z, no tiling, no kernel."""
+    return s[0] * (a @ y) + s[1] * y + s[2] * z
+
+
+def ref_chebyshev_filter(a, y0, target, c, e, degree: int):
+    """Scaled-and-shifted Chebyshev filter (paper Algorithm 1).
+
+    Mirrors `scsf::eig::chebyshev::chebyshev_filter` in rust:
+
+        Y1   = (s1/e) * (A - c I) Y0
+        Yi+1 = 2*(s'/e) * (A - c I) Yi - s*s' * Yi-1
+
+    with s1 = e / (target - c) and s' = 1 / (2/s1 - s).
+    """
+    sigma1 = e / (target - c)
+    sigma = sigma1
+    y_prev = y0
+    y_cur = (sigma1 / e) * (a @ y0) - (c * sigma1 / e) * y0
+    for _ in range(1, degree):
+        sigma_new = 1.0 / (2.0 / sigma1 - sigma)
+        y_next = (
+            (2.0 * sigma_new / e) * (a @ y_cur)
+            - (2.0 * c * sigma_new / e) * y_cur
+            - (sigma * sigma_new) * y_prev
+        )
+        y_prev, y_cur = y_cur, y_next
+        sigma = sigma_new
+    return y_cur
+
+
+def ref_scalar_filter(t, target, c, e, degree: int):
+    """Scalar filter value rho_m(t) (matches FilterParams::eval_scalar)."""
+    sigma1 = e / (target - c)
+    sigma = sigma1
+    ym = (t - c) / e * sigma1
+    ymm = jnp.ones_like(t) if hasattr(t, "shape") else 1.0
+    for _ in range(1, degree):
+        sigma_new = 1.0 / (2.0 / sigma1 - sigma)
+        y = 2.0 * ((t - c) / e) * sigma_new * ym - sigma * sigma_new * ymm
+        ymm, ym = ym, y
+        sigma = sigma_new
+    return ym
+
+
+def ref_residual_norms(a, v, lams):
+    """Relative residuals ||A v_j - lam_j v_j|| / ||A v_j|| per column."""
+    av = a @ v
+    num = jnp.linalg.norm(av - v * lams[None, :], axis=0)
+    den = jnp.linalg.norm(av, axis=0)
+    return num / den

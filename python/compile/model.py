@@ -1,0 +1,79 @@
+"""Layer-2 JAX compute graphs, AOT-lowered for the rust runtime.
+
+Two graphs are exported (see `aot.py`):
+
+* `chebyshev_filter(a, y0, target, c, e)` — the degree-m filter (paper
+  Algorithm 1), the >70%-of-flops hot spot of SCSF (paper Table 11).
+  The m-step sigma recurrence is unrolled at trace time; every step is
+  one fused Pallas kernel call (Layer 1), so the whole filter lowers
+  into a single HLO module with no Python anywhere near the request
+  path.
+* `residual_norms(a, v, lams)` — relative residuals used by the
+  pipeline's validation stage.
+
+The scalar sigma coefficients depend on runtime inputs (target, c, e),
+so they are computed *in-graph* and packed into the (3,) scalar operand
+the kernel expects.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import chebyshev as k_cheb
+from .kernels import ref as k_ref
+
+jax.config.update("jax_enable_x64", True)
+
+
+@functools.partial(jax.jit, static_argnames=("degree", "tile", "interpret"))
+def chebyshev_filter(a, y0, target, c, e, *, degree: int = 20,
+                     tile: int | None = None, interpret: bool = True):
+    """Degree-`degree` Chebyshev filter of the block `y0`.
+
+    Args:
+      a: (n, n) symmetric operator (densified; the rust native backend
+        owns the sparse path, this is the XLA composition path).
+      y0: (n, k) block to filter.
+      target: scalar — normalization point (approx. smallest wanted
+        eigenvalue; paper: lambda'_1 of the previous problem).
+      c: scalar — damped-interval center (alpha+beta)/2.
+      e: scalar — damped-interval half-width (beta-alpha)/2.
+      degree: polynomial degree m (compile-time; paper default 20).
+      tile: kernel row-tile (default: VMEM-fitted divisor of n).
+      interpret: interpret-mode Pallas (required for CPU PJRT).
+
+    Returns:
+      (n, k) filtered block, identical numerics to
+      `scsf::eig::chebyshev::chebyshev_filter`.
+    """
+    sigma1 = e / (target - c)
+    sigma = sigma1
+
+    # Y1 = (sigma1/e) * (A - cI) Y0   as   a*(A@Y) + b*Y + 0*Z
+    s = jnp.stack([sigma1 / e, -c * sigma1 / e, jnp.zeros_like(c)])
+    y_prev = y0
+    y_cur = k_cheb.fused_step(s, a, y0, y0, tile=tile, interpret=interpret)
+
+    for _ in range(1, degree):
+        sigma_new = 1.0 / (2.0 / sigma1 - sigma)
+        s = jnp.stack(
+            [
+                2.0 * sigma_new / e,
+                -2.0 * c * sigma_new / e,
+                -(sigma * sigma_new),
+            ]
+        )
+        y_next = k_cheb.fused_step(s, a, y_cur, y_prev, tile=tile, interpret=interpret)
+        y_prev, y_cur = y_cur, y_next
+        sigma = sigma_new
+    return y_cur
+
+
+@jax.jit
+def residual_norms(a, v, lams):
+    """Relative residuals per eigenpair column (paper section D.5)."""
+    return k_ref.ref_residual_norms(a, v, lams)

@@ -1,0 +1,106 @@
+"""L1 correctness: the Pallas fused-step kernel vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes, tiles, dtypes and scalar values; every case
+asserts allclose against `ref.ref_fused_step`. This is the core
+correctness signal for the kernel that the AOT artifacts embed.
+"""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile.kernels import chebyshev as k_cheb  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+
+
+def rand(shape, seed, dtype):
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(shape).astype(dtype)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n_pow=st.integers(min_value=1, max_value=5),
+    k=st.integers(min_value=1, max_value=9),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_kernel_matches_ref_f64(n_pow, k, seed):
+    n = 2**n_pow
+    a = rand((n, n), seed, np.float64)
+    y = rand((n, k), seed + 1, np.float64)
+    z = rand((n, k), seed + 2, np.float64)
+    s = rand((3,), seed + 3, np.float64)
+    got = k_cheb.fused_step(s, a, y, z)
+    want = ref.ref_fused_step(s, a, y, z)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12, atol=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    k=st.integers(min_value=1, max_value=6),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_kernel_matches_ref_f32(k, seed):
+    n = 16
+    a = rand((n, n), seed, np.float32)
+    y = rand((n, k), seed + 1, np.float32)
+    z = rand((n, k), seed + 2, np.float32)
+    s = rand((3,), seed + 3, np.float32)
+    got = k_cheb.fused_step(s, a, y, z)
+    want = ref.ref_fused_step(s, a, y, z)
+    assert np.asarray(got).dtype == np.float32
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("n,tile", [(12, 3), (12, 4), (12, 12), (16, 2), (16, 16)])
+def test_explicit_tiles(n, tile):
+    k = 5
+    a = rand((n, n), 0, np.float64)
+    y = rand((n, k), 1, np.float64)
+    z = rand((n, k), 2, np.float64)
+    s = np.array([0.7, -1.3, 0.2])
+    got = k_cheb.fused_step(s, a, y, z, tile=tile)
+    want = ref.ref_fused_step(s, a, y, z)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-12)
+
+
+def test_bad_tile_rejected():
+    a = rand((8, 8), 0, np.float64)
+    y = rand((8, 2), 1, np.float64)
+    with pytest.raises(AssertionError):
+        k_cheb.fused_step(np.zeros(3), a, y, y, tile=3)
+
+
+@pytest.mark.parametrize("n,k", [(64, 4), (256, 16), (1024, 20), (4096, 80)])
+def test_choose_tile_divides_and_fits(n, k):
+    tile = k_cheb.choose_tile(n, k)
+    assert n % tile == 0
+    assert k_cheb.vmem_bytes(n, k, tile) <= k_cheb.VMEM_BUDGET
+
+
+def test_choose_tile_prefers_larger_tiles():
+    # Small problems should use the whole matrix as one tile.
+    assert k_cheb.choose_tile(64, 4) == 64
+
+
+def test_zero_scalars_give_zero_output():
+    a = rand((8, 8), 3, np.float64)
+    y = rand((8, 2), 4, np.float64)
+    out = k_cheb.fused_step(np.zeros(3), a, y, y)
+    np.testing.assert_array_equal(np.asarray(out), np.zeros((8, 2)))
+
+
+def test_identity_passthrough():
+    # s = [0, 1, 0] must return Y exactly.
+    a = rand((8, 8), 5, np.float64)
+    y = rand((8, 3), 6, np.float64)
+    out = k_cheb.fused_step(np.array([0.0, 1.0, 0.0]), a, y, 2 * y)
+    np.testing.assert_allclose(np.asarray(out), y, rtol=0, atol=0)
+
+
+def test_mxu_estimate_monotone():
+    assert k_cheb.mxu_utilization_estimate(256, 128, 128) == 1.0
+    assert k_cheb.mxu_utilization_estimate(256, 16, 64) < 1.0

@@ -1,0 +1,93 @@
+"""L2 correctness: the full filter graph vs oracle + spectral semantics."""
+
+import jax
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+jax.config.update("jax_enable_x64", True)
+
+from compile import model  # noqa: E402
+from compile.kernels import ref  # noqa: E402
+
+
+def sym_psd(n, seed):
+    rng = np.random.default_rng(seed)
+    q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    lam = np.sort(rng.uniform(0.5, 50.0, n))
+    return (q * lam) @ q.T, lam, q
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    k=st.integers(min_value=1, max_value=6),
+    m=st.integers(min_value=1, max_value=24),
+    seed=st.integers(min_value=0, max_value=2**31),
+)
+def test_filter_matches_jnp_reference(k, m, seed):
+    n = 16
+    a, lam, _ = sym_psd(n, seed)
+    rng = np.random.default_rng(seed + 1)
+    y0 = rng.standard_normal((n, k))
+    target, c, e = lam[0] - 0.1, (lam[k] + lam[-1]) / 2, (lam[-1] - lam[k]) / 2
+    got = model.chebyshev_filter(a, y0, target, c, e, degree=m)
+    want = ref.ref_chebyshev_filter(a, y0, target, c, e, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-9, atol=1e-9)
+
+
+def test_filter_acts_as_scalar_filter_on_eigenvectors():
+    # p_m(A) q_j = p_m(lam_j) q_j — the defining property.
+    n, m = 24, 10
+    a, lam, q = sym_psd(n, 7)
+    lsplit = 6
+    target = lam[0] - 0.05
+    c = (lam[lsplit] + lam[-1]) / 2
+    e = (lam[-1] - lam[lsplit]) / 2
+    out = np.asarray(model.chebyshev_filter(a, q, target, c, e, degree=m))
+    for j in range(n):
+        rho = float(ref.ref_scalar_filter(lam[j], target, c, e, m))
+        np.testing.assert_allclose(out[:, j], rho * q[:, j], rtol=1e-7, atol=1e-8)
+
+
+def test_filter_damps_unwanted_amplifies_wanted():
+    n, m = 24, 20
+    a, lam, q = sym_psd(n, 11)
+    lsplit = 4
+    target = lam[0] - 0.05
+    c = (lam[lsplit] + lam[-1]) / 2
+    e = (lam[-1] - lam[lsplit]) / 2
+    # Mix of the smallest and the largest eigenvector.
+    y = (q[:, [0]] + q[:, [-1]]) / np.sqrt(2)
+    out = np.asarray(model.chebyshev_filter(a, y, target, c, e, degree=m))
+    coef_small = abs(q[:, 0] @ out[:, 0])
+    coef_large = abs(q[:, -1] @ out[:, 0])
+    assert coef_small > 1e3 * coef_large, (coef_small, coef_large)
+
+
+def test_residual_norms_zero_for_exact_pairs():
+    n = 16
+    a, lam, q = sym_psd(n, 3)
+    out = np.asarray(model.residual_norms(a, q[:, :5], lam[:5]))
+    assert out.shape == (5,)
+    np.testing.assert_allclose(out, 0.0, atol=1e-12)
+
+
+def test_residual_norms_positive_for_wrong_pairs():
+    n = 16
+    a, lam, q = sym_psd(n, 4)
+    wrong = lam[:5] * 1.5
+    out = np.asarray(model.residual_norms(a, q[:, :5], wrong))
+    assert (out > 0.05).all()
+
+
+@pytest.mark.parametrize("degree", [1, 2, 20])
+def test_degree_is_respected(degree):
+    # degree-m output is a degree-m polynomial in A: check via the
+    # scalar filter at a random eigenvalue.
+    n = 12
+    a, lam, q = sym_psd(n, 5)
+    target, c, e = lam[0] - 0.1, (lam[4] + lam[-1]) / 2, (lam[-1] - lam[4]) / 2
+    y = q[:, [2]]
+    out = np.asarray(model.chebyshev_filter(a, y, target, c, e, degree=degree))
+    rho = float(ref.ref_scalar_filter(lam[2], target, c, e, degree))
+    np.testing.assert_allclose(out[:, 0], rho * y[:, 0], rtol=1e-8, atol=1e-10)

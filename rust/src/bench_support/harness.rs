@@ -1,0 +1,84 @@
+//! Minimal micro-benchmark timer (criterion is unavailable offline).
+//!
+//! `bench_median` runs a closure with warmup and reports the median of
+//! `reps` timed runs — robust to scheduler noise, which is what matters
+//! for the kernel benches; the end-to-end tables time single runs
+//! (solves are seconds-long and deterministic).
+
+use std::time::Instant;
+
+/// Result of a micro-benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    /// Label.
+    pub name: String,
+    /// Median seconds per run.
+    pub median_secs: f64,
+    /// Min seconds per run.
+    pub min_secs: f64,
+    /// Max seconds per run.
+    pub max_secs: f64,
+    /// Number of timed repetitions.
+    pub reps: usize,
+}
+
+impl BenchResult {
+    /// One-line report, criterion-style.
+    pub fn report(&self) -> String {
+        format!(
+            "{:<40} median {:>12} (min {}, max {}, {} reps)",
+            self.name,
+            crate::util::fmt_secs(self.median_secs),
+            crate::util::fmt_secs(self.min_secs),
+            crate::util::fmt_secs(self.max_secs),
+            self.reps
+        )
+    }
+}
+
+/// Time `f` with `warmup` untimed runs and `reps` timed runs.
+pub fn bench_median(name: &str, warmup: usize, reps: usize, mut f: impl FnMut()) -> BenchResult {
+    assert!(reps >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    BenchResult {
+        name: name.to_string(),
+        median_secs: times[reps / 2],
+        min_secs: times[0],
+        max_secs: times[reps - 1],
+        reps,
+    }
+}
+
+/// Compute achieved gigaflops given a per-run flop count.
+pub fn gflops(flops_per_run: u64, secs: f64) -> f64 {
+    flops_per_run as f64 / secs.max(1e-12) / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_is_between_min_and_max() {
+        let r = bench_median("noop-ish", 1, 5, || {
+            std::hint::black_box((0..1000).sum::<usize>());
+        });
+        assert!(r.min_secs <= r.median_secs && r.median_secs <= r.max_secs);
+        assert_eq!(r.reps, 5);
+        assert!(r.report().contains("median"));
+    }
+
+    #[test]
+    fn gflops_math() {
+        assert!((gflops(2_000_000_000, 1.0) - 2.0).abs() < 1e-12);
+    }
+}

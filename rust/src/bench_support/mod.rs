@@ -1,0 +1,73 @@
+//! Bench harness + paper-table reproduction library.
+//!
+//! Every table and figure of the paper's evaluation has a generator in
+//! [`tables`]; the `benches/` targets and the `scsf repro` CLI both call
+//! into it, so the numbers in EXPERIMENTS.md are regenerable with one
+//! command. [`harness`] is a tiny micro-benchmark timer (the offline
+//! crate set has no criterion; see DESIGN.md §Substitutions).
+
+pub mod harness;
+pub mod tables;
+
+/// Experiment scale. The paper runs at `n` up to 10⁴ with 1000 problems
+/// per dataset and L up to 600; the *shapes* of its results (who wins,
+/// growth with L and n, crossovers) are scale-invariant, so the default
+/// scales keep CI runs in minutes. `paper()` restores paper sizes.
+#[derive(Debug, Clone)]
+pub struct Scale {
+    /// Interior grid side (matrix dimension = grid²).
+    pub grid: usize,
+    /// Problems per dataset.
+    pub n_problems: usize,
+    /// Eigenvalue counts to sweep.
+    pub ls: Vec<usize>,
+    /// Truncation threshold p₀ for the FFT sort.
+    pub p0: usize,
+    /// Skip solvers expected to blow the time budget (JD at scale).
+    pub include_jd: bool,
+}
+
+impl Scale {
+    /// Quick scale for `cargo bench` / CI (seconds per table).
+    pub fn quick() -> Self {
+        Self {
+            grid: 16,
+            n_problems: 6,
+            ls: vec![8, 12, 16],
+            p0: 8,
+            include_jd: true,
+        }
+    }
+
+    /// Mid scale used for EXPERIMENTS.md (minutes per table).
+    pub fn standard() -> Self {
+        Self {
+            grid: 24,
+            n_problems: 12,
+            ls: vec![12, 24, 36],
+            p0: 12,
+            include_jd: true,
+        }
+    }
+
+    /// Paper scale (hours; needs `--paper` CLI opt-in).
+    pub fn paper() -> Self {
+        Self {
+            grid: 80,
+            n_problems: 1000,
+            ls: vec![200, 300, 400],
+            p0: 20,
+            include_jd: false,
+        }
+    }
+
+    /// Parse a scale name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "quick" => Some(Self::quick()),
+            "standard" => Some(Self::standard()),
+            "paper" => Some(Self::paper()),
+            _ => None,
+        }
+    }
+}

@@ -1,0 +1,287 @@
+//! Pipeline configuration, with JSON load/save (the repo's config
+//! system: every run is reproducible from a config file + seed).
+
+use crate::eig::chfsi::ChfsiOptions;
+use crate::eig::scsf::ScsfOptions;
+use crate::eig::EigOptions;
+use crate::grf::GrfParams;
+use crate::operators::{GenOptions, OperatorKind};
+use crate::sort::SortMethod;
+use crate::util::json::{self, Value};
+use anyhow::{anyhow, Result};
+
+/// Operator family selector (alias of [`OperatorKind`] for configs).
+pub type DatasetKind = OperatorKind;
+
+/// Which filter backend the solve workers use.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Backend {
+    /// Native fused CSR SpMM (the performance path).
+    Native,
+    /// AOT JAX/Pallas executable via PJRT, loading artifacts from the
+    /// given directory (the composition path; falls back to native for
+    /// shapes with no compiled artifact).
+    Xla {
+        /// Artifact directory (contains `manifest.json`).
+        artifacts_dir: String,
+    },
+}
+
+/// Full configuration of one dataset-generation run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GenConfig {
+    /// Operator family (paper §D.2).
+    pub kind: DatasetKind,
+    /// Interior grid side `g`; matrix dimension is `g²`.
+    pub grid: usize,
+    /// Number of problems `N` in the dataset.
+    pub n_problems: usize,
+    /// Eigenpairs per problem `L`.
+    pub n_eigs: usize,
+    /// Relative-residual tolerance (paper §D.5).
+    pub tol: f64,
+    /// Master seed (whole run is deterministic given this).
+    pub seed: u64,
+    /// Chebyshev filter degree `m` (paper §D.4: 20).
+    pub degree: usize,
+    /// Guard vectors (`None` → 20 % of L, paper §D.4).
+    pub guard: Option<usize>,
+    /// Sorting method (paper default: truncated FFT, p₀ = 20).
+    pub sort: SortMethod,
+    /// Parallel shard count `M` (paper §D.6 used 8 MPI ranks).
+    pub shards: usize,
+    /// Bounded-channel capacity between stages (backpressure depth).
+    pub channel_capacity: usize,
+    /// Filter backend.
+    pub backend: Backend,
+    /// GRF smoothness parameters for coefficient fields.
+    pub grf: GrfParams,
+}
+
+impl Default for GenConfig {
+    fn default() -> Self {
+        Self {
+            kind: OperatorKind::Helmholtz,
+            grid: 32,
+            n_problems: 16,
+            n_eigs: 16,
+            tol: 1e-8,
+            seed: 0,
+            degree: 20,
+            guard: None,
+            sort: SortMethod::TruncatedFft { p0: 20 },
+            shards: 2,
+            channel_capacity: 8,
+            backend: Backend::Native,
+            grf: GrfParams::default(),
+        }
+    }
+}
+
+impl GenConfig {
+    /// Matrix dimension `n = g²`.
+    pub fn matrix_dim(&self) -> usize {
+        self.grid * self.grid
+    }
+
+    /// Per-problem generation options.
+    pub fn gen_options(&self) -> GenOptions {
+        GenOptions {
+            grid: self.grid,
+            grf: self.grf,
+        }
+    }
+
+    /// The per-problem solver options implied by this config.
+    pub fn scsf_options(&self) -> ScsfOptions {
+        let mut chfsi = ChfsiOptions::from_eig(&EigOptions {
+            n_eigs: self.n_eigs,
+            tol: self.tol,
+            max_iters: 500,
+            seed: self.seed,
+        });
+        chfsi.degree = self.degree;
+        chfsi.guard = self.guard;
+        ScsfOptions {
+            chfsi,
+            sort: self.sort,
+            warm_start: true,
+        }
+    }
+
+    /// Serialize to pretty JSON.
+    pub fn to_json(&self) -> String {
+        let sort = match self.sort {
+            SortMethod::None => Value::obj(vec![("method", "none".into())]),
+            SortMethod::Greedy => Value::obj(vec![("method", "greedy".into())]),
+            SortMethod::TruncatedFft { p0 } => Value::obj(vec![
+                ("method", "truncated_fft".into()),
+                ("p0", p0.into()),
+            ]),
+        };
+        let backend = match &self.backend {
+            Backend::Native => Value::obj(vec![("kind", "native".into())]),
+            Backend::Xla { artifacts_dir } => Value::obj(vec![
+                ("kind", "xla".into()),
+                ("artifacts_dir", artifacts_dir.as_str().into()),
+            ]),
+        };
+        Value::obj(vec![
+            ("kind", self.kind.name().into()),
+            ("grid", self.grid.into()),
+            ("n_problems", self.n_problems.into()),
+            ("n_eigs", self.n_eigs.into()),
+            ("tol", self.tol.into()),
+            ("seed", self.seed.into()),
+            ("degree", self.degree.into()),
+            (
+                "guard",
+                self.guard.map(Value::from).unwrap_or(Value::Null),
+            ),
+            ("sort", sort),
+            ("shards", self.shards.into()),
+            ("channel_capacity", self.channel_capacity.into()),
+            ("backend", backend),
+            (
+                "grf",
+                Value::obj(vec![
+                    ("alpha", self.grf.alpha.into()),
+                    ("tau", self.grf.tau.into()),
+                ]),
+            ),
+        ])
+        .to_string_pretty()
+    }
+
+    /// Parse from JSON (inverse of [`GenConfig::to_json`]; missing keys
+    /// take defaults).
+    pub fn from_json(text: &str) -> Result<Self> {
+        let v = json::parse(text).map_err(|e| anyhow!("config JSON: {e}"))?;
+        let mut cfg = GenConfig::default();
+        if let Some(s) = v.get("kind").and_then(Value::as_str) {
+            cfg.kind = OperatorKind::parse(s).ok_or_else(|| anyhow!("unknown kind {s}"))?;
+        }
+        let get = |key: &str| v.get(key).and_then(Value::as_usize);
+        if let Some(x) = get("grid") {
+            cfg.grid = x;
+        }
+        if let Some(x) = get("n_problems") {
+            cfg.n_problems = x;
+        }
+        if let Some(x) = get("n_eigs") {
+            cfg.n_eigs = x;
+        }
+        if let Some(x) = v.get("tol").and_then(Value::as_f64) {
+            cfg.tol = x;
+        }
+        if let Some(x) = v.get("seed").and_then(Value::as_f64) {
+            cfg.seed = x as u64;
+        }
+        if let Some(x) = get("degree") {
+            cfg.degree = x;
+        }
+        cfg.guard = v.get("guard").and_then(Value::as_usize);
+        if let Some(sort) = v.get("sort") {
+            cfg.sort = match sort.get("method").and_then(Value::as_str) {
+                Some("none") => SortMethod::None,
+                Some("greedy") => SortMethod::Greedy,
+                Some("truncated_fft") | None => SortMethod::TruncatedFft {
+                    p0: sort.get("p0").and_then(Value::as_usize).unwrap_or(20),
+                },
+                Some(other) => return Err(anyhow!("unknown sort method {other}")),
+            };
+        }
+        if let Some(x) = get("shards") {
+            cfg.shards = x.max(1);
+        }
+        if let Some(x) = get("channel_capacity") {
+            cfg.channel_capacity = x.max(1);
+        }
+        if let Some(b) = v.get("backend") {
+            cfg.backend = match b.get("kind").and_then(Value::as_str) {
+                Some("native") | None => Backend::Native,
+                Some("xla") => Backend::Xla {
+                    artifacts_dir: b
+                        .get("artifacts_dir")
+                        .and_then(Value::as_str)
+                        .unwrap_or("artifacts")
+                        .to_string(),
+                },
+                Some(other) => return Err(anyhow!("unknown backend {other}")),
+            };
+        }
+        if let Some(g) = v.get("grf") {
+            if let Some(a) = g.get("alpha").and_then(Value::as_f64) {
+                cfg.grf.alpha = a;
+            }
+            if let Some(t) = g.get("tau").and_then(Value::as_f64) {
+                cfg.grf.tau = t;
+            }
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip_default() {
+        let cfg = GenConfig::default();
+        let back = GenConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn json_roundtrip_custom() {
+        let cfg = GenConfig {
+            kind: OperatorKind::Vibration,
+            grid: 20,
+            n_problems: 100,
+            n_eigs: 24,
+            tol: 1e-10,
+            seed: 99,
+            degree: 16,
+            guard: Some(6),
+            sort: SortMethod::Greedy,
+            shards: 4,
+            channel_capacity: 3,
+            backend: Backend::Xla {
+                artifacts_dir: "artifacts".to_string(),
+            },
+            grf: GrfParams {
+                alpha: 3.0,
+                tau: 2.0,
+            },
+        };
+        let back = GenConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn partial_json_takes_defaults() {
+        let cfg = GenConfig::from_json(r#"{"kind": "poisson", "grid": 10}"#).unwrap();
+        assert_eq!(cfg.kind, OperatorKind::Poisson);
+        assert_eq!(cfg.grid, 10);
+        assert_eq!(cfg.n_eigs, GenConfig::default().n_eigs);
+    }
+
+    #[test]
+    fn rejects_unknown_kind() {
+        assert!(GenConfig::from_json(r#"{"kind": "nope"}"#).is_err());
+    }
+
+    #[test]
+    fn scsf_options_propagate() {
+        let cfg = GenConfig {
+            degree: 14,
+            guard: Some(7),
+            ..Default::default()
+        };
+        let o = cfg.scsf_options();
+        assert_eq!(o.chfsi.degree, 14);
+        assert_eq!(o.chfsi.guard, Some(7));
+        assert!(o.warm_start);
+    }
+}

@@ -1,0 +1,302 @@
+//! Dataset container: binary eigenpair records + JSON manifest
+//! (step 6 of the paper's Figure 1 — "assemble the dataset").
+//!
+//! Layout on disk:
+//!
+//! ```text
+//! <dir>/eigs.bin        f64/u64 little-endian records, one per problem:
+//!                       [id u64][n u64][l u64][values f64×l][vectors f64×(n·l)]
+//! <dir>/manifest.json   config echo + per-record index (offset, residual, …)
+//! ```
+//!
+//! Vectors are stored row-major `n × l` (column `j` pairs with value `j`)
+//! — the same layout as [`crate::linalg::Mat`].
+
+use crate::eig::EigResult;
+use crate::util::json::{self, Value};
+use anyhow::{anyhow, Context, Result};
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// Index entry for one stored record.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecordMeta {
+    /// Problem id (generation order).
+    pub id: usize,
+    /// Byte offset of the record in `eigs.bin`.
+    pub offset: u64,
+    /// Matrix dimension.
+    pub n: usize,
+    /// Number of eigenpairs.
+    pub l: usize,
+    /// Worst relative residual of the stored pairs.
+    pub max_residual: f64,
+    /// Solve seconds.
+    pub secs: f64,
+    /// Solver outer iterations.
+    pub iterations: usize,
+}
+
+/// Streaming dataset writer (single-writer; the pipeline funnels all
+/// results through one validator/writer thread).
+pub struct DatasetWriter {
+    dir: PathBuf,
+    file: BufWriter<File>,
+    offset: u64,
+    records: Vec<RecordMeta>,
+}
+
+impl DatasetWriter {
+    /// Create `<dir>` (if needed) and open `eigs.bin` for writing.
+    pub fn create(dir: &Path) -> Result<Self> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let file = File::create(dir.join("eigs.bin"))?;
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            file: BufWriter::new(file),
+            offset: 0,
+            records: Vec::new(),
+        })
+    }
+
+    /// Append one solved problem.
+    pub fn write_record(&mut self, id: usize, result: &EigResult) -> Result<()> {
+        let n = result.vectors.rows();
+        let l = result.values.len();
+        let offset = self.offset;
+        let put_u64 = |w: &mut BufWriter<File>, x: u64| -> Result<()> {
+            w.write_all(&x.to_le_bytes())?;
+            Ok(())
+        };
+        put_u64(&mut self.file, id as u64)?;
+        put_u64(&mut self.file, n as u64)?;
+        put_u64(&mut self.file, l as u64)?;
+        for v in &result.values {
+            self.file.write_all(&v.to_le_bytes())?;
+        }
+        for i in 0..n {
+            for j in 0..l {
+                self.file.write_all(&result.vectors[(i, j)].to_le_bytes())?;
+            }
+        }
+        self.offset += (3 * 8 + l * 8 + n * l * 8) as u64;
+        let max_residual = result.residuals.iter().cloned().fold(0.0, f64::max);
+        self.records.push(RecordMeta {
+            id,
+            offset,
+            n,
+            l,
+            max_residual,
+            secs: result.stats.secs,
+            iterations: result.stats.iterations,
+        });
+        Ok(())
+    }
+
+    /// Number of records written so far.
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    /// True if nothing has been written.
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    /// Flush data and write `manifest.json`. `extra` is merged into the
+    /// manifest root (the pipeline puts the run config + report there).
+    pub fn finalize(mut self, extra: Vec<(&str, Value)>) -> Result<Vec<RecordMeta>> {
+        self.file.flush()?;
+        let mut recs: Vec<Value> = Vec::new();
+        // Manifest index is sorted by id for deterministic output.
+        self.records.sort_by_key(|r| r.id);
+        for r in &self.records {
+            recs.push(Value::obj(vec![
+                ("id", r.id.into()),
+                ("offset", r.offset.into()),
+                ("n", r.n.into()),
+                ("l", r.l.into()),
+                ("max_residual", r.max_residual.into()),
+                ("secs", r.secs.into()),
+                ("iterations", r.iterations.into()),
+            ]));
+        }
+        let mut root = vec![
+            ("format", Value::from("scsf-eigs-v1")),
+            ("records", Value::Arr(recs)),
+        ];
+        root.extend(extra);
+        std::fs::write(
+            self.dir.join("manifest.json"),
+            Value::obj(root).to_string_pretty(),
+        )?;
+        Ok(self.records)
+    }
+}
+
+/// One record read back from a dataset.
+#[derive(Debug, Clone)]
+pub struct Record {
+    /// Problem id.
+    pub id: usize,
+    /// Eigenvalues (ascending).
+    pub values: Vec<f64>,
+    /// Eigenvectors (`n × l` row-major).
+    pub vectors: crate::linalg::Mat,
+}
+
+/// Dataset reader.
+pub struct DatasetReader {
+    file: BufReader<File>,
+    index: Vec<RecordMeta>,
+}
+
+impl DatasetReader {
+    /// Open a dataset directory.
+    pub fn open(dir: &Path) -> Result<Self> {
+        let manifest = std::fs::read_to_string(dir.join("manifest.json"))?;
+        let v = json::parse(&manifest).map_err(|e| anyhow!("manifest: {e}"))?;
+        let recs = v
+            .get("records")
+            .and_then(Value::as_arr)
+            .ok_or_else(|| anyhow!("manifest missing records"))?;
+        let mut index = Vec::new();
+        for r in recs {
+            let gu = |k: &str| r.get(k).and_then(Value::as_usize).unwrap_or(0);
+            index.push(RecordMeta {
+                id: gu("id"),
+                offset: r.get("offset").and_then(Value::as_f64).unwrap_or(0.0) as u64,
+                n: gu("n"),
+                l: gu("l"),
+                max_residual: r.get("max_residual").and_then(Value::as_f64).unwrap_or(0.0),
+                secs: r.get("secs").and_then(Value::as_f64).unwrap_or(0.0),
+                iterations: gu("iterations"),
+            });
+        }
+        let file = BufReader::new(File::open(dir.join("eigs.bin"))?);
+        Ok(Self { file, index })
+    }
+
+    /// The record index (sorted by id).
+    pub fn index(&self) -> &[RecordMeta] {
+        &self.index
+    }
+
+    /// Read the record with the given problem id.
+    pub fn read(&mut self, id: usize) -> Result<Record> {
+        let meta = self
+            .index
+            .iter()
+            .find(|r| r.id == id)
+            .ok_or_else(|| anyhow!("no record with id {id}"))?
+            .clone();
+        self.file.seek(SeekFrom::Start(meta.offset))?;
+        let mut u64buf = [0u8; 8];
+        let mut get_u64 = |f: &mut BufReader<File>| -> Result<u64> {
+            f.read_exact(&mut u64buf)?;
+            Ok(u64::from_le_bytes(u64buf))
+        };
+        let rid = get_u64(&mut self.file)? as usize;
+        let n = get_u64(&mut self.file)? as usize;
+        let l = get_u64(&mut self.file)? as usize;
+        if rid != id || n != meta.n || l != meta.l {
+            return Err(anyhow!("record header mismatch for id {id}"));
+        }
+        let mut f64buf = [0u8; 8];
+        let mut values = Vec::with_capacity(l);
+        for _ in 0..l {
+            self.file.read_exact(&mut f64buf)?;
+            values.push(f64::from_le_bytes(f64buf));
+        }
+        let mut data = Vec::with_capacity(n * l);
+        for _ in 0..n * l {
+            self.file.read_exact(&mut f64buf)?;
+            data.push(f64::from_le_bytes(f64buf));
+        }
+        Ok(Record {
+            id,
+            values,
+            vectors: crate::linalg::Mat::from_vec(n, l, data),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eig::{EigResult, SolveStats};
+    use crate::linalg::Mat;
+    use crate::rng::Xoshiro256pp;
+
+    fn fake_result(n: usize, l: usize, seed: u64) -> EigResult {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        EigResult {
+            values: (0..l).map(|i| i as f64 + 0.5).collect(),
+            vectors: Mat::randn(n, l, &mut rng),
+            residuals: vec![1e-10; l],
+            stats: SolveStats {
+                iterations: 7,
+                secs: 0.25,
+                ..Default::default()
+            },
+        }
+    }
+
+    #[test]
+    fn roundtrip_multiple_records() {
+        let dir = std::env::temp_dir().join(format!("scsf_ds_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut w = DatasetWriter::create(&dir).unwrap();
+        let r0 = fake_result(10, 3, 1);
+        let r1 = fake_result(10, 3, 2);
+        // Write out of id order to exercise the index sort.
+        w.write_record(1, &r1).unwrap();
+        w.write_record(0, &r0).unwrap();
+        let recs = w
+            .finalize(vec![("note", Value::from("test"))])
+            .unwrap();
+        assert_eq!(recs.len(), 2);
+        assert_eq!(recs[0].id, 0);
+
+        let mut reader = DatasetReader::open(&dir).unwrap();
+        assert_eq!(reader.index().len(), 2);
+        for (id, want) in [(0usize, &r0), (1, &r1)] {
+            let rec = reader.read(id).unwrap();
+            assert_eq!(rec.values, want.values);
+            assert_eq!(rec.vectors, want.vectors);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_carries_extra_fields() {
+        let dir = std::env::temp_dir().join(format!("scsf_ds2_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut w = DatasetWriter::create(&dir).unwrap();
+        w.write_record(0, &fake_result(6, 2, 3)).unwrap();
+        w.finalize(vec![("config", Value::from("xyz"))]).unwrap();
+        let manifest = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let v = json::parse(&manifest).unwrap();
+        assert_eq!(v.get("config").and_then(Value::as_str), Some("xyz"));
+        assert_eq!(
+            v.get("format").and_then(Value::as_str),
+            Some("scsf-eigs-v1")
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_id_is_an_error() {
+        let dir = std::env::temp_dir().join(format!("scsf_ds3_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut w = DatasetWriter::create(&dir).unwrap();
+        w.write_record(5, &fake_result(4, 1, 4)).unwrap();
+        w.finalize(vec![]).unwrap();
+        let mut r = DatasetReader::open(&dir).unwrap();
+        assert!(r.read(99).is_err());
+        assert!(r.read(5).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

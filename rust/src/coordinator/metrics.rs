@@ -1,0 +1,99 @@
+//! Run-level metrics: per-stage timing, work counters, convergence
+//! summary. Serialized into the dataset manifest and printed by the CLI.
+
+use crate::util::json::Value;
+
+/// Report of one dataset-generation run.
+#[derive(Debug, Clone, Default)]
+pub struct GenReport {
+    /// Problems generated.
+    pub n_problems: usize,
+    /// End-to-end wall-clock seconds.
+    pub total_secs: f64,
+    /// Seconds in parameter generation + discretization (producer).
+    pub gen_secs: f64,
+    /// Seconds in sorting (summed over shards).
+    pub sort_secs: f64,
+    /// Seconds in eigensolves (summed over shards).
+    pub solve_secs: f64,
+    /// Seconds in validation + dataset writing.
+    pub write_secs: f64,
+    /// Mean solve seconds per problem (the paper's headline metric).
+    pub avg_solve_secs: f64,
+    /// Mean ChFSI outer iterations per problem.
+    pub avg_iterations: f64,
+    /// Total flops across all solves (Mflop).
+    pub total_mflops: f64,
+    /// Filter-only flops (Mflop) — paper Table 3's "Filter Flops".
+    pub filter_mflops: f64,
+    /// Worst relative residual over all stored pairs.
+    pub max_residual: f64,
+    /// Whether every solve met tolerance.
+    pub all_converged: bool,
+    /// Calls served by the XLA backend (0 on the native backend).
+    pub xla_calls: usize,
+    /// XLA-backend calls that fell back to the native kernel.
+    pub native_fallbacks: usize,
+}
+
+impl GenReport {
+    /// JSON object for the manifest / CLI output.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("n_problems", self.n_problems.into()),
+            ("total_secs", self.total_secs.into()),
+            ("gen_secs", self.gen_secs.into()),
+            ("sort_secs", self.sort_secs.into()),
+            ("solve_secs", self.solve_secs.into()),
+            ("write_secs", self.write_secs.into()),
+            ("avg_solve_secs", self.avg_solve_secs.into()),
+            ("avg_iterations", self.avg_iterations.into()),
+            ("total_mflops", self.total_mflops.into()),
+            ("filter_mflops", self.filter_mflops.into()),
+            ("max_residual", self.max_residual.into()),
+            ("all_converged", self.all_converged.into()),
+            ("xla_calls", self.xla_calls.into()),
+            ("native_fallbacks", self.native_fallbacks.into()),
+        ])
+    }
+
+    /// Compact human-readable summary line.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} problems in {:.2}s (avg solve {:.3}s, avg iters {:.1}, {:.0} Mflop total, {:.0} Mflop filter, max residual {:.2e}, converged: {})",
+            self.n_problems,
+            self.total_secs,
+            self.avg_solve_secs,
+            self.avg_iterations,
+            self.total_mflops,
+            self.filter_mflops,
+            self.max_residual,
+            self.all_converged,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_has_all_fields() {
+        let r = GenReport {
+            n_problems: 4,
+            total_secs: 1.5,
+            all_converged: true,
+            ..Default::default()
+        };
+        let v = r.to_json();
+        assert_eq!(v.get("n_problems").and_then(Value::as_usize), Some(4));
+        assert_eq!(v.get("all_converged").and_then(Value::as_bool), Some(true));
+        assert!(v.get("filter_mflops").is_some());
+    }
+
+    #[test]
+    fn summary_is_one_line() {
+        let r = GenReport::default();
+        assert_eq!(r.summary().lines().count(), 1);
+    }
+}

@@ -1,0 +1,28 @@
+//! Layer-3 coordinator: the streaming dataset-generation pipeline.
+//!
+//! This is the paper's Figure 1 as a system: parameter generation →
+//! discretization → (truncated-FFT) sorting → sharded sequential SCSF
+//! solving → validation → dataset assembly. The paper's §D.6
+//! parallelization model — "partition the N problems into M chunks and
+//! run M SCSF instances in parallel" — maps to the shard workers here.
+//!
+//! Stages are connected by *bounded* channels, so a slow solver stalls
+//! the producer instead of buffering the whole dataset in memory
+//! (backpressure), and every stage runs on its own thread:
+//!
+//! ```text
+//! producer ──chunk──▶ shard workers (×M, sort + warm-started ChFSI)
+//!                          │ (id, EigResult)
+//!                          ▼
+//!                     validator/writer ──▶ eigs.bin + manifest.json
+//! ```
+//!
+//! The offline build environment has no tokio; the pipeline uses
+//! `std::thread::scope` + `sync_channel`, which gives the same
+//! backpressure semantics with zero dependencies (DESIGN.md
+//! §Substitutions).
+
+pub mod config;
+pub mod dataset;
+pub mod metrics;
+pub mod pipeline;

@@ -1,0 +1,327 @@
+//! The streaming generation pipeline (see module docs in
+//! [`crate::coordinator`]).
+
+use super::config::{Backend, GenConfig};
+use super::dataset::DatasetWriter;
+use super::metrics::GenReport;
+use crate::eig::chebyshev::{FilterBackend, NativeFilter};
+use crate::eig::chfsi;
+use crate::eig::WarmStart;
+use crate::operators::{self, Problem};
+use crate::rng::Xoshiro256pp;
+use crate::runtime::{XlaFilter, XlaRuntime};
+use crate::sort;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+use std::rc::Rc;
+use std::sync::mpsc::sync_channel;
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Per-shard work summary returned by solve workers.
+#[derive(Debug, Default, Clone)]
+struct ShardStats {
+    sort_secs: f64,
+    solve_secs: f64,
+    xla_calls: usize,
+    native_fallbacks: usize,
+}
+
+fn make_backend(cfg: &GenConfig) -> Result<Box<dyn FilterBackend>> {
+    match &cfg.backend {
+        Backend::Native => Ok(Box::new(NativeFilter)),
+        Backend::Xla { artifacts_dir } => {
+            let rt = XlaRuntime::load(Path::new(artifacts_dir))?;
+            Ok(Box::new(XlaFilter::new(Rc::new(rt))))
+        }
+    }
+}
+
+/// Generate a full eigenvalue dataset per the config, writing it to
+/// `out_dir`. Returns the run report (also embedded in the manifest).
+///
+/// Deterministic: problem parameters depend only on `cfg.seed`; solve
+/// results are deterministic per shard.
+pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
+    assert!(cfg.n_problems >= 1);
+    assert!(cfg.shards >= 1);
+    let t_start = Instant::now();
+    let chunk_size = cfg.n_problems.div_ceil(cfg.shards);
+    let n_workers = cfg.shards.min(cfg.n_problems.div_ceil(chunk_size));
+
+    // Stage channels (bounded = backpressure).
+    let (chunk_tx, chunk_rx) = sync_channel::<Vec<Problem>>(2);
+    let chunk_rx = Mutex::new(chunk_rx);
+    let (res_tx, res_rx) =
+        sync_channel::<(usize, crate::eig::EigResult)>(cfg.channel_capacity);
+    let shard_stats: Mutex<Vec<ShardStats>> = Mutex::new(Vec::new());
+    let gen_secs_cell: Mutex<f64> = Mutex::new(0.0);
+    let producer_err: Mutex<Option<String>> = Mutex::new(None);
+
+    let mut report = GenReport {
+        n_problems: cfg.n_problems,
+        ..Default::default()
+    };
+
+    let writer_out: Result<(DatasetWriter, f64, f64, f64, usize)> =
+        std::thread::scope(|scope| {
+            // ---- Producer: parameters → operators → chunks ------------
+            let producer_err = &producer_err;
+            let gen_secs_cell = &gen_secs_cell;
+            scope.spawn(move || {
+                // `chunk_tx` is moved in and dropped on exit → workers
+                // see EOF once all chunks are out.
+                let chunk_tx = chunk_tx;
+                let t0 = Instant::now();
+                let mut master = Xoshiro256pp::seed_from_u64(cfg.seed);
+                let mut chunk: Vec<Problem> = Vec::with_capacity(chunk_size);
+                for id in 0..cfg.n_problems {
+                    let mut prng = master.fork();
+                    let p =
+                        operators::generate_one(cfg.kind, cfg.gen_options(), id, &mut prng);
+                    chunk.push(p);
+                    if chunk.len() == chunk_size || id + 1 == cfg.n_problems {
+                        let full = std::mem::take(&mut chunk);
+                        if chunk_tx.send(full).is_err() {
+                            *producer_err.lock().unwrap() =
+                                Some("workers hung up early".to_string());
+                            break;
+                        }
+                    }
+                }
+                *gen_secs_cell.lock().unwrap() = t0.elapsed().as_secs_f64();
+            });
+
+            // ---- Shard workers: sort + warm-started sequential solve --
+            let mut worker_handles = Vec::new();
+            for _w in 0..n_workers {
+                let res_tx = res_tx.clone();
+                let chunk_rx = &chunk_rx;
+                let shard_stats = &shard_stats;
+                let handle = scope.spawn(move || -> Result<()> {
+                    let mut backend = make_backend(cfg)?;
+                    let mut stats = ShardStats::default();
+                    loop {
+                        let chunk = {
+                            let rx = chunk_rx.lock().unwrap();
+                            match rx.recv() {
+                                Ok(c) => c,
+                                Err(_) => break, // producer done
+                            }
+                        };
+                        let t_sort = Instant::now();
+                        let sorted = sort::sort_problems(&chunk, cfg.sort);
+                        stats.sort_secs += t_sort.elapsed().as_secs_f64();
+                        let opts = cfg.scsf_options();
+                        let t_solve = Instant::now();
+                        let mut warm: Option<WarmStart> = None;
+                        for &idx in &sorted.order {
+                            let problem = &chunk[idx];
+                            let r = chfsi::solve_with_backend(
+                                &problem.matrix,
+                                &opts.chfsi,
+                                warm.as_ref(),
+                                backend.as_mut(),
+                            );
+                            warm = Some(r.as_warm_start());
+                            res_tx
+                                .send((problem.id, r))
+                                .map_err(|_| anyhow!("writer hung up"))?;
+                        }
+                        stats.solve_secs += t_solve.elapsed().as_secs_f64();
+                    }
+                    let (xla, fallback) = backend.counters();
+                    stats.xla_calls = xla;
+                    stats.native_fallbacks = fallback;
+                    shard_stats.lock().unwrap().push(stats);
+                    Ok(())
+                });
+                worker_handles.push(handle);
+            }
+            drop(res_tx); // writer sees EOF once all workers finish
+
+            // ---- Validator / writer -----------------------------------
+            let mut writer = DatasetWriter::create(out_dir)?;
+            let mut write_secs = 0.0f64;
+            let mut max_residual: f64 = 0.0;
+            let mut solve_secs_sum = 0.0;
+            let mut iter_sum = 0usize;
+            let mut mflops = 0.0;
+            let mut filter_mflops = 0.0;
+            let mut all_converged = true;
+            let mut count = 0usize;
+            for (id, result) in res_rx.iter() {
+                // Validation stage: every stored pair re-checked against
+                // the tolerance (the dataset-reliability guarantee of
+                // paper §E.5).
+                let worst = result.residuals.iter().cloned().fold(0.0, f64::max);
+                max_residual = max_residual.max(worst);
+                all_converged &= result.stats.converged;
+                solve_secs_sum += result.stats.secs;
+                iter_sum += result.stats.iterations;
+                mflops += result.stats.flops as f64 / 1e6;
+                filter_mflops += result.stats.filter_flops as f64 / 1e6;
+                let t_write = Instant::now();
+                writer.write_record(id, &result)?;
+                write_secs += t_write.elapsed().as_secs_f64();
+                count += 1;
+            }
+
+            for h in worker_handles {
+                h.join().map_err(|_| anyhow!("worker panicked"))??;
+            }
+            if let Some(err) = producer_err.lock().unwrap().take() {
+                return Err(anyhow!(err));
+            }
+            report.max_residual = max_residual;
+            report.all_converged = all_converged;
+            report.avg_solve_secs = solve_secs_sum / count.max(1) as f64;
+            report.avg_iterations = iter_sum as f64 / count.max(1) as f64;
+            report.total_mflops = mflops;
+            report.filter_mflops = filter_mflops;
+            Ok((writer, write_secs, solve_secs_sum, 0.0, count))
+        });
+
+    let (writer, write_secs, _solve_sum, _, count) = writer_out?;
+    if count != cfg.n_problems {
+        return Err(anyhow!(
+            "pipeline lost problems: wrote {count} of {}",
+            cfg.n_problems
+        ));
+    }
+
+    let stats = shard_stats.into_inner().unwrap();
+    report.gen_secs = gen_secs_cell.into_inner().unwrap();
+    report.sort_secs = stats.iter().map(|s| s.sort_secs).sum();
+    report.solve_secs = stats.iter().map(|s| s.solve_secs).sum();
+    report.write_secs = write_secs;
+    report.xla_calls = stats.iter().map(|s| s.xla_calls).sum();
+    report.native_fallbacks = stats.iter().map(|s| s.native_fallbacks).sum();
+    report.total_secs = t_start.elapsed().as_secs_f64();
+
+    writer.finalize(vec![
+        ("config", crate::util::json::parse(&cfg.to_json()).unwrap()),
+        ("report", report.to_json()),
+    ])?;
+    Ok(report)
+}
+
+/// Convenience: generate the problems of a config in memory (no solving,
+/// no IO) — used by benches and tests.
+pub fn generate_problems(cfg: &GenConfig) -> Vec<Problem> {
+    operators::generate(cfg.kind, cfg.gen_options(), cfg.n_problems, cfg.seed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::dataset::DatasetReader;
+    use crate::linalg::symeig::sym_eig;
+    use crate::sort::SortMethod;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("scsf_pipe_{tag}_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&d);
+        d
+    }
+
+    fn small_cfg() -> GenConfig {
+        GenConfig {
+            kind: crate::operators::OperatorKind::Helmholtz,
+            grid: 8,
+            n_problems: 6,
+            n_eigs: 4,
+            tol: 1e-8,
+            seed: 11,
+            shards: 2,
+            channel_capacity: 2,
+            sort: SortMethod::TruncatedFft { p0: 6 },
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn end_to_end_native_pipeline() {
+        let dir = tmpdir("e2e");
+        let cfg = small_cfg();
+        let report = generate_dataset(&cfg, &dir).unwrap();
+        assert_eq!(report.n_problems, 6);
+        assert!(report.all_converged, "{report:?}");
+        assert!(report.max_residual <= cfg.tol * 10.0);
+        assert!(report.avg_solve_secs > 0.0);
+
+        // Read back and validate against dense references.
+        let problems = generate_problems(&cfg);
+        let mut reader = DatasetReader::open(&dir).unwrap();
+        assert_eq!(reader.index().len(), 6);
+        for p in &problems {
+            let rec = reader.read(p.id).unwrap();
+            let want = sym_eig(&p.matrix.to_dense());
+            for (got, w) in rec.values.iter().zip(&want.values[..cfg.n_eigs]) {
+                assert!(
+                    (got - w).abs() / w.abs().max(1.0) < 1e-6,
+                    "problem {}: {got} vs {w}",
+                    p.id
+                );
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn single_shard_equals_multi_shard_values() {
+        let d1 = tmpdir("s1");
+        let d2 = tmpdir("s2");
+        let mut c1 = small_cfg();
+        c1.shards = 1;
+        let mut c2 = small_cfg();
+        c2.shards = 3;
+        generate_dataset(&c1, &d1).unwrap();
+        generate_dataset(&c2, &d2).unwrap();
+        let mut r1 = DatasetReader::open(&d1).unwrap();
+        let mut r2 = DatasetReader::open(&d2).unwrap();
+        for id in 0..6 {
+            let a = r1.read(id).unwrap();
+            let b = r2.read(id).unwrap();
+            for (x, y) in a.values.iter().zip(&b.values) {
+                assert!(
+                    (x - y).abs() / x.abs().max(1.0) < 1e-7,
+                    "id {id}: {x} vs {y}"
+                );
+            }
+        }
+        let _ = std::fs::remove_dir_all(&d1);
+        let _ = std::fs::remove_dir_all(&d2);
+    }
+
+    #[test]
+    fn manifest_embeds_config_and_report() {
+        let dir = tmpdir("manifest");
+        let cfg = small_cfg();
+        generate_dataset(&cfg, &dir).unwrap();
+        let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let v = crate::util::json::parse(&text).unwrap();
+        assert!(v.get("config").is_some());
+        assert!(v.get("report").is_some());
+        assert_eq!(
+            v.get("config")
+                .unwrap()
+                .get("kind")
+                .and_then(crate::util::json::Value::as_str),
+            Some("helmholtz")
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn problem_generation_matches_pipeline_producer() {
+        // generate_problems and the in-pipeline producer must agree
+        // (both fork the master RNG per problem).
+        let cfg = small_cfg();
+        let a = generate_problems(&cfg);
+        let b = generate_problems(&cfg);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.matrix, y.matrix);
+        }
+    }
+}

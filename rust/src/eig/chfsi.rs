@@ -1,0 +1,379 @@
+//! Chebyshev Filtered Subspace Iteration (paper Algorithm 3).
+//!
+//! One outer iteration = filter → orthonormalize against locked pairs →
+//! Rayleigh–Ritz → residual check → lock converged prefix. With a warm
+//! start (`V⁽ⁱ⁻¹⁾`, `Λ⁽ⁱ⁻¹⁾`) the first filter already acts on an
+//! approximate invariant subspace and the iteration typically converges
+//! in a handful of passes — this is the mechanism behind SCSF's speedup.
+
+use super::chebyshev::{self, FilterBackend, FilterParams, NativeFilter};
+use super::spectral_bounds::lanczos_bounds;
+use super::{EigOptions, EigResult, SolveStats, WarmStart};
+use crate::linalg::qr::ortho_against;
+use crate::linalg::symeig::sym_eig;
+use crate::linalg::{flops, Mat};
+use crate::rng::Xoshiro256pp;
+use crate::sparse::CsrMatrix;
+use std::time::Instant;
+
+/// ChFSI-specific options.
+#[derive(Debug, Clone, Copy)]
+pub struct ChfsiOptions {
+    /// Base options (L, tolerance, iteration cap, seed).
+    pub eig: EigOptions,
+    /// Chebyshev polynomial degree `m` (paper default 20).
+    pub degree: usize,
+    /// Guard-vector count appended to the wanted block
+    /// (`None` → paper's 20 % rule via [`super::guard_size`]).
+    pub guard: Option<usize>,
+    /// Lanczos steps for the spectral upper bound.
+    pub bound_steps: usize,
+}
+
+impl ChfsiOptions {
+    /// Defaults from plain [`EigOptions`] (degree 20, 20 % guard).
+    pub fn from_eig(opts: &EigOptions) -> Self {
+        Self {
+            eig: *opts,
+            degree: 20,
+            guard: None,
+            bound_steps: 12,
+        }
+    }
+
+    fn guard_count(&self) -> usize {
+        self.guard.unwrap_or_else(|| super::guard_size(self.eig.n_eigs))
+    }
+}
+
+/// Solve with the default native (CSR SpMM) filter backend.
+pub fn solve(a: &CsrMatrix, opts: &ChfsiOptions, init: Option<&WarmStart>) -> EigResult {
+    let mut backend = NativeFilter;
+    solve_with_backend(a, opts, init, &mut backend)
+}
+
+/// Solve with an explicit filter backend (native or PJRT/XLA).
+pub fn solve_with_backend(
+    a: &CsrMatrix,
+    opts: &ChfsiOptions,
+    init: Option<&WarmStart>,
+    backend: &mut dyn FilterBackend,
+) -> EigResult {
+    let t0 = Instant::now();
+    flops::take();
+    let n = a.rows();
+    let l = opts.eig.n_eigs;
+    assert!(l >= 1 && l < n, "need 1 ≤ L < n (L={l}, n={n})");
+    let guard = opts.guard_count();
+    let block = (l + guard).min(n - 1).max(l + 1);
+    let tol = opts.eig.tol;
+
+    // ---- Initial block and spectral estimates --------------------------
+    let bounds = lanczos_bounds(a, opts.bound_steps, opts.eig.seed);
+    let upper = bounds.upper * (1.0 + 1e-8) + 1e-12;
+    let mut rng = Xoshiro256pp::seed_from_u64(opts.eig.seed);
+
+    // Iterate block: inherited subspace padded with random columns, or
+    // fully random (ChFSI baseline / first problem in a sequence).
+    let mut v = match init {
+        Some(ws) => {
+            let have = ws.vectors.cols().min(block);
+            let inherited = ws.vectors.cols_range(0, have);
+            if have < block {
+                inherited.hcat(&Mat::randn(n, block - have, &mut rng))
+            } else {
+                inherited
+            }
+        }
+        None => Mat::randn(n, block, &mut rng),
+    };
+
+    // Initial interval estimates: warm starts reuse the previous
+    // spectrum (paper: λ ≈ λ'₁, [α, β] from (λ'₂ … λ'_L)); cold starts
+    // take one Rayleigh–Ritz on the random block.
+    let (mut target, mut alpha) = match init {
+        Some(ws) if ws.values.len() >= 2 => {
+            let lam1 = ws.values[0];
+            let lam_l = *ws.values.last().unwrap();
+            // Block-capacity edge estimate: extrapolate the previous
+            // spectrum by `guard` mean gaps past λ_L (≈ λ_{L+g}).
+            let gap = ((lam_l - lam1) / ws.values.len() as f64).max(1e-12 * lam_l.abs());
+            let extra = (block - l) as f64;
+            (lam1 - 0.5 * gap, lam_l + (0.5 + extra) * gap)
+        }
+        _ => {
+            let q = ortho_against(None, &v);
+            let g = q.t_matmul(&a.spmm_alloc(&q));
+            let eig = sym_eig(&g);
+            v = q.matmul(&eig.vectors);
+            // Random-block Ritz values overestimate badly; use the
+            // Lanczos lower estimate for the target.
+            (bounds.lower_est, eig.values[l.min(eig.values.len() - 1)])
+        }
+    };
+
+    // ---- Locked storage -------------------------------------------------
+    let mut locked_vecs: Option<Mat> = None;
+    let mut locked_vals: Vec<f64> = Vec::new();
+    let mut last_theta: Vec<f64> = Vec::new();
+    let mut stats = SolveStats::default();
+
+    while locked_vals.len() < l && stats.iterations < opts.eig.max_iters {
+        stats.iterations += 1;
+        let params = FilterParams {
+            degree: opts.degree,
+            lower: alpha,
+            upper,
+            target,
+        }
+        .sanitized();
+
+        // (line 3) filter the active block
+        let t_phase = Instant::now();
+        let (filtered, ff) =
+            chebyshev::filtered_with_flops(backend, a, &v, &params);
+        stats.filter_secs += t_phase.elapsed().as_secs_f64();
+        stats.filter_flops += ff;
+        stats.matvecs += v.cols() * opts.degree;
+
+        // (line 4) orthonormalize [locked | filtered]
+        let t_phase = Instant::now();
+        let q = ortho_against(locked_vecs.as_ref(), &filtered);
+        stats.qr_secs += t_phase.elapsed().as_secs_f64();
+
+        // (line 5-6) Rayleigh–Ritz on the active subspace
+        let t_phase = Instant::now();
+        let aq = a.spmm_alloc(&q);
+        stats.matvecs += q.cols();
+        let g = q.t_matmul(&aq);
+        let eig = sym_eig(&g);
+        let v_new = q.matmul(&eig.vectors); // ascending Ritz pairs
+        let theta = &eig.values;
+        stats.rr_secs += t_phase.elapsed().as_secs_f64();
+
+        // (line 7) residuals and prefix locking
+        let t_phase = Instant::now();
+        let want_here = l - locked_vals.len(); // still-needed pairs
+        let res = super::rel_residuals(a, &theta[..want_here.min(theta.len())], &v_new);
+        stats.matvecs += want_here.min(theta.len());
+        let mut newly = 0;
+        while newly < res.len() && res[newly] <= tol {
+            newly += 1;
+        }
+        if newly > 0 {
+            let new_locked = v_new.cols_range(0, newly);
+            locked_vecs = Some(match &locked_vecs {
+                Some(lv) => lv.hcat(&new_locked),
+                None => new_locked,
+            });
+            locked_vals.extend_from_slice(&theta[..newly]);
+        }
+
+        stats.resid_secs += t_phase.elapsed().as_secs_f64();
+
+        // Active block for the next sweep: non-locked Ritz vectors.
+        last_theta = theta[newly..].to_vec();
+        v = v_new.cols_range(newly, v_new.cols());
+
+        // Updated interval (ChASE policy): damp everything the block has
+        // no capacity to represent — α tracks the largest active Ritz
+        // value (≈ λ_{L+g}); everything below it is amplified and
+        // resolved by the Rayleigh–Ritz step.
+        let remaining = l - locked_vals.len();
+        if remaining > 0 {
+            target = theta[newly.min(theta.len() - 1)];
+            alpha = theta[theta.len() - 1];
+            if !(alpha > target) {
+                alpha = target + (upper - target) * 1e-3;
+            }
+        }
+    }
+
+    stats.flops = flops::take();
+    stats.secs = t0.elapsed().as_secs_f64();
+
+    // Iteration cap hit before full convergence: return the best-effort
+    // Ritz pairs (finalize() will report converged = false).
+    if locked_vals.len() < l {
+        let missing = l - locked_vals.len();
+        let take = missing.min(v.cols()).min(last_theta.len());
+        let extra = v.cols_range(0, take);
+        locked_vecs = Some(match &locked_vecs {
+            Some(lv) => lv.hcat(&extra),
+            None => extra,
+        });
+        locked_vals.extend_from_slice(&last_theta[..take]);
+    }
+
+    // Assemble the L smallest locked pairs (sorted — locking order is
+    // already ascending per sweep, but sweeps may interleave).
+    let locked = locked_vecs.expect("ChFSI produced no pairs at all");
+    let mut order: Vec<usize> = (0..locked_vals.len()).collect();
+    order.sort_by(|&x, &y| locked_vals[x].partial_cmp(&locked_vals[y]).unwrap());
+    let take = order.len().min(l);
+    let mut values = Vec::with_capacity(take);
+    let mut vectors = Mat::zeros(n, take);
+    for (dst, &src) in order[..take].iter().enumerate() {
+        values.push(locked_vals[src]);
+        vectors.set_col(dst, &locked.col(src));
+    }
+    EigResult::finalize(a, values, vectors, stats, tol)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operators::{self, GenOptions, OperatorKind};
+
+    fn problem(kind: OperatorKind, grid: usize, seed: u64) -> CsrMatrix {
+        operators::generate(
+            kind,
+            GenOptions {
+                grid,
+                ..Default::default()
+            },
+            1,
+            seed,
+        )
+        .remove(0)
+        .matrix
+    }
+
+    fn dense_reference(a: &CsrMatrix, l: usize) -> Vec<f64> {
+        sym_eig(&a.to_dense()).values[..l].to_vec()
+    }
+
+    #[test]
+    fn converges_on_poisson_random_init() {
+        let a = problem(OperatorKind::Poisson, 12, 1);
+        let opts = ChfsiOptions::from_eig(&EigOptions {
+            n_eigs: 8,
+            tol: 1e-10,
+            max_iters: 300,
+            seed: 0,
+        });
+        let r = solve(&a, &opts, None);
+        assert!(r.stats.converged, "residuals {:?}", r.residuals);
+        let want = dense_reference(&a, 8);
+        for (got, want) in r.values.iter().zip(&want) {
+            assert!((got - want).abs() / want < 1e-8, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn converges_on_helmholtz_and_vibration() {
+        for kind in [OperatorKind::Helmholtz, OperatorKind::Vibration] {
+            let a = problem(kind, 10, 2);
+            let opts = ChfsiOptions::from_eig(&EigOptions {
+                n_eigs: 6,
+                tol: 1e-8,
+                max_iters: 300,
+                seed: 1,
+            });
+            let r = solve(&a, &opts, None);
+            assert!(r.stats.converged, "{kind:?}: {:?}", r.residuals);
+            let want = dense_reference(&a, 6);
+            for (got, want) in r.values.iter().zip(&want) {
+                assert!(
+                    (got - want).abs() / want.abs().max(1.0) < 1e-6,
+                    "{kind:?}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn warm_start_reduces_iterations() {
+        // Two similar Helmholtz problems: warm-starting the second from
+        // the first must reduce outer iterations — the SCSF mechanism.
+        let opts_gen = GenOptions {
+            grid: 12,
+            ..Default::default()
+        };
+        let chain =
+            operators::helmholtz::generate_perturbed_chain(opts_gen, 2, 0.05, 3);
+        let opts = ChfsiOptions::from_eig(&EigOptions {
+            n_eigs: 8,
+            tol: 1e-8,
+            max_iters: 300,
+            seed: 0,
+        });
+        let r1 = solve(&chain[0].matrix, &opts, None);
+        assert!(r1.stats.converged);
+        let cold = solve(&chain[1].matrix, &opts, None);
+        let warm = solve(&chain[1].matrix, &opts, Some(&r1.as_warm_start()));
+        assert!(warm.stats.converged && cold.stats.converged);
+        assert!(
+            warm.stats.iterations <= cold.stats.iterations,
+            "warm {} vs cold {}",
+            warm.stats.iterations,
+            cold.stats.iterations
+        );
+        assert!(warm.stats.filter_flops <= cold.stats.filter_flops);
+        // Same answer.
+        for (w, c) in warm.values.iter().zip(&cold.values) {
+            assert!((w - c).abs() / c < 1e-6);
+        }
+    }
+
+    #[test]
+    fn identical_warm_start_converges_immediately() {
+        // Paper Table 17's 0 %-perturbation row: a handful of iterations.
+        let a = problem(OperatorKind::Helmholtz, 10, 5);
+        let opts = ChfsiOptions::from_eig(&EigOptions {
+            n_eigs: 6,
+            tol: 1e-8,
+            max_iters: 300,
+            seed: 0,
+        });
+        let r1 = solve(&a, &opts, None);
+        let r2 = solve(&a, &opts, Some(&r1.as_warm_start()));
+        assert!(r2.stats.iterations <= 2, "took {}", r2.stats.iterations);
+    }
+
+    #[test]
+    fn filter_flops_dominate() {
+        // Paper Table 11: the filter is > 70 % of SCSF's flops.
+        let a = problem(OperatorKind::Poisson, 14, 6);
+        let opts = ChfsiOptions::from_eig(&EigOptions {
+            n_eigs: 10,
+            tol: 1e-10,
+            max_iters: 300,
+            seed: 0,
+        });
+        let r = solve(&a, &opts, None);
+        let frac = r.stats.filter_flops as f64 / r.stats.flops as f64;
+        assert!(frac > 0.5, "filter fraction {frac}");
+    }
+
+    #[test]
+    fn respects_custom_guard_and_degree() {
+        let a = problem(OperatorKind::Poisson, 10, 7);
+        let mut opts = ChfsiOptions::from_eig(&EigOptions {
+            n_eigs: 5,
+            tol: 1e-9,
+            max_iters: 400,
+            seed: 2,
+        });
+        opts.degree = 12;
+        opts.guard = Some(8);
+        let r = solve(&a, &opts, None);
+        assert!(r.stats.converged);
+        assert_eq!(r.values.len(), 5);
+    }
+
+    #[test]
+    fn residuals_meet_tolerance() {
+        let a = problem(OperatorKind::Elliptic, 10, 8);
+        let opts = ChfsiOptions::from_eig(&EigOptions {
+            n_eigs: 6,
+            tol: 1e-10,
+            max_iters: 400,
+            seed: 3,
+        });
+        let r = solve(&a, &opts, None);
+        for res in &r.residuals {
+            assert!(*res <= 1e-9, "residual {res}");
+        }
+    }
+}

@@ -1,0 +1,307 @@
+//! Thick-restart Lanczos — the SciPy `eigsh` (ARPACK) stand-in.
+//!
+//! For Hermitian matrices the implicitly-restarted Lanczos of ARPACK and
+//! Krylov–Schur are mathematically equivalent restart schemes (Stewart
+//! 2002); we implement the thick-restart formulation (Wu & Simon 2000)
+//! with full reorthogonalization, and expose two restart policies:
+//! the roomy ARPACK-style subspace here, and the lean
+//! Krylov–Schur-style subspace in [`super::krylov_schur`].
+
+use super::{EigOptions, EigResult, SolveStats, WarmStart};
+use crate::linalg::dense::{dot, norm2, vaxpy};
+use crate::linalg::symeig::sym_eig;
+use crate::linalg::{flops, Mat};
+use crate::rng::Xoshiro256pp;
+use crate::sparse::CsrMatrix;
+use std::time::Instant;
+
+/// ARPACK-style restart dimension: `m = min(n−1, max(2(L+g), L+g+12))`.
+pub fn solve(a: &CsrMatrix, opts: &EigOptions, init: Option<&WarmStart>) -> EigResult {
+    let l = opts.n_eigs;
+    let keep = l + super::guard_size(l);
+    let m = (2 * keep).max(keep + 12).min(a.rows() - 1);
+    thick_restart_engine(a, opts, init, m, keep)
+}
+
+/// The shared thick-restart Lanczos engine.
+///
+/// * `m_dim` — Krylov subspace dimension per cycle.
+/// * `keep`  — Ritz pairs retained at each restart.
+pub(crate) fn thick_restart_engine(
+    a: &CsrMatrix,
+    opts: &EigOptions,
+    init: Option<&WarmStart>,
+    m_dim: usize,
+    keep: usize,
+) -> EigResult {
+    let t0 = Instant::now();
+    flops::take();
+    let n = a.rows();
+    let l = opts.n_eigs;
+    assert!(l >= 1 && l < n);
+    let m_dim = m_dim.min(n - 1).max(l + 2);
+    let keep = keep.min(m_dim - 2).max(l);
+    let tol = opts.tol;
+    let mut rng = Xoshiro256pp::seed_from_u64(opts.seed);
+    let mut stats = SolveStats::default();
+
+    // Basis Q: m_dim + 1 columns, stored column-contiguous for the
+    // dot/axpy-heavy inner loop.
+    let mut q: Vec<Vec<f64>> = Vec::with_capacity(m_dim + 1);
+    // Starting vector: warm starts collapse the inherited subspace into
+    // one vector (ARPACK's v0 contract — Table 2's Eigsh*/KS* variants).
+    let mut v0 = vec![0.0f64; n];
+    match init {
+        Some(ws) => {
+            for j in 0..ws.vectors.cols() {
+                for i in 0..n {
+                    v0[i] += ws.vectors[(i, j)];
+                }
+            }
+            flops::add((n * ws.vectors.cols()) as u64);
+        }
+        None => rng.fill_normal(&mut v0),
+    }
+    let nrm = norm2(&v0);
+    v0.iter_mut().for_each(|x| *x /= nrm);
+    q.push(v0);
+
+    let mut t = Mat::zeros(m_dim, m_dim);
+    let mut start = 0usize; // index of the newest basis column to expand
+    let mut w = vec![0.0f64; n];
+    let mut beta_last = 0.0f64;
+
+    loop {
+        stats.iterations += 1;
+        // ---- Lanczos expansion from `start` to `m_dim` -----------------
+        for j in start..m_dim {
+            a.spmv(&q[j], &mut w);
+            stats.matvecs += 1;
+            // Full reorthogonalization (two MGS passes); only the
+            // (arrowhead-)tridiagonal coefficients enter T.
+            for pass in 0..2 {
+                for (i, qi) in q.iter().enumerate() {
+                    let c = dot(qi, &w);
+                    vaxpy(-c, qi, &mut w);
+                    if pass == 0 && i == j {
+                        t[(j, j)] += c;
+                    }
+                }
+            }
+            let beta = norm2(&w);
+            if j + 1 < m_dim {
+                t[(j, j + 1)] = beta;
+                t[(j + 1, j)] = beta;
+            } else {
+                beta_last = beta;
+            }
+            if beta < 1e-12 {
+                // Breakdown: invariant subspace found. Insert a fresh
+                // random direction (decoupled: beta entry stays 0).
+                let mut fresh = vec![0.0f64; n];
+                rng.fill_normal(&mut fresh);
+                for qi in q.iter() {
+                    let c = dot(qi, &fresh);
+                    vaxpy(-c, qi, &mut fresh);
+                }
+                let fn_ = norm2(&fresh);
+                fresh.iter_mut().for_each(|x| *x /= fn_);
+                if j + 1 < m_dim {
+                    t[(j, j + 1)] = 0.0;
+                    t[(j + 1, j)] = 0.0;
+                } else {
+                    beta_last = 0.0;
+                }
+                q.push(fresh);
+            } else {
+                q.push(w.iter().map(|x| x / beta).collect());
+            }
+        }
+
+        // ---- Rayleigh–Ritz on T ---------------------------------------
+        let eig = sym_eig(&t);
+        let theta = &eig.values;
+        let s = &eig.vectors;
+
+        // Residuals of the l wanted (smallest) Ritz pairs.
+        let mut n_conv = 0;
+        for i in 0..l {
+            let res = (beta_last * s[(m_dim - 1, i)]).abs();
+            let denom = (theta[i] * theta[i] + res * res).sqrt().max(1e-300);
+            if res / denom <= tol {
+                n_conv += 1;
+            } else {
+                break;
+            }
+        }
+
+        let done = n_conv >= l || stats.iterations >= opts.max_iters;
+        let k_out = if done { l } else { keep };
+        // Ritz vectors Y = Q_m · S[:, :k_out].
+        let mut y = Mat::zeros(n, k_out);
+        for col in 0..k_out {
+            for i in 0..n {
+                let mut acc = 0.0;
+                for jj in 0..m_dim {
+                    acc += q[jj][i] * s[(jj, col)];
+                }
+                y[(i, col)] = acc;
+            }
+        }
+        flops::add(2 * (n * m_dim * k_out) as u64);
+
+        if done {
+            stats.flops = flops::take();
+            stats.secs = t0.elapsed().as_secs_f64();
+            let values = theta[..l].to_vec();
+            return EigResult::finalize(a, values, y, stats, tol);
+        }
+
+        // ---- Thick restart --------------------------------------------
+        let resid = q[m_dim].clone();
+        q.clear();
+        for c in 0..keep {
+            q.push(y.col(c));
+        }
+        q.push(resid);
+        t = Mat::zeros(m_dim, m_dim);
+        for i in 0..keep {
+            t[(i, i)] = theta[i];
+            let b = beta_last * s[(m_dim - 1, i)];
+            t[(i, keep)] = b;
+            t[(keep, i)] = b;
+        }
+        start = keep;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operators::{self, GenOptions, OperatorKind};
+
+    fn problem(kind: OperatorKind, grid: usize, seed: u64) -> CsrMatrix {
+        operators::generate(
+            kind,
+            GenOptions {
+                grid,
+                ..Default::default()
+            },
+            1,
+            seed,
+        )
+        .remove(0)
+        .matrix
+    }
+
+    fn reference(a: &CsrMatrix, l: usize) -> Vec<f64> {
+        sym_eig(&a.to_dense()).values[..l].to_vec()
+    }
+
+    #[test]
+    fn converges_on_poisson() {
+        let a = problem(OperatorKind::Poisson, 12, 1);
+        let opts = EigOptions {
+            n_eigs: 8,
+            tol: 1e-10,
+            max_iters: 500,
+            seed: 0,
+        };
+        let r = solve(&a, &opts, None);
+        assert!(r.stats.converged, "{:?}", r.residuals);
+        for (got, want) in r.values.iter().zip(&reference(&a, 8)) {
+            assert!((got - want).abs() / want < 1e-8, "{got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn converges_on_all_operator_families() {
+        for kind in [
+            OperatorKind::Elliptic,
+            OperatorKind::Helmholtz,
+            OperatorKind::Vibration,
+            OperatorKind::HelmholtzFem,
+        ] {
+            let a = problem(kind, 9, 2);
+            let opts = EigOptions {
+                n_eigs: 5,
+                tol: 1e-8,
+                max_iters: 500,
+                seed: 1,
+            };
+            let r = solve(&a, &opts, None);
+            assert!(r.stats.converged, "{kind:?}");
+            for (got, want) in r.values.iter().zip(&reference(&a, 5)) {
+                assert!(
+                    (got - want).abs() / want.abs().max(1.0) < 1e-6,
+                    "{kind:?}: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn eigenvectors_meet_residual_tolerance() {
+        let a = problem(OperatorKind::Helmholtz, 10, 3);
+        let opts = EigOptions {
+            n_eigs: 6,
+            tol: 1e-9,
+            max_iters: 500,
+            seed: 2,
+        };
+        let r = solve(&a, &opts, None);
+        for res in &r.residuals {
+            assert!(*res < 1e-8, "residual {res}");
+        }
+    }
+
+    #[test]
+    fn warm_start_is_accepted_and_correct() {
+        // Table 2: Eigsh* — warm start must not break correctness
+        // (the paper found it barely helps, and ours needn't either).
+        let a = problem(OperatorKind::Helmholtz, 10, 4);
+        let opts = EigOptions {
+            n_eigs: 5,
+            tol: 1e-8,
+            max_iters: 500,
+            seed: 3,
+        };
+        let cold = solve(&a, &opts, None);
+        let warm = solve(&a, &opts, Some(&cold.as_warm_start()));
+        assert!(warm.stats.converged);
+        for (w, c) in warm.values.iter().zip(&cold.values) {
+            assert!((w - c).abs() / c.abs().max(1.0) < 1e-7);
+        }
+    }
+
+    #[test]
+    fn identity_matrix_degenerate_spectrum() {
+        let a = CsrMatrix::eye(40);
+        let opts = EigOptions {
+            n_eigs: 3,
+            tol: 1e-10,
+            max_iters: 200,
+            seed: 0,
+        };
+        let r = solve(&a, &opts, None);
+        for v in &r.values {
+            assert!((v - 1.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn stats_are_populated() {
+        let a = problem(OperatorKind::Poisson, 10, 5);
+        let opts = EigOptions {
+            n_eigs: 4,
+            tol: 1e-8,
+            max_iters: 500,
+            seed: 1,
+        };
+        let r = solve(&a, &opts, None);
+        assert!(r.stats.matvecs > 0);
+        assert!(r.stats.flops > 0);
+        assert!(r.stats.iterations >= 1);
+        assert_eq!(r.stats.filter_flops, 0); // no Chebyshev filter here
+    }
+}

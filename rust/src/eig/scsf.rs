@@ -1,0 +1,235 @@
+//! SCSF — the paper's contribution (§3): sort the problem set, then solve
+//! it as a warm-started sequence with ChFSI.
+//!
+//! `SCSF = TruncatedFFT-sort ∘ (ChFSI warm-started from the previous
+//! problem's eigenpairs)`. Setting [`crate::sort::SortMethod::None`]
+//! gives the paper's "SCSF w/o sort" ablation; a fresh random start per
+//! problem (no warm start at all) is the plain ChFSI baseline.
+
+use super::chebyshev::FilterBackend;
+use super::chfsi::{self, ChfsiOptions};
+use super::{EigResult, WarmStart};
+use crate::operators::Problem;
+use crate::sort::{self, SortMethod, SortOutcome};
+
+/// Options for a sequence solve.
+#[derive(Debug, Clone, Copy)]
+pub struct ScsfOptions {
+    /// Per-problem ChFSI options.
+    pub chfsi: ChfsiOptions,
+    /// Sorting strategy (paper default: truncated FFT with `p₀ = 20`).
+    pub sort: SortMethod,
+    /// Chain warm starts (`false` → every problem starts cold, i.e. the
+    /// plain ChFSI baseline run over the same sequence).
+    pub warm_start: bool,
+}
+
+impl ScsfOptions {
+    /// Paper defaults: truncated-FFT sort (p₀=20), warm starts on.
+    pub fn paper_default(chfsi: ChfsiOptions) -> Self {
+        Self {
+            chfsi,
+            sort: SortMethod::TruncatedFft { p0: 20 },
+            warm_start: true,
+        }
+    }
+}
+
+/// Result of a sequence solve.
+#[derive(Debug)]
+pub struct SequenceResult {
+    /// Per-problem results, in *solve order*.
+    pub results: Vec<EigResult>,
+    /// The solve order (indices into the input problem slice).
+    pub order: Vec<usize>,
+    /// Sorting cost breakdown.
+    pub sort: SortOutcome,
+}
+
+impl SequenceResult {
+    /// Result for the problem with original index `id`.
+    pub fn by_problem_id(&self, id: usize) -> &EigResult {
+        let pos = self
+            .order
+            .iter()
+            .position(|&o| o == id)
+            .expect("unknown problem id");
+        &self.results[pos]
+    }
+
+    /// Mean wall-clock seconds per solve (the paper's headline metric).
+    pub fn avg_secs(&self) -> f64 {
+        self.results.iter().map(|r| r.stats.secs).sum::<f64>() / self.results.len() as f64
+    }
+
+    /// Mean outer iterations per solve.
+    pub fn avg_iterations(&self) -> f64 {
+        self.results.iter().map(|r| r.stats.iterations as f64).sum::<f64>()
+            / self.results.len() as f64
+    }
+
+    /// Total flops across the sequence (Mflop).
+    pub fn total_mflops(&self) -> f64 {
+        self.results.iter().map(|r| r.stats.flops as f64).sum::<f64>() / 1e6
+    }
+
+    /// Filter-only flops across the sequence (Mflop).
+    pub fn filter_mflops(&self) -> f64 {
+        self.results
+            .iter()
+            .map(|r| r.stats.filter_flops as f64)
+            .sum::<f64>()
+            / 1e6
+    }
+
+    /// True if every solve converged.
+    pub fn all_converged(&self) -> bool {
+        self.results.iter().all(|r| r.stats.converged)
+    }
+}
+
+/// Solve a problem set with SCSF using the native filter backend.
+pub fn solve_sequence(problems: &[Problem], opts: &ScsfOptions) -> SequenceResult {
+    let mut backend = super::chebyshev::NativeFilter;
+    solve_sequence_with_backend(problems, opts, &mut backend)
+}
+
+/// Solve a problem set with SCSF on an explicit filter backend (used by
+/// the PJRT/XLA integration and by the pipeline workers).
+pub fn solve_sequence_with_backend(
+    problems: &[Problem],
+    opts: &ScsfOptions,
+    backend: &mut dyn FilterBackend,
+) -> SequenceResult {
+    assert!(!problems.is_empty());
+    let sort = sort::sort_problems(problems, opts.sort);
+    let mut results = Vec::with_capacity(problems.len());
+    let mut warm: Option<WarmStart> = None;
+    for &idx in &sort.order {
+        let a = &problems[idx].matrix;
+        let r = chfsi::solve_with_backend(a, &opts.chfsi, warm.as_ref(), backend);
+        if opts.warm_start {
+            warm = Some(r.as_warm_start());
+        }
+        results.push(r);
+    }
+    SequenceResult {
+        results,
+        order: sort.order.clone(),
+        sort,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eig::EigOptions;
+    use crate::linalg::symeig::sym_eig;
+    use crate::operators::{self, GenOptions, OperatorKind};
+
+    fn opts(l: usize, tol: f64) -> ScsfOptions {
+        ScsfOptions::paper_default(ChfsiOptions::from_eig(&EigOptions {
+            n_eigs: l,
+            tol,
+            max_iters: 300,
+            seed: 0,
+        }))
+    }
+
+    fn dataset(n: usize, seed: u64) -> Vec<operators::Problem> {
+        operators::generate(
+            OperatorKind::Helmholtz,
+            GenOptions {
+                grid: 10,
+                ..Default::default()
+            },
+            n,
+            seed,
+        )
+    }
+
+    #[test]
+    fn sequence_solves_every_problem_correctly() {
+        let ps = dataset(4, 1);
+        let seq = solve_sequence(&ps, &opts(5, 1e-8));
+        assert!(seq.all_converged());
+        assert_eq!(seq.results.len(), 4);
+        for (pos, &pid) in seq.order.iter().enumerate() {
+            let want = sym_eig(&ps[pid].matrix.to_dense());
+            for (got, w) in seq.results[pos].values.iter().zip(&want.values[..5]) {
+                assert!(
+                    (got - w).abs() / w.abs().max(1.0) < 1e-6,
+                    "problem {pid}: {got} vs {w}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn by_problem_id_maps_back() {
+        let ps = dataset(5, 2);
+        let seq = solve_sequence(&ps, &opts(4, 1e-8));
+        for pid in 0..5 {
+            let r = seq.by_problem_id(pid);
+            let want = sym_eig(&ps[pid].matrix.to_dense());
+            assert!((r.values[0] - want.values[0]).abs() / want.values[0] < 1e-6);
+        }
+    }
+
+    #[test]
+    fn warm_chain_beats_cold_chain_on_similar_problems() {
+        // The core SCSF claim (Table 17 shape): chained warm starts cut
+        // iterations versus per-problem cold starts.
+        let chain = operators::helmholtz::generate_perturbed_chain(
+            GenOptions {
+                grid: 10,
+                ..Default::default()
+            },
+            6,
+            0.05,
+            3,
+        );
+        let mut o = opts(5, 1e-8);
+        o.sort = crate::sort::SortMethod::None;
+        let warm = solve_sequence(&chain, &o);
+        let mut cold_opts = o;
+        cold_opts.warm_start = false;
+        let cold = solve_sequence(&chain, &cold_opts);
+        assert!(warm.all_converged() && cold.all_converged());
+        assert!(
+            warm.avg_iterations() < cold.avg_iterations(),
+            "warm {} cold {}",
+            warm.avg_iterations(),
+            cold.avg_iterations()
+        );
+        assert!(warm.total_mflops() < cold.total_mflops());
+    }
+
+    #[test]
+    fn sorting_helps_on_iid_datasets() {
+        // Table 3 shape: with-sort ≤ without-sort in filter flops on an
+        // i.i.d. (unchained) dataset.
+        let ps = dataset(10, 4);
+        let sorted = solve_sequence(&ps, &opts(4, 1e-8));
+        let mut unsorted_opts = opts(4, 1e-8);
+        unsorted_opts.sort = crate::sort::SortMethod::None;
+        let unsorted = solve_sequence(&ps, &unsorted_opts);
+        assert!(sorted.all_converged() && unsorted.all_converged());
+        assert!(
+            sorted.filter_mflops() <= unsorted.filter_mflops() * 1.10,
+            "sorted {} vs unsorted {}",
+            sorted.filter_mflops(),
+            unsorted.filter_mflops()
+        );
+    }
+
+    #[test]
+    fn stats_accessors_are_consistent() {
+        let ps = dataset(3, 5);
+        let seq = solve_sequence(&ps, &opts(4, 1e-8));
+        assert!(seq.avg_secs() > 0.0);
+        assert!(seq.avg_iterations() >= 1.0);
+        assert!(seq.total_mflops() >= seq.filter_mflops());
+        assert_eq!(seq.order.len(), 3);
+    }
+}

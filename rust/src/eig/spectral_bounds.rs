@@ -1,0 +1,141 @@
+//! Spectral-interval estimation for the Chebyshev filter.
+//!
+//! The filter needs a *guaranteed* upper bound `β ≥ λ_max(A)` — if any
+//! unwanted eigenvalue lies outside the damping interval the filter
+//! amplifies it instead. We use the classic safeguarded k-step Lanczos
+//! bound (Zhou & Li 2011, as used by ChASE):
+//!
+//! ```text
+//! β = max_i θ_i + ‖f_k‖
+//! ```
+//!
+//! where `θ_i` are the Ritz values of the k-step tridiagonal and `f_k`
+//! the last residual.
+
+use crate::linalg::dense::{dot, norm2, vaxpy};
+use crate::linalg::symeig::tridiag_eig;
+use crate::rng::Xoshiro256pp;
+use crate::sparse::CsrMatrix;
+
+/// Estimated spectral interval of a symmetric matrix.
+#[derive(Debug, Clone, Copy)]
+pub struct SpectralBounds {
+    /// Lower estimate (smallest Ritz value minus the residual safeguard);
+    /// an *estimate*, not a guarantee.
+    pub lower_est: f64,
+    /// Guaranteed (safeguarded) upper bound.
+    pub upper: f64,
+}
+
+/// Safeguarded k-step Lanczos bound (default `k = 12`, matching ChASE).
+pub fn lanczos_bounds(a: &CsrMatrix, steps: usize, seed: u64) -> SpectralBounds {
+    let n = a.rows();
+    let k = steps.min(n).max(2);
+    let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0x5CAD_B0CE);
+    let mut v = vec![0.0f64; n];
+    rng.fill_normal(&mut v);
+    let nv = norm2(&v);
+    v.iter_mut().for_each(|x| *x /= nv);
+
+    let mut alphas = Vec::with_capacity(k);
+    let mut betas: Vec<f64> = Vec::with_capacity(k);
+    let mut v_prev = vec![0.0f64; n];
+    let mut w = vec![0.0f64; n];
+    let mut beta_last = 0.0;
+    for j in 0..k {
+        a.spmv(&v, &mut w);
+        if j > 0 {
+            vaxpy(-betas[j - 1], &v_prev, &mut w);
+        }
+        let alpha = dot(&w, &v);
+        vaxpy(-alpha, &v, &mut w);
+        alphas.push(alpha);
+        let beta = norm2(&w);
+        beta_last = beta;
+        if j + 1 < k {
+            if beta < 1e-300 {
+                // Invariant subspace hit: bound is exact.
+                break;
+            }
+            betas.push(beta);
+            v_prev.copy_from_slice(&v);
+            for (t, x) in v.iter_mut().enumerate() {
+                *x = w[t] / beta;
+            }
+        }
+    }
+    let m = alphas.len();
+    let eig = tridiag_eig(&alphas, &betas[..m.saturating_sub(1)]);
+    let theta_max = *eig.values.last().unwrap();
+    let theta_min = eig.values[0];
+    SpectralBounds {
+        lower_est: theta_min - beta_last,
+        upper: theta_max + beta_last,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::symeig::sym_eig;
+    use crate::operators::{self, GenOptions, OperatorKind};
+
+    fn true_extremes(a: &CsrMatrix) -> (f64, f64) {
+        let eig = sym_eig(&a.to_dense());
+        (eig.values[0], *eig.values.last().unwrap())
+    }
+
+    #[test]
+    fn upper_bound_is_valid_across_operators() {
+        let opts = GenOptions {
+            grid: 10,
+            ..Default::default()
+        };
+        for kind in [
+            OperatorKind::Poisson,
+            OperatorKind::Helmholtz,
+            OperatorKind::Vibration,
+            OperatorKind::Elliptic,
+        ] {
+            for seed in 0..3u64 {
+                let p = &operators::generate(kind, opts, 1, seed)[0];
+                let (_, lmax) = true_extremes(&p.matrix);
+                let b = lanczos_bounds(&p.matrix, 12, seed);
+                assert!(
+                    b.upper >= lmax,
+                    "{kind:?} seed {seed}: bound {} < λmax {lmax}",
+                    b.upper
+                );
+                // And not wildly loose (within 3x).
+                assert!(b.upper <= 3.0 * lmax, "{kind:?}: bound too loose");
+            }
+        }
+    }
+
+    #[test]
+    fn lower_estimate_is_below_smallest() {
+        let opts = GenOptions {
+            grid: 10,
+            ..Default::default()
+        };
+        let p = &operators::generate(OperatorKind::Poisson, opts, 1, 3)[0];
+        let (lmin, _) = true_extremes(&p.matrix);
+        let b = lanczos_bounds(&p.matrix, 12, 3);
+        assert!(b.lower_est <= lmin + 1e-9);
+    }
+
+    #[test]
+    fn exact_on_identity() {
+        let a = CsrMatrix::eye(50);
+        let b = lanczos_bounds(&a, 8, 1);
+        assert!((b.upper - 1.0).abs() < 1e-8);
+        assert!(b.lower_est <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn handles_tiny_matrices() {
+        let a = CsrMatrix::eye(2);
+        let b = lanczos_bounds(&a, 12, 1);
+        assert!(b.upper >= 1.0 - 1e-12);
+    }
+}

@@ -1,0 +1,393 @@
+//! Complex FFTs: radix-2 Cooley–Tukey, Bluestein for arbitrary lengths,
+//! 2-D transforms, and the low-frequency truncation used by the sorting
+//! algorithm (paper Algorithm 2) and the GRF sampler.
+
+use crate::linalg::flops;
+
+/// Minimal complex number (the vendored crate set has no `num-complex`).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct C64 {
+    /// Real part.
+    pub re: f64,
+    /// Imaginary part.
+    pub im: f64,
+}
+
+impl C64 {
+    /// Construct from real and imaginary parts.
+    #[inline]
+    pub fn new(re: f64, im: f64) -> Self {
+        Self { re, im }
+    }
+
+    /// Zero.
+    #[inline]
+    pub fn zero() -> Self {
+        Self { re: 0.0, im: 0.0 }
+    }
+
+    /// `e^{iθ}`.
+    #[inline]
+    pub fn cis(theta: f64) -> Self {
+        Self {
+            re: theta.cos(),
+            im: theta.sin(),
+        }
+    }
+
+    /// Complex conjugate.
+    #[inline]
+    pub fn conj(self) -> Self {
+        Self {
+            re: self.re,
+            im: -self.im,
+        }
+    }
+
+    /// Squared magnitude.
+    #[inline]
+    pub fn norm_sqr(self) -> f64 {
+        self.re * self.re + self.im * self.im
+    }
+
+    /// Magnitude.
+    #[inline]
+    pub fn abs(self) -> f64 {
+        self.norm_sqr().sqrt()
+    }
+}
+
+impl std::ops::Add for C64 {
+    type Output = C64;
+    #[inline]
+    fn add(self, o: C64) -> C64 {
+        C64::new(self.re + o.re, self.im + o.im)
+    }
+}
+impl std::ops::Sub for C64 {
+    type Output = C64;
+    #[inline]
+    fn sub(self, o: C64) -> C64 {
+        C64::new(self.re - o.re, self.im - o.im)
+    }
+}
+impl std::ops::Mul for C64 {
+    type Output = C64;
+    #[inline]
+    fn mul(self, o: C64) -> C64 {
+        C64::new(
+            self.re * o.re - self.im * o.im,
+            self.re * o.im + self.im * o.re,
+        )
+    }
+}
+impl std::ops::Mul<f64> for C64 {
+    type Output = C64;
+    #[inline]
+    fn mul(self, s: f64) -> C64 {
+        C64::new(self.re * s, self.im * s)
+    }
+}
+
+/// In-place radix-2 FFT. `data.len()` must be a power of two.
+/// `inverse = true` computes the unnormalized inverse (caller divides).
+pub fn fft_pow2(data: &mut [C64], inverse: bool) {
+    let n = data.len();
+    assert!(n.is_power_of_two(), "fft_pow2 requires power-of-two length");
+    if n <= 1 {
+        return;
+    }
+    flops::add((10 * n * n.trailing_zeros() as usize) as u64);
+    // Bit-reversal permutation.
+    let mut j = 0usize;
+    for i in 1..n {
+        let mut bit = n >> 1;
+        while j & bit != 0 {
+            j ^= bit;
+            bit >>= 1;
+        }
+        j |= bit;
+        if i < j {
+            data.swap(i, j);
+        }
+    }
+    // Butterflies.
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut len = 2;
+    while len <= n {
+        let ang = sign * 2.0 * std::f64::consts::PI / len as f64;
+        let wlen = C64::cis(ang);
+        let mut i = 0;
+        while i < n {
+            let mut w = C64::new(1.0, 0.0);
+            for k in 0..len / 2 {
+                let u = data[i + k];
+                let v = data[i + k + len / 2] * w;
+                data[i + k] = u + v;
+                data[i + k + len / 2] = u - v;
+                w = w * wlen;
+            }
+            i += len;
+        }
+        len <<= 1;
+    }
+}
+
+/// FFT of arbitrary length via Bluestein's chirp-z transform (falls back
+/// to the radix-2 kernel for powers of two). Unnormalized; `inverse`
+/// computes the conjugate transform (caller divides by `n`).
+pub fn fft(data: &mut [C64], inverse: bool) {
+    let n = data.len();
+    if n <= 1 {
+        return;
+    }
+    if n.is_power_of_two() {
+        fft_pow2(data, inverse);
+        return;
+    }
+    // Bluestein: x_k e^{-iπk²/n} convolved with chirp e^{+iπk²/n}.
+    let m = (2 * n - 1).next_power_of_two();
+    let sign = if inverse { 1.0 } else { -1.0 };
+    let mut a = vec![C64::zero(); m];
+    let mut b = vec![C64::zero(); m];
+    let mut chirp = vec![C64::zero(); n];
+    for k in 0..n {
+        // k² mod 2n to keep the angle well-conditioned for large k.
+        let k2 = (k as u128 * k as u128) % (2 * n as u128);
+        let ang = sign * std::f64::consts::PI * k2 as f64 / n as f64;
+        chirp[k] = C64::cis(ang);
+        a[k] = data[k] * chirp[k];
+        b[k] = chirp[k].conj();
+        if k > 0 {
+            b[m - k] = chirp[k].conj();
+        }
+    }
+    fft_pow2(&mut a, false);
+    fft_pow2(&mut b, false);
+    for i in 0..m {
+        a[i] = a[i] * b[i];
+    }
+    fft_pow2(&mut a, true);
+    let scale = 1.0 / m as f64;
+    for k in 0..n {
+        data[k] = a[k] * scale * chirp[k];
+    }
+}
+
+/// Forward 2-D FFT of a real `p × p` field (row-major), returning the
+/// complex spectrum (row-major `p × p`).
+pub fn fft2_real(field: &[f64], p: usize) -> Vec<C64> {
+    assert_eq!(field.len(), p * p);
+    let mut spec: Vec<C64> = field.iter().map(|&x| C64::new(x, 0.0)).collect();
+    fft2_inplace(&mut spec, p, false);
+    spec
+}
+
+/// In-place 2-D FFT over a row-major `p × p` complex buffer.
+pub fn fft2_inplace(spec: &mut [C64], p: usize, inverse: bool) {
+    assert_eq!(spec.len(), p * p);
+    let mut scratch = vec![C64::zero(); p];
+    // Rows.
+    for r in 0..p {
+        fft(&mut spec[r * p..(r + 1) * p], inverse);
+    }
+    // Columns.
+    for c in 0..p {
+        for r in 0..p {
+            scratch[r] = spec[r * p + c];
+        }
+        fft(&mut scratch, inverse);
+        for r in 0..p {
+            spec[r * p + c] = scratch[r];
+        }
+    }
+}
+
+/// Inverse 2-D FFT returning the real part, normalized by `1/p²`.
+pub fn ifft2_real(spec: &[C64], p: usize) -> Vec<f64> {
+    let mut buf = spec.to_vec();
+    fft2_inplace(&mut buf, p, true);
+    let scale = 1.0 / (p * p) as f64;
+    buf.into_iter().map(|z| z.re * scale).collect()
+}
+
+/// Extract the `p0 × p0` low-frequency block of a `p × p` spectrum.
+///
+/// 2-D DFT frequencies wrap: indices `{0, …, ⌈p0/2⌉−1}` and
+/// `{p−⌊p0/2⌋, …, p−1}` along each axis are the lowest `p0` frequencies.
+/// This is the `Trunc_{p0}` operator of paper Appendix F, and the
+/// compressed representation `P_low ∈ C^{p0×p0}` of Algorithm 2.
+pub fn truncate_low_freq(spec: &[C64], p: usize, p0: usize) -> Vec<C64> {
+    assert_eq!(spec.len(), p * p);
+    assert!(p0 <= p, "truncation threshold larger than field");
+    let half_hi = p0 / 2; // negative-frequency half
+    let half_lo = p0 - half_hi; // non-negative half (gets the extra slot)
+    let pick = |t: usize| -> usize {
+        if t < half_lo {
+            t
+        } else {
+            p - p0 + t
+        }
+    };
+    let mut out = vec![C64::zero(); p0 * p0];
+    for (r_out, r_in) in (0..p0).map(|t| (t, pick(t))) {
+        for (c_out, c_in) in (0..p0).map(|t| (t, pick(t))) {
+            out[r_out * p0 + c_out] = spec[r_in * p + c_in];
+        }
+    }
+    out
+}
+
+/// Squared Frobenius distance between two complex spectra of equal length.
+pub fn spec_dist2(a: &[C64], b: &[C64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    flops::add(4 * a.len() as u64);
+    a.iter().zip(b).map(|(x, y)| (*x - *y).norm_sqr()).sum()
+}
+
+/// Total spectral energy `Σ|z|²`.
+pub fn spec_energy(a: &[C64]) -> f64 {
+    a.iter().map(|z| z.norm_sqr()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+
+    fn naive_dft(x: &[C64], inverse: bool) -> Vec<C64> {
+        let n = x.len();
+        let sign = if inverse { 1.0 } else { -1.0 };
+        (0..n)
+            .map(|k| {
+                let mut s = C64::zero();
+                for (j, &xj) in x.iter().enumerate() {
+                    let ang = sign * 2.0 * std::f64::consts::PI * (k * j) as f64 / n as f64;
+                    s = s + xj * C64::cis(ang);
+                }
+                s
+            })
+            .collect()
+    }
+
+    fn rand_signal(n: usize, seed: u64) -> Vec<C64> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        (0..n).map(|_| C64::new(rng.normal(), rng.normal())).collect()
+    }
+
+    fn max_err(a: &[C64], b: &[C64]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| (*x - *y).abs())
+            .fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn pow2_matches_naive_dft() {
+        for n in [1usize, 2, 4, 8, 16, 64] {
+            let x = rand_signal(n, n as u64);
+            let want = naive_dft(&x, false);
+            let mut got = x.clone();
+            fft_pow2(&mut got, false);
+            assert!(max_err(&got, &want) < 1e-9 * n as f64, "n={n}");
+        }
+    }
+
+    #[test]
+    fn bluestein_matches_naive_dft() {
+        for n in [3usize, 5, 6, 7, 10, 12, 15, 33, 80, 100] {
+            let x = rand_signal(n, 100 + n as u64);
+            let want = naive_dft(&x, false);
+            let mut got = x.clone();
+            fft(&mut got, false);
+            assert!(max_err(&got, &want) < 1e-8 * n as f64, "n={n}");
+        }
+    }
+
+    #[test]
+    fn forward_inverse_roundtrip() {
+        for n in [8usize, 12, 80] {
+            let x = rand_signal(n, 7 + n as u64);
+            let mut buf = x.clone();
+            fft(&mut buf, false);
+            fft(&mut buf, true);
+            let scale = 1.0 / n as f64;
+            let back: Vec<C64> = buf.into_iter().map(|z| z * scale).collect();
+            assert!(max_err(&back, &x) < 1e-10, "n={n}");
+        }
+    }
+
+    #[test]
+    fn parseval_identity_2d() {
+        // ‖P‖²_F == ‖FFT2(P)‖²_F / p²  (Appendix F's isometry).
+        let p = 20;
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let field: Vec<f64> = (0..p * p).map(|_| rng.normal()).collect();
+        let spatial: f64 = field.iter().map(|x| x * x).sum();
+        let spec = fft2_real(&field, p);
+        let freq = spec_energy(&spec) / (p * p) as f64;
+        assert!((spatial - freq).abs() / spatial < 1e-12);
+    }
+
+    #[test]
+    fn fft2_roundtrip_real_field() {
+        let p = 12;
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let field: Vec<f64> = (0..p * p).map(|_| rng.normal()).collect();
+        let spec = fft2_real(&field, p);
+        let back = ifft2_real(&spec, p);
+        let err = field
+            .iter()
+            .zip(&back)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max);
+        assert!(err < 1e-12);
+    }
+
+    #[test]
+    fn truncation_keeps_low_frequencies() {
+        // A pure low-frequency mode must survive truncation intact;
+        // a high-frequency mode must be erased.
+        let p = 16;
+        let p0 = 4;
+        let low: Vec<f64> = (0..p * p)
+            .map(|t| {
+                let (r, c) = (t / p, t % p);
+                (2.0 * std::f64::consts::PI * (r as f64 + c as f64) / p as f64).cos()
+            })
+            .collect();
+        let spec = fft2_real(&low, p);
+        let trunc = truncate_low_freq(&spec, p, p0);
+        let kept = spec_energy(&trunc);
+        let total = spec_energy(&spec);
+        assert!(kept / total > 0.999, "low mode lost: {}", kept / total);
+
+        let hi: Vec<f64> = (0..p * p)
+            .map(|t| {
+                let (r, c) = (t / p, t % p);
+                (std::f64::consts::PI * (r as f64)).cos() * (std::f64::consts::PI * c as f64).cos()
+            })
+            .collect();
+        let spec = fft2_real(&hi, p);
+        let trunc = truncate_low_freq(&spec, p, p0);
+        assert!(spec_energy(&trunc) / spec_energy(&spec) < 1e-20);
+    }
+
+    #[test]
+    fn truncation_full_width_is_identity() {
+        let p = 8;
+        let x = rand_signal(p * p, 9);
+        let trunc = truncate_low_freq(&x, p, p);
+        // p0 == p reorders rows/cols but keeps all entries; energy equal.
+        assert!((spec_energy(&trunc) - spec_energy(&x)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spec_dist2_is_a_metric_squared() {
+        let a = rand_signal(10, 1);
+        let b = rand_signal(10, 2);
+        assert_eq!(spec_dist2(&a, &a), 0.0);
+        assert!(spec_dist2(&a, &b) > 0.0);
+        assert!((spec_dist2(&a, &b) - spec_dist2(&b, &a)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,188 @@
+//! Gaussian random fields (GRF) on a periodic 2-D grid, sampled spectrally.
+//!
+//! The paper's datasets (§D.2) draw every operator's coefficient fields —
+//! `K(x,y)` for the generalized Poisson operator, `p, k` for Helmholtz,
+//! `D, ρ` for the vibration plate — from a GRF. We use the standard
+//! Matérn-like spectral density
+//!
+//! ```text
+//! S(k) ∝ (|k|² + τ²)^(−α)
+//! ```
+//!
+//! (the same family as the FNO benchmark generators, Li et al. 2020):
+//! white noise is sampled in the frequency domain, shaped by √S, and
+//! transformed back. Larger `α`/smaller `τ` → smoother fields → more
+//! low-frequency energy — exactly the property the truncated-FFT sorting
+//! relies on (paper Appendix F / Table 20).
+
+use crate::fft::{fft2_inplace, C64};
+use crate::rng::Xoshiro256pp;
+
+/// Parameters of the Matérn-like spectral density.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GrfParams {
+    /// Spectral decay exponent (smoothness); paper-style fields use 2–3.
+    pub alpha: f64,
+    /// Inverse length scale.
+    pub tau: f64,
+}
+
+impl Default for GrfParams {
+    fn default() -> Self {
+        Self {
+            alpha: 2.5,
+            tau: 3.0,
+        }
+    }
+}
+
+/// Sample a zero-mean GRF on a `p × p` grid (row-major), unit-ish variance.
+pub fn sample(p: usize, params: GrfParams, rng: &mut Xoshiro256pp) -> Vec<f64> {
+    assert!(p >= 2);
+    // Hermitian-symmetric white noise is implicit: we fill complex noise
+    // and keep the real part of the inverse transform; this halves the
+    // variance but preserves the GRF law up to scale, which the
+    // normalization below absorbs.
+    let mut spec = vec![C64::zero(); p * p];
+    for (t, z) in spec.iter_mut().enumerate() {
+        let (r, c) = (t / p, t % p);
+        // Wrapped integer frequencies in [-p/2, p/2).
+        let kr = if r <= p / 2 { r as f64 } else { r as f64 - p as f64 };
+        let kc = if c <= p / 2 { c as f64 } else { c as f64 - p as f64 };
+        let k2 = kr * kr + kc * kc;
+        let amp = (k2 + params.tau * params.tau).powf(-params.alpha / 2.0);
+        let (g1, g2) = rng.normal_pair();
+        *z = C64::new(g1 * amp, g2 * amp);
+    }
+    // Kill the mean mode so fields are zero-mean.
+    spec[0] = C64::zero();
+    fft2_inplace(&mut spec, p, true);
+    let field: Vec<f64> = spec.iter().map(|z| z.re).collect();
+    // Normalize to unit sample std so downstream transforms are stable.
+    let n = (p * p) as f64;
+    let mean: f64 = field.iter().sum::<f64>() / n;
+    let var: f64 = field.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+    let std = var.sqrt().max(1e-300);
+    field.into_iter().map(|x| (x - mean) / std).collect()
+}
+
+/// Sample a *positive* coefficient field: affine-transformed GRF
+/// `lo + (hi − lo) · sigmoid(g)`, guaranteed in `(lo, hi)`. This is how
+/// diffusion/rigidity coefficients (`K`, `p`, `D`, `ρ`) are produced.
+pub fn sample_positive(
+    p: usize,
+    params: GrfParams,
+    lo: f64,
+    hi: f64,
+    rng: &mut Xoshiro256pp,
+) -> Vec<f64> {
+    assert!(lo > 0.0 && hi > lo);
+    sample(p, params, rng)
+        .into_iter()
+        .map(|g| lo + (hi - lo) / (1.0 + (-g).exp()))
+        .collect()
+}
+
+/// A *perturbed copy* of a base field: `base + eps · fresh GRF`, then
+/// re-clamped to `(lo, hi)`. Used by the similarity experiment
+/// (paper Table 17) where each problem is a controlled perturbation of
+/// the previous one.
+pub fn perturb(
+    base: &[f64],
+    p: usize,
+    params: GrfParams,
+    eps: f64,
+    lo: f64,
+    hi: f64,
+    rng: &mut Xoshiro256pp,
+) -> Vec<f64> {
+    assert_eq!(base.len(), p * p);
+    let noise = sample(p, params, rng);
+    base.iter()
+        .zip(&noise)
+        .map(|(b, n)| {
+            let scale = (hi - lo) * 0.25; // noise amplitude relative to range
+            (b + eps * scale * n).clamp(lo, hi)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fft::{fft2_real, spec_energy, truncate_low_freq};
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut r1 = Xoshiro256pp::seed_from_u64(5);
+        let mut r2 = Xoshiro256pp::seed_from_u64(5);
+        let a = sample(32, GrfParams::default(), &mut r1);
+        let b = sample(32, GrfParams::default(), &mut r2);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn normalized_moments() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let f = sample(64, GrfParams::default(), &mut rng);
+        let n = f.len() as f64;
+        let mean: f64 = f.iter().sum::<f64>() / n;
+        let var: f64 = f.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n;
+        assert!(mean.abs() < 1e-10);
+        assert!((var - 1.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn energy_is_concentrated_in_low_frequencies() {
+        // This is the property Table 20 reports: >95 % of energy below
+        // frequency p0 = 20 (we use a smaller grid, same shape).
+        let p = 64;
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let f = sample(p, GrfParams::default(), &mut rng);
+        let spec = fft2_real(&f, p);
+        let low = truncate_low_freq(&spec, p, 20);
+        let ratio = spec_energy(&low) / spec_energy(&spec);
+        assert!(ratio > 0.95, "low-frequency ratio {ratio}");
+    }
+
+    #[test]
+    fn positive_fields_respect_bounds() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let f = sample_positive(32, GrfParams::default(), 0.5, 2.0, &mut rng);
+        assert!(f.iter().all(|&x| x > 0.5 && x < 2.0));
+    }
+
+    #[test]
+    fn smoother_params_give_more_lowfreq_energy() {
+        let p = 64;
+        let ratio_for = |alpha: f64, seed: u64| {
+            let mut rng = Xoshiro256pp::seed_from_u64(seed);
+            let f = sample(p, GrfParams { alpha, tau: 3.0 }, &mut rng);
+            let spec = fft2_real(&f, p);
+            spec_energy(&truncate_low_freq(&spec, p, 8)) / spec_energy(&spec)
+        };
+        // Average over a few seeds to avoid single-sample flukes.
+        let rough: f64 = (0..5).map(|s| ratio_for(1.0, s)).sum::<f64>() / 5.0;
+        let smooth: f64 = (0..5).map(|s| ratio_for(4.0, s)).sum::<f64>() / 5.0;
+        assert!(smooth > rough, "smooth {smooth} vs rough {rough}");
+    }
+
+    #[test]
+    fn perturb_scales_with_eps() {
+        let p = 32;
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let base = sample_positive(p, GrfParams::default(), 0.5, 2.0, &mut rng);
+        let d = |eps: f64, seed: u64| {
+            let mut r = Xoshiro256pp::seed_from_u64(seed);
+            let pert = perturb(&base, p, GrfParams::default(), eps, 0.5, 2.0, &mut r);
+            base.iter()
+                .zip(&pert)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f64>()
+                .sqrt()
+        };
+        assert_eq!(d(0.0, 9), 0.0);
+        assert!(d(0.01, 9) < d(0.1, 9));
+        assert!(d(0.1, 9) < d(0.5, 9));
+    }
+}

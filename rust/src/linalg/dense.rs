@@ -1,0 +1,401 @@
+//! Row-major dense matrix and the BLAS-like kernels the solvers need.
+
+use super::flops;
+use crate::rng::Xoshiro256pp;
+
+/// Row-major dense `f64` matrix.
+///
+/// Subspace blocks are stored as `n × k` matrices whose *columns* are the
+/// basis vectors, matching the paper's notation `V = [v_1 | … | v_L]`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// Build from a function of (row, col).
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        for i in 0..rows {
+            for j in 0..cols {
+                m[(i, j)] = f(i, j);
+            }
+        }
+        m
+    }
+
+    /// Build from a flat row-major vector.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Self {
+        assert_eq!(data.len(), rows * cols);
+        Self { rows, cols, data }
+    }
+
+    /// Matrix with i.i.d. standard normal entries (deterministic per rng).
+    pub fn randn(rows: usize, cols: usize, rng: &mut Xoshiro256pp) -> Self {
+        let mut m = Self::zeros(rows, cols);
+        rng.fill_normal(&mut m.data);
+        m
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Flat row-major data.
+    #[inline]
+    pub fn data(&self) -> &[f64] {
+        &self.data
+    }
+
+    /// Mutable flat row-major data.
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+
+    /// Row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Row `i` as a mutable slice.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f64] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Copy of column `j`.
+    pub fn col(&self, j: usize) -> Vec<f64> {
+        (0..self.rows).map(|i| self[(i, j)]).collect()
+    }
+
+    /// Overwrite column `j`.
+    pub fn set_col(&mut self, j: usize, v: &[f64]) {
+        assert_eq!(v.len(), self.rows);
+        for i in 0..self.rows {
+            self[(i, j)] = v[i];
+        }
+    }
+
+    /// New matrix containing columns `[j0, j1)`.
+    pub fn cols_range(&self, j0: usize, j1: usize) -> Mat {
+        assert!(j0 <= j1 && j1 <= self.cols);
+        let mut out = Mat::zeros(self.rows, j1 - j0);
+        for i in 0..self.rows {
+            out.row_mut(i).copy_from_slice(&self.row(i)[j0..j1]);
+        }
+        out
+    }
+
+    /// Horizontal concatenation `[self | other]`.
+    pub fn hcat(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows);
+        let mut out = Mat::zeros(self.rows, self.cols + other.cols);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+            out.row_mut(i)[self.cols..].copy_from_slice(other.row(i));
+        }
+        out
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out[(j, i)] = self[(i, j)];
+            }
+        }
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        flops::add(2 * self.data.len() as u64);
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Squared Frobenius distance to another matrix of the same shape.
+    pub fn fro_dist2(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        flops::add(3 * self.data.len() as u64);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b) * (a - b))
+            .sum()
+    }
+
+    /// Euclidean norm of column `j`.
+    pub fn col_norm(&self, j: usize) -> f64 {
+        flops::add(2 * self.rows as u64);
+        (0..self.rows).map(|i| self[(i, j)] * self[(i, j)]).sum::<f64>().sqrt()
+    }
+
+    /// `self ← self * alpha`.
+    pub fn scale(&mut self, alpha: f64) {
+        flops::add(self.data.len() as u64);
+        for x in &mut self.data {
+            *x *= alpha;
+        }
+    }
+
+    /// `self ← self + alpha * other` (same shape).
+    pub fn axpy(&mut self, alpha: f64, other: &Mat) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        flops::add(2 * self.data.len() as u64);
+        for (x, y) in self.data.iter_mut().zip(&other.data) {
+            *x += alpha * y;
+        }
+    }
+
+    /// Dense matmul `self · b`.
+    pub fn matmul(&self, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(self.rows, b.cols);
+        gemm(1.0, self, b, 0.0, &mut c);
+        c
+    }
+
+    /// `selfᵀ · b` without materializing the transpose — the Gram-matrix
+    /// workhorse of every Rayleigh–Ritz step (`k×n · n×k`).
+    pub fn t_matmul(&self, b: &Mat) -> Mat {
+        assert_eq!(self.rows, b.rows);
+        let (n, k, m) = (self.rows, self.cols, b.cols);
+        flops::add(2 * (n * k * m) as u64);
+        let mut c = Mat::zeros(k, m);
+        // Accumulate rank-1 contributions row by row: C += a_iᵀ b_i.
+        for i in 0..n {
+            let arow = self.row(i);
+            let brow = b.row(i);
+            for (p, &av) in arow.iter().enumerate() {
+                if av != 0.0 {
+                    let crow = c.row_mut(p);
+                    for (q, &bv) in brow.iter().enumerate() {
+                        crow[q] += av * bv;
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    /// Maximum absolute entry difference to another matrix.
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (i, j): (usize, usize)) -> &f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &self.data[i * self.cols + j]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (i, j): (usize, usize)) -> &mut f64 {
+        debug_assert!(i < self.rows && j < self.cols);
+        &mut self.data[i * self.cols + j]
+    }
+}
+
+/// General dense matmul: `c ← alpha · a · b + beta · c`.
+///
+/// Row-major i-k-j loop order (unit-stride inner loop) — this is the
+/// cache-friendly order for row-major data and vectorizes well.
+pub fn gemm(alpha: f64, a: &Mat, b: &Mat, beta: f64, c: &mut Mat) {
+    assert_eq!(a.cols, b.rows, "gemm inner dimension mismatch");
+    assert_eq!((c.rows, c.cols), (a.rows, b.cols), "gemm output shape");
+    flops::add(2 * (a.rows * a.cols * b.cols) as u64);
+    if beta == 0.0 {
+        c.data.fill(0.0);
+    } else if beta != 1.0 {
+        for x in &mut c.data {
+            *x *= beta;
+        }
+    }
+    let n = b.cols;
+    for i in 0..a.rows {
+        let arow = a.row(i);
+        let crow = &mut c.data[i * n..(i + 1) * n];
+        for (k, &aik) in arow.iter().enumerate() {
+            if aik == 0.0 {
+                continue;
+            }
+            let s = alpha * aik;
+            let brow = &b.data[k * n..(k + 1) * n];
+            for j in 0..n {
+                crow[j] += s * brow[j];
+            }
+        }
+    }
+}
+
+/// Dot product of two vectors.
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    flops::add(2 * a.len() as u64);
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// Euclidean norm of a vector.
+#[inline]
+pub fn norm2(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+/// `y ← y + alpha·x` for vectors.
+#[inline]
+pub fn vaxpy(alpha: f64, x: &[f64], y: &mut [f64]) {
+    debug_assert_eq!(x.len(), y.len());
+    flops::add(2 * x.len() as u64);
+    for i in 0..x.len() {
+        y[i] += alpha * x[i];
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx(a: f64, b: f64, tol: f64) -> bool {
+        (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs()))
+    }
+
+    #[test]
+    fn index_and_row_access() {
+        let m = Mat::from_fn(3, 4, |i, j| (i * 10 + j) as f64);
+        assert_eq!(m[(2, 3)], 23.0);
+        assert_eq!(m.row(1), &[10.0, 11.0, 12.0, 13.0]);
+        assert_eq!(m.col(2), vec![2.0, 12.0, 22.0]);
+    }
+
+    #[test]
+    fn matmul_against_hand_computed() {
+        let a = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let b = Mat::from_vec(3, 2, vec![7., 8., 9., 10., 11., 12.]);
+        let c = a.matmul(&b);
+        assert_eq!(c.data(), &[58., 64., 139., 154.]);
+    }
+
+    #[test]
+    fn gemm_beta_accumulates() {
+        let a = Mat::eye(2);
+        let b = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        let mut c = Mat::from_vec(2, 2, vec![10., 10., 10., 10.]);
+        gemm(2.0, &a, &b, 1.0, &mut c);
+        assert_eq!(c.data(), &[12., 14., 16., 18.]);
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit_transpose() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let a = Mat::randn(20, 5, &mut rng);
+        let b = Mat::randn(20, 7, &mut rng);
+        let fast = a.t_matmul(&b);
+        let slow = a.transpose().matmul(&b);
+        assert!(fast.max_abs_diff(&slow) < 1e-12);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let a = Mat::randn(6, 9, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn fro_norm_and_dist() {
+        let a = Mat::from_vec(1, 3, vec![3., 4., 0.]);
+        assert!(approx(a.fro_norm(), 5.0, 1e-14));
+        let b = Mat::from_vec(1, 3, vec![0., 0., 0.]);
+        assert!(approx(a.fro_dist2(&b), 25.0, 1e-14));
+    }
+
+    #[test]
+    fn hcat_and_cols_range_roundtrip() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let a = Mat::randn(5, 3, &mut rng);
+        let b = Mat::randn(5, 2, &mut rng);
+        let c = a.hcat(&b);
+        assert_eq!(c.cols_range(0, 3), a);
+        assert_eq!(c.cols_range(3, 5), b);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Mat::from_vec(1, 2, vec![1., 2.]);
+        let b = Mat::from_vec(1, 2, vec![10., 20.]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data(), &[6., 12.]);
+        a.scale(2.0);
+        assert_eq!(a.data(), &[12., 24.]);
+    }
+
+    #[test]
+    fn vector_kernels() {
+        let x = [1.0, 2.0, 2.0];
+        assert!(approx(norm2(&x), 3.0, 1e-15));
+        assert!(approx(dot(&x, &x), 9.0, 1e-15));
+        let mut y = [0.0, 0.0, 1.0];
+        vaxpy(2.0, &x, &mut y);
+        assert_eq!(y, [2.0, 4.0, 5.0]);
+    }
+
+    #[test]
+    fn set_col_writes_through() {
+        let mut m = Mat::zeros(3, 2);
+        m.set_col(1, &[1., 2., 3.]);
+        assert_eq!(m.col(1), vec![1., 2., 3.]);
+        assert_eq!(m.col(0), vec![0., 0., 0.]);
+    }
+
+    #[test]
+    fn randn_is_seeded() {
+        let mut r1 = Xoshiro256pp::seed_from_u64(9);
+        let mut r2 = Xoshiro256pp::seed_from_u64(9);
+        assert_eq!(Mat::randn(4, 4, &mut r1), Mat::randn(4, 4, &mut r2));
+    }
+}

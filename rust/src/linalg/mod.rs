@@ -1,0 +1,61 @@
+//! Dense linear algebra built from scratch: matrices, BLAS-like kernels,
+//! Householder QR, and a symmetric eigensolver.
+//!
+//! All numerics are `f64`. Matrices are row-major. Subspace blocks (the
+//! `n × k` iterate of every solver, `k ≪ n`) are also `Mat`s.
+//!
+//! ## Flop accounting
+//!
+//! The paper's Table 3 reports flop counts, and EXPERIMENTS.md uses flops
+//! as the machine-independent comparison. Every kernel in [`dense`],
+//! [`qr`], [`symeig`] and [`crate::sparse`] adds its cost to a
+//! thread-local counter ([`flops::add`]); solvers snapshot it with
+//! [`flops::take`]. Each eigensolve runs on a single thread, so
+//! thread-local counting is exact (parallel section costs are added at
+//! the dispatch site, not inside workers).
+
+pub mod dense;
+pub mod qr;
+pub mod symeig;
+
+pub use dense::Mat;
+
+/// Thread-local floating-point-operation counter.
+pub mod flops {
+    use std::cell::Cell;
+
+    thread_local! {
+        static FLOPS: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// Add `n` flops to this thread's counter.
+    #[inline]
+    pub fn add(n: u64) {
+        FLOPS.with(|f| f.set(f.get().wrapping_add(n)));
+    }
+
+    /// Read the counter without resetting it.
+    pub fn read() -> u64 {
+        FLOPS.with(|f| f.get())
+    }
+
+    /// Reset the counter to zero and return the previous value.
+    pub fn take() -> u64 {
+        FLOPS.with(|f| f.replace(0))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flop_counter_accumulates_and_takes() {
+        flops::take();
+        flops::add(10);
+        flops::add(5);
+        assert_eq!(flops::read(), 15);
+        assert_eq!(flops::take(), 15);
+        assert_eq!(flops::read(), 0);
+    }
+}

@@ -1,0 +1,371 @@
+//! Dense symmetric eigensolver: Householder tridiagonalization (tred2)
+//! followed by the implicit-shift QL iteration (tql2).
+//!
+//! This is the Rayleigh–Ritz engine (Algorithm 3, line 6) and the
+//! projected-problem solver inside LOBPCG, Jacobi–Davidson, and the
+//! restarted Lanczos variants. Projected problems are at most a few
+//! hundred rows, where the classic EISPACK pair is entirely adequate.
+
+use super::dense::Mat;
+use super::flops;
+
+/// Eigen-decomposition of a real symmetric matrix.
+#[derive(Debug, Clone)]
+pub struct SymEig {
+    /// Eigenvalues in ascending order.
+    pub values: Vec<f64>,
+    /// Eigenvectors as columns, `vectors.col(j)` pairs with `values[j]`.
+    pub vectors: Mat,
+}
+
+/// Compute all eigenpairs of symmetric `a` (the strict upper triangle is
+/// ignored; the lower triangle is used). Panics on non-square input.
+pub fn sym_eig(a: &Mat) -> SymEig {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "sym_eig expects a square matrix");
+    if n == 0 {
+        return SymEig {
+            values: vec![],
+            vectors: Mat::zeros(0, 0),
+        };
+    }
+    flops::add((9 * n * n * n) as u64); // classic tred2+tql2 cost estimate
+    // z starts as the (symmetrized) input and ends as the eigenvector matrix.
+    let mut z = Mat::from_fn(n, n, |i, j| {
+        if i >= j {
+            a[(i, j)]
+        } else {
+            a[(j, i)]
+        }
+    });
+    let mut d = vec![0.0f64; n]; // diagonal
+    let mut e = vec![0.0f64; n]; // off-diagonal
+    tred2(&mut z, &mut d, &mut e);
+    tql2(&mut z, &mut d, &mut e);
+    // tql2 leaves (d, z) sorted ascending.
+    SymEig {
+        values: d,
+        vectors: z,
+    }
+}
+
+/// Eigenvalues and eigenvectors of a symmetric tridiagonal matrix with
+/// diagonal `d` and sub-diagonal `e` (`e[0]` unused). Used directly by the
+/// Lanczos solvers to avoid forming the dense T.
+pub fn tridiag_eig(diag: &[f64], sub: &[f64]) -> SymEig {
+    let n = diag.len();
+    assert_eq!(sub.len(), n.max(1) - 1);
+    let mut z = Mat::eye(n);
+    let mut d = diag.to_vec();
+    // tql2's `e` convention: e[0] unused, e[i] couples rows i-1 and i,
+    // then shifted down before iteration (EISPACK layout).
+    let mut e = vec![0.0f64; n];
+    for i in 1..n {
+        e[i] = sub[i - 1];
+    }
+    flops::add((30 * n * n) as u64);
+    tql2_raw(&mut z, &mut d, &mut e);
+    SymEig {
+        values: d,
+        vectors: z,
+    }
+}
+
+/// Householder reduction of a real symmetric matrix to tridiagonal form.
+/// On exit `z` holds the accumulated orthogonal transform, `d` the
+/// diagonal, `e[1..]` the sub-diagonal. (EISPACK tred2, zero-indexed.)
+fn tred2(z: &mut Mat, d: &mut [f64], e: &mut [f64]) {
+    let n = d.len();
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0;
+        let mut scale = 0.0;
+        if l > 0 {
+            for k in 0..=l {
+                scale += z[(i, k)].abs();
+            }
+            if scale == 0.0 {
+                e[i] = z[(i, l)];
+            } else {
+                for k in 0..=l {
+                    z[(i, k)] /= scale;
+                    h += z[(i, k)] * z[(i, k)];
+                }
+                let mut f = z[(i, l)];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                z[(i, l)] = f - g;
+                f = 0.0;
+                for j in 0..=l {
+                    z[(j, i)] = z[(i, j)] / h;
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += z[(j, k)] * z[(i, k)];
+                    }
+                    for k in (j + 1)..=l {
+                        g += z[(k, j)] * z[(i, k)];
+                    }
+                    e[j] = g / h;
+                    f += e[j] * z[(i, j)];
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let f = z[(i, j)];
+                    let g = e[j] - hh * f;
+                    e[j] = g;
+                    for k in 0..=j {
+                        let upd = f * e[k] + g * z[(i, k)];
+                        z[(j, k)] -= upd;
+                    }
+                }
+            }
+        } else {
+            e[i] = z[(i, l)];
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        let l = i;
+        if d[i] != 0.0 {
+            for j in 0..l {
+                let mut g = 0.0;
+                for k in 0..l {
+                    g += z[(i, k)] * z[(k, j)];
+                }
+                for k in 0..l {
+                    let upd = g * z[(k, i)];
+                    z[(k, j)] -= upd;
+                }
+            }
+        }
+        d[i] = z[(i, i)];
+        z[(i, i)] = 1.0;
+        for j in 0..i {
+            z[(j, i)] = 0.0;
+            z[(i, j)] = 0.0;
+        }
+    }
+}
+
+/// Implicit-shift QL for a symmetric tridiagonal matrix, accumulating the
+/// transform into `z`. Expects EISPACK layout (`e[0]` unused). Sorts the
+/// output ascending.
+fn tql2(z: &mut Mat, d: &mut [f64], e: &mut [f64]) {
+    tql2_raw(z, d, e);
+}
+
+fn tql2_raw(z: &mut Mat, d: &mut [f64], e: &mut [f64]) {
+    let n = d.len();
+    if n == 0 {
+        return;
+    }
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Find a small sub-diagonal element to split at.
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            assert!(iter <= 50, "tql2 failed to converge");
+            // Form the implicit shift.
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            let sign_r = if g >= 0.0 { r.abs() } else { -r.abs() };
+            g = d[m] - d[l] + e[l] / (g + sign_r);
+            let mut s = 1.0;
+            let mut c = 1.0;
+            let mut p = 0.0;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // Accumulate the rotation into the eigenvector matrix.
+                for k in 0..n {
+                    f = z[(k, i + 1)];
+                    z[(k, i + 1)] = s * z[(k, i)] + c * f;
+                    z[(k, i)] = c * z[(k, i)] - s * f;
+                }
+            }
+            if r == 0.0 && m > l {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+    // Sort eigenvalues (and vectors) ascending — selection sort, n is small.
+    for i in 0..n {
+        let mut kmin = i;
+        for j in (i + 1)..n {
+            if d[j] < d[kmin] {
+                kmin = j;
+            }
+        }
+        if kmin != i {
+            d.swap(i, kmin);
+            for r in 0..n {
+                let tmp = z[(r, i)];
+                z[(r, i)] = z[(r, kmin)];
+                z[(r, kmin)] = tmp;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::ortho_defect;
+    use crate::rng::Xoshiro256pp;
+
+    fn random_symmetric(n: usize, seed: u64) -> Mat {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let a = Mat::randn(n, n, &mut rng);
+        let mut s = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                s[(i, j)] = 0.5 * (a[(i, j)] + a[(j, i)]);
+            }
+        }
+        s
+    }
+
+    fn check_decomposition(a: &Mat, eig: &SymEig, tol: f64) {
+        let n = a.rows();
+        // A v = λ v for every pair.
+        for j in 0..n {
+            let v = eig.vectors.col(j);
+            for i in 0..n {
+                let mut av = 0.0;
+                for k in 0..n {
+                    av += a[(i, k)] * v[k];
+                }
+                let err = (av - eig.values[j] * v[i]).abs();
+                assert!(err < tol, "residual {err} at pair {j}");
+            }
+        }
+        // Ascending order.
+        for j in 1..n {
+            assert!(eig.values[j] >= eig.values[j - 1] - 1e-12);
+        }
+        // Orthonormal vectors.
+        assert!(ortho_defect(&eig.vectors) < 1e-10);
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Mat::from_fn(4, 4, |i, j| if i == j { (i as f64) - 1.5 } else { 0.0 });
+        let eig = sym_eig(&a);
+        assert_eq!(eig.values, vec![-1.5, -0.5, 0.5, 1.5]);
+        check_decomposition(&a, &eig, 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] -> eigenvalues 1, 3.
+        let a = Mat::from_vec(2, 2, vec![2., 1., 1., 2.]);
+        let eig = sym_eig(&a);
+        assert!((eig.values[0] - 1.0).abs() < 1e-12);
+        assert!((eig.values[1] - 3.0).abs() < 1e-12);
+        check_decomposition(&a, &eig, 1e-12);
+    }
+
+    #[test]
+    fn random_matrices_various_sizes() {
+        for (n, seed) in [(1, 1u64), (2, 2), (3, 3), (10, 4), (40, 5), (100, 6)] {
+            let a = random_symmetric(n, seed);
+            let eig = sym_eig(&a);
+            check_decomposition(&a, &eig, 1e-8);
+        }
+    }
+
+    #[test]
+    fn trace_and_frobenius_invariants() {
+        let a = random_symmetric(30, 7);
+        let eig = sym_eig(&a);
+        let trace: f64 = (0..30).map(|i| a[(i, i)]).sum();
+        let sum: f64 = eig.values.iter().sum();
+        assert!((trace - sum).abs() < 1e-9, "trace {trace} vs {sum}");
+        let fro2: f64 = a.data().iter().map(|x| x * x).sum();
+        let lam2: f64 = eig.values.iter().map(|x| x * x).sum();
+        assert!((fro2 - lam2).abs() / fro2 < 1e-10);
+    }
+
+    #[test]
+    fn tridiag_eig_matches_dense() {
+        let n = 25;
+        let mut rng = Xoshiro256pp::seed_from_u64(8);
+        let diag: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let sub: Vec<f64> = (0..n - 1).map(|_| rng.normal()).collect();
+        let mut dense = Mat::zeros(n, n);
+        for i in 0..n {
+            dense[(i, i)] = diag[i];
+            if i + 1 < n {
+                dense[(i + 1, i)] = sub[i];
+                dense[(i, i + 1)] = sub[i];
+            }
+        }
+        let e1 = tridiag_eig(&diag, &sub);
+        let e2 = sym_eig(&dense);
+        for j in 0..n {
+            assert!((e1.values[j] - e2.values[j]).abs() < 1e-10);
+        }
+        check_decomposition(&dense, &e1, 1e-9);
+    }
+
+    #[test]
+    fn laplacian_tridiagonal_has_known_spectrum() {
+        // 1-D Dirichlet Laplacian: λ_k = 2 - 2 cos(kπ/(n+1)).
+        let n = 50;
+        let diag = vec![2.0; n];
+        let sub = vec![-1.0; n - 1];
+        let eig = tridiag_eig(&diag, &sub);
+        for k in 1..=n {
+            let expect = 2.0 - 2.0 * (k as f64 * std::f64::consts::PI / (n as f64 + 1.0)).cos();
+            assert!(
+                (eig.values[k - 1] - expect).abs() < 1e-10,
+                "k={k} got {} want {expect}",
+                eig.values[k - 1]
+            );
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let e = sym_eig(&Mat::zeros(0, 0));
+        assert!(e.values.is_empty());
+        let a = Mat::from_vec(1, 1, vec![4.2]);
+        let e = sym_eig(&a);
+        assert_eq!(e.values, vec![4.2]);
+    }
+}

@@ -1,0 +1,306 @@
+//! `scsf` — CLI for the SCSF eigenvalue-dataset generation framework.
+//!
+//! ```text
+//! scsf generate [--config cfg.json] [--kind helmholtz] [--grid 32]
+//!               [--n 16] [--l 16] [--tol 1e-8] [--seed 0] [--shards 2]
+//!               [--sort fft|greedy|none] [--p0 20]
+//!               [--backend native|xla] [--artifacts DIR] --out DIR
+//! scsf repro <table1|table2|table3|table4|table5|fig3|table11|table12|
+//!             table13|table14|table17|table18|table19|table20|all>
+//!            [--scale quick|standard|paper]
+//! scsf inspect <dataset-dir>
+//! scsf default-config            # print a config template
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+use scsf::bench_support::{tables, Scale};
+use scsf::coordinator::config::{Backend, GenConfig};
+use scsf::coordinator::dataset::DatasetReader;
+use scsf::coordinator::pipeline::generate_dataset;
+use scsf::operators::OperatorKind;
+use scsf::sort::SortMethod;
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Tiny flag parser: `--key value` pairs plus positional args.
+struct Args {
+    positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(raw: Vec<String>) -> Result<Self> {
+        let mut positional = Vec::new();
+        let mut flags = HashMap::new();
+        let mut it = raw.into_iter();
+        while let Some(a) = it.next() {
+            if let Some(key) = a.strip_prefix("--") {
+                let val = it
+                    .next()
+                    .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
+                flags.insert(key.to_string(), val);
+            } else {
+                positional.push(a);
+            }
+        }
+        Ok(Self { positional, flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    fn get_usize(&self, key: &str) -> Result<Option<usize>> {
+        self.get(key)
+            .map(|v| v.parse().map_err(|_| anyhow!("--{key}: bad integer {v}")))
+            .transpose()
+    }
+
+    fn get_f64(&self, key: &str) -> Result<Option<f64>> {
+        self.get(key)
+            .map(|v| v.parse().map_err(|_| anyhow!("--{key}: bad float {v}")))
+            .transpose()
+    }
+}
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    if argv.is_empty() {
+        print_help();
+        return Ok(());
+    }
+    let cmd = argv.remove(0);
+    let args = Args::parse(argv)?;
+    match cmd.as_str() {
+        "generate" => cmd_generate(&args),
+        "repro" => cmd_repro(&args),
+        "inspect" => cmd_inspect(&args),
+        "default-config" => {
+            print!("{}", GenConfig::default().to_json());
+            Ok(())
+        }
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try 'scsf help')"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "scsf — Sorting Chebyshev Subspace Filter (reproduction of Wang et al. 2025)\n\
+         \n\
+         commands:\n\
+         \x20 generate        run the dataset-generation pipeline\n\
+         \x20 repro TABLE     regenerate a paper table/figure (or 'all')\n\
+         \x20 inspect DIR     summarize a generated dataset\n\
+         \x20 default-config  print a JSON config template\n\
+         \n\
+         see `rust/src/main.rs` docs for all flags"
+    );
+}
+
+fn cmd_generate(args: &Args) -> Result<()> {
+    let mut cfg = match args.get("config") {
+        Some(path) => GenConfig::from_json(&std::fs::read_to_string(path)?)?,
+        None => GenConfig::default(),
+    };
+    if let Some(kind) = args.get("kind") {
+        cfg.kind =
+            OperatorKind::parse(kind).ok_or_else(|| anyhow!("unknown kind {kind}"))?;
+    }
+    if let Some(x) = args.get_usize("grid")? {
+        cfg.grid = x;
+    }
+    if let Some(x) = args.get_usize("n")? {
+        cfg.n_problems = x;
+    }
+    if let Some(x) = args.get_usize("l")? {
+        cfg.n_eigs = x;
+    }
+    if let Some(x) = args.get_f64("tol")? {
+        cfg.tol = x;
+    }
+    if let Some(x) = args.get_usize("seed")? {
+        cfg.seed = x as u64;
+    }
+    if let Some(x) = args.get_usize("shards")? {
+        cfg.shards = x.max(1);
+    }
+    if let Some(x) = args.get_usize("degree")? {
+        cfg.degree = x;
+    }
+    if let Some(p0) = args.get_usize("p0")? {
+        cfg.sort = SortMethod::TruncatedFft { p0 };
+    }
+    if let Some(s) = args.get("sort") {
+        cfg.sort = match s {
+            "none" => SortMethod::None,
+            "greedy" => SortMethod::Greedy,
+            "fft" => SortMethod::TruncatedFft {
+                p0: args.get_usize("p0")?.unwrap_or(20),
+            },
+            other => bail!("unknown sort {other}"),
+        };
+    }
+    if let Some(b) = args.get("backend") {
+        cfg.backend = match b {
+            "native" => Backend::Native,
+            "xla" => Backend::Xla {
+                artifacts_dir: args.get("artifacts").unwrap_or("artifacts").to_string(),
+            },
+            other => bail!("unknown backend {other}"),
+        };
+    }
+    let out = args
+        .get("out")
+        .ok_or_else(|| anyhow!("generate needs --out DIR"))?;
+    println!("config:\n{}", cfg.to_json());
+    let report = generate_dataset(&cfg, Path::new(out))?;
+    println!("{}", report.summary());
+    println!("dataset written to {out}");
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let scale = match args.get("scale") {
+        Some(s) => Scale::parse(s).ok_or_else(|| anyhow!("unknown scale {s}"))?,
+        None => Scale::quick(),
+    };
+    let run = |name: &str| -> bool { which == "all" || which == name };
+    let mut matched = false;
+    if run("table1") {
+        matched = true;
+        for t in tables::table1(&scale) {
+            t.print();
+            println!();
+        }
+    }
+    if run("table2") {
+        matched = true;
+        tables::table2(&scale).print();
+        println!();
+    }
+    if run("table3") {
+        matched = true;
+        tables::table3(&scale).print();
+        println!();
+    }
+    if run("table4") {
+        matched = true;
+        let sizes: Vec<usize> = if scale.n_problems >= 1000 {
+            vec![100, 1000, 10000]
+        } else {
+            vec![50, 200]
+        };
+        tables::table4(&scale, &sizes).print();
+        println!();
+    }
+    if run("table5") {
+        matched = true;
+        tables::table5(&scale).print();
+        println!();
+    }
+    if run("fig3") {
+        matched = true;
+        let grids: Vec<usize> = if scale.grid >= 50 {
+            vec![50, 60, 65, 70, 75, 80, 90, 100]
+        } else {
+            vec![10, 14, 18, 22, 26]
+        };
+        tables::fig3_dimension(&scale, &grids).print();
+        println!();
+    }
+    if run("table11") {
+        matched = true;
+        tables::table11(&scale).print();
+        println!();
+    }
+    if run("table12") {
+        matched = true;
+        tables::table12(&scale, &[12, 16, 20, 24, 28, 32, 36, 40]).print();
+        println!();
+    }
+    if run("table13") {
+        matched = true;
+        let l = *scale.ls.last().unwrap();
+        let guards: Vec<usize> = (1..=6).map(|i| i * l / 8 + 1).collect();
+        tables::table13(&scale, &guards).print();
+        println!();
+    }
+    if run("table14") {
+        matched = true;
+        tables::table14(&scale, &[2, 4, scale.p0, scale.p0 * 2]).print();
+        println!();
+    }
+    if run("table17") {
+        matched = true;
+        tables::table17(&scale).print();
+        println!();
+    }
+    if run("table18") {
+        matched = true;
+        tables::table18(&scale, &[(4, 4), (3, 4), (2, 4), (1, 4), (0, 4)]).print();
+        println!();
+    }
+    if run("table19") {
+        matched = true;
+        tables::table19(&scale).print();
+        println!();
+    }
+    if run("table20") {
+        matched = true;
+        tables::table20(&scale).print();
+        println!();
+    }
+    if !matched {
+        bail!("unknown table '{which}' (try 'scsf repro all')");
+    }
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let dir = args
+        .positional
+        .first()
+        .ok_or_else(|| anyhow!("inspect needs a dataset directory"))?;
+    let mut reader = DatasetReader::open(Path::new(dir))?;
+    let index = reader.index().to_vec();
+    println!("dataset {dir}: {} records", index.len());
+    let mut worst: f64 = 0.0;
+    let mut secs = 0.0;
+    for r in &index {
+        worst = worst.max(r.max_residual);
+        secs += r.secs;
+    }
+    println!(
+        "n = {}, L = {}, total solve time {:.2}s, worst residual {:.2e}",
+        index.first().map(|r| r.n).unwrap_or(0),
+        index.first().map(|r| r.l).unwrap_or(0),
+        secs,
+        worst
+    );
+    // Spot check: first record's smallest eigenvalues.
+    if let Some(first) = index.first() {
+        let rec = reader.read(first.id)?;
+        println!(
+            "record {}: λ₁..λ₃ = {:?}",
+            first.id,
+            &rec.values[..rec.values.len().min(3)]
+        );
+    }
+    Ok(())
+}

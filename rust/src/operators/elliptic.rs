@@ -1,0 +1,208 @@
+//! Constant-coefficient second-order elliptic operator (paper §D.2
+//! dataset 2):
+//!
+//! ```text
+//! L u = a11·u_xx + a12·u_xy + a22·u_yy + a1·u_x + a2·u_y + a0·u = λu
+//! ```
+//!
+//! Coefficients are sampled uniformly (`a11, a22, a1, a2, a0 ∈ (−1,1)`,
+//! `a12 ∈ (−0.01, 0.01)`) and rejected unless elliptic
+//! (`4·a11·a22 > a12²`).
+//!
+//! The paper restricts itself to self-adjoint operators; with constant
+//! coefficients the central-difference matrices of the second-order terms
+//! are symmetric while the first-order (drift) matrices are exactly
+//! skew-symmetric. We therefore assemble the self-adjoint part
+//! `±(a11 D_xx + a12 D_xy + a22 D_yy) + a0 I` (sign chosen so the leading
+//! part is positive definite) — the Hermitian projection of L. The drift
+//! coefficients still enter the *sorting key*, matching the paper's
+//! statement that all six constants drive the sort.
+
+use super::{idx, GenOptions, OperatorKind, Problem, SortKey};
+use crate::rng::Xoshiro256pp;
+use crate::sparse::{CooBuilder, CsrMatrix};
+
+/// The six constant coefficients.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EllipticCoeffs {
+    /// u_xx coefficient.
+    pub a11: f64,
+    /// u_xy coefficient.
+    pub a12: f64,
+    /// u_yy coefficient.
+    pub a22: f64,
+    /// u_x coefficient (sorting only; skew part dropped in assembly).
+    pub a1: f64,
+    /// u_y coefficient (sorting only).
+    pub a2: f64,
+    /// Zeroth-order coefficient.
+    pub a0: f64,
+}
+
+impl EllipticCoeffs {
+    /// Ellipticity test `4·a11·a22 > a12²`.
+    pub fn is_elliptic(&self) -> bool {
+        4.0 * self.a11 * self.a22 > self.a12 * self.a12
+    }
+
+    /// Uniform sample from the paper's ranges, rejected until elliptic.
+    pub fn sample(rng: &mut Xoshiro256pp) -> Self {
+        loop {
+            let c = Self {
+                a11: rng.uniform(-1.0, 1.0),
+                a12: rng.uniform(-0.01, 0.01),
+                a22: rng.uniform(-1.0, 1.0),
+                a1: rng.uniform(-1.0, 1.0),
+                a2: rng.uniform(-1.0, 1.0),
+                a0: rng.uniform(-1.0, 1.0),
+            };
+            if c.is_elliptic() {
+                return c;
+            }
+        }
+    }
+}
+
+/// Assemble the Hermitian part of `L` on a `g × g` interior grid.
+///
+/// Ellipticity forces `a11` and `a22` to share a sign; if they are
+/// positive the operator `a11∂xx + a22∂yy` has negative spectrum, so we
+/// flip the overall sign to keep the assembled matrix positive definite
+/// (eigenvalue signs are reported relative to this convention).
+pub fn assemble(g: usize, c: &EllipticCoeffs) -> CsrMatrix {
+    assert!(c.is_elliptic(), "coefficients must be elliptic");
+    let h = 1.0 / (g as f64 + 1.0);
+    let inv_h2 = 1.0 / (h * h);
+    // Normalize so the leading coefficients are positive: assemble
+    // M = −s·(a11 ∂xx + a12 ∂xy + a22 ∂yy) + a0·I with s = sign(a11).
+    let s = if c.a11 > 0.0 { 1.0 } else { -1.0 };
+    let (c11, c12, c22) = (s * c.a11, s * c.a12, s * c.a22);
+    let mut coo = CooBuilder::new(g * g, g * g);
+    let cross = c12 * inv_h2 / 4.0;
+    for i in 0..g {
+        for j in 0..g {
+            let me = idx(g, i, j);
+            coo.push(me, me, 2.0 * (c11 + c22) * inv_h2 + c.a0);
+            let mut nb = |ii: isize, jj: isize, w: f64| {
+                if ii >= 0 && ii < g as isize && jj >= 0 && jj < g as isize {
+                    coo.push(me, idx(g, ii as usize, jj as usize), w);
+                }
+            };
+            // −c11·∂xx couplings (i ± 1).
+            nb(i as isize - 1, j as isize, -c11 * inv_h2);
+            nb(i as isize + 1, j as isize, -c11 * inv_h2);
+            // −c22·∂yy couplings (j ± 1).
+            nb(i as isize, j as isize - 1, -c22 * inv_h2);
+            nb(i as isize, j as isize + 1, -c22 * inv_h2);
+            // −c12·∂xy corner couplings: (+,+) and (−,−) carry −cross,
+            // the anti-diagonal corners +cross.
+            nb(i as isize + 1, j as isize + 1, -cross);
+            nb(i as isize - 1, j as isize - 1, -cross);
+            nb(i as isize + 1, j as isize - 1, cross);
+            nb(i as isize - 1, j as isize + 1, cross);
+        }
+    }
+    coo.build()
+}
+
+/// Sample one elliptic-operator problem.
+pub fn generate(opts: GenOptions, id: usize, rng: &mut Xoshiro256pp) -> Problem {
+    let c = EllipticCoeffs::sample(rng);
+    let matrix = assemble(opts.grid, &c);
+    Problem {
+        id,
+        kind: OperatorKind::Elliptic,
+        matrix,
+        sort_key: SortKey::Coeffs(vec![c.a11, c.a12, c.a22, c.a1, c.a2, c.a0]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::symeig::sym_eig;
+
+    fn laplacian_coeffs() -> EllipticCoeffs {
+        EllipticCoeffs {
+            a11: 1.0,
+            a12: 0.0,
+            a22: 1.0,
+            a1: 0.0,
+            a2: 0.0,
+            a0: 0.0,
+        }
+    }
+
+    #[test]
+    fn reduces_to_laplacian() {
+        // a11 = a22 = 1 (sign-flipped to −Δ) must equal the Poisson
+        // assembly with K ≡ 1.
+        let g = 8;
+        let a = assemble(g, &laplacian_coeffs());
+        let b = super::super::poisson::assemble(g, &vec![1.0; g * g]);
+        assert!((a.to_dense().max_abs_diff(&b.to_dense())) < 1e-10);
+    }
+
+    #[test]
+    fn symmetric_for_random_coeffs() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        for _ in 0..10 {
+            let c = EllipticCoeffs::sample(&mut rng);
+            let a = assemble(8, &c);
+            assert!(a.asymmetry() < 1e-12, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn positive_definite_with_a0_floor() {
+        // Smallest Laplacian-like eigenvalue ≈ |a11+a22|·π² ≫ 1 ≥ |a0|,
+        // so the matrix stays PD for the paper's coefficient ranges.
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        for _ in 0..5 {
+            let c = EllipticCoeffs::sample(&mut rng);
+            let a = assemble(10, &c);
+            let eig = sym_eig(&a.to_dense());
+            assert!(eig.values[0] > 0.0, "λ₁ = {} for {c:?}", eig.values[0]);
+        }
+    }
+
+    #[test]
+    fn cross_term_changes_spectrum() {
+        let g = 8;
+        let c0 = laplacian_coeffs();
+        let mut c1 = laplacian_coeffs();
+        c1.a12 = 0.009;
+        let e0 = sym_eig(&assemble(g, &c0).to_dense());
+        let e1 = sym_eig(&assemble(g, &c1).to_dense());
+        let diff: f64 = e0
+            .values
+            .iter()
+            .zip(&e1.values)
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        assert!(diff > 0.0);
+    }
+
+    #[test]
+    fn rejection_sampling_yields_elliptic() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        for _ in 0..100 {
+            assert!(EllipticCoeffs::sample(&mut rng).is_elliptic());
+        }
+    }
+
+    #[test]
+    fn negative_a11_branch_also_pd() {
+        let c = EllipticCoeffs {
+            a11: -0.8,
+            a12: 0.005,
+            a22: -0.6,
+            a1: 0.1,
+            a2: -0.2,
+            a0: 0.3,
+        };
+        assert!(c.is_elliptic());
+        let eig = sym_eig(&assemble(8, &c).to_dense());
+        assert!(eig.values[0] > 0.0);
+    }
+}

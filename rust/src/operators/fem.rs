@@ -1,0 +1,186 @@
+//! Q1 finite-element (Galerkin) discretization of the Helmholtz operator
+//! — the alternative parameterization of paper Table 19.
+//!
+//! Bilinear quadrilateral elements on a uniform mesh of the unit square,
+//! Dirichlet boundary. Element coefficients (`p`, `k²`) are sampled at
+//! element centers from the same GRFs as the FDM dataset. The generalized
+//! problem `K v = λ M v` is reduced to standard form with the *lumped*
+//! (row-sum) mass matrix: `A = M_l^{-1/2} K M_l^{-1/2}` — symmetric
+//! positive definite, 9-point stencil.
+
+use super::{Field, GenOptions, OperatorKind, Problem, SortKey};
+use crate::grf;
+use crate::rng::Xoshiro256pp;
+use crate::sparse::{CooBuilder, CsrMatrix};
+
+/// Reference-element stiffness matrix for the Q1 square element with
+/// unit coefficient (the classic 8/3-Laplacian block, h-independent).
+const KE: [[f64; 4]; 4] = [
+    [2.0 / 3.0, -1.0 / 6.0, -1.0 / 3.0, -1.0 / 6.0],
+    [-1.0 / 6.0, 2.0 / 3.0, -1.0 / 6.0, -1.0 / 3.0],
+    [-1.0 / 3.0, -1.0 / 6.0, 2.0 / 3.0, -1.0 / 6.0],
+    [-1.0 / 6.0, -1.0 / 3.0, -1.0 / 6.0, 2.0 / 3.0],
+];
+
+/// Reference-element consistent mass matrix (times `h²`).
+const ME: [[f64; 4]; 4] = [
+    [1.0 / 9.0, 1.0 / 18.0, 1.0 / 36.0, 1.0 / 18.0],
+    [1.0 / 18.0, 1.0 / 9.0, 1.0 / 18.0, 1.0 / 36.0],
+    [1.0 / 36.0, 1.0 / 18.0, 1.0 / 9.0, 1.0 / 18.0],
+    [1.0 / 18.0, 1.0 / 36.0, 1.0 / 18.0, 1.0 / 9.0],
+];
+
+/// Assemble the mass-scaled FEM Helmholtz matrix on a `g × g` interior
+/// node grid (`(g+1)²` elements). `p_el` and `k_el` give the stiffness
+/// coefficient and wavenumber per *element*, row-major `(g+1) × (g+1)`.
+pub fn assemble(g: usize, p_el: &[f64], k_el: &[f64]) -> CsrMatrix {
+    let ne = g + 1; // elements per side
+    assert_eq!(p_el.len(), ne * ne);
+    assert_eq!(k_el.len(), ne * ne);
+    let n = g * g;
+    let h = 1.0 / ne as f64;
+    // Interior node id for mesh node (i, j) in 1..=g, else None (Dirichlet).
+    let node = |i: usize, j: usize| -> Option<usize> {
+        if i >= 1 && i <= g && j >= 1 && j <= g {
+            Some((i - 1) * g + (j - 1))
+        } else {
+            None
+        }
+    };
+    let mut kcoo = CooBuilder::new(n, n);
+    let mut mass = vec![0.0f64; n]; // lumped mass accumulator
+    for ei in 0..ne {
+        for ej in 0..ne {
+            let pe = p_el[ei * ne + ej];
+            let ke2 = k_el[ei * ne + ej] * k_el[ei * ne + ej];
+            // Element nodes counter-clockwise: (ei,ej),(ei,ej+1),(ei+1,ej+1),(ei+1,ej)
+            let nodes = [
+                node(ei, ej),
+                node(ei, ej + 1),
+                node(ei + 1, ej + 1),
+                node(ei + 1, ej),
+            ];
+            for (a, na) in nodes.iter().enumerate() {
+                let Some(ia) = na else { continue };
+                for (b, nb) in nodes.iter().enumerate() {
+                    let Some(ib) = nb else { continue };
+                    // Stiffness + potential: p·KE + k²·h²·ME.
+                    let v = pe * KE[a][b] + ke2 * h * h * ME[a][b];
+                    kcoo.push(*ia, *ib, v);
+                }
+                // Lumped mass for node a: sum of its mass row over the element.
+                let row_sum: f64 = (0..4).map(|b| h * h * ME[a][b]).sum();
+                mass[*ia] += row_sum;
+            }
+        }
+    }
+    let k = kcoo.build();
+    // Mass scaling A = M^{-1/2} K M^{-1/2}.
+    let rsqrt: Vec<f64> = mass.iter().map(|m| 1.0 / m.sqrt()).collect();
+    let mut coo = CooBuilder::new(n, n);
+    for i in 0..n {
+        let (cols, vals) = k.row(i);
+        for (c, v) in cols.iter().zip(vals) {
+            let j = *c as usize;
+            coo.push(i, j, rsqrt[i] * v * rsqrt[j]);
+        }
+    }
+    coo.build()
+}
+
+/// Sample one FEM-Helmholtz problem. Coefficients live on the element
+/// grid `(g+1) × (g+1)`; the sort key uses those fields directly.
+pub fn generate(opts: GenOptions, id: usize, rng: &mut Xoshiro256pp) -> Problem {
+    let g = opts.grid;
+    let ne = g + 1;
+    let pf = grf::sample_positive(
+        ne,
+        opts.grf,
+        super::helmholtz::P_LO,
+        super::helmholtz::P_HI,
+        rng,
+    );
+    let kf = grf::sample_positive(
+        ne,
+        opts.grf,
+        super::helmholtz::K_LO,
+        super::helmholtz::K_HI,
+        rng,
+    );
+    let matrix = assemble(g, &pf, &kf);
+    Problem {
+        id,
+        kind: OperatorKind::HelmholtzFem,
+        matrix,
+        sort_key: SortKey::Fields(vec![
+            Field { p: ne, data: pf },
+            Field { p: ne, data: kf },
+        ]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::symeig::sym_eig;
+
+    #[test]
+    fn reference_matrices_have_fem_invariants() {
+        // Stiffness rows sum to zero (constants in the kernel).
+        for a in 0..4 {
+            let s: f64 = (0..4).map(|b| KE[a][b]).sum();
+            assert!(s.abs() < 1e-15);
+        }
+        // Mass entries sum to the element area factor 1 (×h²).
+        let total: f64 = (0..4).flat_map(|a| (0..4).map(move |b| ME[a][b])).sum();
+        assert!((total - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn unit_coefficient_fem_approximates_laplace_eigenvalues() {
+        // p ≡ 1, k ≡ 0: smallest eigenvalue ≈ 2π².
+        let g = 15;
+        let ne = g + 1;
+        let a = assemble(g, &vec![1.0; ne * ne], &vec![0.0; ne * ne]);
+        let eig = sym_eig(&a.to_dense());
+        let target = 2.0 * std::f64::consts::PI * std::f64::consts::PI;
+        let rel = (eig.values[0] - target).abs() / target;
+        assert!(rel < 0.02, "λ₁ {} rel {}", eig.values[0], rel);
+    }
+
+    #[test]
+    fn nine_point_stencil() {
+        let g = 8;
+        let ne = g + 1;
+        let a = assemble(g, &vec![1.0; ne * ne], &vec![1.0; ne * ne]);
+        let mid = (g / 2) * g + g / 2;
+        assert_eq!(a.row(mid).0.len(), 9);
+    }
+
+    #[test]
+    fn symmetric_pd() {
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let p = generate(
+            GenOptions {
+                grid: 8,
+                ..Default::default()
+            },
+            0,
+            &mut rng,
+        );
+        assert!(p.matrix.asymmetry() < 1e-10);
+        let eig = sym_eig(&p.matrix.to_dense());
+        assert!(eig.values[0] > 0.0);
+    }
+
+    #[test]
+    fn potential_raises_spectrum() {
+        let g = 6;
+        let ne = g + 1;
+        let a0 = assemble(g, &vec![1.0; ne * ne], &vec![0.0; ne * ne]);
+        let a1 = assemble(g, &vec![1.0; ne * ne], &vec![3.0; ne * ne]);
+        let e0 = sym_eig(&a0.to_dense());
+        let e1 = sym_eig(&a1.to_dense());
+        assert!(e1.values[0] > e0.values[0]);
+    }
+}

@@ -1,0 +1,176 @@
+//! Helmholtz operator `−∇·(p(x,y)∇u) + k²(x,y)·u = λu` on the unit square
+//! (Dirichlet), discretized by central differences (paper §D.2 dataset 3).
+//!
+//! Sign convention: the leading term is assembled as `−∇·(p∇)` so the
+//! matrix is SPD (the `k²` potential is non-negative); smallest-algebraic
+//! eigenvalues coincide with the paper's smallest-in-modulus target. See
+//! `operators` module docs.
+
+use super::{poisson, Field, GenOptions, OperatorKind, Problem, SortKey};
+use crate::grf;
+use crate::rng::Xoshiro256pp;
+use crate::sparse::{CooBuilder, CsrMatrix};
+
+/// Bounds for the GRF-sampled stiffness field `p`.
+pub const P_LO: f64 = 0.5;
+/// Upper bound of `p`.
+pub const P_HI: f64 = 2.0;
+/// Bounds for the wavenumber field `k` (potential is `k²`).
+pub const K_LO: f64 = 0.5;
+/// Upper bound of `k`.
+pub const K_HI: f64 = 6.0;
+
+/// Assemble the Helmholtz matrix from stiffness field `p` and wavenumber
+/// field `k` (both `g × g` row-major).
+pub fn assemble(g: usize, p: &[f64], k: &[f64]) -> CsrMatrix {
+    assert_eq!(p.len(), g * g);
+    assert_eq!(k.len(), g * g);
+    // Reuse the SPD divergence-form stencil, then add the potential.
+    let stiff = poisson::assemble(g, p);
+    let mut coo = CooBuilder::new(g * g, g * g);
+    for i in 0..g * g {
+        let (cols, vals) = stiff.row(i);
+        for (c, v) in cols.iter().zip(vals) {
+            coo.push(i, *c as usize, *v);
+        }
+        coo.push(i, i, k[i] * k[i]);
+    }
+    coo.build()
+}
+
+/// Sample one Helmholtz problem: both `p` and `k` are GRFs; the sorting
+/// key is the pair of parameter fields (paper sorts on the GRF parameters).
+pub fn generate(opts: GenOptions, id: usize, rng: &mut Xoshiro256pp) -> Problem {
+    let g = opts.grid;
+    let pf = grf::sample_positive(g, opts.grf, P_LO, P_HI, rng);
+    let kf = grf::sample_positive(g, opts.grf, K_LO, K_HI, rng);
+    let matrix = assemble(g, &pf, &kf);
+    Problem {
+        id,
+        kind: OperatorKind::Helmholtz,
+        matrix,
+        sort_key: SortKey::Fields(vec![
+            Field { p: g, data: pf },
+            Field { p: g, data: kf },
+        ]),
+    }
+}
+
+/// Sample a *perturbed chain* of Helmholtz problems: problem `i` is an
+/// `eps`-perturbation of problem `i−1` (paper Table 17's similarity
+/// experiment). `eps = 0` yields identical problems.
+pub fn generate_perturbed_chain(
+    opts: GenOptions,
+    count: usize,
+    eps: f64,
+    seed: u64,
+) -> Vec<Problem> {
+    let g = opts.grid;
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut pf = grf::sample_positive(g, opts.grf, P_LO, P_HI, &mut rng);
+    let mut kf = grf::sample_positive(g, opts.grf, K_LO, K_HI, &mut rng);
+    (0..count)
+        .map(|id| {
+            if id > 0 {
+                pf = grf::perturb(&pf, g, opts.grf, eps, P_LO, P_HI, &mut rng);
+                kf = grf::perturb(&kf, g, opts.grf, eps, K_LO, K_HI, &mut rng);
+            }
+            Problem {
+                id,
+                kind: OperatorKind::Helmholtz,
+                matrix: assemble(g, &pf, &kf),
+                sort_key: SortKey::Fields(vec![
+                    Field {
+                        p: g,
+                        data: pf.clone(),
+                    },
+                    Field {
+                        p: g,
+                        data: kf.clone(),
+                    },
+                ]),
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::symeig::sym_eig;
+
+    #[test]
+    fn potential_shifts_spectrum_up() {
+        let g = 8;
+        let p = vec![1.0; g * g];
+        let k0 = vec![0.0; g * g];
+        let k2 = vec![2.0; g * g];
+        let a0 = assemble(g, &p, &k0);
+        let a2 = assemble(g, &p, &k2);
+        let e0 = sym_eig(&a0.to_dense());
+        let e2 = sym_eig(&a2.to_dense());
+        for t in 0..g * g {
+            // constant potential k²=4 is a pure shift
+            assert!((e2.values[t] - e0.values[t] - 4.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn spd_for_random_fields() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let p = generate(
+            GenOptions {
+                grid: 8,
+                ..Default::default()
+            },
+            0,
+            &mut rng,
+        );
+        assert!(p.matrix.asymmetry() < 1e-12);
+        let eig = sym_eig(&p.matrix.to_dense());
+        assert!(eig.values[0] > 0.0);
+    }
+
+    #[test]
+    fn perturbed_chain_eps0_is_constant() {
+        let opts = GenOptions {
+            grid: 6,
+            ..Default::default()
+        };
+        let chain = generate_perturbed_chain(opts, 4, 0.0, 5);
+        for w in chain.windows(2) {
+            assert_eq!(w[0].matrix, w[1].matrix);
+        }
+    }
+
+    #[test]
+    fn perturbed_chain_similarity_scales_with_eps() {
+        let opts = GenOptions {
+            grid: 8,
+            ..Default::default()
+        };
+        let key_dist = |eps: f64| {
+            let chain = generate_perturbed_chain(opts, 3, eps, 5);
+            chain[0].sort_key.dist2(&chain[1].sort_key)
+        };
+        assert!(key_dist(0.01) < key_dist(0.1));
+        assert!(key_dist(0.1) < key_dist(0.5));
+    }
+
+    #[test]
+    fn sort_key_has_two_fields() {
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let p = generate(
+            GenOptions {
+                grid: 6,
+                ..Default::default()
+            },
+            0,
+            &mut rng,
+        );
+        match &p.sort_key {
+            SortKey::Fields(fs) => assert_eq!(fs.len(), 2),
+            _ => panic!("expected field sort key"),
+        }
+    }
+}

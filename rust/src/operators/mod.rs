@@ -1,0 +1,286 @@
+//! The paper's four operator-eigenvalue dataset families (§D.2), plus the
+//! FEM parameterization of Table 19. Each family turns GRF-sampled (or
+//! uniformly sampled) coefficients into a sparse symmetric matrix by FDM
+//! central differences (or Q1 FEM), i.e. steps 1–3 of the paper's Figure 1.
+//!
+//! ## Sign conventions
+//!
+//! All experiments compute the smallest-`|λ|` eigenpairs of self-adjoint
+//! operators. We fix signs so every assembled matrix is symmetric
+//! positive-(semi)definite — e.g. the generalized Poisson operator is
+//! assembled as `−∇·(K∇)` — which makes *smallest-algebraic* coincide
+//! with *smallest-in-modulus*. This matches the paper's setting (its
+//! baselines are all "smallest" Hermitian solvers) and is documented in
+//! DESIGN.md §Substitutions.
+
+pub mod elliptic;
+pub mod fem;
+pub mod helmholtz;
+pub mod poisson;
+pub mod vibration;
+
+use crate::grf::GrfParams;
+use crate::rng::Xoshiro256pp;
+use crate::sparse::CsrMatrix;
+
+/// Which dataset family a problem belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OperatorKind {
+    /// Generalized Poisson `−∇·(K∇u) = λu` (paper precision 1e-12).
+    Poisson,
+    /// Constant-coefficient second-order elliptic operator (1e-10).
+    Elliptic,
+    /// Helmholtz `−∇·(p∇u) + k²u = λu` (1e-8).
+    Helmholtz,
+    /// Fourth-order plate vibration `∇²(D∇²u) = λρu` (1e-8).
+    Vibration,
+    /// Helmholtz discretized with Q1 FEM + lumped mass (Table 19).
+    HelmholtzFem,
+}
+
+impl OperatorKind {
+    /// Paper's per-dataset solve tolerance (relative residual).
+    pub fn default_tol(self) -> f64 {
+        match self {
+            OperatorKind::Poisson => 1e-12,
+            OperatorKind::Elliptic => 1e-10,
+            OperatorKind::Helmholtz | OperatorKind::HelmholtzFem => 1e-8,
+            OperatorKind::Vibration => 1e-8,
+        }
+    }
+
+    /// Stable name used in manifests and CLI flags.
+    pub fn name(self) -> &'static str {
+        match self {
+            OperatorKind::Poisson => "poisson",
+            OperatorKind::Elliptic => "elliptic",
+            OperatorKind::Helmholtz => "helmholtz",
+            OperatorKind::Vibration => "vibration",
+            OperatorKind::HelmholtzFem => "helmholtz_fem",
+        }
+    }
+
+    /// Parse a name produced by [`OperatorKind::name`].
+    pub fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "poisson" => OperatorKind::Poisson,
+            "elliptic" => OperatorKind::Elliptic,
+            "helmholtz" => OperatorKind::Helmholtz,
+            "vibration" => OperatorKind::Vibration,
+            "helmholtz_fem" => OperatorKind::HelmholtzFem,
+            _ => return None,
+        })
+    }
+}
+
+/// The sorting key of a problem: the parameter data the truncated-FFT /
+/// greedy sorting compares (paper Algorithm 2's `P^{(i)}`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SortKey {
+    /// One or more `p × p` coefficient fields (row-major).
+    Fields(Vec<Field>),
+    /// A short coefficient vector (the elliptic family's 6 constants);
+    /// FFT truncation is a no-op for these.
+    Coeffs(Vec<f64>),
+}
+
+/// A square coefficient field.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Field {
+    /// Side length `p` of the field.
+    pub p: usize,
+    /// Row-major `p × p` samples.
+    pub data: Vec<f64>,
+}
+
+impl SortKey {
+    /// Squared Euclidean distance between two keys of the same shape —
+    /// the "exact" (untruncated) distance the greedy sort uses.
+    pub fn dist2(&self, other: &SortKey) -> f64 {
+        match (self, other) {
+            (SortKey::Fields(a), SortKey::Fields(b)) => {
+                assert_eq!(a.len(), b.len(), "sort-key field count mismatch");
+                a.iter()
+                    .zip(b)
+                    .map(|(fa, fb)| {
+                        assert_eq!(fa.p, fb.p);
+                        fa.data
+                            .iter()
+                            .zip(&fb.data)
+                            .map(|(x, y)| (x - y) * (x - y))
+                            .sum::<f64>()
+                    })
+                    .sum()
+            }
+            (SortKey::Coeffs(a), SortKey::Coeffs(b)) => {
+                assert_eq!(a.len(), b.len());
+                a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+            }
+            _ => panic!("sort-key kind mismatch"),
+        }
+    }
+}
+
+/// One eigenvalue problem of a dataset: the assembled matrix plus the
+/// parameter data it came from.
+#[derive(Debug, Clone)]
+pub struct Problem {
+    /// Stable index within the generated dataset (pre-sorting order).
+    pub id: usize,
+    /// Which family the problem belongs to.
+    pub kind: OperatorKind,
+    /// The assembled symmetric sparse matrix.
+    pub matrix: CsrMatrix,
+    /// Parameter data used by the sorting algorithms.
+    pub sort_key: SortKey,
+}
+
+impl Problem {
+    /// Matrix dimension `n`.
+    pub fn n(&self) -> usize {
+        self.matrix.rows()
+    }
+}
+
+/// Generation knobs shared by all families.
+#[derive(Debug, Clone, Copy)]
+pub struct GenOptions {
+    /// Interior grid side `g` (matrix dimension is `g²`).
+    pub grid: usize,
+    /// GRF smoothness/length-scale for coefficient fields.
+    pub grf: GrfParams,
+}
+
+impl Default for GenOptions {
+    fn default() -> Self {
+        Self {
+            grid: 32,
+            grf: GrfParams::default(),
+        }
+    }
+}
+
+/// Generate `count` problems of the given family (steps 1–3 of Figure 1).
+/// Deterministic in `seed`.
+pub fn generate(
+    kind: OperatorKind,
+    opts: GenOptions,
+    count: usize,
+    seed: u64,
+) -> Vec<Problem> {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    (0..count)
+        .map(|id| {
+            let mut prng = rng.fork();
+            generate_one(kind, opts, id, &mut prng)
+        })
+        .collect()
+}
+
+/// Generate a single problem from an explicit per-problem RNG stream.
+pub fn generate_one(
+    kind: OperatorKind,
+    opts: GenOptions,
+    id: usize,
+    rng: &mut Xoshiro256pp,
+) -> Problem {
+    match kind {
+        OperatorKind::Poisson => poisson::generate(opts, id, rng),
+        OperatorKind::Elliptic => elliptic::generate(opts, id, rng),
+        OperatorKind::Helmholtz => helmholtz::generate(opts, id, rng),
+        OperatorKind::Vibration => vibration::generate(opts, id, rng),
+        OperatorKind::HelmholtzFem => fem::generate(opts, id, rng),
+    }
+}
+
+/// Map interior grid point `(i, j)` (0-based) to the row-major unknown
+/// index on a `g × g` interior grid.
+#[inline]
+pub(crate) fn idx(g: usize, i: usize, j: usize) -> usize {
+    i * g + j
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_name_roundtrip() {
+        for k in [
+            OperatorKind::Poisson,
+            OperatorKind::Elliptic,
+            OperatorKind::Helmholtz,
+            OperatorKind::Vibration,
+            OperatorKind::HelmholtzFem,
+        ] {
+            assert_eq!(OperatorKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(OperatorKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn all_families_assemble_symmetric_psd_matrices() {
+        let opts = GenOptions {
+            grid: 8,
+            ..Default::default()
+        };
+        for kind in [
+            OperatorKind::Poisson,
+            OperatorKind::Elliptic,
+            OperatorKind::Helmholtz,
+            OperatorKind::Vibration,
+            OperatorKind::HelmholtzFem,
+        ] {
+            let ps = generate(kind, opts, 2, 42);
+            assert_eq!(ps.len(), 2);
+            for p in &ps {
+                assert_eq!(p.n(), 64, "{kind:?}");
+                assert!(
+                    p.matrix.asymmetry() < 1e-10,
+                    "{kind:?} asymmetry {}",
+                    p.matrix.asymmetry()
+                );
+                // PSD check via full dense spectrum at this small size.
+                let eig = crate::linalg::symeig::sym_eig(&p.matrix.to_dense());
+                assert!(
+                    eig.values[0] > -1e-8,
+                    "{kind:?} has negative eigenvalue {}",
+                    eig.values[0]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let opts = GenOptions {
+            grid: 6,
+            ..Default::default()
+        };
+        let a = generate(OperatorKind::Helmholtz, opts, 3, 7);
+        let b = generate(OperatorKind::Helmholtz, opts, 3, 7);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.matrix, y.matrix);
+            assert_eq!(x.sort_key, y.sort_key);
+        }
+    }
+
+    #[test]
+    fn problems_within_a_dataset_differ() {
+        let opts = GenOptions {
+            grid: 6,
+            ..Default::default()
+        };
+        let ps = generate(OperatorKind::Poisson, opts, 2, 1);
+        assert_ne!(ps[0].matrix, ps[1].matrix);
+    }
+
+    #[test]
+    fn sort_key_distance_properties() {
+        let a = SortKey::Coeffs(vec![1.0, 2.0]);
+        let b = SortKey::Coeffs(vec![1.0, 4.0]);
+        assert_eq!(a.dist2(&a), 0.0);
+        assert_eq!(a.dist2(&b), 4.0);
+        assert_eq!(b.dist2(&a), 4.0);
+    }
+}

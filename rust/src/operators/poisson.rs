@@ -1,0 +1,163 @@
+//! Generalized Poisson operator `−∇·(K(x,y)∇u) = λu` on the unit square
+//! with homogeneous Dirichlet boundaries, discretized by second-order
+//! central differences on a `g × g` interior grid (paper §D.2 dataset 1).
+//!
+//! The flux form uses the arithmetic mean of `K` at cell half-points,
+//! which yields a symmetric positive-definite 5-point stencil:
+//!
+//! ```text
+//! (Au)_{ij} = [ K_{i+½,j}(u_{ij}−u_{i+1,j}) + K_{i−½,j}(u_{ij}−u_{i−1,j})
+//!             + K_{i,j+½}(u_{ij}−u_{i,j+1}) + K_{i,j−½}(u_{ij}−u_{i,j−1}) ] / h²
+//! ```
+
+use super::{idx, Field, GenOptions, OperatorKind, Problem, SortKey};
+use crate::grf;
+use crate::rng::Xoshiro256pp;
+use crate::sparse::{CooBuilder, CsrMatrix};
+
+/// Coefficient bounds for the GRF-sampled diffusion field.
+pub const K_LO: f64 = 0.5;
+/// Upper bound of the diffusion field.
+pub const K_HI: f64 = 2.0;
+
+/// Assemble `−∇·(K∇)` for a `g × g` interior grid from the `g × g`
+/// diffusion field `k` (row-major, sampled at grid nodes).
+pub fn assemble(g: usize, k: &[f64]) -> CsrMatrix {
+    assert_eq!(k.len(), g * g);
+    let h = 1.0 / (g as f64 + 1.0);
+    let inv_h2 = 1.0 / (h * h);
+    // Harmonic-free arithmetic mean at half points; boundary half-points
+    // reuse the interior node value (Dirichlet data is 0 so only the
+    // diagonal contribution remains).
+    let kmid = |a: f64, b: f64| 0.5 * (a + b);
+    let mut coo = CooBuilder::new(g * g, g * g);
+    for i in 0..g {
+        for j in 0..g {
+            let me = idx(g, i, j);
+            let kij = k[me];
+            let mut diag = 0.0;
+            // The four neighbours (±i, ±j): accumulate flux terms.
+            let mut couple = |coo: &mut CooBuilder, other: Option<usize>, kn: f64| {
+                let kf = kmid(kij, kn);
+                diag += kf;
+                if let Some(o) = other {
+                    coo.push(me, o, -kf * inv_h2);
+                }
+            };
+            couple(
+                &mut coo,
+                (i > 0).then(|| idx(g, i - 1, j)),
+                if i > 0 { k[idx(g, i - 1, j)] } else { kij },
+            );
+            couple(
+                &mut coo,
+                (i + 1 < g).then(|| idx(g, i + 1, j)),
+                if i + 1 < g { k[idx(g, i + 1, j)] } else { kij },
+            );
+            couple(
+                &mut coo,
+                (j > 0).then(|| idx(g, i, j - 1)),
+                if j > 0 { k[idx(g, i, j - 1)] } else { kij },
+            );
+            couple(
+                &mut coo,
+                (j + 1 < g).then(|| idx(g, i, j + 1)),
+                if j + 1 < g { k[idx(g, i, j + 1)] } else { kij },
+            );
+            coo.push(me, me, diag * inv_h2);
+        }
+    }
+    coo.build()
+}
+
+/// Sample one generalized-Poisson problem (GRF diffusion field).
+pub fn generate(opts: GenOptions, id: usize, rng: &mut Xoshiro256pp) -> Problem {
+    let g = opts.grid;
+    let k = grf::sample_positive(g, opts.grf, K_LO, K_HI, rng);
+    let matrix = assemble(g, &k);
+    Problem {
+        id,
+        kind: OperatorKind::Poisson,
+        matrix,
+        sort_key: SortKey::Fields(vec![Field { p: g, data: k }]),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::symeig::sym_eig;
+
+    #[test]
+    fn constant_coefficient_matches_laplacian_spectrum() {
+        // K ≡ 1: eigenvalues are the classic 2-D Dirichlet Laplacian
+        // values λ_{pq} = (2−2cos(pπh'))/h² + (2−2cos(qπh'))/h².
+        let g = 10;
+        let k = vec![1.0; g * g];
+        let a = assemble(g, &k);
+        let h = 1.0 / (g as f64 + 1.0);
+        let eig = sym_eig(&a.to_dense());
+        let mut expect: Vec<f64> = Vec::new();
+        for p in 1..=g {
+            for q in 1..=g {
+                let lp = 2.0 - 2.0 * (p as f64 * std::f64::consts::PI * h).cos();
+                let lq = 2.0 - 2.0 * (q as f64 * std::f64::consts::PI * h).cos();
+                expect.push((lp + lq) / (h * h));
+            }
+        }
+        expect.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for t in 0..g * g {
+            assert!(
+                (eig.values[t] - expect[t]).abs() / expect[t] < 1e-10,
+                "mode {t}: {} vs {}",
+                eig.values[t],
+                expect[t]
+            );
+        }
+    }
+
+    #[test]
+    fn smallest_eigenvalue_approximates_continuum() {
+        // λ₁ → 2π² ≈ 19.74 as the grid refines (K ≡ 1).
+        let g = 24;
+        let a = assemble(g, &vec![1.0; g * g]);
+        let eig = sym_eig(&a.to_dense());
+        let target = 2.0 * std::f64::consts::PI * std::f64::consts::PI;
+        assert!(
+            (eig.values[0] - target).abs() / target < 0.01,
+            "λ₁ {}",
+            eig.values[0]
+        );
+    }
+
+    #[test]
+    fn nnz_is_five_point() {
+        let g = 8;
+        let a = assemble(g, &vec![1.0; g * g]);
+        // 5 per interior node minus boundary-clipped couplings.
+        assert_eq!(a.nnz(), 5 * g * g - 4 * g);
+    }
+
+    #[test]
+    fn symmetric_and_positive_definite() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let g = 8;
+        let k = grf::sample_positive(g, Default::default(), K_LO, K_HI, &mut rng);
+        let a = assemble(g, &k);
+        assert!(a.asymmetry() < 1e-12);
+        let eig = sym_eig(&a.to_dense());
+        assert!(eig.values[0] > 0.0);
+    }
+
+    #[test]
+    fn larger_coefficient_scales_spectrum_up() {
+        let g = 6;
+        let a1 = assemble(g, &vec![1.0; g * g]);
+        let a2 = assemble(g, &vec![2.0; g * g]);
+        let e1 = sym_eig(&a1.to_dense());
+        let e2 = sym_eig(&a2.to_dense());
+        for t in 0..g * g {
+            assert!((e2.values[t] - 2.0 * e1.values[t]).abs() < 1e-8);
+        }
+    }
+}

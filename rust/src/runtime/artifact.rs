@@ -1,0 +1,209 @@
+//! Artifact registry: parses `artifacts/manifest.json`, compiles the HLO
+//! text modules on the PJRT CPU client, and hands out executables.
+
+use crate::util::json::{self, Value};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// What a compiled artifact computes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArtifactKind {
+    /// Degree-`m` Chebyshev filter: `(a, y0, target, c, e) → y_m`.
+    Filter,
+    /// Residual norms: `(a, v, lams) → rel_residuals`.
+    Residual,
+}
+
+/// Metadata of one artifact (one entry of `manifest.json`).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    /// Kind (filter / residual).
+    pub kind: ArtifactKind,
+    /// Stable name, e.g. `filter_n256_k16_m20`.
+    pub name: String,
+    /// File name within the artifact directory.
+    pub path: String,
+    /// Matrix dimension `n` the module was compiled for.
+    pub n: usize,
+    /// Block width `k` the module was compiled for.
+    pub k: usize,
+    /// Filter degree `m` (0 for residual artifacts).
+    pub m: usize,
+}
+
+/// The PJRT runtime: a CPU client plus compiled executables.
+pub struct XlaRuntime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    metas: Vec<ArtifactMeta>,
+    compiled: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl XlaRuntime {
+    /// Load a manifest and eagerly compile every artifact.
+    ///
+    /// Compilation happens once per process; each executable is then
+    /// reusable from the hot path with no Python anywhere.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {}", manifest_path.display()))?;
+        let metas = parse_manifest(&text)?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT client: {e}"))?;
+        let mut compiled = HashMap::new();
+        for meta in &metas {
+            let path = dir.join(&meta.path);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {}: {e}", meta.name))?;
+            compiled.insert(meta.name.clone(), exe);
+        }
+        Ok(Self {
+            client,
+            dir: dir.to_path_buf(),
+            metas,
+            compiled,
+        })
+    }
+
+    /// The artifact directory this runtime was loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Platform name of the PJRT client (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// All artifact metadata.
+    pub fn metas(&self) -> &[ArtifactMeta] {
+        &self.metas
+    }
+
+    /// Find the best filter artifact for a problem: exact `n` and degree
+    /// match, smallest compiled `k ≥ k_needed`.
+    pub fn find_filter(&self, n: usize, k_needed: usize, degree: usize) -> Option<&ArtifactMeta> {
+        self.metas
+            .iter()
+            .filter(|m| {
+                m.kind == ArtifactKind::Filter && m.n == n && m.m == degree && m.k >= k_needed
+            })
+            .min_by_key(|m| m.k)
+    }
+
+    /// Find a residual artifact for `(n, k)`.
+    pub fn find_residual(&self, n: usize, k: usize) -> Option<&ArtifactMeta> {
+        self.metas
+            .iter()
+            .find(|m| m.kind == ArtifactKind::Residual && m.n == n && m.k == k)
+    }
+
+    /// Execute an artifact by name with the given literals; returns the
+    /// first element of the output tuple.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<xla::Literal> {
+        let refs: Vec<&xla::Literal> = inputs.iter().collect();
+        self.execute_borrowed(name, &refs)
+    }
+
+    /// Execute with borrowed input literals (avoids copying a cached
+    /// dense-operator literal per call; used by the filter backend).
+    pub fn execute_borrowed(&self, name: &str, inputs: &[&xla::Literal]) -> Result<xla::Literal> {
+        let exe = self
+            .compiled
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let result = exe
+            .execute::<&xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching result of {name}: {e}"))?;
+        lit.to_tuple1().map_err(|e| anyhow!("untupling {name}: {e}"))
+    }
+}
+
+fn parse_manifest(text: &str) -> Result<Vec<ArtifactMeta>> {
+    let v = json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+    let arts = v
+        .get("artifacts")
+        .and_then(Value::as_arr)
+        .ok_or_else(|| anyhow!("manifest missing 'artifacts' array"))?;
+    let mut out = Vec::new();
+    for a in arts {
+        let kind = match a.get("kind").and_then(Value::as_str) {
+            Some("filter") => ArtifactKind::Filter,
+            Some("residual") => ArtifactKind::Residual,
+            other => bail!("unknown artifact kind {other:?}"),
+        };
+        let get_num = |key: &str| -> usize {
+            a.get(key).and_then(Value::as_usize).unwrap_or(0)
+        };
+        out.push(ArtifactMeta {
+            kind,
+            name: a
+                .get("name")
+                .and_then(Value::as_str)
+                .ok_or_else(|| anyhow!("artifact missing name"))?
+                .to_string(),
+            path: a
+                .get("path")
+                .and_then(Value::as_str)
+                .ok_or_else(|| anyhow!("artifact missing path"))?
+                .to_string(),
+            n: get_num("n"),
+            k: get_num("k"),
+            m: get_num("m"),
+        });
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_entries() {
+        let text = r#"{"version":1,"artifacts":[
+            {"kind":"filter","name":"filter_n16_k3_m4","path":"f.hlo.txt","n":16,"k":3,"m":4},
+            {"kind":"residual","name":"residual_n16_k3","path":"r.hlo.txt","n":16,"k":3}
+        ]}"#;
+        let metas = parse_manifest(text).unwrap();
+        assert_eq!(metas.len(), 2);
+        assert_eq!(metas[0].kind, ArtifactKind::Filter);
+        assert_eq!(metas[0].m, 4);
+        assert_eq!(metas[1].kind, ArtifactKind::Residual);
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(parse_manifest("{}").is_err());
+        assert!(parse_manifest(r#"{"artifacts":[{"kind":"nope"}]}"#).is_err());
+        assert!(
+            parse_manifest(r#"{"artifacts":[{"kind":"filter","path":"x"}]}"#).is_err(),
+            "missing name must fail"
+        );
+    }
+
+    #[test]
+    fn find_filter_picks_smallest_sufficient_k() {
+        let text = r#"{"artifacts":[
+            {"kind":"filter","name":"a","path":"a","n":16,"k":8,"m":20},
+            {"kind":"filter","name":"b","path":"b","n":16,"k":4,"m":20},
+            {"kind":"filter","name":"c","path":"c","n":32,"k":8,"m":20}
+        ]}"#;
+        let metas = parse_manifest(text).unwrap();
+        // Emulate find_filter's logic without a PJRT client.
+        let pick = metas
+            .iter()
+            .filter(|m| m.kind == ArtifactKind::Filter && m.n == 16 && m.m == 20 && m.k >= 3)
+            .min_by_key(|m| m.k)
+            .unwrap();
+        assert_eq!(pick.name, "b");
+    }
+}

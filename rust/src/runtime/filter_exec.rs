@@ -1,0 +1,128 @@
+//! The XLA filter backend: runs the Chebyshev filter through the
+//! AOT-compiled JAX/Pallas executable instead of the native CSR kernel.
+//!
+//! This is the *composition* path that proves L1 (Pallas kernel) → L2
+//! (JAX filter graph) → L3 (rust coordinator) end to end; the native
+//! sparse backend remains the performance path above the compiled shape
+//! table (DESIGN.md). Numerics are identical to the native backend (same
+//! recurrence, same f64), which the integration tests assert.
+
+use super::artifact::XlaRuntime;
+use crate::eig::chebyshev::{chebyshev_filter, FilterBackend, FilterParams};
+use crate::linalg::{flops, Mat};
+use crate::sparse::CsrMatrix;
+use std::rc::Rc;
+
+/// Filter backend executing on the PJRT CPU client.
+///
+/// Falls back to the native kernel when no compiled artifact matches the
+/// requested `(n, k, degree)` — the fallback count is exposed so callers
+/// can verify the XLA path actually ran.
+pub struct XlaFilter {
+    runtime: Rc<XlaRuntime>,
+    /// Cache: the operator currently staged as a dense literal.
+    cached: Option<(CsrMatrix, xla::Literal)>,
+    /// Number of filter calls served by the XLA executable.
+    pub xla_calls: usize,
+    /// Number of calls that fell back to the native kernel.
+    pub native_fallbacks: usize,
+}
+
+impl XlaFilter {
+    /// New backend over a loaded runtime.
+    pub fn new(runtime: Rc<XlaRuntime>) -> Self {
+        Self {
+            runtime,
+            cached: None,
+            xla_calls: 0,
+            native_fallbacks: 0,
+        }
+    }
+
+}
+
+impl FilterBackend for XlaFilter {
+    fn filter(&mut self, a: &CsrMatrix, y: &Mat, params: &FilterParams) -> Mat {
+        let p = params.sanitized();
+        let (n, k) = (y.rows(), y.cols());
+        let Some(meta) = self.runtime.find_filter(n, k, p.degree) else {
+            self.native_fallbacks += 1;
+            return chebyshev_filter(a, y, &p);
+        };
+        let k_comp = meta.k;
+        let name = meta.name.clone();
+
+        // Stage the dense operator literal (cached per matrix).
+        if !matches!(&self.cached, Some((m, _)) if m == a) {
+            let dense = a.to_dense();
+            let lit = xla::Literal::vec1(dense.data())
+                .reshape(&[n as i64, n as i64])
+                .expect("reshape dense A");
+            self.cached = Some((a.clone(), lit));
+        }
+
+        // Zero-pad Y to the compiled block width (filter is columnwise
+        // linear, so padding columns are exactly zero on output).
+        let mut y_pad = Mat::zeros(n, k_comp);
+        for i in 0..n {
+            y_pad.row_mut(i)[..k].copy_from_slice(y.row(i));
+        }
+        let y_lit = xla::Literal::vec1(y_pad.data())
+            .reshape(&[n as i64, k_comp as i64])
+            .expect("reshape Y");
+
+        let c = p.center();
+        let e = p.half_width();
+        let (_, a_lit) = self.cached.as_ref().unwrap();
+        let target_lit = xla::Literal::scalar(p.target);
+        let c_lit = xla::Literal::scalar(c);
+        let e_lit = xla::Literal::scalar(e);
+        let arg_refs: Vec<&xla::Literal> = vec![a_lit, &y_lit, &target_lit, &c_lit, &e_lit];
+        let out = self
+            .runtime
+            .execute_borrowed(&name, &arg_refs)
+            .expect("XLA filter execution failed");
+        let data = out.to_vec::<f64>().expect("filter output to_vec");
+        assert_eq!(data.len(), n * k_comp);
+        // Count the filter's flops as if done natively (machine-
+        // independent accounting; the XLA module does the same math).
+        flops::add(crate::eig::chebyshev::filter_flop_cost(a, k, p.degree));
+        self.xla_calls += 1;
+        let full = Mat::from_vec(n, k_comp, data);
+        if k_comp == k {
+            full
+        } else {
+            full.cols_range(0, k)
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "xla-pjrt"
+    }
+
+    fn counters(&self) -> (usize, usize) {
+        (self.xla_calls, self.native_fallbacks)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // The end-to-end XLA tests live in rust/tests/integration_runtime.rs
+    // (they need built artifacts). Here: only the padding logic.
+    use crate::linalg::Mat;
+
+    #[test]
+    fn zero_padding_preserves_leading_columns() {
+        let y = Mat::from_fn(4, 2, |i, j| (i * 2 + j) as f64);
+        let mut y_pad = Mat::zeros(4, 5);
+        for i in 0..4 {
+            y_pad.row_mut(i)[..2].copy_from_slice(y.row(i));
+        }
+        assert_eq!(y_pad.cols_range(0, 2), y);
+        for i in 0..4 {
+            for j in 2..5 {
+                assert_eq!(y_pad[(i, j)], 0.0);
+            }
+        }
+    }
+}

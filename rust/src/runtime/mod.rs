@@ -1,0 +1,14 @@
+//! PJRT runtime bridge: loads the AOT-compiled JAX/Pallas artifacts
+//! (HLO text, see `python/compile/aot.py`) and exposes them to the L3
+//! hot path. Python never runs here — the artifacts are self-contained
+//! XLA programs compiled once per process by the PJRT CPU client.
+//!
+//! Interchange is HLO *text*, not serialized protos: jax ≥ 0.5 emits
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifact;
+pub mod filter_exec;
+
+pub use artifact::{ArtifactKind, ArtifactMeta, XlaRuntime};
+pub use filter_exec::XlaFilter;

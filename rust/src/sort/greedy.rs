@@ -1,0 +1,125 @@
+//! Greedy nearest-neighbour ordering on flat keys — the expensive
+//! baseline sort of SKR (Wang et al. 2024) and the second stage of the
+//! truncated-FFT sort (Algorithm 2, lines 5–9).
+
+use crate::operators::{Problem, SortKey};
+
+/// Flatten a problem's raw parameter data into one vector (the
+/// uncompressed Frobenius key used by the plain greedy sort).
+pub fn raw_key(p: &Problem) -> Vec<f64> {
+    match &p.sort_key {
+        SortKey::Fields(fields) => {
+            let mut out = Vec::new();
+            for f in fields {
+                out.extend_from_slice(&f.data);
+            }
+            out
+        }
+        SortKey::Coeffs(c) => c.clone(),
+    }
+}
+
+/// Greedy chain: start at the first problem, repeatedly append the
+/// nearest unvisited problem (squared Euclidean distance on keys).
+/// `O(N²·d)` where `d` is the key length.
+pub fn greedy_order(keys: &[Vec<f64>]) -> Vec<usize> {
+    let n = keys.len();
+    if n == 0 {
+        return vec![];
+    }
+    let d2 = |a: &[f64], b: &[f64]| -> f64 {
+        debug_assert_eq!(a.len(), b.len());
+        let mut s = 0.0;
+        for i in 0..a.len() {
+            let t = a[i] - b[i];
+            s += t * t;
+        }
+        s
+    };
+    let mut visited = vec![false; n];
+    let mut order = Vec::with_capacity(n);
+    let mut cur = 0usize;
+    visited[0] = true;
+    order.push(0);
+    for _ in 1..n {
+        let mut best = usize::MAX;
+        let mut best_d = f64::INFINITY;
+        for (cand, key) in keys.iter().enumerate() {
+            if !visited[cand] {
+                let dd = d2(&keys[cur], key);
+                if dd < best_d {
+                    best_d = dd;
+                    best = cand;
+                }
+            }
+        }
+        visited[best] = true;
+        order.push(best);
+        cur = best;
+    }
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn orders_scalars_monotonically() {
+        // 1-D keys starting from keys[0]: greedy walks to the nearest
+        // each step, which for a line of points yields a sorted walk.
+        let keys: Vec<Vec<f64>> = vec![
+            vec![5.0],
+            vec![1.0],
+            vec![9.0],
+            vec![4.0],
+            vec![6.0],
+        ];
+        let order = greedy_order(&keys);
+        assert_eq!(order[0], 0);
+        // From 5: nearest is 4, then 6; from 6 the nearest remaining is 9
+        // (distance 3) before 1 (distance 5).
+        assert_eq!(order, vec![0, 3, 4, 2, 1]);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        assert!(greedy_order(&[]).is_empty());
+        assert_eq!(greedy_order(&[vec![1.0]]), vec![0]);
+    }
+
+    #[test]
+    fn permutation_property() {
+        let keys: Vec<Vec<f64>> = (0..20)
+            .map(|i| vec![(i * 7 % 13) as f64, (i * 3 % 5) as f64])
+            .collect();
+        let mut order = greedy_order(&keys);
+        order.sort_unstable();
+        assert_eq!(order, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn chain_cost_not_worse_than_identity_on_clusters() {
+        // Two tight clusters: greedy must visit one cluster fully before
+        // jumping to the other (identity order alternates → higher cost).
+        let mut keys = Vec::new();
+        for i in 0..4 {
+            keys.push(vec![i as f64 * 0.01]); // cluster A near 0
+            keys.push(vec![100.0 + i as f64 * 0.01]); // cluster B near 100
+        }
+        let order = greedy_order(&keys);
+        let cost = |ord: &[usize]| -> f64 {
+            ord.windows(2)
+                .map(|w| (keys[w[0]][0] - keys[w[1]][0]).abs())
+                .sum()
+        };
+        let identity: Vec<usize> = (0..keys.len()).collect();
+        assert!(cost(&order) < cost(&identity) / 3.0);
+        // Exactly one long jump between clusters.
+        let jumps = order
+            .windows(2)
+            .filter(|w| (keys[w[0]][0] - keys[w[1]][0]).abs() > 50.0)
+            .count();
+        assert_eq!(jumps, 1);
+    }
+}

@@ -1,0 +1,120 @@
+//! Subspace-similarity metrics — the paper's "one-sided distance"
+//! (Table 14): principal angles between the leading invariant subspaces
+//! of two problems. Used to *evaluate* sort quality, not to sort (it
+//! needs the eigenvectors, which is what we are trying to avoid
+//! computing).
+
+use crate::linalg::symeig::sym_eig;
+use crate::linalg::Mat;
+
+/// One-sided subspace distance between two orthonormal bases `U, V`
+/// (n × k): the RMS sine of the principal angles,
+///
+/// ```text
+/// d(U, V) = sqrt(1 − mean_i σ_i²),   σ_i = singular values of UᵀV.
+/// ```
+///
+/// 0 = identical subspaces, 1 = orthogonal. Smaller means more similar
+/// (the convention of paper Table 14).
+pub fn one_sided_distance(u: &Mat, v: &Mat) -> f64 {
+    assert_eq!(u.rows(), v.rows());
+    assert_eq!(u.cols(), v.cols(), "subspace dimensions must match");
+    let k = u.cols();
+    if k == 0 {
+        return 0.0;
+    }
+    // σ_i² are the eigenvalues of (UᵀV)ᵀ(UᵀV).
+    let m = u.t_matmul(v);
+    let mtm = m.t_matmul(&m);
+    let eig = sym_eig(&mtm);
+    let mean_sq: f64 = eig.values.iter().map(|s| s.clamp(0.0, 1.0)).sum::<f64>() / k as f64;
+    (1.0 - mean_sq).max(0.0).sqrt()
+}
+
+/// Average one-sided distance between *adjacent* problems of a solve
+/// order, measured on their `dim`-dimensional leading invariant
+/// subspaces (computed densely — evaluation only, small problems).
+pub fn adjacent_subspace_distance(
+    matrices: &[crate::sparse::CsrMatrix],
+    order: &[usize],
+    dim: usize,
+) -> f64 {
+    assert!(order.len() >= 2);
+    let bases: Vec<Mat> = order
+        .iter()
+        .map(|&i| {
+            let eig = sym_eig(&matrices[i].to_dense());
+            eig.vectors.cols_range(0, dim.min(eig.vectors.cols()))
+        })
+        .collect();
+    let mut total = 0.0;
+    for w in bases.windows(2) {
+        total += one_sided_distance(&w[0], &w[1]);
+    }
+    total / (order.len() - 1) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::qr::householder_qr;
+    use crate::rng::Xoshiro256pp;
+
+    #[test]
+    fn identical_subspace_has_zero_distance() {
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let q = householder_qr(&Mat::randn(30, 5, &mut rng));
+        assert!(one_sided_distance(&q, &q) < 1e-7);
+    }
+
+    #[test]
+    fn rotation_within_subspace_is_free() {
+        // Same span, different basis: distance 0.
+        let mut rng = Xoshiro256pp::seed_from_u64(2);
+        let q = householder_qr(&Mat::randn(30, 4, &mut rng));
+        let rot = householder_qr(&Mat::randn(4, 4, &mut rng));
+        let q2 = q.matmul(&rot);
+        assert!(one_sided_distance(&q, &q2) < 1e-7);
+    }
+
+    #[test]
+    fn orthogonal_subspaces_have_distance_one() {
+        let n = 20;
+        let u = Mat::from_fn(n, 3, |i, j| if i == j { 1.0 } else { 0.0 });
+        let v = Mat::from_fn(n, 3, |i, j| if i == j + 10 { 1.0 } else { 0.0 });
+        assert!((one_sided_distance(&u, &v) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn distance_is_symmetric_and_bounded() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        let u = householder_qr(&Mat::randn(25, 4, &mut rng));
+        let v = householder_qr(&Mat::randn(25, 4, &mut rng));
+        let duv = one_sided_distance(&u, &v);
+        let dvu = one_sided_distance(&v, &u);
+        assert!((duv - dvu).abs() < 1e-10);
+        assert!((0.0..=1.0).contains(&duv));
+    }
+
+    #[test]
+    fn similar_operators_have_small_adjacent_distance() {
+        use crate::operators::{helmholtz, GenOptions};
+        let opts = GenOptions {
+            grid: 8,
+            ..Default::default()
+        };
+        let chain = helmholtz::generate_perturbed_chain(opts, 3, 0.02, 1);
+        let mats: Vec<_> = chain.into_iter().map(|p| p.matrix).collect();
+        let d_close = adjacent_subspace_distance(&mats, &[0, 1, 2], 5);
+        // Independent problems for contrast.
+        let far = crate::operators::generate(
+            crate::operators::OperatorKind::Helmholtz,
+            opts,
+            3,
+            99,
+        );
+        let far_mats: Vec<_> = far.into_iter().map(|p| p.matrix).collect();
+        let d_far = adjacent_subspace_distance(&far_mats, &[0, 1, 2], 5);
+        assert!(d_close < d_far, "close {d_close} far {d_far}");
+    }
+}

@@ -1,0 +1,170 @@
+//! Problem-sequence sorting (paper §3.1, Algorithm 2).
+//!
+//! The goal: order the N eigenvalue problems so that adjacent problems in
+//! the solve sequence have similar spectra, letting the warm-started
+//! ChFSI ([`crate::eig::scsf`]) reuse invariant subspaces. Similarity is
+//! measured by the Frobenius distance between *parameter* fields — and
+//! made cheap by comparing only their truncated FFT spectra
+//! (`p₀ ≪ p` low frequencies, paper Appendix F).
+
+pub mod fft_sort;
+pub mod greedy;
+pub mod metrics;
+
+use crate::operators::Problem;
+use crate::util::timer::timed;
+
+/// Sorting strategy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SortMethod {
+    /// Keep the generation order (the paper's "w/o sort" ablation).
+    None,
+    /// Full greedy Frobenius sort on the raw parameter fields
+    /// (SKR-style; the expensive baseline of Table 4).
+    Greedy,
+    /// Truncated-FFT sort (Algorithm 2) with low-frequency threshold
+    /// `p0` (paper default 20).
+    TruncatedFft {
+        /// Low-frequency truncation threshold `p₀`.
+        p0: usize,
+    },
+}
+
+impl SortMethod {
+    /// Human-readable label for tables.
+    pub fn label(&self) -> String {
+        match self {
+            SortMethod::None => "w/o sort".to_string(),
+            SortMethod::Greedy => "Greedy".to_string(),
+            SortMethod::TruncatedFft { p0 } => format!("TruncFFT(p0={p0})"),
+        }
+    }
+}
+
+/// Outcome of sorting: the visit order plus the cost split that Table 4
+/// reports (FFT compression time vs greedy-scan time).
+#[derive(Debug, Clone)]
+pub struct SortOutcome {
+    /// Permutation: `order[t]` is the index (into the input slice) of the
+    /// problem to solve at position `t`.
+    pub order: Vec<usize>,
+    /// Seconds spent on FFT compression (0 for the plain greedy sort).
+    pub fft_secs: f64,
+    /// Seconds spent on the greedy nearest-neighbour scan.
+    pub greedy_secs: f64,
+}
+
+impl SortOutcome {
+    /// Total sorting seconds.
+    pub fn total_secs(&self) -> f64 {
+        self.fft_secs + self.greedy_secs
+    }
+}
+
+/// Sort a problem set with the chosen method.
+pub fn sort_problems(problems: &[Problem], method: SortMethod) -> SortOutcome {
+    match method {
+        SortMethod::None => SortOutcome {
+            order: (0..problems.len()).collect(),
+            fft_secs: 0.0,
+            greedy_secs: 0.0,
+        },
+        SortMethod::Greedy => {
+            let keys: Vec<Vec<f64>> = problems.iter().map(greedy::raw_key).collect();
+            let (order, secs) = timed(|| greedy::greedy_order(&keys));
+            SortOutcome {
+                order,
+                fft_secs: 0.0,
+                greedy_secs: secs,
+            }
+        }
+        SortMethod::TruncatedFft { p0 } => {
+            let (keys, fft_secs) =
+                timed(|| problems.iter().map(|p| fft_sort::compressed_key(p, p0)).collect::<Vec<_>>());
+            let (order, greedy_secs) = timed(|| greedy::greedy_order(&keys));
+            SortOutcome {
+                order,
+                fft_secs,
+                greedy_secs,
+            }
+        }
+    }
+}
+
+/// Fraction of positions two orders agree on — the paper's "over 98 %
+/// identical sequences" comparison (Table 5).
+pub fn order_agreement(a: &[usize], b: &[usize]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 1.0;
+    }
+    let same = a.iter().zip(b).filter(|(x, y)| x == y).count();
+    same as f64 / a.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operators::{self, GenOptions, OperatorKind};
+
+    fn problems(n: usize) -> Vec<Problem> {
+        operators::generate(
+            OperatorKind::Helmholtz,
+            GenOptions {
+                grid: 12,
+                ..Default::default()
+            },
+            n,
+            9,
+        )
+    }
+
+    fn adjacent_cost(problems: &[Problem], order: &[usize]) -> f64 {
+        order
+            .windows(2)
+            .map(|w| problems[w[0]].sort_key.dist2(&problems[w[1]].sort_key).sqrt())
+            .sum()
+    }
+
+    #[test]
+    fn all_methods_return_permutations() {
+        let ps = problems(10);
+        for m in [
+            SortMethod::None,
+            SortMethod::Greedy,
+            SortMethod::TruncatedFft { p0: 6 },
+        ] {
+            let out = sort_problems(&ps, m);
+            let mut o = out.order.clone();
+            o.sort_unstable();
+            assert_eq!(o, (0..10).collect::<Vec<_>>(), "{m:?}");
+        }
+    }
+
+    #[test]
+    fn sorting_reduces_adjacent_distance() {
+        let ps = problems(16);
+        let unsorted = adjacent_cost(&ps, &(0..16).collect::<Vec<_>>());
+        let greedy = sort_problems(&ps, SortMethod::Greedy);
+        let fft = sort_problems(&ps, SortMethod::TruncatedFft { p0: 6 });
+        assert!(adjacent_cost(&ps, &greedy.order) <= unsorted);
+        assert!(adjacent_cost(&ps, &fft.order) <= unsorted * 1.05);
+    }
+
+    #[test]
+    fn fft_sort_approximates_greedy_sort() {
+        // Table 5: the cheap sort must produce (near-)identical behaviour.
+        let ps = problems(12);
+        let greedy = sort_problems(&ps, SortMethod::Greedy);
+        let fft = sort_problems(&ps, SortMethod::TruncatedFft { p0: 10 });
+        let cg = adjacent_cost(&ps, &greedy.order);
+        let cf = adjacent_cost(&ps, &fft.order);
+        assert!(cf <= cg * 1.10, "greedy {cg} vs fft {cf}");
+    }
+
+    #[test]
+    fn order_agreement_bounds() {
+        assert_eq!(order_agreement(&[0, 1, 2], &[0, 1, 2]), 1.0);
+        assert_eq!(order_agreement(&[0, 1, 2], &[2, 1, 0]), 1.0 / 3.0);
+    }
+}

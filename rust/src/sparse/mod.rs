@@ -1,0 +1,11 @@
+//! Sparse matrices in CSR form.
+//!
+//! The discretized PDE operators of the paper are 2-D finite-difference /
+//! finite-element stencils: 5–13 non-zeros per row. The Chebyshev filter —
+//! more than 70 % of SCSF's flops (paper Table 11) — is a chain of sparse
+//! matrix × tall-dense-block products, so [`CsrMatrix::spmm`] is the
+//! hottest kernel in the library (see EXPERIMENTS.md §Perf).
+
+pub mod csr;
+
+pub use csr::{CooBuilder, CsrMatrix};

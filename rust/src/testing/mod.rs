@@ -1,0 +1,81 @@
+//! A minimal property-testing harness (the vendored crate set has no
+//! `proptest`). Runs a property over many seeded random cases; on
+//! failure it reports the failing case index and seed so the case can be
+//! reproduced exactly.
+//!
+//! ```no_run
+//! // (no_run: doctest binaries miss the libstdc++ rpath of the xla
+//! //  link environment; the same code runs in this module's unit tests)
+//! use scsf::testing::forall;
+//! use scsf::rng::Xoshiro256pp;
+//!
+//! forall(64, 42, |rng: &mut Xoshiro256pp, case| {
+//!     let x = rng.uniform(0.0, 10.0);
+//!     assert!(x + 1.0 > x, "case {case}");
+//! });
+//! ```
+
+use crate::rng::Xoshiro256pp;
+
+/// Run `prop` over `cases` independently seeded RNG streams derived from
+/// `seed`. Panics (with case/seed info) if any case panics.
+pub fn forall(cases: usize, seed: u64, mut prop: impl FnMut(&mut Xoshiro256pp, usize)) {
+    let mut master = Xoshiro256pp::seed_from_u64(seed);
+    for case in 0..cases {
+        let child_seed = master.next_u64();
+        let mut rng = Xoshiro256pp::seed_from_u64(child_seed);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, case)
+        }));
+        if let Err(payload) = outcome {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property failed at case {case} (reproduce with seed {child_seed:#x}): {msg}"
+            );
+        }
+    }
+}
+
+/// Draw a random size in `[lo, hi]` — convenience for shape sweeps.
+pub fn size_in(rng: &mut Xoshiro256pp, lo: usize, hi: usize) -> usize {
+    lo + rng.next_below(hi - lo + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_when_property_holds() {
+        forall(32, 1, |rng, _| {
+            let a = rng.next_f64();
+            assert!((0.0..1.0).contains(&a));
+        });
+    }
+
+    #[test]
+    fn reports_failing_case() {
+        let result = std::panic::catch_unwind(|| {
+            forall(32, 2, |rng, _| {
+                assert!(rng.next_f64() < 0.5, "too big");
+            });
+        });
+        let err = result.expect_err("must fail");
+        let msg = err.downcast_ref::<String>().unwrap();
+        assert!(msg.contains("property failed at case"), "{msg}");
+        assert!(msg.contains("seed"), "{msg}");
+    }
+
+    #[test]
+    fn size_in_respects_bounds() {
+        let mut rng = Xoshiro256pp::seed_from_u64(3);
+        for _ in 0..100 {
+            let s = size_in(&mut rng, 3, 7);
+            assert!((3..=7).contains(&s));
+        }
+    }
+}

@@ -1,0 +1,51 @@
+//! Small shared utilities: minimal JSON, wall-clock timing, table printing.
+
+pub mod json;
+pub mod table;
+pub mod timer;
+
+/// Human-readable duration (seconds with ms precision).
+pub fn fmt_secs(secs: f64) -> String {
+    if secs < 1e-3 {
+        format!("{:.1}us", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.2}ms", secs * 1e3)
+    } else {
+        format!("{secs:.3}s")
+    }
+}
+
+/// Format a float the way the paper's tables do: 4 significant digits.
+pub fn fmt_sig4(x: f64) -> String {
+    if x == 0.0 {
+        return "0".to_string();
+    }
+    let mag = x.abs().log10().floor() as i32;
+    let dec = (3 - mag).max(0) as usize;
+    let s = format!("{x:.dec$}");
+    if s.contains('.') {
+        s.trim_end_matches('0').trim_end_matches('.').to_string()
+    } else {
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert!(fmt_secs(0.0000005).ends_with("us"));
+        assert!(fmt_secs(0.005).ends_with("ms"));
+        assert!(fmt_secs(2.0).ends_with('s'));
+    }
+
+    #[test]
+    fn sig4_matches_paper_style() {
+        assert_eq!(fmt_sig4(151.7), "151.7");
+        assert_eq!(fmt_sig4(31.31), "31.31");
+        assert_eq!(fmt_sig4(0.114), "0.114");
+        assert_eq!(fmt_sig4(0.0), "0");
+    }
+}

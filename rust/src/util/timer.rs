@@ -1,0 +1,80 @@
+//! Wall-clock timing helpers used by solvers, the pipeline, and benches.
+
+use std::time::Instant;
+
+/// A simple resumable stopwatch.
+#[derive(Debug, Clone)]
+pub struct Stopwatch {
+    acc: f64,
+    started: Option<Instant>,
+}
+
+impl Default for Stopwatch {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Stopwatch {
+    /// New, stopped, zero-accumulated stopwatch.
+    pub fn new() -> Self {
+        Self {
+            acc: 0.0,
+            started: None,
+        }
+    }
+
+    /// Start (or restart) measuring.
+    pub fn start(&mut self) {
+        self.started = Some(Instant::now());
+    }
+
+    /// Stop measuring and accumulate the elapsed span.
+    pub fn stop(&mut self) {
+        if let Some(t0) = self.started.take() {
+            self.acc += t0.elapsed().as_secs_f64();
+        }
+    }
+
+    /// Total accumulated seconds (includes the live span if running).
+    pub fn secs(&self) -> f64 {
+        self.acc
+            + self
+                .started
+                .map(|t0| t0.elapsed().as_secs_f64())
+                .unwrap_or(0.0)
+    }
+}
+
+/// Time a closure, returning (result, seconds).
+pub fn timed<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stopwatch_accumulates() {
+        let mut sw = Stopwatch::new();
+        sw.start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        sw.stop();
+        let first = sw.secs();
+        assert!(first >= 0.004);
+        sw.start();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        sw.stop();
+        assert!(sw.secs() > first);
+    }
+
+    #[test]
+    fn timed_returns_value_and_duration() {
+        let (v, secs) = timed(|| 2 + 2);
+        assert_eq!(v, 4);
+        assert!(secs >= 0.0);
+    }
+}

@@ -1,0 +1,159 @@
+//! Pipeline integration: multi-shard runs, dataset round-trips, config
+//! files, and the CLI-equivalent paths.
+
+use scsf::coordinator::config::GenConfig;
+use scsf::coordinator::dataset::DatasetReader;
+use scsf::coordinator::pipeline::{generate_dataset, generate_problems};
+use scsf::linalg::symeig::sym_eig;
+use scsf::operators::OperatorKind;
+use scsf::sort::SortMethod;
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("scsf_it_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+#[test]
+fn every_family_flows_through_the_pipeline() {
+    for (kind, tol) in [
+        (OperatorKind::Poisson, 1e-10),
+        (OperatorKind::Elliptic, 1e-9),
+        (OperatorKind::Helmholtz, 1e-8),
+        (OperatorKind::Vibration, 1e-8),
+    ] {
+        let dir = tmpdir(kind.name());
+        let cfg = GenConfig {
+            kind,
+            grid: 8,
+            n_problems: 4,
+            n_eigs: 3,
+            tol,
+            seed: 21,
+            shards: 2,
+            sort: SortMethod::TruncatedFft { p0: 6 },
+            ..Default::default()
+        };
+        let report = generate_dataset(&cfg, &dir).expect(kind.name());
+        assert!(report.all_converged, "{kind:?}: {report:?}");
+        assert_eq!(report.n_problems, 4);
+
+        let problems = generate_problems(&cfg);
+        let mut reader = DatasetReader::open(&dir).unwrap();
+        for p in &problems {
+            let rec = reader.read(p.id).unwrap();
+            let want = sym_eig(&p.matrix.to_dense());
+            for (got, w) in rec.values.iter().zip(&want.values[..3]) {
+                assert!(
+                    (got - w).abs() / w.abs().max(1.0) < 1e-6,
+                    "{kind:?} id {}: {got} vs {w}",
+                    p.id
+                );
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+#[test]
+fn shard_count_does_not_change_results() {
+    let mk = |shards: usize, tag: &str| {
+        let dir = tmpdir(tag);
+        let cfg = GenConfig {
+            kind: OperatorKind::Helmholtz,
+            grid: 8,
+            n_problems: 9,
+            n_eigs: 4,
+            tol: 1e-8,
+            seed: 5,
+            shards,
+            ..Default::default()
+        };
+        generate_dataset(&cfg, &dir).unwrap();
+        dir
+    };
+    let d1 = mk(1, "sh1");
+    let d4 = mk(4, "sh4");
+    let mut r1 = DatasetReader::open(&d1).unwrap();
+    let mut r4 = DatasetReader::open(&d4).unwrap();
+    for id in 0..9 {
+        let a = r1.read(id).unwrap();
+        let b = r4.read(id).unwrap();
+        for (x, y) in a.values.iter().zip(&b.values) {
+            assert!((x - y).abs() / x.abs().max(1.0) < 1e-7, "id {id}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&d1);
+    let _ = std::fs::remove_dir_all(&d4);
+}
+
+#[test]
+fn config_file_roundtrip_through_pipeline() {
+    let dir = tmpdir("cfg");
+    let cfg = GenConfig {
+        kind: OperatorKind::Poisson,
+        grid: 8,
+        n_problems: 3,
+        n_eigs: 3,
+        tol: 1e-9,
+        seed: 33,
+        ..Default::default()
+    };
+    // Serialize → parse → run, as the CLI --config path does.
+    let parsed = GenConfig::from_json(&cfg.to_json()).unwrap();
+    assert_eq!(cfg, parsed);
+    let report = generate_dataset(&parsed, &dir).unwrap();
+    assert!(report.all_converged);
+
+    // The manifest embeds the config; re-parse it from disk.
+    let manifest = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    let v = scsf::util::json::parse(&manifest).unwrap();
+    let embedded = v.get("config").unwrap();
+    assert_eq!(
+        embedded.get("kind").and_then(scsf::util::json::Value::as_str),
+        Some("poisson")
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn backpressure_with_tiny_channels() {
+    // capacity-1 channels force the producer to stall behind the solver;
+    // the run must still complete and lose nothing.
+    let dir = tmpdir("bp");
+    let cfg = GenConfig {
+        kind: OperatorKind::Helmholtz,
+        grid: 8,
+        n_problems: 7,
+        n_eigs: 3,
+        tol: 1e-8,
+        seed: 8,
+        shards: 3,
+        channel_capacity: 1,
+        ..Default::default()
+    };
+    let report = generate_dataset(&cfg, &dir).unwrap();
+    assert_eq!(report.n_problems, 7);
+    let reader = DatasetReader::open(&dir).unwrap();
+    assert_eq!(reader.index().len(), 7);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn report_stage_times_are_consistent() {
+    let dir = tmpdir("times");
+    let cfg = GenConfig {
+        grid: 8,
+        n_problems: 4,
+        n_eigs: 3,
+        seed: 2,
+        ..Default::default()
+    };
+    let report = generate_dataset(&cfg, &dir).unwrap();
+    assert!(report.total_secs > 0.0);
+    assert!(report.avg_solve_secs > 0.0);
+    assert!(report.solve_secs >= report.avg_solve_secs);
+    assert!(report.max_residual <= cfg.tol * 10.0);
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,0 +1,187 @@
+//! PJRT runtime integration: the AOT JAX/Pallas artifacts must load,
+//! compile, execute, and agree with the native backend to f64 accuracy.
+//!
+//! These tests need built artifacts (`make artifacts`). When the
+//! artifact directory is absent (e.g. a bare `cargo test` before the
+//! python step) they skip with a notice instead of failing — the
+//! `make test` flow always builds artifacts first.
+
+use scsf::eig::chebyshev::{FilterBackend, FilterParams, NativeFilter};
+use scsf::eig::chfsi::{self, ChfsiOptions};
+use scsf::eig::EigOptions;
+use scsf::linalg::Mat;
+use scsf::operators::{self, GenOptions, OperatorKind};
+use scsf::rng::Xoshiro256pp;
+use scsf::runtime::{XlaFilter, XlaRuntime};
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    // cargo test runs with CWD = crate root.
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir.to_path_buf())
+    } else {
+        eprintln!("SKIP: artifacts/manifest.json missing (run `make artifacts`)");
+        None
+    }
+}
+
+fn runtime() -> Option<Rc<XlaRuntime>> {
+    artifacts_dir().map(|d| Rc::new(XlaRuntime::load(&d).expect("load artifacts")))
+}
+
+fn helmholtz_256() -> operators::Problem {
+    operators::generate(
+        OperatorKind::Helmholtz,
+        GenOptions {
+            grid: 16, // n = 256 matches the compiled variant
+            ..Default::default()
+        },
+        1,
+        1,
+    )
+    .remove(0)
+}
+
+#[test]
+fn manifest_loads_and_compiles() {
+    let Some(rt) = runtime() else { return };
+    assert!(!rt.metas().is_empty());
+    assert!(rt.find_filter(256, 8, 20).is_some(), "n=256 filter variant");
+    assert!(rt.find_filter(999, 8, 20).is_none());
+}
+
+#[test]
+fn xla_filter_matches_native_filter() {
+    let Some(rt) = runtime() else { return };
+    let p = helmholtz_256();
+    let a = &p.matrix;
+    let mut rng = Xoshiro256pp::seed_from_u64(3);
+    let y = Mat::randn(a.rows(), 8, &mut rng);
+    let params = FilterParams {
+        degree: 20,
+        lower: 100.0,
+        upper: a.norm1() * 1.1,
+        target: 10.0,
+    };
+    let mut native = NativeFilter;
+    let mut xla = XlaFilter::new(rt);
+    let out_n = native.filter(a, &y, &params);
+    let out_x = xla.filter(a, &y, &params);
+    assert_eq!(xla.xla_calls, 1, "XLA path must have run");
+    assert_eq!(xla.native_fallbacks, 0);
+    let rms = out_n.fro_norm() / (out_n.data().len() as f64).sqrt();
+    assert!(
+        out_n.max_abs_diff(&out_x) < 1e-9 * rms.max(1.0),
+        "diff {} vs rms {rms}",
+        out_n.max_abs_diff(&out_x)
+    );
+}
+
+#[test]
+fn xla_backend_solves_eigenproblem() {
+    let Some(rt) = runtime() else { return };
+    let p = helmholtz_256();
+    let opts = ChfsiOptions::from_eig(&EigOptions {
+        n_eigs: 10,
+        tol: 1e-8,
+        max_iters: 300,
+        seed: 0,
+    });
+    let mut xla = XlaFilter::new(rt);
+    let r_xla = chfsi::solve_with_backend(&p.matrix, &opts, None, &mut xla);
+    let r_nat = chfsi::solve(&p.matrix, &opts, None);
+    assert!(r_xla.stats.converged);
+    assert!(xla.xla_calls > 0);
+    for (x, n) in r_xla.values.iter().zip(&r_nat.values) {
+        assert!((x - n).abs() / n.abs().max(1.0) < 1e-7, "{x} vs {n}");
+    }
+}
+
+#[test]
+fn unmatched_shapes_fall_back_to_native() {
+    let Some(rt) = runtime() else { return };
+    // grid 9 → n=81: no compiled variant; the backend must fall back and
+    // still be correct.
+    let p = operators::generate(
+        OperatorKind::Helmholtz,
+        GenOptions {
+            grid: 9,
+            ..Default::default()
+        },
+        1,
+        2,
+    )
+    .remove(0);
+    let mut rng = Xoshiro256pp::seed_from_u64(4);
+    let y = Mat::randn(81, 4, &mut rng);
+    let params = FilterParams {
+        degree: 20,
+        lower: 50.0,
+        upper: p.matrix.norm1() * 1.1,
+        target: 5.0,
+    };
+    let mut xla = XlaFilter::new(rt);
+    let out = xla.filter(&p.matrix, &y, &params);
+    assert_eq!(xla.native_fallbacks, 1);
+    let mut native = NativeFilter;
+    let want = native.filter(&p.matrix, &y, &params);
+    assert!(out.max_abs_diff(&want) == 0.0, "fallback must be bit-identical");
+}
+
+#[test]
+fn pipeline_runs_on_xla_backend() {
+    let Some(dir) = artifacts_dir() else { return };
+    use scsf::coordinator::config::{Backend, GenConfig};
+    use scsf::coordinator::pipeline::generate_dataset;
+    let out = std::env::temp_dir().join(format!("scsf_xla_pipe_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&out);
+    let cfg = GenConfig {
+        kind: OperatorKind::Helmholtz,
+        grid: 16,
+        n_problems: 3,
+        n_eigs: 10,
+        tol: 1e-8,
+        seed: 6,
+        shards: 1,
+        backend: Backend::Xla {
+            artifacts_dir: dir.to_string_lossy().to_string(),
+        },
+        ..Default::default()
+    };
+    let report = generate_dataset(&cfg, &out).unwrap();
+    assert!(report.all_converged);
+    assert!(report.xla_calls > 0, "XLA backend must have served calls");
+    let _ = std::fs::remove_dir_all(&out);
+}
+
+#[test]
+fn residual_artifact_matches_rust_residuals() {
+    let Some(rt) = runtime() else { return };
+    let Some(meta) = rt.find_residual(256, 16) else {
+        eprintln!("SKIP: no residual artifact for (256,16)");
+        return;
+    };
+    let p = helmholtz_256();
+    let a = &p.matrix;
+    // Solve for 16 pairs so shapes match the compiled residual module.
+    let opts = ChfsiOptions::from_eig(&EigOptions {
+        n_eigs: 16,
+        tol: 1e-9,
+        max_iters: 300,
+        seed: 0,
+    });
+    let r = chfsi::solve(a, &opts, None);
+    let dense = a.to_dense();
+    let a_lit = xla::Literal::vec1(dense.data()).reshape(&[256, 256]).unwrap();
+    let v_lit = xla::Literal::vec1(r.vectors.data()).reshape(&[256, 16]).unwrap();
+    let lam_lit = xla::Literal::vec1(&r.values);
+    let out = rt
+        .execute(&meta.name.clone(), &[a_lit, v_lit, lam_lit])
+        .unwrap();
+    let got = out.to_vec::<f64>().unwrap();
+    for (x, want) in got.iter().zip(&r.residuals) {
+        assert!((x - want).abs() < 1e-12 + want * 1e-6, "{x} vs {want}");
+    }
+}

@@ -1,0 +1,140 @@
+//! Cross-solver integration: every solver × every operator family must
+//! agree with the dense reference and with each other.
+
+use scsf::eig::{EigOptions, SolverKind};
+use scsf::linalg::symeig::sym_eig;
+use scsf::operators::{self, GenOptions, OperatorKind};
+
+fn opts(l: usize, tol: f64) -> EigOptions {
+    EigOptions {
+        n_eigs: l,
+        tol,
+        max_iters: 800,
+        seed: 0,
+    }
+}
+
+const SOLVERS: [SolverKind; 5] = [
+    SolverKind::Eigsh,
+    SolverKind::Lobpcg,
+    SolverKind::KrylovSchur,
+    SolverKind::JacobiDavidson,
+    SolverKind::Chfsi,
+];
+
+#[test]
+fn all_solvers_agree_on_all_families() {
+    let gen_opts = GenOptions {
+        grid: 10,
+        ..Default::default()
+    };
+    for kind in [
+        OperatorKind::Poisson,
+        OperatorKind::Elliptic,
+        OperatorKind::Helmholtz,
+        OperatorKind::Vibration,
+        OperatorKind::HelmholtzFem,
+    ] {
+        let p = &operators::generate(kind, gen_opts, 1, 3)[0];
+        let tol = kind.default_tol().max(1e-10);
+        let want = sym_eig(&p.matrix.to_dense());
+        for solver in SOLVERS {
+            let r = solver.solve(&p.matrix, &opts(5, tol), None);
+            assert!(r.stats.converged, "{kind:?}/{solver:?} residuals {:?}", r.residuals);
+            for (j, (got, w)) in r.values.iter().zip(&want.values[..5]).enumerate() {
+                assert!(
+                    (got - w).abs() / w.abs().max(1.0) < 1e-6,
+                    "{kind:?}/{solver:?} pair {j}: {got} vs {w}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn eigenvectors_satisfy_operator_equation() {
+    let gen_opts = GenOptions {
+        grid: 12,
+        ..Default::default()
+    };
+    let p = &operators::generate(OperatorKind::Helmholtz, gen_opts, 1, 5)[0];
+    for solver in SOLVERS {
+        let r = solver.solve(&p.matrix, &opts(6, 1e-9), None);
+        let res = scsf::eig::rel_residuals(&p.matrix, &r.values, &r.vectors);
+        for (j, rr) in res.iter().enumerate() {
+            assert!(*rr < 1e-8, "{solver:?} pair {j}: residual {rr}");
+        }
+    }
+}
+
+#[test]
+fn solvers_are_deterministic_given_seed() {
+    let gen_opts = GenOptions {
+        grid: 9,
+        ..Default::default()
+    };
+    let p = &operators::generate(OperatorKind::Poisson, gen_opts, 1, 7)[0];
+    for solver in SOLVERS {
+        let a = solver.solve(&p.matrix, &opts(4, 1e-9), None);
+        let b = solver.solve(&p.matrix, &opts(4, 1e-9), None);
+        assert_eq!(a.values, b.values, "{solver:?} not deterministic");
+    }
+}
+
+#[test]
+fn high_precision_poisson_1e12() {
+    // The paper's strictest setting (Poisson at 1e-12).
+    let gen_opts = GenOptions {
+        grid: 12,
+        ..Default::default()
+    };
+    let p = &operators::generate(OperatorKind::Poisson, gen_opts, 1, 9)[0];
+    for solver in [SolverKind::Eigsh, SolverKind::Chfsi] {
+        let r = solver.solve(&p.matrix, &opts(8, 1e-12), None);
+        assert!(r.stats.converged, "{solver:?}");
+        for rr in &r.residuals {
+            assert!(*rr <= 1e-11, "{solver:?} residual {rr}");
+        }
+    }
+}
+
+#[test]
+fn scsf_sequence_beats_chfsi_in_flops_on_similar_chain() {
+    // The paper's core claim at integration level.
+    use scsf::eig::chfsi::ChfsiOptions;
+    use scsf::eig::scsf::{solve_sequence, ScsfOptions};
+    use scsf::sort::SortMethod;
+    let chain = operators::helmholtz::generate_perturbed_chain(
+        GenOptions {
+            grid: 12,
+            ..Default::default()
+        },
+        8,
+        0.05,
+        11,
+    );
+    let base = ChfsiOptions::from_eig(&opts(8, 1e-8));
+    let scsf_seq = solve_sequence(
+        &chain,
+        &ScsfOptions {
+            chfsi: base,
+            sort: SortMethod::TruncatedFft { p0: 8 },
+            warm_start: true,
+        },
+    );
+    let chfsi_seq = solve_sequence(
+        &chain,
+        &ScsfOptions {
+            chfsi: base,
+            sort: SortMethod::None,
+            warm_start: false,
+        },
+    );
+    assert!(scsf_seq.all_converged() && chfsi_seq.all_converged());
+    assert!(
+        scsf_seq.total_mflops() < chfsi_seq.total_mflops(),
+        "scsf {} vs chfsi {}",
+        scsf_seq.total_mflops(),
+        chfsi_seq.total_mflops()
+    );
+}

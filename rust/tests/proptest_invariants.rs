@@ -1,0 +1,240 @@
+//! Property-based invariants over the coordinator-facing machinery:
+//! sorting, filtering, datasets, and solver contracts, driven by the
+//! in-tree [`scsf::testing::forall`] harness (seeded random cases with
+//! reproduction info on failure).
+
+use scsf::eig::chebyshev::{chebyshev_filter, FilterParams};
+use scsf::eig::chfsi::{self, ChfsiOptions};
+use scsf::eig::EigOptions;
+use scsf::linalg::qr::{householder_qr, ortho_defect};
+use scsf::linalg::Mat;
+use scsf::operators::{self, GenOptions, OperatorKind};
+use scsf::rng::Xoshiro256pp;
+use scsf::sort::{self, SortMethod};
+use scsf::testing::{forall, size_in};
+
+fn random_kind(rng: &mut Xoshiro256pp) -> OperatorKind {
+    [
+        OperatorKind::Poisson,
+        OperatorKind::Elliptic,
+        OperatorKind::Helmholtz,
+        OperatorKind::Vibration,
+    ][rng.next_below(4)]
+}
+
+#[test]
+fn prop_sort_is_always_a_permutation() {
+    forall(24, 0xA11CE, |rng, case| {
+        let n = size_in(rng, 2, 12);
+        let kind = random_kind(rng);
+        let problems = operators::generate(
+            kind,
+            GenOptions {
+                grid: size_in(rng, 6, 10),
+                ..Default::default()
+            },
+            n,
+            rng.next_u64(),
+        );
+        let p0 = size_in(rng, 1, 8);
+        for method in [
+            SortMethod::None,
+            SortMethod::Greedy,
+            SortMethod::TruncatedFft { p0 },
+        ] {
+            let out = sort::sort_problems(&problems, method);
+            let mut o = out.order.clone();
+            o.sort_unstable();
+            assert_eq!(o, (0..n).collect::<Vec<_>>(), "case {case} {method:?}");
+        }
+    });
+}
+
+#[test]
+fn prop_greedy_steps_are_locally_nearest() {
+    // The defining invariant of the greedy chain: each hop goes to the
+    // nearest *remaining* problem. (Global cost is NOT guaranteed to
+    // beat any fixed order — greedy is a heuristic.)
+    forall(16, 0xB0B, |rng, case| {
+        let problems = operators::generate(
+            OperatorKind::Helmholtz,
+            GenOptions {
+                grid: 8,
+                ..Default::default()
+            },
+            size_in(rng, 3, 10),
+            rng.next_u64(),
+        );
+        let greedy = sort::sort_problems(&problems, SortMethod::Greedy);
+        let o = &greedy.order;
+        for t in 0..o.len() - 1 {
+            let step = problems[o[t]].sort_key.dist2(&problems[o[t + 1]].sort_key);
+            for later in &o[t + 1..] {
+                let alt = problems[o[t]].sort_key.dist2(&problems[*later].sort_key);
+                assert!(
+                    step <= alt + 1e-12,
+                    "case {case}: hop {t} not locally nearest ({step} > {alt})"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_filter_is_linear_in_the_block() {
+    forall(16, 0xF117E4, |rng, case| {
+        let p = operators::generate(
+            random_kind(rng),
+            GenOptions {
+                grid: 8,
+                ..Default::default()
+            },
+            1,
+            rng.next_u64(),
+        )
+        .remove(0);
+        let a = &p.matrix;
+        let n = a.rows();
+        let k = size_in(rng, 1, 4);
+        let params = FilterParams {
+            degree: size_in(rng, 2, 12),
+            lower: 50.0,
+            upper: a.norm1() * 1.2,
+            target: 1.0,
+        };
+        let y1 = Mat::randn(n, k, rng);
+        let y2 = Mat::randn(n, k, rng);
+        let alpha = rng.uniform(-2.0, 2.0);
+        // filter(y1 + α y2) == filter(y1) + α filter(y2)
+        let mut combo = y1.clone();
+        combo.axpy(alpha, &y2);
+        let lhs = chebyshev_filter(a, &combo, &params);
+        let mut rhs = chebyshev_filter(a, &y1, &params);
+        rhs.axpy(alpha, &chebyshev_filter(a, &y2, &params));
+        let scale = rhs.fro_norm().max(1.0);
+        assert!(
+            lhs.max_abs_diff(&rhs) < 1e-9 * scale,
+            "case {case}: filter not linear ({})",
+            lhs.max_abs_diff(&rhs)
+        );
+    });
+}
+
+#[test]
+fn prop_qr_of_any_block_is_orthonormal() {
+    forall(32, 0x9A, |rng, case| {
+        let n = size_in(rng, 5, 60);
+        let k = size_in(rng, 1, n.min(12));
+        let mut y = Mat::randn(n, k, rng);
+        // Occasionally make it rank-deficient.
+        if k >= 2 && rng.next_f64() < 0.3 {
+            let c0 = y.col(0);
+            y.set_col(k - 1, &c0);
+        }
+        let q = householder_qr(&y);
+        assert!(
+            ortho_defect(&q) < 1e-9,
+            "case {case}: defect {}",
+            ortho_defect(&q)
+        );
+    });
+}
+
+#[test]
+fn prop_chfsi_matches_lanczos_on_random_problems() {
+    forall(8, 0xC0FFEE, |rng, case| {
+        let kind = random_kind(rng);
+        let p = operators::generate(
+            kind,
+            GenOptions {
+                grid: size_in(rng, 8, 11),
+                ..Default::default()
+            },
+            1,
+            rng.next_u64(),
+        )
+        .remove(0);
+        let l = size_in(rng, 2, 6);
+        let opts = EigOptions {
+            n_eigs: l,
+            tol: 1e-9,
+            max_iters: 500,
+            seed: rng.next_u64(),
+        };
+        let a = chfsi::solve(&p.matrix, &ChfsiOptions::from_eig(&opts), None);
+        let b = scsf::eig::lanczos::solve(&p.matrix, &opts, None);
+        assert!(a.stats.converged && b.stats.converged, "case {case} {kind:?}");
+        for (x, y) in a.values.iter().zip(&b.values) {
+            assert!(
+                (x - y).abs() / y.abs().max(1.0) < 1e-7,
+                "case {case} {kind:?}: {x} vs {y}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_dataset_roundtrip_preserves_everything() {
+    use scsf::coordinator::dataset::{DatasetReader, DatasetWriter};
+    use scsf::eig::{EigResult, SolveStats};
+    forall(12, 0xD5, |rng, case| {
+        let dir = std::env::temp_dir().join(format!(
+            "scsf_prop_ds_{}_{case}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut w = DatasetWriter::create(&dir).unwrap();
+        let n_rec = size_in(rng, 1, 5);
+        let mut originals = Vec::new();
+        for id in 0..n_rec {
+            let n = size_in(rng, 2, 20);
+            let l = size_in(rng, 1, n.min(4));
+            let r = EigResult {
+                values: (0..l).map(|_| rng.normal()).collect(),
+                vectors: Mat::randn(n, l, rng),
+                residuals: vec![0.0; l],
+                stats: SolveStats::default(),
+            };
+            w.write_record(id, &r).unwrap();
+            originals.push(r);
+        }
+        w.finalize(vec![]).unwrap();
+        let mut reader = DatasetReader::open(&dir).unwrap();
+        for (id, want) in originals.iter().enumerate() {
+            let rec = reader.read(id).unwrap();
+            assert_eq!(rec.values, want.values, "case {case} id {id}");
+            assert_eq!(rec.vectors, want.vectors, "case {case} id {id}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    });
+}
+
+#[test]
+fn prop_warm_start_on_identical_problem_is_cheap() {
+    forall(8, 0x3E, |rng, case| {
+        let p = operators::generate(
+            OperatorKind::Helmholtz,
+            GenOptions {
+                grid: 9,
+                ..Default::default()
+            },
+            1,
+            rng.next_u64(),
+        )
+        .remove(0);
+        let opts = ChfsiOptions::from_eig(&EigOptions {
+            n_eigs: 4,
+            tol: 1e-8,
+            max_iters: 400,
+            seed: rng.next_u64(),
+        });
+        let cold = chfsi::solve(&p.matrix, &opts, None);
+        let warm = chfsi::solve(&p.matrix, &opts, Some(&cold.as_warm_start()));
+        assert!(
+            warm.stats.iterations <= 2 && warm.stats.iterations <= cold.stats.iterations,
+            "case {case}: warm {} vs cold {}",
+            warm.stats.iterations,
+            cold.stats.iterations
+        );
+    });
+}
