@@ -1,18 +1,46 @@
 //! Micro-benchmarks of the numerical kernels on SCSF's hot path
-//! (EXPERIMENTS.md §Perf): fused-SpMM Chebyshev filter, plain SpMM,
-//! Householder QR, Rayleigh–Ritz Gram product, and the dense symmetric
-//! eigensolver that backs every projected problem.
+//! (EXPERIMENTS.md §Perf): fused-SpMM Chebyshev filter, plain SpMM
+//! (serial vs row-partitioned threaded), Householder QR, Rayleigh–Ritz
+//! Gram product, and the dense symmetric eigensolver that backs every
+//! projected problem.
+//!
+//! Besides the human-readable report, the run emits `BENCH_kernels.json`
+//! (in the working directory) with SpMM GFLOP/s per thread count and
+//! end-to-end problems/sec, so future changes have a perf trajectory to
+//! compare against.
 
 use scsf::bench_support::harness::{bench_median, gflops};
-use scsf::eig::chebyshev::{chebyshev_filter, filter_flop_cost, FilterParams};
+use scsf::eig::chebyshev::{
+    chebyshev_filter, chebyshev_filter_into, filter_flop_cost, FilterParams,
+};
+use scsf::eig::chfsi::ChfsiOptions;
+use scsf::eig::scsf::{solve_sequence, ScsfOptions};
+use scsf::eig::EigOptions;
 use scsf::linalg::qr::householder_qr;
 use scsf::linalg::symeig::sym_eig;
 use scsf::linalg::Mat;
 use scsf::operators::{self, GenOptions, OperatorKind};
 use scsf::rng::Xoshiro256pp;
+use scsf::util::json::Value;
+
+fn thread_counts() -> Vec<usize> {
+    let avail = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let mut counts = vec![1usize];
+    for t in [2usize, 4, 8] {
+        if t <= avail {
+            counts.push(t);
+        }
+    }
+    counts
+}
 
 fn main() {
     let mut rng = Xoshiro256pp::seed_from_u64(1);
+    let counts = thread_counts();
+    let mut spmm_records: Vec<Value> = Vec::new();
+    let mut filter_records: Vec<Value> = Vec::new();
 
     for grid in [32usize, 48, 64] {
         let n = grid * grid;
@@ -38,24 +66,55 @@ fn main() {
         };
 
         let flops_filter = filter_flop_cost(&a, k, m);
-        let r = bench_median(
-            &format!("chebyshev_filter n={n} k={k} m={m} (fused SpMM)"),
-            1,
-            5,
-            || {
-                std::hint::black_box(chebyshev_filter(&a, &y, &params));
-            },
-        );
+        for &threads in &counts {
+            let mut out = Mat::zeros(0, 0);
+            let mut t1 = Mat::zeros(0, 0);
+            let mut t2 = Mat::zeros(0, 0);
+            let r = bench_median(
+                &format!("chebyshev_filter n={n} k={k} m={m} threads={threads}"),
+                1,
+                5,
+                || {
+                    chebyshev_filter_into(&a, &y, &params, &mut out, &mut t1, &mut t2, threads);
+                    std::hint::black_box(&out);
+                },
+            );
+            let gf = gflops(flops_filter, r.median_secs);
+            println!("{}  [{gf:.2} GF/s]", r.report());
+            filter_records.push(Value::obj(vec![
+                ("grid", grid.into()),
+                ("n", n.into()),
+                ("k", k.into()),
+                ("degree", m.into()),
+                ("threads", threads.into()),
+                ("median_secs", r.median_secs.into()),
+                ("gflops", gf.into()),
+            ]));
+        }
+        // Keep the allocating reference path honest too.
+        let r = bench_median(&format!("chebyshev_filter n={n} (alloc path)"), 1, 5, || {
+            std::hint::black_box(chebyshev_filter(&a, &y, &params));
+        });
         println!("{}  [{:.2} GF/s]", r.report(), gflops(flops_filter, r.median_secs));
 
-        let r = bench_median(&format!("spmm n={n} k={k}"), 1, 5, || {
-            std::hint::black_box(a.spmm_alloc(&y));
-        });
-        println!(
-            "{}  [{:.2} GF/s]",
-            r.report(),
-            gflops(2 * (a.nnz() * k) as u64, r.median_secs)
-        );
+        let spmm_flops = 2 * (a.nnz() * k) as u64;
+        for &threads in &counts {
+            let mut out = Mat::zeros(0, 0);
+            let r = bench_median(&format!("spmm n={n} k={k} threads={threads}"), 1, 5, || {
+                a.spmm_into(&y, &mut out, threads);
+                std::hint::black_box(&out);
+            });
+            let gf = gflops(spmm_flops, r.median_secs);
+            println!("{}  [{gf:.2} GF/s]", r.report());
+            spmm_records.push(Value::obj(vec![
+                ("grid", grid.into()),
+                ("n", n.into()),
+                ("k", k.into()),
+                ("threads", threads.into()),
+                ("median_secs", r.median_secs.into()),
+                ("gflops", gf.into()),
+            ]));
+        }
 
         let r = bench_median(&format!("householder_qr n={n} k={k}"), 1, 5, || {
             std::hint::black_box(householder_qr(&y));
@@ -93,5 +152,60 @@ fn main() {
             std::hint::black_box(sym_eig(&g));
         });
         println!("{}", r.report());
+    }
+
+    // ---- End-to-end problems/sec (SCSF sequence, serial vs threaded) ----
+    let seq_problems = operators::generate(
+        OperatorKind::Helmholtz,
+        GenOptions {
+            grid: 24,
+            ..Default::default()
+        },
+        6,
+        11,
+    );
+    let mut seq_records: Vec<Value> = Vec::new();
+    for &threads in &counts {
+        let mut chfsi = ChfsiOptions::from_eig(&EigOptions {
+            n_eigs: 12,
+            tol: 1e-8,
+            max_iters: 300,
+            seed: 0,
+        });
+        chfsi.threads = threads;
+        let opts = ScsfOptions::paper_default(chfsi);
+        let seq = solve_sequence(&seq_problems, &opts);
+        assert!(seq.all_converged(), "bench sequence must converge");
+        let pps = 1.0 / seq.avg_secs();
+        println!(
+            "scsf sequence grid=24 L=12 threads={threads}: {:.2} problems/sec (avg {:.4}s)",
+            pps,
+            seq.avg_secs()
+        );
+        seq_records.push(Value::obj(vec![
+            ("grid", 24usize.into()),
+            ("n_problems", seq_problems.len().into()),
+            ("n_eigs", 12usize.into()),
+            ("threads", threads.into()),
+            ("avg_solve_secs", seq.avg_secs().into()),
+            ("problems_per_sec", pps.into()),
+        ]));
+    }
+
+    let avail = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let doc = Value::obj(vec![
+        ("bench", "kernels".into()),
+        ("version", 1usize.into()),
+        ("threads_available", avail.into()),
+        ("spmm", Value::Arr(spmm_records)),
+        ("filter", Value::Arr(filter_records)),
+        ("scsf_sequence", Value::Arr(seq_records)),
+    ]);
+    let path = "BENCH_kernels.json";
+    match std::fs::write(path, doc.to_string_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
     }
 }

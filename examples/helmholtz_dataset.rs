@@ -26,7 +26,7 @@ fn flag(name: &str, default: usize) -> usize {
         .unwrap_or(default)
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> scsf::util::error::Result<()> {
     let cfg = GenConfig {
         kind: OperatorKind::Helmholtz,
         grid: flag("--grid", 32), // n = 1024 by default

@@ -13,7 +13,7 @@ use scsf::eig::EigOptions;
 use scsf::operators::OperatorKind;
 use scsf::sort::SortMethod;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> scsf::util::error::Result<()> {
     let cfg = GenConfig {
         kind: OperatorKind::Helmholtz,
         grid: 24,      // matrix dimension 576

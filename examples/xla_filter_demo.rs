@@ -18,7 +18,7 @@ use scsf::runtime::{XlaFilter, XlaRuntime};
 use std::path::Path;
 use std::rc::Rc;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> scsf::util::error::Result<()> {
     let artifacts = Path::new("artifacts");
     if !artifacts.join("manifest.json").exists() {
         eprintln!("artifacts/manifest.json not found — run `make artifacts` first");

@@ -7,8 +7,9 @@ use crate::eig::EigOptions;
 use crate::grf::GrfParams;
 use crate::operators::{GenOptions, OperatorKind};
 use crate::sort::SortMethod;
+use crate::anyhow;
+use crate::util::error::Result;
 use crate::util::json::{self, Value};
-use anyhow::{anyhow, Result};
 
 /// Operator family selector (alias of [`OperatorKind`] for configs).
 pub type DatasetKind = OperatorKind;
@@ -50,6 +51,10 @@ pub struct GenConfig {
     pub sort: SortMethod,
     /// Parallel shard count `M` (paper §D.6 used 8 MPI ranks).
     pub shards: usize,
+    /// Row-partitioned threads per shard for the SpMM/SpMV kernels.
+    /// Results are bit-for-bit independent of this value (determinism
+    /// is preserved); it only changes wall-clock time.
+    pub threads: usize,
     /// Bounded-channel capacity between stages (backpressure depth).
     pub channel_capacity: usize,
     /// Filter backend.
@@ -71,6 +76,7 @@ impl Default for GenConfig {
             guard: None,
             sort: SortMethod::TruncatedFft { p0: 20 },
             shards: 2,
+            threads: 1,
             channel_capacity: 8,
             backend: Backend::Native,
             grf: GrfParams::default(),
@@ -102,6 +108,7 @@ impl GenConfig {
         });
         chfsi.degree = self.degree;
         chfsi.guard = self.guard;
+        chfsi.threads = self.threads.max(1);
         ScsfOptions {
             chfsi,
             sort: self.sort,
@@ -140,6 +147,7 @@ impl GenConfig {
             ),
             ("sort", sort),
             ("shards", self.shards.into()),
+            ("threads", self.threads.into()),
             ("channel_capacity", self.channel_capacity.into()),
             ("backend", backend),
             (
@@ -194,6 +202,9 @@ impl GenConfig {
         if let Some(x) = get("shards") {
             cfg.shards = x.max(1);
         }
+        if let Some(x) = get("threads") {
+            cfg.threads = x.max(1);
+        }
         if let Some(x) = get("channel_capacity") {
             cfg.channel_capacity = x.max(1);
         }
@@ -246,6 +257,7 @@ mod tests {
             guard: Some(6),
             sort: SortMethod::Greedy,
             shards: 4,
+            threads: 3,
             channel_capacity: 3,
             backend: Backend::Xla {
                 artifacts_dir: "artifacts".to_string(),
@@ -277,11 +289,13 @@ mod tests {
         let cfg = GenConfig {
             degree: 14,
             guard: Some(7),
+            threads: 4,
             ..Default::default()
         };
         let o = cfg.scsf_options();
         assert_eq!(o.chfsi.degree, 14);
         assert_eq!(o.chfsi.guard, Some(7));
+        assert_eq!(o.chfsi.threads, 4);
         assert!(o.warm_start);
     }
 }

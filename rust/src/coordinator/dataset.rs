@@ -12,9 +12,10 @@
 //! Vectors are stored row-major `n × l` (column `j` pairs with value `j`)
 //! — the same layout as [`crate::linalg::Mat`].
 
+use crate::anyhow;
 use crate::eig::EigResult;
+use crate::util::error::{Context, Result};
 use crate::util::json::{self, Value};
-use anyhow::{anyhow, Context, Result};
 use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};

@@ -3,6 +3,34 @@
 
 use crate::util::json::Value;
 
+/// Per-shard work summary (sort/solve split) from one solve worker.
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct ShardReport {
+    /// Problems solved by this shard.
+    pub problems: usize,
+    /// Seconds spent sorting this shard's chunks.
+    pub sort_secs: f64,
+    /// Seconds spent in eigensolves.
+    pub solve_secs: f64,
+    /// Filter calls served by the XLA backend.
+    pub xla_calls: usize,
+    /// XLA-backend calls that fell back to the native kernel.
+    pub native_fallbacks: usize,
+}
+
+impl ShardReport {
+    /// JSON object for the manifest.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("problems", self.problems.into()),
+            ("sort_secs", self.sort_secs.into()),
+            ("solve_secs", self.solve_secs.into()),
+            ("xla_calls", self.xla_calls.into()),
+            ("native_fallbacks", self.native_fallbacks.into()),
+        ])
+    }
+}
+
 /// Report of one dataset-generation run.
 #[derive(Debug, Clone, Default)]
 pub struct GenReport {
@@ -34,6 +62,9 @@ pub struct GenReport {
     pub xla_calls: usize,
     /// XLA-backend calls that fell back to the native kernel.
     pub native_fallbacks: usize,
+    /// Per-shard sort/solve breakdown (ordered by descending problem
+    /// count, then solve time, for a deterministic manifest).
+    pub shards: Vec<ShardReport>,
 }
 
 impl GenReport {
@@ -54,6 +85,10 @@ impl GenReport {
             ("all_converged", self.all_converged.into()),
             ("xla_calls", self.xla_calls.into()),
             ("native_fallbacks", self.native_fallbacks.into()),
+            (
+                "shards",
+                Value::Arr(self.shards.iter().map(ShardReport::to_json).collect()),
+            ),
         ])
     }
 
@@ -95,5 +130,39 @@ mod tests {
     fn summary_is_one_line() {
         let r = GenReport::default();
         assert_eq!(r.summary().lines().count(), 1);
+    }
+
+    #[test]
+    fn shard_reports_serialize() {
+        let r = GenReport {
+            n_problems: 2,
+            shards: vec![
+                ShardReport {
+                    problems: 1,
+                    sort_secs: 0.1,
+                    solve_secs: 0.4,
+                    ..Default::default()
+                },
+                ShardReport {
+                    problems: 1,
+                    sort_secs: 0.2,
+                    solve_secs: 0.3,
+                    xla_calls: 5,
+                    native_fallbacks: 1,
+                },
+            ],
+            ..Default::default()
+        };
+        let v = r.to_json();
+        let shards = v.get("shards").and_then(Value::as_arr).unwrap();
+        assert_eq!(shards.len(), 2);
+        assert_eq!(
+            shards[1].get("xla_calls").and_then(Value::as_usize),
+            Some(5)
+        );
+        assert_eq!(
+            shards[0].get("solve_secs").and_then(Value::as_f64),
+            Some(0.4)
+        );
     }
 }

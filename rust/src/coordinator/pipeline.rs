@@ -3,29 +3,22 @@
 
 use super::config::{Backend, GenConfig};
 use super::dataset::DatasetWriter;
-use super::metrics::GenReport;
+use super::metrics::{GenReport, ShardReport};
+use crate::anyhow;
 use crate::eig::chebyshev::{FilterBackend, NativeFilter};
 use crate::eig::chfsi;
+use crate::eig::solver::Workspace;
 use crate::eig::WarmStart;
 use crate::operators::{self, Problem};
 use crate::rng::Xoshiro256pp;
 use crate::runtime::{XlaFilter, XlaRuntime};
 use crate::sort;
-use anyhow::{anyhow, Result};
+use crate::util::error::Result;
 use std::path::Path;
 use std::rc::Rc;
 use std::sync::mpsc::sync_channel;
 use std::sync::Mutex;
 use std::time::Instant;
-
-/// Per-shard work summary returned by solve workers.
-#[derive(Debug, Default, Clone)]
-struct ShardStats {
-    sort_secs: f64,
-    solve_secs: f64,
-    xla_calls: usize,
-    native_fallbacks: usize,
-}
 
 fn make_backend(cfg: &GenConfig) -> Result<Box<dyn FilterBackend>> {
     match &cfg.backend {
@@ -54,7 +47,7 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
     let chunk_rx = Mutex::new(chunk_rx);
     let (res_tx, res_rx) =
         sync_channel::<(usize, crate::eig::EigResult)>(cfg.channel_capacity);
-    let shard_stats: Mutex<Vec<ShardStats>> = Mutex::new(Vec::new());
+    let shard_stats: Mutex<Vec<ShardReport>> = Mutex::new(Vec::new());
     let gen_secs_cell: Mutex<f64> = Mutex::new(0.0);
     let producer_err: Mutex<Option<String>> = Mutex::new(None);
 
@@ -63,7 +56,7 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
         ..Default::default()
     };
 
-    let writer_out: Result<(DatasetWriter, f64, f64, f64, usize)> =
+    let writer_out: Result<(DatasetWriter, f64, usize)> =
         std::thread::scope(|scope| {
             // ---- Producer: parameters → operators → chunks ------------
             let producer_err = &producer_err;
@@ -100,7 +93,11 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
                 let shard_stats = &shard_stats;
                 let handle = scope.spawn(move || -> Result<()> {
                     let mut backend = make_backend(cfg)?;
-                    let mut stats = ShardStats::default();
+                    // One workspace per shard worker, reused across every
+                    // chunk and every problem this worker ever solves —
+                    // the steady state allocates nothing in solver loops.
+                    let mut ws = Workspace::new(cfg.threads.max(1));
+                    let mut stats = ShardReport::default();
                     loop {
                         let chunk = {
                             let rx = chunk_rx.lock().unwrap();
@@ -117,13 +114,15 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
                         let mut warm: Option<WarmStart> = None;
                         for &idx in &sorted.order {
                             let problem = &chunk[idx];
-                            let r = chfsi::solve_with_backend(
+                            let r = chfsi::solve_in(
                                 &problem.matrix,
                                 &opts.chfsi,
                                 warm.as_ref(),
                                 backend.as_mut(),
+                                &mut ws,
                             );
                             warm = Some(r.as_warm_start());
+                            stats.problems += 1;
                             res_tx
                                 .send((problem.id, r))
                                 .map_err(|_| anyhow!("writer hung up"))?;
@@ -179,10 +178,10 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
             report.avg_iterations = iter_sum as f64 / count.max(1) as f64;
             report.total_mflops = mflops;
             report.filter_mflops = filter_mflops;
-            Ok((writer, write_secs, solve_secs_sum, 0.0, count))
+            Ok((writer, write_secs, count))
         });
 
-    let (writer, write_secs, _solve_sum, _, count) = writer_out?;
+    let (writer, write_secs, count) = writer_out?;
     if count != cfg.n_problems {
         return Err(anyhow!(
             "pipeline lost problems: wrote {count} of {}",
@@ -190,13 +189,21 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
         ));
     }
 
-    let stats = shard_stats.into_inner().unwrap();
+    let mut stats = shard_stats.into_inner().unwrap();
+    // Worker completion order is nondeterministic; order the manifest's
+    // shard list by workload instead.
+    stats.sort_by(|a, b| {
+        b.problems
+            .cmp(&a.problems)
+            .then(b.solve_secs.total_cmp(&a.solve_secs))
+    });
     report.gen_secs = gen_secs_cell.into_inner().unwrap();
     report.sort_secs = stats.iter().map(|s| s.sort_secs).sum();
     report.solve_secs = stats.iter().map(|s| s.solve_secs).sum();
     report.write_secs = write_secs;
     report.xla_calls = stats.iter().map(|s| s.xla_calls).sum();
     report.native_fallbacks = stats.iter().map(|s| s.native_fallbacks).sum();
+    report.shards = stats;
     report.total_secs = t_start.elapsed().as_secs_f64();
 
     writer.finalize(vec![
@@ -292,6 +299,51 @@ mod tests {
         }
         let _ = std::fs::remove_dir_all(&d1);
         let _ = std::fs::remove_dir_all(&d2);
+    }
+
+    #[test]
+    fn threaded_kernels_do_not_change_values() {
+        // threads is a pure wall-clock knob: values bit-for-bit equal.
+        let d1 = tmpdir("t1");
+        let d2 = tmpdir("t2");
+        let mut c1 = small_cfg();
+        c1.threads = 1;
+        let mut c2 = small_cfg();
+        c2.threads = 4;
+        generate_dataset(&c1, &d1).unwrap();
+        generate_dataset(&c2, &d2).unwrap();
+        let mut r1 = DatasetReader::open(&d1).unwrap();
+        let mut r2 = DatasetReader::open(&d2).unwrap();
+        for id in 0..6 {
+            let a = r1.read(id).unwrap();
+            let b = r2.read(id).unwrap();
+            assert_eq!(a.values, b.values, "id {id}");
+            assert_eq!(a.vectors, b.vectors, "id {id}");
+        }
+        let _ = std::fs::remove_dir_all(&d1);
+        let _ = std::fs::remove_dir_all(&d2);
+    }
+
+    #[test]
+    fn report_carries_per_shard_stats() {
+        let dir = tmpdir("shardstats");
+        let cfg = small_cfg();
+        let report = generate_dataset(&cfg, &dir).unwrap();
+        assert!(!report.shards.is_empty());
+        let total: usize = report.shards.iter().map(|s| s.problems).sum();
+        assert_eq!(total, cfg.n_problems);
+        let solve_sum: f64 = report.shards.iter().map(|s| s.solve_secs).sum();
+        assert!((solve_sum - report.solve_secs).abs() < 1e-9);
+        // And the manifest exposes them.
+        let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let v = crate::util::json::parse(&text).unwrap();
+        let shards = v
+            .get("report")
+            .and_then(|r| r.get("shards"))
+            .and_then(crate::util::json::Value::as_arr)
+            .unwrap();
+        assert_eq!(shards.len(), report.shards.len());
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

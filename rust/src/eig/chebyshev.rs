@@ -80,6 +80,28 @@ pub trait FilterBackend {
     /// Apply the degree-`m` filter to `y`, returning the filtered block.
     fn filter(&mut self, a: &CsrMatrix, y: &Mat, params: &FilterParams) -> Mat;
 
+    /// Zero-alloc variant: write the filtered block into `out`, using
+    /// `tmp1`/`tmp2` as the recurrence's other two ping-pong buffers and
+    /// `threads` row-partitioned threads for the SpMM. The default
+    /// implementation routes through [`FilterBackend::filter`] (the
+    /// XLA path allocates host literals anyway); the native backend
+    /// overrides it with the true in-place recurrence.
+    #[allow(clippy::too_many_arguments)]
+    fn filter_into(
+        &mut self,
+        a: &CsrMatrix,
+        y: &Mat,
+        params: &FilterParams,
+        out: &mut Mat,
+        tmp1: &mut Mat,
+        tmp2: &mut Mat,
+        threads: usize,
+    ) {
+        let _ = (tmp1, tmp2, threads);
+        let r = self.filter(a, y, params);
+        out.copy_from(&r);
+    }
+
     /// Diagnostic name (shows up in pipeline metrics).
     fn name(&self) -> &'static str;
 
@@ -99,6 +121,20 @@ impl FilterBackend for NativeFilter {
         chebyshev_filter(a, y, params)
     }
 
+    #[allow(clippy::too_many_arguments)]
+    fn filter_into(
+        &mut self,
+        a: &CsrMatrix,
+        y: &Mat,
+        params: &FilterParams,
+        out: &mut Mat,
+        tmp1: &mut Mat,
+        tmp2: &mut Mat,
+        threads: usize,
+    ) {
+        chebyshev_filter_into(a, y, params, out, tmp1, tmp2, threads);
+    }
+
     fn name(&self) -> &'static str {
         "native-csr"
     }
@@ -112,6 +148,30 @@ impl FilterBackend for NativeFilter {
 /// Yᵢ₊₁ = 2(σᵢ₊₁/e)·(A − cI)·Yᵢ − σᵢσᵢ₊₁·Yᵢ₋₁
 /// ```
 pub fn chebyshev_filter(a: &CsrMatrix, y0: &Mat, params: &FilterParams) -> Mat {
+    let mut out = Mat::zeros(0, 0);
+    let mut tmp1 = Mat::zeros(0, 0);
+    let mut tmp2 = Mat::zeros(0, 0);
+    chebyshev_filter_into(a, y0, params, &mut out, &mut tmp1, &mut tmp2, 1);
+    out
+}
+
+/// Zero-alloc Chebyshev filter: the three-term recurrence runs entirely
+/// inside the caller-provided buffers (`out` receives the result,
+/// `tmp1`/`tmp2` are the other two ping-pong blocks), with the SpMM
+/// row-partitioned over `threads` threads. Arithmetic is identical to
+/// [`chebyshev_filter`] for every thread count (the threaded kernel is
+/// bit-for-bit deterministic), which is what keeps warm-started
+/// sequences reproducible across machine configurations.
+#[allow(clippy::too_many_arguments)]
+pub fn chebyshev_filter_into(
+    a: &CsrMatrix,
+    y0: &Mat,
+    params: &FilterParams,
+    out: &mut Mat,
+    tmp1: &mut Mat,
+    tmp2: &mut Mat,
+    threads: usize,
+) {
     let p = params.sanitized();
     assert!(p.degree >= 1, "filter degree must be ≥ 1");
     let c = p.center();
@@ -119,28 +179,28 @@ pub fn chebyshev_filter(a: &CsrMatrix, y0: &Mat, params: &FilterParams) -> Mat {
     let sigma1 = e / (p.target - c);
     let mut sigma = sigma1;
 
-    // Y1 = (σ1/e) (A − cI) Y0
-    let mut y_prev = y0.clone();
-    let mut y_cur = Mat::zeros(y0.rows(), y0.cols());
-    a.spmm_fused(sigma1 / e, y0, -c * sigma1 / e, 0.0, y0, &mut y_cur);
+    // Y1 = (σ1/e) (A − cI) Y0; tmp1 plays Y0 (= Y_prev) for step 2.
+    tmp1.copy_from(y0);
+    a.spmm_fused_into(sigma1 / e, y0, -c * sigma1 / e, 0.0, y0, out, threads);
 
-    let mut y_next = Mat::zeros(y0.rows(), y0.cols());
     for _i in 1..p.degree {
         let sigma_new = 1.0 / (2.0 / sigma1 - sigma);
-        // Y⁺ = (2σ⁺/e)(A − cI) Y − σσ⁺ Y⁻
-        a.spmm_fused(
+        // Y⁺ = (2σ⁺/e)(A − cI) Y − σσ⁺ Y⁻  (Y = out, Y⁻ = tmp1 → tmp2)
+        a.spmm_fused_into(
             2.0 * sigma_new / e,
-            &y_cur,
+            out,
             -2.0 * c * sigma_new / e,
             -sigma * sigma_new,
-            &y_prev,
-            &mut y_next,
+            tmp1,
+            tmp2,
+            threads,
         );
-        std::mem::swap(&mut y_prev, &mut y_cur);
-        std::mem::swap(&mut y_cur, &mut y_next);
+        // Rotate buffer *contents* (O(1) Vec swaps): prev ← cur, then
+        // cur ← next, so `out` always names the newest iterate.
+        std::mem::swap(tmp1, out);
+        std::mem::swap(out, tmp2);
         sigma = sigma_new;
     }
-    y_cur
 }
 
 /// Flop cost of one filter application (used by benches and to report
@@ -161,6 +221,24 @@ pub fn filtered_with_flops(
     let before = flops::read();
     let out = backend.filter(a, y, params);
     (out, flops::read().wrapping_sub(before))
+}
+
+/// Zero-alloc sibling of [`filtered_with_flops`]: the result lands in
+/// `out`, the returned value is the filter's flop count.
+#[allow(clippy::too_many_arguments)]
+pub fn filtered_into_with_flops(
+    backend: &mut dyn FilterBackend,
+    a: &CsrMatrix,
+    y: &Mat,
+    params: &FilterParams,
+    out: &mut Mat,
+    tmp1: &mut Mat,
+    tmp2: &mut Mat,
+    threads: usize,
+) -> u64 {
+    let before = flops::read();
+    backend.filter_into(a, y, params, out, tmp1, tmp2, threads);
+    flops::read().wrapping_sub(before)
 }
 
 #[cfg(test)]
@@ -312,6 +390,33 @@ mod tests {
         .sanitized();
         assert!(p.upper > p.lower);
         assert!(p.target < p.lower);
+    }
+
+    #[test]
+    fn filter_into_matches_alloc_filter_for_any_thread_count() {
+        let a = test_problem();
+        let params = FilterParams {
+            degree: 9,
+            lower: 5.0,
+            upper: 60.0,
+            target: 1.0,
+        };
+        let mut rng = Xoshiro256pp::seed_from_u64(6);
+        let y = Mat::randn(a.rows(), 5, &mut rng);
+        let want = chebyshev_filter(&a, &y, &params);
+        for threads in [1usize, 2, 4] {
+            let mut out = Mat::zeros(0, 0);
+            let mut t1 = Mat::zeros(0, 0);
+            let mut t2 = Mat::zeros(0, 0);
+            chebyshev_filter_into(&a, &y, &params, &mut out, &mut t1, &mut t2, threads);
+            assert_eq!(out, want, "threads = {threads}");
+        }
+        // The backend default path agrees too.
+        let mut backend = NativeFilter;
+        let mut out = Mat::zeros(0, 0);
+        let (mut t1, mut t2) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
+        backend.filter_into(&a, &y, &params, &mut out, &mut t1, &mut t2, 2);
+        assert_eq!(out, want);
     }
 
     #[test]

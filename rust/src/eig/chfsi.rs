@@ -7,10 +7,11 @@
 //! in a handful of passes — this is the mechanism behind SCSF's speedup.
 
 use super::chebyshev::{self, FilterBackend, FilterParams, NativeFilter};
+use super::solver::Workspace;
 use super::spectral_bounds::lanczos_bounds;
 use super::{EigOptions, EigResult, SolveStats, WarmStart};
-use crate::linalg::qr::ortho_against;
-use crate::linalg::symeig::sym_eig;
+use crate::linalg::qr::ortho_against_inplace;
+use crate::linalg::symeig::sym_eig_into;
 use crate::linalg::{flops, Mat};
 use crate::rng::Xoshiro256pp;
 use crate::sparse::CsrMatrix;
@@ -28,6 +29,9 @@ pub struct ChfsiOptions {
     pub guard: Option<usize>,
     /// Lanczos steps for the spectral upper bound.
     pub bound_steps: usize,
+    /// Row-partitioned threads for the SpMM kernels (results are
+    /// bit-for-bit independent of this; default 1).
+    pub threads: usize,
 }
 
 impl ChfsiOptions {
@@ -38,11 +42,20 @@ impl ChfsiOptions {
             degree: 20,
             guard: None,
             bound_steps: 12,
+            threads: 1,
         }
     }
 
     fn guard_count(&self) -> usize {
         self.guard.unwrap_or_else(|| super::guard_size(self.eig.n_eigs))
+    }
+
+    /// Iterate-block width (wanted pairs + guard, clamped to fit) on an
+    /// `n`-dimensional problem — the one formula shared by the solve
+    /// loop and workspace pre-sizing ([`super::solver::Solver`]).
+    pub fn block_width(&self, n: usize) -> usize {
+        let l = self.eig.n_eigs;
+        (l + self.guard_count()).min(n.saturating_sub(1)).max(l + 1)
     }
 }
 
@@ -52,20 +65,40 @@ pub fn solve(a: &CsrMatrix, opts: &ChfsiOptions, init: Option<&WarmStart>) -> Ei
     solve_with_backend(a, opts, init, &mut backend)
 }
 
-/// Solve with an explicit filter backend (native or PJRT/XLA).
+/// Solve with an explicit filter backend (native or PJRT/XLA), using a
+/// fresh workspace. Sequence drivers use [`solve_in`] directly so block
+/// buffers persist across warm-started problems.
 pub fn solve_with_backend(
     a: &CsrMatrix,
     opts: &ChfsiOptions,
     init: Option<&WarmStart>,
     backend: &mut dyn FilterBackend,
 ) -> EigResult {
+    let mut ws = Workspace::new(opts.threads);
+    solve_in(a, opts, init, backend, &mut ws)
+}
+
+/// The ChFSI engine (paper Algorithm 3) running inside a caller-owned
+/// [`Workspace`]: all block-sized buffers of the iteration loop (filter
+/// ping-pong, `A·Q`, Gram matrix, Ritz rotation, projected eigenproblem)
+/// live in `ws` and are reused across calls — allocation happens only at
+/// workspace-growth time, never per iteration.
+pub fn solve_in(
+    a: &CsrMatrix,
+    opts: &ChfsiOptions,
+    init: Option<&WarmStart>,
+    backend: &mut dyn FilterBackend,
+    ws: &mut Workspace,
+) -> EigResult {
     let t0 = Instant::now();
     flops::take();
+    // The options are the single source of truth for the thread count;
+    // the workspace just carries it to the kernels.
+    ws.threads = opts.threads.max(1);
     let n = a.rows();
     let l = opts.eig.n_eigs;
     assert!(l >= 1 && l < n, "need 1 ≤ L < n (L={l}, n={n})");
-    let guard = opts.guard_count();
-    let block = (l + guard).min(n - 1).max(l + 1);
+    let block = opts.block_width(n);
     let tol = opts.eig.tol;
 
     // ---- Initial block and spectral estimates --------------------------
@@ -76,9 +109,9 @@ pub fn solve_with_backend(
     // Iterate block: inherited subspace padded with random columns, or
     // fully random (ChFSI baseline / first problem in a sequence).
     let mut v = match init {
-        Some(ws) => {
-            let have = ws.vectors.cols().min(block);
-            let inherited = ws.vectors.cols_range(0, have);
+        Some(w) => {
+            let have = w.vectors.cols().min(block);
+            let inherited = w.vectors.cols_range(0, have);
             if have < block {
                 inherited.hcat(&Mat::randn(n, block - have, &mut rng))
             } else {
@@ -92,23 +125,28 @@ pub fn solve_with_backend(
     // spectrum (paper: λ ≈ λ'₁, [α, β] from (λ'₂ … λ'_L)); cold starts
     // take one Rayleigh–Ritz on the random block.
     let (mut target, mut alpha) = match init {
-        Some(ws) if ws.values.len() >= 2 => {
-            let lam1 = ws.values[0];
-            let lam_l = *ws.values.last().unwrap();
+        Some(w) if w.values.len() >= 2 => {
+            let lam1 = w.values[0];
+            let lam_l = *w.values.last().unwrap();
             // Block-capacity edge estimate: extrapolate the previous
             // spectrum by `guard` mean gaps past λ_L (≈ λ_{L+g}).
-            let gap = ((lam_l - lam1) / ws.values.len() as f64).max(1e-12 * lam_l.abs());
+            let gap = ((lam_l - lam1) / w.values.len() as f64).max(1e-12 * lam_l.abs());
             let extra = (block - l) as f64;
             (lam1 - 0.5 * gap, lam_l + (0.5 + extra) * gap)
         }
         _ => {
-            let q = ortho_against(None, &v);
-            let g = q.t_matmul(&a.spmm_alloc(&q));
-            let eig = sym_eig(&g);
-            v = q.matmul(&eig.vectors);
+            ortho_against_inplace(None, &mut v, &mut ws.gram, &mut ws.t2);
+            a.spmm_into(&v, &mut ws.ax, ws.threads);
+            v.t_matmul_into(&ws.ax, &mut ws.gram);
+            sym_eig_into(&ws.gram, &mut ws.eig);
+            v.matmul_cols_into(&ws.eig.vectors, 0, ws.eig.vectors.cols(), &mut ws.t4);
+            std::mem::swap(&mut v, &mut ws.t4);
             // Random-block Ritz values overestimate badly; use the
             // Lanczos lower estimate for the target.
-            (bounds.lower_est, eig.values[l.min(eig.values.len() - 1)])
+            (
+                bounds.lower_est,
+                ws.eig.values[l.min(ws.eig.values.len() - 1)],
+            )
         }
     };
 
@@ -118,6 +156,10 @@ pub fn solve_with_backend(
     let mut last_theta: Vec<f64> = Vec::new();
     let mut stats = SolveStats::default();
 
+    // The iteration loop is allocation-free modulo the (rare, prefix-
+    // bounded) locking appends: the filter ping-pongs through ws.t1-t3,
+    // A·Q lands in ws.ax, the projected problem in ws.gram/ws.eig, and
+    // the rotated block in ws.t4.
     while locked_vals.len() < l && stats.iterations < opts.eig.max_iters {
         stats.iterations += 1;
         let params = FilterParams {
@@ -128,52 +170,64 @@ pub fn solve_with_backend(
         }
         .sanitized();
 
-        // (line 3) filter the active block
+        // (line 3) filter the active block into ws.t1
         let t_phase = Instant::now();
-        let (filtered, ff) =
-            chebyshev::filtered_with_flops(backend, a, &v, &params);
+        let ff = chebyshev::filtered_into_with_flops(
+            backend,
+            a,
+            &v,
+            &params,
+            &mut ws.t1,
+            &mut ws.t2,
+            &mut ws.t3,
+            ws.threads,
+        );
         stats.filter_secs += t_phase.elapsed().as_secs_f64();
         stats.filter_flops += ff;
         stats.matvecs += v.cols() * opts.degree;
 
-        // (line 4) orthonormalize [locked | filtered]
+        // (line 4) orthonormalize [locked | filtered] in place: q = ws.t1
         let t_phase = Instant::now();
-        let q = ortho_against(locked_vecs.as_ref(), &filtered);
+        ortho_against_inplace(locked_vecs.as_ref(), &mut ws.t1, &mut ws.gram, &mut ws.t2);
         stats.qr_secs += t_phase.elapsed().as_secs_f64();
 
         // (line 5-6) Rayleigh–Ritz on the active subspace
         let t_phase = Instant::now();
-        let aq = a.spmm_alloc(&q);
-        stats.matvecs += q.cols();
-        let g = q.t_matmul(&aq);
-        let eig = sym_eig(&g);
-        let v_new = q.matmul(&eig.vectors); // ascending Ritz pairs
-        let theta = &eig.values;
+        a.spmm_into(&ws.t1, &mut ws.ax, ws.threads);
+        stats.matvecs += ws.t1.cols();
+        ws.t1.t_matmul_into(&ws.ax, &mut ws.gram);
+        sym_eig_into(&ws.gram, &mut ws.eig);
+        // v_new = Q · S, ascending Ritz pairs, into ws.t4.
+        ws.t1
+            .matmul_cols_into(&ws.eig.vectors, 0, ws.eig.vectors.cols(), &mut ws.t4);
         stats.rr_secs += t_phase.elapsed().as_secs_f64();
 
         // (line 7) residuals and prefix locking
         let t_phase = Instant::now();
         let want_here = l - locked_vals.len(); // still-needed pairs
-        let res = super::rel_residuals(a, &theta[..want_here.min(theta.len())], &v_new);
-        stats.matvecs += want_here.min(theta.len());
+        let cut = want_here.min(ws.eig.values.len());
+        let res =
+            super::rel_residuals_into(a, &ws.eig.values[..cut], &ws.t4, &mut ws.ax, ws.threads);
+        stats.matvecs += cut;
         let mut newly = 0;
         while newly < res.len() && res[newly] <= tol {
             newly += 1;
         }
         if newly > 0 {
-            let new_locked = v_new.cols_range(0, newly);
+            let new_locked = ws.t4.cols_range(0, newly);
             locked_vecs = Some(match &locked_vecs {
                 Some(lv) => lv.hcat(&new_locked),
                 None => new_locked,
             });
-            locked_vals.extend_from_slice(&theta[..newly]);
+            locked_vals.extend_from_slice(&ws.eig.values[..newly]);
         }
 
         stats.resid_secs += t_phase.elapsed().as_secs_f64();
 
         // Active block for the next sweep: non-locked Ritz vectors.
-        last_theta = theta[newly..].to_vec();
-        v = v_new.cols_range(newly, v_new.cols());
+        last_theta.clear();
+        last_theta.extend_from_slice(&ws.eig.values[newly..]);
+        v.assign_cols(&ws.t4, newly, ws.t4.cols());
 
         // Updated interval (ChASE policy): damp everything the block has
         // no capacity to represent — α tracks the largest active Ritz
@@ -181,6 +235,7 @@ pub fn solve_with_backend(
         // resolved by the Rayleigh–Ritz step.
         let remaining = l - locked_vals.len();
         if remaining > 0 {
+            let theta = &ws.eig.values;
             target = theta[newly.min(theta.len() - 1)];
             alpha = theta[theta.len() - 1];
             if !(alpha > target) {
@@ -223,6 +278,7 @@ pub fn solve_with_backend(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::symeig::sym_eig;
     use crate::operators::{self, GenOptions, OperatorKind};
 
     fn problem(kind: OperatorKind, grid: usize, seed: u64) -> CsrMatrix {
@@ -360,6 +416,31 @@ mod tests {
         let r = solve(&a, &opts, None);
         assert!(r.stats.converged);
         assert_eq!(r.values.len(), 5);
+    }
+
+    #[test]
+    fn reused_workspace_and_threads_are_bit_for_bit() {
+        // A reused workspace across a warm-started pair, at any thread
+        // count, must give the same answer as fresh per-problem solves.
+        let a = problem(OperatorKind::Helmholtz, 10, 9);
+        let mut opts = ChfsiOptions::from_eig(&EigOptions {
+            n_eigs: 6,
+            tol: 1e-9,
+            max_iters: 300,
+            seed: 0,
+        });
+        let fresh1 = solve(&a, &opts, None);
+        let fresh2 = solve(&a, &opts, Some(&fresh1.as_warm_start()));
+        for threads in [1usize, 2, 4] {
+            opts.threads = threads;
+            let mut backend = NativeFilter;
+            let mut ws = Workspace::new(threads);
+            let r1 = solve_in(&a, &opts, None, &mut backend, &mut ws);
+            let r2 = solve_in(&a, &opts, Some(&r1.as_warm_start()), &mut backend, &mut ws);
+            assert_eq!(r1.values, fresh1.values, "threads {threads}");
+            assert_eq!(r2.values, fresh2.values, "threads {threads}");
+            assert_eq!(r2.vectors, fresh2.vectors, "threads {threads}");
+        }
     }
 
     #[test]

@@ -9,10 +9,11 @@
 //! iteration and hypersensitive to the initial-subspace dimension —
 //! both effects reproduce here (Tables 1 and 2).
 
+use super::solver::Workspace;
 use super::{EigOptions, EigResult, SolveStats, WarmStart};
-use crate::linalg::dense::{dot, norm2, vaxpy};
+use crate::linalg::dense::norm2;
 use crate::linalg::qr::householder_qr;
-use crate::linalg::symeig::sym_eig;
+use crate::linalg::symeig::sym_eig_into;
 use crate::linalg::{flops, Mat};
 use crate::rng::Xoshiro256pp;
 use crate::sparse::CsrMatrix;
@@ -20,6 +21,20 @@ use std::time::Instant;
 
 /// Solve for the smallest `L` eigenpairs.
 pub fn solve(a: &CsrMatrix, opts: &EigOptions, init: Option<&WarmStart>) -> EigResult {
+    let mut ws = Workspace::new(1);
+    solve_in(a, opts, init, &mut ws)
+}
+
+/// [`solve`] inside a caller-owned, reusable [`Workspace`]: the `A·V`
+/// and `A·U` products, Ritz block, residual block, projected problem and
+/// correction vector all live in `ws`; only the growing search space
+/// itself allocates (that *is* workspace growth in JD).
+pub fn solve_in(
+    a: &CsrMatrix,
+    opts: &EigOptions,
+    init: Option<&WarmStart>,
+    ws: &mut Workspace,
+) -> EigResult {
     let t0 = Instant::now();
     flops::take();
     let n = a.rows();
@@ -38,41 +53,43 @@ pub fn solve(a: &CsrMatrix, opts: &EigOptions, init: Option<&WarmStart>) -> EigR
     // inherited subspace — exactly the Table 2 JD* modification that
     // changes the projected-problem dimension.
     let v0 = match init {
-        Some(ws) => ws.vectors.clone(),
+        Some(w) => w.vectors.clone(),
         None => Mat::randn(n, (l + g).min(maxdim), &mut rng),
     };
     let mut v = householder_qr(&v0);
     let mut best: Option<(Vec<f64>, Mat)> = None;
 
+    // Workspace roles per iteration: ws.ax = A·V, ws.t1 = Ritz block U,
+    // ws.t2 = A·U, ws.t3 = residual block (column j pairs with Ritz
+    // pair j), ws.gram/ws.eig = projected problem, ws.vec1 = correction.
     while stats.iterations < opts.max_iters {
         stats.iterations += 1;
         // Rayleigh–Ritz on the search space.
-        let av = a.spmm_alloc(&v);
+        a.spmm_into(&v, &mut ws.ax, ws.threads);
         stats.matvecs += v.cols();
-        let gm = v.t_matmul(&av);
-        let eig = sym_eig(&gm);
-        let want = l.min(eig.values.len());
-        let u = v.matmul(&eig.vectors.cols_range(0, want.max(block).min(eig.values.len())));
-        let theta = &eig.values;
+        v.t_matmul_into(&ws.ax, &mut ws.gram);
+        sym_eig_into(&ws.gram, &mut ws.eig);
+        let want = l.min(ws.eig.values.len());
+        let ucols = want.max(block).min(ws.eig.values.len());
+        v.matmul_cols_into(&ws.eig.vectors, 0, ucols, &mut ws.t1);
 
-        // Residuals of the wanted pairs.
-        let au = a.spmm_alloc(&u);
-        stats.matvecs += u.cols();
+        // Residuals of the wanted pairs (block held in ws.t3).
+        a.spmm_into(&ws.t1, &mut ws.t2, ws.threads);
+        stats.matvecs += ws.t1.cols();
         let mut n_conv = 0;
-        let mut residuals: Vec<Vec<f64>> = Vec::new();
-        let mut rel: Vec<f64> = Vec::new();
-        for j in 0..u.cols() {
-            let mut r = vec![0.0f64; n];
+        let mut rel: Vec<f64> = Vec::with_capacity(ucols);
+        ws.t3.set_shape(n, ucols); // fully overwritten below
+        for j in 0..ucols {
+            let theta_j = ws.eig.values[j];
             let mut an2 = 0.0;
             for i in 0..n {
-                let avi = au[(i, j)];
-                r[i] = avi - theta[j] * u[(i, j)];
+                let avi = ws.t2[(i, j)];
+                ws.t3[(i, j)] = avi - theta_j * ws.t1[(i, j)];
                 an2 += avi * avi;
             }
             flops::add(4 * n as u64);
-            let rn = norm2(&r) / an2.sqrt().max(1e-300);
+            let rn = ws.t3.col_norm(j) / an2.sqrt().max(1e-300);
             rel.push(rn);
-            residuals.push(r);
         }
         for j in 0..want {
             if rel[j] <= tol {
@@ -81,59 +98,74 @@ pub fn solve(a: &CsrMatrix, opts: &EigOptions, init: Option<&WarmStart>) -> EigR
                 break;
             }
         }
-        best = Some((theta[..want].to_vec(), u.cols_range(0, want)));
+        match &mut best {
+            Some((bv, bm)) => {
+                bv.clear();
+                bv.extend_from_slice(&ws.eig.values[..want]);
+                bm.assign_cols(&ws.t1, 0, want);
+            }
+            None => {
+                best = Some((ws.eig.values[..want].to_vec(), ws.t1.cols_range(0, want)))
+            }
+        }
         if n_conv >= l {
             break;
         }
 
-        // Restart *before* expanding (while `eig.vectors` still matches
-        // the current space dimension): compress to the best Ritz block.
+        // Restart *before* expanding (while the Ritz coefficients still
+        // match the current space dimension): compress to the best block.
         if v.cols() + block > maxdim {
-            let keep = (l + g).min(eig.vectors.cols());
-            let compressed = v.matmul(&eig.vectors.cols_range(0, keep));
-            v = householder_qr(&compressed);
+            let keep = (l + g).min(ws.eig.vectors.cols());
+            v.matmul_cols_into(&ws.eig.vectors, 0, keep, &mut ws.t4);
+            v = householder_qr(&ws.t4);
         }
 
         // Expand with diagonally-preconditioned corrections for the first
         // `block` non-converged pairs.
         let mut added = 0;
-        for j in n_conv..(n_conv + block).min(u.cols()) {
+        for j in n_conv..(n_conv + block).min(ucols) {
             if rel[j] <= tol {
                 continue;
             }
-            let mut t: Vec<f64> = (0..n)
-                .map(|i| {
-                    let mut d = diag[i] - theta[j];
-                    let floor = 0.01 * diag[i].abs().max(1.0);
-                    if d.abs() < floor {
-                        d = if d >= 0.0 { floor } else { -floor };
-                    }
-                    residuals[j][i] / d
-                })
-                .collect();
+            let theta_j = ws.eig.values[j];
+            ws.vec1.resize(n, 0.0);
+            for i in 0..n {
+                let mut d = diag[i] - theta_j;
+                let floor = 0.01 * diag[i].abs().max(1.0);
+                if d.abs() < floor {
+                    d = if d >= 0.0 { floor } else { -floor };
+                }
+                ws.vec1[i] = ws.t3[(i, j)] / d;
+            }
             flops::add(3 * n as u64);
-            // Orthogonalize into V (two passes).
+            // Orthogonalize into V (two passes; same dot/axpy order as a
+            // materialized column, so results are bit-for-bit unchanged).
             for _ in 0..2 {
                 for c in 0..v.cols() {
-                    let qc = v.col(c);
-                    let coef = dot(&qc, &t);
-                    vaxpy(-coef, &qc, &mut t);
+                    let mut coef = 0.0;
+                    for i in 0..n {
+                        coef += v[(i, c)] * ws.vec1[i];
+                    }
+                    flops::add(2 * n as u64);
+                    for i in 0..n {
+                        ws.vec1[i] += -coef * v[(i, c)];
+                    }
+                    flops::add(2 * n as u64);
                 }
             }
-            let nt = norm2(&t);
+            let nt = norm2(&ws.vec1);
             if nt > 1e-10 {
-                for x in &mut t {
+                for x in &mut ws.vec1 {
                     *x /= nt;
                 }
-                let tm = Mat::from_vec(n, 1, t);
-                v = v.hcat(&tm);
+                v = v.hcat_col(&ws.vec1);
                 added += 1;
             }
         }
         if added == 0 {
             // Stagnation: restart from the Ritz block with fresh noise.
-            let noise = Mat::randn(n, 2.min(n - u.cols()), &mut rng);
-            v = householder_qr(&u.hcat(&noise));
+            let noise = Mat::randn(n, 2.min(n - ws.t1.cols()), &mut rng);
+            v = householder_qr(&ws.t1.hcat(&noise));
         }
     }
 
@@ -146,6 +178,7 @@ pub fn solve(a: &CsrMatrix, opts: &EigOptions, init: Option<&WarmStart>) -> EigR
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::symeig::sym_eig;
     use crate::operators::{self, GenOptions, OperatorKind};
 
     fn problem(grid: usize, seed: u64) -> CsrMatrix {

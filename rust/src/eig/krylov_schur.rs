@@ -9,17 +9,29 @@
 //! default `mpd`-style sizing — which produces the distinct convergence
 //! profile visible in the reproduced Table 1.
 
+use super::solver::Workspace;
 use super::{EigOptions, EigResult, WarmStart};
 use crate::sparse::CsrMatrix;
 
 /// Solve with Krylov–Schur subspace sizing:
 /// `m = min(n−1, L + g + max(8, (L+g)/2))`, keeping `L + g/2` pairs.
 pub fn solve(a: &CsrMatrix, opts: &EigOptions, init: Option<&WarmStart>) -> EigResult {
+    let mut ws = Workspace::new(1);
+    solve_in(a, opts, init, &mut ws)
+}
+
+/// [`solve`] inside a caller-owned, reusable [`Workspace`].
+pub fn solve_in(
+    a: &CsrMatrix,
+    opts: &EigOptions,
+    init: Option<&WarmStart>,
+    ws: &mut Workspace,
+) -> EigResult {
     let l = opts.n_eigs;
     let g = super::guard_size(l);
     let keep = l + (g / 2).max(2);
     let m = (l + g + ((l + g) / 2).max(8)).min(a.rows() - 1);
-    super::lanczos::thick_restart_engine(a, opts, init, m, keep)
+    super::lanczos::thick_restart_engine(a, opts, init, m, keep, ws)
 }
 
 #[cfg(test)]

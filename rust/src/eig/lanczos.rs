@@ -7,9 +7,10 @@
 //! the roomy ARPACK-style subspace here, and the lean
 //! Krylov–Schur-style subspace in [`super::krylov_schur`].
 
+use super::solver::Workspace;
 use super::{EigOptions, EigResult, SolveStats, WarmStart};
 use crate::linalg::dense::{dot, norm2, vaxpy};
-use crate::linalg::symeig::sym_eig;
+use crate::linalg::symeig::sym_eig_into;
 use crate::linalg::{flops, Mat};
 use crate::rng::Xoshiro256pp;
 use crate::sparse::CsrMatrix;
@@ -17,22 +18,39 @@ use std::time::Instant;
 
 /// ARPACK-style restart dimension: `m = min(n−1, max(2(L+g), L+g+12))`.
 pub fn solve(a: &CsrMatrix, opts: &EigOptions, init: Option<&WarmStart>) -> EigResult {
+    let mut ws = Workspace::new(1);
+    solve_in(a, opts, init, &mut ws)
+}
+
+/// [`solve`] inside a caller-owned, reusable [`Workspace`].
+pub fn solve_in(
+    a: &CsrMatrix,
+    opts: &EigOptions,
+    init: Option<&WarmStart>,
+    ws: &mut Workspace,
+) -> EigResult {
     let l = opts.n_eigs;
     let keep = l + super::guard_size(l);
     let m = (2 * keep).max(keep + 12).min(a.rows() - 1);
-    thick_restart_engine(a, opts, init, m, keep)
+    thick_restart_engine(a, opts, init, m, keep, ws)
 }
 
 /// The shared thick-restart Lanczos engine.
 ///
 /// * `m_dim` — Krylov subspace dimension per cycle.
 /// * `keep`  — Ritz pairs retained at each restart.
+///
+/// The basis columns, matvec target, tridiagonal T and projected
+/// eigendecomposition all live in `ws` and are reused across restarts
+/// *and* across solves; the only per-solve allocation is the returned
+/// Ritz block.
 pub(crate) fn thick_restart_engine(
     a: &CsrMatrix,
     opts: &EigOptions,
     init: Option<&WarmStart>,
     m_dim: usize,
     keep: usize,
+    ws: &mut Workspace,
 ) -> EigResult {
     let t0 = Instant::now();
     flops::take();
@@ -45,89 +63,97 @@ pub(crate) fn thick_restart_engine(
     let mut rng = Xoshiro256pp::seed_from_u64(opts.seed);
     let mut stats = SolveStats::default();
 
-    // Basis Q: m_dim + 1 columns, stored column-contiguous for the
-    // dot/axpy-heavy inner loop.
-    let mut q: Vec<Vec<f64>> = Vec::with_capacity(m_dim + 1);
+    // Basis Q: m_dim + 1 workspace column slots, column-contiguous for
+    // the dot/axpy-heavy inner loop. During expansion of column j the
+    // active basis is exactly slots 0..=j.
+    ws.ensure_basis(m_dim + 1, n);
+    ws.vec1.resize(n, 0.0);
+    ws.vec2.resize(n, 0.0);
     // Starting vector: warm starts collapse the inherited subspace into
     // one vector (ARPACK's v0 contract — Table 2's Eigsh*/KS* variants).
-    let mut v0 = vec![0.0f64; n];
-    match init {
-        Some(ws) => {
-            for j in 0..ws.vectors.cols() {
-                for i in 0..n {
-                    v0[i] += ws.vectors[(i, j)];
+    {
+        let v0 = &mut ws.basis[0];
+        v0.fill(0.0);
+        match init {
+            Some(w) => {
+                for j in 0..w.vectors.cols() {
+                    for i in 0..n {
+                        v0[i] += w.vectors[(i, j)];
+                    }
                 }
+                flops::add((n * w.vectors.cols()) as u64);
             }
-            flops::add((n * ws.vectors.cols()) as u64);
+            None => rng.fill_normal(v0),
         }
-        None => rng.fill_normal(&mut v0),
+        let nrm = norm2(v0);
+        v0.iter_mut().for_each(|x| *x /= nrm);
     }
-    let nrm = norm2(&v0);
-    v0.iter_mut().for_each(|x| *x /= nrm);
-    q.push(v0);
 
-    let mut t = Mat::zeros(m_dim, m_dim);
+    // T lives in ws.gram (resize zeroes it); the Ritz block is the one
+    // per-solve allocation because EigResult takes ownership of it.
+    ws.gram.resize(m_dim, m_dim);
     let mut start = 0usize; // index of the newest basis column to expand
-    let mut w = vec![0.0f64; n];
     let mut beta_last = 0.0f64;
+    let mut y = Mat::zeros(0, 0);
 
     loop {
         stats.iterations += 1;
         // ---- Lanczos expansion from `start` to `m_dim` -----------------
         for j in start..m_dim {
-            a.spmv(&q[j], &mut w);
+            // w = A q_j (ws.vec1 is the matvec target).
+            a.spmv_into(&ws.basis[j], &mut ws.vec1, ws.threads);
             stats.matvecs += 1;
             // Full reorthogonalization (two MGS passes); only the
             // (arrowhead-)tridiagonal coefficients enter T.
             for pass in 0..2 {
-                for (i, qi) in q.iter().enumerate() {
-                    let c = dot(qi, &w);
-                    vaxpy(-c, qi, &mut w);
+                for i in 0..=j {
+                    let c = dot(&ws.basis[i], &ws.vec1);
+                    vaxpy(-c, &ws.basis[i], &mut ws.vec1);
                     if pass == 0 && i == j {
-                        t[(j, j)] += c;
+                        ws.gram[(j, j)] += c;
                     }
                 }
             }
-            let beta = norm2(&w);
+            let beta = norm2(&ws.vec1);
             if j + 1 < m_dim {
-                t[(j, j + 1)] = beta;
-                t[(j + 1, j)] = beta;
+                ws.gram[(j, j + 1)] = beta;
+                ws.gram[(j + 1, j)] = beta;
             } else {
                 beta_last = beta;
             }
             if beta < 1e-12 {
                 // Breakdown: invariant subspace found. Insert a fresh
                 // random direction (decoupled: beta entry stays 0).
-                let mut fresh = vec![0.0f64; n];
-                rng.fill_normal(&mut fresh);
-                for qi in q.iter() {
-                    let c = dot(qi, &fresh);
-                    vaxpy(-c, qi, &mut fresh);
+                rng.fill_normal(&mut ws.vec2);
+                for i in 0..=j {
+                    let c = dot(&ws.basis[i], &ws.vec2);
+                    vaxpy(-c, &ws.basis[i], &mut ws.vec2);
                 }
-                let fn_ = norm2(&fresh);
-                fresh.iter_mut().for_each(|x| *x /= fn_);
+                let fn_ = norm2(&ws.vec2);
+                ws.vec2.iter_mut().for_each(|x| *x /= fn_);
                 if j + 1 < m_dim {
-                    t[(j, j + 1)] = 0.0;
-                    t[(j + 1, j)] = 0.0;
+                    ws.gram[(j, j + 1)] = 0.0;
+                    ws.gram[(j + 1, j)] = 0.0;
                 } else {
                     beta_last = 0.0;
                 }
-                q.push(fresh);
+                ws.basis[j + 1].copy_from_slice(&ws.vec2);
             } else {
-                q.push(w.iter().map(|x| x / beta).collect());
+                for (dst, src) in ws.basis[j + 1].iter_mut().zip(&ws.vec1) {
+                    *dst = src / beta;
+                }
             }
         }
 
         // ---- Rayleigh–Ritz on T ---------------------------------------
-        let eig = sym_eig(&t);
-        let theta = &eig.values;
-        let s = &eig.vectors;
+        sym_eig_into(&ws.gram, &mut ws.eig);
 
         // Residuals of the l wanted (smallest) Ritz pairs.
         let mut n_conv = 0;
         for i in 0..l {
-            let res = (beta_last * s[(m_dim - 1, i)]).abs();
-            let denom = (theta[i] * theta[i] + res * res).sqrt().max(1e-300);
+            let res = (beta_last * ws.eig.vectors[(m_dim - 1, i)]).abs();
+            let theta_i = ws.eig.values[i];
+            let denom = (theta_i * theta_i + res * res).sqrt().max(1e-300);
             if res / denom <= tol {
                 n_conv += 1;
             } else {
@@ -137,13 +163,13 @@ pub(crate) fn thick_restart_engine(
 
         let done = n_conv >= l || stats.iterations >= opts.max_iters;
         let k_out = if done { l } else { keep };
-        // Ritz vectors Y = Q_m · S[:, :k_out].
-        let mut y = Mat::zeros(n, k_out);
+        // Ritz vectors Y = Q_m · S[:, :k_out] (every entry written).
+        y.set_shape(n, k_out);
         for col in 0..k_out {
             for i in 0..n {
                 let mut acc = 0.0;
                 for jj in 0..m_dim {
-                    acc += q[jj][i] * s[(jj, col)];
+                    acc += ws.basis[jj][i] * ws.eig.vectors[(jj, col)];
                 }
                 y[(i, col)] = acc;
             }
@@ -153,23 +179,25 @@ pub(crate) fn thick_restart_engine(
         if done {
             stats.flops = flops::take();
             stats.secs = t0.elapsed().as_secs_f64();
-            let values = theta[..l].to_vec();
+            let values = ws.eig.values[..l].to_vec();
             return EigResult::finalize(a, values, y, stats, tol);
         }
 
         // ---- Thick restart --------------------------------------------
-        let resid = q[m_dim].clone();
-        q.clear();
+        // Refill slots 0..keep with the kept Ritz vectors, then swap the
+        // residual (slot m_dim) into slot keep — O(1), no copies.
         for c in 0..keep {
-            q.push(y.col(c));
+            for i in 0..n {
+                ws.basis[c][i] = y[(i, c)];
+            }
         }
-        q.push(resid);
-        t = Mat::zeros(m_dim, m_dim);
+        ws.basis.swap(keep, m_dim);
+        ws.gram.resize(m_dim, m_dim); // T = 0
         for i in 0..keep {
-            t[(i, i)] = theta[i];
-            let b = beta_last * s[(m_dim - 1, i)];
-            t[(i, keep)] = b;
-            t[(keep, i)] = b;
+            ws.gram[(i, i)] = ws.eig.values[i];
+            let b = beta_last * ws.eig.vectors[(m_dim - 1, i)];
+            ws.gram[(i, keep)] = b;
+            ws.gram[(keep, i)] = b;
         }
         start = keep;
     }
@@ -178,6 +206,7 @@ pub(crate) fn thick_restart_engine(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::symeig::sym_eig;
     use crate::operators::{self, GenOptions, OperatorKind};
 
     fn problem(kind: OperatorKind, grid: usize, seed: u64) -> CsrMatrix {
@@ -287,6 +316,26 @@ mod tests {
         for v in &r.values {
             assert!((v - 1.0).abs() < 1e-9);
         }
+    }
+
+    #[test]
+    fn reused_workspace_is_bit_for_bit() {
+        let a = problem(OperatorKind::Poisson, 10, 6);
+        let opts = EigOptions {
+            n_eigs: 4,
+            tol: 1e-9,
+            max_iters: 500,
+            seed: 2,
+        };
+        let fresh_a = solve(&a, &opts, None);
+        let fresh_b = solve(&a, &opts, Some(&fresh_a.as_warm_start()));
+        let mut ws = Workspace::new(2);
+        let r_a = solve_in(&a, &opts, None, &mut ws);
+        let r_b = solve_in(&a, &opts, Some(&r_a.as_warm_start()), &mut ws);
+        assert_eq!(r_a.values, fresh_a.values);
+        assert_eq!(r_a.vectors, fresh_a.vectors);
+        assert_eq!(r_b.values, fresh_b.values);
+        assert_eq!(r_b.vectors, fresh_b.vectors);
     }
 
     #[test]

@@ -6,16 +6,30 @@
 //! residual, conjugate direction) and extracts the new iterate and the
 //! implicit CG direction from the Ritz coefficients.
 
+use super::solver::Workspace;
 use super::{EigOptions, EigResult, SolveStats, WarmStart};
 use crate::linalg::qr::householder_qr;
-use crate::linalg::symeig::sym_eig;
-use crate::linalg::{flops, Mat};
+use crate::linalg::symeig::sym_eig_into;
+use crate::linalg::{dense, flops, Mat};
 use crate::rng::Xoshiro256pp;
 use crate::sparse::CsrMatrix;
 use std::time::Instant;
 
 /// Solve for the smallest `L` eigenpairs.
 pub fn solve(a: &CsrMatrix, opts: &EigOptions, init: Option<&WarmStart>) -> EigResult {
+    let mut ws = Workspace::new(1);
+    solve_in(a, opts, init, &mut ws)
+}
+
+/// [`solve`] inside a caller-owned, reusable [`Workspace`]: the `A·X`
+/// product, residual block, preconditioned block, `[X|W|P]` frame,
+/// Gram matrix and projected eigendecomposition all live in `ws`.
+pub fn solve_in(
+    a: &CsrMatrix,
+    opts: &EigOptions,
+    init: Option<&WarmStart>,
+    ws: &mut Workspace,
+) -> EigResult {
     let t0 = Instant::now();
     flops::take();
     let n = a.rows();
@@ -34,9 +48,9 @@ pub fn solve(a: &CsrMatrix, opts: &EigOptions, init: Option<&WarmStart>) -> EigR
 
     // Initial block.
     let x0 = match init {
-        Some(ws) => {
-            let have = ws.vectors.cols().min(k);
-            let inh = ws.vectors.cols_range(0, have);
+        Some(w) => {
+            let have = w.vectors.cols().min(k);
+            let inh = w.vectors.cols_range(0, have);
             if have < k {
                 inh.hcat(&Mat::randn(n, k - have, &mut rng))
             } else {
@@ -50,23 +64,28 @@ pub fn solve(a: &CsrMatrix, opts: &EigOptions, init: Option<&WarmStart>) -> EigR
     let mut theta = vec![0.0f64; k];
     let mut best: Option<(Vec<f64>, Mat)> = None;
 
+    // Workspace roles per iteration: ws.ax = A·X then A·S, ws.t3 =
+    // residual block R then conjugate direction P⁺, ws.t2 =
+    // preconditioned block W then rotated iterate X⁺, ws.t1 = the
+    // [X|W|P] frame, ws.gram/ws.eig = the projected problem, ws.small =
+    // Ritz-coefficient slice.
     while stats.iterations < opts.max_iters {
         stats.iterations += 1;
-        let ax = a.spmm_alloc(&x);
+        a.spmm_into(&x, &mut ws.ax, ws.threads);
         stats.matvecs += x.cols();
         // Rayleigh quotients per column (X has orthonormal columns).
         for j in 0..k {
             let mut t = 0.0;
             for i in 0..n {
-                t += x[(i, j)] * ax[(i, j)];
+                t += x[(i, j)] * ws.ax[(i, j)];
             }
             theta[j] = t;
         }
         flops::add(2 * (n * k) as u64);
         // Residuals R = AX − XΘ and relative norms.
-        let mut r = ax.clone();
+        ws.t3.copy_from(&ws.ax);
         for i in 0..n {
-            let rrow = r.row_mut(i);
+            let rrow = ws.t3.row_mut(i);
             let xrow = x.row(i);
             for j in 0..k {
                 rrow[j] -= theta[j] * xrow[j];
@@ -75,24 +94,31 @@ pub fn solve(a: &CsrMatrix, opts: &EigOptions, init: Option<&WarmStart>) -> EigR
         flops::add(2 * (n * k) as u64);
         let mut n_conv = 0;
         for j in 0..l {
-            let rn = r.col_norm(j);
-            let an = ax.col_norm(j).max(1e-300);
+            let rn = ws.t3.col_norm(j);
+            let an = ws.ax.col_norm(j).max(1e-300);
             if rn / an <= tol {
                 n_conv += 1;
             } else {
                 break;
             }
         }
-        best = Some((theta[..l].to_vec(), x.cols_range(0, l)));
+        match &mut best {
+            Some((bv, bm)) => {
+                bv.clear();
+                bv.extend_from_slice(&theta[..l]);
+                bm.assign_cols(&x, 0, l);
+            }
+            None => best = Some((theta[..l].to_vec(), x.cols_range(0, l))),
+        }
         if n_conv >= l {
             break;
         }
 
         // Preconditioned residual W: clamped Jacobi (diag(A) − θ_j)⁻¹ r.
-        let mut w = Mat::zeros(n, k);
+        ws.t2.set_shape(n, k); // fully overwritten below
         for i in 0..n {
-            let wrow = w.row_mut(i);
-            let rrow = r.row(i);
+            let wrow = ws.t2.row_mut(i);
+            let rrow = ws.t3.row(i);
             for j in 0..k {
                 let mut d = diag[i] - theta[j];
                 let floor = 0.01 * diag[i].abs().max(1.0);
@@ -104,39 +130,51 @@ pub fn solve(a: &CsrMatrix, opts: &EigOptions, init: Option<&WarmStart>) -> EigR
         }
         flops::add(3 * (n * k) as u64);
 
-        // Frame S = [X | W | P], orthonormalized.
-        let s_raw = match &p {
-            Some(pm) => x.hcat(&w).hcat(pm),
-            None => x.hcat(&w),
-        };
-        let s = householder_qr(&s_raw);
-        // Rayleigh–Ritz on the frame.
-        let as_ = a.spmm_alloc(&s);
-        stats.matvecs += s.cols();
-        let g = s.t_matmul(&as_);
-        let eig = sym_eig(&g);
-        let c = eig.vectors.cols_range(0, k);
-        let x_new = s.matmul(&c);
-        // Implicit conjugate direction: the W/P contribution only.
-        let mut c_p = c.clone();
-        for i in 0..k {
-            for j in 0..k {
-                c_p[(i, j)] = 0.0;
+        // Frame S = [X | W | P] assembled in ws.t1, then orthonormalized.
+        let width = if p.is_some() { 3 * k } else { 2 * k };
+        ws.t1.set_shape(n, width); // fully overwritten below
+        for i in 0..n {
+            let srow = ws.t1.row_mut(i);
+            srow[..k].copy_from_slice(x.row(i));
+            srow[k..2 * k].copy_from_slice(ws.t2.row(i));
+            if let Some(pm) = &p {
+                srow[2 * k..].copy_from_slice(pm.row(i));
             }
         }
-        let mut p_new = s.matmul(&c_p);
+        let s = householder_qr(&ws.t1);
+        // Rayleigh–Ritz on the frame.
+        a.spmm_into(&s, &mut ws.ax, ws.threads);
+        stats.matvecs += s.cols();
+        s.t_matmul_into(&ws.ax, &mut ws.gram);
+        sym_eig_into(&ws.gram, &mut ws.eig);
+        // X⁺ = S · C with C the k leading Ritz coefficient columns.
+        s.matmul_cols_into(&ws.eig.vectors, 0, k, &mut ws.t2);
+        // Implicit conjugate direction: the W/P contribution only.
+        ws.small.assign_cols(&ws.eig.vectors, 0, k);
+        for i in 0..k {
+            for j in 0..k {
+                ws.small[(i, j)] = 0.0;
+            }
+        }
+        ws.t3.set_shape(s.rows(), ws.small.cols()); // gemm(β=0) zero-fills
+        dense::gemm(1.0, &s, &ws.small, 0.0, &mut ws.t3);
         // Normalize direction columns (guard against collapse).
         for j in 0..k {
-            let nn = p_new.col_norm(j);
+            let nn = ws.t3.col_norm(j);
             if nn > 1e-12 {
                 for i in 0..n {
-                    p_new[(i, j)] /= nn;
+                    ws.t3[(i, j)] /= nn;
                 }
             }
         }
-        x = x_new;
-        p = Some(p_new);
-        theta.copy_from_slice(&eig.values[..k]);
+        std::mem::swap(&mut x, &mut ws.t2);
+        match &mut p {
+            // O(1) buffer swap: ws.t3's old contents are dead (fully
+            // overwritten by the next iteration's residual step).
+            Some(pm) => std::mem::swap(pm, &mut ws.t3),
+            None => p = Some(ws.t3.clone()),
+        }
+        theta.copy_from_slice(&ws.eig.values[..k]);
     }
 
     stats.flops = flops::take();
@@ -148,6 +186,7 @@ pub fn solve(a: &CsrMatrix, opts: &EigOptions, init: Option<&WarmStart>) -> EigR
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::linalg::symeig::sym_eig;
     use crate::operators::{self, GenOptions, OperatorKind};
 
     fn problem(kind: OperatorKind, grid: usize, seed: u64) -> CsrMatrix {
@@ -214,6 +253,25 @@ mod tests {
             warm.stats.iterations,
             cold.stats.iterations
         );
+    }
+
+    #[test]
+    fn reused_workspace_is_bit_for_bit() {
+        let a = problem(OperatorKind::Helmholtz, 9, 5);
+        let opts = EigOptions {
+            n_eigs: 4,
+            tol: 1e-8,
+            max_iters: 600,
+            seed: 1,
+        };
+        let fresh_a = solve(&a, &opts, None);
+        let fresh_b = solve(&a, &opts, Some(&fresh_a.as_warm_start()));
+        let mut ws = Workspace::new(2);
+        let r_a = solve_in(&a, &opts, None, &mut ws);
+        let r_b = solve_in(&a, &opts, Some(&r_a.as_warm_start()), &mut ws);
+        assert_eq!(r_a.values, fresh_a.values);
+        assert_eq!(r_b.values, fresh_b.values);
+        assert_eq!(r_b.vectors, fresh_b.vectors);
     }
 
     #[test]

@@ -22,7 +22,10 @@ pub mod krylov_schur;
 pub mod lanczos;
 pub mod lobpcg;
 pub mod scsf;
+pub mod solver;
 pub mod spectral_bounds;
+
+pub use solver::{EigSolver, Solver, Workspace};
 
 use crate::linalg::{flops, Mat};
 use crate::sparse::CsrMatrix;
@@ -130,8 +133,23 @@ impl EigResult {
 
 /// Relative residuals `‖Av_j − λ_j v_j‖₂ / ‖Av_j‖₂` (paper §D.5).
 pub fn rel_residuals(a: &CsrMatrix, values: &[f64], vectors: &Mat) -> Vec<f64> {
+    let mut av = Mat::zeros(0, 0);
+    rel_residuals_into(a, values, vectors, &mut av, 1)
+}
+
+/// Buffer-reusing [`rel_residuals`]: the `A·V` product is written into
+/// the caller's `av` buffer (resized in place) with `threads`
+/// row-partitioned threads. Identical arithmetic for any thread count.
+pub fn rel_residuals_into(
+    a: &CsrMatrix,
+    values: &[f64],
+    vectors: &Mat,
+    av: &mut Mat,
+    threads: usize,
+) -> Vec<f64> {
     assert!(values.len() <= vectors.cols());
-    let av = a.spmm_alloc(vectors);
+    a.spmm_into(vectors, av, threads);
+    let av = &*av;
     let n = vectors.rows();
     values
         .iter()
@@ -191,23 +209,28 @@ impl SolverKind {
         }
     }
 
+    /// Build the unified [`EigSolver`] instance for this kind — the one
+    /// entry point all solver dispatch routes through.
+    pub fn instance(self, opts: &EigOptions) -> Solver {
+        Solver::new(self, opts)
+    }
+
     /// Solve one problem with this solver (`init` honoured by the
     /// warm-start-capable algorithms; Table 2's `*` variants).
+    ///
+    /// Convenience wrapper over the [`EigSolver`] trait: prepares a
+    /// fresh [`Workspace`] and solves in it. Sequence drivers that want
+    /// cross-problem buffer reuse call [`SolverKind::instance`] and hold
+    /// the workspace themselves.
     pub fn solve(
         self,
         a: &CsrMatrix,
         opts: &EigOptions,
         init: Option<&WarmStart>,
     ) -> EigResult {
-        match self {
-            SolverKind::Eigsh => lanczos::solve(a, opts, init),
-            SolverKind::Lobpcg => lobpcg::solve(a, opts, init),
-            SolverKind::KrylovSchur => krylov_schur::solve(a, opts, init),
-            SolverKind::JacobiDavidson => jacobi_davidson::solve(a, opts, init),
-            SolverKind::Chfsi | SolverKind::Scsf => {
-                chfsi::solve(a, &chfsi::ChfsiOptions::from_eig(opts), init)
-            }
-        }
+        let solver = self.instance(opts);
+        let mut ws = solver.prepare(a);
+        solver.solve(a, &mut ws, init)
     }
 }
 

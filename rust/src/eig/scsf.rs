@@ -8,6 +8,7 @@
 
 use super::chebyshev::FilterBackend;
 use super::chfsi::{self, ChfsiOptions};
+use super::solver::Workspace;
 use super::{EigResult, WarmStart};
 use crate::operators::Problem;
 use crate::sort::{self, SortMethod, SortOutcome};
@@ -96,10 +97,26 @@ pub fn solve_sequence(problems: &[Problem], opts: &ScsfOptions) -> SequenceResul
 
 /// Solve a problem set with SCSF on an explicit filter backend (used by
 /// the PJRT/XLA integration and by the pipeline workers).
+///
+/// One [`Workspace`] is shared across the whole warm-started sequence —
+/// this is the sequence-level payoff of the zero-alloc refactor: after
+/// the first problem, solver iterations run entirely in reused buffers.
 pub fn solve_sequence_with_backend(
     problems: &[Problem],
     opts: &ScsfOptions,
     backend: &mut dyn FilterBackend,
+) -> SequenceResult {
+    let mut ws = Workspace::new(opts.chfsi.threads);
+    solve_sequence_in(problems, opts, backend, &mut ws)
+}
+
+/// [`solve_sequence_with_backend`] inside a caller-owned [`Workspace`]
+/// (pipeline shard workers hold one workspace for their whole lifetime).
+pub fn solve_sequence_in(
+    problems: &[Problem],
+    opts: &ScsfOptions,
+    backend: &mut dyn FilterBackend,
+    ws: &mut Workspace,
 ) -> SequenceResult {
     assert!(!problems.is_empty());
     let sort = sort::sort_problems(problems, opts.sort);
@@ -107,7 +124,7 @@ pub fn solve_sequence_with_backend(
     let mut warm: Option<WarmStart> = None;
     for &idx in &sort.order {
         let a = &problems[idx].matrix;
-        let r = chfsi::solve_with_backend(a, &opts.chfsi, warm.as_ref(), backend);
+        let r = chfsi::solve_in(a, &opts.chfsi, warm.as_ref(), backend, ws);
         if opts.warm_start {
             warm = Some(r.as_warm_start());
         }

@@ -1,0 +1,304 @@
+//! The unified solver interface: one [`EigSolver`] trait over all six
+//! [`SolverKind`]s, and the preallocated [`Workspace`] their iteration
+//! loops run in.
+//!
+//! The paper's speedup (and the ROADMAP's "as fast as the hardware
+//! allows") lives in the per-iteration cost of filter → QR →
+//! Rayleigh–Ritz → residual. Before this refactor every solver
+//! re-allocated its block buffers each solve *and* each iteration
+//! (`spmm_alloc` in the hot loop); with it, a `Workspace` is prepared
+//! once per problem shape and reused across a warm-started sequence —
+//! buffers grow monotonically and never shrink, so the steady state of
+//! a dataset run is allocation-free inside the solver loops
+//! (DESIGN.md §Workspace-architecture).
+//!
+//! ```no_run
+//! use scsf::eig::solver::EigSolver;
+//! use scsf::eig::{EigOptions, SolverKind};
+//! # let a = scsf::sparse::CsrMatrix::eye(64);
+//! let solver = SolverKind::Chfsi.instance(&EigOptions::default());
+//! let mut ws = solver.prepare(&a);
+//! let r1 = solver.solve(&a, &mut ws, None);
+//! let warm = r1.as_warm_start();
+//! let r2 = solver.solve(&a, &mut ws, Some(&warm)); // zero new blocks
+//! ```
+
+use super::chebyshev::NativeFilter;
+use super::chfsi::{self, ChfsiOptions};
+use super::{
+    jacobi_davidson, krylov_schur, lanczos, lobpcg, EigOptions, EigResult, SolverKind, WarmStart,
+};
+use crate::linalg::symeig::SymEig;
+use crate::linalg::Mat;
+use crate::sparse::CsrMatrix;
+
+/// Preallocated, reusable scratch for one solver instance.
+///
+/// All buffers grow on demand (via [`Mat::resize`], which keeps the
+/// backing allocation) and persist across [`EigSolver::solve`] calls,
+/// so a warm-started sequence allocates only on its first problem.
+#[derive(Debug)]
+pub struct Workspace {
+    /// Thread count for the row-partitioned SpMM/SpMV kernels
+    /// ([`CsrMatrix::spmm_into`] and friends). Results are bit-for-bit
+    /// independent of this value. Set at construction; solver entry
+    /// points that carry their own thread knob (`ChfsiOptions::threads`)
+    /// overwrite it on entry, so the options stay the source of truth.
+    pub threads: usize,
+    /// `A·X` product block (`n × k`).
+    pub ax: Mat,
+    /// General block scratch #1 (filter ping / orthonormal basis).
+    pub t1: Mat,
+    /// General block scratch #2 (filter pong / correction block).
+    pub t2: Mat,
+    /// General block scratch #3 (filter third buffer / residual block).
+    pub t3: Mat,
+    /// General block scratch #4 (LOBPCG frame / rotated iterate).
+    pub t4: Mat,
+    /// Projected (Gram) matrix scratch (`k × k`).
+    pub gram: Mat,
+    /// Small dense scratch (Ritz-coefficient slices and the like).
+    pub small: Mat,
+    /// Reusable symmetric eigendecomposition of the projected problem.
+    pub eig: SymEig,
+    /// Lanczos basis columns (`m+1` vectors of length `n`).
+    pub basis: Vec<Vec<f64>>,
+    /// Vector scratch #1 (Lanczos `w`, JD correction).
+    pub vec1: Vec<f64>,
+    /// Vector scratch #2.
+    pub vec2: Vec<f64>,
+}
+
+impl Workspace {
+    /// Empty workspace; buffers grow on first use.
+    pub fn new(threads: usize) -> Self {
+        Self {
+            threads: threads.max(1),
+            ax: Mat::zeros(0, 0),
+            t1: Mat::zeros(0, 0),
+            t2: Mat::zeros(0, 0),
+            t3: Mat::zeros(0, 0),
+            t4: Mat::zeros(0, 0),
+            gram: Mat::zeros(0, 0),
+            small: Mat::zeros(0, 0),
+            eig: SymEig {
+                values: vec![],
+                vectors: Mat::zeros(0, 0),
+            },
+            basis: Vec::new(),
+            vec1: Vec::new(),
+            vec2: Vec::new(),
+        }
+    }
+
+    /// Pre-size the block buffers for an `n × block` iterate so the
+    /// first iteration is already allocation-free.
+    pub fn reserve(&mut self, n: usize, block: usize) {
+        self.ax.resize(n, block);
+        self.t1.resize(n, block);
+        self.t2.resize(n, block);
+        self.t3.resize(n, block);
+        self.t4.resize(n, block);
+        self.gram.resize(block, block);
+        self.vec1.resize(n, 0.0);
+        self.vec2.resize(n, 0.0);
+    }
+
+    /// Ensure at least `count` basis vectors of length `n` exist
+    /// (Lanczos/Krylov–Schur engine storage), zeroing recycled ones is
+    /// the caller's job — the engine overwrites every entry it reads.
+    pub fn ensure_basis(&mut self, count: usize, n: usize) {
+        for b in &mut self.basis {
+            if b.len() != n {
+                b.clear();
+                b.resize(n, 0.0);
+            }
+        }
+        while self.basis.len() < count {
+            self.basis.push(vec![0.0; n]);
+        }
+    }
+
+    /// Total f64 *capacity* currently held. Stable across same-shape
+    /// re-solves (buffers only ever grow), which is what the regression
+    /// tests assert.
+    pub fn capacity_f64(&self) -> usize {
+        self.ax.capacity()
+            + self.t1.capacity()
+            + self.t2.capacity()
+            + self.t3.capacity()
+            + self.t4.capacity()
+            + self.gram.capacity()
+            + self.small.capacity()
+            + self.eig.vectors.capacity()
+            + self.eig.values.capacity()
+            + self.basis.iter().map(|b| b.capacity()).sum::<usize>()
+            + self.vec1.capacity()
+            + self.vec2.capacity()
+    }
+}
+
+/// The unified solver interface every [`SolverKind`] routes through:
+/// size a reusable [`Workspace`] for a problem shape, then solve any
+/// number of (same-shaped) problems in it, optionally warm-started.
+pub trait EigSolver {
+    /// Build a workspace sized for `a` (allocation happens here and at
+    /// workspace growth, never inside the iteration loops).
+    fn prepare(&self, a: &CsrMatrix) -> Workspace;
+
+    /// Solve one problem inside `ws`, optionally warm-started from a
+    /// previous, similar problem's eigenpairs.
+    fn solve(&self, a: &CsrMatrix, ws: &mut Workspace, init: Option<&WarmStart>) -> EigResult;
+
+    /// Display label (matches the paper-table column names).
+    fn label(&self) -> &'static str;
+}
+
+/// Concrete [`EigSolver`] for any [`SolverKind`], carrying the solver
+/// options. Construct via [`SolverKind::instance`].
+#[derive(Debug, Clone, Copy)]
+pub struct Solver {
+    kind: SolverKind,
+    opts: ChfsiOptions,
+}
+
+impl Solver {
+    /// New instance from base options (ChFSI/SCSF take the paper-default
+    /// filter parameters; use [`Solver::with_chfsi`] to override them).
+    pub fn new(kind: SolverKind, opts: &EigOptions) -> Self {
+        Self {
+            kind,
+            opts: ChfsiOptions::from_eig(opts),
+        }
+    }
+
+    /// New instance with explicit ChFSI options (degree, guard, threads).
+    pub fn with_chfsi(kind: SolverKind, opts: ChfsiOptions) -> Self {
+        Self { kind, opts }
+    }
+
+    /// The solver kind this instance dispatches to.
+    pub fn kind(&self) -> SolverKind {
+        self.kind
+    }
+
+    /// Iterate-block width this instance will use on an `n`-dimensional
+    /// problem (wanted pairs + guard vectors, clamped to the dimension —
+    /// honours a custom `ChfsiOptions::guard`).
+    pub fn block_width(&self, n: usize) -> usize {
+        self.opts.block_width(n)
+    }
+}
+
+impl EigSolver for Solver {
+    fn prepare(&self, a: &CsrMatrix) -> Workspace {
+        let mut ws = Workspace::new(self.opts.threads);
+        ws.reserve(a.rows(), self.block_width(a.rows()));
+        ws
+    }
+
+    fn solve(&self, a: &CsrMatrix, ws: &mut Workspace, init: Option<&WarmStart>) -> EigResult {
+        match self.kind {
+            SolverKind::Eigsh => lanczos::solve_in(a, &self.opts.eig, init, ws),
+            SolverKind::Lobpcg => lobpcg::solve_in(a, &self.opts.eig, init, ws),
+            SolverKind::KrylovSchur => krylov_schur::solve_in(a, &self.opts.eig, init, ws),
+            SolverKind::JacobiDavidson => {
+                jacobi_davidson::solve_in(a, &self.opts.eig, init, ws)
+            }
+            SolverKind::Chfsi | SolverKind::Scsf => {
+                let mut backend = NativeFilter;
+                chfsi::solve_in(a, &self.opts, init, &mut backend, ws)
+            }
+        }
+    }
+
+    fn label(&self) -> &'static str {
+        self.kind.label()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operators::{self, GenOptions, OperatorKind};
+
+    fn problem(grid: usize, seed: u64) -> CsrMatrix {
+        operators::generate(
+            OperatorKind::Helmholtz,
+            GenOptions {
+                grid,
+                ..Default::default()
+            },
+            1,
+            seed,
+        )
+        .remove(0)
+        .matrix
+    }
+
+    #[test]
+    fn trait_solve_matches_kind_solve_for_all_kinds() {
+        let a = problem(9, 1);
+        let opts = EigOptions {
+            n_eigs: 4,
+            tol: 1e-8,
+            max_iters: 600,
+            seed: 0,
+        };
+        for kind in [
+            SolverKind::Eigsh,
+            SolverKind::Lobpcg,
+            SolverKind::KrylovSchur,
+            SolverKind::JacobiDavidson,
+            SolverKind::Chfsi,
+            SolverKind::Scsf,
+        ] {
+            let direct = kind.solve(&a, &opts, None);
+            let solver = kind.instance(&opts);
+            let mut ws = solver.prepare(&a);
+            let via_trait = solver.solve(&a, &mut ws, None);
+            assert_eq!(direct.values, via_trait.values, "{kind:?}");
+            assert_eq!(direct.vectors, via_trait.vectors, "{kind:?}");
+        }
+    }
+
+    #[test]
+    fn workspace_stops_growing_after_first_solve() {
+        let a = problem(10, 2);
+        let opts = EigOptions {
+            n_eigs: 5,
+            tol: 1e-8,
+            max_iters: 400,
+            seed: 1,
+        };
+        for kind in [SolverKind::Chfsi, SolverKind::Eigsh, SolverKind::Lobpcg] {
+            let solver = kind.instance(&opts);
+            let mut ws = solver.prepare(&a);
+            let r = solver.solve(&a, &mut ws, None);
+            let cap_after_first = ws.capacity_f64();
+            let warm = r.as_warm_start();
+            let _ = solver.solve(&a, &mut ws, Some(&warm));
+            assert_eq!(
+                ws.capacity_f64(),
+                cap_after_first,
+                "{kind:?} workspace grew on a same-shape re-solve"
+            );
+        }
+    }
+
+    #[test]
+    fn reserve_and_basis_are_idempotent() {
+        let mut ws = Workspace::new(0);
+        assert_eq!(ws.threads, 1);
+        ws.reserve(50, 8);
+        let cap = ws.capacity_f64();
+        ws.reserve(50, 8);
+        assert_eq!(ws.capacity_f64(), cap);
+        ws.ensure_basis(5, 50);
+        assert_eq!(ws.basis.len(), 5);
+        ws.ensure_basis(3, 50);
+        assert_eq!(ws.basis.len(), 5);
+        ws.ensure_basis(5, 20);
+        assert!(ws.basis.iter().all(|b| b.len() == 20));
+    }
+}

@@ -57,6 +57,46 @@ impl Mat {
         m
     }
 
+    /// Re-shape to `rows × cols`, zeroing all entries. The backing
+    /// allocation is kept (and only ever grows), which is what makes
+    /// [`crate::eig::solver::Workspace`] buffers reusable across
+    /// problems without per-iteration heap traffic.
+    pub fn resize(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.clear();
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Re-shape to `rows × cols` WITHOUT zeroing — surviving entries are
+    /// unspecified, so this is only for callers that overwrite every
+    /// entry before reading (the SpMM kernels, frame assembly, …). It
+    /// skips the full-output memset that [`Mat::resize`] pays, which
+    /// matters in the per-degree filter loop.
+    pub fn set_shape(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Become a copy of `other`, reusing this matrix's allocation.
+    pub fn copy_from(&mut self, other: &Mat) {
+        self.rows = other.rows;
+        self.cols = other.cols;
+        self.data.clear();
+        self.data.extend_from_slice(&other.data);
+    }
+
+    /// Become a copy of columns `[j0, j1)` of `src`, reusing this
+    /// matrix's allocation (the buffer-reusing [`Mat::cols_range`]).
+    pub fn assign_cols(&mut self, src: &Mat, j0: usize, j1: usize) {
+        assert!(j0 <= j1 && j1 <= src.cols);
+        self.set_shape(src.rows, j1 - j0);
+        for i in 0..src.rows {
+            self.row_mut(i).copy_from_slice(&src.row(i)[j0..j1]);
+        }
+    }
+
     /// Number of rows.
     #[inline]
     pub fn rows(&self) -> usize {
@@ -73,6 +113,13 @@ impl Mat {
     #[inline]
     pub fn data(&self) -> &[f64] {
         &self.data
+    }
+
+    /// Capacity of the backing allocation in `f64`s — used by the
+    /// workspace tests to assert that solver loops stop allocating.
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.data.capacity()
     }
 
     /// Mutable flat row-major data.
@@ -123,6 +170,18 @@ impl Mat {
         for i in 0..self.rows {
             out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
             out.row_mut(i)[self.cols..].copy_from_slice(other.row(i));
+        }
+        out
+    }
+
+    /// Horizontal concatenation `[self | col]` with a single new column
+    /// (Jacobi–Davidson's search-space growth step).
+    pub fn hcat_col(&self, col: &[f64]) -> Mat {
+        assert_eq!(col.len(), self.rows);
+        let mut out = Mat::zeros(self.rows, self.cols + 1);
+        for i in 0..self.rows {
+            out.row_mut(i)[..self.cols].copy_from_slice(self.row(i));
+            out[(i, self.cols)] = col[i];
         }
         out
     }
@@ -188,10 +247,19 @@ impl Mat {
     /// `selfᵀ · b` without materializing the transpose — the Gram-matrix
     /// workhorse of every Rayleigh–Ritz step (`k×n · n×k`).
     pub fn t_matmul(&self, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(0, 0);
+        self.t_matmul_into(b, &mut c);
+        c
+    }
+
+    /// Buffer-reusing `c ← selfᵀ · b`: identical arithmetic (same loop
+    /// order, hence bit-for-bit results) with the output written into a
+    /// caller-owned matrix that is resized in place.
+    pub fn t_matmul_into(&self, b: &Mat, c: &mut Mat) {
         assert_eq!(self.rows, b.rows);
         let (n, k, m) = (self.rows, self.cols, b.cols);
         flops::add(2 * (n * k * m) as u64);
-        let mut c = Mat::zeros(k, m);
+        c.resize(k, m);
         // Accumulate rank-1 contributions row by row: C += a_iᵀ b_i.
         for i in 0..n {
             let arow = self.row(i);
@@ -205,7 +273,30 @@ impl Mat {
                 }
             }
         }
-        c
+    }
+
+    /// Buffer-reusing `c ← self · b[:, j0..j1]` — the common
+    /// "rotate the basis by the leading Ritz vectors" product, without
+    /// materializing the column slice or the output.
+    pub fn matmul_cols_into(&self, b: &Mat, j0: usize, j1: usize, c: &mut Mat) {
+        assert_eq!(self.cols, b.rows, "matmul_cols_into inner dimension");
+        assert!(j0 <= j1 && j1 <= b.cols);
+        let w = j1 - j0;
+        flops::add(2 * (self.rows * self.cols * w) as u64);
+        c.resize(self.rows, w);
+        for i in 0..self.rows {
+            let arow = self.row(i);
+            let crow = c.row_mut(i);
+            for (k, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = &b.row(k)[j0..j1];
+                for j in 0..w {
+                    crow[j] += aik * brow[j];
+                }
+            }
+        }
     }
 
     /// Maximum absolute entry difference to another matrix.
@@ -390,6 +481,58 @@ mod tests {
         m.set_col(1, &[1., 2., 3.]);
         assert_eq!(m.col(1), vec![1., 2., 3.]);
         assert_eq!(m.col(0), vec![0., 0., 0.]);
+    }
+
+    #[test]
+    fn resize_zeroes_and_reuses() {
+        let mut m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        m.resize(3, 2);
+        assert_eq!((m.rows(), m.cols()), (3, 2));
+        assert!(m.data().iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn set_shape_reshapes_without_zeroing_guarantee() {
+        let mut m = Mat::from_vec(2, 2, vec![1., 2., 3., 4.]);
+        m.set_shape(4, 1);
+        assert_eq!((m.rows(), m.cols()), (4, 1));
+        m.set_shape(1, 2);
+        assert_eq!(m.data().len(), 2);
+    }
+
+    #[test]
+    fn copy_from_and_assign_cols() {
+        let mut rng = Xoshiro256pp::seed_from_u64(21);
+        let a = Mat::randn(6, 4, &mut rng);
+        let mut b = Mat::zeros(1, 1);
+        b.copy_from(&a);
+        assert_eq!(b, a);
+        let mut c = Mat::zeros(0, 0);
+        c.assign_cols(&a, 1, 3);
+        assert_eq!(c, a.cols_range(1, 3));
+    }
+
+    #[test]
+    fn t_matmul_into_matches_alloc_version() {
+        let mut rng = Xoshiro256pp::seed_from_u64(22);
+        let a = Mat::randn(15, 4, &mut rng);
+        let b = Mat::randn(15, 6, &mut rng);
+        let want = a.t_matmul(&b);
+        let mut got = Mat::randn(3, 3, &mut rng); // deliberately mis-sized
+        a.t_matmul_into(&b, &mut got);
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn matmul_cols_into_matches_slice_then_matmul() {
+        let mut rng = Xoshiro256pp::seed_from_u64(23);
+        let a = Mat::randn(9, 5, &mut rng);
+        let b = Mat::randn(5, 7, &mut rng);
+        let mut got = Mat::zeros(0, 0);
+        a.matmul_cols_into(&b, 2, 6, &mut got);
+        assert_eq!(got, a.matmul(&b.cols_range(2, 6)));
+        a.matmul_cols_into(&b, 0, 7, &mut got);
+        assert_eq!(got, a.matmul(&b));
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! with an automatic fall back to Householder QR when the filter has
 //! made the block too ill-conditioned for the Gram-matrix approach.
 
-use super::dense::Mat;
+use super::dense::{gemm, Mat};
 use super::flops;
 
 /// Thin QR of a tall matrix `A (n × k, n ≥ k)` via Householder reflectors.
@@ -192,29 +192,67 @@ pub fn chol_qr2(a: &Mat) -> Option<Mat> {
 /// approach (EXPERIMENTS.md §Perf documents the speedup).
 pub fn ortho_against(locked: Option<&Mat>, block: &Mat) -> Mat {
     let mut b = block.clone();
+    let mut gram = Mat::zeros(0, 0);
+    let mut corr = Mat::zeros(0, 0);
+    ortho_against_inplace(locked, &mut b, &mut gram, &mut corr);
+    b
+}
+
+/// Buffer-reusing variant of [`ortho_against`]: `block` is
+/// orthonormalized in place using caller-provided Gram (`gram`) and
+/// correction (`corr`) scratch, so the per-iteration QR of the ChFSI
+/// loop costs no heap traffic once the workspace has grown to size.
+/// The arithmetic is identical to [`ortho_against`] (same projection,
+/// normalization, CholeskyQR2 rounds and Householder fallback on the
+/// same input), so results are bit-for-bit equal.
+pub fn ortho_against_inplace(
+    locked: Option<&Mat>,
+    block: &mut Mat,
+    gram: &mut Mat,
+    corr: &mut Mat,
+) {
     if let Some(u) = locked {
-        assert_eq!(u.rows(), b.rows());
+        assert_eq!(u.rows(), block.rows());
         for _pass in 0..2 {
             // B ← B − U (Uᵀ B)
-            let proj = u.t_matmul(&b);
-            let correction = u.matmul(&proj);
-            b.axpy(-1.0, &correction);
+            u.t_matmul_into(block, gram);
+            corr.resize(u.rows(), gram.cols());
+            gemm(1.0, u, gram, 0.0, corr);
+            block.axpy(-1.0, corr);
         }
     }
     // The Chebyshev filter scales columns by up to ρ(λ₁) ≫ 1; normalize
     // columns first so the Gram matrix is well-scaled.
-    for j in 0..b.cols() {
-        let nrm = b.col_norm(j);
+    for j in 0..block.cols() {
+        let nrm = block.col_norm(j);
         if nrm > 1e-300 {
             let inv = 1.0 / nrm;
-            for i in 0..b.rows() {
-                b[(i, j)] *= inv;
+            for i in 0..block.rows() {
+                block[(i, j)] *= inv;
             }
         }
     }
-    match chol_qr2(&b) {
-        Some(q) => q,
-        None => householder_qr(&b),
+    // CholeskyQR2 in place; `corr` snapshots the normalized input so the
+    // rare Householder fallback sees exactly what [`ortho_against`]'s
+    // non-mutating `chol_qr2` call would have seen.
+    corr.copy_from(block);
+    let mut ok = true;
+    for _round in 0..2 {
+        {
+            let q: &Mat = block;
+            q.t_matmul_into(q, gram);
+        }
+        match cholesky(gram) {
+            Some(l) => trsm_right_ltrans(block, &l),
+            None => {
+                ok = false;
+                break;
+            }
+        }
+    }
+    if !ok {
+        let q = householder_qr(corr);
+        block.copy_from(&q);
     }
 }
 
@@ -326,6 +364,35 @@ mod tests {
         let b = Mat::randn(25, 5, &mut rng);
         let q = ortho_against(None, &b);
         assert!(ortho_defect(&q) < 1e-12);
+    }
+
+    #[test]
+    fn ortho_against_inplace_matches_alloc_version() {
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let u = householder_qr(&Mat::randn(32, 3, &mut rng));
+        for locked in [None, Some(&u)] {
+            let b = Mat::randn(32, 5, &mut rng);
+            let want = ortho_against(locked, &b);
+            let mut got = b.clone();
+            let mut gram = Mat::zeros(0, 0);
+            let mut corr = Mat::zeros(0, 0);
+            ortho_against_inplace(locked, &mut got, &mut gram, &mut corr);
+            assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn ortho_against_inplace_survives_rank_deficiency() {
+        // Duplicated columns force the Householder fallback path.
+        let mut rng = Xoshiro256pp::seed_from_u64(8);
+        let a = Mat::randn(30, 3, &mut rng);
+        let dup = a.hcat(&a.cols_range(0, 1));
+        let want = ortho_against(None, &dup);
+        let mut got = dup.clone();
+        let (mut gram, mut corr) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
+        ortho_against_inplace(None, &mut got, &mut gram, &mut corr);
+        assert_eq!(got, want);
+        assert!(ortho_defect(&got) < 1e-9);
     }
 
     #[test]

@@ -21,32 +21,50 @@ pub struct SymEig {
 /// Compute all eigenpairs of symmetric `a` (the strict upper triangle is
 /// ignored; the lower triangle is used). Panics on non-square input.
 pub fn sym_eig(a: &Mat) -> SymEig {
+    let mut out = SymEig {
+        values: vec![],
+        vectors: Mat::zeros(0, 0),
+    };
+    sym_eig_into(a, &mut out);
+    out
+}
+
+/// Buffer-reusing variant of [`sym_eig`]: the decomposition is written
+/// into `out`, whose value/vector storage is resized in place. The
+/// Rayleigh–Ritz step of every outer solver iteration calls this with a
+/// workspace-held `out`, so the k×k projected problem costs no heap
+/// traffic after the first iteration. Arithmetic is identical to
+/// [`sym_eig`] (same tred2/tql2 path), so results are bit-for-bit equal.
+pub fn sym_eig_into(a: &Mat, out: &mut SymEig) {
     let n = a.rows();
     assert_eq!(n, a.cols(), "sym_eig expects a square matrix");
+    out.values.clear();
+    out.values.resize(n, 0.0);
+    // Fully overwritten by the symmetrized copy below.
+    out.vectors.set_shape(n, n);
     if n == 0 {
-        return SymEig {
-            values: vec![],
-            vectors: Mat::zeros(0, 0),
-        };
+        return;
     }
     flops::add((9 * n * n * n) as u64); // classic tred2+tql2 cost estimate
     // z starts as the (symmetrized) input and ends as the eigenvector matrix.
-    let mut z = Mat::from_fn(n, n, |i, j| {
-        if i >= j {
-            a[(i, j)]
-        } else {
-            a[(j, i)]
+    for i in 0..n {
+        for j in 0..n {
+            out.vectors[(i, j)] = if i >= j { a[(i, j)] } else { a[(j, i)] };
         }
-    });
-    let mut d = vec![0.0f64; n]; // diagonal
-    let mut e = vec![0.0f64; n]; // off-diagonal
-    tred2(&mut z, &mut d, &mut e);
-    tql2(&mut z, &mut d, &mut e);
-    // tql2 leaves (d, z) sorted ascending.
-    SymEig {
-        values: d,
-        vectors: z,
     }
+    // Off-diagonal scratch is thread-local so repeated Rayleigh–Ritz
+    // calls stay allocation-free (each eigensolve runs on one thread).
+    thread_local! {
+        static E_SCRATCH: std::cell::RefCell<Vec<f64>> =
+            const { std::cell::RefCell::new(Vec::new()) };
+    }
+    let mut e = E_SCRATCH.with(|c| std::mem::take(&mut *c.borrow_mut()));
+    e.clear();
+    e.resize(n, 0.0);
+    tred2(&mut out.vectors, &mut out.values, &mut e);
+    tql2(&mut out.vectors, &mut out.values, &mut e);
+    // tql2 leaves (values, vectors) sorted ascending.
+    E_SCRATCH.with(|c| *c.borrow_mut() = e);
 }
 
 /// Eigenvalues and eigenvectors of a symmetric tridiagonal matrix with
@@ -357,6 +375,21 @@ mod tests {
                 "k={k} got {} want {expect}",
                 eig.values[k - 1]
             );
+        }
+    }
+
+    #[test]
+    fn sym_eig_into_reuses_storage_bit_for_bit() {
+        let mut out = SymEig {
+            values: vec![],
+            vectors: Mat::zeros(0, 0),
+        };
+        for seed in [11u64, 12, 13] {
+            let a = random_symmetric(18, seed);
+            sym_eig_into(&a, &mut out);
+            let fresh = sym_eig(&a);
+            assert_eq!(out.values, fresh.values);
+            assert_eq!(out.vectors, fresh.vectors);
         }
     }
 

@@ -3,7 +3,7 @@
 //! ```text
 //! scsf generate [--config cfg.json] [--kind helmholtz] [--grid 32]
 //!               [--n 16] [--l 16] [--tol 1e-8] [--seed 0] [--shards 2]
-//!               [--sort fft|greedy|none] [--p0 20]
+//!               [--threads 1] [--sort fft|greedy|none] [--p0 20]
 //!               [--backend native|xla] [--artifacts DIR] --out DIR
 //! scsf repro <table1|table2|table3|table4|table5|fig3|table11|table12|
 //!             table13|table14|table17|table18|table19|table20|all>
@@ -12,8 +12,9 @@
 //! scsf default-config            # print a config template
 //! ```
 
-use anyhow::{anyhow, bail, Result};
 use scsf::bench_support::{tables, Scale};
+use scsf::util::error::Result;
+use scsf::{anyhow, bail};
 use scsf::coordinator::config::{Backend, GenConfig};
 use scsf::coordinator::dataset::DatasetReader;
 use scsf::coordinator::pipeline::generate_dataset;
@@ -134,6 +135,9 @@ fn cmd_generate(args: &Args) -> Result<()> {
     }
     if let Some(x) = args.get_usize("shards")? {
         cfg.shards = x.max(1);
+    }
+    if let Some(x) = args.get_usize("threads")? {
+        cfg.threads = x.max(1);
     }
     if let Some(x) = args.get_usize("degree")? {
         cfg.degree = x;

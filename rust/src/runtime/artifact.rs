@@ -1,8 +1,10 @@
 //! Artifact registry: parses `artifacts/manifest.json`, compiles the HLO
 //! text modules on the PJRT CPU client, and hands out executables.
 
+use super::xla_stub as xla;
+use crate::util::error::{Context, Result};
 use crate::util::json::{self, Value};
-use anyhow::{anyhow, bail, Context, Result};
+use crate::{anyhow, bail};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 

@@ -8,6 +8,7 @@
 //! recurrence, same f64), which the integration tests assert.
 
 use super::artifact::XlaRuntime;
+use super::xla_stub as xla;
 use crate::eig::chebyshev::{chebyshev_filter, FilterBackend, FilterParams};
 use crate::linalg::{flops, Mat};
 use crate::sparse::CsrMatrix;

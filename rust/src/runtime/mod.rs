@@ -9,6 +9,7 @@
 
 pub mod artifact;
 pub mod filter_exec;
+pub mod xla_stub;
 
 pub use artifact::{ArtifactKind, ArtifactMeta, XlaRuntime};
 pub use filter_exec::XlaFilter;

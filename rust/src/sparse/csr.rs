@@ -202,6 +202,78 @@ impl CsrMatrix {
         y
     }
 
+    /// Non-allocating SpMV with optional row-partitioned threading:
+    /// `y = A x`, computed on `threads` scoped threads (`≤ 1` → the
+    /// serial kernel). Each row is accumulated in the same order as the
+    /// serial kernel, so results are bit-for-bit identical for every
+    /// thread count.
+    pub fn spmv_into(&self, x: &[f64], y: &mut [f64], threads: usize) {
+        let nt = threads.max(1).min(self.rows.max(1));
+        if nt <= 1 || self.rows == 0 {
+            self.spmv(x, y);
+            return;
+        }
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        // Worker flops are accounted on the dispatching thread — the
+        // thread-local counter never sees the scoped workers.
+        flops::add(2 * self.nnz() as u64);
+        let rows_per = self.rows.div_ceil(nt);
+        std::thread::scope(|scope| {
+            for (b, ychunk) in y.chunks_mut(rows_per).enumerate() {
+                let row0 = b * rows_per;
+                scope.spawn(move || {
+                    for (r, yi) in ychunk.iter_mut().enumerate() {
+                        let (cols, vals) = self.row(row0 + r);
+                        let mut acc = 0.0;
+                        for (c, v) in cols.iter().zip(vals) {
+                            acc += v * x[*c as usize];
+                        }
+                        *yi = acc;
+                    }
+                });
+            }
+        });
+    }
+
+    /// Non-allocating SpMM with optional row-partitioned threading:
+    /// `Y = A X` on `threads` scoped threads (`≤ 1` → the serial
+    /// kernel). The row blocks are disjoint and every row uses the
+    /// serial accumulation order, so the result is deterministic —
+    /// bit-for-bit equal to [`CsrMatrix::spmm`] — for any thread count.
+    pub fn spmm_into(&self, x: &Mat, y: &mut Mat, threads: usize) {
+        let k = x.cols();
+        // Every output entry is written below; skip the resize memset.
+        y.set_shape(self.rows, k);
+        let nt = threads.max(1).min(self.rows.max(1));
+        if nt <= 1 || self.rows == 0 || k == 0 {
+            self.spmm(x, y);
+            return;
+        }
+        assert_eq!(x.rows(), self.cols, "spmm shape: A.cols == X.rows");
+        flops::add(2 * (self.nnz() * k) as u64);
+        let rows_per = self.rows.div_ceil(nt);
+        let yd = y.data_mut();
+        std::thread::scope(|scope| {
+            for (b, ychunk) in yd.chunks_mut(rows_per * k).enumerate() {
+                let row0 = b * rows_per;
+                scope.spawn(move || {
+                    for (r, yrow) in ychunk.chunks_mut(k).enumerate() {
+                        let (cols, vals) = self.row(row0 + r);
+                        yrow.fill(0.0);
+                        for (c, v) in cols.iter().zip(vals) {
+                            let xrow = x.row(*c as usize);
+                            let a = *v;
+                            for t in 0..k {
+                                yrow[t] += a * xrow[t];
+                            }
+                        }
+                    }
+                });
+            }
+        });
+    }
+
     /// Fused filter step `Y = a·(A X) + b·X + c·Z` — one pass over A plus
     /// one pass over the dense blocks. This is exactly the shape of the
     /// Chebyshev three-term recurrence (Algorithm 1, line 5) and avoids
@@ -232,6 +304,62 @@ impl CsrMatrix {
                 }
             }
         }
+    }
+
+    /// Threaded variant of [`CsrMatrix::spmm_fused`] — the Chebyshev
+    /// three-term step `Y = a·(A X) + b·X + c·Z` row-partitioned over
+    /// `threads` scoped threads (`≤ 1` → the serial kernel), with the
+    /// same per-row accumulation order and therefore bit-for-bit
+    /// deterministic output for any thread count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spmm_fused_into(
+        &self,
+        a: f64,
+        x: &Mat,
+        b: f64,
+        c: f64,
+        z: &Mat,
+        y: &mut Mat,
+        threads: usize,
+    ) {
+        let k = x.cols();
+        // Every output entry is written below; skip the resize memset.
+        y.set_shape(self.rows, k);
+        let nt = threads.max(1).min(self.rows.max(1));
+        if nt <= 1 || self.rows == 0 || k == 0 {
+            self.spmm_fused(a, x, b, c, z, y);
+            return;
+        }
+        assert_eq!(x.rows(), self.cols);
+        assert_eq!(z.rows(), self.rows);
+        assert!(z.cols() == k);
+        flops::add((2 * self.nnz() * k + 4 * self.rows * k) as u64);
+        let rows_per = self.rows.div_ceil(nt);
+        let xd = x.data();
+        let yd = y.data_mut();
+        std::thread::scope(|scope| {
+            for (blk, ychunk) in yd.chunks_mut(rows_per * k).enumerate() {
+                let row0 = blk * rows_per;
+                scope.spawn(move || {
+                    for (r, yrow) in ychunk.chunks_mut(k).enumerate() {
+                        let i = row0 + r;
+                        let (cols, vals) = self.row(i);
+                        let xrow = &xd[i * k..(i + 1) * k];
+                        let zrow = z.row(i);
+                        for t in 0..k {
+                            yrow[t] = b * xrow[t] + c * zrow[t];
+                        }
+                        for (cc, v) in cols.iter().zip(vals) {
+                            let xr = &xd[*cc as usize * k..(*cc as usize + 1) * k];
+                            let s = a * *v;
+                            for t in 0..k {
+                                yrow[t] += s * xr[t];
+                            }
+                        }
+                    }
+                });
+            }
+        });
     }
 
     /// Dense copy (test/diagnostic helper and the densified input of the
@@ -409,6 +537,60 @@ mod tests {
     #[test]
     fn symmetric_laplacian_reports_zero_asymmetry() {
         assert_eq!(small().asymmetry(), 0.0);
+    }
+
+    fn random_square(n: usize, nnz: usize, seed: u64) -> CsrMatrix {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut b = CooBuilder::new(n, n);
+        for _ in 0..nnz {
+            b.push(rng.next_below(n), rng.next_below(n), rng.normal());
+        }
+        for i in 0..n {
+            b.push(i, i, 4.0);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn spmm_into_threaded_is_bit_for_bit_serial() {
+        let a = random_square(37, 200, 3);
+        let mut rng = Xoshiro256pp::seed_from_u64(4);
+        let x = Mat::randn(37, 6, &mut rng);
+        let serial = a.spmm_alloc(&x);
+        for threads in [1usize, 2, 3, 4, 8, 64] {
+            let mut y = Mat::zeros(0, 0);
+            a.spmm_into(&x, &mut y, threads);
+            assert_eq!(y, serial, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn spmv_into_threaded_is_bit_for_bit_serial() {
+        let a = random_square(41, 160, 5);
+        let mut rng = Xoshiro256pp::seed_from_u64(6);
+        let mut x = vec![0.0; 41];
+        rng.fill_normal(&mut x);
+        let serial = a.spmv_alloc(&x);
+        for threads in [1usize, 2, 4, 7] {
+            let mut y = vec![0.0; 41];
+            a.spmv_into(&x, &mut y, threads);
+            assert_eq!(y, serial, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn spmm_fused_into_threaded_is_bit_for_bit_serial() {
+        let a = random_square(29, 120, 7);
+        let mut rng = Xoshiro256pp::seed_from_u64(8);
+        let x = Mat::randn(29, 5, &mut rng);
+        let z = Mat::randn(29, 5, &mut rng);
+        let mut serial = Mat::zeros(29, 5);
+        a.spmm_fused(1.7, &x, -0.3, 0.9, &z, &mut serial);
+        for threads in [2usize, 3, 5] {
+            let mut y = Mat::zeros(0, 0);
+            a.spmm_fused_into(1.7, &x, -0.3, 0.9, &z, &mut y, threads);
+            assert_eq!(y, serial, "threads = {threads}");
+        }
     }
 
     #[test]

@@ -1,0 +1,145 @@
+//! Minimal in-tree replacement for the `anyhow` crate.
+//!
+//! The offline build environment has no registry access, so the crate
+//! graph must be dependency-free. This module provides the narrow
+//! subset the codebase uses — a string-backed [`Error`], the [`Result`]
+//! alias, the [`anyhow!`]/[`bail!`] macros, and a [`Context`] extension
+//! trait — with the same call-site syntax, so swapping the real crate
+//! back in later is a five-line import change (see DESIGN.md §Offline
+//! dependencies).
+
+use std::fmt;
+
+/// A string-backed error. Like `anyhow::Error` it deliberately does
+/// *not* implement `std::error::Error`, which is what makes the blanket
+/// `From` conversion below coherent.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build from anything displayable.
+    pub fn msg(m: impl fmt::Display) -> Self {
+        Self {
+            msg: m.to_string(),
+        }
+    }
+
+    /// Wrap with a context prefix (used by [`Context`]).
+    pub fn context(self, ctx: impl fmt::Display) -> Self {
+        Self {
+            msg: format!("{ctx}: {}", self.msg),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+/// `?`-operator conversion from any standard error type.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        Error::msg(e)
+    }
+}
+
+/// Result alias defaulting the error type, as `anyhow::Result` does.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach lazily-built context to a fallible value.
+pub trait Context<T> {
+    /// Wrap the error with `f()` as a prefix.
+    fn with_context<S: fmt::Display, F: FnOnce() -> S>(self, f: F) -> Result<T>;
+
+    /// Wrap the error with a fixed prefix.
+    fn context<S: fmt::Display>(self, ctx: S) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn with_context<S: fmt::Display, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+
+    fn context<S: fmt::Display>(self, ctx: S) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{ctx}: {e}")))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn with_context<S: fmt::Display, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+
+    fn context<S: fmt::Display>(self, ctx: S) -> Result<T> {
+        self.ok_or_else(|| Error::msg(ctx))
+    }
+}
+
+/// Format an [`Error`] from format-string arguments (`anyhow!` stand-in).
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return with a formatted [`Error`] (`bail!` stand-in).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<String> {
+        let s = std::fs::read_to_string("/definitely/not/a/real/path")?;
+        Ok(s)
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let err = io_fail().unwrap_err();
+        assert!(!err.to_string().is_empty());
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = crate::anyhow!("bad value {}", 42);
+        assert_eq!(e.to_string(), "bad value 42");
+    }
+
+    #[test]
+    fn bail_returns_early() {
+        fn f(flag: bool) -> Result<usize> {
+            if flag {
+                crate::bail!("flagged {flag}");
+            }
+            Ok(1)
+        }
+        assert_eq!(f(false).unwrap(), 1);
+        assert_eq!(f(true).unwrap_err().to_string(), "flagged true");
+    }
+
+    #[test]
+    fn context_wraps_messages() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.with_context(|| "writing report").unwrap_err();
+        assert!(e.to_string().starts_with("writing report: "));
+        let o: Option<usize> = None;
+        let e = o.context("missing field").unwrap_err();
+        assert_eq!(e.to_string(), "missing field");
+    }
+}

@@ -1,5 +1,7 @@
-//! Small shared utilities: minimal JSON, wall-clock timing, table printing.
+//! Small shared utilities: minimal JSON, error handling, wall-clock
+//! timing, table printing.
 
+pub mod error;
 pub mod json;
 pub mod table;
 pub mod timer;

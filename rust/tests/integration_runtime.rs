@@ -12,6 +12,7 @@ use scsf::eig::EigOptions;
 use scsf::linalg::Mat;
 use scsf::operators::{self, GenOptions, OperatorKind};
 use scsf::rng::Xoshiro256pp;
+use scsf::runtime::xla_stub as xla;
 use scsf::runtime::{XlaFilter, XlaRuntime};
 use std::path::{Path, PathBuf};
 use std::rc::Rc;

@@ -1,0 +1,189 @@
+//! The zero-alloc-workspace and parallel-SpMM contracts:
+//!
+//! 1. the row-partitioned threaded kernels are *bit-for-bit* equal to
+//!    the serial ones on random CSR matrices (property-tested), and
+//! 2. a [`scsf::eig::Workspace`] reused across a warm-started sequence
+//!    yields identical eigenvalues to per-problem fresh allocation.
+
+use scsf::eig::chebyshev::NativeFilter;
+use scsf::eig::chfsi::{self, ChfsiOptions};
+use scsf::eig::scsf::{solve_sequence, solve_sequence_in, ScsfOptions};
+use scsf::eig::solver::EigSolver;
+use scsf::eig::{EigOptions, SolverKind, Workspace};
+use scsf::linalg::Mat;
+use scsf::operators::{self, GenOptions, OperatorKind};
+use scsf::rng::Xoshiro256pp;
+use scsf::sparse::{CooBuilder, CsrMatrix};
+use scsf::testing::{forall, size_in};
+
+fn random_csr(rng: &mut Xoshiro256pp, n: usize, nnz: usize) -> CsrMatrix {
+    let mut b = CooBuilder::new(n, n);
+    for _ in 0..nnz {
+        b.push(rng.next_below(n), rng.next_below(n), rng.normal());
+    }
+    for i in 0..n {
+        b.push(i, i, 4.0);
+    }
+    b.build()
+}
+
+#[test]
+fn prop_threaded_spmm_is_bit_for_bit_serial() {
+    forall(32, 0x5B33, |rng, case| {
+        let n = size_in(rng, 1, 120);
+        let k = size_in(rng, 1, 9);
+        let nnz = size_in(rng, 0, 6 * n);
+        let a = random_csr(rng, n, nnz);
+        let x = Mat::randn(n, k, rng);
+        let serial = a.spmm_alloc(&x);
+        for threads in [1usize, 2, 4] {
+            let mut y = Mat::zeros(0, 0);
+            a.spmm_into(&x, &mut y, threads);
+            assert_eq!(y, serial, "case {case} threads {threads} (n={n}, k={k})");
+        }
+    });
+}
+
+#[test]
+fn prop_threaded_spmv_and_fused_are_bit_for_bit_serial() {
+    forall(24, 0xF00D, |rng, case| {
+        let n = size_in(rng, 1, 100);
+        let a = random_csr(rng, n, size_in(rng, 0, 5 * n));
+        // SpMV
+        let mut x = vec![0.0; n];
+        rng.fill_normal(&mut x);
+        let serial = a.spmv_alloc(&x);
+        for threads in [2usize, 4] {
+            let mut y = vec![0.0; n];
+            a.spmv_into(&x, &mut y, threads);
+            assert_eq!(y, serial, "case {case} spmv threads {threads}");
+        }
+        // Fused three-term step
+        let k = size_in(rng, 1, 6);
+        let xb = Mat::randn(n, k, rng);
+        let zb = Mat::randn(n, k, rng);
+        let mut want = Mat::zeros(n, k);
+        a.spmm_fused(0.7, &xb, -1.3, 0.2, &zb, &mut want);
+        for threads in [2usize, 3] {
+            let mut y = Mat::zeros(0, 0);
+            a.spmm_fused_into(0.7, &xb, -1.3, 0.2, &zb, &mut y, threads);
+            assert_eq!(y, want, "case {case} fused threads {threads}");
+        }
+    });
+}
+
+fn chain(n: usize, grid: usize, seed: u64) -> Vec<operators::Problem> {
+    operators::helmholtz::generate_perturbed_chain(
+        GenOptions {
+            grid,
+            ..Default::default()
+        },
+        n,
+        0.05,
+        seed,
+    )
+}
+
+#[test]
+fn workspace_reused_across_sequence_matches_fresh_allocation() {
+    // The regression the refactor must never break: chaining warm starts
+    // through ONE workspace gives the exact same eigenpairs as giving
+    // every problem its own fresh buffers.
+    let problems = chain(5, 10, 7);
+    let opts = ScsfOptions::paper_default(ChfsiOptions::from_eig(&EigOptions {
+        n_eigs: 6,
+        tol: 1e-9,
+        max_iters: 300,
+        seed: 0,
+    }));
+
+    // Fresh allocation per problem (solve_with_backend makes a new
+    // workspace each call), chained manually.
+    let mut warm = None;
+    let mut fresh_results = Vec::new();
+    let sort = scsf::sort::sort_problems(&problems, opts.sort);
+    for &idx in &sort.order {
+        let mut backend = NativeFilter;
+        let r = chfsi::solve_with_backend(
+            &problems[idx].matrix,
+            &opts.chfsi,
+            warm.as_ref(),
+            &mut backend,
+        );
+        warm = Some(r.as_warm_start());
+        fresh_results.push(r);
+    }
+
+    // One shared workspace for the whole sequence.
+    let mut backend = NativeFilter;
+    let mut ws = Workspace::new(1);
+    let seq = solve_sequence_in(&problems, &opts, &mut backend, &mut ws);
+
+    assert!(seq.all_converged());
+    assert_eq!(seq.results.len(), fresh_results.len());
+    for (shared, fresh) in seq.results.iter().zip(&fresh_results) {
+        assert_eq!(shared.values, fresh.values);
+        assert_eq!(shared.vectors, fresh.vectors);
+        assert_eq!(shared.residuals, fresh.residuals);
+    }
+}
+
+#[test]
+fn threaded_sequence_matches_serial_sequence() {
+    let problems = chain(4, 10, 3);
+    let mut base = ScsfOptions::paper_default(ChfsiOptions::from_eig(&EigOptions {
+        n_eigs: 5,
+        tol: 1e-8,
+        max_iters: 300,
+        seed: 1,
+    }));
+    let serial = solve_sequence(&problems, &base);
+    base.chfsi.threads = 4;
+    let threaded = solve_sequence(&problems, &base);
+    assert!(serial.all_converged() && threaded.all_converged());
+    for (s, t) in serial.results.iter().zip(&threaded.results) {
+        assert_eq!(s.values, t.values);
+        assert_eq!(s.vectors, t.vectors);
+    }
+}
+
+#[test]
+fn every_solver_kind_reuses_a_workspace_correctly() {
+    // prepare() once, solve twice (cold then warm) — values must match
+    // the fresh-workspace path for all six kinds.
+    let a = operators::generate(
+        OperatorKind::Helmholtz,
+        GenOptions {
+            grid: 9,
+            ..Default::default()
+        },
+        1,
+        5,
+    )
+    .remove(0)
+    .matrix;
+    let opts = EigOptions {
+        n_eigs: 4,
+        tol: 1e-8,
+        max_iters: 800,
+        seed: 0,
+    };
+    for kind in [
+        SolverKind::Eigsh,
+        SolverKind::Lobpcg,
+        SolverKind::KrylovSchur,
+        SolverKind::JacobiDavidson,
+        SolverKind::Chfsi,
+        SolverKind::Scsf,
+    ] {
+        let fresh_cold = kind.solve(&a, &opts, None);
+        let fresh_warm = kind.solve(&a, &opts, Some(&fresh_cold.as_warm_start()));
+        let solver = kind.instance(&opts);
+        let mut ws = solver.prepare(&a);
+        let cold = solver.solve(&a, &mut ws, None);
+        let warm = solver.solve(&a, &mut ws, Some(&cold.as_warm_start()));
+        assert_eq!(cold.values, fresh_cold.values, "{kind:?} cold");
+        assert_eq!(warm.values, fresh_warm.values, "{kind:?} warm");
+        assert_eq!(warm.vectors, fresh_warm.vectors, "{kind:?} warm vectors");
+    }
+}
