@@ -1,0 +1,113 @@
+//! End-to-end pipeline benchmark: global spectral scheduling vs the
+//! per-shard sort baseline, on the same seed and shard count.
+//!
+//! Emits `BENCH_pipeline.json` (in the working directory) with
+//! problems/sec, average ChFSI outer iterations per problem, the
+//! sort-quality metric, and handoff counts for each mode, so the
+//! scheduler's effect on sharded throughput and warm-start hit rate has
+//! a perf trajectory to compare against:
+//!
+//! - `shard`  — sort within generation-order chunks (paper §D.6 / the
+//!   pre-scheduler pipeline).
+//! - `global` — one global greedy order cut into contiguous similarity
+//!   runs (cold seams, full solve parallelism).
+//! - `global+handoff` — same, with every seam granted a boundary
+//!   warm-start handoff (maximal quality; runs chain).
+
+use scsf::coordinator::config::GenConfig;
+use scsf::coordinator::pipeline::generate_dataset;
+use scsf::coordinator::scheduler::SortScope;
+use scsf::operators::OperatorKind;
+use scsf::sort::SortMethod;
+use scsf::util::json::Value;
+
+const SHARDS: usize = 4;
+
+fn base_cfg() -> GenConfig {
+    GenConfig {
+        kind: OperatorKind::Helmholtz,
+        grid: 14,
+        n_problems: 32,
+        n_eigs: 8,
+        tol: 1e-8,
+        seed: 17,
+        shards: SHARDS,
+        threads: 1,
+        sort: SortMethod::TruncatedFft { p0: 8 },
+        ..Default::default()
+    }
+}
+
+fn run_case(
+    label: &str,
+    scope: SortScope,
+    handoff_threshold: Option<f64>,
+) -> Value {
+    let mut cfg = base_cfg();
+    cfg.sort_scope = scope;
+    cfg.handoff_threshold = handoff_threshold;
+    let dir = std::env::temp_dir().join(format!(
+        "scsf_bench_pipeline_{label}_{}",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_dir_all(&dir);
+    let report = generate_dataset(&cfg, &dir).expect("bench pipeline run failed");
+    assert!(report.all_converged, "{label}: bench run must converge");
+    let _ = std::fs::remove_dir_all(&dir);
+    let pps = cfg.n_problems as f64 / report.total_secs;
+    println!(
+        "{label:<16} shards={SHARDS}: {:6.2} problems/sec, avg iters {:5.2}, sort quality {:8.3}, {} warm handoffs, {} cold runs",
+        pps,
+        report.avg_iterations,
+        report.sort_quality,
+        report.warm_handoffs,
+        report.cold_runs,
+    );
+    Value::obj(vec![
+        ("mode", label.into()),
+        ("sort_scope", report.sort_scope.as_str().into()),
+        ("shards", SHARDS.into()),
+        ("n_problems", cfg.n_problems.into()),
+        ("grid", cfg.grid.into()),
+        ("n_eigs", cfg.n_eigs.into()),
+        ("seed", cfg.seed.into()),
+        ("problems_per_sec", pps.into()),
+        ("avg_iterations", report.avg_iterations.into()),
+        ("avg_solve_secs", report.avg_solve_secs.into()),
+        ("sort_quality", report.sort_quality.into()),
+        ("warm_handoffs", report.warm_handoffs.into()),
+        ("cold_runs", report.cold_runs.into()),
+        ("signature_secs", report.signature_secs.into()),
+        ("schedule_secs", report.schedule_secs.into()),
+        ("solve_secs", report.solve_secs.into()),
+        ("total_secs", report.total_secs.into()),
+    ])
+}
+
+fn main() {
+    let shard = run_case("shard", SortScope::Shard, None);
+    let global = run_case("global", SortScope::Global, None);
+    let chained = run_case("global+handoff", SortScope::Global, Some(f64::INFINITY));
+
+    let iters = |v: &Value| v.get("avg_iterations").and_then(Value::as_f64).unwrap();
+    let quality = |v: &Value| v.get("sort_quality").and_then(Value::as_f64).unwrap();
+    println!(
+        "\nglobal vs shard: avg iters {:.2} vs {:.2} ({:+.1} %), sort quality {:.3} vs {:.3}",
+        iters(&global),
+        iters(&shard),
+        100.0 * (iters(&global) / iters(&shard) - 1.0),
+        quality(&global),
+        quality(&shard),
+    );
+
+    let doc = Value::obj(vec![
+        ("bench", "pipeline".into()),
+        ("version", 1usize.into()),
+        ("modes", Value::Arr(vec![shard, global, chained])),
+    ]);
+    let path = "BENCH_pipeline.json";
+    match std::fs::write(path, doc.to_string_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+}

@@ -1,6 +1,7 @@
 //! Pipeline configuration, with JSON load/save (the repo's config
 //! system: every run is reproducible from a config file + seed).
 
+use super::scheduler::SortScope;
 use crate::eig::chfsi::ChfsiOptions;
 use crate::eig::scsf::ScsfOptions;
 use crate::eig::EigOptions;
@@ -49,6 +50,24 @@ pub struct GenConfig {
     pub guard: Option<usize>,
     /// Sorting method (paper default: truncated FFT, p₀ = 20).
     pub sort: SortMethod,
+    /// Where the similarity sort runs: one global order partitioned
+    /// into contiguous similarity runs (`global`, the scheduler's
+    /// headline mode) or independently per generation-order chunk
+    /// (`shard`, the paper-§D.6 ablation baseline).
+    pub sort_scope: SortScope,
+    /// Boundary warm-start handoff threshold: run `k+1`'s first problem
+    /// inherits run `k`'s tail eigenpairs when the signature distance
+    /// across their seam is `<=` this value. `None` disables handoffs
+    /// (runs solve fully in parallel); `f64::INFINITY` always hands
+    /// off, chaining the runs (maximal quality, serialized solves).
+    /// Requires `sort_scope: global` (shard runs are independent —
+    /// the pipeline rejects the combination); `warm_start: false`
+    /// overrides it as the master ablation switch.
+    pub handoff_threshold: Option<f64>,
+    /// Chain warm starts within a run (`false` → every problem starts
+    /// cold: the plain-ChFSI ablation, bit-for-bit identical results
+    /// for any shard count).
+    pub warm_start: bool,
     /// Parallel shard count `M` (paper §D.6 used 8 MPI ranks).
     pub shards: usize,
     /// Row-partitioned threads per shard for the SpMM/SpMV kernels.
@@ -75,6 +94,9 @@ impl Default for GenConfig {
             degree: 20,
             guard: None,
             sort: SortMethod::TruncatedFft { p0: 20 },
+            sort_scope: SortScope::Global,
+            handoff_threshold: None,
+            warm_start: true,
             shards: 2,
             threads: 1,
             channel_capacity: 8,
@@ -112,7 +134,7 @@ impl GenConfig {
         ScsfOptions {
             chfsi,
             sort: self.sort,
-            warm_start: true,
+            warm_start: self.warm_start,
         }
     }
 
@@ -146,6 +168,22 @@ impl GenConfig {
                 self.guard.map(Value::from).unwrap_or(Value::Null),
             ),
             ("sort", sort),
+            ("sort_scope", self.sort_scope.name().into()),
+            (
+                "handoff_threshold",
+                match self.handoff_threshold {
+                    None => Value::Null,
+                    // JSON has no Inf: "always hand off" round-trips as
+                    // the string "inf".
+                    Some(t) if t == f64::INFINITY => "inf".into(),
+                    // NaN/-inf grant nothing (`distance <= t` is never
+                    // true): round-trip as disabled, preserving the
+                    // run's actual behaviour in the manifest echo.
+                    Some(t) if !t.is_finite() => Value::Null,
+                    Some(t) => t.into(),
+                },
+            ),
+            ("warm_start", self.warm_start.into()),
             ("shards", self.shards.into()),
             ("threads", self.threads.into()),
             ("channel_capacity", self.channel_capacity.into()),
@@ -198,6 +236,41 @@ impl GenConfig {
                 },
                 Some(other) => return Err(anyhow!("unknown sort method {other}")),
             };
+        }
+        if let Some(s) = v.get("sort_scope") {
+            let name = s
+                .as_str()
+                .ok_or_else(|| anyhow!("sort_scope must be a string"))?;
+            cfg.sort_scope =
+                SortScope::parse(name).ok_or_else(|| anyhow!("unknown sort_scope {name}"))?;
+        }
+        if let Some(t) = v.get("handoff_threshold") {
+            cfg.handoff_threshold = match t {
+                Value::Null => None, // disabled
+                _ => match (t.as_f64(), t.as_str()) {
+                    (Some(x), _) if x >= 0.0 => Some(x),
+                    (Some(x), _) => {
+                        return Err(anyhow!("handoff_threshold must be >= 0, got {x}"))
+                    }
+                    (None, Some("inf")) | (None, Some("infinity")) => Some(f64::INFINITY),
+                    // Anything else (bad string, bool, array, …) is a
+                    // config mistake — fail loudly, never silently
+                    // disable handoffs.
+                    _ => {
+                        return Err(anyhow!(
+                            "bad handoff_threshold (expected number, \"inf\", or null)"
+                        ))
+                    }
+                },
+            };
+        }
+        if let Some(b) = v.get("warm_start") {
+            // An ablation knob must never be silently mis-typed: a
+            // "cold baseline" config that quietly ran warm would poison
+            // the experiment record.
+            cfg.warm_start = b
+                .as_bool()
+                .ok_or_else(|| anyhow!("warm_start must be a boolean"))?;
         }
         if let Some(x) = get("shards") {
             cfg.shards = x.max(1);
@@ -256,6 +329,9 @@ mod tests {
             degree: 16,
             guard: Some(6),
             sort: SortMethod::Greedy,
+            sort_scope: SortScope::Shard,
+            handoff_threshold: Some(0.75),
+            warm_start: false,
             shards: 4,
             threads: 3,
             channel_capacity: 3,
@@ -282,6 +358,71 @@ mod tests {
     #[test]
     fn rejects_unknown_kind() {
         assert!(GenConfig::from_json(r#"{"kind": "nope"}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown_sort_scope() {
+        assert!(GenConfig::from_json(r#"{"sort_scope": "nope"}"#).is_err());
+        assert!(GenConfig::from_json(r#"{"sort_scope": 3}"#).is_err());
+    }
+
+    #[test]
+    fn rejects_mistyped_warm_start() {
+        assert!(GenConfig::from_json(r#"{"warm_start": "false"}"#).is_err());
+        assert!(GenConfig::from_json(r#"{"warm_start": 0}"#).is_err());
+        let ok = GenConfig::from_json(r#"{"warm_start": false}"#).unwrap();
+        assert!(!ok.warm_start);
+    }
+
+    #[test]
+    fn rejects_malformed_handoff_threshold() {
+        // Wrong types must error, not silently disable handoffs.
+        for bad in [
+            r#"{"handoff_threshold": true}"#,
+            r#"{"handoff_threshold": "tru"}"#,
+            r#"{"handoff_threshold": []}"#,
+            r#"{"handoff_threshold": -1.5}"#,
+        ] {
+            assert!(GenConfig::from_json(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn infinite_handoff_threshold_roundtrips() {
+        let cfg = GenConfig {
+            handoff_threshold: Some(f64::INFINITY),
+            ..Default::default()
+        };
+        let back = GenConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.handoff_threshold, Some(f64::INFINITY));
+        // And the serialized form is valid JSON (no bare inf token).
+        assert!(cfg.to_json().contains("\"inf\""));
+    }
+
+    #[test]
+    fn nonsense_thresholds_roundtrip_as_disabled() {
+        // NaN / -inf grant no handoffs at runtime; the manifest echo
+        // must record the behaviour actually run, i.e. disabled —
+        // never flip to always-on "inf".
+        for t in [f64::NAN, f64::NEG_INFINITY] {
+            let cfg = GenConfig {
+                handoff_threshold: Some(t),
+                ..Default::default()
+            };
+            let back = GenConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(back.handoff_threshold, None, "{t}");
+        }
+    }
+
+    #[test]
+    fn scheduler_knobs_default_to_global_cold_boundaries() {
+        let cfg = GenConfig::default();
+        assert_eq!(cfg.sort_scope, SortScope::Global);
+        assert_eq!(cfg.handoff_threshold, None);
+        assert!(cfg.warm_start);
+        // Null threshold parses back to disabled.
+        let back = GenConfig::from_json(r#"{"handoff_threshold": null}"#).unwrap();
+        assert_eq!(back.handoff_threshold, None);
     }
 
     #[test]

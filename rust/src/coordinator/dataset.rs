@@ -25,6 +25,9 @@ use std::path::{Path, PathBuf};
 pub struct RecordMeta {
     /// Problem id (generation order).
     pub id: usize,
+    /// Similarity run / shard that solved this problem (the scheduler's
+    /// per-problem assignment; 0 for datasets written before it).
+    pub shard: usize,
     /// Byte offset of the record in `eigs.bin`.
     pub offset: u64,
     /// Matrix dimension.
@@ -62,8 +65,9 @@ impl DatasetWriter {
         })
     }
 
-    /// Append one solved problem.
-    pub fn write_record(&mut self, id: usize, result: &EigResult) -> Result<()> {
+    /// Append one solved problem, recording which similarity run /
+    /// shard solved it.
+    pub fn write_record(&mut self, id: usize, shard: usize, result: &EigResult) -> Result<()> {
         let n = result.vectors.rows();
         let l = result.values.len();
         let offset = self.offset;
@@ -86,6 +90,7 @@ impl DatasetWriter {
         let max_residual = result.residuals.iter().cloned().fold(0.0, f64::max);
         self.records.push(RecordMeta {
             id,
+            shard,
             offset,
             n,
             l,
@@ -116,6 +121,7 @@ impl DatasetWriter {
         for r in &self.records {
             recs.push(Value::obj(vec![
                 ("id", r.id.into()),
+                ("shard", r.shard.into()),
                 ("offset", r.offset.into()),
                 ("n", r.n.into()),
                 ("l", r.l.into()),
@@ -168,6 +174,7 @@ impl DatasetReader {
             let gu = |k: &str| r.get(k).and_then(Value::as_usize).unwrap_or(0);
             index.push(RecordMeta {
                 id: gu("id"),
+                shard: gu("shard"),
                 offset: r.get("offset").and_then(Value::as_f64).unwrap_or(0.0) as u64,
                 n: gu("n"),
                 l: gu("l"),
@@ -253,8 +260,8 @@ mod tests {
         let r0 = fake_result(10, 3, 1);
         let r1 = fake_result(10, 3, 2);
         // Write out of id order to exercise the index sort.
-        w.write_record(1, &r1).unwrap();
-        w.write_record(0, &r0).unwrap();
+        w.write_record(1, 1, &r1).unwrap();
+        w.write_record(0, 0, &r0).unwrap();
         let recs = w
             .finalize(vec![("note", Value::from("test"))])
             .unwrap();
@@ -263,6 +270,9 @@ mod tests {
 
         let mut reader = DatasetReader::open(&dir).unwrap();
         assert_eq!(reader.index().len(), 2);
+        // Shard assignment round-trips through the manifest.
+        assert_eq!(reader.index()[0].shard, 0);
+        assert_eq!(reader.index()[1].shard, 1);
         for (id, want) in [(0usize, &r0), (1, &r1)] {
             let rec = reader.read(id).unwrap();
             assert_eq!(rec.values, want.values);
@@ -276,7 +286,7 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("scsf_ds2_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
         let mut w = DatasetWriter::create(&dir).unwrap();
-        w.write_record(0, &fake_result(6, 2, 3)).unwrap();
+        w.write_record(0, 0, &fake_result(6, 2, 3)).unwrap();
         w.finalize(vec![("config", Value::from("xyz"))]).unwrap();
         let manifest = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
         let v = json::parse(&manifest).unwrap();
@@ -293,7 +303,7 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("scsf_ds3_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
         let mut w = DatasetWriter::create(&dir).unwrap();
-        w.write_record(5, &fake_result(4, 1, 4)).unwrap();
+        w.write_record(5, 2, &fake_result(4, 1, 4)).unwrap();
         w.finalize(vec![]).unwrap();
         let mut r = DatasetReader::open(&dir).unwrap();
         assert!(r.read(99).is_err());

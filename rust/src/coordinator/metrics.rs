@@ -1,15 +1,26 @@
 //! Run-level metrics: per-stage timing, work counters, convergence
-//! summary. Serialized into the dataset manifest and printed by the CLI.
+//! summary, and the scheduler's sort-quality/handoff accounting.
+//! Serialized into the dataset manifest and printed by the CLI.
 
+use super::scheduler::Boundary;
 use crate::util::json::Value;
 
-/// Per-shard work summary (sort/solve split) from one solve worker.
+/// Work summary of one similarity run (one solve worker).
 #[derive(Debug, Default, Clone, PartialEq)]
 pub struct ShardReport {
-    /// Problems solved by this shard.
+    /// Run index (boundary order: run `k+1` may hand off from run `k`).
+    pub run: usize,
+    /// Problems solved by this run.
     pub problems: usize,
-    /// Seconds spent sorting this shard's chunks.
-    pub sort_secs: f64,
+    /// Summed ChFSI outer iterations across the run's solves.
+    pub iterations: usize,
+    /// Whether the run's first solve inherited the previous run's tail
+    /// eigenpairs (a granted boundary handoff that actually arrived).
+    pub warm_handoff: bool,
+    /// Solves that started cold within this run.
+    pub cold_starts: usize,
+    /// Seconds blocked waiting for the predecessor run's tail.
+    pub handoff_wait_secs: f64,
     /// Seconds spent in eigensolves.
     pub solve_secs: f64,
     /// Filter calls served by the XLA backend.
@@ -22,8 +33,12 @@ impl ShardReport {
     /// JSON object for the manifest.
     pub fn to_json(&self) -> Value {
         Value::obj(vec![
+            ("run", self.run.into()),
             ("problems", self.problems.into()),
-            ("sort_secs", self.sort_secs.into()),
+            ("iterations", self.iterations.into()),
+            ("warm_handoff", self.warm_handoff.into()),
+            ("cold_starts", self.cold_starts.into()),
+            ("handoff_wait_secs", self.handoff_wait_secs.into()),
             ("solve_secs", self.solve_secs.into()),
             ("xla_calls", self.xla_calls.into()),
             ("native_fallbacks", self.native_fallbacks.into()),
@@ -40,9 +55,16 @@ pub struct GenReport {
     pub total_secs: f64,
     /// Seconds in parameter generation + discretization (producer).
     pub gen_secs: f64,
-    /// Seconds in sorting (summed over shards).
+    /// Seconds computing streamed truncated-FFT signatures (summed over
+    /// signature workers).
+    pub signature_secs: f64,
+    /// Seconds building the global schedule (greedy order + run
+    /// partition + boundary decisions).
+    pub schedule_secs: f64,
+    /// Seconds in sorting = signature + schedule stages (kept as the
+    /// historical aggregate).
     pub sort_secs: f64,
-    /// Seconds in eigensolves (summed over shards).
+    /// Seconds in eigensolves (summed over runs).
     pub solve_secs: f64,
     /// Seconds in validation + dataset writing.
     pub write_secs: f64,
@@ -62,8 +84,22 @@ pub struct GenReport {
     pub xla_calls: usize,
     /// XLA-backend calls that fell back to the native kernel.
     pub native_fallbacks: usize,
-    /// Per-shard sort/solve breakdown (ordered by descending problem
-    /// count, then solve time, for a deterministic manifest).
+    /// Sort scope the schedule was built with ("global" / "shard").
+    pub sort_scope: String,
+    /// Sort quality: sum of adjacent Euclidean signature distances
+    /// within runs (lower = better warm-start locality; 0 without
+    /// signatures). Comparable across scopes on the same seed.
+    pub sort_quality: f64,
+    /// Boundary handoffs granted by the scheduler.
+    pub warm_handoffs: usize,
+    /// Runs whose first solve started cold. (Per-*solve* cold counts
+    /// live in each run's [`ShardReport::cold_starts`] — different
+    /// unit, hence the different name.)
+    pub cold_runs: usize,
+    /// Seam reports of the global order (empty for shard scope).
+    pub boundaries: Vec<Boundary>,
+    /// Per-run breakdown, ordered by run index (deterministic
+    /// manifest).
     pub shards: Vec<ShardReport>,
 }
 
@@ -74,6 +110,8 @@ impl GenReport {
             ("n_problems", self.n_problems.into()),
             ("total_secs", self.total_secs.into()),
             ("gen_secs", self.gen_secs.into()),
+            ("signature_secs", self.signature_secs.into()),
+            ("schedule_secs", self.schedule_secs.into()),
             ("sort_secs", self.sort_secs.into()),
             ("solve_secs", self.solve_secs.into()),
             ("write_secs", self.write_secs.into()),
@@ -85,6 +123,14 @@ impl GenReport {
             ("all_converged", self.all_converged.into()),
             ("xla_calls", self.xla_calls.into()),
             ("native_fallbacks", self.native_fallbacks.into()),
+            ("sort_scope", self.sort_scope.as_str().into()),
+            ("sort_quality", self.sort_quality.into()),
+            ("warm_handoffs", self.warm_handoffs.into()),
+            ("cold_runs", self.cold_runs.into()),
+            (
+                "boundaries",
+                Value::Arr(self.boundaries.iter().map(Boundary::to_json).collect()),
+            ),
             (
                 "shards",
                 Value::Arr(self.shards.iter().map(ShardReport::to_json).collect()),
@@ -95,7 +141,7 @@ impl GenReport {
     /// Compact human-readable summary line.
     pub fn summary(&self) -> String {
         format!(
-            "{} problems in {:.2}s (avg solve {:.3}s, avg iters {:.1}, {:.0} Mflop total, {:.0} Mflop filter, max residual {:.2e}, converged: {})",
+            "{} problems in {:.2}s (avg solve {:.3}s, avg iters {:.1}, {:.0} Mflop total, {:.0} Mflop filter, max residual {:.2e}, converged: {}, sort {} quality {:.3}, {} warm handoffs / {} cold runs)",
             self.n_problems,
             self.total_secs,
             self.avg_solve_secs,
@@ -104,6 +150,10 @@ impl GenReport {
             self.filter_mflops,
             self.max_residual,
             self.all_converged,
+            self.sort_scope,
+            self.sort_quality,
+            self.warm_handoffs,
+            self.cold_runs,
         )
     }
 }
@@ -118,12 +168,19 @@ mod tests {
             n_problems: 4,
             total_secs: 1.5,
             all_converged: true,
+            sort_scope: "global".to_string(),
+            sort_quality: 2.25,
             ..Default::default()
         };
         let v = r.to_json();
         assert_eq!(v.get("n_problems").and_then(Value::as_usize), Some(4));
         assert_eq!(v.get("all_converged").and_then(Value::as_bool), Some(true));
         assert!(v.get("filter_mflops").is_some());
+        assert_eq!(v.get("sort_scope").and_then(Value::as_str), Some("global"));
+        assert_eq!(v.get("sort_quality").and_then(Value::as_f64), Some(2.25));
+        assert!(v.get("signature_secs").is_some());
+        assert!(v.get("schedule_secs").is_some());
+        assert!(v.get("boundaries").and_then(Value::as_arr).is_some());
     }
 
     #[test]
@@ -133,22 +190,56 @@ mod tests {
     }
 
     #[test]
+    fn boundaries_serialize_with_handoff_flags() {
+        let r = GenReport {
+            boundaries: vec![
+                Boundary {
+                    from_run: 0,
+                    to_run: 1,
+                    distance: 0.5,
+                    warm: true,
+                },
+                Boundary {
+                    from_run: 1,
+                    to_run: 2,
+                    distance: f64::INFINITY,
+                    warm: false,
+                },
+            ],
+            ..Default::default()
+        };
+        let v = r.to_json();
+        let bs = v.get("boundaries").and_then(Value::as_arr).unwrap();
+        assert_eq!(bs.len(), 2);
+        assert_eq!(bs[0].get("warm").and_then(Value::as_bool), Some(true));
+        assert_eq!(bs[0].get("distance").and_then(Value::as_f64), Some(0.5));
+        // Non-finite distances (no signatures) serialize as null.
+        assert!(matches!(bs[1].get("distance"), Some(&Value::Null)));
+    }
+
+    #[test]
     fn shard_reports_serialize() {
         let r = GenReport {
             n_problems: 2,
             shards: vec![
                 ShardReport {
+                    run: 0,
                     problems: 1,
-                    sort_secs: 0.1,
+                    iterations: 9,
+                    cold_starts: 1,
                     solve_secs: 0.4,
                     ..Default::default()
                 },
                 ShardReport {
+                    run: 1,
                     problems: 1,
-                    sort_secs: 0.2,
+                    iterations: 4,
+                    warm_handoff: true,
+                    handoff_wait_secs: 0.2,
                     solve_secs: 0.3,
                     xla_calls: 5,
                     native_fallbacks: 1,
+                    ..Default::default()
                 },
             ],
             ..Default::default()
@@ -161,8 +252,16 @@ mod tests {
             Some(5)
         );
         assert_eq!(
+            shards[1].get("warm_handoff").and_then(Value::as_bool),
+            Some(true)
+        );
+        assert_eq!(
             shards[0].get("solve_secs").and_then(Value::as_f64),
             Some(0.4)
+        );
+        assert_eq!(
+            shards[0].get("iterations").and_then(Value::as_usize),
+            Some(9)
         );
     }
 }

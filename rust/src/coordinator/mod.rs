@@ -1,21 +1,45 @@
 //! Layer-3 coordinator: the streaming dataset-generation pipeline.
 //!
-//! This is the paper's Figure 1 as a system: parameter generation →
-//! discretization → (truncated-FFT) sorting → sharded sequential SCSF
-//! solving → validation → dataset assembly. The paper's §D.6
-//! parallelization model — "partition the N problems into M chunks and
-//! run M SCSF instances in parallel" — maps to the shard workers here.
+//! This is the paper's Figure 1 as a system, restructured into five
+//! explicit pipelined stages around a **global spectral scheduler**:
+//!
+//! ```text
+//! producer ──problem──▶ signature workers (×M, streaming TFFT keys)
+//!                            │ (problem, signature)
+//!                            ▼
+//!                      scheduler: ONE global greedy order over all N
+//!                      signatures → M contiguous similarity runs
+//!                            │ run plans (+ boundary-handoff channels)
+//!                            ▼
+//!                      solve workers (×M, one warm chain per run)
+//!                            │ (id, run, EigResult)
+//!                            ▼
+//!                      validator/writer ──▶ eigs.bin + manifest.json
+//! ```
+//!
+//! The paper's §D.6 parallelization ("partition the N problems into M
+//! chunks and run M SCSF instances") sorts only *within* each chunk, so
+//! warm-start quality degrades as `M` grows. The scheduler
+//! ([`scheduler`]) instead sorts *globally* — each worker's sequence is
+//! a contiguous run of one global Algorithm-2 order, so sharded
+//! generation keeps the single-sequence sort quality — and may wire a
+//! **boundary handoff**: when the signature distance across the seam
+//! between run `k` and run `k+1` is under the configured threshold, run
+//! `k+1`'s first problem warm-starts from run `k`'s tail eigenpairs
+//! (otherwise the seam is a detected cold start). `sort_scope: shard`
+//! in [`config::GenConfig`] restores the per-chunk baseline for
+//! ablation; the manifest records per-problem run assignment, the
+//! sort-quality metric, per-stage timings, and per-seam handoff
+//! decisions either way.
 //!
 //! Stages are connected by *bounded* channels, so a slow solver stalls
 //! the producer instead of buffering the whole dataset in memory
-//! (backpressure), and every stage runs on its own thread:
-//!
-//! ```text
-//! producer ──chunk──▶ shard workers (×M, sort + warm-started ChFSI)
-//!                          │ (id, EigResult)
-//!                          ▼
-//!                     validator/writer ──▶ eigs.bin + manifest.json
-//! ```
+//! (backpressure), and every stage runs on its own thread. One caveat
+//! is inherent to global sorting: the scheduler is a barrier (the order
+//! over all `N` signatures needs all `N` signatures), so `sort_scope:
+//! global` holds the problem set in memory during scheduling, while
+//! `sort_scope: shard` dispatches each run as soon as its last problem
+//! is keyed.
 //!
 //! The offline build environment has no tokio; the pipeline uses
 //! `std::thread::scope` + `sync_channel`, which gives the same
@@ -26,3 +50,4 @@ pub mod config;
 pub mod dataset;
 pub mod metrics;
 pub mod pipeline;
+pub mod scheduler;

@@ -1,22 +1,37 @@
 //! The streaming generation pipeline (see module docs in
-//! [`crate::coordinator`]).
+//! [`crate::coordinator`]): five explicit stages connected by bounded
+//! channels —
+//!
+//! ```text
+//! generate → signature → schedule → solve (×M runs) → validate/write
+//! ```
+//!
+//! The producer streams problems one at a time; signature workers key
+//! them with the truncated-FFT extractor ([`sort::signature`]) as they
+//! arrive; the scheduler ([`super::scheduler`]) builds one global
+//! similarity order and hands each solve worker a contiguous run of it,
+//! wiring a boundary-handoff channel wherever the seam distance grants
+//! a warm start. Shard-scope runs are dispatched the moment their last
+//! problem is keyed (streaming); global scope is a barrier by nature —
+//! the order over all `N` signatures needs all `N` signatures.
 
 use super::config::{Backend, GenConfig};
 use super::dataset::DatasetWriter;
 use super::metrics::{GenReport, ShardReport};
+use super::scheduler::{self, Schedule, SortScope};
 use crate::anyhow;
 use crate::eig::chebyshev::{FilterBackend, NativeFilter};
-use crate::eig::chfsi;
+use crate::eig::scsf::Chain;
 use crate::eig::solver::Workspace;
 use crate::eig::WarmStart;
 use crate::operators::{self, Problem};
 use crate::rng::Xoshiro256pp;
 use crate::runtime::{XlaFilter, XlaRuntime};
-use crate::sort;
+use crate::sort::{greedy, signature::SignatureEngine, SortMethod};
 use crate::util::error::Result;
 use std::path::Path;
 use std::rc::Rc;
-use std::sync::mpsc::sync_channel;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -30,117 +45,352 @@ fn make_backend(cfg: &GenConfig) -> Result<Box<dyn FilterBackend>> {
     }
 }
 
+/// Everything one solve worker needs for its similarity run: the
+/// problems in solve order, plus the boundary-handoff wiring.
+struct RunPlan {
+    /// Run index (= the shard id recorded per problem in the manifest).
+    index: usize,
+    /// Problems in solve order.
+    problems: Vec<Problem>,
+    /// Receive the predecessor run's tail eigenpairs before solving.
+    handoff_rx: Option<Receiver<WarmStart>>,
+    /// Publish this run's tail eigenpairs for the successor.
+    handoff_tx: Option<SyncSender<WarmStart>>,
+}
+
+/// Scheduler-stage outcome recorded into the report.
+#[derive(Default)]
+struct ScheduleSummary {
+    sort_quality: f64,
+    boundaries: Vec<scheduler::Boundary>,
+    secs: f64,
+}
+
 /// Generate a full eigenvalue dataset per the config, writing it to
 /// `out_dir`. Returns the run report (also embedded in the manifest).
 ///
-/// Deterministic: problem parameters depend only on `cfg.seed`; solve
-/// results are deterministic per shard.
+/// Deterministic: problem parameters depend only on `cfg.seed`; the
+/// schedule depends only on the signatures (not on thread timing); solve
+/// results are deterministic per run, including across boundary
+/// handoffs (run `k+1` blocks for run `k`'s tail — never races it).
 pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
     assert!(cfg.n_problems >= 1);
     assert!(cfg.shards >= 1);
+    if cfg.sort_scope == SortScope::Shard && cfg.handoff_threshold.is_some() && cfg.warm_start {
+        // Shard runs are independent — a threshold there would be
+        // silently inert, so fail loudly instead.
+        return Err(anyhow!(
+            "handoff_threshold requires sort_scope=global (shard-scope runs have no seams)"
+        ));
+    }
     let t_start = Instant::now();
-    let chunk_size = cfg.n_problems.div_ceil(cfg.shards);
-    let n_workers = cfg.shards.min(cfg.n_problems.div_ceil(chunk_size));
+    let n = cfg.n_problems;
+    let (chunk, n_runs) = scheduler::run_span(n, cfg.shards);
+    // warm_start=false is the master ablation switch: every solve is
+    // cold, so boundary handoffs are moot.
+    let handoff_threshold = if cfg.warm_start {
+        cfg.handoff_threshold
+    } else {
+        None
+    };
 
     // Stage channels (bounded = backpressure).
-    let (chunk_tx, chunk_rx) = sync_channel::<Vec<Problem>>(2);
-    let chunk_rx = Mutex::new(chunk_rx);
+    let (prob_tx, prob_rx) = sync_channel::<Problem>(cfg.channel_capacity);
+    let prob_rx = Mutex::new(prob_rx);
+    let (sig_tx, sig_rx) =
+        sync_channel::<(Problem, Option<Vec<f64>>)>(cfg.channel_capacity);
+    let mut plan_txs: Vec<SyncSender<RunPlan>> = Vec::with_capacity(n_runs);
+    let mut plan_rxs: Vec<Receiver<RunPlan>> = Vec::with_capacity(n_runs);
+    for _ in 0..n_runs {
+        let (tx, rx) = sync_channel::<RunPlan>(1);
+        plan_txs.push(tx);
+        plan_rxs.push(rx);
+    }
     let (res_tx, res_rx) =
-        sync_channel::<(usize, crate::eig::EigResult)>(cfg.channel_capacity);
+        sync_channel::<(usize, usize, crate::eig::EigResult)>(cfg.channel_capacity);
+
     let shard_stats: Mutex<Vec<ShardReport>> = Mutex::new(Vec::new());
     let gen_secs_cell: Mutex<f64> = Mutex::new(0.0);
+    let signature_secs_cell: Mutex<f64> = Mutex::new(0.0);
+    let summary_cell: Mutex<ScheduleSummary> = Mutex::new(ScheduleSummary::default());
     let producer_err: Mutex<Option<String>> = Mutex::new(None);
 
     let mut report = GenReport {
-        n_problems: cfg.n_problems,
+        n_problems: n,
+        sort_scope: cfg.sort_scope.name().to_string(),
         ..Default::default()
     };
 
     let writer_out: Result<(DatasetWriter, f64, usize)> =
         std::thread::scope(|scope| {
-            // ---- Producer: parameters → operators → chunks ------------
+            // ---- Stage 1 · producer: parameters → operators -----------
             let producer_err = &producer_err;
             let gen_secs_cell = &gen_secs_cell;
             scope.spawn(move || {
-                // `chunk_tx` is moved in and dropped on exit → workers
-                // see EOF once all chunks are out.
-                let chunk_tx = chunk_tx;
+                // `prob_tx` is moved in and dropped on exit → signature
+                // workers see EOF once every problem is out.
+                let prob_tx = prob_tx;
                 let t0 = Instant::now();
                 let mut master = Xoshiro256pp::seed_from_u64(cfg.seed);
-                let mut chunk: Vec<Problem> = Vec::with_capacity(chunk_size);
-                for id in 0..cfg.n_problems {
+                for id in 0..n {
                     let mut prng = master.fork();
                     let p =
                         operators::generate_one(cfg.kind, cfg.gen_options(), id, &mut prng);
-                    chunk.push(p);
-                    if chunk.len() == chunk_size || id + 1 == cfg.n_problems {
-                        let full = std::mem::take(&mut chunk);
-                        if chunk_tx.send(full).is_err() {
-                            *producer_err.lock().unwrap() =
-                                Some("workers hung up early".to_string());
-                            break;
-                        }
+                    if prob_tx.send(p).is_err() {
+                        *producer_err.lock().unwrap() =
+                            Some("signature stage hung up early".to_string());
+                        break;
                     }
                 }
                 *gen_secs_cell.lock().unwrap() = t0.elapsed().as_secs_f64();
             });
 
-            // ---- Shard workers: sort + warm-started sequential solve --
-            let mut worker_handles = Vec::new();
-            for _w in 0..n_workers {
-                let res_tx = res_tx.clone();
-                let chunk_rx = &chunk_rx;
-                let shard_stats = &shard_stats;
-                let handle = scope.spawn(move || -> Result<()> {
-                    let mut backend = make_backend(cfg)?;
-                    // One workspace per shard worker, reused across every
-                    // chunk and every problem this worker ever solves —
-                    // the steady state allocates nothing in solver loops.
-                    let mut ws = Workspace::new(cfg.threads.max(1));
-                    let mut stats = ShardReport::default();
+            // ---- Stage 2 · signature workers: streaming TFFT keys -----
+            let signature_secs_cell = &signature_secs_cell;
+            for _ in 0..n_runs {
+                let sig_tx = sig_tx.clone();
+                let prob_rx = &prob_rx;
+                scope.spawn(move || {
+                    let mut engine = SignatureEngine::new(cfg.sort);
+                    let mut secs = 0.0f64;
                     loop {
-                        let chunk = {
-                            let rx = chunk_rx.lock().unwrap();
+                        let p = {
+                            let rx = prob_rx.lock().unwrap();
                             match rx.recv() {
-                                Ok(c) => c,
+                                Ok(p) => p,
                                 Err(_) => break, // producer done
                             }
                         };
-                        let t_sort = Instant::now();
-                        let sorted = sort::sort_problems(&chunk, cfg.sort);
-                        stats.sort_secs += t_sort.elapsed().as_secs_f64();
-                        let opts = cfg.scsf_options();
-                        let t_solve = Instant::now();
-                        let mut warm: Option<WarmStart> = None;
-                        for &idx in &sorted.order {
-                            let problem = &chunk[idx];
-                            let r = chfsi::solve_in(
-                                &problem.matrix,
-                                &opts.chfsi,
-                                warm.as_ref(),
-                                backend.as_mut(),
-                                &mut ws,
-                            );
-                            warm = Some(r.as_warm_start());
-                            stats.problems += 1;
-                            res_tx
-                                .send((problem.id, r))
-                                .map_err(|_| anyhow!("writer hung up"))?;
+                        let t0 = Instant::now();
+                        let key = engine.signature(&p);
+                        secs += t0.elapsed().as_secs_f64();
+                        if sig_tx.send((p, key)).is_err() {
+                            break; // scheduler gone
                         }
-                        stats.solve_secs += t_solve.elapsed().as_secs_f64();
+                    }
+                    *signature_secs_cell.lock().unwrap() += secs;
+                });
+            }
+            drop(sig_tx); // scheduler sees EOF once the workers finish
+
+            // ---- Stage 3 · scheduler: global order → similarity runs --
+            let summary_cell = &summary_cell;
+            scope.spawn(move || {
+                let sig_rx = sig_rx;
+                let plan_txs = plan_txs;
+                // Whether problems carry signatures is a property of the
+                // sort method, not of individual problems.
+                let keyed = cfg.sort != SortMethod::None;
+                let mut prob_slots: Vec<Option<Problem>> = (0..n).map(|_| None).collect();
+                let mut key_slots: Vec<Option<Vec<f64>>> = (0..n).map(|_| None).collect();
+                let mut summary = ScheduleSummary::default();
+                match cfg.sort_scope {
+                    SortScope::Shard => {
+                        // Streaming dispatch: a run leaves the moment its
+                        // last problem is keyed. The per-chunk greedy
+                        // scans run serially on this thread (the old
+                        // pipeline ran them inside each solve worker),
+                        // but they overlap the producer and every
+                        // already-dispatched run's solves — and the
+                        // compressed scan is orders of magnitude cheaper
+                        // than the eigensolves it schedules.
+                        let mut remaining: Vec<usize> = (0..n_runs)
+                            .map(|r| n.min((r + 1) * chunk) - r * chunk)
+                            .collect();
+                        let mut scratch = greedy::GreedyScratch::default();
+                        let mut order_buf: Vec<usize> = Vec::with_capacity(chunk);
+                        for _ in 0..n {
+                            let (p, key) = match sig_rx.recv() {
+                                Ok(x) => x,
+                                Err(_) => break, // producer/signature died
+                            };
+                            let id = p.id;
+                            let r = id / chunk;
+                            prob_slots[id] = Some(p);
+                            key_slots[id] = key;
+                            remaining[r] -= 1;
+                            if remaining[r] > 0 {
+                                continue;
+                            }
+                            let t0 = Instant::now();
+                            let start = r * chunk;
+                            let end = n.min(start + chunk);
+                            let keys: Option<Vec<Vec<f64>>> = keyed.then(|| {
+                                key_slots[start..end]
+                                    .iter_mut()
+                                    .map(|s| s.take().unwrap())
+                                    .collect()
+                            });
+                            let (order, quality) = scheduler::order_chunk(
+                                keys.as_deref(),
+                                start,
+                                end - start,
+                                &mut scratch,
+                                &mut order_buf,
+                            );
+                            summary.sort_quality += quality;
+                            // Reorder the run's problems to solve order.
+                            let by_order: Vec<Problem> = order
+                                .iter()
+                                .map(|&id| prob_slots[id].take().unwrap())
+                                .collect();
+                            summary.secs += t0.elapsed().as_secs_f64();
+                            let _ = plan_txs[r].send(RunPlan {
+                                index: r,
+                                problems: by_order,
+                                handoff_rx: None,
+                                handoff_tx: None,
+                            });
+                        }
+                    }
+                    SortScope::Global => {
+                        // Barrier: the global order needs every signature.
+                        let mut received = 0usize;
+                        while received < n {
+                            let (p, key) = match sig_rx.recv() {
+                                Ok(x) => x,
+                                Err(_) => break,
+                            };
+                            let id = p.id;
+                            prob_slots[id] = Some(p);
+                            key_slots[id] = key;
+                            received += 1;
+                        }
+                        if received < n {
+                            return; // upstream failure; workers see EOF
+                        }
+                        let t0 = Instant::now();
+                        let keys: Option<Vec<Vec<f64>>> = keyed.then(|| {
+                            key_slots
+                                .iter_mut()
+                                .map(|s| s.take().unwrap())
+                                .collect()
+                        });
+                        let schedule: Schedule = scheduler::build_schedule(
+                            keys.as_deref(),
+                            n,
+                            SortScope::Global,
+                            cfg.shards,
+                            handoff_threshold,
+                        );
+                        summary.sort_quality = schedule.sort_quality;
+                        summary.boundaries = schedule.boundaries.clone();
+                        // Boundary-handoff channels: seam k gets a slot
+                        // iff the scheduler granted it a warm start.
+                        let mut handoff_rxs: Vec<Option<Receiver<WarmStart>>> =
+                            Vec::with_capacity(n_runs);
+                        let mut handoff_txs: Vec<Option<SyncSender<WarmStart>>> =
+                            (0..n_runs).map(|_| None).collect();
+                        handoff_rxs.push(None); // run 0 never receives
+                        for b in &schedule.boundaries {
+                            if b.warm {
+                                let (tx, rx) = sync_channel::<WarmStart>(1);
+                                handoff_txs[b.from_run] = Some(tx);
+                                handoff_rxs.push(Some(rx));
+                            } else {
+                                handoff_rxs.push(None);
+                            }
+                        }
+                        summary.secs = t0.elapsed().as_secs_f64();
+                        for (run, (rx, tx)) in schedule
+                            .runs
+                            .into_iter()
+                            .zip(handoff_rxs.into_iter().zip(handoff_txs))
+                        {
+                            let by_order: Vec<Problem> = run
+                                .order
+                                .iter()
+                                .map(|&id| prob_slots[id].take().unwrap())
+                                .collect();
+                            let _ = plan_txs[run.index].send(RunPlan {
+                                index: run.index,
+                                problems: by_order,
+                                handoff_rx: rx,
+                                handoff_tx: tx,
+                            });
+                        }
+                    }
+                }
+                *summary_cell.lock().unwrap() = summary;
+                // `plan_txs` drops here → any worker without a plan
+                // (upstream failure) sees EOF and exits cleanly.
+            });
+
+            // ---- Stage 4 · solve workers: one warm chain per run ------
+            let mut worker_handles = Vec::new();
+            for plan_rx in plan_rxs.drain(..) {
+                let res_tx = res_tx.clone();
+                let shard_stats = &shard_stats;
+                let handle = scope.spawn(move || -> Result<()> {
+                    let plan = match plan_rx.recv() {
+                        Ok(p) => p,
+                        Err(_) => return Ok(()), // scheduler aborted
+                    };
+                    let mut backend = make_backend(cfg)?;
+                    // One workspace per run, reused across every problem
+                    // this worker solves — the steady state allocates
+                    // nothing in solver loops.
+                    let mut ws = Workspace::new(cfg.threads.max(1));
+                    let opts = cfg.scsf_options();
+                    let mut stats = ShardReport {
+                        run: plan.index,
+                        ..Default::default()
+                    };
+                    let mut chain = Chain::new();
+                    if let Some(rx) = plan.handoff_rx {
+                        // Deterministic handoff: block for the
+                        // predecessor's tail (a dropped sender means the
+                        // predecessor failed — detected cold start).
+                        let t0 = Instant::now();
+                        if let Ok(tail) = rx.recv() {
+                            chain.adopt(tail);
+                            stats.warm_handoff = true;
+                        }
+                        stats.handoff_wait_secs = t0.elapsed().as_secs_f64();
+                    }
+                    let t_solve = Instant::now();
+                    let mut writer_gone = false;
+                    for problem in &plan.problems {
+                        let r =
+                            chain.solve_next(&problem.matrix, &opts, backend.as_mut(), &mut ws);
+                        stats.problems += 1;
+                        stats.iterations += r.stats.iterations;
+                        if res_tx.send((problem.id, plan.index, r)).is_err() {
+                            writer_gone = true;
+                            break;
+                        }
+                    }
+                    stats.solve_secs = t_solve.elapsed().as_secs_f64();
+                    stats.cold_starts = chain.cold_starts;
+                    // Publish the tail for the successor's handoff even
+                    // on a writer failure — never strand the next run.
+                    if let Some(tx) = plan.handoff_tx {
+                        if let Some(tail) = chain.into_tail() {
+                            let _ = tx.send(tail);
+                        }
                     }
                     let (xla, fallback) = backend.counters();
                     stats.xla_calls = xla;
                     stats.native_fallbacks = fallback;
                     shard_stats.lock().unwrap().push(stats);
+                    if writer_gone {
+                        return Err(anyhow!("writer hung up"));
+                    }
                     Ok(())
                 });
                 worker_handles.push(handle);
             }
             drop(res_tx); // writer sees EOF once all workers finish
 
-            // ---- Validator / writer -----------------------------------
-            let mut writer = DatasetWriter::create(out_dir)?;
+            // ---- Stage 5 · validator / writer -------------------------
+            // The writer must NEVER stop draining `res_rx` on an IO
+            // error: solve workers block on the bounded channel, and
+            // `thread::scope` joins them on exit while the receiver
+            // (owned by the outer frame) is still alive — an early `?`
+            // here would deadlock the whole pipeline. Errors are
+            // recorded and propagated after EOF instead.
+            let mut writer_res = DatasetWriter::create(out_dir);
+            let mut write_err: Option<crate::util::error::Error> = None;
             let mut write_secs = 0.0f64;
             let mut max_residual: f64 = 0.0;
             let mut solve_secs_sum = 0.0;
@@ -149,7 +399,7 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
             let mut filter_mflops = 0.0;
             let mut all_converged = true;
             let mut count = 0usize;
-            for (id, result) in res_rx.iter() {
+            for (id, run, result) in res_rx.iter() {
                 // Validation stage: every stored pair re-checked against
                 // the tolerance (the dataset-reliability guarantee of
                 // paper §E.5).
@@ -160,10 +410,16 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
                 iter_sum += result.stats.iterations;
                 mflops += result.stats.flops as f64 / 1e6;
                 filter_mflops += result.stats.filter_flops as f64 / 1e6;
-                let t_write = Instant::now();
-                writer.write_record(id, &result)?;
-                write_secs += t_write.elapsed().as_secs_f64();
-                count += 1;
+                if let Ok(writer) = writer_res.as_mut() {
+                    if write_err.is_none() {
+                        let t_write = Instant::now();
+                        match writer.write_record(id, run, &result) {
+                            Ok(()) => count += 1,
+                            Err(e) => write_err = Some(e),
+                        }
+                        write_secs += t_write.elapsed().as_secs_f64();
+                    }
+                }
             }
 
             for h in worker_handles {
@@ -171,6 +427,10 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
             }
             if let Some(err) = producer_err.lock().unwrap().take() {
                 return Err(anyhow!(err));
+            }
+            let writer = writer_res?;
+            if let Some(e) = write_err {
+                return Err(e);
             }
             report.max_residual = max_residual;
             report.all_converged = all_converged;
@@ -190,15 +450,18 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
     }
 
     let mut stats = shard_stats.into_inner().unwrap();
-    // Worker completion order is nondeterministic; order the manifest's
-    // shard list by workload instead.
-    stats.sort_by(|a, b| {
-        b.problems
-            .cmp(&a.problems)
-            .then(b.solve_secs.total_cmp(&a.solve_secs))
-    });
+    // Worker completion order is nondeterministic; the manifest lists
+    // runs in boundary order.
+    stats.sort_by_key(|s| s.run);
+    let summary = summary_cell.into_inner().unwrap();
     report.gen_secs = gen_secs_cell.into_inner().unwrap();
-    report.sort_secs = stats.iter().map(|s| s.sort_secs).sum();
+    report.signature_secs = signature_secs_cell.into_inner().unwrap();
+    report.schedule_secs = summary.secs;
+    report.sort_secs = report.signature_secs + report.schedule_secs;
+    report.sort_quality = summary.sort_quality;
+    report.boundaries = summary.boundaries;
+    report.warm_handoffs = stats.iter().filter(|s| s.warm_handoff).count();
+    report.cold_runs = stats.iter().filter(|s| !s.warm_handoff).count();
     report.solve_secs = stats.iter().map(|s| s.solve_secs).sum();
     report.write_secs = write_secs;
     report.xla_calls = stats.iter().map(|s| s.xla_calls).sum();
@@ -256,6 +519,8 @@ mod tests {
         assert!(report.all_converged, "{report:?}");
         assert!(report.max_residual <= cfg.tol * 10.0);
         assert!(report.avg_solve_secs > 0.0);
+        assert_eq!(report.sort_scope, "global");
+        assert!(report.sort_quality > 0.0);
 
         // Read back and validate against dense references.
         let problems = generate_problems(&cfg);
@@ -325,7 +590,7 @@ mod tests {
     }
 
     #[test]
-    fn report_carries_per_shard_stats() {
+    fn report_carries_per_run_stats() {
         let dir = tmpdir("shardstats");
         let cfg = small_cfg();
         let report = generate_dataset(&cfg, &dir).unwrap();
@@ -334,6 +599,14 @@ mod tests {
         assert_eq!(total, cfg.n_problems);
         let solve_sum: f64 = report.shards.iter().map(|s| s.solve_secs).sum();
         assert!((solve_sum - report.solve_secs).abs() < 1e-9);
+        // Runs are listed in boundary order.
+        for (r, s) in report.shards.iter().enumerate() {
+            assert_eq!(s.run, r);
+            assert!(s.iterations >= s.problems, "at least one iter per solve");
+        }
+        // Handoffs are off by default: every run starts cold.
+        assert_eq!(report.warm_handoffs, 0);
+        assert_eq!(report.cold_runs, report.shards.len());
         // And the manifest exposes them.
         let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
         let v = crate::util::json::parse(&text).unwrap();
@@ -343,6 +616,99 @@ mod tests {
             .and_then(crate::util::json::Value::as_arr)
             .unwrap();
         assert_eq!(shards.len(), report.shards.len());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn manifest_records_shard_assignment_and_quality() {
+        let dir = tmpdir("assign");
+        let mut cfg = small_cfg();
+        cfg.shards = 3;
+        let report = generate_dataset(&cfg, &dir).unwrap();
+        let mut reader = DatasetReader::open(&dir).unwrap();
+        // Every record carries its run assignment; each of the 3 runs
+        // solved 2 of the 6 problems.
+        let mut per_run = vec![0usize; 3];
+        for rec in reader.index() {
+            assert!(rec.shard < 3);
+            per_run[rec.shard] += 1;
+        }
+        assert_eq!(per_run, vec![2, 2, 2]);
+        // The sort-quality metric is in the manifest report.
+        let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let v = crate::util::json::parse(&text).unwrap();
+        let quality = v
+            .get("report")
+            .and_then(|r| r.get("sort_quality"))
+            .and_then(crate::util::json::Value::as_f64)
+            .unwrap();
+        assert_eq!(quality, report.sort_quality);
+        // Boundaries are reported for the global order (2 seams).
+        let bounds = v
+            .get("report")
+            .and_then(|r| r.get("boundaries"))
+            .and_then(crate::util::json::Value::as_arr)
+            .unwrap();
+        assert_eq!(bounds.len(), 2);
+        let _ = reader.read(0).unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn infinite_handoff_chains_every_run() {
+        let dir = tmpdir("handoff");
+        let mut cfg = small_cfg();
+        cfg.shards = 3;
+        cfg.handoff_threshold = Some(f64::INFINITY);
+        let report = generate_dataset(&cfg, &dir).unwrap();
+        assert!(report.all_converged);
+        assert_eq!(report.warm_handoffs, 2, "{:?}", report.boundaries);
+        assert_eq!(report.cold_runs, 1);
+        for b in &report.boundaries {
+            assert!(b.warm);
+        }
+        // Runs 1 and 2 inherited a tail; their first solve was warm.
+        for s in &report.shards {
+            assert_eq!(s.warm_handoff, s.run > 0);
+            assert_eq!(s.cold_starts, usize::from(s.run == 0));
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shard_scope_rejects_handoff_threshold() {
+        // A threshold would be silently inert on independent shard
+        // runs; the pipeline fails loudly instead.
+        let dir = tmpdir("reject");
+        let mut cfg = small_cfg();
+        cfg.sort_scope = SortScope::Shard;
+        cfg.handoff_threshold = Some(1.0);
+        assert!(generate_dataset(&cfg, &dir).is_err());
+        // …unless warm_start=false already disables everything warm.
+        cfg.warm_start = false;
+        assert!(generate_dataset(&cfg, &dir).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shard_scope_still_streams_and_validates() {
+        let dir = tmpdir("shardscope");
+        let mut cfg = small_cfg();
+        cfg.sort_scope = SortScope::Shard;
+        let report = generate_dataset(&cfg, &dir).unwrap();
+        assert!(report.all_converged);
+        assert_eq!(report.sort_scope, "shard");
+        assert!(report.boundaries.is_empty());
+        assert!(report.sort_quality > 0.0);
+        let problems = generate_problems(&cfg);
+        let mut reader = DatasetReader::open(&dir).unwrap();
+        for p in &problems {
+            let rec = reader.read(p.id).unwrap();
+            let want = sym_eig(&p.matrix.to_dense());
+            for (got, w) in rec.values.iter().zip(&want.values[..cfg.n_eigs]) {
+                assert!((got - w).abs() / w.abs().max(1.0) < 1e-6);
+            }
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -45,16 +45,34 @@ pub struct SequenceResult {
     pub order: Vec<usize>,
     /// Sorting cost breakdown.
     pub sort: SortOutcome,
+    /// Inverse permutation: `inv[id]` is the solve position of problem
+    /// `id` — makes [`Self::by_problem_id`] O(1) instead of a linear
+    /// scan per lookup.
+    inv: Vec<usize>,
 }
 
 impl SequenceResult {
+    /// Assemble from per-position results and the sort outcome that
+    /// ordered them (precomputes the inverse permutation).
+    pub fn new(results: Vec<EigResult>, sort: SortOutcome) -> Self {
+        assert_eq!(results.len(), sort.order.len());
+        let order = sort.order.clone();
+        let mut inv = vec![usize::MAX; order.len()];
+        for (pos, &id) in order.iter().enumerate() {
+            inv[id] = pos;
+        }
+        Self {
+            results,
+            order,
+            sort,
+            inv,
+        }
+    }
+
     /// Result for the problem with original index `id`.
     pub fn by_problem_id(&self, id: usize) -> &EigResult {
-        let pos = self
-            .order
-            .iter()
-            .position(|&o| o == id)
-            .expect("unknown problem id");
+        let pos = *self.inv.get(id).expect("unknown problem id");
+        assert_ne!(pos, usize::MAX, "unknown problem id");
         &self.results[pos]
     }
 
@@ -121,19 +139,80 @@ pub fn solve_sequence_in(
     assert!(!problems.is_empty());
     let sort = sort::sort_problems(problems, opts.sort);
     let mut results = Vec::with_capacity(problems.len());
-    let mut warm: Option<WarmStart> = None;
+    let mut chain = Chain::new();
     for &idx in &sort.order {
-        let a = &problems[idx].matrix;
-        let r = chfsi::solve_in(a, &opts.chfsi, warm.as_ref(), backend, ws);
-        if opts.warm_start {
-            warm = Some(r.as_warm_start());
-        }
-        results.push(r);
+        results.push(chain.solve_next(&problems[idx].matrix, opts, backend, ws));
     }
-    SequenceResult {
-        results,
-        order: sort.order.clone(),
-        sort,
+    SequenceResult::new(results, sort)
+}
+
+/// A warm-started solve chain — the unit the pipeline's solve stage
+/// runs: each similarity run is one `Chain`, optionally seeded by the
+/// previous run's tail eigenpairs (the scheduler's boundary handoff).
+///
+/// The chain carries the warm start between consecutive solves and
+/// counts cold starts, so warm-start hit rate is a first-class, measured
+/// quantity rather than an emergent property of the loop.
+#[derive(Debug, Default)]
+pub struct Chain {
+    warm: Option<WarmStart>,
+    /// Solves that started cold (no inherited subspace).
+    pub cold_starts: usize,
+    /// Solves that inherited a subspace (chained or handed off).
+    pub warm_solves: usize,
+}
+
+impl Chain {
+    /// A chain with no inherited state: its first solve is cold.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Adopt a boundary handoff: the next solve warm-starts from
+    /// `tail` (the previous run's final eigenpairs).
+    pub fn adopt(&mut self, tail: WarmStart) {
+        self.warm = Some(tail);
+    }
+
+    /// True if the *next* solve would start cold — the chain's
+    /// cold-start detector (first solve of a run with no handoff).
+    pub fn next_is_cold(&self, opts: &ScsfOptions) -> bool {
+        !(opts.warm_start && self.warm.is_some())
+    }
+
+    /// Solve the next problem of the chain, inheriting the current warm
+    /// start (if any, and if `opts.warm_start`) and capturing the
+    /// result's eigenpairs for the solve after it.
+    pub fn solve_next(
+        &mut self,
+        a: &crate::sparse::CsrMatrix,
+        opts: &ScsfOptions,
+        backend: &mut dyn FilterBackend,
+        ws: &mut Workspace,
+    ) -> EigResult {
+        let cold = self.next_is_cold(opts);
+        if cold {
+            self.cold_starts += 1;
+        } else {
+            self.warm_solves += 1;
+        }
+        let init = if cold { None } else { self.warm.as_ref() };
+        let r = chfsi::solve_in(a, &opts.chfsi, init, backend, ws);
+        if opts.warm_start {
+            self.warm = Some(r.as_warm_start());
+        }
+        r
+    }
+
+    /// The chain's tail eigenpairs — what a boundary handoff publishes
+    /// to the next run (`None` if nothing was solved warm-capably).
+    pub fn tail(&self) -> Option<&WarmStart> {
+        self.warm.as_ref()
+    }
+
+    /// Consume the chain, yielding the tail for handoff.
+    pub fn into_tail(self) -> Option<WarmStart> {
+        self.warm
     }
 }
 
@@ -191,6 +270,90 @@ mod tests {
             let want = sym_eig(&ps[pid].matrix.to_dense());
             assert!((r.values[0] - want.values[0]).abs() / want.values[0] < 1e-6);
         }
+    }
+
+    #[test]
+    fn by_problem_id_is_constant_time_over_large_sequences() {
+        // Regression for the O(N) linear scan: 1k problems, a million
+        // lookups. With the precomputed inverse permutation this is
+        // milliseconds; the old per-lookup scan was ~1e9 comparisons.
+        use crate::linalg::Mat;
+        use crate::sort::SortOutcome;
+        let n = 1000usize;
+        // A deterministic nontrivial permutation (stride coprime to n).
+        let order: Vec<usize> = (0..n).map(|t| (t * 7) % n).collect();
+        let results: Vec<crate::eig::EigResult> = order
+            .iter()
+            .map(|&id| crate::eig::EigResult {
+                values: vec![id as f64],
+                vectors: Mat::zeros(1, 1),
+                residuals: vec![0.0],
+                stats: Default::default(),
+            })
+            .collect();
+        let seq = SequenceResult::new(
+            results,
+            SortOutcome {
+                order,
+                fft_secs: 0.0,
+                greedy_secs: 0.0,
+                quality: 0.0,
+            },
+        );
+        let t0 = std::time::Instant::now();
+        let mut checksum = 0.0;
+        for rep in 0..1000 {
+            for id in 0..n {
+                let r = seq.by_problem_id(id);
+                debug_assert_eq!(r.values[0], id as f64);
+                if rep == 0 {
+                    assert_eq!(r.values[0], id as f64, "lookup maps to wrong result");
+                }
+                checksum += r.values[0];
+            }
+        }
+        assert_eq!(checksum, 1000.0 * (n * (n - 1) / 2) as f64);
+        // Generous even for debug builds with the O(1) lookup; the old
+        // linear scan blows far past it.
+        assert!(
+            t0.elapsed().as_secs_f64() < 2.0,
+            "1e6 lookups took {:.2}s — by_problem_id regressed to a scan?",
+            t0.elapsed().as_secs_f64()
+        );
+    }
+
+    #[test]
+    fn chain_counts_cold_and_warm_solves() {
+        let ps = dataset(3, 7);
+        let o = opts(4, 1e-8);
+        let mut backend = crate::eig::chebyshev::NativeFilter;
+        let mut ws = Workspace::new(1);
+        let mut chain = Chain::new();
+        assert!(chain.next_is_cold(&o));
+        for p in &ps {
+            chain.solve_next(&p.matrix, &o, &mut backend, &mut ws);
+        }
+        assert_eq!(chain.cold_starts, 1);
+        assert_eq!(chain.warm_solves, 2);
+        let tail = chain.into_tail().expect("warm chain has a tail");
+
+        // A handoff-seeded chain starts warm.
+        let mut next = Chain::new();
+        next.adopt(tail);
+        assert!(!next.next_is_cold(&o));
+        next.solve_next(&ps[0].matrix, &o, &mut backend, &mut ws);
+        assert_eq!(next.cold_starts, 0);
+        assert_eq!(next.warm_solves, 1);
+
+        // warm_start=false forces every solve cold, even with a tail.
+        let mut cold_opts = o;
+        cold_opts.warm_start = false;
+        let mut c = Chain::new();
+        for p in &ps {
+            c.solve_next(&p.matrix, &cold_opts, &mut backend, &mut ws);
+        }
+        assert_eq!(c.cold_starts, 3);
+        assert_eq!(c.warm_solves, 0);
     }
 
     #[test]

@@ -177,10 +177,19 @@ pub fn fft(data: &mut [C64], inverse: bool) {
 /// Forward 2-D FFT of a real `p × p` field (row-major), returning the
 /// complex spectrum (row-major `p × p`).
 pub fn fft2_real(field: &[f64], p: usize) -> Vec<C64> {
-    assert_eq!(field.len(), p * p);
-    let mut spec: Vec<C64> = field.iter().map(|&x| C64::new(x, 0.0)).collect();
-    fft2_inplace(&mut spec, p, false);
+    let mut spec = Vec::new();
+    fft2_real_into(field, p, &mut spec);
     spec
+}
+
+/// [`fft2_real`] into a caller-owned buffer (cleared and refilled) — the
+/// streaming-signature stage transforms one field after another through
+/// the same allocation. Bit-for-bit identical to the allocating wrapper.
+pub fn fft2_real_into(field: &[f64], p: usize, spec: &mut Vec<C64>) {
+    assert_eq!(field.len(), p * p);
+    spec.clear();
+    spec.extend(field.iter().map(|&x| C64::new(x, 0.0)));
+    fft2_inplace(spec, p, false);
 }
 
 /// In-place 2-D FFT over a row-major `p × p` complex buffer.
@@ -218,6 +227,14 @@ pub fn ifft2_real(spec: &[C64], p: usize) -> Vec<f64> {
 /// This is the `Trunc_{p0}` operator of paper Appendix F, and the
 /// compressed representation `P_low ∈ C^{p0×p0}` of Algorithm 2.
 pub fn truncate_low_freq(spec: &[C64], p: usize, p0: usize) -> Vec<C64> {
+    let mut out = Vec::new();
+    truncate_low_freq_into(spec, p, p0, &mut out);
+    out
+}
+
+/// [`truncate_low_freq`] into a caller-owned buffer (cleared and
+/// refilled) — paired with [`fft2_real_into`] on the streaming path.
+pub fn truncate_low_freq_into(spec: &[C64], p: usize, p0: usize, out: &mut Vec<C64>) {
     assert_eq!(spec.len(), p * p);
     assert!(p0 <= p, "truncation threshold larger than field");
     let half_hi = p0 / 2; // negative-frequency half
@@ -229,13 +246,13 @@ pub fn truncate_low_freq(spec: &[C64], p: usize, p0: usize) -> Vec<C64> {
             p - p0 + t
         }
     };
-    let mut out = vec![C64::zero(); p0 * p0];
+    out.clear();
+    out.resize(p0 * p0, C64::zero());
     for (r_out, r_in) in (0..p0).map(|t| (t, pick(t))) {
         for (c_out, c_in) in (0..p0).map(|t| (t, pick(t))) {
             out[r_out * p0 + c_out] = spec[r_in * p + c_in];
         }
     }
-    out
 }
 
 /// Squared Frobenius distance between two complex spectra of equal length.
@@ -380,6 +397,21 @@ mod tests {
         let trunc = truncate_low_freq(&x, p, p);
         // p0 == p reorders rows/cols but keeps all entries; energy equal.
         assert!((spec_energy(&trunc) - spec_energy(&x)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn into_variants_match_allocating_paths_across_reuse() {
+        let mut rng = Xoshiro256pp::seed_from_u64(11);
+        let mut spec = Vec::new();
+        let mut trunc = Vec::new();
+        // Reuse the same buffers across fields of different sizes.
+        for (p, p0) in [(12usize, 5usize), (16, 8), (8, 8), (10, 3)] {
+            let field: Vec<f64> = (0..p * p).map(|_| rng.normal()).collect();
+            fft2_real_into(&field, p, &mut spec);
+            assert_eq!(spec, fft2_real(&field, p), "p={p}");
+            truncate_low_freq_into(&spec, p, p0, &mut trunc);
+            assert_eq!(trunc, truncate_low_freq(&spec, p, p0), "p={p} p0={p0}");
+        }
     }
 
     #[test]

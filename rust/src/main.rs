@@ -4,6 +4,8 @@
 //! scsf generate [--config cfg.json] [--kind helmholtz] [--grid 32]
 //!               [--n 16] [--l 16] [--tol 1e-8] [--seed 0] [--shards 2]
 //!               [--threads 1] [--sort fft|greedy|none] [--p0 20]
+//!               [--sort-scope global|shard] [--handoff off|inf|DIST]
+//!               [--warm true|false]
 //!               [--backend native|xla] [--artifacts DIR] --out DIR
 //! scsf repro <table1|table2|table3|table4|table5|fig3|table11|table12|
 //!             table13|table14|table17|table18|table19|table20|all>
@@ -155,6 +157,33 @@ fn cmd_generate(args: &Args) -> Result<()> {
             other => bail!("unknown sort {other}"),
         };
     }
+    if let Some(s) = args.get("sort-scope") {
+        cfg.sort_scope = scsf::coordinator::scheduler::SortScope::parse(s)
+            .ok_or_else(|| anyhow!("unknown sort scope {s} (global|shard)"))?;
+    }
+    if let Some(h) = args.get("handoff") {
+        cfg.handoff_threshold = match h {
+            "off" | "none" => None,
+            "inf" | "infinity" | "always" => Some(f64::INFINITY),
+            other => {
+                let t: f64 = other
+                    .parse()
+                    .map_err(|_| anyhow!("--handoff: bad distance {other}"))?;
+                // `!(t >= 0)` also catches NaN.
+                if !(t >= 0.0) {
+                    bail!("--handoff: distance must be >= 0 (or 'inf' / 'off')");
+                }
+                Some(t)
+            }
+        };
+    }
+    if let Some(w) = args.get("warm") {
+        cfg.warm_start = match w {
+            "true" | "on" | "1" => true,
+            "false" | "off" | "0" => false,
+            other => bail!("--warm: expected true|false, got {other}"),
+        };
+    }
     if let Some(b) = args.get("backend") {
         cfg.backend = match b {
             "native" => Backend::Native,
@@ -290,12 +319,14 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         worst = worst.max(r.max_residual);
         secs += r.secs;
     }
+    let n_runs = index.iter().map(|r| r.shard + 1).max().unwrap_or(0);
     println!(
-        "n = {}, L = {}, total solve time {:.2}s, worst residual {:.2e}",
+        "n = {}, L = {}, total solve time {:.2}s, worst residual {:.2e}, {} similarity runs",
         index.first().map(|r| r.n).unwrap_or(0),
         index.first().map(|r| r.l).unwrap_or(0),
         secs,
-        worst
+        worst,
+        n_runs
     );
     // Spot check: first record's smallest eigenvalues.
     if let Some(first) = index.first() {

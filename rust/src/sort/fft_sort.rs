@@ -7,25 +7,46 @@
 //! the GRF fields of all four datasets put > 95 % of their energy below
 //! `p₀ = 20`, paper Table 20).
 
-use crate::fft::{fft2_real, truncate_low_freq};
+use crate::fft::{fft2_real, fft2_real_into, truncate_low_freq, truncate_low_freq_into, C64};
 use crate::operators::{Problem, SortKey};
+
+/// Reusable FFT buffers for [`compressed_key_in`] — one per
+/// streaming-signature worker, reused across every problem it keys.
+#[derive(Debug, Default)]
+pub struct SignatureScratch {
+    spec: Vec<C64>,
+    trunc: Vec<C64>,
+}
 
 /// Compressed sorting key: truncated spectra of every field,
 /// interleaved re/im, concatenated. `Coeffs` keys (the elliptic family's
 /// six constants) are already tiny and pass through unchanged.
 pub fn compressed_key(problem: &Problem, p0: usize) -> Vec<f64> {
+    let mut scratch = SignatureScratch::default();
+    compressed_key_in(problem, p0, &mut scratch)
+}
+
+/// [`compressed_key`] with caller-owned FFT scratch: the returned key is
+/// freshly allocated (it outlives the call as the problem's signature)
+/// but the intermediate spectrum and truncation buffers are reused.
+/// Bit-for-bit identical to the allocating wrapper.
+pub fn compressed_key_in(
+    problem: &Problem,
+    p0: usize,
+    scratch: &mut SignatureScratch,
+) -> Vec<f64> {
     match &problem.sort_key {
         SortKey::Coeffs(c) => c.clone(),
         SortKey::Fields(fields) => {
             let mut out = Vec::new();
             for f in fields {
-                let spec = fft2_real(&f.data, f.p);
+                fft2_real_into(&f.data, f.p, &mut scratch.spec);
                 let k = p0.min(f.p);
-                let trunc = truncate_low_freq(&spec, f.p, k);
+                truncate_low_freq_into(&scratch.spec, f.p, k, &mut scratch.trunc);
                 // Normalize by p so distances are comparable to the
                 // spatial-domain Frobenius distance (Parseval).
                 let scale = 1.0 / f.p as f64;
-                for z in trunc {
+                for z in &scratch.trunc {
                     out.push(z.re * scale);
                     out.push(z.im * scale);
                 }
@@ -130,6 +151,24 @@ mod tests {
             for p in &ps {
                 let r = high_freq_energy_ratio(p, 12);
                 assert!(r < 0.05, "{kind:?}: ratio {r}");
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_matches_allocating_key() {
+        // One scratch across problems of two different families and
+        // field sizes: keys must match the allocating path exactly.
+        let mut scratch = SignatureScratch::default();
+        for kind in [OperatorKind::Poisson, OperatorKind::Helmholtz] {
+            for p in problems(kind, 3) {
+                for p0 in [4usize, 10, 1000] {
+                    assert_eq!(
+                        compressed_key_in(&p, p0, &mut scratch),
+                        compressed_key(&p, p0),
+                        "{kind:?} p0={p0}"
+                    );
+                }
             }
         }
     }

@@ -19,34 +19,48 @@ pub fn raw_key(p: &Problem) -> Vec<f64> {
     }
 }
 
-/// Greedy chain: start at the first problem, repeatedly append the
-/// nearest unvisited problem (squared Euclidean distance on keys).
-/// `O(N²·d)` where `d` is the key length.
-pub fn greedy_order(keys: &[Vec<f64>]) -> Vec<usize> {
+/// Squared Euclidean distance between two flat keys — the one distance
+/// kernel shared by the greedy scan, the boundary-handoff decision in
+/// [`crate::coordinator::scheduler`], and the sort-quality metric.
+#[inline]
+pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for i in 0..a.len() {
+        let t = a[i] - b[i];
+        s += t * t;
+    }
+    s
+}
+
+/// Reusable buffers for [`greedy_order_in`]: a pipeline stage that
+/// schedules many runs re-enters the scan without per-call allocation.
+#[derive(Debug, Default)]
+pub struct GreedyScratch {
+    visited: Vec<bool>,
+}
+
+/// [`greedy_order`] into caller-owned buffers: `out` receives the visit
+/// order, `scratch` holds the visited set. Bit-for-bit identical to the
+/// allocating wrapper.
+pub fn greedy_order_in(keys: &[Vec<f64>], scratch: &mut GreedyScratch, out: &mut Vec<usize>) {
+    out.clear();
     let n = keys.len();
     if n == 0 {
-        return vec![];
+        return;
     }
-    let d2 = |a: &[f64], b: &[f64]| -> f64 {
-        debug_assert_eq!(a.len(), b.len());
-        let mut s = 0.0;
-        for i in 0..a.len() {
-            let t = a[i] - b[i];
-            s += t * t;
-        }
-        s
-    };
-    let mut visited = vec![false; n];
-    let mut order = Vec::with_capacity(n);
+    scratch.visited.clear();
+    scratch.visited.resize(n, false);
+    let visited = &mut scratch.visited;
     let mut cur = 0usize;
     visited[0] = true;
-    order.push(0);
+    out.push(0);
     for _ in 1..n {
         let mut best = usize::MAX;
         let mut best_d = f64::INFINITY;
         for (cand, key) in keys.iter().enumerate() {
             if !visited[cand] {
-                let dd = d2(&keys[cur], key);
+                let dd = dist2(&keys[cur], key);
                 if dd < best_d {
                     best_d = dd;
                     best = cand;
@@ -54,9 +68,18 @@ pub fn greedy_order(keys: &[Vec<f64>]) -> Vec<usize> {
             }
         }
         visited[best] = true;
-        order.push(best);
+        out.push(best);
         cur = best;
     }
+}
+
+/// Greedy chain: start at the first problem, repeatedly append the
+/// nearest unvisited problem (squared Euclidean distance on keys).
+/// `O(N²·d)` where `d` is the key length.
+pub fn greedy_order(keys: &[Vec<f64>]) -> Vec<usize> {
+    let mut scratch = GreedyScratch::default();
+    let mut order = Vec::with_capacity(keys.len());
+    greedy_order_in(keys, &mut scratch, &mut order);
     order
 }
 
@@ -96,6 +119,62 @@ mod tests {
         let mut order = greedy_order(&keys);
         order.sort_unstable();
         assert_eq!(order, (0..20).collect::<Vec<_>>());
+    }
+
+    /// The pre-refactor scan (fresh `visited`/`order` per call) kept as
+    /// the reference the scratch-reusing path must match bit for bit.
+    fn greedy_order_reference(keys: &[Vec<f64>]) -> Vec<usize> {
+        let n = keys.len();
+        if n == 0 {
+            return vec![];
+        }
+        let mut visited = vec![false; n];
+        let mut order = Vec::with_capacity(n);
+        let mut cur = 0usize;
+        visited[0] = true;
+        order.push(0);
+        for _ in 1..n {
+            let mut best = usize::MAX;
+            let mut best_d = f64::INFINITY;
+            for (cand, key) in keys.iter().enumerate() {
+                if !visited[cand] {
+                    let dd = dist2(&keys[cur], key);
+                    if dd < best_d {
+                        best_d = dd;
+                        best = cand;
+                    }
+                }
+            }
+            visited[best] = true;
+            order.push(best);
+            cur = best;
+        }
+        order
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_for_bit_identical() {
+        // The satellite guarantee: the buffer-reusing scan produces the
+        // exact order of the old allocating path, across reuses of the
+        // same scratch on differently sized key sets.
+        let mut scratch = GreedyScratch::default();
+        let mut out = Vec::new();
+        for (n, d, seed) in [(17usize, 3usize, 1u64), (40, 7, 2), (5, 1, 3), (33, 4, 4)] {
+            let mut rng = crate::rng::Xoshiro256pp::seed_from_u64(seed);
+            let keys: Vec<Vec<f64>> =
+                (0..n).map(|_| (0..d).map(|_| rng.normal()).collect()).collect();
+            greedy_order_in(&keys, &mut scratch, &mut out);
+            assert_eq!(out, greedy_order_reference(&keys), "n={n} d={d}");
+            assert_eq!(out, greedy_order(&keys), "n={n} d={d}");
+        }
+    }
+
+    #[test]
+    fn dist2_matches_inline_definition() {
+        let a = [1.0, 2.0, -3.0];
+        let b = [0.5, 2.0, 1.0];
+        assert_eq!(dist2(&a, &b), 0.25 + 0.0 + 16.0);
+        assert_eq!(dist2(&a, &a), 0.0);
     }
 
     #[test]

@@ -10,6 +10,7 @@
 pub mod fft_sort;
 pub mod greedy;
 pub mod metrics;
+pub mod signature;
 
 use crate::operators::Problem;
 use crate::util::timer::timed;
@@ -52,6 +53,10 @@ pub struct SortOutcome {
     pub fft_secs: f64,
     /// Seconds spent on the greedy nearest-neighbour scan.
     pub greedy_secs: f64,
+    /// Sort quality: sum of Euclidean signature distances between
+    /// adjacent problems of `order` (lower = better warm-start locality;
+    /// 0.0 for [`SortMethod::None`], which has no signatures).
+    pub quality: f64,
 }
 
 impl SortOutcome {
@@ -61,6 +66,16 @@ impl SortOutcome {
     }
 }
 
+/// Sum of Euclidean signature distances between adjacent positions of a
+/// solve order — the sort-quality metric the coordinator records in the
+/// dataset manifest (lower = better warm-start locality).
+pub fn adjacent_quality(keys: &[Vec<f64>], order: &[usize]) -> f64 {
+    order
+        .windows(2)
+        .map(|w| signature::distance(&keys[w[0]], &keys[w[1]]))
+        .sum()
+}
+
 /// Sort a problem set with the chosen method.
 pub fn sort_problems(problems: &[Problem], method: SortMethod) -> SortOutcome {
     match method {
@@ -68,24 +83,29 @@ pub fn sort_problems(problems: &[Problem], method: SortMethod) -> SortOutcome {
             order: (0..problems.len()).collect(),
             fft_secs: 0.0,
             greedy_secs: 0.0,
+            quality: 0.0,
         },
         SortMethod::Greedy => {
             let keys: Vec<Vec<f64>> = problems.iter().map(greedy::raw_key).collect();
             let (order, secs) = timed(|| greedy::greedy_order(&keys));
+            let quality = adjacent_quality(&keys, &order);
             SortOutcome {
                 order,
                 fft_secs: 0.0,
                 greedy_secs: secs,
+                quality,
             }
         }
         SortMethod::TruncatedFft { p0 } => {
             let (keys, fft_secs) =
                 timed(|| problems.iter().map(|p| fft_sort::compressed_key(p, p0)).collect::<Vec<_>>());
             let (order, greedy_secs) = timed(|| greedy::greedy_order(&keys));
+            let quality = adjacent_quality(&keys, &order);
             SortOutcome {
                 order,
                 fft_secs,
                 greedy_secs,
+                quality,
             }
         }
     }
@@ -160,6 +180,22 @@ mod tests {
         let cg = adjacent_cost(&ps, &greedy.order);
         let cf = adjacent_cost(&ps, &fft.order);
         assert!(cf <= cg * 1.10, "greedy {cg} vs fft {cf}");
+    }
+
+    #[test]
+    fn quality_metric_tracks_adjacent_distance() {
+        let ps = problems(12);
+        let fft = sort_problems(&ps, SortMethod::TruncatedFft { p0: 6 });
+        assert!(fft.quality > 0.0);
+        // Reordering cannot beat the greedy chain's own quality by much;
+        // recomputing from keys must reproduce the stored value exactly.
+        let keys: Vec<Vec<f64>> = ps
+            .iter()
+            .map(|p| fft_sort::compressed_key(p, 6))
+            .collect();
+        assert_eq!(fft.quality, adjacent_quality(&keys, &fft.order));
+        let none = sort_problems(&ps, SortMethod::None);
+        assert_eq!(none.quality, 0.0);
     }
 
     #[test]

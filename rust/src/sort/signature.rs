@@ -1,0 +1,112 @@
+//! Streaming signature extraction — the reusable API behind the
+//! pipeline's **signature stage**.
+//!
+//! [`crate::sort::sort_problems`] keys a whole slice at once; the
+//! coordinator instead streams problems out of the producer and wants a
+//! signature per problem *as it arrives*, so the global scheduler
+//! ([`crate::coordinator::scheduler`]) can order all `N` problems the
+//! moment the last one lands. [`SignatureEngine`] is that per-worker
+//! extractor: one engine per signature thread, FFT scratch reused across
+//! every problem it keys, output bit-for-bit equal to the batch path.
+
+use super::fft_sort::{self, SignatureScratch};
+use super::{greedy, SortMethod};
+use crate::operators::Problem;
+
+/// Per-worker streaming signature extractor.
+#[derive(Debug)]
+pub struct SignatureEngine {
+    method: SortMethod,
+    scratch: SignatureScratch,
+}
+
+impl SignatureEngine {
+    /// Engine for the given sort method.
+    pub fn new(method: SortMethod) -> Self {
+        Self {
+            method,
+            scratch: SignatureScratch::default(),
+        }
+    }
+
+    /// The sort method this engine keys for.
+    pub fn method(&self) -> SortMethod {
+        self.method
+    }
+
+    /// Signature of one problem: the flat key the greedy scan and the
+    /// scheduler's distance kernels compare. `None` for
+    /// [`SortMethod::None`] (generation order carries no signatures).
+    ///
+    /// Identical to the corresponding batch key:
+    /// [`greedy::raw_key`] for [`SortMethod::Greedy`],
+    /// [`fft_sort::compressed_key`] for [`SortMethod::TruncatedFft`].
+    pub fn signature(&mut self, problem: &Problem) -> Option<Vec<f64>> {
+        match self.method {
+            SortMethod::None => None,
+            SortMethod::Greedy => Some(greedy::raw_key(problem)),
+            SortMethod::TruncatedFft { p0 } => {
+                Some(fft_sort::compressed_key_in(problem, p0, &mut self.scratch))
+            }
+        }
+    }
+}
+
+/// Euclidean signature distance (the paper's Frobenius distance on
+/// compressed spectra) — what the scheduler thresholds for the
+/// boundary warm-start handoff and sums for the sort-quality metric.
+#[inline]
+pub fn distance(a: &[f64], b: &[f64]) -> f64 {
+    greedy::dist2(a, b).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::operators::{self, GenOptions, OperatorKind};
+
+    fn problems(kind: OperatorKind, n: usize) -> Vec<Problem> {
+        operators::generate(
+            kind,
+            GenOptions {
+                grid: 12,
+                ..Default::default()
+            },
+            n,
+            17,
+        )
+    }
+
+    #[test]
+    fn engine_matches_batch_keys() {
+        for kind in [OperatorKind::Helmholtz, OperatorKind::Elliptic] {
+            let ps = problems(kind, 4);
+            let mut engine = SignatureEngine::new(SortMethod::TruncatedFft { p0: 6 });
+            for p in &ps {
+                assert_eq!(
+                    engine.signature(p).unwrap(),
+                    fft_sort::compressed_key(p, 6),
+                    "{kind:?}"
+                );
+            }
+            let mut engine = SignatureEngine::new(SortMethod::Greedy);
+            for p in &ps {
+                assert_eq!(engine.signature(p).unwrap(), greedy::raw_key(p), "{kind:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn none_method_has_no_signatures() {
+        let ps = problems(OperatorKind::Poisson, 2);
+        let mut engine = SignatureEngine::new(SortMethod::None);
+        assert!(engine.signature(&ps[0]).is_none());
+        assert_eq!(engine.method(), SortMethod::None);
+    }
+
+    #[test]
+    fn distance_is_euclidean() {
+        assert_eq!(distance(&[0.0, 3.0], &[4.0, 0.0]), 5.0);
+        assert_eq!(distance(&[1.0], &[1.0]), 0.0);
+    }
+}

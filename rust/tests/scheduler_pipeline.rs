@@ -1,0 +1,247 @@
+//! Scheduler + pipeline integration: the global spectral scheduler must
+//! reproduce the single-sequence SCSF behaviour at `shards = 1`, keep
+//! results shard-count-independent where the math says so, and satisfy
+//! the partition/handoff invariants for arbitrary shapes.
+
+use scsf::coordinator::config::GenConfig;
+use scsf::coordinator::dataset::DatasetReader;
+use scsf::coordinator::pipeline::{generate_dataset, generate_problems};
+use scsf::coordinator::scheduler::{self, SortScope};
+use scsf::eig::scsf::solve_sequence;
+use scsf::operators::OperatorKind;
+use scsf::sort::{self, fft_sort, SortMethod};
+use scsf::testing::{forall, size_in};
+use std::path::PathBuf;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("scsf_sched_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn cfg(n: usize, shards: usize, seed: u64) -> GenConfig {
+    GenConfig {
+        kind: OperatorKind::Helmholtz,
+        grid: 8,
+        n_problems: n,
+        n_eigs: 4,
+        tol: 1e-8,
+        seed,
+        shards,
+        sort: SortMethod::TruncatedFft { p0: 6 },
+        ..Default::default()
+    }
+}
+
+#[test]
+fn global_single_shard_reproduces_solve_sequence_exactly() {
+    // The property-test satellite: sort_scope=global with shards=1 is
+    // the paper's Algorithm 2 + warm-started chain — the schedule's one
+    // run must be exactly `scsf::solve_sequence`'s order, and the solved
+    // eigenpairs must match bit for bit (same chain, same workspace
+    // reuse, same arithmetic).
+    let c = cfg(8, 1, 3);
+    let problems = generate_problems(&c);
+
+    // Order equality, via the scheduler on the same signatures.
+    let keys: Vec<Vec<f64>> = problems
+        .iter()
+        .map(|p| fft_sort::compressed_key(p, 6))
+        .collect();
+    let schedule =
+        scheduler::build_schedule(Some(keys.as_slice()), 8, SortScope::Global, 1, None);
+    let seq = solve_sequence(&problems, &c.scsf_options());
+    assert_eq!(schedule.runs.len(), 1);
+    assert_eq!(schedule.runs[0].order, seq.order);
+    assert_eq!(
+        schedule.sort_quality, seq.sort.quality,
+        "schedule and batch sort measure the same quality"
+    );
+
+    // Value equality, end to end through the pipeline.
+    let dir = tmpdir("repro");
+    generate_dataset(&c, &dir).unwrap();
+    let mut reader = DatasetReader::open(&dir).unwrap();
+    for id in 0..8 {
+        let rec = reader.read(id).unwrap();
+        let want = seq.by_problem_id(id);
+        assert_eq!(rec.values, want.values, "id {id}");
+        assert_eq!(rec.vectors, want.vectors, "id {id}");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn cold_solves_are_bit_identical_for_any_shard_count() {
+    // With warm starts disabled entirely, every problem is solved cold
+    // with the same options — run membership cannot matter, so any
+    // shard count gives bit-identical datasets.
+    let mk = |shards: usize, tag: &str| {
+        let mut c = cfg(7, shards, 9);
+        c.warm_start = false;
+        let dir = tmpdir(tag);
+        generate_dataset(&c, &dir).unwrap();
+        dir
+    };
+    let d1 = mk(1, "cold1");
+    let d3 = mk(3, "cold3");
+    let d7 = mk(7, "cold7");
+    let mut r1 = DatasetReader::open(&d1).unwrap();
+    let mut r3 = DatasetReader::open(&d3).unwrap();
+    let mut r7 = DatasetReader::open(&d7).unwrap();
+    for id in 0..7 {
+        let a = r1.read(id).unwrap();
+        let b = r3.read(id).unwrap();
+        let c = r7.read(id).unwrap();
+        assert_eq!(a.values, b.values, "id {id}");
+        assert_eq!(a.vectors, b.vectors, "id {id}");
+        assert_eq!(a.values, c.values, "id {id}");
+        assert_eq!(a.vectors, c.vectors, "id {id}");
+    }
+    for d in [d1, d3, d7] {
+        let _ = std::fs::remove_dir_all(&d);
+    }
+}
+
+#[test]
+fn handoff_disabled_matches_tolerance_for_any_shard_count() {
+    // With warm chains on but boundary handoffs off (the default), runs
+    // differ across shard counts — but every solve still converges to
+    // the configured tolerance, so eigenvalues agree to ~tol.
+    let mk = |shards: usize, tag: &str| {
+        let dir = tmpdir(tag);
+        generate_dataset(&cfg(8, shards, 13), &dir).unwrap();
+        dir
+    };
+    let d1 = mk(1, "h1");
+    let d4 = mk(4, "h4");
+    let mut r1 = DatasetReader::open(&d1).unwrap();
+    let mut r4 = DatasetReader::open(&d4).unwrap();
+    for id in 0..8 {
+        let a = r1.read(id).unwrap();
+        let b = r4.read(id).unwrap();
+        for (x, y) in a.values.iter().zip(&b.values) {
+            assert!((x - y).abs() / x.abs().max(1.0) < 1e-7, "id {id}: {x} vs {y}");
+        }
+    }
+    let _ = std::fs::remove_dir_all(&d1);
+    let _ = std::fs::remove_dir_all(&d4);
+}
+
+#[test]
+fn fully_chained_handoff_equals_single_shard_exactly() {
+    // With every seam granted a handoff, the M runs chain into one
+    // global warm-started sequence — exactly the shards=1 solve, just
+    // split across workers. Results must match bit for bit.
+    let d1 = tmpdir("chain1");
+    let dm = tmpdir("chainM");
+    generate_dataset(&cfg(9, 1, 21), &d1).unwrap();
+    let mut cm = cfg(9, 3, 21);
+    cm.handoff_threshold = Some(f64::INFINITY);
+    let report = generate_dataset(&cm, &dm).unwrap();
+    assert_eq!(report.warm_handoffs, 2);
+    let mut r1 = DatasetReader::open(&d1).unwrap();
+    let mut rm = DatasetReader::open(&dm).unwrap();
+    for id in 0..9 {
+        let a = r1.read(id).unwrap();
+        let b = rm.read(id).unwrap();
+        assert_eq!(a.values, b.values, "id {id}");
+        assert_eq!(a.vectors, b.vectors, "id {id}");
+    }
+    let _ = std::fs::remove_dir_all(&d1);
+    let _ = std::fs::remove_dir_all(&dm);
+}
+
+#[test]
+fn prop_schedule_partitions_any_shape() {
+    // Property test over random shapes, scopes, and thresholds: every
+    // schedule is a partition of 0..n into ≤ chunk-sized non-empty
+    // runs, assignment is consistent, and handoff flags agree with the
+    // boundary reports.
+    forall(40, 0x5C4ED, |rng, case| {
+        let n = size_in(rng, 1, 40);
+        let shards = size_in(rng, 1, 10);
+        let d = size_in(rng, 1, 6);
+        let keys: Option<Vec<Vec<f64>>> = if rng.next_f64() < 0.2 {
+            None
+        } else {
+            Some(
+                (0..n)
+                    .map(|_| (0..d).map(|_| rng.normal()).collect())
+                    .collect(),
+            )
+        };
+        let scope = if rng.next_f64() < 0.5 {
+            SortScope::Global
+        } else {
+            SortScope::Shard
+        };
+        let threshold = match rng.next_below(3) {
+            0 => None,
+            1 => Some(rng.uniform(0.0, 3.0)),
+            _ => Some(f64::INFINITY),
+        };
+        let s = scheduler::build_schedule(keys.as_deref(), n, scope, shards, threshold);
+        let (chunk, n_runs) = scheduler::run_span(n, shards);
+        assert_eq!(s.runs.len(), n_runs, "case {case}");
+        let mut seen: Vec<usize> =
+            s.runs.iter().flat_map(|r| r.order.iter().copied()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..n).collect::<Vec<_>>(), "case {case}");
+        for (r, run) in s.runs.iter().enumerate() {
+            assert_eq!(run.index, r, "case {case}");
+            assert!(!run.order.is_empty() && run.order.len() <= chunk, "case {case}");
+            for &id in &run.order {
+                assert_eq!(s.assignment[id], r, "case {case}");
+            }
+        }
+        match scope {
+            SortScope::Shard => assert!(s.boundaries.is_empty(), "case {case}"),
+            SortScope::Global => {
+                assert_eq!(s.boundaries.len(), n_runs - 1, "case {case}");
+                for b in &s.boundaries {
+                    assert_eq!(b.to_run, b.from_run + 1, "case {case}");
+                    assert_eq!(s.runs[b.from_run].warm_out, b.warm, "case {case}");
+                    assert_eq!(s.runs[b.to_run].warm_in, b.warm, "case {case}");
+                    if keys.is_none() {
+                        assert!(!b.warm, "case {case}: no signatures, no handoffs");
+                    }
+                }
+                // Runs never hand off without a matching boundary.
+                assert!(!s.runs[0].warm_in, "case {case}");
+                assert!(!s.runs[n_runs - 1].warm_out, "case {case}");
+            }
+        }
+        if keys.is_none() {
+            assert_eq!(s.sort_quality, 0.0, "case {case}");
+        }
+    });
+}
+
+#[test]
+fn prop_global_schedule_is_the_greedy_order_cut_into_runs() {
+    // The global schedule is exactly sort::sort_problems' greedy order
+    // partitioned contiguously — per-run concatenation reproduces it.
+    forall(12, 0x06D3, |rng, case| {
+        let n = size_in(rng, 2, 14);
+        let shards = size_in(rng, 1, 5);
+        let problems = scsf::operators::generate(
+            OperatorKind::Helmholtz,
+            scsf::operators::GenOptions {
+                grid: 8,
+                ..Default::default()
+            },
+            n,
+            rng.next_u64(),
+        );
+        let p0 = 6;
+        let keys: Vec<Vec<f64>> = problems
+            .iter()
+            .map(|p| fft_sort::compressed_key(p, p0))
+            .collect();
+        let s = scheduler::build_schedule(Some(keys.as_slice()), n, SortScope::Global, shards, None);
+        let concat: Vec<usize> = s.runs.iter().flat_map(|r| r.order.iter().copied()).collect();
+        let batch = sort::sort_problems(&problems, SortMethod::TruncatedFft { p0 });
+        assert_eq!(concat, batch.order, "case {case}");
+    });
+}
