@@ -14,10 +14,9 @@
 //! - `global+handoff` — same, with every seam granted a boundary
 //!   warm-start handoff (maximal quality; runs chain).
 
-use scsf::coordinator::config::GenConfig;
+use scsf::coordinator::config::{FamilySpec, GenConfig};
 use scsf::coordinator::pipeline::generate_dataset;
 use scsf::coordinator::scheduler::SortScope;
-use scsf::operators::OperatorKind;
 use scsf::sort::SortMethod;
 use scsf::util::json::Value;
 
@@ -25,11 +24,10 @@ const SHARDS: usize = 4;
 
 fn base_cfg() -> GenConfig {
     GenConfig {
-        kind: OperatorKind::Helmholtz,
+        families: vec![FamilySpec::new("helmholtz", 32)],
         grid: 14,
-        n_problems: 32,
         n_eigs: 8,
-        tol: 1e-8,
+        tol: Some(1e-8),
         seed: 17,
         shards: SHARDS,
         threads: 1,
@@ -54,7 +52,7 @@ fn run_case(
     let report = generate_dataset(&cfg, &dir).expect("bench pipeline run failed");
     assert!(report.all_converged, "{label}: bench run must converge");
     let _ = std::fs::remove_dir_all(&dir);
-    let pps = cfg.n_problems as f64 / report.total_secs;
+    let pps = cfg.n_problems() as f64 / report.total_secs;
     println!(
         "{label:<16} shards={SHARDS}: {:6.2} problems/sec, avg iters {:5.2}, sort quality {:8.3}, {} warm handoffs, {} cold runs",
         pps,
@@ -67,7 +65,7 @@ fn run_case(
         ("mode", label.into()),
         ("sort_scope", report.sort_scope.as_str().into()),
         ("shards", SHARDS.into()),
-        ("n_problems", cfg.n_problems.into()),
+        ("n_problems", cfg.n_problems().into()),
         ("grid", cfg.grid.into()),
         ("n_eigs", cfg.n_eigs.into()),
         ("seed", cfg.seed.into()),

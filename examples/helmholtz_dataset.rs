@@ -10,11 +10,10 @@
 //! cargo run --release --example helmholtz_dataset [-- --grid 32 --n 24 --l 16]
 //! ```
 
-use scsf::coordinator::config::GenConfig;
+use scsf::coordinator::config::{FamilySpec, GenConfig};
 use scsf::coordinator::dataset::DatasetReader;
 use scsf::coordinator::pipeline::{generate_dataset, generate_problems};
 use scsf::eig::{EigOptions, SolverKind};
-use scsf::operators::OperatorKind;
 use scsf::util::table::Table;
 
 fn flag(name: &str, default: usize) -> usize {
@@ -27,22 +26,21 @@ fn flag(name: &str, default: usize) -> usize {
 }
 
 fn main() -> scsf::util::error::Result<()> {
+    let tol = 1e-8;
     let cfg = GenConfig {
-        kind: OperatorKind::Helmholtz,
+        families: vec![FamilySpec::new("helmholtz", flag("--n", 24))],
         grid: flag("--grid", 32), // n = 1024 by default
-        n_problems: flag("--n", 24),
         n_eigs: flag("--l", 16),
-        tol: 1e-8,
+        tol: Some(tol),
         seed: 2025,
         shards: flag("--shards", 1), // single-core container default
         ..GenConfig::default()
     };
     println!(
-        "Helmholtz dataset: n = {}, N = {}, L = {}, tol = {:.0e}, shards = {}",
+        "Helmholtz dataset: n = {}, N = {}, L = {}, tol = {tol:.0e}, shards = {}",
         cfg.matrix_dim(),
-        cfg.n_problems,
+        cfg.n_problems(),
         cfg.n_eigs,
-        cfg.tol,
         cfg.shards
     );
 
@@ -74,10 +72,10 @@ fn main() -> scsf::util::error::Result<()> {
     // Average independent-solver time on a subsample vs SCSF's amortized
     // per-problem time from the pipeline run above.
     let problems = generate_problems(&cfg);
-    let sample = &problems[..cfg.n_problems.min(6)];
+    let sample = &problems[..cfg.n_problems().min(6)];
     let opts = EigOptions {
         n_eigs: cfg.n_eigs,
-        tol: cfg.tol,
+        tol,
         max_iters: 600,
         seed: 0,
     };

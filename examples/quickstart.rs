@@ -5,21 +5,19 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use scsf::coordinator::config::GenConfig;
+use scsf::coordinator::config::{FamilySpec, GenConfig};
 use scsf::coordinator::pipeline::{generate_dataset, generate_problems};
 use scsf::eig::chfsi::ChfsiOptions;
 use scsf::eig::scsf::{solve_sequence, ScsfOptions};
 use scsf::eig::EigOptions;
-use scsf::operators::OperatorKind;
 use scsf::sort::SortMethod;
 
 fn main() -> scsf::util::error::Result<()> {
     let cfg = GenConfig {
-        kind: OperatorKind::Helmholtz,
-        grid: 24,      // matrix dimension 576
-        n_problems: 8, // dataset size N
-        n_eigs: 12,    // L smallest eigenpairs per problem
-        tol: 1e-8,
+        families: vec![FamilySpec::new("helmholtz", 8)], // dataset: N=8 Helmholtz problems
+        grid: 24,  // matrix dimension 576
+        n_eigs: 12, // L smallest eigenpairs per problem
+        tol: Some(1e-8),
         seed: 7,
         shards: 1, // this container is single-core; shards>1 helps on multi-core
         ..GenConfig::default()
@@ -39,7 +37,7 @@ fn main() -> scsf::util::error::Result<()> {
         &ScsfOptions {
             chfsi: ChfsiOptions::from_eig(&EigOptions {
                 n_eigs: cfg.n_eigs,
-                tol: cfg.tol,
+                tol: cfg.tol.unwrap_or(1e-8),
                 max_iters: 500,
                 seed: 0,
             }),

@@ -523,7 +523,7 @@ pub fn table18(scale: &Scale, fractions: &[(usize, usize)]) -> Table {
         } else {
             // Sort within family (kind-major), then chain warm starts.
             let mut order: Vec<usize> = (0..problems.len()).collect();
-            order.sort_by_key(|&i| problems[i].kind.name());
+            order.sort_by_key(|&i| problems[i].family.clone());
             let opts = scsf_opts(l, tol, SortMethod::None, true);
             let mut warm: Option<WarmStart> = None;
             let mut total = 0.0;

@@ -1,19 +1,29 @@
 //! Pipeline configuration, with JSON load/save (the repo's config
 //! system: every run is reproducible from a config file + seed).
+//!
+//! A run generates one dataset from a *list* of family specs
+//! ([`GenConfig::families`]): each spec names an operator family in the
+//! [`FamilyRegistry`], a problem count, and optional per-family
+//! overrides (grid, tolerance, GRF parameters). A single-spec list is
+//! the classic one-family run; the legacy `{"kind": …, "n_problems": …}`
+//! JSON form still parses (as a one-element spec list) and reproduces
+//! the pre-registry output bit for bit.
 
-use super::scheduler::SortScope;
+use super::scheduler::{FamilyGroup, SortScope};
+use crate::anyhow;
 use crate::eig::chfsi::ChfsiOptions;
 use crate::eig::scsf::ScsfOptions;
 use crate::eig::EigOptions;
 use crate::grf::GrfParams;
-use crate::operators::{GenOptions, OperatorKind};
+use crate::operators::{FamilyRegistry, GenOptions, OperatorFamily};
 use crate::sort::SortMethod;
-use crate::anyhow;
 use crate::util::error::Result;
 use crate::util::json::{self, Value};
+use std::sync::Arc;
 
-/// Operator family selector (alias of [`OperatorKind`] for configs).
-pub type DatasetKind = OperatorKind;
+/// Run-level fallback tolerance when neither a family spec, the config,
+/// nor a registered family default applies (the historical default).
+pub const FALLBACK_TOL: f64 = 1e-8;
 
 /// Which filter backend the solve workers use.
 #[derive(Debug, Clone, PartialEq)]
@@ -29,19 +39,218 @@ pub enum Backend {
     },
 }
 
+/// One family's slice of a dataset-generation run: which operator
+/// family, how many problems, and optional per-family overrides of the
+/// run-level defaults.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FamilySpec {
+    /// Registry name of the operator family.
+    pub family: String,
+    /// Number of problems this spec contributes.
+    pub count: usize,
+    /// Interior grid side override (`None` → [`GenConfig::grid`]).
+    pub grid: Option<usize>,
+    /// Solve-tolerance override (`None` → [`GenConfig::tol`], then the
+    /// family's [`OperatorFamily::default_tol`]).
+    pub tol: Option<f64>,
+    /// GRF smoothness override (`None` → [`GenConfig::grf`]). A
+    /// whole-struct override: JSON forms must give both `alpha` and
+    /// `tau`.
+    pub grf: Option<GrfParams>,
+}
+
+impl FamilySpec {
+    /// Spec with no overrides.
+    pub fn new(family: &str, count: usize) -> Self {
+        Self {
+            family: family.to_string(),
+            count,
+            grid: None,
+            tol: None,
+            grf: None,
+        }
+    }
+
+    /// Parse the CLI form `name:count[:grid][:tol]` (empty segments skip
+    /// an override, e.g. `poisson:64::1e-10` sets only the tolerance).
+    pub fn parse(s: &str) -> Result<Self> {
+        let parts: Vec<&str> = s.split(':').collect();
+        if parts.len() < 2 || parts.len() > 4 {
+            return Err(anyhow!(
+                "bad family spec {s:?} (expected name:count[:grid][:tol])"
+            ));
+        }
+        let family = parts[0].trim();
+        if family.is_empty() {
+            return Err(anyhow!("bad family spec {s:?}: empty family name"));
+        }
+        let count: usize = parts[1]
+            .parse()
+            .map_err(|_| anyhow!("bad family spec {s:?}: count {:?} is not an integer", parts[1]))?;
+        if count == 0 {
+            return Err(anyhow!("bad family spec {s:?}: count must be >= 1"));
+        }
+        let grid = match parts.get(2) {
+            None | Some(&"") => None,
+            Some(g) => Some(g.parse::<usize>().map_err(|_| {
+                anyhow!("bad family spec {s:?}: grid {g:?} is not an integer")
+            })?),
+        };
+        let tol = match parts.get(3) {
+            None | Some(&"") => None,
+            Some(t) => {
+                let t: f64 = t
+                    .parse()
+                    .map_err(|_| anyhow!("bad family spec {s:?}: tol {t:?} is not a number"))?;
+                if !t.is_finite() || t <= 0.0 {
+                    // +inf would make every solve "converge" instantly
+                    // and fill the dataset with garbage eigenpairs.
+                    return Err(anyhow!(
+                        "bad family spec {s:?}: tol must be a finite value > 0"
+                    ));
+                }
+                Some(t)
+            }
+        };
+        Ok(Self {
+            family: family.to_string(),
+            count,
+            grid,
+            tol,
+            grf: None,
+        })
+    }
+
+    /// JSON object (inverse of [`FamilySpec::from_json`]).
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("family", self.family.as_str().into()),
+            ("count", self.count.into()),
+            (
+                "grid",
+                self.grid.map(Value::from).unwrap_or(Value::Null),
+            ),
+            ("tol", self.tol.map(Value::from).unwrap_or(Value::Null)),
+            (
+                "grf",
+                match self.grf {
+                    None => Value::Null,
+                    Some(g) => Value::obj(vec![
+                        ("alpha", g.alpha.into()),
+                        ("tau", g.tau.into()),
+                    ]),
+                },
+            ),
+        ])
+    }
+
+    /// Parse one spec from its JSON object form.
+    pub fn from_json(v: &Value) -> Result<Self> {
+        let family = v
+            .get("family")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow!("family spec needs a \"family\" name"))?
+            .to_string();
+        let count = v
+            .get("count")
+            .and_then(Value::as_usize)
+            .ok_or_else(|| anyhow!("family spec {family:?} needs a \"count\""))?;
+        if count == 0 {
+            return Err(anyhow!("family spec {family:?}: count must be >= 1"));
+        }
+        let grid = v.get("grid").and_then(Value::as_usize);
+        let tol = match v.get("tol") {
+            None | Some(Value::Null) => None,
+            Some(t) => Some(
+                t.as_f64()
+                    .filter(|x| x.is_finite() && *x > 0.0)
+                    .ok_or_else(|| {
+                        anyhow!("family spec {family:?}: tol must be a finite value > 0")
+                    })?,
+            ),
+        };
+        let grf = match v.get("grf") {
+            None | Some(Value::Null) => None,
+            Some(g) => {
+                // Whole-struct override: a partial object would have to
+                // fill the other field from *something*, and silently
+                // using the global default instead of the run-level grf
+                // was a footgun — require both.
+                let need = |key: &str| {
+                    g.get(key).and_then(Value::as_f64).ok_or_else(|| {
+                        anyhow!(
+                            "family spec {family:?}: grf override needs both alpha and tau"
+                        )
+                    })
+                };
+                Some(GrfParams {
+                    alpha: need("alpha")?,
+                    tau: need("tau")?,
+                })
+            }
+        };
+        Ok(Self {
+            family,
+            count,
+            grid,
+            tol,
+            grf,
+        })
+    }
+}
+
+/// A [`FamilySpec`] resolved against a [`FamilyRegistry`] and the run's
+/// defaults: the family handle, the spec's id block in generation
+/// order, and its effective generation/solve options.
+#[derive(Clone)]
+pub struct ResolvedFamily {
+    /// The registered family implementation.
+    pub handle: Arc<dyn OperatorFamily>,
+    /// Family name (shared tag; equal to `handle.name()`).
+    pub name: Arc<str>,
+    /// First problem id of the spec's block.
+    pub start: usize,
+    /// One past the last problem id of the spec's block.
+    pub end: usize,
+    /// Effective generation options (grid / GRF after overrides).
+    pub opts: GenOptions,
+    /// Effective solve tolerance (spec → run → family default).
+    pub tol: f64,
+}
+
+impl ResolvedFamily {
+    /// Problems in this spec's block.
+    pub fn count(&self) -> usize {
+        self.end - self.start
+    }
+}
+
+impl std::fmt::Debug for ResolvedFamily {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ResolvedFamily")
+            .field("name", &self.name)
+            .field("start", &self.start)
+            .field("end", &self.end)
+            .field("tol", &self.tol)
+            .finish()
+    }
+}
+
 /// Full configuration of one dataset-generation run.
 #[derive(Debug, Clone, PartialEq)]
 pub struct GenConfig {
-    /// Operator family (paper §D.2).
-    pub kind: DatasetKind,
-    /// Interior grid side `g`; matrix dimension is `g²`.
+    /// The family specs, in generation order: spec `i`'s problems
+    /// occupy the id block after spec `i−1`'s. Must be non-empty.
+    pub families: Vec<FamilySpec>,
+    /// Default interior grid side `g` (matrix dimension `g²`); family
+    /// specs may override per family.
     pub grid: usize,
-    /// Number of problems `N` in the dataset.
-    pub n_problems: usize,
     /// Eigenpairs per problem `L`.
     pub n_eigs: usize,
-    /// Relative-residual tolerance (paper §D.5).
-    pub tol: f64,
+    /// Run-level relative-residual tolerance override. `None` lets each
+    /// family use its own default ([`OperatorFamily::default_tol`],
+    /// the paper's per-dataset precisions, §D.5).
+    pub tol: Option<f64>,
     /// Master seed (whole run is deterministic given this).
     pub seed: u64,
     /// Chebyshev filter degree `m` (paper §D.4: 20).
@@ -50,25 +259,29 @@ pub struct GenConfig {
     pub guard: Option<usize>,
     /// Sorting method (paper default: truncated FFT, p₀ = 20).
     pub sort: SortMethod,
-    /// Where the similarity sort runs: one global order partitioned
-    /// into contiguous similarity runs (`global`, the scheduler's
-    /// headline mode) or independently per generation-order chunk
-    /// (`shard`, the paper-§D.6 ablation baseline).
+    /// Where the similarity sort runs: one global order per family
+    /// group partitioned into contiguous similarity runs (`global`, the
+    /// scheduler's headline mode) or independently per generation-order
+    /// chunk (`shard`, the paper-§D.6 ablation baseline).
     pub sort_scope: SortScope,
     /// Boundary warm-start handoff threshold: run `k+1`'s first problem
     /// inherits run `k`'s tail eigenpairs when the signature distance
     /// across their seam is `<=` this value. `None` disables handoffs
     /// (runs solve fully in parallel); `f64::INFINITY` always hands
     /// off, chaining the runs (maximal quality, serialized solves).
-    /// Requires `sort_scope: global` (shard runs are independent —
-    /// the pipeline rejects the combination); `warm_start: false`
-    /// overrides it as the master ablation switch.
+    /// Handoffs never cross a family boundary. Requires `sort_scope:
+    /// global` (shard runs are independent — the pipeline rejects the
+    /// combination); `warm_start: false` overrides it as the master
+    /// ablation switch.
     pub handoff_threshold: Option<f64>,
     /// Chain warm starts within a run (`false` → every problem starts
     /// cold: the plain-ChFSI ablation, bit-for-bit identical results
     /// for any shard count).
     pub warm_start: bool,
-    /// Parallel shard count `M` (paper §D.6 used 8 MPI ranks).
+    /// Parallel shard count `M` (paper §D.6 used 8 MPI ranks). Family
+    /// boundaries may add up to `families.len() − 1` extra runs, and
+    /// each run gets its own solve worker — a mixed-family run can
+    /// therefore briefly exceed `M` concurrent workers.
     pub shards: usize,
     /// Row-partitioned threads per shard for the SpMM/SpMV kernels.
     /// Results are bit-for-bit independent of this value (determinism
@@ -78,18 +291,18 @@ pub struct GenConfig {
     pub channel_capacity: usize,
     /// Filter backend.
     pub backend: Backend,
-    /// GRF smoothness parameters for coefficient fields.
+    /// Default GRF smoothness parameters for coefficient fields; family
+    /// specs may override per family.
     pub grf: GrfParams,
 }
 
 impl Default for GenConfig {
     fn default() -> Self {
         Self {
-            kind: OperatorKind::Helmholtz,
+            families: vec![FamilySpec::new("helmholtz", 16)],
             grid: 32,
-            n_problems: 16,
             n_eigs: 16,
-            tol: 1e-8,
+            tol: None,
             seed: 0,
             degree: 20,
             guard: None,
@@ -107,24 +320,98 @@ impl Default for GenConfig {
 }
 
 impl GenConfig {
-    /// Matrix dimension `n = g²`.
+    /// Classic single-family config: `count` problems of one family,
+    /// no per-spec overrides.
+    pub fn single(family: &str, count: usize) -> Self {
+        Self {
+            families: vec![FamilySpec::new(family, count)],
+            ..Default::default()
+        }
+    }
+
+    /// Total problems `N` across all family specs.
+    pub fn n_problems(&self) -> usize {
+        self.families.iter().map(|f| f.count).sum()
+    }
+
+    /// Default matrix dimension `n = g²` (family grid overrides may
+    /// differ per spec).
     pub fn matrix_dim(&self) -> usize {
         self.grid * self.grid
     }
 
-    /// Per-problem generation options.
-    pub fn gen_options(&self) -> GenOptions {
+    /// Generation options for one spec (overrides applied over the run
+    /// defaults).
+    pub fn spec_gen_options(&self, spec: &FamilySpec) -> GenOptions {
         GenOptions {
-            grid: self.grid,
-            grf: self.grf,
+            grid: spec.grid.unwrap_or(self.grid),
+            grf: spec.grf.unwrap_or(self.grf),
         }
     }
 
-    /// The per-problem solver options implied by this config.
-    pub fn scsf_options(&self) -> ScsfOptions {
+    /// Effective solve tolerance for one spec: spec override → run
+    /// override → the family's registered default.
+    pub fn spec_tol(&self, spec: &FamilySpec, family: &dyn OperatorFamily) -> f64 {
+        spec.tol
+            .or(self.tol)
+            .unwrap_or_else(|| family.default_tol())
+    }
+
+    /// Resolve every spec against a registry: validates family names
+    /// and counts, and lays the specs out as contiguous id blocks in
+    /// generation order.
+    pub fn resolve(&self, registry: &FamilyRegistry) -> Result<Vec<ResolvedFamily>> {
+        if self.families.is_empty() {
+            return Err(anyhow!("config needs at least one family spec"));
+        }
+        let mut out = Vec::with_capacity(self.families.len());
+        let mut start = 0usize;
+        for spec in &self.families {
+            if spec.count == 0 {
+                return Err(anyhow!("family spec {:?}: count must be >= 1", spec.family));
+            }
+            let handle = registry.resolve(&spec.family)?;
+            let name: Arc<str> = Arc::from(handle.name());
+            let opts = self.spec_gen_options(spec);
+            if opts.grid == 0 {
+                // A 0-sized grid assembles 0×0 matrices and would only
+                // surface as a panic deep in a solve worker.
+                return Err(anyhow!("family spec {:?}: grid must be >= 1", spec.family));
+            }
+            let tol = self.spec_tol(spec, handle.as_ref());
+            let end = start + spec.count;
+            out.push(ResolvedFamily {
+                handle,
+                name,
+                start,
+                end,
+                opts,
+                tol,
+            });
+            start = end;
+        }
+        Ok(out)
+    }
+
+    /// The scheduler's family groups implied by the spec layout.
+    pub fn family_groups(&self, resolved: &[ResolvedFamily]) -> Vec<FamilyGroup> {
+        resolved
+            .iter()
+            .map(|r| FamilyGroup {
+                family: r.name.to_string(),
+                start: r.start,
+                end: r.end,
+            })
+            .collect()
+    }
+
+    /// The per-problem solver options implied by this config at the
+    /// given tolerance (family specs resolve their own tolerance; see
+    /// [`GenConfig::spec_tol`]).
+    pub fn scsf_options_with_tol(&self, tol: f64) -> ScsfOptions {
         let mut chfsi = ChfsiOptions::from_eig(&EigOptions {
             n_eigs: self.n_eigs,
-            tol: self.tol,
+            tol,
             max_iters: 500,
             seed: self.seed,
         });
@@ -136,6 +423,13 @@ impl GenConfig {
             sort: self.sort,
             warm_start: self.warm_start,
         }
+    }
+
+    /// [`GenConfig::scsf_options_with_tol`] at the run-level tolerance
+    /// (`tol` or the historical [`FALLBACK_TOL`]) — the single-family
+    /// convenience used by tests and benches.
+    pub fn scsf_options(&self) -> ScsfOptions {
+        self.scsf_options_with_tol(self.tol.unwrap_or(FALLBACK_TOL))
     }
 
     /// Serialize to pretty JSON.
@@ -156,11 +450,15 @@ impl GenConfig {
             ]),
         };
         Value::obj(vec![
-            ("kind", self.kind.name().into()),
+            (
+                "families",
+                Value::Arr(self.families.iter().map(FamilySpec::to_json).collect()),
+            ),
             ("grid", self.grid.into()),
-            ("n_problems", self.n_problems.into()),
+            // Derived echo for humans/tools; `families` is authoritative.
+            ("n_problems", self.n_problems().into()),
             ("n_eigs", self.n_eigs.into()),
-            ("tol", self.tol.into()),
+            ("tol", self.tol.map(Value::from).unwrap_or(Value::Null)),
             ("seed", self.seed.into()),
             ("degree", self.degree.into()),
             (
@@ -201,24 +499,77 @@ impl GenConfig {
 
     /// Parse from JSON (inverse of [`GenConfig::to_json`]; missing keys
     /// take defaults).
+    ///
+    /// Accepts both the `families` list and the legacy single-family
+    /// form `{"kind": NAME, "n_problems": N, "tol": T}` — the latter
+    /// parses to a one-element spec list and reproduces the
+    /// pre-registry pipeline output bit for bit (legacy configs always
+    /// carry an effective run tolerance, historically `1e-8`).
     pub fn from_json(text: &str) -> Result<Self> {
         let v = json::parse(text).map_err(|e| anyhow!("config JSON: {e}"))?;
         let mut cfg = GenConfig::default();
-        if let Some(s) = v.get("kind").and_then(Value::as_str) {
-            cfg.kind = OperatorKind::parse(s).ok_or_else(|| anyhow!("unknown kind {s}"))?;
-        }
         let get = |key: &str| v.get(key).and_then(Value::as_usize);
+        if let Some(x) = v.get("tol") {
+            cfg.tol = match x {
+                Value::Null => None,
+                _ => Some(
+                    x.as_f64()
+                        .filter(|t| t.is_finite() && *t > 0.0)
+                        .ok_or_else(|| {
+                            anyhow!("tol must be a finite positive number or null")
+                        })?,
+                ),
+            };
+        }
+        match (v.get("families"), v.get("kind")) {
+            (Some(_), Some(_)) => {
+                return Err(anyhow!(
+                    "config has both \"families\" and legacy \"kind\" — use one"
+                ));
+            }
+            (Some(fs), None) => {
+                let arr = fs
+                    .as_arr()
+                    .ok_or_else(|| anyhow!("families must be an array"))?;
+                if arr.is_empty() {
+                    return Err(anyhow!("families must not be empty"));
+                }
+                cfg.families = arr
+                    .iter()
+                    .map(FamilySpec::from_json)
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            (None, kind) => {
+                // Legacy (or default) single-family form. The historical
+                // behaviour solved every family at the run tolerance
+                // (default 1e-8), so pin it for bit-for-bit equivalence.
+                let name = match kind {
+                    Some(k) => {
+                        let s = k
+                            .as_str()
+                            .ok_or_else(|| anyhow!("kind must be a string"))?;
+                        crate::operators::OperatorKind::parse(s)
+                            .ok_or_else(|| anyhow!("unknown kind {s}"))?
+                            .name()
+                            .to_string()
+                    }
+                    None => "helmholtz".to_string(),
+                };
+                let count = get("n_problems").unwrap_or(16);
+                if count == 0 {
+                    return Err(anyhow!("n_problems must be >= 1"));
+                }
+                cfg.families = vec![FamilySpec::new(&name, count)];
+                if kind.is_some() {
+                    cfg.tol = Some(cfg.tol.unwrap_or(FALLBACK_TOL));
+                }
+            }
+        }
         if let Some(x) = get("grid") {
             cfg.grid = x;
         }
-        if let Some(x) = get("n_problems") {
-            cfg.n_problems = x;
-        }
         if let Some(x) = get("n_eigs") {
             cfg.n_eigs = x;
-        }
-        if let Some(x) = v.get("tol").and_then(Value::as_f64) {
-            cfg.tol = x;
         }
         if let Some(x) = v.get("seed").and_then(Value::as_f64) {
             cfg.seed = x as u64;
@@ -309,6 +660,7 @@ impl GenConfig {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::operators::OperatorKind;
 
     #[test]
     fn json_roundtrip_default() {
@@ -320,11 +672,22 @@ mod tests {
     #[test]
     fn json_roundtrip_custom() {
         let cfg = GenConfig {
-            kind: OperatorKind::Vibration,
+            families: vec![
+                FamilySpec {
+                    family: "vibration".to_string(),
+                    count: 60,
+                    grid: Some(18),
+                    tol: Some(1e-9),
+                    grf: Some(GrfParams {
+                        alpha: 2.2,
+                        tau: 1.5,
+                    }),
+                },
+                FamilySpec::new("poisson", 40),
+            ],
             grid: 20,
-            n_problems: 100,
             n_eigs: 24,
-            tol: 1e-10,
+            tol: Some(1e-10),
             seed: 99,
             degree: 16,
             guard: Some(6),
@@ -345,19 +708,140 @@ mod tests {
         };
         let back = GenConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(cfg, back);
+        assert_eq!(back.n_problems(), 100);
     }
 
     #[test]
-    fn partial_json_takes_defaults() {
-        let cfg = GenConfig::from_json(r#"{"kind": "poisson", "grid": 10}"#).unwrap();
-        assert_eq!(cfg.kind, OperatorKind::Poisson);
+    fn legacy_kind_json_parses_to_single_spec() {
+        let cfg =
+            GenConfig::from_json(r#"{"kind": "poisson", "grid": 10, "n_problems": 7}"#).unwrap();
+        assert_eq!(cfg.families, vec![FamilySpec::new("poisson", 7)]);
         assert_eq!(cfg.grid, 10);
+        assert_eq!(cfg.n_problems(), 7);
+        // Legacy configs always carried an effective run tolerance.
+        assert_eq!(cfg.tol, Some(FALLBACK_TOL));
         assert_eq!(cfg.n_eigs, GenConfig::default().n_eigs);
     }
 
     #[test]
-    fn rejects_unknown_kind() {
+    fn kind_and_families_together_are_rejected() {
+        let err = GenConfig::from_json(
+            r#"{"kind": "poisson", "families": [{"family": "poisson", "count": 1}]}"#,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("use one"), "{err}");
+    }
+
+    #[test]
+    fn rejects_unknown_kind_and_bad_families() {
         assert!(GenConfig::from_json(r#"{"kind": "nope"}"#).is_err());
+        assert!(GenConfig::from_json(r#"{"families": []}"#).is_err());
+        assert!(GenConfig::from_json(r#"{"families": [{"count": 3}]}"#).is_err());
+        assert!(
+            GenConfig::from_json(r#"{"families": [{"family": "poisson"}]}"#).is_err(),
+            "count required"
+        );
+        assert!(GenConfig::from_json(r#"{"families": [{"family": "poisson", "count": 0}]}"#)
+            .is_err());
+        // Partial per-family grf overrides are rejected, not silently
+        // filled from the global default.
+        assert!(GenConfig::from_json(
+            r#"{"families": [{"family": "poisson", "count": 2, "grf": {"alpha": 2.0}}]}"#
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn family_spec_cli_form_parses() {
+        assert_eq!(
+            FamilySpec::parse("poisson:64").unwrap(),
+            FamilySpec::new("poisson", 64)
+        );
+        let full = FamilySpec::parse("helmholtz:32:16:1e-9").unwrap();
+        assert_eq!(full.grid, Some(16));
+        assert_eq!(full.tol, Some(1e-9));
+        let skip_grid = FamilySpec::parse("poisson:8::1e-10").unwrap();
+        assert_eq!(skip_grid.grid, None);
+        assert_eq!(skip_grid.tol, Some(1e-10));
+        for bad in [
+            "poisson",
+            "poisson:",
+            "poisson:0",
+            "poisson:x",
+            ":4",
+            "poisson:4:a",
+            "poisson:4:8:-1",
+            "poisson:4:8:inf",
+            "poisson:4:8:1e999",
+            "poisson:4:8:1e-9:extra",
+        ] {
+            assert!(FamilySpec::parse(bad).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn resolve_validates_names_and_lays_out_blocks() {
+        let reg = FamilyRegistry::builtin();
+        let cfg = GenConfig {
+            families: vec![
+                FamilySpec::new("poisson", 3),
+                FamilySpec {
+                    grid: Some(10),
+                    ..FamilySpec::new("helmholtz", 5)
+                },
+            ],
+            grid: 8,
+            ..Default::default()
+        };
+        let resolved = cfg.resolve(&reg).unwrap();
+        assert_eq!(resolved.len(), 2);
+        assert_eq!((resolved[0].start, resolved[0].end), (0, 3));
+        assert_eq!((resolved[1].start, resolved[1].end), (3, 8));
+        assert_eq!(resolved[0].opts.grid, 8);
+        assert_eq!(resolved[1].opts.grid, 10);
+        // tol: no overrides → the family defaults.
+        assert_eq!(resolved[0].tol, OperatorKind::Poisson.default_tol());
+        assert_eq!(resolved[1].tol, OperatorKind::Helmholtz.default_tol());
+        let groups = cfg.family_groups(&resolved);
+        assert_eq!(groups[0].family, "poisson");
+        assert_eq!((groups[1].start, groups[1].end), (3, 8));
+
+        let bad = GenConfig::single("martian", 2);
+        assert!(bad.resolve(&reg).is_err());
+        let empty = GenConfig {
+            families: vec![],
+            ..Default::default()
+        };
+        assert!(empty.resolve(&reg).is_err());
+        // A degenerate grid is a config error, not a worker panic.
+        let zero_grid = GenConfig {
+            families: vec![FamilySpec {
+                grid: Some(0),
+                ..FamilySpec::new("poisson", 2)
+            }],
+            ..Default::default()
+        };
+        assert!(zero_grid.resolve(&reg).is_err());
+        let zero_default_grid = GenConfig {
+            grid: 0,
+            ..GenConfig::single("poisson", 2)
+        };
+        assert!(zero_default_grid.resolve(&reg).is_err());
+    }
+
+    #[test]
+    fn tol_resolution_order_is_spec_then_run_then_family() {
+        let reg = FamilyRegistry::builtin();
+        let mut cfg = GenConfig::single("poisson", 1);
+        // No overrides: family default.
+        assert_eq!(cfg.resolve(&reg).unwrap()[0].tol, 1e-12);
+        // Run-level override wins over the family default.
+        cfg.tol = Some(1e-7);
+        assert_eq!(cfg.resolve(&reg).unwrap()[0].tol, 1e-7);
+        // Spec-level override wins over both.
+        cfg.families[0].tol = Some(1e-5);
+        assert_eq!(cfg.resolve(&reg).unwrap()[0].tol, 1e-5);
     }
 
     #[test]
@@ -433,10 +917,13 @@ mod tests {
             threads: 4,
             ..Default::default()
         };
-        let o = cfg.scsf_options();
+        let o = cfg.scsf_options_with_tol(1e-9);
         assert_eq!(o.chfsi.degree, 14);
         assert_eq!(o.chfsi.guard, Some(7));
         assert_eq!(o.chfsi.threads, 4);
+        assert_eq!(o.chfsi.eig.tol, 1e-9);
         assert!(o.warm_start);
+        // The no-arg convenience uses the run tolerance / fallback.
+        assert_eq!(cfg.scsf_options().chfsi.eig.tol, FALLBACK_TOL);
     }
 }

@@ -20,11 +20,25 @@ use std::fs::File;
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
 
+/// Manifest schema version this build writes.
+///
+/// - **1** (implicit — pre-versioning manifests have no
+///   `schema_version` field): records carry `id/shard/offset/n/l/…`.
+/// - **2**: adds the root `schema_version` field and the per-record
+///   `family` field (operator-family name; mixed-family datasets).
+///
+/// [`DatasetReader::open`] reads versions `<= SCHEMA_VERSION` and
+/// rejects newer ones with an actionable error.
+pub const SCHEMA_VERSION: usize = 2;
+
 /// Index entry for one stored record.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RecordMeta {
     /// Problem id (generation order).
     pub id: usize,
+    /// Operator family that generated the problem (empty for
+    /// schema-version-1 datasets written before the family registry).
+    pub family: String,
     /// Similarity run / shard that solved this problem (the scheduler's
     /// per-problem assignment; 0 for datasets written before it).
     pub shard: usize,
@@ -66,8 +80,14 @@ impl DatasetWriter {
     }
 
     /// Append one solved problem, recording which similarity run /
-    /// shard solved it.
-    pub fn write_record(&mut self, id: usize, shard: usize, result: &EigResult) -> Result<()> {
+    /// shard solved it and which operator family generated it.
+    pub fn write_record(
+        &mut self,
+        id: usize,
+        shard: usize,
+        family: &str,
+        result: &EigResult,
+    ) -> Result<()> {
         let n = result.vectors.rows();
         let l = result.values.len();
         let offset = self.offset;
@@ -90,6 +110,7 @@ impl DatasetWriter {
         let max_residual = result.residuals.iter().cloned().fold(0.0, f64::max);
         self.records.push(RecordMeta {
             id,
+            family: family.to_string(),
             shard,
             offset,
             n,
@@ -121,6 +142,7 @@ impl DatasetWriter {
         for r in &self.records {
             recs.push(Value::obj(vec![
                 ("id", r.id.into()),
+                ("family", r.family.as_str().into()),
                 ("shard", r.shard.into()),
                 ("offset", r.offset.into()),
                 ("n", r.n.into()),
@@ -132,6 +154,7 @@ impl DatasetWriter {
         }
         let mut root = vec![
             ("format", Value::from("scsf-eigs-v1")),
+            ("schema_version", SCHEMA_VERSION.into()),
             ("records", Value::Arr(recs)),
         ];
         root.extend(extra);
@@ -161,10 +184,25 @@ pub struct DatasetReader {
 }
 
 impl DatasetReader {
-    /// Open a dataset directory.
+    /// Open a dataset directory. Reads manifests up to
+    /// [`SCHEMA_VERSION`] (a missing `schema_version` field means
+    /// version 1); newer versions are rejected with an actionable
+    /// error rather than silently misread.
     pub fn open(dir: &Path) -> Result<Self> {
         let manifest = std::fs::read_to_string(dir.join("manifest.json"))?;
         let v = json::parse(&manifest).map_err(|e| anyhow!("manifest: {e}"))?;
+        let version = v
+            .get("schema_version")
+            .and_then(Value::as_usize)
+            .unwrap_or(1);
+        if version > SCHEMA_VERSION {
+            return Err(anyhow!(
+                "dataset {} has manifest schema_version {version}, newer than this \
+                 build supports ({SCHEMA_VERSION}) — upgrade scsf or regenerate the \
+                 dataset with this version",
+                dir.display()
+            ));
+        }
         let recs = v
             .get("records")
             .and_then(Value::as_arr)
@@ -174,6 +212,11 @@ impl DatasetReader {
             let gu = |k: &str| r.get(k).and_then(Value::as_usize).unwrap_or(0);
             index.push(RecordMeta {
                 id: gu("id"),
+                family: r
+                    .get("family")
+                    .and_then(Value::as_str)
+                    .unwrap_or("")
+                    .to_string(),
                 shard: gu("shard"),
                 offset: r.get("offset").and_then(Value::as_f64).unwrap_or(0.0) as u64,
                 n: gu("n"),
@@ -260,8 +303,8 @@ mod tests {
         let r0 = fake_result(10, 3, 1);
         let r1 = fake_result(10, 3, 2);
         // Write out of id order to exercise the index sort.
-        w.write_record(1, 1, &r1).unwrap();
-        w.write_record(0, 0, &r0).unwrap();
+        w.write_record(1, 1, "helmholtz", &r1).unwrap();
+        w.write_record(0, 0, "poisson", &r0).unwrap();
         let recs = w
             .finalize(vec![("note", Value::from("test"))])
             .unwrap();
@@ -270,9 +313,11 @@ mod tests {
 
         let mut reader = DatasetReader::open(&dir).unwrap();
         assert_eq!(reader.index().len(), 2);
-        // Shard assignment round-trips through the manifest.
+        // Shard and family assignments round-trip through the manifest.
         assert_eq!(reader.index()[0].shard, 0);
         assert_eq!(reader.index()[1].shard, 1);
+        assert_eq!(reader.index()[0].family, "poisson");
+        assert_eq!(reader.index()[1].family, "helmholtz");
         for (id, want) in [(0usize, &r0), (1, &r1)] {
             let rec = reader.read(id).unwrap();
             assert_eq!(rec.values, want.values);
@@ -286,7 +331,7 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("scsf_ds2_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
         let mut w = DatasetWriter::create(&dir).unwrap();
-        w.write_record(0, 0, &fake_result(6, 2, 3)).unwrap();
+        w.write_record(0, 0, "poisson", &fake_result(6, 2, 3)).unwrap();
         w.finalize(vec![("config", Value::from("xyz"))]).unwrap();
         let manifest = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
         let v = json::parse(&manifest).unwrap();
@@ -295,6 +340,51 @@ mod tests {
             v.get("format").and_then(Value::as_str),
             Some("scsf-eigs-v1")
         );
+        assert_eq!(
+            v.get("schema_version").and_then(Value::as_usize),
+            Some(SCHEMA_VERSION)
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn version1_manifests_still_read_and_future_versions_are_rejected() {
+        let dir = std::env::temp_dir().join(format!("scsf_ds_ver_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut w = DatasetWriter::create(&dir).unwrap();
+        let r = fake_result(4, 2, 9);
+        w.write_record(0, 0, "poisson", &r).unwrap();
+        w.finalize(vec![]).unwrap();
+
+        // A pre-versioning (schema 1) manifest: no schema_version, no
+        // per-record family. The reader must accept it and default the
+        // family to empty.
+        let v1 = r#"{
+          "format": "scsf-eigs-v1",
+          "records": [
+            {"id": 0, "shard": 0, "offset": 0, "n": 4, "l": 2,
+             "max_residual": 1e-10, "secs": 0.25, "iterations": 7}
+          ]
+        }"#;
+        std::fs::write(dir.join("manifest.json"), v1).unwrap();
+        let mut reader = DatasetReader::open(&dir).unwrap();
+        assert_eq!(reader.index()[0].family, "");
+        let rec = reader.read(0).unwrap();
+        assert_eq!(rec.values, r.values);
+
+        // A future schema version must be rejected with an actionable
+        // message, not silently misread.
+        let future = v1.replace(
+            "\"format\": \"scsf-eigs-v1\",",
+            &format!(
+                "\"format\": \"scsf-eigs-v1\",\n  \"schema_version\": {},",
+                SCHEMA_VERSION + 1
+            ),
+        );
+        std::fs::write(dir.join("manifest.json"), future).unwrap();
+        let err = DatasetReader::open(&dir).unwrap_err().to_string();
+        assert!(err.contains("schema_version"), "{err}");
+        assert!(err.contains("upgrade"), "actionable: {err}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -303,7 +393,7 @@ mod tests {
         let dir = std::env::temp_dir().join(format!("scsf_ds3_{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
         let mut w = DatasetWriter::create(&dir).unwrap();
-        w.write_record(5, 2, &fake_result(4, 1, 4)).unwrap();
+        w.write_record(5, 2, "vibration", &fake_result(4, 1, 4)).unwrap();
         w.finalize(vec![]).unwrap();
         let mut r = DatasetReader::open(&dir).unwrap();
         assert!(r.read(99).is_err());

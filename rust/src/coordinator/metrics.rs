@@ -5,11 +5,55 @@
 use super::scheduler::Boundary;
 use crate::util::json::Value;
 
+/// Per-family rollup of one dataset-generation run (mixed-family
+/// datasets get one entry per family spec, in generation order).
+#[derive(Debug, Default, Clone, PartialEq)]
+pub struct FamilyReport {
+    /// Family name (registry name of the spec).
+    pub family: String,
+    /// Problems generated/solved for this family.
+    pub problems: usize,
+    /// Similarity runs the scheduler built for this family.
+    pub runs: usize,
+    /// Summed ChFSI outer iterations across the family's solves.
+    pub iterations: usize,
+    /// Mean outer iterations per solve.
+    pub avg_iterations: f64,
+    /// Seconds in eigensolves for this family's problems.
+    pub solve_secs: f64,
+    /// Worst relative residual over the family's stored pairs.
+    pub max_residual: f64,
+    /// Effective solve tolerance the family ran at.
+    pub tol: f64,
+    /// Sort quality within the family's runs (sum of adjacent
+    /// signature distances; same unit as [`GenReport::sort_quality`]).
+    pub sort_quality: f64,
+}
+
+impl FamilyReport {
+    /// JSON object for the manifest.
+    pub fn to_json(&self) -> Value {
+        Value::obj(vec![
+            ("family", self.family.as_str().into()),
+            ("problems", self.problems.into()),
+            ("runs", self.runs.into()),
+            ("iterations", self.iterations.into()),
+            ("avg_iterations", self.avg_iterations.into()),
+            ("solve_secs", self.solve_secs.into()),
+            ("max_residual", self.max_residual.into()),
+            ("tol", self.tol.into()),
+            ("sort_quality", self.sort_quality.into()),
+        ])
+    }
+}
+
 /// Work summary of one similarity run (one solve worker).
 #[derive(Debug, Default, Clone, PartialEq)]
 pub struct ShardReport {
     /// Run index (boundary order: run `k+1` may hand off from run `k`).
     pub run: usize,
+    /// Family the run belongs to (runs never span two families).
+    pub family: String,
     /// Problems solved by this run.
     pub problems: usize,
     /// Summed ChFSI outer iterations across the run's solves.
@@ -34,6 +78,7 @@ impl ShardReport {
     pub fn to_json(&self) -> Value {
         Value::obj(vec![
             ("run", self.run.into()),
+            ("family", self.family.as_str().into()),
             ("problems", self.problems.into()),
             ("iterations", self.iterations.into()),
             ("warm_handoff", self.warm_handoff.into()),
@@ -98,6 +143,9 @@ pub struct GenReport {
     pub cold_runs: usize,
     /// Seam reports of the global order (empty for shard scope).
     pub boundaries: Vec<Boundary>,
+    /// Per-family rollup, one entry per family spec in generation
+    /// order (a single entry for classic one-family runs).
+    pub families: Vec<FamilyReport>,
     /// Per-run breakdown, ordered by run index (deterministic
     /// manifest).
     pub shards: Vec<ShardReport>,
@@ -130,6 +178,10 @@ impl GenReport {
             (
                 "boundaries",
                 Value::Arr(self.boundaries.iter().map(Boundary::to_json).collect()),
+            ),
+            (
+                "families",
+                Value::Arr(self.families.iter().map(FamilyReport::to_json).collect()),
             ),
             (
                 "shards",
@@ -181,6 +233,38 @@ mod tests {
         assert!(v.get("signature_secs").is_some());
         assert!(v.get("schedule_secs").is_some());
         assert!(v.get("boundaries").and_then(Value::as_arr).is_some());
+        assert!(v.get("families").and_then(Value::as_arr).is_some());
+    }
+
+    #[test]
+    fn family_reports_serialize() {
+        let r = GenReport {
+            families: vec![FamilyReport {
+                family: "poisson".to_string(),
+                problems: 4,
+                runs: 2,
+                iterations: 40,
+                avg_iterations: 10.0,
+                solve_secs: 1.25,
+                max_residual: 1e-13,
+                tol: 1e-12,
+                sort_quality: 3.5,
+            }],
+            ..Default::default()
+        };
+        let v = r.to_json();
+        let fams = v.get("families").and_then(Value::as_arr).unwrap();
+        assert_eq!(fams.len(), 1);
+        assert_eq!(
+            fams[0].get("family").and_then(Value::as_str),
+            Some("poisson")
+        );
+        assert_eq!(fams[0].get("problems").and_then(Value::as_usize), Some(4));
+        assert_eq!(fams[0].get("tol").and_then(Value::as_f64), Some(1e-12));
+        assert_eq!(
+            fams[0].get("sort_quality").and_then(Value::as_f64),
+            Some(3.5)
+        );
     }
 
     #[test]

@@ -5,17 +5,29 @@
 //!
 //! ```text
 //! producer ──problem──▶ signature workers (×M, streaming TFFT keys)
-//!                            │ (problem, signature)
+//!                            │ (problem, family-tagged signature)
 //!                            ▼
-//!                      scheduler: ONE global greedy order over all N
-//!                      signatures → M contiguous similarity runs
+//!                      scheduler: ONE greedy order per family group
+//!                      → M(+) contiguous similarity runs, none
+//!                      spanning a family boundary
 //!                            │ run plans (+ boundary-handoff channels)
 //!                            ▼
-//!                      solve workers (×M, one warm chain per run)
+//!                      solve workers (×M, one warm chain per run,
+//!                      per-family tolerance)
 //!                            │ (id, run, EigResult)
 //!                            ▼
 //!                      validator/writer ──▶ eigs.bin + manifest.json
 //! ```
+//!
+//! Problems come from the *family specs* of [`config::GenConfig`]: one
+//! dataset may mix several operator families
+//! ([`crate::operators::OperatorFamily`], resolved by name through a
+//! [`crate::operators::FamilyRegistry`]), each with its own count,
+//! grid, GRF parameters, and solve tolerance. Sort keys are only
+//! comparable within a family, so the scheduler partitions by family
+//! group before any greedy scan, and warm-start handoffs never cross a
+//! family boundary; the manifest records each problem's family and a
+//! per-family rollup ([`metrics::FamilyReport`]).
 //!
 //! The paper's §D.6 parallelization ("partition the N problems into M
 //! chunks and run M SCSF instances") sorts only *within* each chunk, so

@@ -6,32 +6,37 @@
 //! generate → signature → schedule → solve (×M runs) → validate/write
 //! ```
 //!
-//! The producer streams problems one at a time; signature workers key
-//! them with the truncated-FFT extractor ([`sort::signature`]) as they
-//! arrive; the scheduler ([`super::scheduler`]) builds one global
-//! similarity order and hands each solve worker a contiguous run of it,
-//! wiring a boundary-handoff channel wherever the seam distance grants
-//! a warm start. Shard-scope runs are dispatched the moment their last
-//! problem is keyed (streaming); global scope is a barrier by nature —
-//! the order over all `N` signatures needs all `N` signatures.
+//! The producer streams problems one at a time, resolving each id to
+//! its family spec ([`crate::coordinator::config::GenConfig::families`]
+//! resolved through a [`FamilyRegistry`]); signature workers key them
+//! with the truncated-FFT extractor ([`crate::sort::signature`]), tagging each
+//! signature with its family, as they arrive; the scheduler
+//! ([`super::scheduler`]) builds one greedy order per family group and
+//! hands each solve worker a contiguous run of it, wiring a
+//! boundary-handoff channel wherever a within-family seam distance
+//! grants a warm start (handoffs never cross a family boundary).
+//! Shard-scope runs are dispatched the moment their last problem is
+//! keyed (streaming); global scope is a barrier by nature — the order
+//! over a family's signatures needs all of that family's signatures.
 
-use super::config::{Backend, GenConfig};
+use super::config::{Backend, GenConfig, ResolvedFamily};
 use super::dataset::DatasetWriter;
-use super::metrics::{GenReport, ShardReport};
+use super::metrics::{FamilyReport, GenReport, ShardReport};
 use super::scheduler::{self, Schedule, SortScope};
 use crate::anyhow;
 use crate::eig::chebyshev::{FilterBackend, NativeFilter};
 use crate::eig::scsf::Chain;
 use crate::eig::solver::Workspace;
 use crate::eig::WarmStart;
-use crate::operators::{self, Problem};
+use crate::operators::{FamilyRegistry, Problem};
 use crate::rng::Xoshiro256pp;
 use crate::runtime::{XlaFilter, XlaRuntime};
-use crate::sort::{greedy, signature::SignatureEngine, SortMethod};
+use crate::sort::{signature::Signature, signature::SignatureEngine, SortMethod};
 use crate::util::error::Result;
 use std::path::Path;
 use std::rc::Rc;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -45,11 +50,62 @@ fn make_backend(cfg: &GenConfig) -> Result<Box<dyn FilterBackend>> {
     }
 }
 
+/// Spec index owning problem `id` (specs are contiguous id blocks).
+fn spec_of(resolved: &[ResolvedFamily], id: usize) -> usize {
+    resolved
+        .iter()
+        .position(|r| id >= r.start && id < r.end)
+        .expect("id within some family spec")
+}
+
+/// Generate every problem of the resolved spec layout in generation
+/// order, forking the master RNG once per id — the single definition of
+/// the id → spec → RNG mapping, shared by the pipeline's producer stage
+/// and [`generate_problems_with_registry`] so the two can never drift.
+/// Stops early when `emit` returns `false`. Errors if a family violates
+/// the id part of the `generate_one` contract (a wrong id would
+/// otherwise surface as an index panic or a lost problem deep in the
+/// scheduler).
+fn generate_in_order(
+    resolved: &[ResolvedFamily],
+    seed: u64,
+    mut emit: impl FnMut(&ResolvedFamily, Problem) -> bool,
+) -> Result<()> {
+    let n = resolved.last().map(|r| r.end).unwrap_or(0);
+    let mut master = Xoshiro256pp::seed_from_u64(seed);
+    let mut spec = 0usize;
+    for id in 0..n {
+        let mut prng = master.fork();
+        while id >= resolved[spec].end {
+            spec += 1;
+        }
+        let fam = &resolved[spec];
+        let problem = fam.handle.generate_one(fam.opts, id, &mut prng);
+        if problem.id != id {
+            return Err(anyhow!(
+                "family {:?} generated a problem with id {} for requested id {id} \
+                 (OperatorFamily::generate_one must use the passed dataset id)",
+                fam.name,
+                problem.id
+            ));
+        }
+        if !emit(fam, problem) {
+            break;
+        }
+    }
+    Ok(())
+}
+
 /// Everything one solve worker needs for its similarity run: the
-/// problems in solve order, plus the boundary-handoff wiring.
+/// problems in solve order, the family's solve tolerance, plus the
+/// boundary-handoff wiring.
 struct RunPlan {
     /// Run index (= the shard id recorded per problem in the manifest).
     index: usize,
+    /// Family the run belongs to (runs never span two families).
+    family: Arc<str>,
+    /// Effective solve tolerance of the run's family spec.
+    tol: f64,
     /// Problems in solve order.
     problems: Vec<Problem>,
     /// Receive the predecessor run's tail eigenpairs before solving.
@@ -62,19 +118,42 @@ struct RunPlan {
 #[derive(Default)]
 struct ScheduleSummary {
     sort_quality: f64,
+    group_quality: Vec<f64>,
     boundaries: Vec<scheduler::Boundary>,
     secs: f64,
 }
 
-/// Generate a full eigenvalue dataset per the config, writing it to
-/// `out_dir`. Returns the run report (also embedded in the manifest).
+/// Per-family accumulation in the validator/writer stage.
+#[derive(Default, Clone)]
+struct FamilyAccum {
+    problems: usize,
+    iterations: usize,
+    solve_secs: f64,
+    max_residual: f64,
+}
+
+/// Generate a full eigenvalue dataset per the config using the built-in
+/// family registry, writing it to `out_dir`. Returns the run report
+/// (also embedded in the manifest).
 ///
 /// Deterministic: problem parameters depend only on `cfg.seed`; the
 /// schedule depends only on the signatures (not on thread timing); solve
 /// results are deterministic per run, including across boundary
 /// handoffs (run `k+1` blocks for run `k`'s tail — never races it).
 pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
-    assert!(cfg.n_problems >= 1);
+    generate_dataset_with_registry(cfg, out_dir, &FamilyRegistry::builtin())
+}
+
+/// [`generate_dataset`] against an explicit [`FamilyRegistry`] — the
+/// extension point for user-registered operator families.
+pub fn generate_dataset_with_registry(
+    cfg: &GenConfig,
+    out_dir: &Path,
+    registry: &FamilyRegistry,
+) -> Result<GenReport> {
+    let resolved = cfg.resolve(registry)?;
+    let n = cfg.n_problems();
+    assert!(n >= 1);
     assert!(cfg.shards >= 1);
     if cfg.sort_scope == SortScope::Shard && cfg.handoff_threshold.is_some() && cfg.warm_start {
         // Shard runs are independent — a threshold there would be
@@ -84,8 +163,9 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
         ));
     }
     let t_start = Instant::now();
-    let n = cfg.n_problems;
-    let (chunk, n_runs) = scheduler::run_span(n, cfg.shards);
+    let groups = cfg.family_groups(&resolved);
+    let (_, run_spans) = scheduler::run_layout(n, cfg.shards, &groups);
+    let n_runs = run_spans.len();
     // warm_start=false is the master ablation switch: every solve is
     // cold, so boundary handoffs are moot.
     let handoff_threshold = if cfg.warm_start {
@@ -98,7 +178,7 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
     let (prob_tx, prob_rx) = sync_channel::<Problem>(cfg.channel_capacity);
     let prob_rx = Mutex::new(prob_rx);
     let (sig_tx, sig_rx) =
-        sync_channel::<(Problem, Option<Vec<f64>>)>(cfg.channel_capacity);
+        sync_channel::<(Problem, Option<Signature>)>(cfg.channel_capacity);
     let mut plan_txs: Vec<SyncSender<RunPlan>> = Vec::with_capacity(n_runs);
     let mut plan_rxs: Vec<Receiver<RunPlan>> = Vec::with_capacity(n_runs);
     for _ in 0..n_runs {
@@ -114,6 +194,7 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
     let signature_secs_cell: Mutex<f64> = Mutex::new(0.0);
     let summary_cell: Mutex<ScheduleSummary> = Mutex::new(ScheduleSummary::default());
     let producer_err: Mutex<Option<String>> = Mutex::new(None);
+    let sched_err: Mutex<Option<String>> = Mutex::new(None);
 
     let mut report = GenReport {
         n_problems: n,
@@ -121,31 +202,38 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
         ..Default::default()
     };
 
-    let writer_out: Result<(DatasetWriter, f64, usize)> =
+    let resolved = &resolved;
+    let writer_out: Result<(DatasetWriter, f64, usize, Vec<FamilyAccum>)> =
         std::thread::scope(|scope| {
             // ---- Stage 1 · producer: parameters → operators -----------
             let producer_err = &producer_err;
             let gen_secs_cell = &gen_secs_cell;
             scope.spawn(move || {
                 // `prob_tx` is moved in and dropped on exit → signature
-                // workers see EOF once every problem is out.
+                // workers see EOF once every problem is out. (Family-TAG
+                // contract violations are caught downstream by the
+                // scheduler; id violations error right here.)
                 let prob_tx = prob_tx;
                 let t0 = Instant::now();
-                let mut master = Xoshiro256pp::seed_from_u64(cfg.seed);
-                for id in 0..n {
-                    let mut prng = master.fork();
-                    let p =
-                        operators::generate_one(cfg.kind, cfg.gen_options(), id, &mut prng);
+                let res = generate_in_order(resolved, cfg.seed, |_fam, p| {
                     if prob_tx.send(p).is_err() {
                         *producer_err.lock().unwrap() =
                             Some("signature stage hung up early".to_string());
-                        break;
+                        return false;
                     }
+                    true
+                });
+                if let Err(e) = res {
+                    *producer_err.lock().unwrap() = Some(e.to_string());
                 }
                 *gen_secs_cell.lock().unwrap() = t0.elapsed().as_secs_f64();
             });
 
             // ---- Stage 2 · signature workers: streaming TFFT keys -----
+            // Each signature is tagged with the problem's family (the
+            // tag mirrors `Problem::family`, which is what the
+            // scheduler's contract check reads); grouping itself is by
+            // the id's spec block.
             let signature_secs_cell = &signature_secs_cell;
             for _ in 0..n_runs {
                 let sig_tx = sig_tx.clone();
@@ -153,6 +241,7 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
                 scope.spawn(move || {
                     let mut engine = SignatureEngine::new(cfg.sort);
                     let mut secs = 0.0f64;
+                    let mut scheduler_gone = false;
                     loop {
                         let p = {
                             let rx = prob_rx.lock().unwrap();
@@ -161,11 +250,19 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
                                 Err(_) => break, // producer done
                             }
                         };
+                        if scheduler_gone {
+                            // Keep draining: the producer blocks on the
+                            // bounded problem channel, whose receiver
+                            // lives until the scope joins — stopping
+                            // here would deadlock the pipeline when the
+                            // scheduler aborts with an error.
+                            continue;
+                        }
                         let t0 = Instant::now();
-                        let key = engine.signature(&p);
+                        let sig = engine.tagged_signature(&p);
                         secs += t0.elapsed().as_secs_f64();
-                        if sig_tx.send((p, key)).is_err() {
-                            break; // scheduler gone
+                        if sig_tx.send((p, sig)).is_err() {
+                            scheduler_gone = true;
                         }
                     }
                     *signature_secs_cell.lock().unwrap() += secs;
@@ -173,8 +270,11 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
             }
             drop(sig_tx); // scheduler sees EOF once the workers finish
 
-            // ---- Stage 3 · scheduler: global order → similarity runs --
+            // ---- Stage 3 · scheduler: per-family orders → runs --------
             let summary_cell = &summary_cell;
+            let sched_err = &sched_err;
+            let groups = &groups;
+            let run_spans = &run_spans;
             scope.spawn(move || {
                 let sig_rx = sig_rx;
                 let plan_txs = plan_txs;
@@ -183,77 +283,126 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
                 let keyed = cfg.sort != SortMethod::None;
                 let mut prob_slots: Vec<Option<Problem>> = (0..n).map(|_| None).collect();
                 let mut key_slots: Vec<Option<Vec<f64>>> = (0..n).map(|_| None).collect();
-                let mut summary = ScheduleSummary::default();
+                let mut summary = ScheduleSummary {
+                    group_quality: vec![0.0; groups.len()],
+                    ..Default::default()
+                };
+                let fail = |msg: String| {
+                    *sched_err.lock().unwrap() = Some(msg);
+                };
+                // Cross-check each problem's family tag (mirrored onto
+                // its streamed signature) against the id's spec block —
+                // a mismatch means a family violated the generate_one
+                // contract (tag != registered name). Checked for every
+                // sort method, including None. Returns the error to
+                // report, if any.
+                let tag_err = |p: &Problem| -> Option<String> {
+                    let want = &resolved[spec_of(resolved, p.id)].name;
+                    (p.family.as_ref() != want.as_ref()).then(|| {
+                        format!(
+                            "problem {} carries family tag {:?} but its spec block \
+                             belongs to {want:?} (OperatorFamily::generate_one must tag \
+                             problems with the family's registered name)",
+                            p.id, p.family
+                        )
+                    })
+                };
+                let make_plan = |index: usize, group: usize, problems: Vec<Problem>| RunPlan {
+                    index,
+                    family: resolved[group].name.clone(),
+                    tol: resolved[group].tol,
+                    problems,
+                    handoff_rx: None,
+                    handoff_tx: None,
+                };
                 match cfg.sort_scope {
                     SortScope::Shard => {
                         // Streaming dispatch: a run leaves the moment its
                         // last problem is keyed. The per-chunk greedy
-                        // scans run serially on this thread (the old
-                        // pipeline ran them inside each solve worker),
-                        // but they overlap the producer and every
-                        // already-dispatched run's solves — and the
-                        // compressed scan is orders of magnitude cheaper
-                        // than the eigensolves it schedules.
-                        let mut remaining: Vec<usize> = (0..n_runs)
-                            .map(|r| n.min((r + 1) * chunk) - r * chunk)
-                            .collect();
-                        let mut scratch = greedy::GreedyScratch::default();
-                        let mut order_buf: Vec<usize> = Vec::with_capacity(chunk);
+                        // scans run serially on this thread, but they
+                        // overlap the producer and every already-
+                        // dispatched run's solves — and the compressed
+                        // scan is orders of magnitude cheaper than the
+                        // eigensolves it schedules.
+                        let mut id_to_run = vec![0usize; n];
+                        for (r, span) in run_spans.iter().enumerate() {
+                            for slot in &mut id_to_run[span.start..span.end] {
+                                *slot = r;
+                            }
+                        }
+                        let mut remaining: Vec<usize> =
+                            run_spans.iter().map(|s| s.end - s.start).collect();
+                        let mut scratch = crate::sort::greedy::GreedyScratch::default();
+                        let mut order_buf: Vec<usize> = Vec::new();
                         for _ in 0..n {
-                            let (p, key) = match sig_rx.recv() {
+                            let (p, sig) = match sig_rx.recv() {
                                 Ok(x) => x,
                                 Err(_) => break, // producer/signature died
                             };
+                            if let Some(msg) = tag_err(&p) {
+                                fail(msg);
+                                return;
+                            }
                             let id = p.id;
-                            let r = id / chunk;
+                            let r = id_to_run[id];
                             prob_slots[id] = Some(p);
-                            key_slots[id] = key;
+                            key_slots[id] = sig.map(|s| s.key);
                             remaining[r] -= 1;
                             if remaining[r] > 0 {
                                 continue;
                             }
                             let t0 = Instant::now();
-                            let start = r * chunk;
-                            let end = n.min(start + chunk);
+                            let span = &run_spans[r];
                             let keys: Option<Vec<Vec<f64>>> = keyed.then(|| {
-                                key_slots[start..end]
+                                key_slots[span.start..span.end]
                                     .iter_mut()
                                     .map(|s| s.take().unwrap())
                                     .collect()
                             });
-                            let (order, quality) = scheduler::order_chunk(
+                            let (order, quality) = match scheduler::order_chunk(
                                 keys.as_deref(),
-                                start,
-                                end - start,
+                                span.start,
+                                span.end - span.start,
                                 &mut scratch,
                                 &mut order_buf,
-                            );
-                            summary.sort_quality += quality;
+                            ) {
+                                Ok(x) => x,
+                                Err(e) => {
+                                    fail(format!(
+                                        "family {:?}: {e}",
+                                        groups[span.group].family
+                                    ));
+                                    return;
+                                }
+                            };
+                            summary.group_quality[span.group] += quality;
                             // Reorder the run's problems to solve order.
                             let by_order: Vec<Problem> = order
                                 .iter()
                                 .map(|&id| prob_slots[id].take().unwrap())
                                 .collect();
                             summary.secs += t0.elapsed().as_secs_f64();
-                            let _ = plan_txs[r].send(RunPlan {
-                                index: r,
-                                problems: by_order,
-                                handoff_rx: None,
-                                handoff_tx: None,
-                            });
+                            let _ = plan_txs[r].send(make_plan(r, span.group, by_order));
                         }
+                        summary.sort_quality = summary.group_quality.iter().sum();
                     }
                     SortScope::Global => {
-                        // Barrier: the global order needs every signature.
+                        // Barrier: each family's order needs every one of
+                        // its signatures (and runs are dispatched in
+                        // boundary order anyway).
                         let mut received = 0usize;
                         while received < n {
-                            let (p, key) = match sig_rx.recv() {
+                            let (p, sig) = match sig_rx.recv() {
                                 Ok(x) => x,
                                 Err(_) => break,
                             };
+                            if let Some(msg) = tag_err(&p) {
+                                fail(msg);
+                                return;
+                            }
                             let id = p.id;
                             prob_slots[id] = Some(p);
-                            key_slots[id] = key;
+                            key_slots[id] = sig.map(|s| s.key);
                             received += 1;
                         }
                         if received < n {
@@ -266,48 +415,51 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
                                 .map(|s| s.take().unwrap())
                                 .collect()
                         });
-                        let schedule: Schedule = scheduler::build_schedule(
+                        let schedule: Schedule = match scheduler::build_schedule(
                             keys.as_deref(),
                             n,
                             SortScope::Global,
                             cfg.shards,
                             handoff_threshold,
-                        );
+                            groups,
+                        ) {
+                            Ok(s) => s,
+                            Err(e) => {
+                                fail(e.to_string());
+                                return;
+                            }
+                        };
                         summary.sort_quality = schedule.sort_quality;
+                        summary.group_quality = schedule.group_quality.clone();
                         summary.boundaries = schedule.boundaries.clone();
-                        // Boundary-handoff channels: seam k gets a slot
+                        // Boundary-handoff channels: a seam gets a slot
                         // iff the scheduler granted it a warm start.
+                        // Family boundaries have no seam, hence never a
+                        // handoff.
                         let mut handoff_rxs: Vec<Option<Receiver<WarmStart>>> =
-                            Vec::with_capacity(n_runs);
+                            (0..n_runs).map(|_| None).collect();
                         let mut handoff_txs: Vec<Option<SyncSender<WarmStart>>> =
                             (0..n_runs).map(|_| None).collect();
-                        handoff_rxs.push(None); // run 0 never receives
                         for b in &schedule.boundaries {
                             if b.warm {
                                 let (tx, rx) = sync_channel::<WarmStart>(1);
                                 handoff_txs[b.from_run] = Some(tx);
-                                handoff_rxs.push(Some(rx));
-                            } else {
-                                handoff_rxs.push(None);
+                                handoff_rxs[b.to_run] = Some(rx);
                             }
                         }
                         summary.secs = t0.elapsed().as_secs_f64();
-                        for (run, (rx, tx)) in schedule
-                            .runs
-                            .into_iter()
-                            .zip(handoff_rxs.into_iter().zip(handoff_txs))
-                        {
+                        let mut handoff_rxs = handoff_rxs.into_iter();
+                        let mut handoff_txs = handoff_txs.into_iter();
+                        for run in schedule.runs {
                             let by_order: Vec<Problem> = run
                                 .order
                                 .iter()
                                 .map(|&id| prob_slots[id].take().unwrap())
                                 .collect();
-                            let _ = plan_txs[run.index].send(RunPlan {
-                                index: run.index,
-                                problems: by_order,
-                                handoff_rx: rx,
-                                handoff_tx: tx,
-                            });
+                            let mut plan = make_plan(run.index, run.group, by_order);
+                            plan.handoff_rx = handoff_rxs.next().unwrap();
+                            plan.handoff_tx = handoff_txs.next().unwrap();
+                            let _ = plan_txs[run.index].send(plan);
                         }
                     }
                 }
@@ -331,9 +483,10 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
                     // this worker solves — the steady state allocates
                     // nothing in solver loops.
                     let mut ws = Workspace::new(cfg.threads.max(1));
-                    let opts = cfg.scsf_options();
+                    let opts = cfg.scsf_options_with_tol(plan.tol);
                     let mut stats = ShardReport {
                         run: plan.index,
+                        family: plan.family.to_string(),
                         ..Default::default()
                     };
                     let mut chain = Chain::new();
@@ -351,8 +504,13 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
                     let t_solve = Instant::now();
                     let mut writer_gone = false;
                     for problem in &plan.problems {
-                        let r =
-                            chain.solve_next(&problem.matrix, &opts, backend.as_mut(), &mut ws);
+                        let r = chain.solve_next_for(
+                            &problem.family,
+                            &problem.matrix,
+                            &opts,
+                            backend.as_mut(),
+                            &mut ws,
+                        );
                         stats.problems += 1;
                         stats.iterations += r.stats.iterations;
                         if res_tx.send((problem.id, plan.index, r)).is_err() {
@@ -399,6 +557,7 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
             let mut filter_mflops = 0.0;
             let mut all_converged = true;
             let mut count = 0usize;
+            let mut fam_accum: Vec<FamilyAccum> = vec![FamilyAccum::default(); resolved.len()];
             for (id, run, result) in res_rx.iter() {
                 // Validation stage: every stored pair re-checked against
                 // the tolerance (the dataset-reliability guarantee of
@@ -410,10 +569,16 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
                 iter_sum += result.stats.iterations;
                 mflops += result.stats.flops as f64 / 1e6;
                 filter_mflops += result.stats.filter_flops as f64 / 1e6;
+                let spec = spec_of(resolved, id);
+                let acc = &mut fam_accum[spec];
+                acc.problems += 1;
+                acc.iterations += result.stats.iterations;
+                acc.solve_secs += result.stats.secs;
+                acc.max_residual = acc.max_residual.max(worst);
                 if let Ok(writer) = writer_res.as_mut() {
                     if write_err.is_none() {
                         let t_write = Instant::now();
-                        match writer.write_record(id, run, &result) {
+                        match writer.write_record(id, run, &resolved[spec].name, &result) {
                             Ok(()) => count += 1,
                             Err(e) => write_err = Some(e),
                         }
@@ -425,8 +590,11 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
             for h in worker_handles {
                 h.join().map_err(|_| anyhow!("worker panicked"))??;
             }
+            if let Some(err) = sched_err.lock().unwrap().take() {
+                return Err(anyhow!("{err}"));
+            }
             if let Some(err) = producer_err.lock().unwrap().take() {
-                return Err(anyhow!(err));
+                return Err(anyhow!("{err}"));
             }
             let writer = writer_res?;
             if let Some(e) = write_err {
@@ -438,15 +606,12 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
             report.avg_iterations = iter_sum as f64 / count.max(1) as f64;
             report.total_mflops = mflops;
             report.filter_mflops = filter_mflops;
-            Ok((writer, write_secs, count))
+            Ok((writer, write_secs, count, fam_accum))
         });
 
-    let (writer, write_secs, count) = writer_out?;
-    if count != cfg.n_problems {
-        return Err(anyhow!(
-            "pipeline lost problems: wrote {count} of {}",
-            cfg.n_problems
-        ));
+    let (writer, write_secs, count, fam_accum) = writer_out?;
+    if count != n {
+        return Err(anyhow!("pipeline lost problems: wrote {count} of {n}"));
     }
 
     let mut stats = shard_stats.into_inner().unwrap();
@@ -466,6 +631,24 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
     report.write_secs = write_secs;
     report.xla_calls = stats.iter().map(|s| s.xla_calls).sum();
     report.native_fallbacks = stats.iter().map(|s| s.native_fallbacks).sum();
+    report.families = resolved
+        .iter()
+        .enumerate()
+        .map(|(i, fam)| {
+            let acc = &fam_accum[i];
+            FamilyReport {
+                family: fam.name.to_string(),
+                problems: acc.problems,
+                runs: run_spans.iter().filter(|s| s.group == i).count(),
+                iterations: acc.iterations,
+                avg_iterations: acc.iterations as f64 / acc.problems.max(1) as f64,
+                solve_secs: acc.solve_secs,
+                max_residual: acc.max_residual,
+                tol: fam.tol,
+                sort_quality: summary.group_quality.get(i).copied().unwrap_or(0.0),
+            }
+        })
+        .collect();
     report.shards = stats;
     report.total_secs = t_start.elapsed().as_secs_f64();
 
@@ -477,14 +660,33 @@ pub fn generate_dataset(cfg: &GenConfig, out_dir: &Path) -> Result<GenReport> {
 }
 
 /// Convenience: generate the problems of a config in memory (no solving,
-/// no IO) — used by benches and tests.
+/// no IO) against the built-in registry — used by benches and tests.
+/// Panics on an invalid config (unknown family names); use
+/// [`generate_problems_with_registry`] for fallible resolution.
 pub fn generate_problems(cfg: &GenConfig) -> Vec<Problem> {
-    operators::generate(cfg.kind, cfg.gen_options(), cfg.n_problems, cfg.seed)
+    generate_problems_with_registry(cfg, &FamilyRegistry::builtin())
+        .expect("config resolves against the builtin registry")
+}
+
+/// [`generate_problems`] against an explicit registry. Forks the master
+/// RNG once per problem id, exactly like the pipeline's producer stage.
+pub fn generate_problems_with_registry(
+    cfg: &GenConfig,
+    registry: &FamilyRegistry,
+) -> Result<Vec<Problem>> {
+    let resolved = cfg.resolve(registry)?;
+    let mut out = Vec::with_capacity(cfg.n_problems());
+    generate_in_order(&resolved, cfg.seed, |_fam, p| {
+        out.push(p);
+        true
+    })?;
+    Ok(out)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::config::FamilySpec;
     use crate::coordinator::dataset::DatasetReader;
     use crate::linalg::symeig::sym_eig;
     use crate::sort::SortMethod;
@@ -497,11 +699,10 @@ mod tests {
 
     fn small_cfg() -> GenConfig {
         GenConfig {
-            kind: crate::operators::OperatorKind::Helmholtz,
+            families: vec![FamilySpec::new("helmholtz", 6)],
             grid: 8,
-            n_problems: 6,
             n_eigs: 4,
-            tol: 1e-8,
+            tol: Some(1e-8),
             seed: 11,
             shards: 2,
             channel_capacity: 2,
@@ -517,10 +718,15 @@ mod tests {
         let report = generate_dataset(&cfg, &dir).unwrap();
         assert_eq!(report.n_problems, 6);
         assert!(report.all_converged, "{report:?}");
-        assert!(report.max_residual <= cfg.tol * 10.0);
+        assert!(report.max_residual <= 1e-8 * 10.0);
         assert!(report.avg_solve_secs > 0.0);
         assert_eq!(report.sort_scope, "global");
         assert!(report.sort_quality > 0.0);
+        // The one-family rollup covers the whole run.
+        assert_eq!(report.families.len(), 1);
+        assert_eq!(report.families[0].family, "helmholtz");
+        assert_eq!(report.families[0].problems, 6);
+        assert_eq!(report.families[0].tol, 1e-8);
 
         // Read back and validate against dense references.
         let problems = generate_problems(&cfg);
@@ -596,12 +802,13 @@ mod tests {
         let report = generate_dataset(&cfg, &dir).unwrap();
         assert!(!report.shards.is_empty());
         let total: usize = report.shards.iter().map(|s| s.problems).sum();
-        assert_eq!(total, cfg.n_problems);
+        assert_eq!(total, cfg.n_problems());
         let solve_sum: f64 = report.shards.iter().map(|s| s.solve_secs).sum();
         assert!((solve_sum - report.solve_secs).abs() < 1e-9);
-        // Runs are listed in boundary order.
+        // Runs are listed in boundary order and tagged with the family.
         for (r, s) in report.shards.iter().enumerate() {
             assert_eq!(s.run, r);
+            assert_eq!(s.family, "helmholtz");
             assert!(s.iterations >= s.problems, "at least one iter per solve");
         }
         // Handoffs are off by default: every run starts cold.
@@ -631,6 +838,7 @@ mod tests {
         let mut per_run = vec![0usize; 3];
         for rec in reader.index() {
             assert!(rec.shard < 3);
+            assert_eq!(rec.family, "helmholtz");
             per_run[rec.shard] += 1;
         }
         assert_eq!(per_run, vec![2, 2, 2]);
@@ -721,14 +929,28 @@ mod tests {
         let v = crate::util::json::parse(&text).unwrap();
         assert!(v.get("config").is_some());
         assert!(v.get("report").is_some());
+        let fams = v
+            .get("config")
+            .unwrap()
+            .get("families")
+            .and_then(crate::util::json::Value::as_arr)
+            .unwrap();
         assert_eq!(
-            v.get("config")
-                .unwrap()
-                .get("kind")
+            fams[0]
+                .get("family")
                 .and_then(crate::util::json::Value::as_str),
             Some("helmholtz")
         );
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_family_fails_before_spawning_the_pipeline() {
+        let dir = tmpdir("unknown");
+        let cfg = GenConfig::single("martian", 3);
+        let err = generate_dataset(&cfg, &dir).unwrap_err().to_string();
+        assert!(err.contains("unknown operator family"), "{err}");
+        assert!(!dir.exists(), "nothing written for an invalid config");
     }
 
     #[test]

@@ -23,18 +23,33 @@
 //! detected cold start. [`SortScope::Shard`] reproduces the old
 //! per-chunk behaviour for ablation.
 //!
+//! ## Family boundaries
+//!
+//! Mixed-family datasets ([`crate::operators::OperatorFamily`],
+//! `GenConfig.families`) are scheduled **per family group**: sort keys
+//! are only comparable within one family
+//! ([`crate::operators::SortKey::try_dist2`] is undefined across
+//! shapes), so the greedy order is built inside each [`FamilyGroup`],
+//! no similarity run ever spans two groups, and no seam — hence no
+//! warm-start handoff — crosses a family boundary. Mixed key shapes
+//! *inside* one group (a buggy custom family) are a hard
+//! [`build_schedule`] error, not a worker-thread panic.
+//!
 //! Scheduling is pure and deterministic: given the same signatures and
 //! knobs it always emits the same [`Schedule`], regardless of the
 //! arrival order of the streamed signatures.
 
+use crate::anyhow;
 use crate::sort::{adjacent_quality, greedy};
+use crate::util::error::Result;
 use crate::util::json::Value;
 
 /// Where the similarity sort runs: over the whole dataset or per shard.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SortScope {
-    /// One global greedy order, partitioned into contiguous runs — the
-    /// scheduler's headline mode (keeps sort quality for any `shards`).
+    /// One global greedy order per family group, partitioned into
+    /// contiguous runs — the scheduler's headline mode (keeps sort
+    /// quality for any `shards`).
     Global,
     /// Sort independently inside each generation-order chunk — the
     /// paper-§D.6 / pre-scheduler behaviour (the ablation baseline).
@@ -60,6 +75,40 @@ impl SortScope {
     }
 }
 
+/// One family's contiguous block of the generation order — the unit the
+/// scheduler partitions before any distance computation. A single-family
+/// dataset is one group spanning `0..n` ([`FamilyGroup::whole`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FamilyGroup {
+    /// Family name (error messages + per-family reporting).
+    pub family: String,
+    /// First problem id of the block.
+    pub start: usize,
+    /// One past the last problem id of the block.
+    pub end: usize,
+}
+
+impl FamilyGroup {
+    /// The single group covering all `n` problems of a one-family run.
+    pub fn whole(family: &str, n: usize) -> Vec<FamilyGroup> {
+        vec![FamilyGroup {
+            family: family.to_string(),
+            start: 0,
+            end: n,
+        }]
+    }
+
+    /// Problems in the group.
+    pub fn len(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// True for an empty group (rejected by the layout).
+    pub fn is_empty(&self) -> bool {
+        self.start >= self.end
+    }
+}
+
 /// One worker's similarity run: a contiguous slice of the schedule's
 /// solve order.
 #[derive(Debug, Clone, PartialEq)]
@@ -67,6 +116,8 @@ pub struct Run {
     /// Run index (also the shard id recorded per problem in the
     /// manifest).
     pub index: usize,
+    /// Index into the schedule's family groups this run belongs to.
+    pub group: usize,
     /// Problem ids (generation order) in solve order.
     pub order: Vec<usize>,
     /// First problem warm-starts from the previous run's tail eigenpairs
@@ -76,7 +127,7 @@ pub struct Run {
     pub warm_out: bool,
 }
 
-/// One seam between consecutive runs of the global order.
+/// One seam between consecutive runs of a family group's order.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Boundary {
     /// Run ending at the seam.
@@ -115,15 +166,20 @@ pub struct Schedule {
     /// Scope it was built with.
     pub scope: SortScope,
     /// The similarity runs, in boundary order (run `k+1` may hand off
-    /// from run `k`).
+    /// from run `k` when both belong to the same family group).
     pub runs: Vec<Run>,
-    /// Seam reports, `runs.len() − 1` entries (empty for
-    /// [`SortScope::Shard`], whose runs are independent).
+    /// Seam reports — one per pair of consecutive runs *within a family
+    /// group* (empty for [`SortScope::Shard`], whose runs are
+    /// independent). Family boundaries have no seam: a handoff never
+    /// crosses families.
     pub boundaries: Vec<Boundary>,
     /// Sort quality: sum of adjacent Euclidean signature distances
     /// *within* runs (0.0 without signatures). Lower = better
     /// warm-start locality; comparable across scopes on the same seed.
     pub sort_quality: f64,
+    /// Per-family-group sort quality, indexed like the `groups` passed
+    /// to [`build_schedule`] (sums to `sort_quality`).
+    pub group_quality: Vec<f64>,
     /// `assignment[id]` = run index solving problem `id`.
     pub assignment: Vec<usize>,
 }
@@ -142,18 +198,66 @@ impl Schedule {
 
 /// Run partition arithmetic shared by the scheduler and the pipeline's
 /// worker spawn: `n` problems over `shards` workers → (`chunk` = run
-/// capacity, `n_runs` = number of non-empty runs).
+/// capacity, `n_runs` = number of non-empty runs). Single-group
+/// arithmetic; mixed-family layouts add a cut at every family boundary
+/// (see [`run_layout`]).
 pub fn run_span(n: usize, shards: usize) -> (usize, usize) {
     assert!(n >= 1);
     let chunk = n.div_ceil(shards.max(1));
     (chunk, n.div_ceil(chunk))
 }
 
+/// One run's generation-order slice in the run layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunSpan {
+    /// Family-group index the run belongs to.
+    pub group: usize,
+    /// First problem id of the slice.
+    pub start: usize,
+    /// One past the last problem id of the slice.
+    pub end: usize,
+}
+
+/// Deterministic run layout for `n` problems over `shards` workers,
+/// respecting family-group boundaries: the run capacity is the global
+/// `chunk = ⌈n/shards⌉`, and each group's block is cut independently —
+/// so no run spans two groups, at the cost of up to `groups.len() − 1`
+/// extra runs. For one group this is exactly [`run_span`].
+///
+/// The layout is shared by both scopes: shard scope solves these
+/// generation-order slices directly; global scope cuts each group's
+/// greedy order into pieces of the same sizes.
+pub fn run_layout(n: usize, shards: usize, groups: &[FamilyGroup]) -> (usize, Vec<RunSpan>) {
+    assert!(n >= 1, "need at least one problem");
+    assert!(!groups.is_empty(), "need at least one family group");
+    let (chunk, _) = run_span(n, shards);
+    let mut spans = Vec::new();
+    let mut next = 0usize;
+    for (gi, g) in groups.iter().enumerate() {
+        assert_eq!(g.start, next, "family groups must tile 0..n contiguously");
+        assert!(!g.is_empty(), "family group {gi} ({}) is empty", g.family);
+        let mut s = g.start;
+        while s < g.end {
+            let e = g.end.min(s + chunk);
+            spans.push(RunSpan {
+                group: gi,
+                start: s,
+                end: e,
+            });
+            s = e;
+        }
+        next = g.end;
+    }
+    assert_eq!(next, n, "family groups must cover 0..n");
+    (chunk, spans)
+}
+
 /// Order one generation-order chunk of the problem set: the greedy
 /// scan over the chunk's own signatures (`keys`, local indices), or
 /// identity order without signatures. `start` is the chunk's global
 /// offset, `len` its size. Returns the solve order in *global* ids and
-/// the chunk's sort quality.
+/// the chunk's sort quality; errors on mismatched key shapes within the
+/// chunk (see [`greedy::check_keys`]).
 ///
 /// This is the one per-chunk ordering kernel — shared by
 /// [`build_schedule`]'s shard arm and the pipeline's streaming shard
@@ -164,84 +268,107 @@ pub fn order_chunk(
     len: usize,
     scratch: &mut greedy::GreedyScratch,
     order_buf: &mut Vec<usize>,
-) -> (Vec<usize>, f64) {
+) -> Result<(Vec<usize>, f64)> {
     match keys {
         Some(k) => {
             assert_eq!(k.len(), len, "one signature per chunk problem");
+            greedy::check_keys(k)?;
             greedy::greedy_order_in(k, scratch, order_buf);
             let quality = adjacent_quality(k, order_buf);
-            (order_buf.iter().map(|&local| start + local).collect(), quality)
+            Ok((
+                order_buf.iter().map(|&local| start + local).collect(),
+                quality,
+            ))
         }
-        None => ((start..start + len).collect(), 0.0),
+        None => Ok(((start..start + len).collect(), 0.0)),
     }
 }
 
-/// Build the solve schedule for `n` problems.
+/// Build the solve schedule for `n` problems partitioned into the given
+/// family groups (one group spanning `0..n` for single-family runs —
+/// [`FamilyGroup::whole`]).
 ///
 /// `keys[id]` is problem `id`'s signature (`None` for
 /// [`crate::sort::SortMethod::None`]: generation order, no distances).
 /// `handoff_threshold` grants a boundary handoff when the seam's
 /// Euclidean signature distance is `<=` the threshold (`None` disables
 /// handoffs — every run starts cold and solves fully in parallel;
-/// `Some(f64::INFINITY)` always hands off, which chains every run and
-/// serializes the solve stage at maximal warm-start quality).
+/// `Some(f64::INFINITY)` always hands off, which chains every family
+/// group's runs and serializes its solve stage at maximal warm-start
+/// quality). Seams exist only *within* a family group; a handoff never
+/// crosses a family boundary.
+///
+/// Errors if any group's keys disagree in length (mixed sort-key shapes
+/// inside one family — a broken [`crate::operators::OperatorFamily`]
+/// impl), naming the offending family.
 pub fn build_schedule(
     keys: Option<&[Vec<f64>]>,
     n: usize,
     scope: SortScope,
     shards: usize,
     handoff_threshold: Option<f64>,
-) -> Schedule {
+    groups: &[FamilyGroup],
+) -> Result<Schedule> {
     if let Some(k) = keys {
         assert_eq!(k.len(), n, "one signature per problem");
     }
-    let (chunk, n_runs) = run_span(n, shards);
+    let (_, spans) = run_layout(n, shards, groups);
     let mut scratch = greedy::GreedyScratch::default();
-    let mut order_buf: Vec<usize> = Vec::with_capacity(chunk);
+    let mut order_buf: Vec<usize> = Vec::new();
 
-    let mut runs: Vec<Run> = Vec::with_capacity(n_runs);
-    let mut sort_quality = 0.0;
+    let mut runs: Vec<Run> = Vec::with_capacity(spans.len());
+    let mut group_quality = vec![0.0f64; groups.len()];
     match scope {
         SortScope::Global => {
-            // One greedy order over all N signatures…
-            let global: Vec<usize> = match keys {
-                Some(k) => {
-                    let mut o = Vec::with_capacity(n);
-                    greedy::greedy_order_in(k, &mut scratch, &mut o);
-                    o
+            // One greedy order per family group, cut into the group's
+            // spans (piece sizes match the generation-order layout).
+            let mut span_it = spans.iter().peekable();
+            for (gi, g) in groups.iter().enumerate() {
+                let group_keys = keys.map(|k| &k[g.start..g.end]);
+                let order: Vec<usize> = match group_keys {
+                    Some(k) => {
+                        greedy::check_keys(k)
+                            .map_err(|e| anyhow!("family {:?}: {e}", g.family))?;
+                        greedy::greedy_order_in(k, &mut scratch, &mut order_buf);
+                        order_buf.iter().map(|&local| g.start + local).collect()
+                    }
+                    None => (g.start..g.end).collect(),
+                };
+                let mut offset = 0usize;
+                while span_it.peek().is_some_and(|s| s.group == gi) {
+                    let span = span_it.next().unwrap();
+                    let piece = &order[offset..offset + (span.end - span.start)];
+                    offset += piece.len();
+                    if let Some(k) = keys {
+                        group_quality[gi] += adjacent_quality(k, piece);
+                    }
+                    runs.push(Run {
+                        index: runs.len(),
+                        group: gi,
+                        order: piece.to_vec(),
+                        warm_in: false,
+                        warm_out: false,
+                    });
                 }
-                None => (0..n).collect(),
-            };
-            // …cut into contiguous runs.
-            for r in 0..n_runs {
-                let span = &global[r * chunk..n.min((r + 1) * chunk)];
-                if let Some(k) = keys {
-                    sort_quality += adjacent_quality(k, span);
-                }
-                runs.push(Run {
-                    index: r,
-                    order: span.to_vec(),
-                    warm_in: false,
-                    warm_out: false,
-                });
+                debug_assert_eq!(offset, g.len());
             }
         }
         SortScope::Shard => {
             // Generation-order chunks, each sorted independently — the
-            // pre-scheduler behaviour.
-            for r in 0..n_runs {
-                let start = r * chunk;
-                let end = n.min(start + chunk);
+            // pre-scheduler behaviour (family boundaries still cut).
+            for span in &spans {
                 let (order, quality) = order_chunk(
-                    keys.map(|k| &k[start..end]),
-                    start,
-                    end - start,
+                    keys.map(|k| &k[span.start..span.end]),
+                    span.start,
+                    span.end - span.start,
                     &mut scratch,
                     &mut order_buf,
-                );
-                sort_quality += quality;
+                )
+                .map_err(|e| anyhow!("family {:?}: {e}", groups[span.group].family))?;
+                group_quality[span.group] += quality;
                 runs.push(Run {
-                    index: r,
+                    index: runs.len(),
+                    group: span.group,
                     order,
                     warm_in: false,
                     warm_out: false,
@@ -251,9 +378,14 @@ pub fn build_schedule(
     }
 
     // Seam decisions (global scope only: shard runs are independent).
+    // Seams exist only between consecutive runs of the same family
+    // group — a warm-start handoff never crosses a family boundary.
     let mut boundaries = Vec::new();
     if scope == SortScope::Global {
-        for r in 1..n_runs {
+        for r in 1..runs.len() {
+            if runs[r - 1].group != runs[r].group {
+                continue; // family boundary: no seam, detected cold start
+            }
             let tail = *runs[r - 1].order.last().unwrap();
             let head = runs[r].order[0];
             let distance = match keys {
@@ -287,13 +419,14 @@ pub fn build_schedule(
             assignment[id] = run.index;
         }
     }
-    Schedule {
+    Ok(Schedule {
         scope,
         runs,
         boundaries,
-        sort_quality,
+        sort_quality: group_quality.iter().sum(),
+        group_quality,
         assignment,
-    }
+    })
 }
 
 #[cfg(test)]
@@ -306,6 +439,10 @@ mod tests {
         (0..n)
             .map(|_| (0..d).map(|_| rng.normal()).collect())
             .collect()
+    }
+
+    fn whole(n: usize) -> Vec<FamilyGroup> {
+        FamilyGroup::whole("test", n)
     }
 
     fn assert_partition(s: &Schedule, n: usize) {
@@ -330,9 +467,45 @@ mod tests {
     }
 
     #[test]
+    fn run_layout_single_group_matches_run_span() {
+        for (n, shards) in [(10usize, 3usize), (6, 2), (1, 8), (5, 1), (8, 8)] {
+            let (chunk, n_runs) = run_span(n, shards);
+            let (c2, spans) = run_layout(n, shards, &whole(n));
+            assert_eq!(chunk, c2);
+            assert_eq!(spans.len(), n_runs);
+            assert_eq!(spans[0].start, 0);
+            assert_eq!(spans.last().unwrap().end, n);
+        }
+    }
+
+    #[test]
+    fn run_layout_cuts_at_family_boundaries() {
+        let groups = vec![
+            FamilyGroup {
+                family: "a".into(),
+                start: 0,
+                end: 5,
+            },
+            FamilyGroup {
+                family: "b".into(),
+                start: 5,
+                end: 12,
+            },
+        ];
+        // chunk = ceil(12/3) = 4 → a: [0,4)[4,5), b: [5,9)[9,12).
+        let (chunk, spans) = run_layout(12, 3, &groups);
+        assert_eq!(chunk, 4);
+        let got: Vec<(usize, usize, usize)> =
+            spans.iter().map(|s| (s.group, s.start, s.end)).collect();
+        assert_eq!(got, vec![(0, 0, 4), (0, 4, 5), (1, 5, 9), (1, 9, 12)]);
+    }
+
+    #[test]
     fn global_single_shard_is_the_plain_greedy_order() {
         let keys = random_keys(14, 5, 1);
-        let s = build_schedule(Some(keys.as_slice()), 14, SortScope::Global, 1, None);
+        let s =
+            build_schedule(Some(keys.as_slice()), 14, SortScope::Global, 1, None, &whole(14))
+                .unwrap();
         assert_eq!(s.runs.len(), 1);
         assert_eq!(s.runs[0].order, greedy::greedy_order(&keys));
         assert!(s.boundaries.is_empty());
@@ -345,7 +518,15 @@ mod tests {
             for n in [1usize, 2, 7, 16, 23] {
                 for shards in [1usize, 2, 3, 5, 40] {
                     let keys = random_keys(n, 3, (n * 100 + shards) as u64);
-                    let s = build_schedule(Some(keys.as_slice()), n, scope, shards, None);
+                    let s = build_schedule(
+                        Some(keys.as_slice()),
+                        n,
+                        scope,
+                        shards,
+                        None,
+                        &whole(n),
+                    )
+                    .unwrap();
                     assert_partition(&s, n);
                     let (chunk, n_runs) = run_span(n, shards);
                     assert_eq!(s.runs.len(), n_runs);
@@ -357,7 +538,8 @@ mod tests {
                     assert_eq!(s.warm_handoffs(), 0);
                     assert_eq!(s.cold_runs(), n_runs);
                     // And without keys (SortMethod::None).
-                    let s = build_schedule(None, n, scope, shards, Some(1.0));
+                    let s =
+                        build_schedule(None, n, scope, shards, Some(1.0), &whole(n)).unwrap();
                     assert_partition(&s, n);
                     assert_eq!(s.sort_quality, 0.0);
                     assert_eq!(s.warm_handoffs(), 0, "no signatures, no handoffs");
@@ -369,7 +551,8 @@ mod tests {
     #[test]
     fn shard_scope_sorts_within_generation_chunks() {
         let keys = random_keys(9, 2, 7);
-        let s = build_schedule(Some(keys.as_slice()), 9, SortScope::Shard, 3, None);
+        let s = build_schedule(Some(keys.as_slice()), 9, SortScope::Shard, 3, None, &whole(9))
+            .unwrap();
         assert_eq!(s.runs.len(), 3);
         for (r, run) in s.runs.iter().enumerate() {
             // Each run permutes its own contiguous id block…
@@ -393,7 +576,9 @@ mod tests {
             SortScope::Global,
             4,
             Some(f64::INFINITY),
-        );
+            &whole(12),
+        )
+        .unwrap();
         assert_eq!(s.boundaries.len(), 3);
         assert_eq!(s.warm_handoffs(), 3);
         assert_eq!(s.cold_runs(), 1); // only run 0
@@ -413,7 +598,15 @@ mod tests {
             keys.push(vec![i as f64 * 0.01]);
             keys.push(vec![1000.0 + i as f64 * 0.01]);
         }
-        let s = build_schedule(Some(keys.as_slice()), 8, SortScope::Global, 4, Some(1.0));
+        let s = build_schedule(
+            Some(keys.as_slice()),
+            8,
+            SortScope::Global,
+            4,
+            Some(1.0),
+            &whole(8),
+        )
+        .unwrap();
         assert_eq!(s.boundaries.len(), 3);
         let cold: Vec<&Boundary> = s.boundaries.iter().filter(|b| !b.warm).collect();
         assert_eq!(cold.len(), 1, "{:?}", s.boundaries);
@@ -433,8 +626,10 @@ mod tests {
             let c = if rng.normal() > 0.0 { 0.0 } else { 50.0 };
             keys.push(vec![c + rng.normal()]);
         }
-        let g = build_schedule(Some(keys.as_slice()), 24, SortScope::Global, 4, None);
-        let p = build_schedule(Some(keys.as_slice()), 24, SortScope::Shard, 4, None);
+        let g = build_schedule(Some(keys.as_slice()), 24, SortScope::Global, 4, None, &whole(24))
+            .unwrap();
+        let p = build_schedule(Some(keys.as_slice()), 24, SortScope::Shard, 4, None, &whole(24))
+            .unwrap();
         assert!(
             g.sort_quality <= p.sort_quality * 1.05,
             "global {} vs shard {}",
@@ -446,11 +641,89 @@ mod tests {
     #[test]
     fn deterministic_given_same_inputs() {
         let keys = random_keys(15, 3, 3);
-        let a = build_schedule(Some(keys.as_slice()), 15, SortScope::Global, 4, Some(2.0));
-        let b = build_schedule(Some(keys.as_slice()), 15, SortScope::Global, 4, Some(2.0));
+        let a = build_schedule(
+            Some(keys.as_slice()),
+            15,
+            SortScope::Global,
+            4,
+            Some(2.0),
+            &whole(15),
+        )
+        .unwrap();
+        let b = build_schedule(
+            Some(keys.as_slice()),
+            15,
+            SortScope::Global,
+            4,
+            Some(2.0),
+            &whole(15),
+        )
+        .unwrap();
         assert_eq!(a.runs, b.runs);
         assert_eq!(a.boundaries, b.boundaries);
         assert_eq!(a.sort_quality, b.sort_quality);
+    }
+
+    #[test]
+    fn mixed_families_never_share_a_run_or_a_handoff() {
+        // Two families with *different key shapes* — exactly what a
+        // mixed-family dataset streams: group partitioning must keep the
+        // scans apart (no cross-shape distance is ever computed).
+        let mut keys: Vec<Vec<f64>> = random_keys(7, 4, 11);
+        keys.extend(random_keys(6, 2, 12));
+        let groups = vec![
+            FamilyGroup {
+                family: "a".into(),
+                start: 0,
+                end: 7,
+            },
+            FamilyGroup {
+                family: "b".into(),
+                start: 7,
+                end: 13,
+            },
+        ];
+        for scope in [SortScope::Global, SortScope::Shard] {
+            let s = build_schedule(
+                Some(keys.as_slice()),
+                13,
+                scope,
+                3,
+                Some(f64::INFINITY),
+                &groups,
+            )
+            .unwrap();
+            assert_partition(&s, 13);
+            for run in &s.runs {
+                // Every run's ids stay inside its group's block.
+                let g = &groups[run.group];
+                assert!(run.order.iter().all(|&id| id >= g.start && id < g.end));
+            }
+            // Seams (and therefore handoffs) never cross groups.
+            for b in &s.boundaries {
+                assert_eq!(s.runs[b.from_run].group, s.runs[b.to_run].group);
+            }
+            if scope == SortScope::Global {
+                // Infinite threshold: every within-family seam is warm,
+                // and each family still starts exactly one cold run.
+                assert_eq!(s.cold_runs(), 2, "{:?}", s.boundaries);
+            }
+            assert_eq!(s.group_quality.len(), 2);
+            assert!((s.group_quality.iter().sum::<f64>() - s.sort_quality).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn mismatched_shapes_inside_a_group_are_a_hard_error() {
+        let mut keys = random_keys(4, 3, 5);
+        keys[2] = vec![1.0]; // wrong length inside the group
+        for scope in [SortScope::Global, SortScope::Shard] {
+            let err = build_schedule(Some(keys.as_slice()), 4, scope, 2, None, &whole(4))
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains("sort-key length mismatch"), "{err}");
+            assert!(err.contains("test"), "error names the family: {err}");
+        }
     }
 
     #[test]

@@ -141,7 +141,13 @@ pub fn solve_sequence_in(
     let mut results = Vec::with_capacity(problems.len());
     let mut chain = Chain::new();
     for &idx in &sort.order {
-        results.push(chain.solve_next(&problems[idx].matrix, opts, backend, ws));
+        results.push(chain.solve_next_for(
+            &problems[idx].family,
+            &problems[idx].matrix,
+            opts,
+            backend,
+            ws,
+        ));
     }
     SequenceResult::new(results, sort)
 }
@@ -153,13 +159,25 @@ pub fn solve_sequence_in(
 /// The chain carries the warm start between consecutive solves and
 /// counts cold starts, so warm-start hit rate is a first-class, measured
 /// quantity rather than an emergent property of the loop.
+///
+/// Chains are *family-aware*: a warm start is only meaningful between
+/// problems of one operator family (and one matrix dimension), so
+/// [`Chain::solve_next_for`] resets the carried subspace whenever the
+/// family tag or the dimension changes. The pipeline's scheduler already
+/// keeps runs inside family boundaries; the reset is the chain-level
+/// guarantee for callers that sequence mixed problems directly.
 #[derive(Debug, Default)]
 pub struct Chain {
     warm: Option<WarmStart>,
+    /// Family tag of the last solve (what the reset compares against).
+    family: Option<std::sync::Arc<str>>,
     /// Solves that started cold (no inherited subspace).
     pub cold_starts: usize,
     /// Solves that inherited a subspace (chained or handed off).
     pub warm_solves: usize,
+    /// Times the carried subspace was dropped because the family (or
+    /// matrix dimension) changed mid-chain.
+    pub family_resets: usize,
 }
 
 impl Chain {
@@ -172,6 +190,44 @@ impl Chain {
     /// `tail` (the previous run's final eigenpairs).
     pub fn adopt(&mut self, tail: WarmStart) {
         self.warm = Some(tail);
+    }
+
+    /// Drop any carried subspace and family tag: the next solve starts
+    /// cold (the explicit family-boundary reset).
+    pub fn reset(&mut self) {
+        self.warm = None;
+        self.family = None;
+    }
+
+    /// [`Chain::solve_next`] with a family tag: if the tag (or the
+    /// matrix dimension) differs from the previous solve's, the carried
+    /// subspace is dropped first — warm starts never cross a family
+    /// boundary. Identical to `solve_next` within one family.
+    pub fn solve_next_for(
+        &mut self,
+        family: &std::sync::Arc<str>,
+        a: &crate::sparse::CsrMatrix,
+        opts: &ScsfOptions,
+        backend: &mut dyn FilterBackend,
+        ws: &mut Workspace,
+    ) -> EigResult {
+        let family_changed = self
+            .family
+            .as_ref()
+            .is_some_and(|prev| prev.as_ref() != family.as_ref());
+        let dim_changed = self
+            .warm
+            .as_ref()
+            .is_some_and(|w| w.vectors.rows() != a.rows());
+        // Only an actually-carried subspace can be dropped; a family
+        // switch with nothing carried (e.g. the cold-start ablation) is
+        // not a reset.
+        if self.warm.is_some() && (family_changed || dim_changed) {
+            self.warm = None;
+            self.family_resets += 1;
+        }
+        self.family = Some(family.clone());
+        self.solve_next(a, opts, backend, ws)
     }
 
     /// True if the *next* solve would start cold — the chain's
@@ -354,6 +410,95 @@ mod tests {
         }
         assert_eq!(c.cold_starts, 3);
         assert_eq!(c.warm_solves, 0);
+    }
+
+    #[test]
+    fn chain_resets_across_family_boundaries() {
+        // A mixed sequence: warm starts must not leak across the family
+        // switch (or across a dimension change), and the reset is
+        // counted.
+        let o = {
+            let mut o = opts(3, 1e-8);
+            o.sort = crate::sort::SortMethod::None;
+            o
+        };
+        let gen_opts = GenOptions {
+            grid: 8,
+            ..Default::default()
+        };
+        let helm = operators::generate(OperatorKind::Helmholtz, gen_opts, 2, 3);
+        let pois = operators::generate(OperatorKind::Poisson, gen_opts, 2, 4);
+        let mut backend = crate::eig::chebyshev::NativeFilter;
+        let mut ws = Workspace::new(1);
+        let mut chain = Chain::new();
+        for p in helm.iter().chain(&pois) {
+            chain.solve_next_for(&p.family, &p.matrix, &o, &mut backend, &mut ws);
+        }
+        assert_eq!(chain.family_resets, 1, "one reset at the family switch");
+        assert_eq!(chain.cold_starts, 2, "each family starts cold");
+        assert_eq!(chain.warm_solves, 2);
+
+        // Within one family, solve_next_for is exactly solve_next.
+        let mut tagged = Chain::new();
+        let mut plain = Chain::new();
+        let mut r_tagged = Vec::new();
+        let mut r_plain = Vec::new();
+        for p in &helm {
+            r_tagged.push(tagged.solve_next_for(&p.family, &p.matrix, &o, &mut backend, &mut ws));
+            r_plain.push(plain.solve_next(&p.matrix, &o, &mut backend, &mut ws));
+        }
+        assert_eq!(tagged.family_resets, 0);
+        for (a, b) in r_tagged.iter().zip(&r_plain) {
+            assert_eq!(a.values, b.values);
+            assert_eq!(a.vectors, b.vectors);
+        }
+
+        // An explicit reset also drops the carried subspace.
+        let mut c = Chain::new();
+        c.solve_next_for(&helm[0].family, &helm[0].matrix, &o, &mut backend, &mut ws);
+        assert!(!c.next_is_cold(&o));
+        c.reset();
+        assert!(c.next_is_cold(&o));
+
+        // Cold ablation: nothing is carried, so a family switch drops
+        // nothing and the reset counter stays at zero.
+        let mut cold_opts = o;
+        cold_opts.warm_start = false;
+        let mut cc = Chain::new();
+        for p in helm.iter().chain(&pois) {
+            cc.solve_next_for(&p.family, &p.matrix, &cold_opts, &mut backend, &mut ws);
+        }
+        assert_eq!(cc.family_resets, 0);
+        assert_eq!(cc.cold_starts, 4);
+    }
+
+    #[test]
+    fn mixed_family_sequence_solves_with_no_sort() {
+        // solve_sequence over a mixed problem set (SortMethod::None —
+        // cross-family keys are not comparable): every solve converges
+        // and warm starts reset at the family boundary.
+        let gen_opts = GenOptions {
+            grid: 8,
+            ..Default::default()
+        };
+        let mut ps = operators::generate(OperatorKind::Helmholtz, gen_opts, 2, 5);
+        for (i, mut p) in operators::generate(OperatorKind::Poisson, gen_opts, 2, 6)
+            .into_iter()
+            .enumerate()
+        {
+            p.id = 2 + i;
+            ps.push(p);
+        }
+        let mut o = opts(3, 1e-8);
+        o.sort = crate::sort::SortMethod::None;
+        let seq = solve_sequence(&ps, &o);
+        assert!(seq.all_converged());
+        for (pos, &pid) in seq.order.iter().enumerate() {
+            let want = sym_eig(&ps[pid].matrix.to_dense());
+            for (got, w) in seq.results[pos].values.iter().zip(&want.values[..3]) {
+                assert!((got - w).abs() / w.abs().max(1.0) < 1e-6);
+            }
+        }
     }
 
     #[test]

@@ -24,20 +24,26 @@
 //! ## Quickstart
 //!
 //! ```no_run
-//! use scsf::coordinator::config::{DatasetKind, GenConfig};
+//! use scsf::coordinator::config::{FamilySpec, GenConfig};
 //! use scsf::coordinator::pipeline::generate_dataset;
 //!
 //! let cfg = GenConfig {
-//!     kind: DatasetKind::Helmholtz,
+//!     // One dataset, two operator families; each family solves at its
+//!     // own paper tolerance and never shares a similarity run.
+//!     families: vec![
+//!         FamilySpec::new("helmholtz", 16),
+//!         FamilySpec::new("poisson", 16),
+//!     ],
 //!     grid: 32,            // 32x32 grid -> n = 1024
-//!     n_problems: 16,
 //!     n_eigs: 16,
-//!     tol: 1e-8,
 //!     seed: 7,
 //!     ..GenConfig::default()
 //! };
 //! let report = generate_dataset(&cfg, std::path::Path::new("/tmp/ds")).unwrap();
 //! println!("avg solve time {:.3}s", report.avg_solve_secs);
+//! for fam in &report.families {
+//!     println!("{}: {} problems", fam.family, fam.problems);
+//! }
 //! ```
 
 pub mod bench_support;

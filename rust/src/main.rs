@@ -1,47 +1,61 @@
 //! `scsf` — CLI for the SCSF eigenvalue-dataset generation framework.
 //!
 //! ```text
-//! scsf generate [--config cfg.json] [--kind helmholtz] [--grid 32]
-//!               [--n 16] [--l 16] [--tol 1e-8] [--seed 0] [--shards 2]
+//! scsf generate [--config cfg.json]
+//!               [--family name:count[:grid][:tol]]...   # repeatable
+//!               [--kind helmholtz] [--n 16]             # legacy single-family
+//!               [--grid 32] [--l 16] [--tol 1e-8] [--seed 0] [--shards 2]
 //!               [--threads 1] [--sort fft|greedy|none] [--p0 20]
 //!               [--sort-scope global|shard] [--handoff off|inf|DIST]
 //!               [--warm true|false]
 //!               [--backend native|xla] [--artifacts DIR] --out DIR
+//! scsf families                  # list registered operator families
 //! scsf repro <table1|table2|table3|table4|table5|fig3|table11|table12|
 //!             table13|table14|table17|table18|table19|table20|all>
 //!            [--scale quick|standard|paper]
 //! scsf inspect <dataset-dir>
 //! scsf default-config            # print a config template
 //! ```
+//!
+//! Mixed-family runs repeat `--family`: each spec contributes its own
+//! problem count, optional grid override, and optional tolerance
+//! override (default: the family's paper tolerance). Example:
+//!
+//! ```text
+//! scsf generate --family poisson:64 --family helmholtz:64 --out ds/
+//! scsf generate --family poisson:32:16:1e-10 --family vibration:32 --out ds/
+//! ```
 
 use scsf::bench_support::{tables, Scale};
-use scsf::util::error::Result;
-use scsf::{anyhow, bail};
-use scsf::coordinator::config::{Backend, GenConfig};
+use scsf::coordinator::config::{Backend, FamilySpec, GenConfig};
 use scsf::coordinator::dataset::DatasetReader;
 use scsf::coordinator::pipeline::generate_dataset;
-use scsf::operators::OperatorKind;
+use scsf::operators::FamilyRegistry;
 use scsf::sort::SortMethod;
+use scsf::util::error::Result;
+use scsf::{anyhow, bail};
 use std::collections::HashMap;
 use std::path::Path;
 
-/// Tiny flag parser: `--key value` pairs plus positional args.
+/// Tiny flag parser: `--key value` pairs (repeatable) plus positional
+/// args. `get` returns the last occurrence; `get_all` returns every
+/// occurrence in order (the `--family` flag is repeatable).
 struct Args {
     positional: Vec<String>,
-    flags: HashMap<String, String>,
+    flags: HashMap<String, Vec<String>>,
 }
 
 impl Args {
     fn parse(raw: Vec<String>) -> Result<Self> {
         let mut positional = Vec::new();
-        let mut flags = HashMap::new();
+        let mut flags: HashMap<String, Vec<String>> = HashMap::new();
         let mut it = raw.into_iter();
         while let Some(a) = it.next() {
             if let Some(key) = a.strip_prefix("--") {
                 let val = it
                     .next()
                     .ok_or_else(|| anyhow!("flag --{key} needs a value"))?;
-                flags.insert(key.to_string(), val);
+                flags.entry(key.to_string()).or_default().push(val);
             } else {
                 positional.push(a);
             }
@@ -50,7 +64,17 @@ impl Args {
     }
 
     fn get(&self, key: &str) -> Option<&str> {
-        self.flags.get(key).map(|s| s.as_str())
+        self.flags
+            .get(key)
+            .and_then(|v| v.last())
+            .map(|s| s.as_str())
+    }
+
+    fn get_all(&self, key: &str) -> Vec<&str> {
+        self.flags
+            .get(key)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
     }
 
     fn get_usize(&self, key: &str) -> Result<Option<usize>> {
@@ -83,6 +107,15 @@ fn run() -> Result<()> {
     let args = Args::parse(argv)?;
     match cmd.as_str() {
         "generate" => cmd_generate(&args),
+        "families" => {
+            let registry = FamilyRegistry::builtin();
+            println!("registered operator families:");
+            for name in registry.names() {
+                let f = registry.get(name).unwrap();
+                println!("  {name:<16} default tol {:.0e}", f.default_tol());
+            }
+            Ok(())
+        }
         "repro" => cmd_repro(&args),
         "inspect" => cmd_inspect(&args),
         "default-config" => {
@@ -103,34 +136,93 @@ fn print_help() {
          \n\
          commands:\n\
          \x20 generate        run the dataset-generation pipeline\n\
+         \x20 families        list registered operator families + default tolerances\n\
          \x20 repro TABLE     regenerate a paper table/figure (or 'all')\n\
          \x20 inspect DIR     summarize a generated dataset\n\
          \x20 default-config  print a JSON config template\n\
+         \n\
+         mixed-family generation (repeat --family name:count[:grid][:tol]):\n\
+         \x20 scsf generate --family poisson:64 --family helmholtz:64 --out ds/\n\
+         \x20 scsf generate --family poisson:32:16:1e-10 --family vibration:32 --out ds/\n\
+         single-family shorthand (legacy flags):\n\
+         \x20 scsf generate --kind helmholtz --n 128 --grid 32 --out ds/\n\
          \n\
          see `rust/src/main.rs` docs for all flags"
     );
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
+    let registry = FamilyRegistry::builtin();
     let mut cfg = match args.get("config") {
         Some(path) => GenConfig::from_json(&std::fs::read_to_string(path)?)?,
         None => GenConfig::default(),
     };
-    if let Some(kind) = args.get("kind") {
-        cfg.kind =
-            OperatorKind::parse(kind).ok_or_else(|| anyhow!("unknown kind {kind}"))?;
+    if let Some(x) = args.get_f64("tol")? {
+        if !x.is_finite() || x <= 0.0 {
+            bail!("--tol must be a finite value > 0");
+        }
+        cfg.tol = Some(x);
+    }
+    let family_specs = args.get_all("family");
+    let kind = args.get("kind");
+    let n = args.get_usize("n")?;
+    match (family_specs.is_empty(), kind) {
+        (false, Some(_)) => {
+            bail!("--family and --kind are mutually exclusive (use repeated --family)")
+        }
+        (false, None) => {
+            if n.is_some() {
+                bail!("--n conflicts with --family (counts live in the specs)");
+            }
+            cfg.families = family_specs
+                .iter()
+                .map(|s| FamilySpec::parse(s))
+                .collect::<Result<Vec<_>>>()?;
+        }
+        (true, Some(name)) => {
+            // Legacy single-family shorthand: solve at the run tolerance
+            // (like the pre-registry CLI; default 1e-8). Never silently
+            // collapse a multi-family config file into one family.
+            registry.resolve(name)?;
+            if cfg.families.len() > 1 {
+                bail!(
+                    "--kind would discard the config's {} family specs; use --family \
+                     specs instead",
+                    cfg.families.len()
+                );
+            }
+            // Keep the config's single-spec overrides (grid/tol/GRF);
+            // only the family name and count change.
+            let mut spec = cfg.families[0].clone();
+            spec.family = name.to_string();
+            if let Some(c) = n {
+                spec.count = c;
+            }
+            cfg.families = vec![spec];
+            // Pure-CLI legacy invocations keep the historical run
+            // tolerance; a config file's tolerance semantics (including
+            // family defaults) are left alone.
+            if args.get("config").is_none() {
+                cfg.tol = Some(
+                    cfg.tol
+                        .unwrap_or(scsf::coordinator::config::FALLBACK_TOL),
+                );
+            }
+        }
+        (true, None) => {
+            if let Some(count) = n {
+                if cfg.families.len() != 1 {
+                    bail!("--n is ambiguous for a multi-family config; use --family specs");
+                }
+                cfg.families[0].count = count;
+            }
+        }
     }
     if let Some(x) = args.get_usize("grid")? {
         cfg.grid = x;
     }
-    if let Some(x) = args.get_usize("n")? {
-        cfg.n_problems = x;
-    }
     if let Some(x) = args.get_usize("l")? {
         cfg.n_eigs = x;
-    }
-    if let Some(x) = args.get_f64("tol")? {
-        cfg.tol = x;
     }
     if let Some(x) = args.get_usize("seed")? {
         cfg.seed = x as u64;
@@ -169,8 +261,7 @@ fn cmd_generate(args: &Args) -> Result<()> {
                 let t: f64 = other
                     .parse()
                     .map_err(|_| anyhow!("--handoff: bad distance {other}"))?;
-                // `!(t >= 0)` also catches NaN.
-                if !(t >= 0.0) {
+                if t.is_nan() || t < 0.0 {
                     bail!("--handoff: distance must be >= 0 (or 'inf' / 'off')");
                 }
                 Some(t)
@@ -193,12 +284,28 @@ fn cmd_generate(args: &Args) -> Result<()> {
             other => bail!("unknown backend {other}"),
         };
     }
+    // Validate family names (and tolerances) before any work happens.
+    cfg.resolve(&registry)?;
     let out = args
         .get("out")
         .ok_or_else(|| anyhow!("generate needs --out DIR"))?;
     println!("config:\n{}", cfg.to_json());
     let report = generate_dataset(&cfg, Path::new(out))?;
     println!("{}", report.summary());
+    for f in &report.families {
+        println!(
+            "  family {:<14} {:3} problems / {} runs, avg iters {:5.1}, solve {:6.2}s, \
+             max residual {:.2e} (tol {:.0e}), sort quality {:.3}",
+            f.family,
+            f.problems,
+            f.runs,
+            f.avg_iterations,
+            f.solve_secs,
+            f.max_residual,
+            f.tol,
+            f.sort_quality,
+        );
+    }
     println!("dataset written to {out}");
     Ok(())
 }
@@ -328,6 +435,24 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         worst,
         n_runs
     );
+    // Per-family breakdown (schema v2 datasets tag each record).
+    let mut families: Vec<(String, usize)> = Vec::new();
+    for r in &index {
+        let name = if r.family.is_empty() {
+            "(untagged)".to_string()
+        } else {
+            r.family.clone()
+        };
+        match families.iter_mut().find(|(f, _)| *f == name) {
+            Some((_, c)) => *c += 1,
+            None => families.push((name, 1)),
+        }
+    }
+    if families.len() > 1 || families.first().is_some_and(|(f, _)| f != "(untagged)") {
+        for (family, count) in &families {
+            println!("  family {family}: {count} records");
+        }
+    }
     // Spot check: first record's smallest eigenvalues.
     if let Some(first) = index.first() {
         let rec = reader.read(first.id)?;

@@ -18,9 +18,34 @@
 //! coefficients still enter the *sorting key*, matching the paper's
 //! statement that all six constants drive the sort.
 
-use super::{idx, GenOptions, OperatorKind, Problem, SortKey};
+use super::{idx, GenOptions, OperatorFamily, Problem, SortKey, SortKeyShape};
 use crate::rng::Xoshiro256pp;
 use crate::sparse::{CooBuilder, CsrMatrix};
+
+/// Registry name of this family.
+pub const NAME: &str = "elliptic";
+
+/// The constant-coefficient elliptic family (six sampled constants).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Elliptic;
+
+impl OperatorFamily for Elliptic {
+    fn name(&self) -> &str {
+        NAME
+    }
+
+    fn default_tol(&self) -> f64 {
+        1e-10
+    }
+
+    fn sort_key_shape(&self, _opts: &GenOptions) -> SortKeyShape {
+        SortKeyShape::Coeffs { len: 6 }
+    }
+
+    fn generate_one(&self, opts: GenOptions, id: usize, rng: &mut Xoshiro256pp) -> Problem {
+        generate(opts, id, rng)
+    }
+}
 
 /// The six constant coefficients.
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -111,7 +136,7 @@ pub fn generate(opts: GenOptions, id: usize, rng: &mut Xoshiro256pp) -> Problem 
     let matrix = assemble(opts.grid, &c);
     Problem {
         id,
-        kind: OperatorKind::Elliptic,
+        family: NAME.into(),
         matrix,
         sort_key: SortKey::Coeffs(vec![c.a11, c.a12, c.a22, c.a1, c.a2, c.a0]),
     }

@@ -8,10 +8,40 @@
 //! (row-sum) mass matrix: `A = M_l^{-1/2} K M_l^{-1/2}` — symmetric
 //! positive definite, 9-point stencil.
 
-use super::{Field, GenOptions, OperatorKind, Problem, SortKey};
+use super::{Field, GenOptions, OperatorFamily, Problem, SortKey, SortKeyShape};
 use crate::grf;
 use crate::rng::Xoshiro256pp;
 use crate::sparse::{CooBuilder, CsrMatrix};
+
+/// Registry name of this family.
+pub const NAME: &str = "helmholtz_fem";
+
+/// The Q1-FEM Helmholtz family (element-grid stiffness + wavenumber
+/// fields, lumped-mass reduction).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct HelmholtzFem;
+
+impl OperatorFamily for HelmholtzFem {
+    fn name(&self) -> &str {
+        NAME
+    }
+
+    fn default_tol(&self) -> f64 {
+        1e-8
+    }
+
+    fn sort_key_shape(&self, opts: &GenOptions) -> SortKeyShape {
+        // Coefficients live on the (g+1) × (g+1) element grid.
+        SortKeyShape::Fields {
+            count: 2,
+            p: opts.grid + 1,
+        }
+    }
+
+    fn generate_one(&self, opts: GenOptions, id: usize, rng: &mut Xoshiro256pp) -> Problem {
+        generate(opts, id, rng)
+    }
+}
 
 /// Reference-element stiffness matrix for the Q1 square element with
 /// unit coefficient (the classic 8/3-Laplacian block, h-independent).
@@ -110,7 +140,7 @@ pub fn generate(opts: GenOptions, id: usize, rng: &mut Xoshiro256pp) -> Problem 
     let matrix = assemble(g, &pf, &kf);
     Problem {
         id,
-        kind: OperatorKind::HelmholtzFem,
+        family: NAME.into(),
         matrix,
         sort_key: SortKey::Fields(vec![
             Field { p: ne, data: pf },

@@ -6,10 +6,38 @@
 //! eigenvalues coincide with the paper's smallest-in-modulus target. See
 //! `operators` module docs.
 
-use super::{poisson, Field, GenOptions, OperatorKind, Problem, SortKey};
+use super::{poisson, Field, GenOptions, OperatorFamily, Problem, SortKey, SortKeyShape};
 use crate::grf;
 use crate::rng::Xoshiro256pp;
 use crate::sparse::{CooBuilder, CsrMatrix};
+
+/// Registry name of this family.
+pub const NAME: &str = "helmholtz";
+
+/// The FDM Helmholtz family (stiffness + wavenumber GRF fields).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Helmholtz;
+
+impl OperatorFamily for Helmholtz {
+    fn name(&self) -> &str {
+        NAME
+    }
+
+    fn default_tol(&self) -> f64 {
+        1e-8
+    }
+
+    fn sort_key_shape(&self, opts: &GenOptions) -> SortKeyShape {
+        SortKeyShape::Fields {
+            count: 2,
+            p: opts.grid,
+        }
+    }
+
+    fn generate_one(&self, opts: GenOptions, id: usize, rng: &mut Xoshiro256pp) -> Problem {
+        generate(opts, id, rng)
+    }
+}
 
 /// Bounds for the GRF-sampled stiffness field `p`.
 pub const P_LO: f64 = 0.5;
@@ -47,7 +75,7 @@ pub fn generate(opts: GenOptions, id: usize, rng: &mut Xoshiro256pp) -> Problem 
     let matrix = assemble(g, &pf, &kf);
     Problem {
         id,
-        kind: OperatorKind::Helmholtz,
+        family: NAME.into(),
         matrix,
         sort_key: SortKey::Fields(vec![
             Field { p: g, data: pf },
@@ -77,7 +105,7 @@ pub fn generate_perturbed_chain(
             }
             Problem {
                 id,
-                kind: OperatorKind::Helmholtz,
+                family: NAME.into(),
                 matrix: assemble(g, &pf, &kf),
                 sort_key: SortKey::Fields(vec![
                     Field {

@@ -3,6 +3,12 @@
 //! uniformly sampled) coefficients into a sparse symmetric matrix by FDM
 //! central differences (or Q1 FEM), i.e. steps 1–3 of the paper's Figure 1.
 //!
+//! Families are *open*: each built-in is one [`family::OperatorFamily`]
+//! impl living next to its assembly code, resolved by name through a
+//! [`family::FamilyRegistry`] that also accepts user-registered
+//! families. [`OperatorKind`] remains as a convenience enum over the
+//! five built-ins; all of its behaviour delegates to the trait impls.
+//!
 //! ## Sign conventions
 //!
 //! All experiments compute the smallest-`|λ|` eigenpairs of self-adjoint
@@ -14,16 +20,23 @@
 //! DESIGN.md §Substitutions.
 
 pub mod elliptic;
+pub mod family;
 pub mod fem;
 pub mod helmholtz;
 pub mod poisson;
 pub mod vibration;
 
+pub use family::{FamilyRegistry, OperatorFamily};
+
+use crate::anyhow;
 use crate::grf::GrfParams;
 use crate::rng::Xoshiro256pp;
 use crate::sparse::CsrMatrix;
+use crate::util::error::Result;
+use std::sync::Arc;
 
-/// Which dataset family a problem belongs to.
+/// The five built-in dataset families (convenience selector; all
+/// behaviour lives in each family's [`OperatorFamily`] impl).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum OperatorKind {
     /// Generalized Poisson `−∇·(K∇u) = λu` (paper precision 1e-12).
@@ -39,37 +52,52 @@ pub enum OperatorKind {
 }
 
 impl OperatorKind {
+    /// All built-in kinds, in registry registration order.
+    pub const ALL: [OperatorKind; 5] = [
+        OperatorKind::Poisson,
+        OperatorKind::Elliptic,
+        OperatorKind::Helmholtz,
+        OperatorKind::Vibration,
+        OperatorKind::HelmholtzFem,
+    ];
+
+    /// The family impl behind this kind — the single place the enum
+    /// maps to behaviour (everything else goes through the trait).
+    pub fn family(self) -> &'static dyn OperatorFamily {
+        match self {
+            OperatorKind::Poisson => &poisson::Poisson,
+            OperatorKind::Elliptic => &elliptic::Elliptic,
+            OperatorKind::Helmholtz => &helmholtz::Helmholtz,
+            OperatorKind::Vibration => &vibration::Vibration,
+            OperatorKind::HelmholtzFem => &fem::HelmholtzFem,
+        }
+    }
+
+    /// The family impl as a shareable handle (what
+    /// [`FamilyRegistry::builtin`] registers).
+    pub fn family_arc(self) -> Arc<dyn OperatorFamily> {
+        match self {
+            OperatorKind::Poisson => Arc::new(poisson::Poisson),
+            OperatorKind::Elliptic => Arc::new(elliptic::Elliptic),
+            OperatorKind::Helmholtz => Arc::new(helmholtz::Helmholtz),
+            OperatorKind::Vibration => Arc::new(vibration::Vibration),
+            OperatorKind::HelmholtzFem => Arc::new(fem::HelmholtzFem),
+        }
+    }
+
     /// Paper's per-dataset solve tolerance (relative residual).
     pub fn default_tol(self) -> f64 {
-        match self {
-            OperatorKind::Poisson => 1e-12,
-            OperatorKind::Elliptic => 1e-10,
-            OperatorKind::Helmholtz | OperatorKind::HelmholtzFem => 1e-8,
-            OperatorKind::Vibration => 1e-8,
-        }
+        self.family().default_tol()
     }
 
     /// Stable name used in manifests and CLI flags.
     pub fn name(self) -> &'static str {
-        match self {
-            OperatorKind::Poisson => "poisson",
-            OperatorKind::Elliptic => "elliptic",
-            OperatorKind::Helmholtz => "helmholtz",
-            OperatorKind::Vibration => "vibration",
-            OperatorKind::HelmholtzFem => "helmholtz_fem",
-        }
+        self.family().name()
     }
 
     /// Parse a name produced by [`OperatorKind::name`].
     pub fn parse(s: &str) -> Option<Self> {
-        Some(match s {
-            "poisson" => OperatorKind::Poisson,
-            "elliptic" => OperatorKind::Elliptic,
-            "helmholtz" => OperatorKind::Helmholtz,
-            "vibration" => OperatorKind::Vibration,
-            "helmholtz_fem" => OperatorKind::HelmholtzFem,
-            _ => return None,
-        })
+        Self::ALL.into_iter().find(|k| k.name() == s)
     }
 }
 
@@ -93,30 +121,119 @@ pub struct Field {
     pub data: Vec<f64>,
 }
 
+/// Shape of a family's sort keys — the compatibility contract for key
+/// comparisons: distances are only defined between keys of identical
+/// shape, and every problem of one family spec shares one shape.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SortKeyShape {
+    /// `count` square fields of side `p` each.
+    Fields {
+        /// Number of coefficient fields.
+        count: usize,
+        /// Side length of each field.
+        p: usize,
+    },
+    /// A flat coefficient vector of the given length.
+    Coeffs {
+        /// Number of coefficients.
+        len: usize,
+    },
+}
+
+impl SortKeyShape {
+    /// Length of the flattened raw key with this shape.
+    pub fn flat_len(&self) -> usize {
+        match *self {
+            SortKeyShape::Fields { count, p } => count * p * p,
+            SortKeyShape::Coeffs { len } => len,
+        }
+    }
+}
+
+impl std::fmt::Display for SortKeyShape {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match *self {
+            SortKeyShape::Fields { count, p } => write!(f, "{count} field(s) of {p}x{p}"),
+            SortKeyShape::Coeffs { len } => write!(f, "{len} coefficient(s)"),
+        }
+    }
+}
+
 impl SortKey {
+    /// This key's [`SortKeyShape`]. For multi-field keys the side length
+    /// reported is the first field's (built-in families use one side for
+    /// all fields); [`SortKey::try_dist2`] checks every field's side.
+    pub fn shape(&self) -> SortKeyShape {
+        match self {
+            SortKey::Fields(fs) => SortKeyShape::Fields {
+                count: fs.len(),
+                p: fs.first().map(|f| f.p).unwrap_or(0),
+            },
+            SortKey::Coeffs(c) => SortKeyShape::Coeffs { len: c.len() },
+        }
+    }
+
     /// Squared Euclidean distance between two keys of the same shape —
-    /// the "exact" (untruncated) distance the greedy sort uses.
-    pub fn dist2(&self, other: &SortKey) -> f64 {
+    /// the "exact" (untruncated) distance the greedy sort uses. Errors
+    /// on mismatched shapes (e.g. keys from two different operator
+    /// families): cross-family distances are undefined.
+    pub fn try_dist2(&self, other: &SortKey) -> Result<f64> {
         match (self, other) {
             (SortKey::Fields(a), SortKey::Fields(b)) => {
-                assert_eq!(a.len(), b.len(), "sort-key field count mismatch");
-                a.iter()
-                    .zip(b)
-                    .map(|(fa, fb)| {
-                        assert_eq!(fa.p, fb.p);
-                        fa.data
-                            .iter()
-                            .zip(&fb.data)
-                            .map(|(x, y)| (x - y) * (x - y))
-                            .sum::<f64>()
-                    })
-                    .sum()
+                if a.len() != b.len() {
+                    return Err(anyhow!(
+                        "sort-key field count mismatch: {} vs {} (comparing keys of \
+                         different operator families?)",
+                        a.len(),
+                        b.len()
+                    ));
+                }
+                let mut total = 0.0;
+                for (fa, fb) in a.iter().zip(b) {
+                    if fa.p != fb.p {
+                        return Err(anyhow!(
+                            "sort-key field size mismatch: {}x{} vs {}x{} (comparing keys \
+                             of different operator families or grids?)",
+                            fa.p,
+                            fa.p,
+                            fb.p,
+                            fb.p
+                        ));
+                    }
+                    total += fa
+                        .data
+                        .iter()
+                        .zip(&fb.data)
+                        .map(|(x, y)| (x - y) * (x - y))
+                        .sum::<f64>();
+                }
+                Ok(total)
             }
             (SortKey::Coeffs(a), SortKey::Coeffs(b)) => {
-                assert_eq!(a.len(), b.len());
-                a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum()
+                if a.len() != b.len() {
+                    return Err(anyhow!(
+                        "sort-key coefficient count mismatch: {} vs {}",
+                        a.len(),
+                        b.len()
+                    ));
+                }
+                Ok(a.iter().zip(b).map(|(x, y)| (x - y) * (x - y)).sum())
             }
-            _ => panic!("sort-key kind mismatch"),
+            _ => Err(anyhow!(
+                "sort-key kind mismatch: {} vs {} (cross-family distances are undefined)",
+                self.shape(),
+                other.shape()
+            )),
+        }
+    }
+
+    /// [`SortKey::try_dist2`] for callers that guarantee same-shape keys
+    /// (single-family problem sets). Panics with the shape-mismatch
+    /// message otherwise.
+    pub fn dist2(&self, other: &SortKey) -> f64 {
+        match self.try_dist2(other) {
+            Ok(d) => d,
+            Err(e) => panic!("{e}"),
         }
     }
 }
@@ -127,8 +244,9 @@ impl SortKey {
 pub struct Problem {
     /// Stable index within the generated dataset (pre-sorting order).
     pub id: usize,
-    /// Which family the problem belongs to.
-    pub kind: OperatorKind,
+    /// Name of the [`OperatorFamily`] that generated the problem
+    /// (cheaply clonable; shared across the pipeline's family tags).
+    pub family: Arc<str>,
     /// The assembled symmetric sparse matrix.
     pub matrix: CsrMatrix,
     /// Parameter data used by the sorting algorithms.
@@ -160,8 +278,8 @@ impl Default for GenOptions {
     }
 }
 
-/// Generate `count` problems of the given family (steps 1–3 of Figure 1).
-/// Deterministic in `seed`.
+/// Generate `count` problems of the given built-in family (steps 1–3 of
+/// Figure 1). Deterministic in `seed`.
 pub fn generate(
     kind: OperatorKind,
     opts: GenOptions,
@@ -177,20 +295,15 @@ pub fn generate(
         .collect()
 }
 
-/// Generate a single problem from an explicit per-problem RNG stream.
+/// Generate a single problem from an explicit per-problem RNG stream
+/// (delegates to the kind's [`OperatorFamily`] impl).
 pub fn generate_one(
     kind: OperatorKind,
     opts: GenOptions,
     id: usize,
     rng: &mut Xoshiro256pp,
 ) -> Problem {
-    match kind {
-        OperatorKind::Poisson => poisson::generate(opts, id, rng),
-        OperatorKind::Elliptic => elliptic::generate(opts, id, rng),
-        OperatorKind::Helmholtz => helmholtz::generate(opts, id, rng),
-        OperatorKind::Vibration => vibration::generate(opts, id, rng),
-        OperatorKind::HelmholtzFem => fem::generate(opts, id, rng),
-    }
+    kind.family().generate_one(opts, id, rng)
 }
 
 /// Map interior grid point `(i, j)` (0-based) to the row-major unknown
@@ -206,13 +319,7 @@ mod tests {
 
     #[test]
     fn kind_name_roundtrip() {
-        for k in [
-            OperatorKind::Poisson,
-            OperatorKind::Elliptic,
-            OperatorKind::Helmholtz,
-            OperatorKind::Vibration,
-            OperatorKind::HelmholtzFem,
-        ] {
+        for k in OperatorKind::ALL {
             assert_eq!(OperatorKind::parse(k.name()), Some(k));
         }
         assert_eq!(OperatorKind::parse("nope"), None);
@@ -224,17 +331,12 @@ mod tests {
             grid: 8,
             ..Default::default()
         };
-        for kind in [
-            OperatorKind::Poisson,
-            OperatorKind::Elliptic,
-            OperatorKind::Helmholtz,
-            OperatorKind::Vibration,
-            OperatorKind::HelmholtzFem,
-        ] {
+        for kind in OperatorKind::ALL {
             let ps = generate(kind, opts, 2, 42);
             assert_eq!(ps.len(), 2);
             for p in &ps {
                 assert_eq!(p.n(), 64, "{kind:?}");
+                assert_eq!(p.family.as_ref(), kind.name(), "{kind:?}");
                 assert!(
                     p.matrix.asymmetry() < 1e-10,
                     "{kind:?} asymmetry {}",
@@ -282,5 +384,31 @@ mod tests {
         assert_eq!(a.dist2(&a), 0.0);
         assert_eq!(a.dist2(&b), 4.0);
         assert_eq!(b.dist2(&a), 4.0);
+    }
+
+    #[test]
+    fn cross_shape_distances_are_errors_not_panics() {
+        let coeffs = SortKey::Coeffs(vec![1.0, 2.0]);
+        let short = SortKey::Coeffs(vec![1.0]);
+        let field = SortKey::Fields(vec![Field {
+            p: 2,
+            data: vec![0.0; 4],
+        }]);
+        let small_field = SortKey::Fields(vec![Field {
+            p: 1,
+            data: vec![0.0],
+        }]);
+        for (a, b) in [
+            (&coeffs, &short),
+            (&coeffs, &field),
+            (&field, &small_field),
+        ] {
+            let err = a.try_dist2(b).unwrap_err().to_string();
+            assert!(err.contains("mismatch"), "{err}");
+            let err = b.try_dist2(a).unwrap_err().to_string();
+            assert!(err.contains("mismatch"), "{err}");
+        }
+        // Same shape still works through the fallible path.
+        assert_eq!(coeffs.try_dist2(&coeffs).unwrap(), 0.0);
     }
 }

@@ -10,10 +10,38 @@
 //!             + K_{i,j+½}(u_{ij}−u_{i,j+1}) + K_{i,j−½}(u_{ij}−u_{i,j−1}) ] / h²
 //! ```
 
-use super::{idx, Field, GenOptions, OperatorKind, Problem, SortKey};
+use super::{idx, Field, GenOptions, OperatorFamily, Problem, SortKey, SortKeyShape};
 use crate::grf;
 use crate::rng::Xoshiro256pp;
 use crate::sparse::{CooBuilder, CsrMatrix};
+
+/// Registry name of this family.
+pub const NAME: &str = "poisson";
+
+/// The generalized-Poisson family (one GRF diffusion field).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Poisson;
+
+impl OperatorFamily for Poisson {
+    fn name(&self) -> &str {
+        NAME
+    }
+
+    fn default_tol(&self) -> f64 {
+        1e-12
+    }
+
+    fn sort_key_shape(&self, opts: &GenOptions) -> SortKeyShape {
+        SortKeyShape::Fields {
+            count: 1,
+            p: opts.grid,
+        }
+    }
+
+    fn generate_one(&self, opts: GenOptions, id: usize, rng: &mut Xoshiro256pp) -> Problem {
+        generate(opts, id, rng)
+    }
+}
 
 /// Coefficient bounds for the GRF-sampled diffusion field.
 pub const K_LO: f64 = 0.5;
@@ -77,7 +105,7 @@ pub fn generate(opts: GenOptions, id: usize, rng: &mut Xoshiro256pp) -> Problem 
     let matrix = assemble(g, &k);
     Problem {
         id,
-        kind: OperatorKind::Poisson,
+        family: NAME.into(),
         matrix,
         sort_key: SortKey::Fields(vec![Field { p: g, data: k }]),
     }

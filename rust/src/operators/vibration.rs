@@ -17,10 +17,38 @@
 //!
 //! `A` is symmetric positive definite with a 13-point stencil.
 
-use super::{idx, Field, GenOptions, OperatorKind, Problem, SortKey};
+use super::{idx, Field, GenOptions, OperatorFamily, Problem, SortKey, SortKeyShape};
 use crate::grf;
 use crate::rng::Xoshiro256pp;
 use crate::sparse::{CooBuilder, CsrMatrix};
+
+/// Registry name of this family.
+pub const NAME: &str = "vibration";
+
+/// The plate-vibration family (rigidity + density GRF fields).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Vibration;
+
+impl OperatorFamily for Vibration {
+    fn name(&self) -> &str {
+        NAME
+    }
+
+    fn default_tol(&self) -> f64 {
+        1e-8
+    }
+
+    fn sort_key_shape(&self, opts: &GenOptions) -> SortKeyShape {
+        SortKeyShape::Fields {
+            count: 2,
+            p: opts.grid,
+        }
+    }
+
+    fn generate_one(&self, opts: GenOptions, id: usize, rng: &mut Xoshiro256pp) -> Problem {
+        generate(opts, id, rng)
+    }
+}
 
 /// Bounds for the rigidity field `D`.
 pub const D_LO: f64 = 0.5;
@@ -88,7 +116,7 @@ pub fn generate(opts: GenOptions, id: usize, rng: &mut Xoshiro256pp) -> Problem 
     let matrix = assemble(g, &d, &rho);
     Problem {
         id,
-        kind: OperatorKind::Vibration,
+        family: NAME.into(),
         matrix,
         sort_key: SortKey::Fields(vec![
             Field { p: g, data: d },

@@ -1,8 +1,15 @@
 //! Greedy nearest-neighbour ordering on flat keys — the expensive
 //! baseline sort of SKR (Wang et al. 2024) and the second stage of the
 //! truncated-FFT sort (Algorithm 2, lines 5–9).
+//!
+//! Keys are only comparable within one operator family: the scan
+//! requires uniform key lengths and reports a mismatch as a hard error
+//! ([`check_keys`]) instead of comparing garbage — mixed-family problem
+//! sets must be partitioned by family first (the scheduler does).
 
+use crate::anyhow;
 use crate::operators::{Problem, SortKey};
+use crate::util::error::Result;
 
 /// Flatten a problem's raw parameter data into one vector (the
 /// uncompressed Frobenius key used by the plain greedy sort).
@@ -33,6 +40,27 @@ pub fn dist2(a: &[f64], b: &[f64]) -> f64 {
     s
 }
 
+/// Validate that all keys share one length (i.e. one sort-key shape).
+/// The greedy scan's distance kernel is undefined across shapes — a
+/// mismatch means problems of different operator families (or grids)
+/// were mixed into one scan, which callers must treat as a hard error.
+pub fn check_keys(keys: &[Vec<f64>]) -> Result<()> {
+    if let Some(first) = keys.first() {
+        for (i, k) in keys.iter().enumerate() {
+            if k.len() != first.len() {
+                return Err(anyhow!(
+                    "sort-key length mismatch in one greedy scan: key 0 has {} entries \
+                     but key {i} has {} — problems of different operator families (or \
+                     grids) cannot share a similarity run",
+                    first.len(),
+                    k.len()
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Reusable buffers for [`greedy_order_in`]: a pipeline stage that
 /// schedules many runs re-enters the scan without per-call allocation.
 #[derive(Debug, Default)]
@@ -42,8 +70,12 @@ pub struct GreedyScratch {
 
 /// [`greedy_order`] into caller-owned buffers: `out` receives the visit
 /// order, `scratch` holds the visited set. Bit-for-bit identical to the
-/// allocating wrapper.
+/// allocating wrapper. Panics on mismatched key lengths (see
+/// [`check_keys`]; the scheduler validates before calling).
 pub fn greedy_order_in(keys: &[Vec<f64>], scratch: &mut GreedyScratch, out: &mut Vec<usize>) {
+    if let Err(e) = check_keys(keys) {
+        panic!("{e}");
+    }
     out.clear();
     let n = keys.len();
     if n == 0 {

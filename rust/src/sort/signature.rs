@@ -12,6 +12,19 @@
 use super::fft_sort::{self, SignatureScratch};
 use super::{greedy, SortMethod};
 use crate::operators::Problem;
+use std::sync::Arc;
+
+/// A family-tagged signature: the flat comparison key plus the name of
+/// the operator family that produced the problem. The scheduler groups
+/// by the tag before running any distance computation — cross-family
+/// distances are undefined ([`crate::operators::SortKey::try_dist2`]).
+#[derive(Debug, Clone)]
+pub struct Signature {
+    /// Name of the problem's operator family.
+    pub family: Arc<str>,
+    /// Flat comparison key (see [`SignatureEngine::signature`]).
+    pub key: Vec<f64>,
+}
 
 /// Per-worker streaming signature extractor.
 #[derive(Debug)]
@@ -49,6 +62,16 @@ impl SignatureEngine {
                 Some(fft_sort::compressed_key_in(problem, p0, &mut self.scratch))
             }
         }
+    }
+
+    /// [`SignatureEngine::signature`] tagged with the problem's family —
+    /// what the pipeline's signature stage streams to the scheduler, so
+    /// family grouping is carried alongside the key.
+    pub fn tagged_signature(&mut self, problem: &Problem) -> Option<Signature> {
+        self.signature(problem).map(|key| Signature {
+            family: problem.family.clone(),
+            key,
+        })
     }
 }
 

@@ -1,0 +1,401 @@
+//! Operator-family registry + mixed-family pipeline integration:
+//!
+//! - registry name→family→name round-trips (built-ins and custom
+//!   test-only families), uniqueness invariants;
+//! - mixed-family end-to-end runs: per-family manifest counts sum to
+//!   `N`, no similarity run spans two families, handoffs never cross a
+//!   family boundary, per-family tolerances apply;
+//! - the seed-equivalence regression: a single-family `families` spec
+//!   produces bit-for-bit the same records as the legacy `kind` config.
+
+use scsf::coordinator::config::{FamilySpec, GenConfig};
+use scsf::coordinator::dataset::DatasetReader;
+use scsf::coordinator::pipeline::{
+    generate_dataset, generate_dataset_with_registry, generate_problems_with_registry,
+};
+use scsf::operators::{
+    FamilyRegistry, GenOptions, OperatorFamily, OperatorKind, Problem, SortKey, SortKeyShape,
+};
+use scsf::rng::Xoshiro256pp;
+use scsf::sort::SortMethod;
+use scsf::sparse::CooBuilder;
+use scsf::testing::{forall, size_in};
+use scsf::util::json::{self, Value};
+use std::path::PathBuf;
+use std::sync::Arc;
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!("scsf_fam_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// A test-only family: a diagonally dominant SPD matrix with a weak
+/// nearest-neighbour coupling, keyed by three sampled coefficients.
+struct ToyFamily {
+    name: String,
+}
+
+impl OperatorFamily for ToyFamily {
+    fn name(&self) -> &str {
+        &self.name
+    }
+
+    fn default_tol(&self) -> f64 {
+        1e-9
+    }
+
+    fn sort_key_shape(&self, _opts: &GenOptions) -> SortKeyShape {
+        SortKeyShape::Coeffs { len: 3 }
+    }
+
+    fn generate_one(&self, opts: GenOptions, id: usize, rng: &mut Xoshiro256pp) -> Problem {
+        let n = opts.grid * opts.grid;
+        let base = rng.uniform(1.0, 2.0);
+        let slope = rng.uniform(0.1, 0.5);
+        let coupling = rng.uniform(0.001, 0.01);
+        let mut coo = CooBuilder::new(n, n);
+        for i in 0..n {
+            coo.push(i, i, base + slope * i as f64 / n as f64);
+            if i + 1 < n {
+                coo.push(i, i + 1, coupling);
+                coo.push(i + 1, i, coupling);
+            }
+        }
+        Problem {
+            id,
+            family: Arc::from(self.name.as_str()),
+            matrix: coo.build(),
+            sort_key: SortKey::Coeffs(vec![base, slope, coupling]),
+        }
+    }
+}
+
+#[test]
+fn prop_registry_names_roundtrip_through_lookup() {
+    // After any sequence of registrations (built-ins plus random
+    // custom families), every registered name resolves to a family
+    // whose name() is exactly that name, and duplicates stay rejected.
+    forall(20, 0xFA77, |rng, case| {
+        let mut reg = FamilyRegistry::builtin();
+        let extra = size_in(rng, 1, 4);
+        for i in 0..extra {
+            let name = format!("custom_{case}_{i}");
+            reg.register(Arc::new(ToyFamily { name: name.clone() }))
+                .unwrap();
+            // Immediate duplicate is rejected without clobbering.
+            assert!(
+                reg.register(Arc::new(ToyFamily { name })).is_err(),
+                "case {case}"
+            );
+        }
+        assert_eq!(reg.len(), OperatorKind::ALL.len() + extra, "case {case}");
+        for name in reg.names() {
+            let fam = reg.get(name).expect("listed name resolves");
+            assert_eq!(fam.name(), name, "case {case}");
+            assert_eq!(
+                reg.resolve(name).unwrap().name(),
+                name,
+                "case {case}: resolve() agrees with get()"
+            );
+        }
+        // Built-in kinds round-trip through their registered names too.
+        for kind in OperatorKind::ALL {
+            assert_eq!(OperatorKind::parse(kind.name()), Some(kind), "case {case}");
+            assert_eq!(reg.get(kind.name()).unwrap().default_tol(), kind.default_tol());
+        }
+    });
+}
+
+#[test]
+fn mixed_family_run_respects_family_boundaries_end_to_end() {
+    // Two built-in families in one run: the acceptance-criteria
+    // scenario (a single invocation with two family specs).
+    let dir = tmpdir("mixed");
+    let cfg = GenConfig {
+        families: vec![
+            FamilySpec {
+                tol: Some(1e-10),
+                ..FamilySpec::new("poisson", 5)
+            },
+            FamilySpec::new("helmholtz", 4),
+        ],
+        grid: 8,
+        n_eigs: 3,
+        seed: 31,
+        shards: 2,
+        sort: SortMethod::TruncatedFft { p0: 6 },
+        ..Default::default()
+    };
+    let report = generate_dataset(&cfg, &dir).unwrap();
+    assert!(report.all_converged, "{report:?}");
+    assert_eq!(report.n_problems, 9);
+
+    // Per-family report: counts sum to N, and the two families ran at
+    // *different* tolerances (spec override vs family default).
+    assert_eq!(report.families.len(), 2);
+    assert_eq!(report.families[0].family, "poisson");
+    assert_eq!(report.families[1].family, "helmholtz");
+    let total: usize = report.families.iter().map(|f| f.problems).sum();
+    assert_eq!(total, 9);
+    assert_eq!(report.families[0].tol, 1e-10, "spec override");
+    assert_eq!(report.families[1].tol, 1e-8, "family default");
+    assert!(report.families[0].max_residual <= 1e-10 * 10.0);
+
+    // Manifest: every record tagged, per-family counts sum to N, and
+    // no similarity run (shard id) contains two families.
+    let mut reader = DatasetReader::open(&dir).unwrap();
+    assert_eq!(reader.index().len(), 9);
+    let mut by_family = std::collections::BTreeMap::<String, usize>::new();
+    let mut shard_family = std::collections::BTreeMap::<usize, String>::new();
+    for rec in reader.index() {
+        assert!(!rec.family.is_empty(), "record {} untagged", rec.id);
+        *by_family.entry(rec.family.clone()).or_default() += 1;
+        match shard_family.get(&rec.shard) {
+            None => {
+                shard_family.insert(rec.shard, rec.family.clone());
+            }
+            Some(f) => assert_eq!(f, &rec.family, "run {} spans two families", rec.shard),
+        }
+    }
+    assert_eq!(by_family["poisson"], 5);
+    assert_eq!(by_family["helmholtz"], 4);
+    // Expected ids: poisson block first, then helmholtz.
+    for rec in reader.index() {
+        let want = if rec.id < 5 { "poisson" } else { "helmholtz" };
+        assert_eq!(rec.family, want, "id {}", rec.id);
+    }
+
+    // The per-run reports carry the family tag too.
+    for s in &report.shards {
+        assert!(s.family == "poisson" || s.family == "helmholtz");
+    }
+
+    // Values validate against dense references (per-problem check that
+    // the mixed pipeline routed every problem through the right
+    // family's generator).
+    let problems =
+        generate_problems_with_registry(&cfg, &FamilyRegistry::builtin()).unwrap();
+    for p in &problems {
+        let rec = reader.read(p.id).unwrap();
+        let want = scsf::linalg::symeig::sym_eig(&p.matrix.to_dense());
+        for (got, w) in rec.values.iter().zip(&want.values[..3]) {
+            assert!(
+                (got - w).abs() / w.abs().max(1.0) < 1e-6,
+                "id {}: {got} vs {w}",
+                p.id
+            );
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn handoffs_never_cross_family_boundaries() {
+    // Infinite threshold chains every *within-family* seam; the family
+    // boundary stays a detected cold start.
+    let dir = tmpdir("handoff");
+    let cfg = GenConfig {
+        families: vec![
+            FamilySpec {
+                tol: Some(1e-10),
+                ..FamilySpec::new("poisson", 5)
+            },
+            FamilySpec::new("helmholtz", 4),
+        ],
+        grid: 8,
+        n_eigs: 3,
+        seed: 7,
+        shards: 4, // chunk=3 → poisson: 2 runs, helmholtz: 2 runs
+        sort: SortMethod::TruncatedFft { p0: 6 },
+        handoff_threshold: Some(f64::INFINITY),
+        ..Default::default()
+    };
+    let report = generate_dataset(&cfg, &dir).unwrap();
+    assert!(report.all_converged);
+    assert_eq!(report.shards.len(), 4, "family boundary splits the runs");
+    // One within-family seam per family is warm; each family's first
+    // run is cold.
+    assert_eq!(report.warm_handoffs, 2, "{:?}", report.boundaries);
+    assert_eq!(report.cold_runs, 2);
+    for b in &report.boundaries {
+        assert_eq!(
+            report.shards[b.from_run].family, report.shards[b.to_run].family,
+            "boundary crosses families"
+        );
+    }
+    let mut seen = std::collections::BTreeSet::new();
+    for s in &report.shards {
+        let first_of_family = seen.insert(s.family.clone());
+        assert_eq!(
+            s.warm_handoff, !first_of_family,
+            "run {}: exactly the non-first runs of each family are warm",
+            s.run
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn custom_registered_family_flows_through_the_pipeline() {
+    // The open-trait payoff: a user-registered family, mixed with a
+    // built-in, generates/solves/validates through the whole pipeline.
+    let mut registry = FamilyRegistry::builtin();
+    registry
+        .register(Arc::new(ToyFamily {
+            name: "toy_diag".to_string(),
+        }))
+        .unwrap();
+    let dir = tmpdir("custom");
+    let cfg = GenConfig {
+        families: vec![
+            FamilySpec::new("toy_diag", 4),
+            FamilySpec {
+                tol: Some(1e-10),
+                ..FamilySpec::new("poisson", 3)
+            },
+        ],
+        grid: 6,
+        n_eigs: 3,
+        seed: 12,
+        shards: 2,
+        sort: SortMethod::TruncatedFft { p0: 6 },
+        ..Default::default()
+    };
+    let report = generate_dataset_with_registry(&cfg, &dir, &registry).unwrap();
+    assert!(report.all_converged, "{report:?}");
+    assert_eq!(report.families[0].family, "toy_diag");
+    assert_eq!(report.families[0].problems, 4);
+    assert_eq!(report.families[0].tol, 1e-9, "custom default_tol applies");
+    assert_eq!(report.families[1].family, "poisson");
+
+    // The builtin-registry entry point rejects the unknown family.
+    let err = generate_dataset(&cfg, &tmpdir("custom_missing"))
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("toy_diag"), "{err}");
+
+    let mut reader = DatasetReader::open(&dir).unwrap();
+    let toy = reader
+        .index()
+        .iter()
+        .filter(|r| r.family == "toy_diag")
+        .count();
+    assert_eq!(toy, 4);
+    let problems = generate_problems_with_registry(&cfg, &registry).unwrap();
+    for p in &problems {
+        let rec = reader.read(p.id).unwrap();
+        let want = scsf::linalg::symeig::sym_eig(&p.matrix.to_dense());
+        for (got, w) in rec.values.iter().zip(&want.values[..3]) {
+            assert!((got - w).abs() / w.abs().max(1.0) < 1e-6, "id {}", p.id);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn single_family_spec_is_bit_for_bit_equal_to_legacy_kind_config() {
+    // The seed-equivalence regression: the pre-redesign `kind` JSON and
+    // an explicit one-element `families` spec must produce identical
+    // datasets — same eigs.bin bytes, same manifest records and config
+    // echo (timings aside, which is why the report subtree is compared
+    // field-by-field below).
+    let legacy_json = r#"{
+        "kind": "helmholtz",
+        "grid": 8,
+        "n_problems": 6,
+        "n_eigs": 4,
+        "tol": 1e-8,
+        "seed": 11,
+        "shards": 2,
+        "sort": {"method": "truncated_fft", "p0": 6}
+    }"#;
+    let legacy = GenConfig::from_json(legacy_json).unwrap();
+    let spec_based = GenConfig {
+        families: vec![FamilySpec::new("helmholtz", 6)],
+        grid: 8,
+        n_eigs: 4,
+        tol: Some(1e-8),
+        seed: 11,
+        shards: 2,
+        sort: SortMethod::TruncatedFft { p0: 6 },
+        ..Default::default()
+    };
+    // The two forms parse/normalize to the same config...
+    assert_eq!(legacy, spec_based);
+
+    // ...and to the same on-disk dataset.
+    let d1 = tmpdir("legacy_bits");
+    let d2 = tmpdir("spec_bits");
+    let r1 = generate_dataset(&legacy, &d1).unwrap();
+    let r2 = generate_dataset(&spec_based, &d2).unwrap();
+    let bin1 = std::fs::read(d1.join("eigs.bin")).unwrap();
+    let bin2 = std::fs::read(d2.join("eigs.bin")).unwrap();
+    assert_eq!(bin1, bin2, "eigenpair records must be bit-identical");
+
+    let m1 = json::parse(&std::fs::read_to_string(d1.join("manifest.json")).unwrap()).unwrap();
+    let m2 = json::parse(&std::fs::read_to_string(d2.join("manifest.json")).unwrap()).unwrap();
+    // Everything except the report's wall-clock timings is identical;
+    // records include per-record secs, so strip those before comparing.
+    let strip_secs = |v: &Value| -> Vec<Value> {
+        v.get("records")
+            .and_then(Value::as_arr)
+            .unwrap()
+            .iter()
+            .map(|r| {
+                Value::obj(vec![
+                    ("id", r.get("id").unwrap().clone()),
+                    ("family", r.get("family").unwrap().clone()),
+                    ("shard", r.get("shard").unwrap().clone()),
+                    ("offset", r.get("offset").unwrap().clone()),
+                    ("n", r.get("n").unwrap().clone()),
+                    ("l", r.get("l").unwrap().clone()),
+                    ("max_residual", r.get("max_residual").unwrap().clone()),
+                    ("iterations", r.get("iterations").unwrap().clone()),
+                ])
+            })
+            .collect()
+    };
+    assert_eq!(strip_secs(&m1), strip_secs(&m2));
+    assert_eq!(m1.get("config"), m2.get("config"), "config echo identical");
+    assert_eq!(m1.get("schema_version"), m2.get("schema_version"));
+    // Deterministic (non-timing) report fields agree too.
+    assert_eq!(r1.sort_quality, r2.sort_quality);
+    assert_eq!(r1.avg_iterations, r2.avg_iterations);
+    assert_eq!(r1.max_residual, r2.max_residual);
+    assert_eq!(r1.families[0].iterations, r2.families[0].iterations);
+    let _ = std::fs::remove_dir_all(&d1);
+    let _ = std::fs::remove_dir_all(&d2);
+}
+
+#[test]
+fn cross_family_sort_keys_are_rejected_loudly() {
+    // try_dist2 across shapes is an error (satellite: no panic deep in
+    // a worker thread)...
+    let reg = FamilyRegistry::builtin();
+    let opts = GenOptions {
+        grid: 6,
+        ..Default::default()
+    };
+    let mut rng = Xoshiro256pp::seed_from_u64(4);
+    let a = reg.get("poisson").unwrap().generate_one(opts, 0, &mut rng);
+    let b = reg.get("elliptic").unwrap().generate_one(opts, 1, &mut rng);
+    let err = a.sort_key.try_dist2(&b.sort_key).unwrap_err().to_string();
+    assert!(err.contains("mismatch"), "{err}");
+
+    // ...and the scheduler rejects a family whose keys disagree in
+    // shape with a clear, named error (instead of a worker panic).
+    let keys = vec![vec![1.0, 2.0], vec![3.0]];
+    let err = scsf::coordinator::scheduler::build_schedule(
+        Some(keys.as_slice()),
+        2,
+        scsf::coordinator::scheduler::SortScope::Global,
+        1,
+        None,
+        &scsf::coordinator::scheduler::FamilyGroup::whole("broken_family", 2),
+    )
+    .unwrap_err()
+    .to_string();
+    assert!(err.contains("broken_family"), "{err}");
+    assert!(err.contains("sort-key length mismatch"), "{err}");
+}

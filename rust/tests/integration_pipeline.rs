@@ -1,7 +1,7 @@
 //! Pipeline integration: multi-shard runs, dataset round-trips, config
 //! files, and the CLI-equivalent paths.
 
-use scsf::coordinator::config::GenConfig;
+use scsf::coordinator::config::{FamilySpec, GenConfig};
 use scsf::coordinator::dataset::DatasetReader;
 use scsf::coordinator::pipeline::{generate_dataset, generate_problems};
 use scsf::linalg::symeig::sym_eig;
@@ -25,11 +25,10 @@ fn every_family_flows_through_the_pipeline() {
     ] {
         let dir = tmpdir(kind.name());
         let cfg = GenConfig {
-            kind,
+            families: vec![FamilySpec::new(kind.name(), 4)],
             grid: 8,
-            n_problems: 4,
             n_eigs: 3,
-            tol,
+            tol: Some(tol),
             seed: 21,
             shards: 2,
             sort: SortMethod::TruncatedFft { p0: 6 },
@@ -38,6 +37,9 @@ fn every_family_flows_through_the_pipeline() {
         let report = generate_dataset(&cfg, &dir).expect(kind.name());
         assert!(report.all_converged, "{kind:?}: {report:?}");
         assert_eq!(report.n_problems, 4);
+        assert_eq!(report.families.len(), 1);
+        assert_eq!(report.families[0].family, kind.name());
+        assert_eq!(report.families[0].problems, 4);
 
         let problems = generate_problems(&cfg);
         let mut reader = DatasetReader::open(&dir).unwrap();
@@ -61,11 +63,10 @@ fn shard_count_does_not_change_results() {
     let mk = |shards: usize, tag: &str| {
         let dir = tmpdir(tag);
         let cfg = GenConfig {
-            kind: OperatorKind::Helmholtz,
+            families: vec![FamilySpec::new("helmholtz", 9)],
             grid: 8,
-            n_problems: 9,
             n_eigs: 4,
-            tol: 1e-8,
+            tol: Some(1e-8),
             seed: 5,
             shards,
             ..Default::default()
@@ -92,11 +93,10 @@ fn shard_count_does_not_change_results() {
 fn config_file_roundtrip_through_pipeline() {
     let dir = tmpdir("cfg");
     let cfg = GenConfig {
-        kind: OperatorKind::Poisson,
+        families: vec![FamilySpec::new("poisson", 3)],
         grid: 8,
-        n_problems: 3,
         n_eigs: 3,
-        tol: 1e-9,
+        tol: Some(1e-9),
         seed: 33,
         ..Default::default()
     };
@@ -110,10 +110,34 @@ fn config_file_roundtrip_through_pipeline() {
     let manifest = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
     let v = scsf::util::json::parse(&manifest).unwrap();
     let embedded = v.get("config").unwrap();
+    let fams = embedded
+        .get("families")
+        .and_then(scsf::util::json::Value::as_arr)
+        .unwrap();
     assert_eq!(
-        embedded.get("kind").and_then(scsf::util::json::Value::as_str),
+        fams[0]
+            .get("family")
+            .and_then(scsf::util::json::Value::as_str),
         Some("poisson")
     );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn legacy_kind_config_file_still_runs() {
+    // The pre-registry JSON form ({"kind": ..., "n_problems": ...})
+    // must keep working end to end.
+    let dir = tmpdir("legacy");
+    let cfg = GenConfig::from_json(
+        r#"{"kind": "helmholtz", "grid": 8, "n_problems": 4, "n_eigs": 3, "seed": 9}"#,
+    )
+    .unwrap();
+    assert_eq!(cfg.n_problems(), 4);
+    let report = generate_dataset(&cfg, &dir).unwrap();
+    assert!(report.all_converged);
+    assert_eq!(report.families[0].family, "helmholtz");
+    // Legacy configs pin the historical run tolerance.
+    assert_eq!(report.families[0].tol, 1e-8);
     let _ = std::fs::remove_dir_all(&dir);
 }
 
@@ -123,11 +147,10 @@ fn backpressure_with_tiny_channels() {
     // the run must still complete and lose nothing.
     let dir = tmpdir("bp");
     let cfg = GenConfig {
-        kind: OperatorKind::Helmholtz,
+        families: vec![FamilySpec::new("helmholtz", 7)],
         grid: 8,
-        n_problems: 7,
         n_eigs: 3,
-        tol: 1e-8,
+        tol: Some(1e-8),
         seed: 8,
         shards: 3,
         channel_capacity: 1,
@@ -144,8 +167,8 @@ fn backpressure_with_tiny_channels() {
 fn report_stage_times_are_consistent() {
     let dir = tmpdir("times");
     let cfg = GenConfig {
+        families: vec![FamilySpec::new("helmholtz", 4)],
         grid: 8,
-        n_problems: 4,
         n_eigs: 3,
         seed: 2,
         ..Default::default()
@@ -154,6 +177,7 @@ fn report_stage_times_are_consistent() {
     assert!(report.total_secs > 0.0);
     assert!(report.avg_solve_secs > 0.0);
     assert!(report.solve_secs >= report.avg_solve_secs);
-    assert!(report.max_residual <= cfg.tol * 10.0);
+    // No tol override: the helmholtz family default (1e-8) applies.
+    assert!(report.max_residual <= 1e-8 * 10.0);
     let _ = std::fs::remove_dir_all(&dir);
 }

@@ -139,11 +139,10 @@ fn pipeline_runs_on_xla_backend() {
     let out = std::env::temp_dir().join(format!("scsf_xla_pipe_{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&out);
     let cfg = GenConfig {
-        kind: OperatorKind::Helmholtz,
+        families: vec![scsf::coordinator::config::FamilySpec::new("helmholtz", 3)],
         grid: 16,
-        n_problems: 3,
         n_eigs: 10,
-        tol: 1e-8,
+        tol: Some(1e-8),
         seed: 6,
         shards: 1,
         backend: Backend::Xla {

@@ -195,7 +195,7 @@ fn prop_dataset_roundtrip_preserves_everything() {
                 residuals: vec![0.0; l],
                 stats: SolveStats::default(),
             };
-            w.write_record(id, 0, &r).unwrap();
+            w.write_record(id, 0, "prop", &r).unwrap();
             originals.push(r);
         }
         w.finalize(vec![]).unwrap();

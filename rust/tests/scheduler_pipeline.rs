@@ -3,10 +3,10 @@
 //! results shard-count-independent where the math says so, and satisfy
 //! the partition/handoff invariants for arbitrary shapes.
 
-use scsf::coordinator::config::GenConfig;
+use scsf::coordinator::config::{FamilySpec, GenConfig};
 use scsf::coordinator::dataset::DatasetReader;
 use scsf::coordinator::pipeline::{generate_dataset, generate_problems};
-use scsf::coordinator::scheduler::{self, SortScope};
+use scsf::coordinator::scheduler::{self, FamilyGroup, SortScope};
 use scsf::eig::scsf::solve_sequence;
 use scsf::operators::OperatorKind;
 use scsf::sort::{self, fft_sort, SortMethod};
@@ -21,16 +21,19 @@ fn tmpdir(tag: &str) -> PathBuf {
 
 fn cfg(n: usize, shards: usize, seed: u64) -> GenConfig {
     GenConfig {
-        kind: OperatorKind::Helmholtz,
+        families: vec![FamilySpec::new("helmholtz", n)],
         grid: 8,
-        n_problems: n,
         n_eigs: 4,
-        tol: 1e-8,
+        tol: Some(1e-8),
         seed,
         shards,
         sort: SortMethod::TruncatedFft { p0: 6 },
         ..Default::default()
     }
+}
+
+fn whole(n: usize) -> Vec<FamilyGroup> {
+    FamilyGroup::whole("helmholtz", n)
 }
 
 #[test]
@@ -48,8 +51,15 @@ fn global_single_shard_reproduces_solve_sequence_exactly() {
         .iter()
         .map(|p| fft_sort::compressed_key(p, 6))
         .collect();
-    let schedule =
-        scheduler::build_schedule(Some(keys.as_slice()), 8, SortScope::Global, 1, None);
+    let schedule = scheduler::build_schedule(
+        Some(keys.as_slice()),
+        8,
+        SortScope::Global,
+        1,
+        None,
+        &whole(8),
+    )
+    .unwrap();
     let seq = solve_sequence(&problems, &c.scsf_options());
     assert_eq!(schedule.runs.len(), 1);
     assert_eq!(schedule.runs[0].order, seq.order);
@@ -181,7 +191,9 @@ fn prop_schedule_partitions_any_shape() {
             1 => Some(rng.uniform(0.0, 3.0)),
             _ => Some(f64::INFINITY),
         };
-        let s = scheduler::build_schedule(keys.as_deref(), n, scope, shards, threshold);
+        let groups = FamilyGroup::whole("prop", n);
+        let s = scheduler::build_schedule(keys.as_deref(), n, scope, shards, threshold, &groups)
+            .unwrap();
         let (chunk, n_runs) = scheduler::run_span(n, shards);
         assert_eq!(s.runs.len(), n_runs, "case {case}");
         let mut seen: Vec<usize> =
@@ -239,9 +251,85 @@ fn prop_global_schedule_is_the_greedy_order_cut_into_runs() {
             .iter()
             .map(|p| fft_sort::compressed_key(p, p0))
             .collect();
-        let s = scheduler::build_schedule(Some(keys.as_slice()), n, SortScope::Global, shards, None);
+        let s = scheduler::build_schedule(
+            Some(keys.as_slice()),
+            n,
+            SortScope::Global,
+            shards,
+            None,
+            &whole(n),
+        )
+        .unwrap();
         let concat: Vec<usize> = s.runs.iter().flat_map(|r| r.order.iter().copied()).collect();
         let batch = sort::sort_problems(&problems, SortMethod::TruncatedFft { p0 });
         assert_eq!(concat, batch.order, "case {case}");
+    });
+}
+
+#[test]
+fn prop_mixed_family_schedules_respect_group_boundaries() {
+    // Random multi-group layouts: runs stay inside their group's id
+    // block, seams never cross groups, and group qualities sum to the
+    // total — for both scopes and any threshold.
+    forall(30, 0xFA417, |rng, case| {
+        let n_groups = size_in(rng, 1, 4);
+        let mut groups = Vec::new();
+        let mut start = 0usize;
+        for g in 0..n_groups {
+            let len = size_in(rng, 1, 8);
+            groups.push(FamilyGroup {
+                family: format!("fam{g}"),
+                start,
+                end: start + len,
+            });
+            start += len;
+        }
+        let n = start;
+        // Distinct key lengths per group — incomparable across groups.
+        let keys: Vec<Vec<f64>> = (0..n)
+            .map(|id| {
+                let g = groups.iter().position(|g| id < g.end).unwrap();
+                (0..g + 1).map(|_| rng.normal()).collect()
+            })
+            .collect();
+        let shards = size_in(rng, 1, 5);
+        let scope = if rng.next_f64() < 0.5 {
+            SortScope::Global
+        } else {
+            SortScope::Shard
+        };
+        let threshold = if rng.next_f64() < 0.5 {
+            Some(f64::INFINITY)
+        } else {
+            None
+        };
+        let s = scheduler::build_schedule(
+            Some(keys.as_slice()),
+            n,
+            scope,
+            shards,
+            threshold,
+            &groups,
+        )
+        .unwrap();
+        let mut seen: Vec<usize> =
+            s.runs.iter().flat_map(|r| r.order.iter().copied()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..n).collect::<Vec<_>>(), "case {case}");
+        for run in &s.runs {
+            let g = &groups[run.group];
+            assert!(
+                run.order.iter().all(|&id| id >= g.start && id < g.end),
+                "case {case}: run escapes its family block"
+            );
+        }
+        for b in &s.boundaries {
+            assert_eq!(
+                s.runs[b.from_run].group, s.runs[b.to_run].group,
+                "case {case}: seam crosses families"
+            );
+        }
+        let sum: f64 = s.group_quality.iter().sum();
+        assert!((sum - s.sort_quality).abs() < 1e-9, "case {case}");
     });
 }
