@@ -1,0 +1,192 @@
+//! Adaptive-vs-fixed filter-schedule bench (the perf trajectory for
+//! ISSUE 5's convergence-aware filtering engine).
+//!
+//! The suite runs every built-in operator family as a sorted,
+//! warm-started SCSF sequence (the pipeline's solve stage in
+//! miniature) plus 5 %- and 1 %-perturbed Helmholtz chains (the
+//! paper's Table 17 similarity settings), each once under
+//! `filter_schedule: fixed` (degree 20 everywhere) and once under
+//! `adaptive` (per-column degrees, shrinking window, warm-chain bound
+//! reuse) at one common tolerance (1e-8) so suites weigh equally.
+//! Every solve must converge with all residuals ≤ tol — the schedules
+//! trade *work*, never accuracy.
+//!
+//! Emits `BENCH_filter.json` (working directory) with before/after
+//! problems/sec, total and filter matvec counts, and the adaptive
+//! degree histogram, so the matvec cut is tracked release over
+//! release. The repo root carries the committed baseline.
+
+use scsf::coordinator::metrics::degree_hist_pairs;
+use scsf::eig::chebyshev::FilterSchedule;
+use scsf::eig::chfsi::ChfsiOptions;
+use scsf::eig::scsf::{solve_sequence, ScsfOptions, SequenceResult};
+use scsf::eig::EigOptions;
+use scsf::operators::{self, GenOptions, OperatorKind, Problem};
+use scsf::sort::SortMethod;
+use scsf::util::json::Value;
+
+const GRID: usize = 16;
+const N_PROBLEMS: usize = 6;
+const N_EIGS: usize = 16;
+const DEGREE_CAP: usize = 20;
+
+fn run(problems: &[Problem], tol: f64, schedule: FilterSchedule) -> SequenceResult {
+    let mut chfsi = ChfsiOptions::from_eig(&EigOptions {
+        n_eigs: N_EIGS,
+        tol,
+        max_iters: 600,
+        seed: 0,
+    });
+    chfsi.degree = DEGREE_CAP;
+    chfsi.schedule = schedule;
+    let opts = ScsfOptions {
+        chfsi,
+        sort: SortMethod::TruncatedFft { p0: 8 },
+        warm_start: true,
+    };
+    let seq = solve_sequence(problems, &opts);
+    assert!(
+        seq.all_converged(),
+        "{}-schedule sequence failed to converge",
+        match schedule {
+            FilterSchedule::Fixed => "fixed",
+            FilterSchedule::Adaptive => "adaptive",
+        }
+    );
+    for r in &seq.results {
+        for res in &r.residuals {
+            assert!(*res <= tol, "residual {res} above tol {tol}");
+        }
+    }
+    seq
+}
+
+fn seq_record(seq: &SequenceResult) -> Value {
+    Value::obj(vec![
+        ("avg_solve_secs", seq.avg_secs().into()),
+        ("problems_per_sec", (1.0 / seq.avg_secs()).into()),
+        ("avg_iterations", seq.avg_iterations().into()),
+        ("total_matvecs", seq.total_matvecs().into()),
+        ("filter_matvecs", seq.filter_matvecs().into()),
+        ("filter_mflops", seq.filter_mflops().into()),
+    ])
+}
+
+
+fn main() {
+    let mut suite_records: Vec<Value> = Vec::new();
+    let mut fixed_filter_mv = 0usize;
+    let mut adaptive_filter_mv = 0usize;
+    let mut fixed_secs = 0.0f64;
+    let mut adaptive_secs = 0.0f64;
+    let mut n_solved = 0usize;
+
+    let mut bench_case = |name: &str, problems: &[Problem], tol: f64| {
+        let fixed = run(problems, tol, FilterSchedule::Fixed);
+        let adaptive = run(problems, tol, FilterSchedule::Adaptive);
+        let cut = 1.0
+            - adaptive.filter_matvecs() as f64 / fixed.filter_matvecs().max(1) as f64;
+        println!(
+            "{name:<22} tol {tol:.0e}: filter matvecs {} -> {} ({:+.1}%), \
+             {:.2} -> {:.2} problems/sec",
+            fixed.filter_matvecs(),
+            adaptive.filter_matvecs(),
+            -100.0 * cut,
+            1.0 / fixed.avg_secs(),
+            1.0 / adaptive.avg_secs(),
+        );
+        fixed_filter_mv += fixed.filter_matvecs();
+        adaptive_filter_mv += adaptive.filter_matvecs();
+        fixed_secs += fixed.avg_secs() * problems.len() as f64;
+        adaptive_secs += adaptive.avg_secs() * problems.len() as f64;
+        n_solved += problems.len();
+        suite_records.push(Value::obj(vec![
+            ("suite", name.into()),
+            ("tol", tol.into()),
+            ("n_problems", problems.len().into()),
+            ("fixed", seq_record(&fixed)),
+            ("adaptive", seq_record(&adaptive)),
+            (
+                "adaptive_degree_hist",
+                degree_hist_pairs(&adaptive.degree_hist()),
+            ),
+            ("matvec_reduction", cut.into()),
+        ]));
+    };
+
+    const TOL: f64 = 1e-8;
+    for kind in OperatorKind::ALL {
+        let problems = operators::generate(
+            kind,
+            GenOptions {
+                grid: GRID,
+                ..Default::default()
+            },
+            N_PROBLEMS,
+            41,
+        );
+        bench_case(kind.name(), &problems, TOL);
+    }
+    // The similarity regime SCSF targets: perturbed chains where warm
+    // starts carry accurate subspaces and the schedule can run shallow.
+    let chains = [("helmholtz-chain-5%", 0.05, 42u64), ("helmholtz-chain-1%", 0.01, 43)];
+    for (label, eps, seed) in chains {
+        let chain = operators::helmholtz::generate_perturbed_chain(
+            GenOptions {
+                grid: GRID,
+                ..Default::default()
+            },
+            N_PROBLEMS,
+            eps,
+            seed,
+        );
+        bench_case(label, &chain, TOL);
+    }
+
+    let total_cut = 1.0 - adaptive_filter_mv as f64 / fixed_filter_mv.max(1) as f64;
+    println!(
+        "TOTAL: filter matvecs {fixed_filter_mv} -> {adaptive_filter_mv} \
+         ({:+.1}%), {:.2} -> {:.2} problems/sec",
+        -100.0 * total_cut,
+        n_solved as f64 / fixed_secs,
+        n_solved as f64 / adaptive_secs,
+    );
+
+    let doc = Value::obj(vec![
+        ("bench", "filter_degree".into()),
+        ("version", 1usize.into()),
+        ("grid", GRID.into()),
+        ("n_problems_per_suite", N_PROBLEMS.into()),
+        ("n_eigs", N_EIGS.into()),
+        ("degree_cap", DEGREE_CAP.into()),
+        ("suites", Value::Arr(suite_records)),
+        (
+            "totals",
+            Value::obj(vec![
+                ("filter_matvecs_fixed", fixed_filter_mv.into()),
+                ("filter_matvecs_adaptive", adaptive_filter_mv.into()),
+                ("matvec_reduction", total_cut.into()),
+                (
+                    "problems_per_sec_fixed",
+                    (n_solved as f64 / fixed_secs).into(),
+                ),
+                (
+                    "problems_per_sec_adaptive",
+                    (n_solved as f64 / adaptive_secs).into(),
+                ),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_filter.json";
+    match std::fs::write(path, doc.to_string_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    assert!(
+        total_cut >= 0.25,
+        "adaptive scheduling must cut total filter matvecs by >= 25% \
+         (got {:.1}%)",
+        100.0 * total_cut
+    );
+}

@@ -11,6 +11,7 @@
 
 use super::scheduler::{FamilyGroup, SortScope};
 use crate::anyhow;
+use crate::eig::chebyshev::FilterSchedule;
 use crate::eig::chfsi::ChfsiOptions;
 use crate::eig::scsf::ScsfOptions;
 use crate::eig::EigOptions;
@@ -253,10 +254,17 @@ pub struct GenConfig {
     pub tol: Option<f64>,
     /// Master seed (whole run is deterministic given this).
     pub seed: u64,
-    /// Chebyshev filter degree `m` (paper §D.4: 20).
+    /// Chebyshev filter degree `m` (paper §D.4: 20). Under the
+    /// adaptive schedule this is the per-column degree *cap*.
     pub degree: usize,
     /// Guard vectors (`None` → 20 % of L, paper §D.4).
     pub guard: Option<usize>,
+    /// How filter degree is spent across the iterate block: `fixed`
+    /// (every column gets `degree` every sweep — bit-for-bit the
+    /// historical output, the default) or `adaptive` (per-column
+    /// degrees from residuals over a shrinking column window — fewer
+    /// filter matvecs, deterministic, but numerically distinct).
+    pub filter_schedule: FilterSchedule,
     /// Sorting method (paper default: truncated FFT, p₀ = 20).
     pub sort: SortMethod,
     /// Where the similarity sort runs: one global order per family
@@ -306,6 +314,7 @@ impl Default for GenConfig {
             seed: 0,
             degree: 20,
             guard: None,
+            filter_schedule: FilterSchedule::Fixed,
             sort: SortMethod::TruncatedFft { p0: 20 },
             sort_scope: SortScope::Global,
             handoff_threshold: None,
@@ -418,6 +427,7 @@ impl GenConfig {
         chfsi.degree = self.degree;
         chfsi.guard = self.guard;
         chfsi.threads = self.threads.max(1);
+        chfsi.schedule = self.filter_schedule;
         ScsfOptions {
             chfsi,
             sort: self.sort,
@@ -465,6 +475,7 @@ impl GenConfig {
                 "guard",
                 self.guard.map(Value::from).unwrap_or(Value::Null),
             ),
+            ("filter_schedule", self.filter_schedule.name().into()),
             ("sort", sort),
             ("sort_scope", self.sort_scope.name().into()),
             (
@@ -578,6 +589,14 @@ impl GenConfig {
             cfg.degree = x;
         }
         cfg.guard = v.get("guard").and_then(Value::as_usize);
+        if let Some(s) = v.get("filter_schedule") {
+            let name = s
+                .as_str()
+                .ok_or_else(|| anyhow!("filter_schedule must be a string"))?;
+            cfg.filter_schedule = FilterSchedule::parse(name).ok_or_else(|| {
+                anyhow!("unknown filter_schedule {name} (expected \"fixed\" or \"adaptive\")")
+            })?;
+        }
         if let Some(sort) = v.get("sort") {
             cfg.sort = match sort.get("method").and_then(Value::as_str) {
                 Some("none") => SortMethod::None,
@@ -691,6 +710,7 @@ mod tests {
             seed: 99,
             degree: 16,
             guard: Some(6),
+            filter_schedule: FilterSchedule::Adaptive,
             sort: SortMethod::Greedy,
             sort_scope: SortScope::Shard,
             handoff_threshold: Some(0.75),
@@ -910,6 +930,35 @@ mod tests {
     }
 
     #[test]
+    fn filter_schedule_knob_roundtrips_and_validates() {
+        // Default is fixed, and a missing key parses as fixed (the
+        // bit-for-bit compatibility contract for existing configs).
+        let cfg = GenConfig::default();
+        assert_eq!(cfg.filter_schedule, FilterSchedule::Fixed);
+        let parsed = GenConfig::from_json("{}").unwrap();
+        assert_eq!(parsed.filter_schedule, FilterSchedule::Fixed);
+        // Round-trips through JSON.
+        let adaptive = GenConfig {
+            filter_schedule: FilterSchedule::Adaptive,
+            ..Default::default()
+        };
+        let back = GenConfig::from_json(&adaptive.to_json()).unwrap();
+        assert_eq!(back.filter_schedule, FilterSchedule::Adaptive);
+        assert_eq!(back, adaptive);
+        // Propagates into the solver options.
+        assert_eq!(
+            adaptive.scsf_options_with_tol(1e-8).chfsi.schedule,
+            FilterSchedule::Adaptive
+        );
+        // The bare string form parses too.
+        let from_key = GenConfig::from_json(r#"{"filter_schedule": "adaptive"}"#).unwrap();
+        assert_eq!(from_key.filter_schedule, FilterSchedule::Adaptive);
+        // Bad values fail loudly (a typo must not silently run fixed).
+        assert!(GenConfig::from_json(r#"{"filter_schedule": "adaptve"}"#).is_err());
+        assert!(GenConfig::from_json(r#"{"filter_schedule": 3}"#).is_err());
+    }
+
+    #[test]
     fn scsf_options_propagate() {
         let cfg = GenConfig {
             degree: 14,
@@ -922,6 +971,7 @@ mod tests {
         assert_eq!(o.chfsi.guard, Some(7));
         assert_eq!(o.chfsi.threads, 4);
         assert_eq!(o.chfsi.eig.tol, 1e-9);
+        assert_eq!(o.chfsi.schedule, FilterSchedule::Fixed);
         assert!(o.warm_start);
         // The no-arg convenience uses the run tolerance / fallback.
         assert_eq!(cfg.scsf_options().chfsi.eig.tol, FALLBACK_TOL);

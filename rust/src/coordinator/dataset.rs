@@ -54,6 +54,11 @@ pub struct RecordMeta {
     pub secs: f64,
     /// Solver outer iterations.
     pub iterations: usize,
+    /// `A·x` products the solve spent, total (0 for datasets written
+    /// before the adaptive-filter instrumentation).
+    pub matvecs: usize,
+    /// `A·x` products spent inside the Chebyshev filter.
+    pub filter_matvecs: usize,
 }
 
 /// Streaming dataset writer (single-writer; the pipeline funnels all
@@ -118,6 +123,8 @@ impl DatasetWriter {
             max_residual,
             secs: result.stats.secs,
             iterations: result.stats.iterations,
+            matvecs: result.stats.matvecs,
+            filter_matvecs: result.stats.filter_matvecs,
         });
         Ok(())
     }
@@ -150,6 +157,8 @@ impl DatasetWriter {
                 ("max_residual", r.max_residual.into()),
                 ("secs", r.secs.into()),
                 ("iterations", r.iterations.into()),
+                ("matvecs", r.matvecs.into()),
+                ("filter_matvecs", r.filter_matvecs.into()),
             ]));
         }
         let mut root = vec![
@@ -224,6 +233,8 @@ impl DatasetReader {
                 max_residual: r.get("max_residual").and_then(Value::as_f64).unwrap_or(0.0),
                 secs: r.get("secs").and_then(Value::as_f64).unwrap_or(0.0),
                 iterations: gu("iterations"),
+                matvecs: gu("matvecs"),
+                filter_matvecs: gu("filter_matvecs"),
             });
         }
         let file = BufReader::new(File::open(dir.join("eigs.bin"))?);
@@ -290,6 +301,8 @@ mod tests {
             stats: SolveStats {
                 iterations: 7,
                 secs: 0.25,
+                matvecs: 321,
+                filter_matvecs: 256,
                 ..Default::default()
             },
         }
@@ -318,6 +331,9 @@ mod tests {
         assert_eq!(reader.index()[1].shard, 1);
         assert_eq!(reader.index()[0].family, "poisson");
         assert_eq!(reader.index()[1].family, "helmholtz");
+        // The work counters round-trip through the manifest.
+        assert_eq!(reader.index()[0].matvecs, 321);
+        assert_eq!(reader.index()[0].filter_matvecs, 256);
         for (id, want) in [(0usize, &r0), (1, &r1)] {
             let rec = reader.read(id).unwrap();
             assert_eq!(rec.values, want.values);

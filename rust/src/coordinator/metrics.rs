@@ -5,6 +5,20 @@
 use super::scheduler::Boundary;
 use crate::util::json::Value;
 
+/// Sparse-pair JSON form of a filter-degree histogram:
+/// `[[degree, count], …]` with zero buckets skipped (fixed-degree runs
+/// stay compact). Shared by the manifest serialization and the bench
+/// JSON emitters so the two formats cannot drift.
+pub fn degree_hist_pairs(hist: &[usize]) -> Value {
+    Value::Arr(
+        hist.iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(d, &c)| Value::Arr(vec![d.into(), c.into()]))
+            .collect(),
+    )
+}
+
 /// Per-family rollup of one dataset-generation run (mixed-family
 /// datasets get one entry per family spec, in generation order).
 #[derive(Debug, Default, Clone, PartialEq)]
@@ -17,6 +31,11 @@ pub struct FamilyReport {
     pub runs: usize,
     /// Summed ChFSI outer iterations across the family's solves.
     pub iterations: usize,
+    /// Summed `A·x` products across the family's solves.
+    pub matvecs: usize,
+    /// `A·x` products spent inside the Chebyshev filter — per-family
+    /// view of the adaptive schedule's cut.
+    pub filter_matvecs: usize,
     /// Mean outer iterations per solve.
     pub avg_iterations: f64,
     /// Seconds in eigensolves for this family's problems.
@@ -38,6 +57,8 @@ impl FamilyReport {
             ("problems", self.problems.into()),
             ("runs", self.runs.into()),
             ("iterations", self.iterations.into()),
+            ("matvecs", self.matvecs.into()),
+            ("filter_matvecs", self.filter_matvecs.into()),
             ("avg_iterations", self.avg_iterations.into()),
             ("solve_secs", self.solve_secs.into()),
             ("max_residual", self.max_residual.into()),
@@ -58,6 +79,10 @@ pub struct ShardReport {
     pub problems: usize,
     /// Summed ChFSI outer iterations across the run's solves.
     pub iterations: usize,
+    /// Summed `A·x` products across the run's solves.
+    pub matvecs: usize,
+    /// `A·x` products spent inside the Chebyshev filter.
+    pub filter_matvecs: usize,
     /// Whether the run's first solve inherited the previous run's tail
     /// eigenpairs (a granted boundary handoff that actually arrived).
     pub warm_handoff: bool,
@@ -81,6 +106,8 @@ impl ShardReport {
             ("family", self.family.as_str().into()),
             ("problems", self.problems.into()),
             ("iterations", self.iterations.into()),
+            ("matvecs", self.matvecs.into()),
+            ("filter_matvecs", self.filter_matvecs.into()),
             ("warm_handoff", self.warm_handoff.into()),
             ("cold_starts", self.cold_starts.into()),
             ("handoff_wait_secs", self.handoff_wait_secs.into()),
@@ -121,6 +148,17 @@ pub struct GenReport {
     pub total_mflops: f64,
     /// Filter-only flops (Mflop) — paper Table 3's "Filter Flops".
     pub filter_mflops: f64,
+    /// Total `A·x` products across all solves (every solver phase).
+    pub total_matvecs: usize,
+    /// `A·x` products spent inside the Chebyshev filter — the quantity
+    /// the adaptive degree schedule (`filter_schedule: adaptive`) cuts
+    /// versus fixed degree-20.
+    pub filter_matvecs: usize,
+    /// Merged per-column filter-degree histogram: `degree_hist[m]` is
+    /// the number of (column, sweep) pairs filtered at degree `m`
+    /// across the whole run. Fixed schedules put everything in the
+    /// configured-degree bucket; adaptive runs spread below the cap.
+    pub degree_hist: Vec<usize>,
     /// Worst relative residual over all stored pairs.
     pub max_residual: f64,
     /// Whether every solve met tolerance.
@@ -167,6 +205,9 @@ impl GenReport {
             ("avg_iterations", self.avg_iterations.into()),
             ("total_mflops", self.total_mflops.into()),
             ("filter_mflops", self.filter_mflops.into()),
+            ("total_matvecs", self.total_matvecs.into()),
+            ("filter_matvecs", self.filter_matvecs.into()),
+            ("degree_hist", degree_hist_pairs(&self.degree_hist)),
             ("max_residual", self.max_residual.into()),
             ("all_converged", self.all_converged.into()),
             ("xla_calls", self.xla_calls.into()),
@@ -193,13 +234,15 @@ impl GenReport {
     /// Compact human-readable summary line.
     pub fn summary(&self) -> String {
         format!(
-            "{} problems in {:.2}s (avg solve {:.3}s, avg iters {:.1}, {:.0} Mflop total, {:.0} Mflop filter, max residual {:.2e}, converged: {}, sort {} quality {:.3}, {} warm handoffs / {} cold runs)",
+            "{} problems in {:.2}s (avg solve {:.3}s, avg iters {:.1}, {:.0} Mflop total, {:.0} Mflop filter, {} matvecs ({} filter), max residual {:.2e}, converged: {}, sort {} quality {:.3}, {} warm handoffs / {} cold runs)",
             self.n_problems,
             self.total_secs,
             self.avg_solve_secs,
             self.avg_iterations,
             self.total_mflops,
             self.filter_mflops,
+            self.total_matvecs,
+            self.filter_matvecs,
             self.max_residual,
             self.all_converged,
             self.sort_scope,
@@ -228,6 +271,8 @@ mod tests {
         assert_eq!(v.get("n_problems").and_then(Value::as_usize), Some(4));
         assert_eq!(v.get("all_converged").and_then(Value::as_bool), Some(true));
         assert!(v.get("filter_mflops").is_some());
+        assert!(v.get("total_matvecs").is_some());
+        assert!(v.get("filter_matvecs").is_some());
         assert_eq!(v.get("sort_scope").and_then(Value::as_str), Some("global"));
         assert_eq!(v.get("sort_quality").and_then(Value::as_f64), Some(2.25));
         assert!(v.get("signature_secs").is_some());
@@ -244,6 +289,8 @@ mod tests {
                 problems: 4,
                 runs: 2,
                 iterations: 40,
+                matvecs: 5200,
+                filter_matvecs: 4100,
                 avg_iterations: 10.0,
                 solve_secs: 1.25,
                 max_residual: 1e-13,
@@ -260,6 +307,11 @@ mod tests {
             Some("poisson")
         );
         assert_eq!(fams[0].get("problems").and_then(Value::as_usize), Some(4));
+        assert_eq!(fams[0].get("matvecs").and_then(Value::as_usize), Some(5200));
+        assert_eq!(
+            fams[0].get("filter_matvecs").and_then(Value::as_usize),
+            Some(4100)
+        );
         assert_eq!(fams[0].get("tol").and_then(Value::as_f64), Some(1e-12));
         assert_eq!(
             fams[0].get("sort_quality").and_then(Value::as_f64),
@@ -271,6 +323,24 @@ mod tests {
     fn summary_is_one_line() {
         let r = GenReport::default();
         assert_eq!(r.summary().lines().count(), 1);
+        assert!(r.summary().contains("matvecs"));
+    }
+
+    #[test]
+    fn degree_hist_serializes_as_sparse_pairs() {
+        let r = GenReport {
+            degree_hist: vec![0, 0, 3, 0, 0, 0, 0, 0, 0, 0, 12],
+            ..Default::default()
+        };
+        let v = r.to_json();
+        let hist = v.get("degree_hist").and_then(Value::as_arr).unwrap();
+        assert_eq!(hist.len(), 2, "zero buckets skipped");
+        let pair = hist[0].as_arr().unwrap();
+        assert_eq!(pair[0].as_usize(), Some(2));
+        assert_eq!(pair[1].as_usize(), Some(3));
+        let pair = hist[1].as_arr().unwrap();
+        assert_eq!(pair[0].as_usize(), Some(10));
+        assert_eq!(pair[1].as_usize(), Some(12));
     }
 
     #[test]

@@ -128,6 +128,8 @@ struct ScheduleSummary {
 struct FamilyAccum {
     problems: usize,
     iterations: usize,
+    matvecs: usize,
+    filter_matvecs: usize,
     solve_secs: f64,
     max_residual: f64,
 }
@@ -513,6 +515,8 @@ pub fn generate_dataset_with_registry(
                         );
                         stats.problems += 1;
                         stats.iterations += r.stats.iterations;
+                        stats.matvecs += r.stats.matvecs;
+                        stats.filter_matvecs += r.stats.filter_matvecs;
                         if res_tx.send((problem.id, plan.index, r)).is_err() {
                             writer_gone = true;
                             break;
@@ -555,6 +559,9 @@ pub fn generate_dataset_with_registry(
             let mut iter_sum = 0usize;
             let mut mflops = 0.0;
             let mut filter_mflops = 0.0;
+            let mut matvec_sum = 0usize;
+            let mut filter_matvec_sum = 0usize;
+            let mut degree_hist: Vec<usize> = Vec::new();
             let mut all_converged = true;
             let mut count = 0usize;
             let mut fam_accum: Vec<FamilyAccum> = vec![FamilyAccum::default(); resolved.len()];
@@ -569,10 +576,15 @@ pub fn generate_dataset_with_registry(
                 iter_sum += result.stats.iterations;
                 mflops += result.stats.flops as f64 / 1e6;
                 filter_mflops += result.stats.filter_flops as f64 / 1e6;
+                matvec_sum += result.stats.matvecs;
+                filter_matvec_sum += result.stats.filter_matvecs;
+                crate::eig::merge_degree_hist(&mut degree_hist, &result.stats.degree_hist);
                 let spec = spec_of(resolved, id);
                 let acc = &mut fam_accum[spec];
                 acc.problems += 1;
                 acc.iterations += result.stats.iterations;
+                acc.matvecs += result.stats.matvecs;
+                acc.filter_matvecs += result.stats.filter_matvecs;
                 acc.solve_secs += result.stats.secs;
                 acc.max_residual = acc.max_residual.max(worst);
                 if let Ok(writer) = writer_res.as_mut() {
@@ -606,6 +618,9 @@ pub fn generate_dataset_with_registry(
             report.avg_iterations = iter_sum as f64 / count.max(1) as f64;
             report.total_mflops = mflops;
             report.filter_mflops = filter_mflops;
+            report.total_matvecs = matvec_sum;
+            report.filter_matvecs = filter_matvec_sum;
+            report.degree_hist = degree_hist;
             Ok((writer, write_secs, count, fam_accum))
         });
 
@@ -641,6 +656,8 @@ pub fn generate_dataset_with_registry(
                 problems: acc.problems,
                 runs: run_spans.iter().filter(|s| s.group == i).count(),
                 iterations: acc.iterations,
+                matvecs: acc.matvecs,
+                filter_matvecs: acc.filter_matvecs,
                 avg_iterations: acc.iterations as f64 / acc.problems.max(1) as f64,
                 solve_secs: acc.solve_secs,
                 max_residual: acc.max_residual,
@@ -918,6 +935,96 @@ mod tests {
             }
         }
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn report_counts_matvecs_and_degrees() {
+        let dir = tmpdir("matvecs");
+        let cfg = small_cfg();
+        let report = generate_dataset(&cfg, &dir).unwrap();
+        assert!(report.total_matvecs > 0);
+        assert!(report.filter_matvecs > 0);
+        assert!(report.filter_matvecs < report.total_matvecs);
+        // Per-run and per-family counters sum to the run totals.
+        let shard_sum: usize = report.shards.iter().map(|s| s.matvecs).sum();
+        assert_eq!(shard_sum, report.total_matvecs);
+        let fam_sum: usize = report.families.iter().map(|f| f.matvecs).sum();
+        assert_eq!(fam_sum, report.total_matvecs);
+        let fam_filter_sum: usize = report.families.iter().map(|f| f.filter_matvecs).sum();
+        assert_eq!(fam_filter_sum, report.filter_matvecs);
+        let shard_filter_sum: usize = report.shards.iter().map(|s| s.filter_matvecs).sum();
+        assert_eq!(shard_filter_sum, report.filter_matvecs);
+        // Fixed schedule: every filtered column sits in the degree-20
+        // bucket, and the histogram prices the filter matvecs exactly.
+        let hist = &report.degree_hist;
+        let weighted: usize = hist.iter().enumerate().map(|(d, c)| d * c).sum();
+        assert_eq!(weighted, report.filter_matvecs);
+        assert_eq!(hist.iter().sum::<usize>(), hist.get(20).copied().unwrap_or(0));
+        // Per-record matvec counts land in the manifest index.
+        let reader = DatasetReader::open(&dir).unwrap();
+        for rec in reader.index() {
+            assert!(rec.matvecs > 0, "record {} has no matvec count", rec.id);
+            assert!(rec.filter_matvecs > 0 && rec.filter_matvecs < rec.matvecs);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn adaptive_pipeline_converges_and_cuts_filter_matvecs() {
+        let d_fixed = tmpdir("sched_fixed");
+        let d_adapt = tmpdir("sched_adapt");
+        let cfg = small_cfg();
+        let fixed = generate_dataset(&cfg, &d_fixed).unwrap();
+        let mut acfg = small_cfg();
+        acfg.filter_schedule = crate::eig::chebyshev::FilterSchedule::Adaptive;
+        let adaptive = generate_dataset(&acfg, &d_adapt).unwrap();
+        assert!(adaptive.all_converged);
+        assert!(adaptive.max_residual <= 1e-8 * 10.0);
+        assert!(
+            adaptive.filter_matvecs < fixed.filter_matvecs,
+            "adaptive {} vs fixed {}",
+            adaptive.filter_matvecs,
+            fixed.filter_matvecs
+        );
+        // The adaptive histogram spreads below the cap.
+        let below_cap: usize = adaptive.degree_hist.iter().take(20).sum();
+        assert!(below_cap > 0, "{:?}", adaptive.degree_hist);
+        // Same eigenvalues to solver accuracy.
+        let mut r_fixed = DatasetReader::open(&d_fixed).unwrap();
+        let mut r_adapt = DatasetReader::open(&d_adapt).unwrap();
+        for id in 0..cfg.n_problems() {
+            let a = r_fixed.read(id).unwrap();
+            let b = r_adapt.read(id).unwrap();
+            for (x, y) in a.values.iter().zip(&b.values) {
+                assert!((x - y).abs() / x.abs().max(1.0) < 1e-6, "id {id}: {x} vs {y}");
+            }
+        }
+        let _ = std::fs::remove_dir_all(&d_fixed);
+        let _ = std::fs::remove_dir_all(&d_adapt);
+    }
+
+    #[test]
+    fn explicit_fixed_schedule_is_byte_identical_to_default() {
+        // `filter_schedule: fixed` must reproduce the default-config
+        // dataset bit for bit — eigs.bin bytes and manifest text.
+        let d1 = tmpdir("fixed_default");
+        let d2 = tmpdir("fixed_explicit");
+        let cfg = small_cfg();
+        assert_eq!(
+            cfg.filter_schedule,
+            crate::eig::chebyshev::FilterSchedule::Fixed
+        );
+        generate_dataset(&cfg, &d1).unwrap();
+        // Round-trip through JSON with the knob written explicitly.
+        let json = cfg.to_json();
+        assert!(json.contains("\"filter_schedule\": \"fixed\""), "{json}");
+        let explicit = GenConfig::from_json(&json).unwrap();
+        generate_dataset(&explicit, &d2).unwrap();
+        let bin1 = std::fs::read(d1.join("eigs.bin")).unwrap();
+        let bin2 = std::fs::read(d2.join("eigs.bin")).unwrap();
+        assert_eq!(bin1, bin2, "eigs.bin must be byte-identical");
+        let _ = std::fs::remove_dir_all(&d1);
+        let _ = std::fs::remove_dir_all(&d2);
     }
 
     #[test]

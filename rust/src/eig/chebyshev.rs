@@ -14,6 +14,49 @@
 use crate::linalg::{flops, Mat};
 use crate::sparse::CsrMatrix;
 
+/// How the ChFSI loop spends polynomial degree across the iterate
+/// block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FilterSchedule {
+    /// Every column gets the full configured degree every sweep — the
+    /// paper's Algorithm 1, bit-for-bit identical to the historical
+    /// output.
+    #[default]
+    Fixed,
+    /// Convergence-aware scheduling: each active column is assigned its
+    /// own degree from its residual and the filter's per-degree
+    /// amplification on the current interval ([`required_degree`]),
+    /// columns are sorted by assigned degree, and the three-term
+    /// recurrence runs over a shrinking column window
+    /// ([`chebyshev_filter_window_into`]). Deterministic, but *not*
+    /// bit-for-bit equal to [`FilterSchedule::Fixed`].
+    Adaptive,
+}
+
+impl FilterSchedule {
+    /// Config/CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            FilterSchedule::Fixed => "fixed",
+            FilterSchedule::Adaptive => "adaptive",
+        }
+    }
+
+    /// Parse a config/CLI name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "fixed" => Some(FilterSchedule::Fixed),
+            "adaptive" => Some(FilterSchedule::Adaptive),
+            _ => None,
+        }
+    }
+}
+
+/// Smallest degree the adaptive schedule assigns to an active column.
+/// Near-converged columns still take a short filter pass so their Ritz
+/// pair keeps improving instead of stalling at the tolerance edge.
+pub const MIN_ADAPTIVE_DEGREE: usize = 2;
+
 /// Parameters of one filter application.
 #[derive(Debug, Clone, Copy)]
 pub struct FilterParams {
@@ -102,6 +145,32 @@ pub trait FilterBackend {
         out.copy_from(&r);
     }
 
+    /// Schedule-aware variant: filter column `j` of `y` to degree
+    /// `degrees[j]` (sorted descending), writing the block into `out`.
+    /// Returns the total applied degree (the filter's matvec count).
+    /// The default implementation ignores the schedule and filters the
+    /// whole block at the maximum degree — correct (extra degree only
+    /// amplifies the wanted components further) but without the
+    /// matvec savings; the native backend overrides it with the true
+    /// shrinking-window recurrence.
+    #[allow(clippy::too_many_arguments)]
+    fn filter_window_into(
+        &mut self,
+        a: &CsrMatrix,
+        y: &Mat,
+        params: &FilterParams,
+        degrees: &[usize],
+        out: &mut Mat,
+        tmp1: &mut Mat,
+        tmp2: &mut Mat,
+        threads: usize,
+    ) -> usize {
+        let mut p = *params;
+        p.degree = degrees.first().copied().unwrap_or(params.degree).max(1);
+        self.filter_into(a, y, &p, out, tmp1, tmp2, threads);
+        y.cols() * p.degree
+    }
+
     /// Diagnostic name (shows up in pipeline metrics).
     fn name(&self) -> &'static str;
 
@@ -133,6 +202,21 @@ impl FilterBackend for NativeFilter {
         threads: usize,
     ) {
         chebyshev_filter_into(a, y, params, out, tmp1, tmp2, threads);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn filter_window_into(
+        &mut self,
+        a: &CsrMatrix,
+        y: &Mat,
+        params: &FilterParams,
+        degrees: &[usize],
+        out: &mut Mat,
+        tmp1: &mut Mat,
+        tmp2: &mut Mat,
+        threads: usize,
+    ) -> usize {
+        chebyshev_filter_window_into(a, y, params, degrees, out, tmp1, tmp2, threads)
     }
 
     fn name(&self) -> &'static str {
@@ -203,11 +287,194 @@ pub fn chebyshev_filter_into(
     }
 }
 
+/// Degree the adaptive schedule assigns to one active column: the
+/// smallest `m` whose filter pass is expected to push the column's
+/// relative residual below `goal`, clamped to `[MIN_ADAPTIVE_DEGREE,
+/// cap]`.
+///
+/// The ChASE-style estimate: a Ritz pair at `θ` (below the damped
+/// interval `[α, β]`) has its unwanted error components shrunk per
+/// degree by `ρ(θ) = g + √(g² − 1)` with `g = (c − θ)/e`, because
+/// `|C_m(g)| ≈ ½ ρ(θ)^m` while `|C_m| ≤ 1` on `[α, β]`. Solving
+/// `2 · residual · ρ^{−m} ≤ goal` for `m` gives the schedule. Columns
+/// sitting inside the damped interval (`g ≤ 1` — e.g. the block-edge
+/// guard) or with unknown residuals get the cap.
+///
+/// The `goal` is the caller's per-column accuracy target for this
+/// sweep — `0.5·tol` for wanted columns in the endgame, lifted by the
+/// block's leakage floor ([`predicted_residual`] of the worst wanted
+/// column) while convergence is still bulk, and relaxed to
+/// [`guard_target`] for guard columns.
+pub fn required_degree(
+    residual: f64,
+    goal: f64,
+    theta: f64,
+    params: &FilterParams,
+    cap: usize,
+) -> usize {
+    let cap = cap.max(1);
+    let min_deg = MIN_ADAPTIVE_DEGREE.min(cap);
+    let p = params.sanitized();
+    let g = (p.center() - theta) / p.half_width();
+    if !(g > 1.0) || !residual.is_finite() || !(goal > 0.0) {
+        return cap;
+    }
+    let rho = g + (g * g - 1.0).sqrt();
+    let need = 2.0 * residual / goal;
+    if need <= 1.0 {
+        return min_deg;
+    }
+    let m = (need.ln() / rho.ln()).ceil();
+    if !m.is_finite() || m >= cap as f64 {
+        return cap;
+    }
+    (m as usize).clamp(min_deg, cap)
+}
+
+/// Predicted relative residual of a column after one cap-degree filter
+/// pass: `2·r·ρ(θ)^{−cap}` (∞ for columns the filter cannot damp —
+/// unknown residual or `θ` inside the damped interval). The maximum of
+/// this over the *wanted* columns is the block's leakage floor: the
+/// Rayleigh–Ritz step mixes columns, so aiming any column far below
+/// what the worst wanted column can reach this sweep is wasted degree.
+pub fn predicted_residual(residual: f64, theta: f64, params: &FilterParams, cap: usize) -> f64 {
+    let p = params.sanitized();
+    let g = (p.center() - theta) / p.half_width();
+    if !(g > 1.0) || !residual.is_finite() {
+        return f64::INFINITY;
+    }
+    let rho = g + (g * g - 1.0).sqrt();
+    2.0 * residual * rho.powi(-(cap.min(i32::MAX as usize) as i32))
+}
+
+/// Accuracy target for guard columns under the adaptive schedule:
+/// `10·√tol`. Guards never lock — they only stabilize the
+/// Rayleigh–Ritz step and absorb filter leakage around the spectral
+/// cut — so carrying them to the full tolerance is wasted degree;
+/// half the digits is enough to keep the wanted prefix converging at
+/// full speed (validated across all operator families by
+/// `rust/tests/adaptive_filter.rs` and the `filter_degree` bench).
+pub fn guard_target(tol: f64) -> f64 {
+    10.0 * tol.abs().sqrt()
+}
+
+/// Shrinking-window Chebyshev filter: column `j` of `y0` is filtered to
+/// degree `degrees[j]` (the per-column schedule, sorted **descending**),
+/// all inside the same three rotating buffers as
+/// [`chebyshev_filter_into`]. A column drops out of the fused SpMM the
+/// step its degree is reached — no copies, no compaction; the window is
+/// a prefix sub-slice of the row-major blocks
+/// ([`CsrMatrix::spmm_fused_cols_into`]). Returns the total applied
+/// degree `Σ degrees[j]`, i.e. the filter's matvec count.
+///
+/// Retired columns stay put in whichever physical buffer held the
+/// newest iterate at their retirement step; the buffers rotate names
+/// with period 3 (`out → tmp1 → tmp2 → out`), so after the final step
+/// `M` a column retired at step `s` sits in `out` when `(M − s) % 3 ==
+/// 0`, in `tmp1` when `1`, in `tmp2` when `2` — the single end-of-run
+/// gather copies each retired range into `out` exactly once.
+///
+/// A uniform schedule (`degrees[j] == m` for all `j`) reproduces
+/// [`chebyshev_filter_into`] at degree `m` bit for bit; a mixed
+/// schedule gives each column exactly the standalone degree-`m_j`
+/// filter (the σ sequence depends on the step index only).
+#[allow(clippy::too_many_arguments)]
+pub fn chebyshev_filter_window_into(
+    a: &CsrMatrix,
+    y0: &Mat,
+    params: &FilterParams,
+    degrees: &[usize],
+    out: &mut Mat,
+    tmp1: &mut Mat,
+    tmp2: &mut Mat,
+    threads: usize,
+) -> usize {
+    let n = a.rows();
+    let k = y0.cols();
+    assert_eq!(degrees.len(), k, "one degree per column");
+    // Correctness-critical: the shrinking window is a prefix, so an
+    // unsorted schedule would retire the wrong columns. O(k) check vs
+    // O(nnz·k·m) of work — always on.
+    assert!(
+        degrees.windows(2).all(|w| w[0] >= w[1]),
+        "degrees must be sorted descending"
+    );
+    if k == 0 {
+        out.set_shape(n, 0);
+        return 0;
+    }
+    assert!(*degrees.last().unwrap() >= 1, "filter degree must be ≥ 1");
+    let p = params.sanitized();
+    let max_deg = degrees[0];
+    let c = p.center();
+    let e = p.half_width();
+    let sigma1 = e / (p.target - c);
+    let mut sigma = sigma1;
+
+    // Y1 = (σ1/e) (A − cI) Y0 over the whole block; tmp1 keeps Y0.
+    tmp1.copy_from(y0);
+    out.set_shape(n, k);
+    tmp2.set_shape(n, k);
+    a.spmm_fused_cols_into(sigma1 / e, y0, -c * sigma1 / e, 0.0, y0, out, 0, k, threads);
+
+    // Retirement bookkeeping: (step, j0, j1) column ranges that reached
+    // their degree, in retirement order.
+    let mut retired: Vec<(usize, usize, usize)> = Vec::new();
+    let mut w = degrees.partition_point(|&d| d >= 2);
+    if w < k {
+        retired.push((1, w, k));
+    }
+    let mut s = 1usize;
+    while s < max_deg {
+        let sigma_new = 1.0 / (2.0 / sigma1 - sigma);
+        // Y⁺ = (2σ⁺/e)(A − cI) Y − σσ⁺ Y⁻ over the active window only.
+        a.spmm_fused_cols_into(
+            2.0 * sigma_new / e,
+            out,
+            -2.0 * c * sigma_new / e,
+            -sigma * sigma_new,
+            tmp1,
+            tmp2,
+            0,
+            w,
+            threads,
+        );
+        std::mem::swap(tmp1, out);
+        std::mem::swap(out, tmp2);
+        sigma = sigma_new;
+        s += 1;
+        let w_next = degrees.partition_point(|&d| d >= s + 1);
+        if w_next < w {
+            retired.push((s, w_next, w));
+        }
+        w = w_next;
+    }
+    for &(step, j0, j1) in &retired {
+        match (max_deg - step) % 3 {
+            0 => {} // already in `out`
+            1 => out.copy_cols_from(tmp1, j0, j1),
+            _ => out.copy_cols_from(tmp2, j0, j1),
+        }
+    }
+    degrees.iter().sum()
+}
+
 /// Flop cost of one filter application (used by benches and to report
 /// the paper's "Filter Flops" column without re-instrumenting).
 pub fn filter_flop_cost(a: &CsrMatrix, k: usize, degree: usize) -> u64 {
     let per_step = 2 * a.nnz() as u64 * k as u64 + 4 * a.rows() as u64 * k as u64;
     per_step * degree as u64
+}
+
+/// Schedule-aware sibling of [`filter_flop_cost`]: the cost of one
+/// shrinking-window application with per-column `degrees`. Matches the
+/// instrumented flop counters of [`chebyshev_filter_window_into`]
+/// exactly (each recurrence step costs `(2·nnz + 4·n)` flops per
+/// *active* column, and `Σ_s w_s = Σ_j m_j`). A uniform schedule
+/// reduces to `filter_flop_cost(a, k, m)`.
+pub fn filter_flop_cost_schedule(a: &CsrMatrix, degrees: &[usize]) -> u64 {
+    let per_col_step = 2 * a.nnz() as u64 + 4 * a.rows() as u64;
+    per_col_step * degrees.iter().map(|&d| d as u64).sum::<u64>()
 }
 
 /// Run a filter application while separately accounting its flops.
@@ -417,6 +684,165 @@ mod tests {
         let (mut t1, mut t2) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
         backend.filter_into(&a, &y, &params, &mut out, &mut t1, &mut t2, 2);
         assert_eq!(out, want);
+    }
+
+    #[test]
+    fn window_filter_with_uniform_degrees_is_bit_for_bit_plain_filter() {
+        let a = test_problem();
+        let params = FilterParams {
+            degree: 11,
+            lower: 5.0,
+            upper: 60.0,
+            target: 1.0,
+        };
+        let mut rng = Xoshiro256pp::seed_from_u64(21);
+        let y = Mat::randn(a.rows(), 6, &mut rng);
+        let want = chebyshev_filter(&a, &y, &params);
+        for threads in [1usize, 2, 4] {
+            let mut out = Mat::zeros(0, 0);
+            let (mut t1, mut t2) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
+            let applied = chebyshev_filter_window_into(
+                &a, &y, &params, &[11; 6], &mut out, &mut t1, &mut t2, threads,
+            );
+            assert_eq!(applied, 66);
+            assert_eq!(out, want, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn window_filter_gives_each_column_its_standalone_degree() {
+        // The σ sequence depends only on the step index, so a column
+        // retiring at degree m must equal the standalone degree-m
+        // filter of that column — for every retirement pattern the
+        // 3-buffer rotation can produce.
+        let a = test_problem();
+        let params = FilterParams {
+            degree: 14,
+            lower: 5.0,
+            upper: 60.0,
+            target: 1.0,
+        };
+        let mut rng = Xoshiro256pp::seed_from_u64(22);
+        let y = Mat::randn(a.rows(), 7, &mut rng);
+        for degrees in [
+            vec![14usize, 12, 9, 9, 5, 2, 1],
+            vec![14, 14, 14, 13, 13, 12, 11],
+            vec![6, 5, 4, 3, 2, 1, 1],
+            vec![14, 1, 1, 1, 1, 1, 1],
+            vec![3, 3, 3, 3, 3, 3, 3],
+        ] {
+            let mut out = Mat::zeros(0, 0);
+            let (mut t1, mut t2) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
+            let applied = chebyshev_filter_window_into(
+                &a, &y, &params, &degrees, &mut out, &mut t1, &mut t2, 2,
+            );
+            assert_eq!(applied, degrees.iter().sum::<usize>());
+            for (j, &m) in degrees.iter().enumerate() {
+                let pj = FilterParams { degree: m, ..params };
+                let want = chebyshev_filter(&a, &y.cols_range(j, j + 1), &pj);
+                for i in 0..a.rows() {
+                    assert_eq!(out[(i, j)], want[(i, 0)], "col {j} deg {m} ({degrees:?})");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn backend_window_default_falls_back_to_max_degree() {
+        // A backend without a native window path (the XLA route) must
+        // stay correct: the default filters everything at the max
+        // degree and reports the full matvec count.
+        struct Plain;
+        impl FilterBackend for Plain {
+            fn filter(&mut self, a: &CsrMatrix, y: &Mat, params: &FilterParams) -> Mat {
+                chebyshev_filter(a, y, params)
+            }
+            fn name(&self) -> &'static str {
+                "plain"
+            }
+        }
+        let a = test_problem();
+        let params = FilterParams {
+            degree: 9,
+            lower: 5.0,
+            upper: 60.0,
+            target: 1.0,
+        };
+        let mut rng = Xoshiro256pp::seed_from_u64(23);
+        let y = Mat::randn(a.rows(), 4, &mut rng);
+        let mut out = Mat::zeros(0, 0);
+        let (mut t1, mut t2) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
+        let mut backend = Plain;
+        let applied = backend
+            .filter_window_into(&a, &y, &params, &[7, 5, 3, 2], &mut out, &mut t1, &mut t2, 1);
+        assert_eq!(applied, 4 * 7);
+        let p7 = FilterParams { degree: 7, ..params };
+        assert_eq!(out, chebyshev_filter(&a, &y, &p7));
+    }
+
+    #[test]
+    fn required_degree_tracks_residual_and_interval() {
+        let params = FilterParams {
+            degree: 20,
+            lower: 2.0,
+            upper: 10.0,
+            target: 0.5,
+        };
+        let cap = 20;
+        // Unknown residual / guard columns inside the damped interval
+        // get the cap.
+        assert_eq!(required_degree(f64::INFINITY, 1e-8, 1.0, &params, cap), cap);
+        assert_eq!(required_degree(1e-2, 1e-8, 3.0, &params, cap), cap);
+        // Converged columns get the floor.
+        assert_eq!(
+            required_degree(1e-12, 1e-8, 0.6, &params, cap),
+            MIN_ADAPTIVE_DEGREE
+        );
+        // Monotone: smaller residual → smaller degree; θ closer to the
+        // damped interval → larger degree.
+        let d_hi = required_degree(1e-1, 1e-8, 0.6, &params, cap);
+        let d_mid = required_degree(1e-4, 1e-8, 0.6, &params, cap);
+        let d_lo = required_degree(1e-7, 1e-8, 0.6, &params, cap);
+        assert!(d_hi >= d_mid && d_mid >= d_lo, "{d_hi} {d_mid} {d_lo}");
+        assert!(d_lo >= MIN_ADAPTIVE_DEGREE);
+        let near_edge = required_degree(1e-4, 1e-8, 1.9, &params, cap);
+        assert!(near_edge >= d_mid, "edge {near_edge} vs mid {d_mid}");
+        // Never exceeds the cap.
+        assert!(required_degree(1e3, 1e-12, 1.99, &params, cap) <= cap);
+    }
+
+    #[test]
+    fn schedule_flop_cost_matches_instrumented_window() {
+        let a = test_problem();
+        let params = FilterParams {
+            degree: 10,
+            lower: 5.0,
+            upper: 50.0,
+            target: 1.0,
+        };
+        let mut rng = Xoshiro256pp::seed_from_u64(24);
+        let y = Mat::randn(a.rows(), 5, &mut rng);
+        let degrees = [10usize, 8, 4, 2, 1];
+        let before = flops::read();
+        let mut out = Mat::zeros(0, 0);
+        let (mut t1, mut t2) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
+        chebyshev_filter_window_into(&a, &y, &params, &degrees, &mut out, &mut t1, &mut t2, 1);
+        let counted = flops::read().wrapping_sub(before);
+        assert_eq!(counted, filter_flop_cost_schedule(&a, &degrees));
+        // Uniform schedules agree with the historical cost formula.
+        assert_eq!(
+            filter_flop_cost_schedule(&a, &[7; 4]),
+            filter_flop_cost(&a, 4, 7)
+        );
+    }
+
+    #[test]
+    fn filter_schedule_names_roundtrip() {
+        for s in [FilterSchedule::Fixed, FilterSchedule::Adaptive] {
+            assert_eq!(FilterSchedule::parse(s.name()), Some(s));
+        }
+        assert_eq!(FilterSchedule::parse("nope"), None);
+        assert_eq!(FilterSchedule::default(), FilterSchedule::Fixed);
     }
 
     #[test]

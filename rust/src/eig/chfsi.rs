@@ -6,11 +6,11 @@
 //! approximate invariant subspace and the iteration typically converges
 //! in a handful of passes — this is the mechanism behind SCSF's speedup.
 
-use super::chebyshev::{self, FilterBackend, FilterParams, NativeFilter};
+use super::chebyshev::{self, FilterBackend, FilterParams, FilterSchedule, NativeFilter};
 use super::solver::Workspace;
-use super::spectral_bounds::lanczos_bounds;
+use super::spectral_bounds::{lanczos_bounds, SpectralBounds};
 use super::{EigOptions, EigResult, SolveStats, WarmStart};
-use crate::linalg::qr::ortho_against_inplace;
+use crate::linalg::qr::{ortho_against_cols_inplace, ortho_against_inplace};
 use crate::linalg::symeig::sym_eig_into;
 use crate::linalg::{flops, Mat};
 use crate::rng::Xoshiro256pp;
@@ -32,10 +32,25 @@ pub struct ChfsiOptions {
     /// Row-partitioned threads for the SpMM kernels (results are
     /// bit-for-bit independent of this; default 1).
     pub threads: usize,
+    /// How polynomial degree is spent across the block:
+    /// [`FilterSchedule::Fixed`] (every column gets `degree` every
+    /// sweep — the historical, bit-for-bit-stable path) or
+    /// [`FilterSchedule::Adaptive`] (per-column degrees from residuals,
+    /// shrinking-window recurrence; `degree` becomes the per-column
+    /// cap).
+    pub schedule: FilterSchedule,
+    /// Lanczos steps for the warm-chain spectral-bound *refresh*
+    /// (adaptive schedule only): a warm-started solve whose
+    /// predecessor recorded an upper bound combines that bound with a
+    /// cheap safeguarded `warm_bound_steps`-step refresh instead of
+    /// the full `bound_steps` run. The refreshed bound stays
+    /// guaranteed (`θ_max + ‖f_k‖ ≥ λ_max` for any `k`).
+    pub warm_bound_steps: usize,
 }
 
 impl ChfsiOptions {
-    /// Defaults from plain [`EigOptions`] (degree 20, 20 % guard).
+    /// Defaults from plain [`EigOptions`] (degree 20, 20 % guard,
+    /// fixed schedule).
     pub fn from_eig(opts: &EigOptions) -> Self {
         Self {
             eig: *opts,
@@ -43,6 +58,8 @@ impl ChfsiOptions {
             guard: None,
             bound_steps: 12,
             threads: 1,
+            schedule: FilterSchedule::Fixed,
+            warm_bound_steps: 4,
         }
     }
 
@@ -57,6 +74,17 @@ impl ChfsiOptions {
         let l = self.eig.n_eigs;
         (l + self.guard_count()).min(n.saturating_sub(1)).max(l + 1)
     }
+}
+
+/// Add `count` columns at degree `d` to a filter-degree histogram
+/// (the single bump primitive behind the `Σ degree·count ==
+/// filter_matvecs` invariant; merging across solves is
+/// [`super::merge_degree_hist`]).
+fn bump_degree_hist(hist: &mut Vec<usize>, d: usize, count: usize) {
+    if hist.len() <= d {
+        hist.resize(d + 1, 0);
+    }
+    hist[d] += count;
 }
 
 /// Solve with the default native (CSR SpMM) filter backend.
@@ -100,9 +128,33 @@ pub fn solve_in(
     assert!(l >= 1 && l < n, "need 1 ≤ L < n (L={l}, n={n})");
     let block = opts.block_width(n);
     let tol = opts.eig.tol;
+    let adaptive = opts.schedule == FilterSchedule::Adaptive;
 
     // ---- Initial block and spectral estimates --------------------------
-    let bounds = lanczos_bounds(a, opts.bound_steps, opts.eig.seed);
+    // Warm-chain bound reuse (adaptive schedule only): seed the filter
+    // interval from the predecessor's recorded upper bound plus a cheap
+    // few-step safeguarded refresh — both are valid upper bounds, so
+    // their max is too. The bound handed to the *next* solve is the
+    // per-matrix refresh alone (one-link memory): chaining the max
+    // would ratchet the interval upward forever on chains whose
+    // spectra drift down. The fixed schedule always runs the full
+    // `bound_steps` estimate (bit-for-bit stability).
+    let (bounds, chain_upper) = match init.and_then(|w| w.upper) {
+        Some(prev_upper) if adaptive => {
+            let refresh = lanczos_bounds(a, opts.warm_bound_steps.max(2), opts.eig.seed);
+            (
+                SpectralBounds {
+                    lower_est: refresh.lower_est,
+                    upper: refresh.upper.max(prev_upper),
+                },
+                refresh.upper,
+            )
+        }
+        _ => {
+            let b = lanczos_bounds(a, opts.bound_steps, opts.eig.seed);
+            (b, b.upper)
+        }
+    };
     let upper = bounds.upper * (1.0 + 1e-8) + 1e-12;
     let mut rng = Xoshiro256pp::seed_from_u64(opts.eig.seed);
 
@@ -124,6 +176,7 @@ pub fn solve_in(
     // Initial interval estimates: warm starts reuse the previous
     // spectrum (paper: λ ≈ λ'₁, [α, β] from (λ'₂ … λ'_L)); cold starts
     // take one Rayleigh–Ritz on the random block.
+    let mut stats = SolveStats::default();
     let (mut target, mut alpha) = match init {
         Some(w) if w.values.len() >= 2 => {
             let lam1 = w.values[0];
@@ -137,6 +190,7 @@ pub fn solve_in(
         _ => {
             ortho_against_inplace(None, &mut v, &mut ws.gram, &mut ws.t2);
             a.spmm_into(&v, &mut ws.ax, ws.threads);
+            stats.matvecs += v.cols();
             v.t_matmul_into(&ws.ax, &mut ws.gram);
             sym_eig_into(&ws.gram, &mut ws.eig);
             v.matmul_cols_into(&ws.eig.vectors, 0, ws.eig.vectors.cols(), &mut ws.t4);
@@ -151,15 +205,42 @@ pub fn solve_in(
     };
 
     // ---- Locked storage -------------------------------------------------
-    let mut locked_vecs: Option<Mat> = None;
+    // The locked basis lives in a preallocated workspace buffer sized
+    // for all `l` wanted pairs; locking appends columns in place
+    // (`set_cols_from`) — no per-lock reallocation or hcat.
+    ws.locked.resize(n, l);
+    let mut locked_count = 0usize;
     let mut locked_vals: Vec<f64> = Vec::new();
     let mut last_theta: Vec<f64> = Vec::new();
-    let mut stats = SolveStats::default();
 
-    // The iteration loop is allocation-free modulo the (rare, prefix-
-    // bounded) locking appends: the filter ping-pongs through ws.t1-t3,
-    // A·Q lands in ws.ax, the projected problem in ws.gram/ws.eig, and
-    // the rotated block in ws.t4.
+    // Per-active-column convergence state driving the adaptive degree
+    // schedule (aligned with v's columns; empty under the fixed
+    // schedule or until residual information exists — those sweeps
+    // filter the whole block at the full degree).
+    ws.col_theta.clear();
+    ws.col_res.clear();
+    if adaptive {
+        if let Some(w) = init {
+            // Price the inherited columns' residuals on the *new*
+            // matrix with one block SpMM: `block` matvecs that let the
+            // very first sweep run scheduled degrees instead of the
+            // cap — the dominant saving on warm chains.
+            let have = w.values.len().min(v.cols());
+            let res =
+                super::rel_residuals_into(a, &w.values[..have], &v, &mut ws.ax, ws.threads);
+            stats.matvecs += v.cols();
+            ws.col_theta.extend_from_slice(&w.values[..have]);
+            ws.col_res.extend_from_slice(&res);
+            // Random padding columns carry no pair: filter at the cap.
+            ws.col_theta.resize(v.cols(), f64::INFINITY);
+            ws.col_res.resize(v.cols(), f64::INFINITY);
+        }
+    }
+
+    // The iteration loop is allocation-free: the filter ping-pongs
+    // through ws.t1-t3, A·Q lands in ws.ax, the projected problem in
+    // ws.gram/ws.eig, the rotated block in ws.t4, and locked pairs
+    // append in place inside ws.locked.
     while locked_vals.len() < l && stats.iterations < opts.eig.max_iters {
         stats.iterations += 1;
         let params = FilterParams {
@@ -172,23 +253,101 @@ pub fn solve_in(
 
         // (line 3) filter the active block into ws.t1
         let t_phase = Instant::now();
-        let ff = chebyshev::filtered_into_with_flops(
-            backend,
-            a,
-            &v,
-            &params,
-            &mut ws.t1,
-            &mut ws.t2,
-            &mut ws.t3,
-            ws.threads,
-        );
+        if adaptive && !ws.col_res.is_empty() && ws.col_res.len() == v.cols() {
+            // Per-column degrees from each column's residual and the
+            // filter's amplification on the current interval; sort
+            // descending (ties by original index — deterministic) and
+            // permute the block so the recurrence runs over a
+            // shrinking prefix window.
+            //
+            // Per-sweep accuracy goals: wanted columns aim at 0.5·tol,
+            // lifted by the block's leakage floor (the Rayleigh–Ritz
+            // step mixes columns, so aiming below what the worst
+            // wanted column can reach this sweep is wasted degree);
+            // guard columns aim at the relaxed guard target — they
+            // never lock, they only keep the RR step stable.
+            let want_here = l - locked_vals.len();
+            let mut worst_post = 0.0f64;
+            for j in 0..want_here.min(ws.col_res.len()) {
+                worst_post = worst_post.max(chebyshev::predicted_residual(
+                    ws.col_res[j],
+                    ws.col_theta[j],
+                    &params,
+                    opts.degree,
+                ));
+            }
+            let lift = if worst_post.is_finite() { 0.3 * worst_post } else { 0.0 };
+            let wanted_goal = (0.5 * tol).max(lift);
+            let guard_goal = wanted_goal.max(chebyshev::guard_target(tol));
+            ws.deg_pairs.clear();
+            for (j, (&r, &th)) in ws.col_res.iter().zip(ws.col_theta.iter()).enumerate() {
+                let goal = if j < want_here { wanted_goal } else { guard_goal };
+                let d = chebyshev::required_degree(r, goal, th, &params, opts.degree);
+                ws.deg_pairs.push((d, j));
+            }
+            ws.deg_pairs
+                .sort_unstable_by(|x, y| y.0.cmp(&x.0).then(x.1.cmp(&y.1)));
+            ws.degrees.clear();
+            ws.perm.clear();
+            for &(d, j) in ws.deg_pairs.iter() {
+                ws.degrees.push(d);
+                ws.perm.push(j);
+            }
+            ws.t4.gather_cols_into(&v, &ws.perm);
+            std::mem::swap(&mut v, &mut ws.t4);
+            let before = flops::read();
+            let applied = backend.filter_window_into(
+                a,
+                &v,
+                &params,
+                &ws.degrees,
+                &mut ws.t1,
+                &mut ws.t2,
+                &mut ws.t3,
+                ws.threads,
+            );
+            stats.filter_flops += flops::read().wrapping_sub(before);
+            stats.matvecs += applied;
+            stats.filter_matvecs += applied;
+            // The histogram must price `filter_matvecs` exactly. A
+            // backend without a native window path (the XLA default)
+            // filters the whole block at the max degree instead of the
+            // schedule — record what actually ran.
+            let scheduled: usize = ws.degrees.iter().sum();
+            if applied == scheduled {
+                for &(d, _) in ws.deg_pairs.iter() {
+                    bump_degree_hist(&mut stats.degree_hist, d, 1);
+                }
+            } else {
+                let d = ws.degrees.first().copied().unwrap_or(opts.degree).max(1);
+                bump_degree_hist(&mut stats.degree_hist, d, v.cols());
+            }
+        } else {
+            let ff = chebyshev::filtered_into_with_flops(
+                backend,
+                a,
+                &v,
+                &params,
+                &mut ws.t1,
+                &mut ws.t2,
+                &mut ws.t3,
+                ws.threads,
+            );
+            stats.filter_flops += ff;
+            stats.matvecs += v.cols() * opts.degree;
+            stats.filter_matvecs += v.cols() * opts.degree;
+            bump_degree_hist(&mut stats.degree_hist, opts.degree, v.cols());
+        }
         stats.filter_secs += t_phase.elapsed().as_secs_f64();
-        stats.filter_flops += ff;
-        stats.matvecs += v.cols() * opts.degree;
 
         // (line 4) orthonormalize [locked | filtered] in place: q = ws.t1
         let t_phase = Instant::now();
-        ortho_against_inplace(locked_vecs.as_ref(), &mut ws.t1, &mut ws.gram, &mut ws.t2);
+        ortho_against_cols_inplace(
+            (locked_count > 0).then_some((&ws.locked, locked_count)),
+            &mut ws.t1,
+            &mut ws.gram,
+            &mut ws.t2,
+        );
         stats.qr_secs += t_phase.elapsed().as_secs_f64();
 
         // (line 5-6) Rayleigh–Ritz on the active subspace
@@ -206,19 +365,25 @@ pub fn solve_in(
         let t_phase = Instant::now();
         let want_here = l - locked_vals.len(); // still-needed pairs
         let cut = want_here.min(ws.eig.values.len());
-        let res =
-            super::rel_residuals_into(a, &ws.eig.values[..cut], &ws.t4, &mut ws.ax, ws.threads);
-        stats.matvecs += cut;
+        // The adaptive schedule prices *every* active column's next
+        // degree, so it evaluates residuals for the whole block — the
+        // A·V product is full-block either way; only the cheap
+        // per-column reduction grows. The matvec counter charges the
+        // actual full-block product under both schedules, so the new
+        // manifest counters are comparable across schedules.
+        let res = if adaptive {
+            super::rel_residuals_into(a, &ws.eig.values, &ws.t4, &mut ws.ax, ws.threads)
+        } else {
+            super::rel_residuals_into(a, &ws.eig.values[..cut], &ws.t4, &mut ws.ax, ws.threads)
+        };
+        stats.matvecs += ws.t4.cols();
         let mut newly = 0;
-        while newly < res.len() && res[newly] <= tol {
+        while newly < cut && res[newly] <= tol {
             newly += 1;
         }
         if newly > 0 {
-            let new_locked = ws.t4.cols_range(0, newly);
-            locked_vecs = Some(match &locked_vecs {
-                Some(lv) => lv.hcat(&new_locked),
-                None => new_locked,
-            });
+            ws.locked.set_cols_from(locked_count, &ws.t4, 0, newly);
+            locked_count += newly;
             locked_vals.extend_from_slice(&ws.eig.values[..newly]);
         }
 
@@ -227,6 +392,12 @@ pub fn solve_in(
         // Active block for the next sweep: non-locked Ritz vectors.
         last_theta.clear();
         last_theta.extend_from_slice(&ws.eig.values[newly..]);
+        if adaptive {
+            ws.col_theta.clear();
+            ws.col_theta.extend_from_slice(&ws.eig.values[newly..]);
+            ws.col_res.clear();
+            ws.col_res.extend_from_slice(&res[newly..]);
+        }
         v.assign_cols(&ws.t4, newly, ws.t4.cols());
 
         // Updated interval (ChASE policy): damp everything the block has
@@ -246,23 +417,22 @@ pub fn solve_in(
 
     stats.flops = flops::take();
     stats.secs = t0.elapsed().as_secs_f64();
+    stats.spectral_upper = chain_upper;
 
     // Iteration cap hit before full convergence: return the best-effort
     // Ritz pairs (finalize() will report converged = false).
     if locked_vals.len() < l {
         let missing = l - locked_vals.len();
         let take = missing.min(v.cols()).min(last_theta.len());
-        let extra = v.cols_range(0, take);
-        locked_vecs = Some(match &locked_vecs {
-            Some(lv) => lv.hcat(&extra),
-            None => extra,
-        });
+        ws.locked.set_cols_from(locked_count, &v, 0, take);
+        locked_count += take;
         locked_vals.extend_from_slice(&last_theta[..take]);
     }
 
     // Assemble the L smallest locked pairs (sorted — locking order is
     // already ascending per sweep, but sweeps may interleave).
-    let locked = locked_vecs.expect("ChFSI produced no pairs at all");
+    assert!(locked_count > 0, "ChFSI produced no pairs at all");
+    debug_assert_eq!(locked_count, locked_vals.len());
     let mut order: Vec<usize> = (0..locked_vals.len()).collect();
     order.sort_by(|&x, &y| locked_vals[x].partial_cmp(&locked_vals[y]).unwrap());
     let take = order.len().min(l);
@@ -270,7 +440,7 @@ pub fn solve_in(
     let mut vectors = Mat::zeros(n, take);
     for (dst, &src) in order[..take].iter().enumerate() {
         values.push(locked_vals[src]);
-        vectors.set_col(dst, &locked.col(src));
+        vectors.set_col(dst, &ws.locked.col(src));
     }
     EigResult::finalize(a, values, vectors, stats, tol)
 }
@@ -438,6 +608,145 @@ mod tests {
             let r1 = solve_in(&a, &opts, None, &mut backend, &mut ws);
             let r2 = solve_in(&a, &opts, Some(&r1.as_warm_start()), &mut backend, &mut ws);
             assert_eq!(r1.values, fresh1.values, "threads {threads}");
+            assert_eq!(r2.values, fresh2.values, "threads {threads}");
+            assert_eq!(r2.vectors, fresh2.vectors, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn adaptive_schedule_converges_and_cuts_filter_matvecs() {
+        // Cold adaptive solves: same eigenpairs (to solver accuracy),
+        // every residual within tolerance, strictly fewer filter
+        // matvecs than the fixed degree-20 schedule.
+        for (kind, grid, l) in [
+            (OperatorKind::Poisson, 12, 8),
+            (OperatorKind::Helmholtz, 10, 6),
+        ] {
+            let a = problem(kind, grid, 3);
+            let mut opts = ChfsiOptions::from_eig(&EigOptions {
+                n_eigs: l,
+                tol: 1e-9,
+                max_iters: 300,
+                seed: 0,
+            });
+            let fixed = solve(&a, &opts, None);
+            opts.schedule = FilterSchedule::Adaptive;
+            let ad = solve(&a, &opts, None);
+            assert!(ad.stats.converged, "{kind:?}: {:?}", ad.residuals);
+            for r in &ad.residuals {
+                assert!(*r <= 1e-9, "{kind:?}: residual {r}");
+            }
+            for (x, y) in ad.values.iter().zip(&fixed.values) {
+                assert!((x - y).abs() / y.abs().max(1.0) < 1e-7, "{kind:?}: {x} vs {y}");
+            }
+            assert!(
+                ad.stats.filter_matvecs < fixed.stats.filter_matvecs,
+                "{kind:?}: adaptive {} vs fixed {}",
+                ad.stats.filter_matvecs,
+                fixed.stats.filter_matvecs
+            );
+            // The histogram accounts every filtered column, and the
+            // adaptive one actually spreads below the cap.
+            assert_eq!(
+                ad.stats.degree_hist.iter().enumerate().map(|(d, c)| d * c).sum::<usize>(),
+                ad.stats.filter_matvecs
+            );
+            assert!(ad.stats.degree_hist.len() <= opts.degree + 1);
+            assert_eq!(
+                fixed.stats.degree_hist.iter().enumerate().map(|(d, c)| d * c).sum::<usize>(),
+                fixed.stats.filter_matvecs
+            );
+        }
+    }
+
+    #[test]
+    fn adaptive_warm_start_reuses_bounds_and_converges() {
+        let chain = operators::helmholtz::generate_perturbed_chain(
+            GenOptions {
+                grid: 12,
+                ..Default::default()
+            },
+            2,
+            0.05,
+            7,
+        );
+        let mut opts = ChfsiOptions::from_eig(&EigOptions {
+            n_eigs: 8,
+            tol: 1e-8,
+            max_iters: 300,
+            seed: 0,
+        });
+        opts.schedule = FilterSchedule::Adaptive;
+        let r1 = solve(&chain[0].matrix, &opts, None);
+        assert!(r1.stats.converged);
+        // The solve records the bound it ran with and hands it on.
+        assert!(r1.stats.spectral_upper > 0.0);
+        let warm_start = r1.as_warm_start();
+        assert_eq!(warm_start.upper, Some(r1.stats.spectral_upper));
+        let warm = solve(&chain[1].matrix, &opts, Some(&warm_start));
+        assert!(warm.stats.converged, "{:?}", warm.residuals);
+        for r in &warm.residuals {
+            assert!(*r <= 1e-8, "residual {r}");
+        }
+        // Warm adaptive must beat cold adaptive on filter matvecs.
+        let cold = solve(&chain[1].matrix, &opts, None);
+        assert!(
+            warm.stats.filter_matvecs < cold.stats.filter_matvecs,
+            "warm {} vs cold {}",
+            warm.stats.filter_matvecs,
+            cold.stats.filter_matvecs
+        );
+    }
+
+    #[test]
+    fn fixed_schedule_is_the_default_and_unchanged() {
+        // `from_eig` defaults to Fixed, and an explicit Fixed produces
+        // exactly the same pairs as the default options — the knob's
+        // bit-for-bit contract at the solver level.
+        let a = problem(OperatorKind::Elliptic, 10, 4);
+        let base = ChfsiOptions::from_eig(&EigOptions {
+            n_eigs: 5,
+            tol: 1e-9,
+            max_iters: 300,
+            seed: 1,
+        });
+        assert_eq!(base.schedule, FilterSchedule::Fixed);
+        let mut explicit = base;
+        explicit.schedule = FilterSchedule::Fixed;
+        let r1 = solve(&a, &base, None);
+        let r2 = solve(&a, &explicit, None);
+        assert_eq!(r1.values, r2.values);
+        assert_eq!(r1.vectors, r2.vectors);
+        // And the warm-started second solves agree bit-for-bit too
+        // (fixed ignores the carried bound).
+        let w1 = solve(&a, &base, Some(&r1.as_warm_start()));
+        let w2 = solve(&a, &explicit, Some(&r2.as_warm_start()));
+        assert_eq!(w1.values, w2.values);
+        assert_eq!(w1.vectors, w2.vectors);
+    }
+
+    #[test]
+    fn adaptive_workspace_reuse_is_deterministic_across_threads() {
+        // Same contract the fixed path has: reused workspaces and any
+        // thread count give bit-for-bit identical adaptive results.
+        let a = problem(OperatorKind::Helmholtz, 10, 13);
+        let mut opts = ChfsiOptions::from_eig(&EigOptions {
+            n_eigs: 6,
+            tol: 1e-9,
+            max_iters: 300,
+            seed: 0,
+        });
+        opts.schedule = FilterSchedule::Adaptive;
+        let fresh1 = solve(&a, &opts, None);
+        let fresh2 = solve(&a, &opts, Some(&fresh1.as_warm_start()));
+        for threads in [1usize, 2, 4] {
+            opts.threads = threads;
+            let mut backend = NativeFilter;
+            let mut ws = Workspace::new(threads);
+            let r1 = solve_in(&a, &opts, None, &mut backend, &mut ws);
+            let r2 = solve_in(&a, &opts, Some(&r1.as_warm_start()), &mut backend, &mut ws);
+            assert_eq!(r1.values, fresh1.values, "threads {threads}");
+            assert_eq!(r1.vectors, fresh1.vectors, "threads {threads}");
             assert_eq!(r2.values, fresh2.values, "threads {threads}");
             assert_eq!(r2.vectors, fresh2.vectors, "threads {threads}");
         }

@@ -63,6 +63,12 @@ pub struct WarmStart {
     pub values: Vec<f64>,
     /// Previous problem's eigenvectors (n × ≥ values.len()).
     pub vectors: Mat,
+    /// Predecessor's safeguarded spectral upper bound, if the solver
+    /// recorded one ([`SolveStats::spectral_upper`]). Under the
+    /// adaptive filter schedule a warm-started ChFSI combines it with
+    /// a cheap few-step bound refresh instead of a full
+    /// [`spectral_bounds::lanczos_bounds`] run.
+    pub upper: Option<f64>,
 }
 
 /// Work and convergence accounting for one eigensolve.
@@ -70,8 +76,26 @@ pub struct WarmStart {
 pub struct SolveStats {
     /// Outer iterations (solver-specific unit; see each module).
     pub iterations: usize,
-    /// Number of `A·x` products applied (counting each block column).
+    /// Number of `A·x` products applied (counting each block column:
+    /// filter, Rayleigh–Ritz, residual evaluation, and warm-start
+    /// pricing). The O(`bound_steps`) single-vector Lanczos products
+    /// of the spectral-bound estimate are excluded — they are not
+    /// block work and would tie the counter to the estimator's early
+    /// exits.
     pub matvecs: usize,
+    /// `A·x` products spent inside the Chebyshev filter (SCSF/ChFSI
+    /// only) — the quantity the adaptive degree schedule minimizes.
+    pub filter_matvecs: usize,
+    /// Histogram of per-column filter degrees: `degree_hist[m]` counts
+    /// columns filtered at degree `m`, summed over sweeps (SCSF/ChFSI
+    /// only; the fixed schedule puts everything in one bucket).
+    pub degree_hist: Vec<usize>,
+    /// Safeguarded spectral upper bound of *this* matrix from the
+    /// solve's own Lanczos estimate (0 for solvers without a Chebyshev
+    /// filter). Chained into the next solve's [`WarmStart::upper`];
+    /// deliberately *not* the max with any inherited bound, so chains
+    /// with drifting spectra never ratchet their filter interval.
+    pub spectral_upper: f64,
     /// Total floating-point operations.
     pub flops: u64,
     /// Flops spent inside the Chebyshev filter (SCSF/ChFSI only).
@@ -127,7 +151,22 @@ impl EigResult {
         WarmStart {
             values: self.values.clone(),
             vectors: self.vectors.clone(),
+            upper: (self.stats.spectral_upper > 0.0).then_some(self.stats.spectral_upper),
         }
+    }
+}
+
+/// Merge a per-solve filter-degree histogram into an accumulator
+/// (index = degree, value = column count; the accumulator grows to
+/// the longer length). The single definition used by sequence-level
+/// and pipeline-level aggregation, so the invariant
+/// `Σ degree·count == filter_matvecs` survives either path.
+pub fn merge_degree_hist(into: &mut Vec<usize>, from: &[usize]) {
+    if from.len() > into.len() {
+        into.resize(from.len(), 0);
+    }
+    for (d, c) in from.iter().enumerate() {
+        into[d] += c;
     }
 }
 

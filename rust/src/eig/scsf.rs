@@ -101,6 +101,27 @@ impl SequenceResult {
             / 1e6
     }
 
+    /// Total `A·x` products across the sequence (all solver phases).
+    pub fn total_matvecs(&self) -> usize {
+        self.results.iter().map(|r| r.stats.matvecs).sum()
+    }
+
+    /// `A·x` products spent inside the Chebyshev filter — the quantity
+    /// the adaptive degree schedule cuts versus fixed degree-20.
+    pub fn filter_matvecs(&self) -> usize {
+        self.results.iter().map(|r| r.stats.filter_matvecs).sum()
+    }
+
+    /// Merged per-column filter-degree histogram across the sequence
+    /// (`hist[m]` = columns filtered at degree `m`).
+    pub fn degree_hist(&self) -> Vec<usize> {
+        let mut hist: Vec<usize> = Vec::new();
+        for r in &self.results {
+            super::merge_degree_hist(&mut hist, &r.stats.degree_hist);
+        }
+        hist
+    }
+
     /// True if every solve converged.
     pub fn all_converged(&self) -> bool {
         self.results.iter().all(|r| r.stats.converged)
@@ -239,6 +260,12 @@ impl Chain {
     /// Solve the next problem of the chain, inheriting the current warm
     /// start (if any, and if `opts.warm_start`) and capturing the
     /// result's eigenpairs for the solve after it.
+    ///
+    /// The carried [`WarmStart`] also transports the predecessor's
+    /// spectral upper bound ([`WarmStart::upper`]): under the adaptive
+    /// filter schedule a warm solve seeds its interval from it plus a
+    /// cheap bound refresh instead of a full Lanczos estimate. Family
+    /// or dimension resets drop the bound together with the subspace.
     pub fn solve_next(
         &mut self,
         a: &crate::sparse::CsrMatrix,

@@ -67,6 +67,19 @@ pub struct Workspace {
     pub vec1: Vec<f64>,
     /// Vector scratch #2.
     pub vec2: Vec<f64>,
+    /// ChFSI locked basis (`n × L`), populated prefix grows in place as
+    /// pairs lock — replaces the per-lock `hcat` reallocation.
+    pub locked: Mat,
+    /// Adaptive-schedule scratch: Ritz value per active column.
+    pub col_theta: Vec<f64>,
+    /// Adaptive-schedule scratch: last residual per active column.
+    pub col_res: Vec<f64>,
+    /// Adaptive-schedule scratch: (degree, column) pairs under sort.
+    pub deg_pairs: Vec<(usize, usize)>,
+    /// Adaptive-schedule scratch: per-column degrees, sorted descending.
+    pub degrees: Vec<usize>,
+    /// Adaptive-schedule scratch: column permutation matching `degrees`.
+    pub perm: Vec<usize>,
 }
 
 impl Workspace {
@@ -88,6 +101,12 @@ impl Workspace {
             basis: Vec::new(),
             vec1: Vec::new(),
             vec2: Vec::new(),
+            locked: Mat::zeros(0, 0),
+            col_theta: Vec::new(),
+            col_res: Vec::new(),
+            deg_pairs: Vec::new(),
+            degrees: Vec::new(),
+            perm: Vec::new(),
         }
     }
 
@@ -121,7 +140,9 @@ impl Workspace {
 
     /// Total f64 *capacity* currently held. Stable across same-shape
     /// re-solves (buffers only ever grow), which is what the regression
-    /// tests assert.
+    /// tests assert. Counts `f64` slots only — the usize-typed adaptive
+    /// schedule scratch (`deg_pairs`/`degrees`/`perm`, O(block) each)
+    /// is deliberately excluded.
     pub fn capacity_f64(&self) -> usize {
         self.ax.capacity()
             + self.t1.capacity()
@@ -135,6 +156,9 @@ impl Workspace {
             + self.basis.iter().map(|b| b.capacity()).sum::<usize>()
             + self.vec1.capacity()
             + self.vec2.capacity()
+            + self.locked.capacity()
+            + self.col_theta.capacity()
+            + self.col_res.capacity()
     }
 }
 

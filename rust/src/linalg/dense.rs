@@ -163,6 +163,30 @@ impl Mat {
         out
     }
 
+    /// Overwrite columns `[j0, j1)` of `self` with the same columns of
+    /// `src` (shapes must match). This is the retire-gather of the
+    /// shrinking-window Chebyshev filter: a retired column's final
+    /// value is copied back into the result buffer exactly once.
+    pub fn copy_cols_from(&mut self, src: &Mat, j0: usize, j1: usize) {
+        assert_eq!((self.rows, self.cols), (src.rows, src.cols));
+        self.set_cols_from(j0, src, j0, j1);
+    }
+
+    /// Become the column gather `src[:, perm]`, reusing this matrix's
+    /// allocation: column `t` of `self` is column `perm[t]` of `src`
+    /// (the degree-schedule permutation of the adaptive filter).
+    pub fn gather_cols_into(&mut self, src: &Mat, perm: &[usize]) {
+        debug_assert!(perm.iter().all(|&j| j < src.cols));
+        self.set_shape(src.rows, perm.len());
+        for i in 0..src.rows {
+            let srow = src.row(i);
+            let drow = self.row_mut(i);
+            for (t, &j) in perm.iter().enumerate() {
+                drow[t] = srow[j];
+            }
+        }
+    }
+
     /// Horizontal concatenation `[self | other]`.
     pub fn hcat(&self, other: &Mat) -> Mat {
         assert_eq!(self.rows, other.rows);
@@ -256,13 +280,23 @@ impl Mat {
     /// order, hence bit-for-bit results) with the output written into a
     /// caller-owned matrix that is resized in place.
     pub fn t_matmul_into(&self, b: &Mat, c: &mut Mat) {
+        self.t_matmul_ncols_into(self.cols, b, c);
+    }
+
+    /// `c ← self[:, :ncols]ᵀ · b` without materializing the column
+    /// slice. With `ncols == self.cols()` this is exactly
+    /// [`Mat::t_matmul_into`] (same loop order, bit-for-bit); smaller
+    /// `ncols` lets the ChFSI locked-basis buffer project against only
+    /// its populated prefix.
+    pub fn t_matmul_ncols_into(&self, ncols: usize, b: &Mat, c: &mut Mat) {
         assert_eq!(self.rows, b.rows);
-        let (n, k, m) = (self.rows, self.cols, b.cols);
+        assert!(ncols <= self.cols);
+        let (n, k, m) = (self.rows, ncols, b.cols);
         flops::add(2 * (n * k * m) as u64);
         c.resize(k, m);
         // Accumulate rank-1 contributions row by row: C += a_iᵀ b_i.
         for i in 0..n {
-            let arow = self.row(i);
+            let arow = &self.row(i)[..k];
             let brow = b.row(i);
             for (p, &av) in arow.iter().enumerate() {
                 if av != 0.0 {
@@ -272,6 +306,44 @@ impl Mat {
                     }
                 }
             }
+        }
+    }
+
+    /// `c ← self[:, :ncols] · b` without materializing the column slice
+    /// — the correction product of the locked-prefix orthogonalization
+    /// (`U[:, :count] · (Uᵀ B)`). With `ncols == self.cols()` the
+    /// arithmetic matches `gemm(1.0, self, b, 0.0, c)` bit for bit.
+    pub fn matmul_ncols_into(&self, ncols: usize, b: &Mat, c: &mut Mat) {
+        assert!(ncols <= self.cols);
+        assert_eq!(ncols, b.rows, "matmul_ncols_into inner dimension");
+        let m = b.cols;
+        flops::add(2 * (self.rows * ncols * m) as u64);
+        c.resize(self.rows, m);
+        for i in 0..self.rows {
+            let arow = &self.row(i)[..ncols];
+            let crow = c.row_mut(i);
+            for (k, &aik) in arow.iter().enumerate() {
+                if aik == 0.0 {
+                    continue;
+                }
+                let brow = b.row(k);
+                for j in 0..m {
+                    crow[j] += aik * brow[j];
+                }
+            }
+        }
+    }
+
+    /// Overwrite columns `[dst0, dst0 + (j1 − j0))` of `self` with
+    /// columns `[j0, j1)` of `src` — the in-place append of the ChFSI
+    /// locked-basis buffer (no reallocation, no hcat).
+    pub fn set_cols_from(&mut self, dst0: usize, src: &Mat, j0: usize, j1: usize) {
+        assert_eq!(self.rows, src.rows);
+        assert!(j0 <= j1 && j1 <= src.cols);
+        assert!(dst0 + (j1 - j0) <= self.cols);
+        for i in 0..self.rows {
+            let srow = &src.row(i)[j0..j1];
+            self.row_mut(i)[dst0..dst0 + srow.len()].copy_from_slice(srow);
         }
     }
 
@@ -533,6 +605,63 @@ mod tests {
         assert_eq!(got, a.matmul(&b.cols_range(2, 6)));
         a.matmul_cols_into(&b, 0, 7, &mut got);
         assert_eq!(got, a.matmul(&b));
+    }
+
+    #[test]
+    fn ncols_matmuls_match_sliced_full_versions() {
+        let mut rng = Xoshiro256pp::seed_from_u64(31);
+        let u = Mat::randn(12, 6, &mut rng);
+        let b = Mat::randn(12, 5, &mut rng);
+        for c in 0..=6usize {
+            let mut got = Mat::zeros(0, 0);
+            u.t_matmul_ncols_into(c, &b, &mut got);
+            assert_eq!(got, u.cols_range(0, c).t_matmul(&b), "t_matmul ncols={c}");
+            let g = Mat::randn(c, 4, &mut rng);
+            let mut corr = Mat::zeros(0, 0);
+            u.matmul_ncols_into(c, &g, &mut corr);
+            let want = u.cols_range(0, c).matmul(&g);
+            assert_eq!(corr, want, "matmul ncols={c}");
+        }
+        // Full-width call is bit-for-bit the classic t_matmul_into.
+        let mut full = Mat::zeros(0, 0);
+        u.t_matmul_into(&b, &mut full);
+        let mut via = Mat::zeros(0, 0);
+        u.t_matmul_ncols_into(6, &b, &mut via);
+        assert_eq!(full, via);
+    }
+
+    #[test]
+    fn copy_and_set_cols_move_ranges() {
+        let mut rng = Xoshiro256pp::seed_from_u64(32);
+        let src = Mat::randn(7, 5, &mut rng);
+        let mut dst = Mat::zeros(7, 5);
+        dst.copy_cols_from(&src, 1, 4);
+        for j in 0..5 {
+            let want = if (1..4).contains(&j) { src.col(j) } else { vec![0.0; 7] };
+            assert_eq!(dst.col(j), want, "col {j}");
+        }
+        let mut app = Mat::zeros(7, 6);
+        app.set_cols_from(2, &src, 0, 3);
+        assert_eq!(app.col(2), src.col(0));
+        assert_eq!(app.col(4), src.col(2));
+        assert_eq!(app.col(0), vec![0.0; 7]);
+        assert_eq!(app.col(5), vec![0.0; 7]);
+    }
+
+    #[test]
+    fn gather_cols_applies_permutation() {
+        let mut rng = Xoshiro256pp::seed_from_u64(33);
+        let src = Mat::randn(6, 4, &mut rng);
+        let mut out = Mat::zeros(0, 0);
+        out.gather_cols_into(&src, &[3, 0, 2, 1]);
+        assert_eq!(out.col(0), src.col(3));
+        assert_eq!(out.col(1), src.col(0));
+        assert_eq!(out.col(2), src.col(2));
+        assert_eq!(out.col(3), src.col(1));
+        // Duplicated and shortened gathers work too.
+        out.gather_cols_into(&src, &[1, 1]);
+        assert_eq!((out.rows(), out.cols()), (6, 2));
+        assert_eq!(out.col(0), src.col(1));
     }
 
     #[test]

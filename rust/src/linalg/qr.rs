@@ -6,7 +6,7 @@
 //! with an automatic fall back to Householder QR when the filter has
 //! made the block too ill-conditioned for the Gram-matrix approach.
 
-use super::dense::{gemm, Mat};
+use super::dense::Mat;
 use super::flops;
 
 /// Thin QR of a tall matrix `A (n × k, n ≥ k)` via Householder reflectors.
@@ -211,13 +211,28 @@ pub fn ortho_against_inplace(
     gram: &mut Mat,
     corr: &mut Mat,
 ) {
-    if let Some(u) = locked {
+    ortho_against_cols_inplace(locked.map(|u| (u, u.cols())), block, gram, corr)
+}
+
+/// [`ortho_against_inplace`] against only the first `count` columns of
+/// the locked matrix — the entry point for ChFSI's preallocated
+/// locked-basis buffer, whose populated prefix grows in place as pairs
+/// lock ([`crate::eig::solver::Workspace`]). With `count ==
+/// locked.cols()` the arithmetic (and therefore the result) is
+/// bit-for-bit [`ortho_against_inplace`]'s.
+pub fn ortho_against_cols_inplace(
+    locked: Option<(&Mat, usize)>,
+    block: &mut Mat,
+    gram: &mut Mat,
+    corr: &mut Mat,
+) {
+    if let Some((u, count)) = locked {
         assert_eq!(u.rows(), block.rows());
+        assert!(count <= u.cols());
         for _pass in 0..2 {
-            // B ← B − U (Uᵀ B)
-            u.t_matmul_into(block, gram);
-            corr.resize(u.rows(), gram.cols());
-            gemm(1.0, u, gram, 0.0, corr);
+            // B ← B − U[:, :count] (U[:, :count]ᵀ B)
+            u.t_matmul_ncols_into(count, block, gram);
+            u.matmul_ncols_into(count, gram, corr);
             block.axpy(-1.0, corr);
         }
     }
@@ -378,6 +393,32 @@ mod tests {
             let mut corr = Mat::zeros(0, 0);
             ortho_against_inplace(locked, &mut got, &mut gram, &mut corr);
             assert_eq!(got, want);
+        }
+    }
+
+    #[test]
+    fn cols_limited_ortho_matches_sliced_locked_basis() {
+        // The preallocated locked-buffer path: projecting against the
+        // first `c` columns of a wide buffer must be bit-for-bit equal
+        // to projecting against a c-column matrix holding those
+        // columns (the historical hcat-built locked basis).
+        let mut rng = Xoshiro256pp::seed_from_u64(9);
+        let wide = householder_qr(&Mat::randn(28, 6, &mut rng));
+        for c in 0..=6usize {
+            let b = Mat::randn(28, 4, &mut rng);
+            let mut want = b.clone();
+            let (mut g1, mut c1) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
+            let sliced = wide.cols_range(0, c);
+            ortho_against_inplace((c > 0).then_some(&sliced), &mut want, &mut g1, &mut c1);
+            let mut got = b.clone();
+            let (mut g2, mut c2) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
+            ortho_against_cols_inplace(
+                (c > 0).then_some((&wide, c)),
+                &mut got,
+                &mut g2,
+                &mut c2,
+            );
+            assert_eq!(got, want, "count = {c}");
         }
     }
 

@@ -7,7 +7,8 @@
 //!               [--grid 32] [--l 16] [--tol 1e-8] [--seed 0] [--shards 2]
 //!               [--threads 1] [--sort fft|greedy|none] [--p0 20]
 //!               [--sort-scope global|shard] [--handoff off|inf|DIST]
-//!               [--warm true|false]
+//!               [--warm true|false] [--degree 20]
+//!               [--filter-schedule fixed|adaptive]
 //!               [--backend native|xla] [--artifacts DIR] --out DIR
 //! scsf families                  # list registered operator families
 //! scsf repro <table1|table2|table3|table4|table5|fig3|table11|table12|
@@ -147,6 +148,14 @@ fn print_help() {
          single-family shorthand (legacy flags):\n\
          \x20 scsf generate --kind helmholtz --n 128 --grid 32 --out ds/\n\
          \n\
+         filter scheduling (--filter-schedule fixed|adaptive):\n\
+         \x20 fixed     every column gets the full --degree each sweep\n\
+         \x20           (default; bit-for-bit the historical output)\n\
+         \x20 adaptive  per-column degrees from residuals, shrinking-window\n\
+         \x20           kernels, warm-chain bound reuse — fewer filter\n\
+         \x20           matvecs at the same tolerance (see manifest\n\
+         \x20           total_matvecs / filter_matvecs / degree_hist)\n\
+         \n\
          see `rust/src/main.rs` docs for all flags"
     );
 }
@@ -236,6 +245,10 @@ fn cmd_generate(args: &Args) -> Result<()> {
     if let Some(x) = args.get_usize("degree")? {
         cfg.degree = x;
     }
+    if let Some(s) = args.get("filter-schedule") {
+        cfg.filter_schedule = scsf::eig::chebyshev::FilterSchedule::parse(s)
+            .ok_or_else(|| anyhow!("unknown filter schedule {s} (fixed|adaptive)"))?;
+    }
     if let Some(p0) = args.get_usize("p0")? {
         cfg.sort = SortMethod::TruncatedFft { p0 };
     }
@@ -294,12 +307,15 @@ fn cmd_generate(args: &Args) -> Result<()> {
     println!("{}", report.summary());
     for f in &report.families {
         println!(
-            "  family {:<14} {:3} problems / {} runs, avg iters {:5.1}, solve {:6.2}s, \
-             max residual {:.2e} (tol {:.0e}), sort quality {:.3}",
+            "  family {:<14} {:3} problems / {} runs, avg iters {:5.1}, {} matvecs \
+             ({} filter), solve {:6.2}s, max residual {:.2e} (tol {:.0e}), \
+             sort quality {:.3}",
             f.family,
             f.problems,
             f.runs,
             f.avg_iterations,
+            f.matvecs,
+            f.filter_matvecs,
             f.solve_secs,
             f.max_residual,
             f.tol,

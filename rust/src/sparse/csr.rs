@@ -202,7 +202,41 @@ impl CsrMatrix {
         y
     }
 
-    /// Non-allocating SpMV with optional row-partitioned threading:
+    /// Row boundaries balancing stored non-zeros across `nt` chunks
+    /// (`len == nt + 1`, starts at 0, ends at `rows`, nondecreasing).
+    /// FEM/elliptic assemblies have uneven rows, so equal-row splits
+    /// leave threads idle while one chunk owns most of the matrix; the
+    /// threaded kernels partition by nnz instead. Changing the split
+    /// never changes results — every row keeps its serial accumulation
+    /// order.
+    pub fn nnz_splits(&self, nt: usize) -> Vec<usize> {
+        let mut splits = Vec::with_capacity(nt + 1);
+        splits.push(0usize);
+        for t in 1..=nt {
+            let prev = *splits.last().unwrap();
+            splits.push(self.nnz_split_at(t, nt, prev));
+        }
+        splits
+    }
+
+    /// Boundary `t` of the nnz partition (the single formula behind
+    /// [`CsrMatrix::nnz_splits`]): first row whose cumulative nnz
+    /// reaches `t/nt` of the total, clamped monotone past `prev`. The
+    /// threaded kernels call this directly so the hot path stays
+    /// allocation-free.
+    #[inline]
+    fn nnz_split_at(&self, t: usize, nt: usize, prev: usize) -> usize {
+        if t >= nt {
+            return self.rows;
+        }
+        let target = self.nnz() * t / nt;
+        self.indptr
+            .partition_point(|&x| x < target)
+            .min(self.rows)
+            .max(prev)
+    }
+
+    /// Non-allocating SpMV with optional nnz-partitioned threading:
     /// `y = A x`, computed on `threads` scoped threads (`≤ 1` → the
     /// serial kernel). Each row is accumulated in the same order as the
     /// serial kernel, so results are bit-for-bit identical for every
@@ -218,13 +252,21 @@ impl CsrMatrix {
         // Worker flops are accounted on the dispatching thread — the
         // thread-local counter never sees the scoped workers.
         flops::add(2 * self.nnz() as u64);
-        let rows_per = self.rows.div_ceil(nt);
         std::thread::scope(|scope| {
-            for (b, ychunk) in y.chunks_mut(rows_per).enumerate() {
-                let row0 = b * rows_per;
+            let mut rest = &mut y[..];
+            let mut row0 = 0usize;
+            for t in 1..=nt {
+                let row1 = self.nnz_split_at(t, nt, row0);
+                let (ychunk, tail) = rest.split_at_mut(row1 - row0);
+                rest = tail;
+                let r0 = row0;
+                row0 = row1;
+                if row1 == r0 {
+                    continue;
+                }
                 scope.spawn(move || {
                     for (r, yi) in ychunk.iter_mut().enumerate() {
-                        let (cols, vals) = self.row(row0 + r);
+                        let (cols, vals) = self.row(r0 + r);
                         let mut acc = 0.0;
                         for (c, v) in cols.iter().zip(vals) {
                             acc += v * x[*c as usize];
@@ -236,7 +278,7 @@ impl CsrMatrix {
         });
     }
 
-    /// Non-allocating SpMM with optional row-partitioned threading:
+    /// Non-allocating SpMM with optional nnz-partitioned threading:
     /// `Y = A X` on `threads` scoped threads (`≤ 1` → the serial
     /// kernel). The row blocks are disjoint and every row uses the
     /// serial accumulation order, so the result is deterministic —
@@ -250,28 +292,74 @@ impl CsrMatrix {
             self.spmm(x, y);
             return;
         }
+        self.spmm_cols_into(x, y, 0, k, threads);
+    }
+
+    /// Column-windowed SpMM: `Y[:, j0..j1] = (A X)[:, j0..j1]`, with
+    /// `X` and `Y` full-width row-major blocks of equal column count.
+    /// Columns outside the window are left untouched, which is what
+    /// makes the adaptive filter's shrinking window zero-cost — retired
+    /// columns simply stop being part of the kernel's sub-slices. `Y`
+    /// must already have the output shape (unlike
+    /// [`CsrMatrix::spmm_into`], which reshapes, this kernel preserves
+    /// the unwindowed columns). Bit-for-bit deterministic for any
+    /// thread count, and identical on the window to the full kernel.
+    pub fn spmm_cols_into(&self, x: &Mat, y: &mut Mat, j0: usize, j1: usize, threads: usize) {
+        let k = x.cols();
         assert_eq!(x.rows(), self.cols, "spmm shape: A.cols == X.rows");
-        flops::add(2 * (self.nnz() * k) as u64);
-        let rows_per = self.rows.div_ceil(nt);
+        assert_eq!((y.rows(), y.cols()), (self.rows, k), "spmm_cols_into output shape");
+        assert!(j0 <= j1 && j1 <= k, "column window out of range");
+        if j0 == j1 || self.rows == 0 {
+            return;
+        }
+        flops::add(2 * (self.nnz() * (j1 - j0)) as u64);
+        let nt = threads.max(1).min(self.rows.max(1));
         let yd = y.data_mut();
+        if nt <= 1 {
+            self.spmm_cols_rows(x, yd, 0, j0, j1, k);
+            return;
+        }
         std::thread::scope(|scope| {
-            for (b, ychunk) in yd.chunks_mut(rows_per * k).enumerate() {
-                let row0 = b * rows_per;
-                scope.spawn(move || {
-                    for (r, yrow) in ychunk.chunks_mut(k).enumerate() {
-                        let (cols, vals) = self.row(row0 + r);
-                        yrow.fill(0.0);
-                        for (c, v) in cols.iter().zip(vals) {
-                            let xrow = x.row(*c as usize);
-                            let a = *v;
-                            for t in 0..k {
-                                yrow[t] += a * xrow[t];
-                            }
-                        }
-                    }
-                });
+            let mut rest = yd;
+            let mut row0 = 0usize;
+            for t in 1..=nt {
+                let row1 = self.nnz_split_at(t, nt, row0);
+                let (ychunk, tail) = rest.split_at_mut((row1 - row0) * k);
+                rest = tail;
+                let r0 = row0;
+                row0 = row1;
+                if row1 == r0 {
+                    continue;
+                }
+                scope.spawn(move || self.spmm_cols_rows(x, ychunk, r0, j0, j1, k));
             }
         });
+    }
+
+    /// One row-chunk of the windowed SpMM (shared by the serial and
+    /// threaded paths so their arithmetic cannot drift).
+    fn spmm_cols_rows(
+        &self,
+        x: &Mat,
+        ychunk: &mut [f64],
+        row0: usize,
+        j0: usize,
+        j1: usize,
+        k: usize,
+    ) {
+        let w = j1 - j0;
+        for (r, yrow) in ychunk.chunks_mut(k).enumerate() {
+            let (cols, vals) = self.row(row0 + r);
+            let ywin = &mut yrow[j0..j1];
+            ywin.fill(0.0);
+            for (c, v) in cols.iter().zip(vals) {
+                let xrow = &x.row(*c as usize)[j0..j1];
+                let a = *v;
+                for t in 0..w {
+                    ywin[t] += a * xrow[t];
+                }
+            }
+        }
     }
 
     /// Fused filter step `Y = a·(A X) + b·X + c·Z` — one pass over A plus
@@ -307,7 +395,7 @@ impl CsrMatrix {
     }
 
     /// Threaded variant of [`CsrMatrix::spmm_fused`] — the Chebyshev
-    /// three-term step `Y = a·(A X) + b·X + c·Z` row-partitioned over
+    /// three-term step `Y = a·(A X) + b·X + c·Z` nnz-partitioned over
     /// `threads` scoped threads (`≤ 1` → the serial kernel), with the
     /// same per-row accumulation order and therefore bit-for-bit
     /// deterministic output for any thread count.
@@ -330,36 +418,104 @@ impl CsrMatrix {
             self.spmm_fused(a, x, b, c, z, y);
             return;
         }
+        self.spmm_fused_cols_into(a, x, b, c, z, y, 0, k, threads);
+    }
+
+    /// Column-windowed fused filter step:
+    /// `Y[:, j0..j1] = a·(A X)[:, j0..j1] + b·X[:, j0..j1] + c·Z[:, j0..j1]`
+    /// with full-width blocks; columns outside the window are left
+    /// untouched. This is the kernel behind the adaptive filter's
+    /// shrinking column window ([`crate::eig::chebyshev`]): a column
+    /// that reached its scheduled degree simply drops out of the
+    /// sub-slices — no copies, no compaction. `Y` must already have the
+    /// output shape. Bit-for-bit deterministic for any thread count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spmm_fused_cols_into(
+        &self,
+        a: f64,
+        x: &Mat,
+        b: f64,
+        c: f64,
+        z: &Mat,
+        y: &mut Mat,
+        j0: usize,
+        j1: usize,
+        threads: usize,
+    ) {
+        let k = x.cols();
         assert_eq!(x.rows(), self.cols);
         assert_eq!(z.rows(), self.rows);
         assert!(z.cols() == k);
-        flops::add((2 * self.nnz() * k + 4 * self.rows * k) as u64);
-        let rows_per = self.rows.div_ceil(nt);
+        assert_eq!(
+            (y.rows(), y.cols()),
+            (self.rows, k),
+            "spmm_fused_cols_into output shape"
+        );
+        assert!(j0 <= j1 && j1 <= k, "column window out of range");
+        if j0 == j1 || self.rows == 0 {
+            return;
+        }
+        flops::add((2 * self.nnz() * (j1 - j0) + 4 * self.rows * (j1 - j0)) as u64);
+        let nt = threads.max(1).min(self.rows.max(1));
         let xd = x.data();
         let yd = y.data_mut();
+        if nt <= 1 {
+            self.spmm_fused_cols_rows(a, xd, b, c, z, yd, 0, j0, j1, k);
+            return;
+        }
         std::thread::scope(|scope| {
-            for (blk, ychunk) in yd.chunks_mut(rows_per * k).enumerate() {
-                let row0 = blk * rows_per;
+            let mut rest = yd;
+            let mut row0 = 0usize;
+            for t in 1..=nt {
+                let row1 = self.nnz_split_at(t, nt, row0);
+                let (ychunk, tail) = rest.split_at_mut((row1 - row0) * k);
+                rest = tail;
+                let r0 = row0;
+                row0 = row1;
+                if row1 == r0 {
+                    continue;
+                }
                 scope.spawn(move || {
-                    for (r, yrow) in ychunk.chunks_mut(k).enumerate() {
-                        let i = row0 + r;
-                        let (cols, vals) = self.row(i);
-                        let xrow = &xd[i * k..(i + 1) * k];
-                        let zrow = z.row(i);
-                        for t in 0..k {
-                            yrow[t] = b * xrow[t] + c * zrow[t];
-                        }
-                        for (cc, v) in cols.iter().zip(vals) {
-                            let xr = &xd[*cc as usize * k..(*cc as usize + 1) * k];
-                            let s = a * *v;
-                            for t in 0..k {
-                                yrow[t] += s * xr[t];
-                            }
-                        }
-                    }
+                    self.spmm_fused_cols_rows(a, xd, b, c, z, ychunk, r0, j0, j1, k)
                 });
             }
         });
+    }
+
+    /// One row-chunk of the windowed fused step (shared by the serial
+    /// and threaded paths so their arithmetic cannot drift).
+    #[allow(clippy::too_many_arguments)]
+    fn spmm_fused_cols_rows(
+        &self,
+        a: f64,
+        xd: &[f64],
+        b: f64,
+        c: f64,
+        z: &Mat,
+        ychunk: &mut [f64],
+        row0: usize,
+        j0: usize,
+        j1: usize,
+        k: usize,
+    ) {
+        let w = j1 - j0;
+        for (r, yrow) in ychunk.chunks_mut(k).enumerate() {
+            let i = row0 + r;
+            let (cols, vals) = self.row(i);
+            let ywin = &mut yrow[j0..j1];
+            let xrow = &xd[i * k + j0..i * k + j1];
+            let zrow = &z.row(i)[j0..j1];
+            for t in 0..w {
+                ywin[t] = b * xrow[t] + c * zrow[t];
+            }
+            for (cc, v) in cols.iter().zip(vals) {
+                let xr = &xd[*cc as usize * k + j0..*cc as usize * k + j1];
+                let s = a * *v;
+                for t in 0..w {
+                    ywin[t] += s * xr[t];
+                }
+            }
+        }
     }
 
     /// Dense copy (test/diagnostic helper and the densified input of the
@@ -590,6 +746,80 @@ mod tests {
             let mut y = Mat::zeros(0, 0);
             a.spmm_fused_into(1.7, &x, -0.3, 0.9, &z, &mut y, threads);
             assert_eq!(y, serial, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn nnz_splits_partition_rows_and_balance_nonzeros() {
+        // Heavily skewed matrix: one dense row, the rest near-empty.
+        let mut b = CooBuilder::new(40, 40);
+        for j in 0..40 {
+            b.push(3, j, 1.0);
+        }
+        for i in 0..40 {
+            b.push(i, i, 2.0);
+        }
+        let a = b.build();
+        for nt in [1usize, 2, 3, 5, 8] {
+            let s = a.nnz_splits(nt);
+            assert_eq!(s.len(), nt + 1);
+            assert_eq!(s[0], 0);
+            assert_eq!(s[nt], 40);
+            assert!(s.windows(2).all(|w| w[0] <= w[1]), "{s:?}");
+        }
+        // With 2 threads the dense row must not drag half the row count
+        // with it: the first chunk ends right after the heavy row.
+        let s = a.nnz_splits(2);
+        assert!(s[1] <= 5, "nnz split ignored the dense row: {s:?}");
+    }
+
+    #[test]
+    fn windowed_spmm_matches_full_kernel_on_the_window() {
+        let a = random_square(33, 250, 9);
+        let mut rng = Xoshiro256pp::seed_from_u64(10);
+        let x = Mat::randn(33, 7, &mut rng);
+        let full = a.spmm_alloc(&x);
+        for (j0, j1) in [(0usize, 7usize), (0, 4), (2, 7), (3, 3), (1, 6)] {
+            for threads in [1usize, 2, 4] {
+                let mut y = Mat::from_fn(33, 7, |i, j| (i * 7 + j) as f64);
+                a.spmm_cols_into(&x, &mut y, j0, j1, threads);
+                for i in 0..33 {
+                    for j in 0..7 {
+                        let want = if (j0..j1).contains(&j) {
+                            full[(i, j)]
+                        } else {
+                            (i * 7 + j) as f64 // untouched
+                        };
+                        assert_eq!(y[(i, j)], want, "({i},{j}) win {j0}..{j1}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn windowed_fused_matches_full_kernel_on_the_window() {
+        let a = random_square(29, 160, 11);
+        let mut rng = Xoshiro256pp::seed_from_u64(12);
+        let x = Mat::randn(29, 6, &mut rng);
+        let z = Mat::randn(29, 6, &mut rng);
+        let mut full = Mat::zeros(29, 6);
+        a.spmm_fused(1.3, &x, -0.7, 0.4, &z, &mut full);
+        for (j0, j1) in [(0usize, 6usize), (0, 3), (2, 6), (4, 4)] {
+            for threads in [1usize, 3] {
+                let mut y = Mat::from_fn(29, 6, |i, j| -((i + j) as f64));
+                a.spmm_fused_cols_into(1.3, &x, -0.7, 0.4, &z, &mut y, j0, j1, threads);
+                for i in 0..29 {
+                    for j in 0..6 {
+                        let want = if (j0..j1).contains(&j) {
+                            full[(i, j)]
+                        } else {
+                            -((i + j) as f64)
+                        };
+                        assert_eq!(y[(i, j)], want, "({i},{j}) win {j0}..{j1}");
+                    }
+                }
+            }
         }
     }
 

@@ -1,0 +1,208 @@
+//! Integration tests for the adaptive Chebyshev filter engine
+//! (ISSUE 5): convergence across every operator family, the
+//! `filter_schedule: fixed` bit-for-bit regression, and the warm-chain
+//! matvec cut.
+
+use scsf::coordinator::config::GenConfig;
+use scsf::coordinator::dataset::DatasetReader;
+use scsf::coordinator::pipeline::generate_dataset;
+use scsf::eig::chebyshev::FilterSchedule;
+use scsf::eig::chfsi::ChfsiOptions;
+use scsf::eig::scsf::{solve_sequence, ScsfOptions, SequenceResult};
+use scsf::eig::EigOptions;
+use scsf::linalg::symeig::sym_eig;
+use scsf::operators::{self, GenOptions, OperatorKind, Problem};
+use scsf::sort::SortMethod;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("scsf_adaptive_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn sequence(
+    problems: &[Problem],
+    l: usize,
+    tol: f64,
+    schedule: FilterSchedule,
+) -> SequenceResult {
+    let mut chfsi = ChfsiOptions::from_eig(&EigOptions {
+        n_eigs: l,
+        tol,
+        max_iters: 600,
+        seed: 0,
+    });
+    chfsi.schedule = schedule;
+    solve_sequence(
+        problems,
+        &ScsfOptions {
+            chfsi,
+            sort: SortMethod::TruncatedFft { p0: 6 },
+            warm_start: true,
+        },
+    )
+}
+
+/// Property: across all five built-in families, the adaptive schedule
+/// returns every wanted residual ≤ tol, matches the dense reference
+/// eigenvalues, and never spends more filter matvecs than fixed.
+#[test]
+fn adaptive_meets_tolerance_across_all_families() {
+    for kind in OperatorKind::ALL {
+        let tol = kind.default_tol();
+        let problems = operators::generate(
+            kind,
+            GenOptions {
+                grid: 10,
+                ..Default::default()
+            },
+            3,
+            17,
+        );
+        let l = 5;
+        let seq = sequence(&problems, l, tol, FilterSchedule::Adaptive);
+        assert!(seq.all_converged(), "{kind:?} did not converge");
+        for (pos, &pid) in seq.order.iter().enumerate() {
+            let r = &seq.results[pos];
+            for res in &r.residuals {
+                assert!(*res <= tol, "{kind:?} problem {pid}: residual {res} > {tol}");
+            }
+            let want = sym_eig(&problems[pid].matrix.to_dense());
+            for (got, w) in r.values.iter().zip(&want.values[..l]) {
+                assert!(
+                    (got - w).abs() / w.abs().max(1.0) < 1e-6,
+                    "{kind:?} problem {pid}: {got} vs {w}"
+                );
+            }
+        }
+        let fixed = sequence(&problems, l, tol, FilterSchedule::Fixed);
+        assert!(
+            seq.filter_matvecs() <= fixed.filter_matvecs(),
+            "{kind:?}: adaptive {} > fixed {}",
+            seq.filter_matvecs(),
+            fixed.filter_matvecs()
+        );
+        // The degree histogram accounts every filter matvec.
+        let hist = seq.degree_hist();
+        let weighted: usize = hist.iter().enumerate().map(|(d, c)| d * c).sum();
+        assert_eq!(weighted, seq.filter_matvecs(), "{kind:?}");
+    }
+}
+
+/// The warm-chain regime (similar problems, accurate inherited
+/// subspaces) is where the schedule pays most. This test pins a
+/// conservative ≥ 20 % cut as a regression floor; the acceptance
+/// criterion itself (≥ 25 % across the whole suite) is asserted by
+/// `benches/filter_degree.rs`, which runs the full bench mix.
+#[test]
+fn adaptive_cuts_warm_chain_filter_matvecs() {
+    let chain = operators::helmholtz::generate_perturbed_chain(
+        GenOptions {
+            grid: 14,
+            ..Default::default()
+        },
+        6,
+        0.05,
+        23,
+    );
+    let tol = 1e-8;
+    let fixed = sequence(&chain, 10, tol, FilterSchedule::Fixed);
+    let adaptive = sequence(&chain, 10, tol, FilterSchedule::Adaptive);
+    assert!(fixed.all_converged() && adaptive.all_converged());
+    for r in &adaptive.results {
+        for res in &r.residuals {
+            assert!(*res <= tol, "residual {res}");
+        }
+    }
+    let cut = 1.0 - adaptive.filter_matvecs() as f64 / fixed.filter_matvecs() as f64;
+    assert!(
+        cut >= 0.20,
+        "warm-chain filter-matvec cut {:.1}% below the 20% regression floor \
+         (fixed {}, adaptive {})",
+        100.0 * cut,
+        fixed.filter_matvecs(),
+        adaptive.filter_matvecs()
+    );
+}
+
+/// Bit-for-bit regression: a config that never mentions
+/// `filter_schedule` and one that pins `"fixed"` must produce
+/// byte-identical `eigs.bin` files and identical manifest record
+/// indexes — the knob's compatibility contract at the pipeline level.
+#[test]
+fn fixed_schedule_reproduces_default_dataset_exactly() {
+    let d_default = tmpdir("default");
+    let d_fixed = tmpdir("fixed");
+    // A config JSON with no filter_schedule key (the historical form).
+    let legacy_json = r#"{
+        "families": [{"family": "helmholtz", "count": 5}],
+        "grid": 8, "n_eigs": 4, "tol": 1e-8, "seed": 11,
+        "shards": 2, "channel_capacity": 2,
+        "sort": {"method": "truncated_fft", "p0": 6}
+    }"#;
+    let cfg_default = GenConfig::from_json(legacy_json).unwrap();
+    assert_eq!(cfg_default.filter_schedule, FilterSchedule::Fixed);
+    let explicit_json = legacy_json.replace(
+        "\"grid\": 8,",
+        "\"grid\": 8, \"filter_schedule\": \"fixed\",",
+    );
+    let cfg_fixed = GenConfig::from_json(&explicit_json).unwrap();
+    assert_eq!(cfg_fixed.filter_schedule, FilterSchedule::Fixed);
+
+    generate_dataset(&cfg_default, &d_default).unwrap();
+    generate_dataset(&cfg_fixed, &d_fixed).unwrap();
+    let bin1 = std::fs::read(d_default.join("eigs.bin")).unwrap();
+    let bin2 = std::fs::read(d_fixed.join("eigs.bin")).unwrap();
+    assert_eq!(bin1, bin2, "eigs.bin must be byte-identical");
+    let r1 = DatasetReader::open(&d_default).unwrap();
+    let r2 = DatasetReader::open(&d_fixed).unwrap();
+    assert_eq!(r1.index(), r2.index(), "manifest record indexes differ");
+    let _ = std::fs::remove_dir_all(&d_default);
+    let _ = std::fs::remove_dir_all(&d_fixed);
+}
+
+/// End-to-end adaptive dataset: converges at tolerance, records the
+/// schedule in the manifest config echo, and the manifest work
+/// counters expose the matvec cut.
+#[test]
+fn adaptive_dataset_end_to_end() {
+    let dir = tmpdir("e2e");
+    let mut cfg = GenConfig::from_json(
+        r#"{
+        "families": [{"family": "poisson", "count": 4}],
+        "grid": 8, "n_eigs": 4, "tol": 1e-9, "seed": 3,
+        "shards": 2, "filter_schedule": "adaptive",
+        "sort": {"method": "truncated_fft", "p0": 6}
+    }"#,
+    )
+    .unwrap();
+    cfg.channel_capacity = 2;
+    let report = generate_dataset(&cfg, &dir).unwrap();
+    assert!(report.all_converged);
+    assert!(report.max_residual <= 1e-9 * 10.0);
+    assert!(report.filter_matvecs > 0);
+    let manifest = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    let v = scsf::util::json::parse(&manifest).unwrap();
+    assert_eq!(
+        v.get("config")
+            .and_then(|c| c.get("filter_schedule"))
+            .and_then(scsf::util::json::Value::as_str),
+        Some("adaptive")
+    );
+    assert!(v
+        .get("report")
+        .and_then(|r| r.get("degree_hist"))
+        .and_then(scsf::util::json::Value::as_arr)
+        .is_some_and(|h| !h.is_empty()));
+    // Values still match dense references.
+    let problems = scsf::coordinator::pipeline::generate_problems(&cfg);
+    let mut reader = DatasetReader::open(&dir).unwrap();
+    for p in &problems {
+        let rec = reader.read(p.id).unwrap();
+        let want = sym_eig(&p.matrix.to_dense());
+        for (got, w) in rec.values.iter().zip(&want.values[..4]) {
+            assert!((got - w).abs() / w.abs().max(1.0) < 1e-6, "problem {}", p.id);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
