@@ -11,13 +11,19 @@
 //! Every solve must converge with all residuals ≤ tol — the schedules
 //! trade *work*, never accuracy.
 //!
+//! A second leg compares `precision: f64` against `precision: mixed`
+//! (fixed schedule, same tolerance) across every family: mixed must
+//! keep all residuals ≤ tol while routing filter sweeps through the
+//! f32 kernels — the wall-clock delta and the f32 matvec share are
+//! recorded per suite.
+//!
 //! Emits `BENCH_filter.json` (working directory) with before/after
 //! problems/sec, total and filter matvec counts, and the adaptive
 //! degree histogram, so the matvec cut is tracked release over
 //! release. The repo root carries the committed baseline.
 
 use scsf::coordinator::metrics::degree_hist_pairs;
-use scsf::eig::chebyshev::FilterSchedule;
+use scsf::eig::chebyshev::{FilterSchedule, Precision};
 use scsf::eig::chfsi::ChfsiOptions;
 use scsf::eig::scsf::{solve_sequence, ScsfOptions, SequenceResult};
 use scsf::eig::EigOptions;
@@ -31,6 +37,15 @@ const N_EIGS: usize = 16;
 const DEGREE_CAP: usize = 20;
 
 fn run(problems: &[Problem], tol: f64, schedule: FilterSchedule) -> SequenceResult {
+    run_with_precision(problems, tol, schedule, Precision::F64)
+}
+
+fn run_with_precision(
+    problems: &[Problem],
+    tol: f64,
+    schedule: FilterSchedule,
+    precision: Precision,
+) -> SequenceResult {
     let mut chfsi = ChfsiOptions::from_eig(&EigOptions {
         n_eigs: N_EIGS,
         tol,
@@ -39,6 +54,7 @@ fn run(problems: &[Problem], tol: f64, schedule: FilterSchedule) -> SequenceResu
     });
     chfsi.degree = DEGREE_CAP;
     chfsi.schedule = schedule;
+    chfsi.precision = precision;
     let opts = ScsfOptions {
         chfsi,
         sort: SortMethod::TruncatedFft { p0: 8 },
@@ -47,11 +63,9 @@ fn run(problems: &[Problem], tol: f64, schedule: FilterSchedule) -> SequenceResu
     let seq = solve_sequence(problems, &opts);
     assert!(
         seq.all_converged(),
-        "{}-schedule sequence failed to converge",
-        match schedule {
-            FilterSchedule::Fixed => "fixed",
-            FilterSchedule::Adaptive => "adaptive",
-        }
+        "{}/{} sequence failed to converge",
+        schedule.name(),
+        precision.name(),
     );
     for r in &seq.results {
         for res in &r.residuals {
@@ -143,6 +157,67 @@ fn main() {
         bench_case(label, &chain, TOL);
     }
 
+    // ---- Precision leg: mixed vs f64 at equal tolerance ----------------
+    // Every built-in family, fixed schedule (isolates the precision
+    // knob): residuals must stay ≤ tol in BOTH modes — mixed precision
+    // trades kernel bandwidth, never accuracy — and mixed must actually
+    // route filter work through f32.
+    let mut precision_records: Vec<Value> = Vec::new();
+    let mut f64_secs_total = 0.0f64;
+    let mut mixed_secs_total = 0.0f64;
+    let mut mixed_f32_mv = 0usize;
+    let mut mixed_filter_mv = 0usize;
+    for kind in OperatorKind::ALL {
+        let problems = operators::generate(
+            kind,
+            GenOptions {
+                grid: GRID,
+                ..Default::default()
+            },
+            N_PROBLEMS,
+            41,
+        );
+        let full = run_with_precision(&problems, TOL, FilterSchedule::Fixed, Precision::F64);
+        let mixed =
+            run_with_precision(&problems, TOL, FilterSchedule::Fixed, Precision::Mixed);
+        assert!(
+            mixed.f32_matvecs() > 0,
+            "{}: mixed precision ran no f32 filter work",
+            kind.name()
+        );
+        let cut = 1.0 - mixed.avg_secs() / full.avg_secs();
+        println!(
+            "{:<22} tol {TOL:.0e}: precision f64 -> mixed wall-clock {:+.1}%, \
+             {}/{} filter matvecs in f32, {} promotions",
+            kind.name(),
+            -100.0 * cut,
+            mixed.f32_matvecs(),
+            mixed.filter_matvecs(),
+            mixed.promotions(),
+        );
+        f64_secs_total += full.avg_secs() * problems.len() as f64;
+        mixed_secs_total += mixed.avg_secs() * problems.len() as f64;
+        mixed_f32_mv += mixed.f32_matvecs();
+        mixed_filter_mv += mixed.filter_matvecs();
+        precision_records.push(Value::obj(vec![
+            ("suite", kind.name().into()),
+            ("tol", TOL.into()),
+            ("n_problems", problems.len().into()),
+            ("f64", seq_record(&full)),
+            ("mixed", seq_record(&mixed)),
+            ("f32_matvecs", mixed.f32_matvecs().into()),
+            ("promotions", mixed.promotions().into()),
+            ("wallclock_reduction", cut.into()),
+        ]));
+    }
+    let precision_cut = 1.0 - mixed_secs_total / f64_secs_total;
+    println!(
+        "PRECISION TOTAL: wall-clock {:+.1}% under mixed, {}/{} filter matvecs in f32",
+        -100.0 * precision_cut,
+        mixed_f32_mv,
+        mixed_filter_mv,
+    );
+
     let total_cut = 1.0 - adaptive_filter_mv as f64 / fixed_filter_mv.max(1) as f64;
     println!(
         "TOTAL: filter matvecs {fixed_filter_mv} -> {adaptive_filter_mv} \
@@ -154,12 +229,21 @@ fn main() {
 
     let doc = Value::obj(vec![
         ("bench", "filter_degree".into()),
-        ("version", 1usize.into()),
+        ("version", 2usize.into()),
         ("grid", GRID.into()),
         ("n_problems_per_suite", N_PROBLEMS.into()),
         ("n_eigs", N_EIGS.into()),
         ("degree_cap", DEGREE_CAP.into()),
         ("suites", Value::Arr(suite_records)),
+        ("precision_suites", Value::Arr(precision_records)),
+        (
+            "precision_totals",
+            Value::obj(vec![
+                ("f32_matvecs", mixed_f32_mv.into()),
+                ("filter_matvecs_mixed", mixed_filter_mv.into()),
+                ("wallclock_reduction", precision_cut.into()),
+            ]),
+        ),
         (
             "totals",
             Value::obj(vec![

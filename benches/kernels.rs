@@ -18,9 +18,10 @@ use scsf::eig::scsf::{solve_sequence, ScsfOptions};
 use scsf::eig::EigOptions;
 use scsf::linalg::qr::householder_qr;
 use scsf::linalg::symeig::sym_eig;
-use scsf::linalg::Mat;
+use scsf::linalg::{Mat, MatF32};
 use scsf::operators::{self, GenOptions, OperatorKind};
 use scsf::rng::Xoshiro256pp;
+use scsf::sparse::{CooBuilder, CsrMatrix, CsrMatrixF32, SellMatrix, SellMatrixF32};
 use scsf::util::json::Value;
 
 fn thread_counts() -> Vec<usize> {
@@ -36,11 +37,54 @@ fn thread_counts() -> Vec<usize> {
     counts
 }
 
+/// Symmetric matrix with strongly uneven row lengths: a tridiagonal
+/// band plus a block of dense "hub" rows — the row-length skew where a
+/// sliced layout's per-chunk padding and the CSR row loop diverge most.
+fn uneven_matrix(n: usize, seed: u64) -> CsrMatrix {
+    let mut rng = Xoshiro256pp::seed_from_u64(seed);
+    let mut b = CooBuilder::new(n, n);
+    for i in 0..n {
+        b.push(i, i, 4.0);
+        if i + 1 < n {
+            b.push(i, i + 1, -1.0);
+            b.push(i + 1, i, -1.0);
+        }
+    }
+    // Every 32nd row is a hub with ~60 extra couplings (kept symmetric).
+    for hub in (0..n).step_by(32) {
+        for _ in 0..30 {
+            let j = (rng.next_u64() as usize) % n;
+            if j != hub {
+                b.push(hub, j, 0.1);
+                b.push(j, hub, 0.1);
+            }
+        }
+    }
+    b.build()
+}
+
+/// Bench plain SpMM for one layout × precision cell and return
+/// (median_secs, gflops). Nominal flops are `2·nnz·k` for every cell
+/// (SELL padding is overhead, not useful work), so GFLOP/s compare
+/// directly across layouts.
+fn bench_spmm_cell(
+    label: &str,
+    run: &mut dyn FnMut(),
+    nnz: usize,
+    k: usize,
+) -> (f64, f64) {
+    let r = bench_median(label, 1, 5, run);
+    let gf = gflops(2 * (nnz * k) as u64, r.median_secs);
+    println!("{}  [{gf:.2} GF/s]", r.report());
+    (r.median_secs, gf)
+}
+
 fn main() {
     let mut rng = Xoshiro256pp::seed_from_u64(1);
     let counts = thread_counts();
     let mut spmm_records: Vec<Value> = Vec::new();
     let mut filter_records: Vec<Value> = Vec::new();
+    let mut layout_records: Vec<Value> = Vec::new();
 
     for grid in [32usize, 48, 64] {
         let n = grid * grid;
@@ -136,6 +180,92 @@ fn main() {
         );
     }
 
+    // ---- Layout × precision SpMM sweep ({csr,sell} × {f64,f32}) --------
+    // An even-row PDE case plus a skewed hub-row case; nominal flops are
+    // 2·nnz·k everywhere so GFLOP/s compare directly across cells.
+    let even = operators::generate(
+        OperatorKind::Helmholtz,
+        GenOptions {
+            grid: 48,
+            ..Default::default()
+        },
+        1,
+        7,
+    )
+    .remove(0)
+    .matrix;
+    let uneven = uneven_matrix(48 * 48, 5);
+    let max_threads = *counts.last().unwrap();
+    let mut sweep_threads = vec![1usize];
+    if max_threads > 1 {
+        sweep_threads.push(max_threads);
+    }
+    for (case, a) in [("helmholtz-48", &even), ("uneven-hub", &uneven)] {
+        let n = a.rows();
+        let k = 24;
+        let nnz = a.nnz();
+        let a32 = CsrMatrixF32::from_f64(a);
+        let sell = SellMatrix::from_csr(a);
+        let sell32 = SellMatrixF32::from_csr(a);
+        let x = Mat::randn(n, k, &mut rng);
+        let x32 = MatF32::from_f64(&x);
+        for &threads in &sweep_threads {
+            let mut y = Mat::zeros(0, 0);
+            let mut y32 = MatF32::zeros(0, 0);
+            let (_, g_csr64) = bench_spmm_cell(
+                &format!("spmm {case} csr-f64 threads={threads}"),
+                &mut || {
+                    a.spmm_into(&x, &mut y, threads);
+                    std::hint::black_box(&y);
+                },
+                nnz,
+                k,
+            );
+            let (_, g_csr32) = bench_spmm_cell(
+                &format!("spmm {case} csr-f32 threads={threads}"),
+                &mut || {
+                    a32.spmm_into(&x32, &mut y32, threads);
+                    std::hint::black_box(&y32);
+                },
+                nnz,
+                k,
+            );
+            let (_, g_sell64) = bench_spmm_cell(
+                &format!("spmm {case} sell-f64 threads={threads}"),
+                &mut || {
+                    sell.spmm_into(&x, &mut y, threads);
+                    std::hint::black_box(&y);
+                },
+                nnz,
+                k,
+            );
+            let (_, g_sell32) = bench_spmm_cell(
+                &format!("spmm {case} sell-f32 threads={threads}"),
+                &mut || {
+                    sell32.spmm_into(&x32, &mut y32, threads);
+                    std::hint::black_box(&y32);
+                },
+                nnz,
+                k,
+            );
+            layout_records.push(Value::obj(vec![
+                ("case", case.into()),
+                ("n", n.into()),
+                ("nnz", nnz.into()),
+                ("k", k.into()),
+                ("threads", threads.into()),
+                ("csr_f64_gflops", g_csr64.into()),
+                ("csr_f32_gflops", g_csr32.into()),
+                ("sell_f64_gflops", g_sell64.into()),
+                ("sell_f32_gflops", g_sell32.into()),
+                ("sell_over_csr_f64", (g_sell64 / g_csr64).into()),
+                ("sell_over_csr_f32", (g_sell32 / g_csr32).into()),
+                ("f32_over_f64_csr", (g_csr32 / g_csr64).into()),
+                ("f32_over_f64_sell", (g_sell32 / g_sell64).into()),
+            ]));
+        }
+    }
+
     for kdim in [32usize, 64, 128] {
         let g = {
             let mut rng = Xoshiro256pp::seed_from_u64(2);
@@ -197,10 +327,11 @@ fn main() {
         .unwrap_or(1);
     let doc = Value::obj(vec![
         ("bench", "kernels".into()),
-        ("version", 1usize.into()),
+        ("version", 2usize.into()),
         ("threads_available", avail.into()),
         ("spmm", Value::Arr(spmm_records)),
         ("filter", Value::Arr(filter_records)),
+        ("layout_precision", Value::Arr(layout_records)),
         ("scsf_sequence", Value::Arr(seq_records)),
     ]);
     let path = "BENCH_kernels.json";

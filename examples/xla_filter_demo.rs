@@ -57,7 +57,7 @@ fn main() -> scsf::util::error::Result<()> {
         upper: a.norm1() * 1.1,
         target: 10.0,
     };
-    let mut native = NativeFilter;
+    let mut native = NativeFilter::new();
     let mut xla = XlaFilter::new(runtime.clone());
     let out_native = native.filter(a, &y, &params);
     let out_xla = xla.filter(a, &y, &params);

@@ -11,7 +11,7 @@
 
 use super::scheduler::{FamilyGroup, SortScope};
 use crate::anyhow;
-use crate::eig::chebyshev::FilterSchedule;
+use crate::eig::chebyshev::{FilterBackendKind, FilterSchedule, Precision};
 use crate::eig::chfsi::ChfsiOptions;
 use crate::eig::scsf::ScsfOptions;
 use crate::eig::EigOptions;
@@ -265,6 +265,18 @@ pub struct GenConfig {
     /// degrees from residuals over a shrinking column window — fewer
     /// filter matvecs, deterministic, but numerically distinct).
     pub filter_schedule: FilterSchedule,
+    /// Arithmetic precision of the filter sweeps: `f64` (every kernel
+    /// in double precision — bit-for-bit the historical output, the
+    /// default) or `mixed` (loose columns filtered in f32 until their
+    /// residual nears the f32 floor; Rayleigh–Ritz, residuals and
+    /// locking always stay f64, so acceptance is unchanged). Native
+    /// backends only — the XLA path rejects `mixed`.
+    pub precision: Precision,
+    /// Sparse-matrix layout the native filter kernels run on: `csr`
+    /// (row-partitioned CSR, the historical kernel and default) or
+    /// `sell` (SELL-C-σ sliced layout, better on uneven row lengths).
+    /// Native backends only — the XLA path rejects `sell`.
+    pub filter_backend: FilterBackendKind,
     /// Sorting method (paper default: truncated FFT, p₀ = 20).
     pub sort: SortMethod,
     /// Where the similarity sort runs: one global order per family
@@ -315,6 +327,8 @@ impl Default for GenConfig {
             degree: 20,
             guard: None,
             filter_schedule: FilterSchedule::Fixed,
+            precision: Precision::F64,
+            filter_backend: FilterBackendKind::Csr,
             sort: SortMethod::TruncatedFft { p0: 20 },
             sort_scope: SortScope::Global,
             handoff_threshold: None,
@@ -373,6 +387,25 @@ impl GenConfig {
         if self.families.is_empty() {
             return Err(anyhow!("config needs at least one family spec"));
         }
+        // The precision/layout knobs only exist in the native kernels;
+        // a run that asked for them on the XLA path must fail up front,
+        // not silently run f64 CSR inside the fallback.
+        if matches!(self.backend, Backend::Xla { .. }) {
+            if self.precision != Precision::F64 {
+                return Err(anyhow!(
+                    "precision {:?} requires a native backend: the xla backend only runs f64 \
+                     (set precision: \"f64\" or backend kind: \"native\")",
+                    self.precision.name()
+                ));
+            }
+            if self.filter_backend != FilterBackendKind::Csr {
+                return Err(anyhow!(
+                    "filter_backend {:?} requires a native backend: the xla backend only runs \
+                     csr (set filter_backend: \"csr\" or backend kind: \"native\")",
+                    self.filter_backend.name()
+                ));
+            }
+        }
         let mut out = Vec::with_capacity(self.families.len());
         let mut start = 0usize;
         for spec in &self.families {
@@ -428,6 +461,8 @@ impl GenConfig {
         chfsi.guard = self.guard;
         chfsi.threads = self.threads.max(1);
         chfsi.schedule = self.filter_schedule;
+        chfsi.precision = self.precision;
+        chfsi.filter_backend = self.filter_backend;
         ScsfOptions {
             chfsi,
             sort: self.sort,
@@ -476,6 +511,8 @@ impl GenConfig {
                 self.guard.map(Value::from).unwrap_or(Value::Null),
             ),
             ("filter_schedule", self.filter_schedule.name().into()),
+            ("precision", self.precision.name().into()),
+            ("filter_backend", self.filter_backend.name().into()),
             ("sort", sort),
             ("sort_scope", self.sort_scope.name().into()),
             (
@@ -597,6 +634,22 @@ impl GenConfig {
                 anyhow!("unknown filter_schedule {name} (expected \"fixed\" or \"adaptive\")")
             })?;
         }
+        if let Some(s) = v.get("precision") {
+            let name = s
+                .as_str()
+                .ok_or_else(|| anyhow!("precision must be a string"))?;
+            cfg.precision = Precision::parse(name).ok_or_else(|| {
+                anyhow!("unknown precision {name} (expected \"f64\" or \"mixed\")")
+            })?;
+        }
+        if let Some(s) = v.get("filter_backend") {
+            let name = s
+                .as_str()
+                .ok_or_else(|| anyhow!("filter_backend must be a string"))?;
+            cfg.filter_backend = FilterBackendKind::parse(name).ok_or_else(|| {
+                anyhow!("unknown filter_backend {name} (expected \"csr\" or \"sell\")")
+            })?;
+        }
         if let Some(sort) = v.get("sort") {
             cfg.sort = match sort.get("method").and_then(Value::as_str) {
                 Some("none") => SortMethod::None,
@@ -711,6 +764,8 @@ mod tests {
             degree: 16,
             guard: Some(6),
             filter_schedule: FilterSchedule::Adaptive,
+            precision: Precision::Mixed,
+            filter_backend: FilterBackendKind::Sell,
             sort: SortMethod::Greedy,
             sort_scope: SortScope::Shard,
             handoff_threshold: Some(0.75),
@@ -718,9 +773,7 @@ mod tests {
             shards: 4,
             threads: 3,
             channel_capacity: 3,
-            backend: Backend::Xla {
-                artifacts_dir: "artifacts".to_string(),
-            },
+            backend: Backend::Native,
             grf: GrfParams {
                 alpha: 3.0,
                 tau: 2.0,
@@ -956,6 +1009,94 @@ mod tests {
         // Bad values fail loudly (a typo must not silently run fixed).
         assert!(GenConfig::from_json(r#"{"filter_schedule": "adaptve"}"#).is_err());
         assert!(GenConfig::from_json(r#"{"filter_schedule": 3}"#).is_err());
+    }
+
+    #[test]
+    fn xla_backend_json_roundtrips() {
+        let cfg = GenConfig {
+            backend: Backend::Xla {
+                artifacts_dir: "artifacts".to_string(),
+            },
+            ..Default::default()
+        };
+        let back = GenConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    #[test]
+    fn precision_knob_roundtrips_and_validates() {
+        // Default is f64, and a missing key parses as f64 — the
+        // bit-for-bit compatibility contract for existing configs.
+        assert_eq!(GenConfig::default().precision, Precision::F64);
+        let parsed = GenConfig::from_json("{}").unwrap();
+        assert_eq!(parsed.precision, Precision::F64);
+        // Round-trips through JSON and propagates into solver options.
+        let mixed = GenConfig {
+            precision: Precision::Mixed,
+            ..Default::default()
+        };
+        let back = GenConfig::from_json(&mixed.to_json()).unwrap();
+        assert_eq!(back, mixed);
+        assert_eq!(
+            mixed.scsf_options_with_tol(1e-8).chfsi.precision,
+            Precision::Mixed
+        );
+        // The bare string form parses too.
+        let from_key = GenConfig::from_json(r#"{"precision": "mixed"}"#).unwrap();
+        assert_eq!(from_key.precision, Precision::Mixed);
+        // Bad values fail loudly (a typo must not silently run f64).
+        assert!(GenConfig::from_json(r#"{"precision": "f32"}"#).is_err());
+        assert!(GenConfig::from_json(r#"{"precision": 64}"#).is_err());
+    }
+
+    #[test]
+    fn filter_backend_knob_roundtrips_and_validates() {
+        assert_eq!(GenConfig::default().filter_backend, FilterBackendKind::Csr);
+        let parsed = GenConfig::from_json("{}").unwrap();
+        assert_eq!(parsed.filter_backend, FilterBackendKind::Csr);
+        let sell = GenConfig {
+            filter_backend: FilterBackendKind::Sell,
+            ..Default::default()
+        };
+        let back = GenConfig::from_json(&sell.to_json()).unwrap();
+        assert_eq!(back, sell);
+        assert_eq!(
+            sell.scsf_options_with_tol(1e-8).chfsi.filter_backend,
+            FilterBackendKind::Sell
+        );
+        let from_key = GenConfig::from_json(r#"{"filter_backend": "sell"}"#).unwrap();
+        assert_eq!(from_key.filter_backend, FilterBackendKind::Sell);
+        assert!(GenConfig::from_json(r#"{"filter_backend": "ellpack"}"#).is_err());
+        assert!(GenConfig::from_json(r#"{"filter_backend": 1}"#).is_err());
+    }
+
+    #[test]
+    fn xla_backend_rejects_mixed_precision_and_sell_layout() {
+        let reg = FamilyRegistry::builtin();
+        let xla = Backend::Xla {
+            artifacts_dir: "artifacts".to_string(),
+        };
+        let mixed = GenConfig {
+            precision: Precision::Mixed,
+            backend: xla.clone(),
+            ..GenConfig::single("poisson", 2)
+        };
+        let err = mixed.resolve(&reg).unwrap_err().to_string();
+        assert!(err.contains("precision"), "{err}");
+        let sell = GenConfig {
+            filter_backend: FilterBackendKind::Sell,
+            backend: xla,
+            ..GenConfig::single("poisson", 2)
+        };
+        let err = sell.resolve(&reg).unwrap_err().to_string();
+        assert!(err.contains("filter_backend"), "{err}");
+        // Native accepts both knobs.
+        let native = GenConfig {
+            precision: Precision::Mixed,
+            filter_backend: FilterBackendKind::Sell,
+            ..GenConfig::single("poisson", 2)
+        };
+        assert!(native.resolve(&reg).is_ok());
     }
 
     #[test]

@@ -59,6 +59,11 @@ pub struct RecordMeta {
     pub matvecs: usize,
     /// `A·x` products spent inside the Chebyshev filter.
     pub filter_matvecs: usize,
+    /// Filter `A·x` products that ran in f32 (0 for datasets written
+    /// before the mixed-precision knob, and under `precision: f64`).
+    pub f32_matvecs: usize,
+    /// Columns promoted from the f32 lane back to f64 during the solve.
+    pub promotions: usize,
 }
 
 /// Streaming dataset writer (single-writer; the pipeline funnels all
@@ -125,6 +130,8 @@ impl DatasetWriter {
             iterations: result.stats.iterations,
             matvecs: result.stats.matvecs,
             filter_matvecs: result.stats.filter_matvecs,
+            f32_matvecs: result.stats.f32_matvecs,
+            promotions: result.stats.promotions,
         });
         Ok(())
     }
@@ -159,6 +166,8 @@ impl DatasetWriter {
                 ("iterations", r.iterations.into()),
                 ("matvecs", r.matvecs.into()),
                 ("filter_matvecs", r.filter_matvecs.into()),
+                ("f32_matvecs", r.f32_matvecs.into()),
+                ("promotions", r.promotions.into()),
             ]));
         }
         let mut root = vec![
@@ -235,6 +244,8 @@ impl DatasetReader {
                 iterations: gu("iterations"),
                 matvecs: gu("matvecs"),
                 filter_matvecs: gu("filter_matvecs"),
+                f32_matvecs: gu("f32_matvecs"),
+                promotions: gu("promotions"),
             });
         }
         let file = BufReader::new(File::open(dir.join("eigs.bin"))?);
@@ -303,6 +314,8 @@ mod tests {
                 secs: 0.25,
                 matvecs: 321,
                 filter_matvecs: 256,
+                f32_matvecs: 128,
+                promotions: 2,
                 ..Default::default()
             },
         }
@@ -334,6 +347,8 @@ mod tests {
         // The work counters round-trip through the manifest.
         assert_eq!(reader.index()[0].matvecs, 321);
         assert_eq!(reader.index()[0].filter_matvecs, 256);
+        assert_eq!(reader.index()[0].f32_matvecs, 128);
+        assert_eq!(reader.index()[0].promotions, 2);
         for (id, want) in [(0usize, &r0), (1, &r1)] {
             let rec = reader.read(id).unwrap();
             assert_eq!(rec.values, want.values);

@@ -36,6 +36,12 @@ pub struct FamilyReport {
     /// `A·x` products spent inside the Chebyshev filter — per-family
     /// view of the adaptive schedule's cut.
     pub filter_matvecs: usize,
+    /// Filter `A·x` products that ran in f32 (subset of
+    /// `filter_matvecs`; nonzero only under `precision: mixed`).
+    pub f32_matvecs: usize,
+    /// Columns promoted from the f32 lane back to f64 across the
+    /// family's solves.
+    pub promotions: usize,
     /// Mean outer iterations per solve.
     pub avg_iterations: f64,
     /// Seconds in eigensolves for this family's problems.
@@ -59,6 +65,8 @@ impl FamilyReport {
             ("iterations", self.iterations.into()),
             ("matvecs", self.matvecs.into()),
             ("filter_matvecs", self.filter_matvecs.into()),
+            ("f32_matvecs", self.f32_matvecs.into()),
+            ("promotions", self.promotions.into()),
             ("avg_iterations", self.avg_iterations.into()),
             ("solve_secs", self.solve_secs.into()),
             ("max_residual", self.max_residual.into()),
@@ -83,6 +91,10 @@ pub struct ShardReport {
     pub matvecs: usize,
     /// `A·x` products spent inside the Chebyshev filter.
     pub filter_matvecs: usize,
+    /// Filter `A·x` products that ran in f32 (mixed precision only).
+    pub f32_matvecs: usize,
+    /// Columns promoted from the f32 lane back to f64.
+    pub promotions: usize,
     /// Whether the run's first solve inherited the previous run's tail
     /// eigenpairs (a granted boundary handoff that actually arrived).
     pub warm_handoff: bool,
@@ -108,6 +120,8 @@ impl ShardReport {
             ("iterations", self.iterations.into()),
             ("matvecs", self.matvecs.into()),
             ("filter_matvecs", self.filter_matvecs.into()),
+            ("f32_matvecs", self.f32_matvecs.into()),
+            ("promotions", self.promotions.into()),
             ("warm_handoff", self.warm_handoff.into()),
             ("cold_starts", self.cold_starts.into()),
             ("handoff_wait_secs", self.handoff_wait_secs.into()),
@@ -154,6 +168,14 @@ pub struct GenReport {
     /// the adaptive degree schedule (`filter_schedule: adaptive`) cuts
     /// versus fixed degree-20.
     pub filter_matvecs: usize,
+    /// Filter `A·x` products that ran in f32 — the mixed-precision
+    /// knob's work share (subset of `filter_matvecs`; 0 under the
+    /// default `precision: f64`).
+    pub f32_matvecs: usize,
+    /// Columns promoted from the f32 lane back to f64 across all
+    /// solves (each promotion is one column leaving the f32 group
+    /// between consecutive sweeps).
+    pub promotions: usize,
     /// Merged per-column filter-degree histogram: `degree_hist[m]` is
     /// the number of (column, sweep) pairs filtered at degree `m`
     /// across the whole run. Fixed schedules put everything in the
@@ -207,6 +229,8 @@ impl GenReport {
             ("filter_mflops", self.filter_mflops.into()),
             ("total_matvecs", self.total_matvecs.into()),
             ("filter_matvecs", self.filter_matvecs.into()),
+            ("f32_matvecs", self.f32_matvecs.into()),
+            ("promotions", self.promotions.into()),
             ("degree_hist", degree_hist_pairs(&self.degree_hist)),
             ("max_residual", self.max_residual.into()),
             ("all_converged", self.all_converged.into()),
@@ -273,6 +297,8 @@ mod tests {
         assert!(v.get("filter_mflops").is_some());
         assert!(v.get("total_matvecs").is_some());
         assert!(v.get("filter_matvecs").is_some());
+        assert!(v.get("f32_matvecs").is_some());
+        assert!(v.get("promotions").is_some());
         assert_eq!(v.get("sort_scope").and_then(Value::as_str), Some("global"));
         assert_eq!(v.get("sort_quality").and_then(Value::as_f64), Some(2.25));
         assert!(v.get("signature_secs").is_some());
@@ -291,6 +317,8 @@ mod tests {
                 iterations: 40,
                 matvecs: 5200,
                 filter_matvecs: 4100,
+                f32_matvecs: 2600,
+                promotions: 3,
                 avg_iterations: 10.0,
                 solve_secs: 1.25,
                 max_residual: 1e-13,
@@ -312,6 +340,11 @@ mod tests {
             fams[0].get("filter_matvecs").and_then(Value::as_usize),
             Some(4100)
         );
+        assert_eq!(
+            fams[0].get("f32_matvecs").and_then(Value::as_usize),
+            Some(2600)
+        );
+        assert_eq!(fams[0].get("promotions").and_then(Value::as_usize), Some(3));
         assert_eq!(fams[0].get("tol").and_then(Value::as_f64), Some(1e-12));
         assert_eq!(
             fams[0].get("sort_quality").and_then(Value::as_f64),

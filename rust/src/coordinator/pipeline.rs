@@ -24,7 +24,7 @@ use super::dataset::DatasetWriter;
 use super::metrics::{FamilyReport, GenReport, ShardReport};
 use super::scheduler::{self, Schedule, SortScope};
 use crate::anyhow;
-use crate::eig::chebyshev::{FilterBackend, NativeFilter};
+use crate::eig::chebyshev::{FilterBackend, FilterBackendKind, NativeFilter, Precision, SellFilter};
 use crate::eig::scsf::Chain;
 use crate::eig::solver::Workspace;
 use crate::eig::WarmStart;
@@ -42,8 +42,24 @@ use std::time::Instant;
 
 fn make_backend(cfg: &GenConfig) -> Result<Box<dyn FilterBackend>> {
     match &cfg.backend {
-        Backend::Native => Ok(Box::new(NativeFilter)),
+        Backend::Native => Ok(match cfg.filter_backend {
+            FilterBackendKind::Csr => Box::new(NativeFilter::new()),
+            FilterBackendKind::Sell => Box::new(SellFilter::new()),
+        }),
         Backend::Xla { artifacts_dir } => {
+            // `GenConfig::resolve` already rejects these combinations;
+            // re-check here so a future caller that skips resolve()
+            // still cannot silently run the wrong kernels.
+            if cfg.precision != Precision::F64 {
+                return Err(anyhow!(
+                    "precision \"mixed\" requires a native backend (xla runs f64 only)"
+                ));
+            }
+            if cfg.filter_backend != FilterBackendKind::Csr {
+                return Err(anyhow!(
+                    "filter_backend \"sell\" requires a native backend (xla runs csr only)"
+                ));
+            }
             let rt = XlaRuntime::load(Path::new(artifacts_dir))?;
             Ok(Box::new(XlaFilter::new(Rc::new(rt))))
         }
@@ -130,6 +146,8 @@ struct FamilyAccum {
     iterations: usize,
     matvecs: usize,
     filter_matvecs: usize,
+    f32_matvecs: usize,
+    promotions: usize,
     solve_secs: f64,
     max_residual: f64,
 }
@@ -517,6 +535,8 @@ pub fn generate_dataset_with_registry(
                         stats.iterations += r.stats.iterations;
                         stats.matvecs += r.stats.matvecs;
                         stats.filter_matvecs += r.stats.filter_matvecs;
+                        stats.f32_matvecs += r.stats.f32_matvecs;
+                        stats.promotions += r.stats.promotions;
                         if res_tx.send((problem.id, plan.index, r)).is_err() {
                             writer_gone = true;
                             break;
@@ -561,6 +581,8 @@ pub fn generate_dataset_with_registry(
             let mut filter_mflops = 0.0;
             let mut matvec_sum = 0usize;
             let mut filter_matvec_sum = 0usize;
+            let mut f32_matvec_sum = 0usize;
+            let mut promotion_sum = 0usize;
             let mut degree_hist: Vec<usize> = Vec::new();
             let mut all_converged = true;
             let mut count = 0usize;
@@ -578,6 +600,8 @@ pub fn generate_dataset_with_registry(
                 filter_mflops += result.stats.filter_flops as f64 / 1e6;
                 matvec_sum += result.stats.matvecs;
                 filter_matvec_sum += result.stats.filter_matvecs;
+                f32_matvec_sum += result.stats.f32_matvecs;
+                promotion_sum += result.stats.promotions;
                 crate::eig::merge_degree_hist(&mut degree_hist, &result.stats.degree_hist);
                 let spec = spec_of(resolved, id);
                 let acc = &mut fam_accum[spec];
@@ -585,6 +609,8 @@ pub fn generate_dataset_with_registry(
                 acc.iterations += result.stats.iterations;
                 acc.matvecs += result.stats.matvecs;
                 acc.filter_matvecs += result.stats.filter_matvecs;
+                acc.f32_matvecs += result.stats.f32_matvecs;
+                acc.promotions += result.stats.promotions;
                 acc.solve_secs += result.stats.secs;
                 acc.max_residual = acc.max_residual.max(worst);
                 if let Ok(writer) = writer_res.as_mut() {
@@ -620,6 +646,8 @@ pub fn generate_dataset_with_registry(
             report.filter_mflops = filter_mflops;
             report.total_matvecs = matvec_sum;
             report.filter_matvecs = filter_matvec_sum;
+            report.f32_matvecs = f32_matvec_sum;
+            report.promotions = promotion_sum;
             report.degree_hist = degree_hist;
             Ok((writer, write_secs, count, fam_accum))
         });
@@ -658,6 +686,8 @@ pub fn generate_dataset_with_registry(
                 iterations: acc.iterations,
                 matvecs: acc.matvecs,
                 filter_matvecs: acc.filter_matvecs,
+                f32_matvecs: acc.f32_matvecs,
+                promotions: acc.promotions,
                 avg_iterations: acc.iterations as f64 / acc.problems.max(1) as f64,
                 solve_secs: acc.solve_secs,
                 max_residual: acc.max_residual,
@@ -1001,6 +1031,106 @@ mod tests {
         }
         let _ = std::fs::remove_dir_all(&d_fixed);
         let _ = std::fs::remove_dir_all(&d_adapt);
+    }
+
+    #[test]
+    fn mixed_precision_pipeline_converges_and_reports_f32_work() {
+        let dir = tmpdir("mixed");
+        let mut cfg = small_cfg();
+        cfg.precision = Precision::Mixed;
+        let report = generate_dataset(&cfg, &dir).unwrap();
+        assert!(report.all_converged, "{report:?}");
+        assert!(report.max_residual <= 1e-8 * 10.0);
+        // At this tolerance some sweeps must actually run in f32, and
+        // the f32 share can never exceed the filter total.
+        assert!(report.f32_matvecs > 0, "{report:?}");
+        assert!(report.f32_matvecs <= report.filter_matvecs);
+        // Per-family and per-run counters sum to the run totals.
+        let fam_sum: usize = report.families.iter().map(|f| f.f32_matvecs).sum();
+        assert_eq!(fam_sum, report.f32_matvecs);
+        let shard_sum: usize = report.shards.iter().map(|s| s.f32_matvecs).sum();
+        assert_eq!(shard_sum, report.f32_matvecs);
+        let fam_promo: usize = report.families.iter().map(|f| f.promotions).sum();
+        assert_eq!(fam_promo, report.promotions);
+        // The manifest echoes the knob and carries the counters.
+        let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let v = crate::util::json::parse(&text).unwrap();
+        assert_eq!(
+            v.get("config")
+                .and_then(|c| c.get("precision"))
+                .and_then(crate::util::json::Value::as_str),
+            Some("mixed")
+        );
+        assert_eq!(
+            v.get("report")
+                .and_then(|r| r.get("f32_matvecs"))
+                .and_then(crate::util::json::Value::as_usize),
+            Some(report.f32_matvecs)
+        );
+        // Values still match dense references at solver accuracy.
+        let problems = generate_problems(&cfg);
+        let mut reader = DatasetReader::open(&dir).unwrap();
+        for p in &problems {
+            let rec = reader.read(p.id).unwrap();
+            let want = sym_eig(&p.matrix.to_dense());
+            for (got, w) in rec.values.iter().zip(&want.values[..cfg.n_eigs]) {
+                assert!(
+                    (got - w).abs() / w.abs().max(1.0) < 1e-6,
+                    "problem {}: {got} vs {w}",
+                    p.id
+                );
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sell_backend_pipeline_converges_and_echoes_knob() {
+        let dir = tmpdir("sell");
+        let mut cfg = small_cfg();
+        cfg.filter_backend = FilterBackendKind::Sell;
+        let report = generate_dataset(&cfg, &dir).unwrap();
+        assert!(report.all_converged, "{report:?}");
+        assert!(report.max_residual <= 1e-8 * 10.0);
+        // SELL is f64 here: no f32 work unless precision says so.
+        assert_eq!(report.f32_matvecs, 0);
+        let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let v = crate::util::json::parse(&text).unwrap();
+        assert_eq!(
+            v.get("config")
+                .and_then(|c| c.get("filter_backend"))
+                .and_then(crate::util::json::Value::as_str),
+            Some("sell")
+        );
+        let problems = generate_problems(&cfg);
+        let mut reader = DatasetReader::open(&dir).unwrap();
+        for p in &problems {
+            let rec = reader.read(p.id).unwrap();
+            let want = sym_eig(&p.matrix.to_dense());
+            for (got, w) in rec.values.iter().zip(&want.values[..cfg.n_eigs]) {
+                assert!((got - w).abs() / w.abs().max(1.0) < 1e-6);
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn xla_backend_rejects_precision_and_layout_knobs_before_running() {
+        let dir = tmpdir("xla_reject");
+        let xla = Backend::Xla {
+            artifacts_dir: "does-not-exist".to_string(),
+        };
+        let mut cfg = small_cfg();
+        cfg.backend = xla.clone();
+        cfg.precision = Precision::Mixed;
+        let err = generate_dataset(&cfg, &dir).unwrap_err().to_string();
+        assert!(err.contains("precision"), "{err}");
+        let mut cfg = small_cfg();
+        cfg.backend = xla;
+        cfg.filter_backend = FilterBackendKind::Sell;
+        let err = generate_dataset(&cfg, &dir).unwrap_err().to_string();
+        assert!(err.contains("filter_backend"), "{err}");
+        assert!(!dir.exists(), "nothing written for an invalid config");
     }
 
     #[test]

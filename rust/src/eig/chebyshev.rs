@@ -11,8 +11,8 @@
 //! The σ-scaling normalizes `p_m` at the target eigenvalue `λ` to avoid
 //! overflow (Zhou et al. 2006).
 
-use crate::linalg::{flops, Mat};
-use crate::sparse::CsrMatrix;
+use crate::linalg::{flops, Mat, MatF32};
+use crate::sparse::{CsrMatrix, CsrMatrixF32, SellMatrix, SellMatrixF32};
 
 /// How the ChFSI loop spends polynomial degree across the iterate
 /// block.
@@ -47,6 +47,78 @@ impl FilterSchedule {
         match s {
             "fixed" => Some(FilterSchedule::Fixed),
             "adaptive" => Some(FilterSchedule::Adaptive),
+            _ => None,
+        }
+    }
+}
+
+/// Arithmetic precision of the Chebyshev filter sweeps.
+///
+/// Only the filter's SpMM chain ever leaves f64: the Rayleigh–Ritz
+/// projection, residual evaluation, and locking always run in f64, so
+/// both settings accept a Ritz pair only when its **f64** relative
+/// residual is ≤ tol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Precision {
+    /// Everything in f64 — bit-for-bit identical to the historical
+    /// output (the default).
+    #[default]
+    F64,
+    /// Filter sweeps run in f32 while a column's residual is above its
+    /// [`f32_promotion_floor`]; the column is promoted back to f64 for
+    /// the endgame. Same accuracy guarantee, not bit-for-bit equal to
+    /// [`Precision::F64`].
+    Mixed,
+}
+
+impl Precision {
+    /// Config/CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::Mixed => "mixed",
+        }
+    }
+
+    /// Parse a config/CLI name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "f64" => Some(Precision::F64),
+            "mixed" => Some(Precision::Mixed),
+            _ => None,
+        }
+    }
+}
+
+/// Sparse-matrix layout used by the native filter backends.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum FilterBackendKind {
+    /// Row-partitioned CSR ([`NativeFilter`]) — the historical kernel,
+    /// bit-for-bit identical to every prior release (the default).
+    #[default]
+    Csr,
+    /// SELL-C-σ sliced layout ([`SellFilter`]): fixed-width lane loops
+    /// over C = [`crate::sparse::SELL_CHUNK`] rows with per-slice nnz
+    /// padding. Deterministic for any thread count, but its per-row
+    /// accumulation order differs from CSR, so it is *not* bit-for-bit
+    /// equal to [`FilterBackendKind::Csr`].
+    Sell,
+}
+
+impl FilterBackendKind {
+    /// Config/CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            FilterBackendKind::Csr => "csr",
+            FilterBackendKind::Sell => "sell",
+        }
+    }
+
+    /// Parse a config/CLI name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "csr" => Some(FilterBackendKind::Csr),
+            "sell" => Some(FilterBackendKind::Sell),
             _ => None,
         }
     }
@@ -120,6 +192,15 @@ impl FilterParams {
 
 /// Where the filter's block products are executed.
 pub trait FilterBackend {
+    /// Called once at the start of every eigensolve with the operator
+    /// that all subsequent `filter*` calls will use. Backends that
+    /// cache a derived representation of `A` (the f32 downcast, the
+    /// SELL repack) invalidate it here; chained solves reuse the same
+    /// backend across problems with identical sparsity but different
+    /// values, so skipping this hook would silently filter with a stale
+    /// operator. The default does nothing.
+    fn begin_solve(&mut self, _a: &CsrMatrix) {}
+
     /// Apply the degree-`m` filter to `y`, returning the filtered block.
     fn filter(&mut self, a: &CsrMatrix, y: &Mat, params: &FilterParams) -> Mat;
 
@@ -171,6 +252,35 @@ pub trait FilterBackend {
         y.cols() * p.degree
     }
 
+    /// f32 sibling of [`FilterBackend::filter_window_into`] for the
+    /// mixed-precision path: `y32` holds the not-yet-promoted columns,
+    /// the filtered block lands in `out32`. Returns the total applied
+    /// degree (the f32 matvec count). The default upcasts, runs the
+    /// backend's f64 window filter, and downcasts the result — correct
+    /// for every backend (the XLA route keeps working, just without the
+    /// f32 speedup); the native backends override it with true f32
+    /// kernels.
+    #[allow(clippy::too_many_arguments)]
+    fn filter_window_f32_into(
+        &mut self,
+        a: &CsrMatrix,
+        y32: &MatF32,
+        params: &FilterParams,
+        degrees: &[usize],
+        out32: &mut MatF32,
+        tmp1: &mut MatF32,
+        tmp2: &mut MatF32,
+        threads: usize,
+    ) -> usize {
+        let _ = (tmp1, tmp2);
+        let y = y32.to_f64();
+        let mut out = Mat::zeros(0, 0);
+        let (mut t1, mut t2) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
+        let applied = self.filter_window_into(a, &y, params, degrees, &mut out, &mut t1, &mut t2, threads);
+        out32.downcast_from(&out);
+        applied
+    }
+
     /// Diagnostic name (shows up in pipeline metrics).
     fn name(&self) -> &'static str;
 
@@ -182,10 +292,28 @@ pub trait FilterBackend {
 }
 
 /// The native backend: fused CSR SpMM three-term recurrence.
-#[derive(Debug, Default, Clone, Copy)]
-pub struct NativeFilter;
+///
+/// Holds the one-time f32 downcast of the current solve's operator for
+/// the mixed-precision path; [`FilterBackend::begin_solve`] invalidates
+/// it, and it is rebuilt lazily on the first f32 window call, so pure
+/// f64 solves never pay for it.
+#[derive(Debug, Default, Clone)]
+pub struct NativeFilter {
+    a32: Option<CsrMatrixF32>,
+}
+
+impl NativeFilter {
+    /// A fresh backend with no cached operator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
 
 impl FilterBackend for NativeFilter {
+    fn begin_solve(&mut self, _a: &CsrMatrix) {
+        self.a32 = None;
+    }
+
     fn filter(&mut self, a: &CsrMatrix, y: &Mat, params: &FilterParams) -> Mat {
         chebyshev_filter(a, y, params)
     }
@@ -219,8 +347,108 @@ impl FilterBackend for NativeFilter {
         chebyshev_filter_window_into(a, y, params, degrees, out, tmp1, tmp2, threads)
     }
 
+    #[allow(clippy::too_many_arguments)]
+    fn filter_window_f32_into(
+        &mut self,
+        a: &CsrMatrix,
+        y32: &MatF32,
+        params: &FilterParams,
+        degrees: &[usize],
+        out32: &mut MatF32,
+        tmp1: &mut MatF32,
+        tmp2: &mut MatF32,
+        threads: usize,
+    ) -> usize {
+        let a32 = self.a32.get_or_insert_with(|| CsrMatrixF32::from_f64(a));
+        chebyshev_filter_window_f32_into(a32, y32, params, degrees, out32, tmp1, tmp2, threads)
+    }
+
     fn name(&self) -> &'static str {
         "native-csr"
+    }
+}
+
+/// The SELL-C-σ backend: same three-term recurrence, sliced-ELLPACK
+/// SpMM kernels ([`crate::sparse::SellMatrix`]). Both the f64 repack
+/// and the f32 downcast are built lazily per solve and invalidated by
+/// [`FilterBackend::begin_solve`]. Deterministic for any thread count;
+/// not bit-for-bit equal to the CSR backend (different per-row
+/// accumulation grouping).
+#[derive(Debug, Default, Clone)]
+pub struct SellFilter {
+    sell: Option<SellMatrix>,
+    sell32: Option<SellMatrixF32>,
+}
+
+impl SellFilter {
+    /// A fresh backend with no cached operator.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl FilterBackend for SellFilter {
+    fn begin_solve(&mut self, _a: &CsrMatrix) {
+        self.sell = None;
+        self.sell32 = None;
+    }
+
+    fn filter(&mut self, a: &CsrMatrix, y: &Mat, params: &FilterParams) -> Mat {
+        let mut out = Mat::zeros(0, 0);
+        let (mut t1, mut t2) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
+        self.filter_into(a, y, params, &mut out, &mut t1, &mut t2, 1);
+        out
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn filter_into(
+        &mut self,
+        a: &CsrMatrix,
+        y: &Mat,
+        params: &FilterParams,
+        out: &mut Mat,
+        tmp1: &mut Mat,
+        tmp2: &mut Mat,
+        threads: usize,
+    ) {
+        let sell = self.sell.get_or_insert_with(|| SellMatrix::from_csr(a));
+        sell_chebyshev_filter_into(sell, y, params, out, tmp1, tmp2, threads);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn filter_window_into(
+        &mut self,
+        a: &CsrMatrix,
+        y: &Mat,
+        params: &FilterParams,
+        degrees: &[usize],
+        out: &mut Mat,
+        tmp1: &mut Mat,
+        tmp2: &mut Mat,
+        threads: usize,
+    ) -> usize {
+        let sell = self.sell.get_or_insert_with(|| SellMatrix::from_csr(a));
+        sell_filter_window_into(sell, y, params, degrees, out, tmp1, tmp2, threads)
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn filter_window_f32_into(
+        &mut self,
+        a: &CsrMatrix,
+        y32: &MatF32,
+        params: &FilterParams,
+        degrees: &[usize],
+        out32: &mut MatF32,
+        tmp1: &mut MatF32,
+        tmp2: &mut MatF32,
+        threads: usize,
+    ) -> usize {
+        let sell32 = self.sell32.get_or_insert_with(|| SellMatrixF32::from_csr(a));
+        sell_filter_window_f32_into(sell32, y32, params, degrees, out32, tmp1, tmp2, threads)
+    }
+
+    fn name(&self) -> &'static str {
+        "native-sell"
     }
 }
 
@@ -358,6 +586,28 @@ pub fn guard_target(tol: f64) -> f64 {
     10.0 * tol.abs().sqrt()
 }
 
+/// Relative-residual floor below which f32 filter sweeps stop helping a
+/// Ritz pair and the mixed-precision path promotes its column back to
+/// f64: `max(tol, √n·ε₃₂·κ_j)` with `κ_j = max(1, β/max(1, |θ_j|))`.
+///
+/// The rationale: a single f32 SpMM perturbs `A·x` by roughly
+/// `√n·ε₃₂·‖A‖·‖x‖` (random-sign accumulation over ~n-length dot
+/// products — the deterministic `n·ε₃₂` bound is far too pessimistic
+/// for the ~5–13-nnz stencil rows here), so the *relative* residual
+/// `‖Av − θv‖ / |θ|` of a column at Ritz value `θ_j` cannot be driven
+/// reliably below `√n·ε₃₂·‖A‖/|θ_j|` by f32 arithmetic. `β` (the
+/// damped interval's upper edge, ≥ λ_max from the solver's spectral
+/// bounds) stands in for `‖A‖`. Clamping below by `tol` means a loose
+/// tolerance keeps everything in f32 to the finish; a tight tolerance
+/// hands the endgame to f64. Correctness never depends on this value —
+/// acceptance is gated by the f64 residual check — it only decides
+/// where the cheap sweeps stop paying off.
+pub fn f32_promotion_floor(tol: f64, n: usize, upper: f64, theta: f64) -> f64 {
+    let eps32 = f32::EPSILON as f64;
+    let kappa = (upper.abs() / theta.abs().max(1.0)).max(1.0);
+    tol.max((n as f64).sqrt().max(8.0) * eps32 * kappa)
+}
+
 /// Shrinking-window Chebyshev filter: column `j` of `y0` is filtered to
 /// degree `degrees[j]` (the per-column schedule, sorted **descending**),
 /// all inside the same three rotating buffers as
@@ -389,7 +639,156 @@ pub fn chebyshev_filter_window_into(
     tmp2: &mut Mat,
     threads: usize,
 ) -> usize {
-    let n = a.rows();
+    window_driver_f64(
+        a.rows(),
+        y0,
+        params,
+        degrees,
+        out,
+        tmp1,
+        tmp2,
+        &mut |ca, x, cb, cc, z, y, j0, j1| a.spmm_fused_cols_into(ca, x, cb, cc, z, y, j0, j1, threads),
+    )
+}
+
+/// SELL-C-σ layout sibling of [`chebyshev_filter_window_into`]: the
+/// identical shrinking-window recurrence (same driver, same coefficient
+/// sequence) with the fused products dispatched to
+/// [`SellMatrix::spmm_fused_cols_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn sell_filter_window_into(
+    a: &SellMatrix,
+    y0: &Mat,
+    params: &FilterParams,
+    degrees: &[usize],
+    out: &mut Mat,
+    tmp1: &mut Mat,
+    tmp2: &mut Mat,
+    threads: usize,
+) -> usize {
+    window_driver_f64(
+        a.rows(),
+        y0,
+        params,
+        degrees,
+        out,
+        tmp1,
+        tmp2,
+        &mut |ca, x, cb, cc, z, y, j0, j1| a.spmm_fused_cols_into(ca, x, cb, cc, z, y, j0, j1, threads),
+    )
+}
+
+/// f32 shrinking-window filter over the downcast operator. The σ
+/// coefficient sequence is computed in f64 (it is a scalar recurrence —
+/// keeping it in f64 costs nothing and avoids compounding rounding into
+/// the coefficients) and rounded to f32 only at each kernel call.
+#[allow(clippy::too_many_arguments)]
+pub fn chebyshev_filter_window_f32_into(
+    a: &CsrMatrixF32,
+    y0: &MatF32,
+    params: &FilterParams,
+    degrees: &[usize],
+    out: &mut MatF32,
+    tmp1: &mut MatF32,
+    tmp2: &mut MatF32,
+    threads: usize,
+) -> usize {
+    window_driver_f32(
+        a.rows(),
+        y0,
+        params,
+        degrees,
+        out,
+        tmp1,
+        tmp2,
+        &mut |ca, x, cb, cc, z, y, j0, j1| {
+            a.spmm_fused_cols_into(ca as f32, x, cb as f32, cc as f32, z, y, j0, j1, threads)
+        },
+    )
+}
+
+/// f32 shrinking-window filter over the SELL-C-σ downcast operator.
+#[allow(clippy::too_many_arguments)]
+pub fn sell_filter_window_f32_into(
+    a: &SellMatrixF32,
+    y0: &MatF32,
+    params: &FilterParams,
+    degrees: &[usize],
+    out: &mut MatF32,
+    tmp1: &mut MatF32,
+    tmp2: &mut MatF32,
+    threads: usize,
+) -> usize {
+    window_driver_f32(
+        a.rows(),
+        y0,
+        params,
+        degrees,
+        out,
+        tmp1,
+        tmp2,
+        &mut |ca, x, cb, cc, z, y, j0, j1| {
+            a.spmm_fused_cols_into(ca as f32, x, cb as f32, cc as f32, z, y, j0, j1, threads)
+        },
+    )
+}
+
+/// Full-block Chebyshev filter over the SELL-C-σ layout — the
+/// [`chebyshev_filter_into`] recurrence with the fused products
+/// dispatched to [`SellMatrix::spmm_fused_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn sell_chebyshev_filter_into(
+    a: &SellMatrix,
+    y0: &Mat,
+    params: &FilterParams,
+    out: &mut Mat,
+    tmp1: &mut Mat,
+    tmp2: &mut Mat,
+    threads: usize,
+) {
+    let p = params.sanitized();
+    assert!(p.degree >= 1, "filter degree must be ≥ 1");
+    let c = p.center();
+    let e = p.half_width();
+    let sigma1 = e / (p.target - c);
+    let mut sigma = sigma1;
+
+    tmp1.copy_from(y0);
+    a.spmm_fused_into(sigma1 / e, y0, -c * sigma1 / e, 0.0, y0, out, threads);
+
+    for _i in 1..p.degree {
+        let sigma_new = 1.0 / (2.0 / sigma1 - sigma);
+        a.spmm_fused_into(
+            2.0 * sigma_new / e,
+            out,
+            -2.0 * c * sigma_new / e,
+            -sigma * sigma_new,
+            tmp1,
+            tmp2,
+            threads,
+        );
+        std::mem::swap(tmp1, out);
+        std::mem::swap(out, tmp2);
+        sigma = sigma_new;
+    }
+}
+
+/// The engine shared by every f64 window filter: the three-term
+/// recurrence, shrinking-window bookkeeping, and end-of-run gather,
+/// parameterized over the fused SpMM kernel so the CSR and SELL
+/// backends cannot drift arithmetically. `fused(a, x, b, c, z, y, j0,
+/// j1)` must compute `y[:, j0..j1] = a·A·x + b·x + c·z` column-window.
+#[allow(clippy::too_many_arguments)]
+fn window_driver_f64(
+    n: usize,
+    y0: &Mat,
+    params: &FilterParams,
+    degrees: &[usize],
+    out: &mut Mat,
+    tmp1: &mut Mat,
+    tmp2: &mut Mat,
+    fused: &mut dyn FnMut(f64, &Mat, f64, f64, &Mat, &mut Mat, usize, usize),
+) -> usize {
     let k = y0.cols();
     assert_eq!(degrees.len(), k, "one degree per column");
     // Correctness-critical: the shrinking window is a prefix, so an
@@ -415,7 +814,7 @@ pub fn chebyshev_filter_window_into(
     tmp1.copy_from(y0);
     out.set_shape(n, k);
     tmp2.set_shape(n, k);
-    a.spmm_fused_cols_into(sigma1 / e, y0, -c * sigma1 / e, 0.0, y0, out, 0, k, threads);
+    fused(sigma1 / e, y0, -c * sigma1 / e, 0.0, y0, out, 0, k);
 
     // Retirement bookkeeping: (step, j0, j1) column ranges that reached
     // their degree, in retirement order.
@@ -428,7 +827,7 @@ pub fn chebyshev_filter_window_into(
     while s < max_deg {
         let sigma_new = 1.0 / (2.0 / sigma1 - sigma);
         // Y⁺ = (2σ⁺/e)(A − cI) Y − σσ⁺ Y⁻ over the active window only.
-        a.spmm_fused_cols_into(
+        fused(
             2.0 * sigma_new / e,
             out,
             -2.0 * c * sigma_new / e,
@@ -437,7 +836,6 @@ pub fn chebyshev_filter_window_into(
             tmp2,
             0,
             w,
-            threads,
         );
         std::mem::swap(tmp1, out);
         std::mem::swap(out, tmp2);
@@ -452,6 +850,81 @@ pub fn chebyshev_filter_window_into(
     for &(step, j0, j1) in &retired {
         match (max_deg - step) % 3 {
             0 => {} // already in `out`
+            1 => out.copy_cols_from(tmp1, j0, j1),
+            _ => out.copy_cols_from(tmp2, j0, j1),
+        }
+    }
+    degrees.iter().sum()
+}
+
+/// f32 twin of [`window_driver_f64`] — the same recurrence over
+/// [`MatF32`] buffers. Coefficients arrive in f64; the kernel closure
+/// rounds them to f32 at the call boundary.
+#[allow(clippy::too_many_arguments)]
+fn window_driver_f32(
+    n: usize,
+    y0: &MatF32,
+    params: &FilterParams,
+    degrees: &[usize],
+    out: &mut MatF32,
+    tmp1: &mut MatF32,
+    tmp2: &mut MatF32,
+    fused: &mut dyn FnMut(f64, &MatF32, f64, f64, &MatF32, &mut MatF32, usize, usize),
+) -> usize {
+    let k = y0.cols();
+    assert_eq!(degrees.len(), k, "one degree per column");
+    assert!(
+        degrees.windows(2).all(|w| w[0] >= w[1]),
+        "degrees must be sorted descending"
+    );
+    if k == 0 {
+        out.set_shape(n, 0);
+        return 0;
+    }
+    assert!(*degrees.last().unwrap() >= 1, "filter degree must be ≥ 1");
+    let p = params.sanitized();
+    let max_deg = degrees[0];
+    let c = p.center();
+    let e = p.half_width();
+    let sigma1 = e / (p.target - c);
+    let mut sigma = sigma1;
+
+    tmp1.copy_from(y0);
+    out.set_shape(n, k);
+    tmp2.set_shape(n, k);
+    fused(sigma1 / e, y0, -c * sigma1 / e, 0.0, y0, out, 0, k);
+
+    let mut retired: Vec<(usize, usize, usize)> = Vec::new();
+    let mut w = degrees.partition_point(|&d| d >= 2);
+    if w < k {
+        retired.push((1, w, k));
+    }
+    let mut s = 1usize;
+    while s < max_deg {
+        let sigma_new = 1.0 / (2.0 / sigma1 - sigma);
+        fused(
+            2.0 * sigma_new / e,
+            out,
+            -2.0 * c * sigma_new / e,
+            -sigma * sigma_new,
+            tmp1,
+            tmp2,
+            0,
+            w,
+        );
+        std::mem::swap(tmp1, out);
+        std::mem::swap(out, tmp2);
+        sigma = sigma_new;
+        s += 1;
+        let w_next = degrees.partition_point(|&d| d >= s + 1);
+        if w_next < w {
+            retired.push((s, w_next, w));
+        }
+        w = w_next;
+    }
+    for &(step, j0, j1) in &retired {
+        match (max_deg - step) % 3 {
+            0 => {}
             1 => out.copy_cols_from(tmp1, j0, j1),
             _ => out.copy_cols_from(tmp2, j0, j1),
         }
@@ -679,7 +1152,7 @@ mod tests {
             assert_eq!(out, want, "threads = {threads}");
         }
         // The backend default path agrees too.
-        let mut backend = NativeFilter;
+        let mut backend = NativeFilter::new();
         let mut out = Mat::zeros(0, 0);
         let (mut t1, mut t2) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
         backend.filter_into(&a, &y, &params, &mut out, &mut t1, &mut t2, 2);
@@ -846,6 +1319,176 @@ mod tests {
     }
 
     #[test]
+    fn precision_and_backend_kind_names_roundtrip() {
+        for p in [Precision::F64, Precision::Mixed] {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+        }
+        assert_eq!(Precision::parse("f32"), None);
+        assert_eq!(Precision::default(), Precision::F64);
+        for b in [FilterBackendKind::Csr, FilterBackendKind::Sell] {
+            assert_eq!(FilterBackendKind::parse(b.name()), Some(b));
+        }
+        assert_eq!(FilterBackendKind::parse("ellpack"), None);
+        assert_eq!(FilterBackendKind::default(), FilterBackendKind::Csr);
+    }
+
+    #[test]
+    fn promotion_floor_tracks_tolerance_and_conditioning() {
+        // A loose tolerance dominates the floor (column never promotes
+        // on accuracy grounds); a tight tolerance exposes the f32 term.
+        assert_eq!(f32_promotion_floor(1e-2, 100, 10.0, 1.0), 1e-2);
+        let tight = f32_promotion_floor(1e-12, 100, 10.0, 1.0);
+        assert!(tight > 1e-12 && tight < 1e-3, "{tight}");
+        // Smaller Ritz values (relative residual divides by θ) and
+        // larger spectra raise the floor.
+        assert!(
+            f32_promotion_floor(1e-12, 100, 1e4, 1.0) > f32_promotion_floor(1e-12, 100, 10.0, 1.0)
+        );
+        assert!(
+            f32_promotion_floor(1e-12, 100, 1e4, 1.0)
+                >= f32_promotion_floor(1e-12, 100, 1e4, 100.0)
+        );
+        // Guard against degenerate inputs: θ = 0 must not blow up.
+        assert!(f32_promotion_floor(1e-12, 100, 10.0, 0.0).is_finite());
+    }
+
+    #[test]
+    fn sell_backend_matches_csr_backend_in_f64() {
+        // Same driver, same coefficients — SELL differs from CSR only
+        // by per-row accumulation grouping, so results agree to
+        // rounding, and the full/window entry points are mutually
+        // consistent.
+        let a = test_problem();
+        let params = FilterParams {
+            degree: 9,
+            lower: 5.0,
+            upper: 60.0,
+            target: 1.0,
+        };
+        let mut rng = Xoshiro256pp::seed_from_u64(31);
+        let y = Mat::randn(a.rows(), 5, &mut rng);
+        let want = chebyshev_filter(&a, &y, &params);
+        let mut sell = SellFilter::new();
+        sell.begin_solve(&a);
+        let got = sell.filter(&a, &y, &params);
+        let scale = want.fro_norm().max(1.0);
+        assert!(got.max_abs_diff(&want) < 1e-10 * scale);
+        // Window path with uniform degrees equals the full filter
+        // bit-for-bit (same kernels, same call sequence).
+        let mut out = Mat::zeros(0, 0);
+        let (mut t1, mut t2) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
+        let applied =
+            sell.filter_window_into(&a, &y, &params, &[9; 5], &mut out, &mut t1, &mut t2, 2);
+        assert_eq!(applied, 45);
+        assert_eq!(out, got);
+    }
+
+    #[test]
+    fn f32_window_filter_tracks_f64_within_single_precision() {
+        let a = test_problem();
+        let params = FilterParams {
+            degree: 8,
+            lower: 5.0,
+            upper: 60.0,
+            target: 1.0,
+        };
+        let mut rng = Xoshiro256pp::seed_from_u64(32);
+        let y = Mat::randn(a.rows(), 4, &mut rng);
+        let degrees = [8usize, 8, 5, 2];
+        let mut want = Mat::zeros(0, 0);
+        let (mut t1, mut t2) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
+        chebyshev_filter_window_into(&a, &y, &params, &degrees, &mut want, &mut t1, &mut t2, 1);
+        let y32 = MatF32::from_f64(&y);
+        for (label, mut backend) in [
+            ("csr", Box::new(NativeFilter::new()) as Box<dyn FilterBackend>),
+            ("sell", Box::new(SellFilter::new()) as Box<dyn FilterBackend>),
+        ] {
+            backend.begin_solve(&a);
+            let mut o32 = MatF32::zeros(0, 0);
+            let (mut a32, mut b32) = (MatF32::zeros(0, 0), MatF32::zeros(0, 0));
+            let applied = backend.filter_window_f32_into(
+                &a, &y32, &params, &degrees, &mut o32, &mut a32, &mut b32, 2,
+            );
+            assert_eq!(applied, 23, "{label}");
+            let got = o32.to_f64();
+            let scale = want.fro_norm().max(1.0);
+            assert!(
+                got.max_abs_diff(&want) < 1e-3 * scale,
+                "{label}: {}",
+                got.max_abs_diff(&want) / scale
+            );
+        }
+    }
+
+    #[test]
+    fn default_f32_window_upcasts_and_stays_correct() {
+        // A backend that only implements `filter` (the XLA shape) must
+        // get a *correct* f32 window via the trait default, equal to
+        // its own f64 fallback rounded to f32.
+        struct Plain;
+        impl FilterBackend for Plain {
+            fn filter(&mut self, a: &CsrMatrix, y: &Mat, params: &FilterParams) -> Mat {
+                chebyshev_filter(a, y, params)
+            }
+            fn name(&self) -> &'static str {
+                "plain"
+            }
+        }
+        let a = test_problem();
+        let params = FilterParams {
+            degree: 7,
+            lower: 5.0,
+            upper: 60.0,
+            target: 1.0,
+        };
+        let mut rng = Xoshiro256pp::seed_from_u64(33);
+        let y = Mat::randn(a.rows(), 3, &mut rng);
+        let y32 = MatF32::from_f64(&y);
+        let mut plain = Plain;
+        let mut o32 = MatF32::zeros(0, 0);
+        let (mut a32, mut b32) = (MatF32::zeros(0, 0), MatF32::zeros(0, 0));
+        let applied = plain
+            .filter_window_f32_into(&a, &y32, &params, &[7, 4, 2], &mut o32, &mut a32, &mut b32, 1);
+        // Default ignores the schedule: max degree × columns.
+        assert_eq!(applied, 21);
+        let p7 = FilterParams { degree: 7, ..params };
+        let want32 = MatF32::from_f64(&chebyshev_filter(&a, &y32.to_f64(), &p7));
+        assert_eq!(o32.to_f64(), want32.to_f64());
+    }
+
+    #[test]
+    fn begin_solve_invalidates_cached_operator() {
+        // Chained solves reuse one backend across problems with the
+        // same sparsity but different values; a stale f32 cache would
+        // silently filter with the old operator.
+        let a = test_problem();
+        let b = a.scaled(2.0);
+        let params = FilterParams {
+            degree: 6,
+            lower: 5.0,
+            upper: 120.0,
+            target: 1.0,
+        };
+        let mut rng = Xoshiro256pp::seed_from_u64(34);
+        let y = Mat::randn(a.rows(), 3, &mut rng);
+        let y32 = MatF32::from_f64(&y);
+        let degrees = [6usize, 6, 6];
+        let run = |backend: &mut NativeFilter, m: &CsrMatrix| {
+            backend.begin_solve(m);
+            let mut o32 = MatF32::zeros(0, 0);
+            let (mut t1, mut t2) = (MatF32::zeros(0, 0), MatF32::zeros(0, 0));
+            backend.filter_window_f32_into(m, &y32, &params, &degrees, &mut o32, &mut t1, &mut t2, 1);
+            o32.to_f64()
+        };
+        let mut fresh = NativeFilter::new();
+        let want_b = run(&mut fresh, &b);
+        let mut reused = NativeFilter::new();
+        let _ = run(&mut reused, &a);
+        let got_b = run(&mut reused, &b);
+        assert_eq!(got_b, want_b);
+    }
+
+    #[test]
     fn flop_cost_matches_instrumented_count() {
         let a = test_problem();
         let params = FilterParams {
@@ -856,7 +1499,7 @@ mod tests {
         };
         let mut rng = Xoshiro256pp::seed_from_u64(5);
         let y = Mat::randn(a.rows(), 4, &mut rng);
-        let mut backend = NativeFilter;
+        let mut backend = NativeFilter::new();
         let (_, counted) = filtered_with_flops(&mut backend, &a, &y, &params);
         let predicted = filter_flop_cost(&a, 4, 7);
         // The clone of Y0 and swaps cost nothing; counts must match.

@@ -6,7 +6,10 @@
 //! approximate invariant subspace and the iteration typically converges
 //! in a handful of passes — this is the mechanism behind SCSF's speedup.
 
-use super::chebyshev::{self, FilterBackend, FilterParams, FilterSchedule, NativeFilter};
+use super::chebyshev::{
+    self, FilterBackend, FilterBackendKind, FilterParams, FilterSchedule, NativeFilter, Precision,
+    SellFilter,
+};
 use super::solver::Workspace;
 use super::spectral_bounds::{lanczos_bounds, SpectralBounds};
 use super::{EigOptions, EigResult, SolveStats, WarmStart};
@@ -46,6 +49,16 @@ pub struct ChfsiOptions {
     /// the full `bound_steps` run. The refreshed bound stays
     /// guaranteed (`θ_max + ‖f_k‖ ≥ λ_max` for any `k`).
     pub warm_bound_steps: usize,
+    /// Arithmetic precision of the filter sweeps:
+    /// [`Precision::F64`] (bit-for-bit historical, the default) or
+    /// [`Precision::Mixed`] (f32 sweeps until a column's residual nears
+    /// the f32 floor, then promotion back to f64 — same residual ≤ tol
+    /// acceptance, not bit-for-bit).
+    pub precision: Precision,
+    /// Sparse layout of the native filter kernels:
+    /// [`FilterBackendKind::Csr`] (bit-for-bit historical, the default)
+    /// or [`FilterBackendKind::Sell`] (SELL-C-σ sliced layout).
+    pub filter_backend: FilterBackendKind,
 }
 
 impl ChfsiOptions {
@@ -60,6 +73,8 @@ impl ChfsiOptions {
             threads: 1,
             schedule: FilterSchedule::Fixed,
             warm_bound_steps: 4,
+            precision: Precision::F64,
+            filter_backend: FilterBackendKind::Csr,
         }
     }
 
@@ -87,10 +102,13 @@ fn bump_degree_hist(hist: &mut Vec<usize>, d: usize, count: usize) {
     hist[d] += count;
 }
 
-/// Solve with the default native (CSR SpMM) filter backend.
+/// Solve with the native filter backend selected by
+/// `opts.filter_backend` (CSR by default).
 pub fn solve(a: &CsrMatrix, opts: &ChfsiOptions, init: Option<&WarmStart>) -> EigResult {
-    let mut backend = NativeFilter;
-    solve_with_backend(a, opts, init, &mut backend)
+    match opts.filter_backend {
+        FilterBackendKind::Csr => solve_with_backend(a, opts, init, &mut NativeFilter::new()),
+        FilterBackendKind::Sell => solve_with_backend(a, opts, init, &mut SellFilter::new()),
+    }
 }
 
 /// Solve with an explicit filter backend (native or PJRT/XLA), using a
@@ -123,12 +141,17 @@ pub fn solve_in(
     // The options are the single source of truth for the thread count;
     // the workspace just carries it to the kernels.
     ws.threads = opts.threads.max(1);
+    // Invalidate any operator representation cached from a previous
+    // solve (chained solves reuse the backend across problems with
+    // identical sparsity but different values).
+    backend.begin_solve(a);
     let n = a.rows();
     let l = opts.eig.n_eigs;
     assert!(l >= 1 && l < n, "need 1 ≤ L < n (L={l}, n={n})");
     let block = opts.block_width(n);
     let tol = opts.eig.tol;
     let adaptive = opts.schedule == FilterSchedule::Adaptive;
+    let mixed = opts.precision == Precision::Mixed;
 
     // ---- Initial block and spectral estimates --------------------------
     // Warm-chain bound reuse (adaptive schedule only): seed the filter
@@ -219,12 +242,13 @@ pub fn solve_in(
     // filter the whole block at the full degree).
     ws.col_theta.clear();
     ws.col_res.clear();
-    if adaptive {
+    if adaptive || mixed {
         if let Some(w) = init {
             // Price the inherited columns' residuals on the *new*
             // matrix with one block SpMM: `block` matvecs that let the
             // very first sweep run scheduled degrees instead of the
-            // cap — the dominant saving on warm chains.
+            // cap (adaptive) and pick each column's precision lane
+            // (mixed) — the dominant saving on warm chains.
             let have = w.values.len().min(v.cols());
             let res =
                 super::rel_residuals_into(a, &w.values[..have], &v, &mut ws.ax, ws.threads);
@@ -241,6 +265,12 @@ pub fn solve_in(
     // through ws.t1-t3, A·Q lands in ws.ax, the projected problem in
     // ws.gram/ws.eig, the rotated block in ws.t4, and locked pairs
     // append in place inside ws.locked.
+    //
+    // Mixed-precision bookkeeping: how many columns ran the f32 lane
+    // last sweep. Columns have no cross-iteration identity (the
+    // Rayleigh–Ritz step mixes them), so promotions are counted as the
+    // shrinkage of the f32 group, not per column.
+    let mut prev_n32: Option<usize> = None;
     while locked_vals.len() < l && stats.iterations < opts.eig.max_iters {
         stats.iterations += 1;
         let params = FilterParams {
@@ -253,7 +283,145 @@ pub fn solve_in(
 
         // (line 3) filter the active block into ws.t1
         let t_phase = Instant::now();
-        if adaptive && !ws.col_res.is_empty() && ws.col_res.len() == v.cols() {
+        if mixed {
+            // ---- Mixed-precision path (both schedules) --------------
+            // Each active column runs the f32 lane while its residual
+            // is above its promotion floor (unknown residuals — cold
+            // sweeps, random padding — count as ∞, i.e. f32), and the
+            // f64 lane afterwards. The block is permuted so each lane
+            // is a contiguous, degree-descending group: f32 columns
+            // first, then f64. Degrees come from the adaptive pricing
+            // when residual info exists, else uniformly `opts.degree`
+            // (the fixed schedule). RR/residual/locking below stay
+            // f64, so acceptance is still gated by f64 residuals.
+            let k = v.cols();
+            let cap = opts.degree.max(1);
+            let have_info = !ws.col_res.is_empty() && ws.col_res.len() == k;
+            let want_here = l - locked_vals.len();
+            // Per-sweep accuracy goals — same policy as the pure
+            // adaptive branch below.
+            let (wanted_goal, guard_goal) = if adaptive && have_info {
+                let mut worst_post = 0.0f64;
+                for j in 0..want_here.min(ws.col_res.len()) {
+                    worst_post = worst_post.max(chebyshev::predicted_residual(
+                        ws.col_res[j],
+                        ws.col_theta[j],
+                        &params,
+                        opts.degree,
+                    ));
+                }
+                let lift = if worst_post.is_finite() { 0.3 * worst_post } else { 0.0 };
+                let wg = (0.5 * tol).max(lift);
+                (wg, wg.max(chebyshev::guard_target(tol)))
+            } else {
+                (0.0, 0.0)
+            };
+            // Safety valve: if the solve has burned half its iteration
+            // budget, force everything onto the f64 lane — f32 sweeps
+            // can only slow convergence, never corrupt it, but they
+            // must not be able to exhaust the budget.
+            let force_f64 = stats.iterations > opts.eig.max_iters / 2;
+            // Sort key packs (lane, degree): f32 keys are offset by
+            // cap + 1, so descending order yields [f32 group desc |
+            // f64 group desc] — each lane's slice is itself a valid
+            // descending window schedule. Ties break by original
+            // index, keeping the permutation deterministic.
+            ws.deg_pairs.clear();
+            for j in 0..k {
+                let (r, th) = if have_info {
+                    (ws.col_res[j], ws.col_theta[j])
+                } else {
+                    (f64::INFINITY, f64::INFINITY)
+                };
+                let d = if adaptive && have_info {
+                    let goal = if j < want_here { wanted_goal } else { guard_goal };
+                    chebyshev::required_degree(r, goal, th, &params, cap)
+                } else {
+                    cap
+                };
+                let floor = chebyshev::f32_promotion_floor(tol, n, upper, th);
+                let is32 = !force_f64 && r > floor;
+                ws.deg_pairs.push((if is32 { d + cap + 1 } else { d }, j));
+            }
+            ws.deg_pairs
+                .sort_unstable_by(|x, y| y.0.cmp(&x.0).then(x.1.cmp(&y.1)));
+            ws.degrees.clear();
+            ws.perm.clear();
+            let mut n32 = 0usize;
+            for &(key, j) in ws.deg_pairs.iter() {
+                if key > cap {
+                    n32 += 1;
+                    ws.degrees.push(key - cap - 1);
+                } else {
+                    ws.degrees.push(key);
+                }
+                ws.perm.push(j);
+            }
+            let before = flops::read();
+            let mut applied32 = 0usize;
+            if n32 > 0 {
+                // Downcast + permute the f32 group in one pass.
+                ws.y32.downcast_gather(&v, &ws.perm[..n32]);
+                applied32 = backend.filter_window_f32_into(
+                    a,
+                    &ws.y32,
+                    &params,
+                    &ws.degrees[..n32],
+                    &mut ws.o32,
+                    &mut ws.ta32,
+                    &mut ws.tb32,
+                    ws.threads,
+                );
+            }
+            let mut applied64 = 0usize;
+            if n32 < k {
+                ws.t4.gather_cols_into(&v, &ws.perm[n32..]);
+                applied64 = backend.filter_window_into(
+                    a,
+                    &ws.t4,
+                    &params,
+                    &ws.degrees[n32..],
+                    &mut ws.t2,
+                    &mut ws.t3,
+                    &mut ws.ax,
+                    ws.threads,
+                );
+            }
+            stats.filter_flops += flops::read().wrapping_sub(before);
+            // Assemble the filtered block in ws.t1: upcast-stored f32
+            // columns first, then the f64 columns — the same order the
+            // degrees/perm arrays use.
+            ws.t1.set_shape(n, k);
+            if n32 > 0 {
+                ws.o32.store_cols_into(&mut ws.t1, 0);
+            }
+            if n32 < k {
+                ws.t1.set_cols_from(n32, &ws.t2, 0, k - n32);
+            }
+            let applied = applied32 + applied64;
+            stats.matvecs += applied;
+            stats.filter_matvecs += applied;
+            stats.f32_matvecs += applied32;
+            stats.promotions += prev_n32.map_or(0, |p| p.saturating_sub(n32));
+            prev_n32 = Some(n32);
+            // Histogram: price what actually ran (a backend without a
+            // native window path filters each lane at its max degree).
+            let scheduled: usize = ws.degrees.iter().sum();
+            if applied == scheduled {
+                for &d in ws.degrees.iter() {
+                    bump_degree_hist(&mut stats.degree_hist, d, 1);
+                }
+            } else {
+                if n32 > 0 {
+                    let d32 = ws.degrees[..n32].first().copied().unwrap_or(cap).max(1);
+                    bump_degree_hist(&mut stats.degree_hist, d32, n32);
+                }
+                if n32 < k {
+                    let d64 = ws.degrees[n32..].first().copied().unwrap_or(cap).max(1);
+                    bump_degree_hist(&mut stats.degree_hist, d64, k - n32);
+                }
+            }
+        } else if adaptive && !ws.col_res.is_empty() && ws.col_res.len() == v.cols() {
             // Per-column degrees from each column's residual and the
             // filter's amplification on the current interval; sort
             // descending (ties by original index — deterministic) and
@@ -371,7 +539,7 @@ pub fn solve_in(
         // per-column reduction grows. The matvec counter charges the
         // actual full-block product under both schedules, so the new
         // manifest counters are comparable across schedules.
-        let res = if adaptive {
+        let res = if adaptive || mixed {
             super::rel_residuals_into(a, &ws.eig.values, &ws.t4, &mut ws.ax, ws.threads)
         } else {
             super::rel_residuals_into(a, &ws.eig.values[..cut], &ws.t4, &mut ws.ax, ws.threads)
@@ -392,7 +560,7 @@ pub fn solve_in(
         // Active block for the next sweep: non-locked Ritz vectors.
         last_theta.clear();
         last_theta.extend_from_slice(&ws.eig.values[newly..]);
-        if adaptive {
+        if adaptive || mixed {
             ws.col_theta.clear();
             ws.col_theta.extend_from_slice(&ws.eig.values[newly..]);
             ws.col_res.clear();
@@ -603,7 +771,7 @@ mod tests {
         let fresh2 = solve(&a, &opts, Some(&fresh1.as_warm_start()));
         for threads in [1usize, 2, 4] {
             opts.threads = threads;
-            let mut backend = NativeFilter;
+            let mut backend = NativeFilter::new();
             let mut ws = Workspace::new(threads);
             let r1 = solve_in(&a, &opts, None, &mut backend, &mut ws);
             let r2 = solve_in(&a, &opts, Some(&r1.as_warm_start()), &mut backend, &mut ws);
@@ -741,7 +909,7 @@ mod tests {
         let fresh2 = solve(&a, &opts, Some(&fresh1.as_warm_start()));
         for threads in [1usize, 2, 4] {
             opts.threads = threads;
-            let mut backend = NativeFilter;
+            let mut backend = NativeFilter::new();
             let mut ws = Workspace::new(threads);
             let r1 = solve_in(&a, &opts, None, &mut backend, &mut ws);
             let r2 = solve_in(&a, &opts, Some(&r1.as_warm_start()), &mut backend, &mut ws);
@@ -765,5 +933,167 @@ mod tests {
         for res in &r.residuals {
             assert!(*res <= 1e-9, "residual {res}");
         }
+    }
+
+    #[test]
+    fn f64_default_runs_no_f32_work() {
+        // The default options never touch the f32 lane: the new
+        // counters stay zero and explicit F64/CSR equals the default
+        // bit for bit (the knobs' backward-compatibility contract).
+        let a = problem(OperatorKind::Poisson, 10, 11);
+        let base = ChfsiOptions::from_eig(&EigOptions {
+            n_eigs: 5,
+            tol: 1e-9,
+            max_iters: 300,
+            seed: 2,
+        });
+        assert_eq!(base.precision, Precision::F64);
+        assert_eq!(base.filter_backend, FilterBackendKind::Csr);
+        let r = solve(&a, &base, None);
+        assert_eq!(r.stats.f32_matvecs, 0);
+        assert_eq!(r.stats.promotions, 0);
+        let mut explicit = base;
+        explicit.precision = Precision::F64;
+        explicit.filter_backend = FilterBackendKind::Csr;
+        let r2 = solve(&a, &explicit, None);
+        assert_eq!(r.values, r2.values);
+        assert_eq!(r.vectors, r2.vectors);
+    }
+
+    #[test]
+    fn mixed_precision_converges_with_f32_sweeps() {
+        // Mixed precision on both schedules and both layouts: residuals
+        // still meet the (f64-checked) tolerance, values agree with the
+        // pure-f64 solve, and a nonzero share of the filter ran in f32.
+        let a = problem(OperatorKind::Poisson, 12, 1);
+        let base = ChfsiOptions::from_eig(&EigOptions {
+            n_eigs: 8,
+            tol: 1e-9,
+            max_iters: 300,
+            seed: 0,
+        });
+        let reference = solve(&a, &base, None);
+        for schedule in [FilterSchedule::Fixed, FilterSchedule::Adaptive] {
+            for backend in [FilterBackendKind::Csr, FilterBackendKind::Sell] {
+                let mut opts = base;
+                opts.schedule = schedule;
+                opts.precision = Precision::Mixed;
+                opts.filter_backend = backend;
+                let r = solve(&a, &opts, None);
+                let tag = format!("{schedule:?}/{backend:?}");
+                assert!(r.stats.converged, "{tag}: {:?}", r.residuals);
+                for res in &r.residuals {
+                    assert!(*res <= 1e-9, "{tag}: residual {res}");
+                }
+                for (got, want) in r.values.iter().zip(&reference.values) {
+                    assert!(
+                        (got - want).abs() / want.abs().max(1.0) < 1e-7,
+                        "{tag}: {got} vs {want}"
+                    );
+                }
+                assert!(r.stats.f32_matvecs > 0, "{tag}: no f32 sweeps ran");
+                assert!(
+                    r.stats.f32_matvecs <= r.stats.filter_matvecs,
+                    "{tag}: f32 {} > filter {}",
+                    r.stats.f32_matvecs,
+                    r.stats.filter_matvecs
+                );
+                // The histogram invariant holds on the mixed path too.
+                assert_eq!(
+                    r.stats
+                        .degree_hist
+                        .iter()
+                        .enumerate()
+                        .map(|(d, c)| d * c)
+                        .sum::<usize>(),
+                    r.stats.filter_matvecs,
+                    "{tag}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mixed_promotes_columns_to_f64_at_tight_tolerance() {
+        // At tol 1e-10 the promotion floor sits well above tol, so the
+        // endgame must run in f64: promotions fire and the last sweeps
+        // apply f64 degree (f32_matvecs < filter_matvecs).
+        let a = problem(OperatorKind::Elliptic, 10, 8);
+        let mut opts = ChfsiOptions::from_eig(&EigOptions {
+            n_eigs: 6,
+            tol: 1e-10,
+            max_iters: 400,
+            seed: 3,
+        });
+        opts.precision = Precision::Mixed;
+        let r = solve(&a, &opts, None);
+        assert!(r.stats.converged, "{:?}", r.residuals);
+        for res in &r.residuals {
+            assert!(*res <= 1e-10 * 10.0, "residual {res}");
+        }
+        assert!(r.stats.f32_matvecs > 0);
+        assert!(
+            r.stats.f32_matvecs < r.stats.filter_matvecs,
+            "endgame should have run f64 sweeps (f32 {} of {})",
+            r.stats.f32_matvecs,
+            r.stats.filter_matvecs
+        );
+        assert!(r.stats.promotions > 0, "no column ever promoted");
+    }
+
+    #[test]
+    fn mixed_workspace_reuse_is_deterministic() {
+        // The mixed path keeps the determinism contract: reused
+        // workspaces/backends and any thread count are bit-for-bit.
+        let a = problem(OperatorKind::Helmholtz, 10, 9);
+        let mut opts = ChfsiOptions::from_eig(&EigOptions {
+            n_eigs: 6,
+            tol: 1e-8,
+            max_iters: 300,
+            seed: 0,
+        });
+        opts.precision = Precision::Mixed;
+        let fresh1 = solve(&a, &opts, None);
+        let fresh2 = solve(&a, &opts, Some(&fresh1.as_warm_start()));
+        assert!(fresh2.stats.converged);
+        for threads in [1usize, 2, 4] {
+            opts.threads = threads;
+            let mut backend = NativeFilter::new();
+            let mut ws = Workspace::new(threads);
+            let r1 = solve_in(&a, &opts, None, &mut backend, &mut ws);
+            let r2 = solve_in(&a, &opts, Some(&r1.as_warm_start()), &mut backend, &mut ws);
+            assert_eq!(r1.values, fresh1.values, "threads {threads}");
+            assert_eq!(r1.vectors, fresh1.vectors, "threads {threads}");
+            assert_eq!(r2.values, fresh2.values, "threads {threads}");
+            assert_eq!(r2.vectors, fresh2.vectors, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn sell_backend_solves_match_csr_to_solver_accuracy() {
+        // Pure f64 through the SELL layout: same pairs to solver
+        // accuracy, residuals within tolerance.
+        let a = problem(OperatorKind::Helmholtz, 10, 2);
+        let base = ChfsiOptions::from_eig(&EigOptions {
+            n_eigs: 6,
+            tol: 1e-9,
+            max_iters: 300,
+            seed: 1,
+        });
+        let csr = solve(&a, &base, None);
+        let mut opts = base;
+        opts.filter_backend = FilterBackendKind::Sell;
+        let sell = solve(&a, &opts, None);
+        assert!(sell.stats.converged, "{:?}", sell.residuals);
+        for res in &sell.residuals {
+            assert!(*res <= 1e-9, "residual {res}");
+        }
+        for (got, want) in sell.values.iter().zip(&csr.values) {
+            assert!(
+                (got - want).abs() / want.abs().max(1.0) < 1e-7,
+                "{got} vs {want}"
+            );
+        }
+        assert_eq!(sell.stats.f32_matvecs, 0);
     }
 }

@@ -86,6 +86,14 @@ pub struct SolveStats {
     /// `A·x` products spent inside the Chebyshev filter (SCSF/ChFSI
     /// only) — the quantity the adaptive degree schedule minimizes.
     pub filter_matvecs: usize,
+    /// Filter `A·x` products that ran in f32 (subset of
+    /// `filter_matvecs`; nonzero only under `precision: mixed`).
+    pub f32_matvecs: usize,
+    /// Columns promoted from the f32 lane back to f64, summed over
+    /// sweeps. Columns have no cross-iteration identity (Rayleigh–Ritz
+    /// mixes the block), so this counts the per-sweep shrinkage of the
+    /// f32 group (`precision: mixed` only).
+    pub promotions: usize,
     /// Histogram of per-column filter degrees: `degree_hist[m]` counts
     /// columns filtered at degree `m`, summed over sweeps (SCSF/ChFSI
     /// only; the fixed schedule puts everything in one bucket).

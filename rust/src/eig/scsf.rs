@@ -112,6 +112,19 @@ impl SequenceResult {
         self.results.iter().map(|r| r.stats.filter_matvecs).sum()
     }
 
+    /// Filter `A·x` products that ran in f32 across the sequence
+    /// (subset of [`Self::filter_matvecs`]; nonzero only under
+    /// `precision: mixed`).
+    pub fn f32_matvecs(&self) -> usize {
+        self.results.iter().map(|r| r.stats.f32_matvecs).sum()
+    }
+
+    /// Columns promoted from the f32 lane back to f64 across the
+    /// sequence.
+    pub fn promotions(&self) -> usize {
+        self.results.iter().map(|r| r.stats.promotions).sum()
+    }
+
     /// Merged per-column filter-degree histogram across the sequence
     /// (`hist[m]` = columns filtered at degree `m`).
     pub fn degree_hist(&self) -> Vec<usize> {
@@ -128,10 +141,19 @@ impl SequenceResult {
     }
 }
 
-/// Solve a problem set with SCSF using the native filter backend.
+/// Solve a problem set with SCSF using the native filter backend
+/// selected by `opts.chfsi.filter_backend` (CSR by default).
 pub fn solve_sequence(problems: &[Problem], opts: &ScsfOptions) -> SequenceResult {
-    let mut backend = super::chebyshev::NativeFilter;
-    solve_sequence_with_backend(problems, opts, &mut backend)
+    match opts.chfsi.filter_backend {
+        super::chebyshev::FilterBackendKind::Csr => {
+            let mut backend = super::chebyshev::NativeFilter::new();
+            solve_sequence_with_backend(problems, opts, &mut backend)
+        }
+        super::chebyshev::FilterBackendKind::Sell => {
+            let mut backend = super::chebyshev::SellFilter::new();
+            solve_sequence_with_backend(problems, opts, &mut backend)
+        }
+    }
 }
 
 /// Solve a problem set with SCSF on an explicit filter backend (used by
@@ -409,7 +431,7 @@ mod tests {
     fn chain_counts_cold_and_warm_solves() {
         let ps = dataset(3, 7);
         let o = opts(4, 1e-8);
-        let mut backend = crate::eig::chebyshev::NativeFilter;
+        let mut backend = crate::eig::chebyshev::NativeFilter::new();
         let mut ws = Workspace::new(1);
         let mut chain = Chain::new();
         assert!(chain.next_is_cold(&o));
@@ -455,7 +477,7 @@ mod tests {
         };
         let helm = operators::generate(OperatorKind::Helmholtz, gen_opts, 2, 3);
         let pois = operators::generate(OperatorKind::Poisson, gen_opts, 2, 4);
-        let mut backend = crate::eig::chebyshev::NativeFilter;
+        let mut backend = crate::eig::chebyshev::NativeFilter::new();
         let mut ws = Workspace::new(1);
         let mut chain = Chain::new();
         for p in helm.iter().chain(&pois) {

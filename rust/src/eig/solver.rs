@@ -23,13 +23,13 @@
 //! let r2 = solver.solve(&a, &mut ws, Some(&warm)); // zero new blocks
 //! ```
 
-use super::chebyshev::NativeFilter;
+use super::chebyshev::{FilterBackendKind, NativeFilter, SellFilter};
 use super::chfsi::{self, ChfsiOptions};
 use super::{
     jacobi_davidson, krylov_schur, lanczos, lobpcg, EigOptions, EigResult, SolverKind, WarmStart,
 };
 use crate::linalg::symeig::SymEig;
-use crate::linalg::Mat;
+use crate::linalg::{Mat, MatF32};
 use crate::sparse::CsrMatrix;
 
 /// Preallocated, reusable scratch for one solver instance.
@@ -80,6 +80,14 @@ pub struct Workspace {
     pub degrees: Vec<usize>,
     /// Adaptive-schedule scratch: column permutation matching `degrees`.
     pub perm: Vec<usize>,
+    /// Mixed-precision scratch: downcast f32 lane of the iterate block.
+    pub y32: MatF32,
+    /// Mixed-precision scratch: f32 filter output block.
+    pub o32: MatF32,
+    /// Mixed-precision scratch: f32 filter ping buffer.
+    pub ta32: MatF32,
+    /// Mixed-precision scratch: f32 filter pong buffer.
+    pub tb32: MatF32,
 }
 
 impl Workspace {
@@ -107,6 +115,10 @@ impl Workspace {
             deg_pairs: Vec::new(),
             degrees: Vec::new(),
             perm: Vec::new(),
+            y32: MatF32::zeros(0, 0),
+            o32: MatF32::zeros(0, 0),
+            ta32: MatF32::zeros(0, 0),
+            tb32: MatF32::zeros(0, 0),
         }
     }
 
@@ -142,7 +154,9 @@ impl Workspace {
     /// re-solves (buffers only ever grow), which is what the regression
     /// tests assert. Counts `f64` slots only — the usize-typed adaptive
     /// schedule scratch (`deg_pairs`/`degrees`/`perm`, O(block) each)
-    /// is deliberately excluded.
+    /// and the f32-typed mixed-precision blocks (`y32`/`o32`/`ta32`/
+    /// `tb32`; empty unless `precision: mixed`) are deliberately
+    /// excluded.
     pub fn capacity_f64(&self) -> usize {
         self.ax.capacity()
             + self.t1.capacity()
@@ -229,10 +243,16 @@ impl EigSolver for Solver {
             SolverKind::JacobiDavidson => {
                 jacobi_davidson::solve_in(a, &self.opts.eig, init, ws)
             }
-            SolverKind::Chfsi | SolverKind::Scsf => {
-                let mut backend = NativeFilter;
-                chfsi::solve_in(a, &self.opts, init, &mut backend, ws)
-            }
+            SolverKind::Chfsi | SolverKind::Scsf => match self.opts.filter_backend {
+                FilterBackendKind::Csr => {
+                    let mut backend = NativeFilter::new();
+                    chfsi::solve_in(a, &self.opts, init, &mut backend, ws)
+                }
+                FilterBackendKind::Sell => {
+                    let mut backend = SellFilter::new();
+                    chfsi::solve_in(a, &self.opts, init, &mut backend, ws)
+                }
+            },
         }
     }
 

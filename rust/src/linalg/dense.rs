@@ -399,6 +399,165 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
     }
 }
 
+/// Row-major dense `f32` matrix — the iterate storage of the
+/// mixed-precision Chebyshev sweeps ([`crate::eig::chebyshev`]).
+///
+/// Only the filter recurrence ever runs in f32; every Rayleigh–Ritz,
+/// residual, and locking stage stays f64 (DESIGN.md §Precision &
+/// sparse-layout backends), so this type needs no factorization or
+/// Gram kernels — just shape management and f64 ↔ f32 block transfer.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MatF32 {
+    rows: usize,
+    cols: usize,
+    data: Vec<f32>,
+}
+
+impl MatF32 {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    /// Re-shape to `rows × cols` WITHOUT zeroing (the f32 sibling of
+    /// [`Mat::set_shape`]): surviving entries are unspecified, so only
+    /// for callers that overwrite every entry before reading.
+    pub fn set_shape(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
+    /// Number of rows.
+    #[inline]
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Flat row-major data.
+    #[inline]
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    /// Mutable flat row-major data.
+    #[inline]
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Capacity of the backing allocation in `f32`s (workspace
+    /// allocation-stability tests).
+    #[inline]
+    pub fn capacity(&self) -> usize {
+        self.data.capacity()
+    }
+
+    /// Row `i` as a slice.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Row `i` as a mutable slice.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Become a copy of `other`, reusing this matrix's allocation.
+    pub fn copy_from(&mut self, other: &MatF32) {
+        self.rows = other.rows;
+        self.cols = other.cols;
+        self.data.clear();
+        self.data.extend_from_slice(&other.data);
+    }
+
+    /// Overwrite columns `[j0, j1)` of `self` with the same columns of
+    /// `src` (shapes must match) — the f32 retire-gather of the
+    /// shrinking-window filter.
+    pub fn copy_cols_from(&mut self, src: &MatF32, j0: usize, j1: usize) {
+        assert_eq!((self.rows, self.cols), (src.rows, src.cols));
+        assert!(j0 <= j1 && j1 <= self.cols);
+        for i in 0..self.rows {
+            let s = &src.row(i)[j0..j1];
+            self.row_mut(i)[j0..j1].copy_from_slice(s);
+        }
+    }
+
+    /// Downcast copy of an f64 block.
+    pub fn from_f64(src: &Mat) -> MatF32 {
+        let mut out = MatF32::zeros(0, 0);
+        out.downcast_from(src);
+        out
+    }
+
+    /// Become the rounded-to-nearest f32 copy of `src`, reusing this
+    /// matrix's allocation.
+    pub fn downcast_from(&mut self, src: &Mat) {
+        self.set_shape(src.rows(), src.cols());
+        for (d, s) in self.data.iter_mut().zip(src.data()) {
+            *d = *s as f32;
+        }
+    }
+
+    /// Become the downcast column gather `src[:, perm]` (the f32 leg of
+    /// the mixed-precision filter permutes and rounds in one pass).
+    pub fn downcast_gather(&mut self, src: &Mat, perm: &[usize]) {
+        debug_assert!(perm.iter().all(|&j| j < src.cols()));
+        self.set_shape(src.rows(), perm.len());
+        for i in 0..src.rows() {
+            let srow = src.row(i);
+            let drow = self.row_mut(i);
+            for (t, &j) in perm.iter().enumerate() {
+                drow[t] = srow[j] as f32;
+            }
+        }
+    }
+
+    /// Upcast copy to a new f64 block.
+    pub fn to_f64(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        self.store_cols_into(&mut out, 0);
+        out
+    }
+
+    /// Upcast-store this whole block into columns
+    /// `[dst0, dst0 + self.cols())` of `dst` (`dst` keeps its shape; the
+    /// reassembly step after a mixed-precision filter sweep).
+    pub fn store_cols_into(&self, dst: &mut Mat, dst0: usize) {
+        assert_eq!(self.rows, dst.rows());
+        assert!(dst0 + self.cols <= dst.cols());
+        for i in 0..self.rows {
+            let srow = self.row(i);
+            let drow = &mut dst.row_mut(i)[dst0..dst0 + self.cols];
+            for (d, s) in drow.iter_mut().zip(srow) {
+                *d = *s as f64;
+            }
+        }
+    }
+
+    /// Maximum absolute entry difference to another f32 block.
+    pub fn max_abs_diff(&self, other: &MatF32) -> f64 {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .fold(0.0, f64::max)
+    }
+}
+
 /// General dense matmul: `c ← alpha · a · b + beta · c`.
 ///
 /// Row-major i-k-j loop order (unit-stride inner loop) — this is the
@@ -669,5 +828,48 @@ mod tests {
         let mut r1 = Xoshiro256pp::seed_from_u64(9);
         let mut r2 = Xoshiro256pp::seed_from_u64(9);
         assert_eq!(Mat::randn(4, 4, &mut r1), Mat::randn(4, 4, &mut r2));
+    }
+
+    #[test]
+    fn f32_downcast_upcast_roundtrip() {
+        let mut rng = Xoshiro256pp::seed_from_u64(41);
+        let a = Mat::randn(7, 4, &mut rng);
+        let a32 = MatF32::from_f64(&a);
+        assert_eq!((a32.rows(), a32.cols()), (7, 4));
+        let back = a32.to_f64();
+        // Round-trip error is bounded by one f32 rounding of each entry.
+        for (x, y) in a.data().iter().zip(back.data()) {
+            assert!((x - y).abs() <= x.abs() * f32::EPSILON as f64);
+            // Upcasting an f32 is exact, so a second trip is lossless.
+            assert_eq!(*y, (*y as f32) as f64);
+        }
+    }
+
+    #[test]
+    fn f32_downcast_gather_applies_permutation() {
+        let mut rng = Xoshiro256pp::seed_from_u64(42);
+        let src = Mat::randn(6, 4, &mut rng);
+        let mut out = MatF32::zeros(0, 0);
+        out.downcast_gather(&src, &[3, 0, 2]);
+        assert_eq!((out.rows(), out.cols()), (6, 3));
+        for i in 0..6 {
+            assert_eq!(out.row(i)[0], src.row(i)[3] as f32);
+            assert_eq!(out.row(i)[1], src.row(i)[0] as f32);
+            assert_eq!(out.row(i)[2], src.row(i)[2] as f32);
+        }
+    }
+
+    #[test]
+    fn f32_store_cols_writes_window_only() {
+        let mut rng = Xoshiro256pp::seed_from_u64(43);
+        let block = MatF32::from_f64(&Mat::randn(5, 2, &mut rng));
+        let mut dst = Mat::from_fn(5, 4, |i, j| (i * 4 + j) as f64);
+        block.store_cols_into(&mut dst, 1);
+        for i in 0..5 {
+            assert_eq!(dst[(i, 0)], (i * 4) as f64, "col 0 untouched");
+            assert_eq!(dst[(i, 3)], (i * 4 + 3) as f64, "col 3 untouched");
+            assert_eq!(dst[(i, 1)], block.row(i)[0] as f64);
+            assert_eq!(dst[(i, 2)], block.row(i)[1] as f64);
+        }
     }
 }

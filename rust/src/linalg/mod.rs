@@ -1,8 +1,11 @@
 //! Dense linear algebra built from scratch: matrices, BLAS-like kernels,
 //! Householder QR, and a symmetric eigensolver.
 //!
-//! All numerics are `f64`. Matrices are row-major. Subspace blocks (the
-//! `n × k` iterate of every solver, `k ≪ n`) are also `Mat`s.
+//! All solver numerics are `f64`. Matrices are row-major. Subspace
+//! blocks (the `n × k` iterate of every solver, `k ≪ n`) are also
+//! `Mat`s. The one exception is [`dense::MatF32`], the iterate storage
+//! of the mixed-precision Chebyshev sweeps — every Rayleigh–Ritz,
+//! residual, and locking stage still runs in f64.
 //!
 //! ## Flop accounting
 //!
@@ -18,7 +21,7 @@ pub mod dense;
 pub mod qr;
 pub mod symeig;
 
-pub use dense::Mat;
+pub use dense::{Mat, MatF32};
 
 /// Thread-local floating-point-operation counter.
 pub mod flops {

@@ -9,6 +9,7 @@
 //!               [--sort-scope global|shard] [--handoff off|inf|DIST]
 //!               [--warm true|false] [--degree 20]
 //!               [--filter-schedule fixed|adaptive]
+//!               [--precision f64|mixed] [--filter-backend csr|sell]
 //!               [--backend native|xla] [--artifacts DIR] --out DIR
 //! scsf families                  # list registered operator families
 //! scsf repro <table1|table2|table3|table4|table5|fig3|table11|table12|
@@ -156,6 +157,18 @@ fn print_help() {
          \x20           matvecs at the same tolerance (see manifest\n\
          \x20           total_matvecs / filter_matvecs / degree_hist)\n\
          \n\
+         filter precision (--precision f64|mixed):\n\
+         \x20 f64       every kernel in double precision\n\
+         \x20           (default; bit-for-bit the historical output)\n\
+         \x20 mixed     loose columns filtered in f32, promoted back to\n\
+         \x20           f64 near the f32 floor; Rayleigh–Ritz, residuals\n\
+         \x20           and locking always stay f64, so acceptance is\n\
+         \x20           unchanged (see manifest f32_matvecs / promotions)\n\
+         \n\
+         filter layout (--filter-backend csr|sell):\n\
+         \x20 csr       row-partitioned CSR (default)\n\
+         \x20 sell      SELL-C-\u{3c3} sliced layout, faster on uneven rows\n\
+         \n\
          see `rust/src/main.rs` docs for all flags"
     );
 }
@@ -249,6 +262,14 @@ fn cmd_generate(args: &Args) -> Result<()> {
         cfg.filter_schedule = scsf::eig::chebyshev::FilterSchedule::parse(s)
             .ok_or_else(|| anyhow!("unknown filter schedule {s} (fixed|adaptive)"))?;
     }
+    if let Some(s) = args.get("precision") {
+        cfg.precision = scsf::eig::chebyshev::Precision::parse(s)
+            .ok_or_else(|| anyhow!("unknown precision {s} (f64|mixed)"))?;
+    }
+    if let Some(s) = args.get("filter-backend") {
+        cfg.filter_backend = scsf::eig::chebyshev::FilterBackendKind::parse(s)
+            .ok_or_else(|| anyhow!("unknown filter backend {s} (csr|sell)"))?;
+    }
     if let Some(p0) = args.get_usize("p0")? {
         cfg.sort = SortMethod::TruncatedFft { p0 };
     }
@@ -321,6 +342,12 @@ fn cmd_generate(args: &Args) -> Result<()> {
             f.tol,
             f.sort_quality,
         );
+        if f.f32_matvecs > 0 {
+            println!(
+                "    mixed precision: {} filter matvecs in f32, {} column promotions",
+                f.f32_matvecs, f.promotions
+            );
+        }
     }
     println!("dataset written to {out}");
     Ok(())

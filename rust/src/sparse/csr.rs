@@ -1,6 +1,6 @@
 //! Compressed-sparse-row matrix, COO assembly, SpMV / SpMM kernels.
 
-use crate::linalg::dense::Mat;
+use crate::linalg::dense::{Mat, MatF32};
 use crate::linalg::flops;
 
 /// Coordinate-format assembly buffer. Duplicate `(i, j)` entries are
@@ -568,6 +568,260 @@ impl CsrMatrix {
     }
 }
 
+/// CSR sparse matrix with `f32` values — the operator storage of the
+/// mixed-precision Chebyshev sweeps.
+///
+/// Built once per solve by downcasting a [`CsrMatrix`] (the structure —
+/// `indptr`/`indices` — is copied verbatim, only the values round). The
+/// kernels mirror the f64 ones exactly: same nnz-balanced row
+/// partitions, same per-row serial accumulation order, hence bit-for-bit
+/// deterministic for any thread count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CsrMatrixF32 {
+    rows: usize,
+    cols: usize,
+    indptr: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl CsrMatrixF32 {
+    /// Downcast copy of an f64 CSR matrix (round-to-nearest values,
+    /// identical sparsity structure).
+    pub fn from_f64(a: &CsrMatrix) -> Self {
+        Self {
+            rows: a.rows,
+            cols: a.cols,
+            indptr: a.indptr.clone(),
+            indices: a.indices.clone(),
+            values: a.values.iter().map(|&v| v as f32).collect(),
+        }
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// Number of stored non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Row `i` as (column-indices, values) slices.
+    #[inline]
+    pub fn row(&self, i: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.indptr[i], self.indptr[i + 1]);
+        (&self.indices[a..b], &self.values[a..b])
+    }
+
+    /// Boundary `t` of the nnz partition — the same formula as the f64
+    /// matrix's `nnz_split_at`, so both precisions share one
+    /// partitioning scheme.
+    #[inline]
+    fn nnz_split_at(&self, t: usize, nt: usize, prev: usize) -> usize {
+        if t >= nt {
+            return self.rows;
+        }
+        let target = self.nnz() * t / nt;
+        self.indptr
+            .partition_point(|&x| x < target)
+            .min(self.rows)
+            .max(prev)
+    }
+
+    /// Non-allocating f32 SpMM `Y = A X` with optional nnz-partitioned
+    /// threading — the f32 sibling of [`CsrMatrix::spmm_into`].
+    pub fn spmm_into(&self, x: &MatF32, y: &mut MatF32, threads: usize) {
+        let k = x.cols();
+        y.set_shape(self.rows, k);
+        if self.rows == 0 || k == 0 {
+            return;
+        }
+        self.spmm_cols_into(x, y, 0, k, threads);
+    }
+
+    /// Column-windowed f32 SpMM: `Y[:, j0..j1] = (A X)[:, j0..j1]`,
+    /// columns outside the window untouched — the f32 sibling of
+    /// [`CsrMatrix::spmm_cols_into`], deterministic for any thread
+    /// count.
+    pub fn spmm_cols_into(&self, x: &MatF32, y: &mut MatF32, j0: usize, j1: usize, threads: usize) {
+        let k = x.cols();
+        assert_eq!(x.rows(), self.cols, "spmm shape: A.cols == X.rows");
+        assert_eq!((y.rows(), y.cols()), (self.rows, k), "spmm_cols_into output shape");
+        assert!(j0 <= j1 && j1 <= k, "column window out of range");
+        if j0 == j1 || self.rows == 0 {
+            return;
+        }
+        flops::add(2 * (self.nnz() * (j1 - j0)) as u64);
+        let nt = threads.max(1).min(self.rows.max(1));
+        let yd = y.data_mut();
+        if nt <= 1 {
+            self.spmm_cols_rows(x, yd, 0, j0, j1, k);
+            return;
+        }
+        std::thread::scope(|scope| {
+            let mut rest = yd;
+            let mut row0 = 0usize;
+            for t in 1..=nt {
+                let row1 = self.nnz_split_at(t, nt, row0);
+                let (ychunk, tail) = rest.split_at_mut((row1 - row0) * k);
+                rest = tail;
+                let r0 = row0;
+                row0 = row1;
+                if row1 == r0 {
+                    continue;
+                }
+                scope.spawn(move || self.spmm_cols_rows(x, ychunk, r0, j0, j1, k));
+            }
+        });
+    }
+
+    /// One row-chunk of the windowed f32 SpMM (shared by the serial and
+    /// threaded paths so their arithmetic cannot drift).
+    fn spmm_cols_rows(
+        &self,
+        x: &MatF32,
+        ychunk: &mut [f32],
+        row0: usize,
+        j0: usize,
+        j1: usize,
+        k: usize,
+    ) {
+        let w = j1 - j0;
+        for (r, yrow) in ychunk.chunks_mut(k).enumerate() {
+            let (cols, vals) = self.row(row0 + r);
+            let ywin = &mut yrow[j0..j1];
+            ywin.fill(0.0);
+            for (c, v) in cols.iter().zip(vals) {
+                let xrow = &x.row(*c as usize)[j0..j1];
+                let a = *v;
+                for t in 0..w {
+                    ywin[t] += a * xrow[t];
+                }
+            }
+        }
+    }
+
+    /// Threaded f32 fused filter step `Y = a·(A X) + b·X + c·Z` — the
+    /// f32 sibling of [`CsrMatrix::spmm_fused_into`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn spmm_fused_into(
+        &self,
+        a: f32,
+        x: &MatF32,
+        b: f32,
+        c: f32,
+        z: &MatF32,
+        y: &mut MatF32,
+        threads: usize,
+    ) {
+        let k = x.cols();
+        y.set_shape(self.rows, k);
+        if self.rows == 0 || k == 0 {
+            return;
+        }
+        self.spmm_fused_cols_into(a, x, b, c, z, y, 0, k, threads);
+    }
+
+    /// Column-windowed f32 fused filter step — the f32 sibling of
+    /// [`CsrMatrix::spmm_fused_cols_into`]: columns outside the window
+    /// are untouched, results are bit-for-bit deterministic for any
+    /// thread count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spmm_fused_cols_into(
+        &self,
+        a: f32,
+        x: &MatF32,
+        b: f32,
+        c: f32,
+        z: &MatF32,
+        y: &mut MatF32,
+        j0: usize,
+        j1: usize,
+        threads: usize,
+    ) {
+        let k = x.cols();
+        assert_eq!(x.rows(), self.cols);
+        assert_eq!(z.rows(), self.rows);
+        assert!(z.cols() == k);
+        assert_eq!(
+            (y.rows(), y.cols()),
+            (self.rows, k),
+            "spmm_fused_cols_into output shape"
+        );
+        assert!(j0 <= j1 && j1 <= k, "column window out of range");
+        if j0 == j1 || self.rows == 0 {
+            return;
+        }
+        flops::add((2 * self.nnz() * (j1 - j0) + 4 * self.rows * (j1 - j0)) as u64);
+        let nt = threads.max(1).min(self.rows.max(1));
+        let xd = x.data();
+        let yd = y.data_mut();
+        if nt <= 1 {
+            self.spmm_fused_cols_rows(a, xd, b, c, z, yd, 0, j0, j1, k);
+            return;
+        }
+        std::thread::scope(|scope| {
+            let mut rest = yd;
+            let mut row0 = 0usize;
+            for t in 1..=nt {
+                let row1 = self.nnz_split_at(t, nt, row0);
+                let (ychunk, tail) = rest.split_at_mut((row1 - row0) * k);
+                rest = tail;
+                let r0 = row0;
+                row0 = row1;
+                if row1 == r0 {
+                    continue;
+                }
+                scope.spawn(move || {
+                    self.spmm_fused_cols_rows(a, xd, b, c, z, ychunk, r0, j0, j1, k)
+                });
+            }
+        });
+    }
+
+    /// One row-chunk of the windowed f32 fused step.
+    #[allow(clippy::too_many_arguments)]
+    fn spmm_fused_cols_rows(
+        &self,
+        a: f32,
+        xd: &[f32],
+        b: f32,
+        c: f32,
+        z: &MatF32,
+        ychunk: &mut [f32],
+        row0: usize,
+        j0: usize,
+        j1: usize,
+        k: usize,
+    ) {
+        let w = j1 - j0;
+        for (r, yrow) in ychunk.chunks_mut(k).enumerate() {
+            let i = row0 + r;
+            let (cols, vals) = self.row(i);
+            let ywin = &mut yrow[j0..j1];
+            let xrow = &xd[i * k + j0..i * k + j1];
+            let zrow = &z.row(i)[j0..j1];
+            for t in 0..w {
+                ywin[t] = b * xrow[t] + c * zrow[t];
+            }
+            for (cc, v) in cols.iter().zip(vals) {
+                let xr = &xd[*cc as usize * k + j0..*cc as usize * k + j1];
+                let s = a * *v;
+                for t in 0..w {
+                    ywin[t] += s * xr[t];
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -820,6 +1074,60 @@ mod tests {
                     }
                 }
             }
+        }
+    }
+
+    #[test]
+    fn f32_spmm_matches_downcast_reference() {
+        let a = random_square(23, 110, 13);
+        let a32 = CsrMatrixF32::from_f64(&a);
+        assert_eq!(a32.nnz(), a.nnz());
+        let mut rng = Xoshiro256pp::seed_from_u64(14);
+        let x = MatF32::from_f64(&Mat::randn(23, 5, &mut rng));
+        // Reference: the same arithmetic done entry by entry in f32.
+        let mut want = MatF32::zeros(23, 5);
+        for i in 0..23 {
+            let (cols, vals) = a32.row(i);
+            for t in 0..5 {
+                let mut acc = 0.0f32;
+                for (c, v) in cols.iter().zip(vals) {
+                    acc += v * x.row(*c as usize)[t];
+                }
+                want.row_mut(i)[t] = acc;
+            }
+        }
+        for threads in [1usize, 2, 7] {
+            let mut y = MatF32::zeros(0, 0);
+            a32.spmm_into(&x, &mut y, threads);
+            // Same accumulation order as the reference loop above.
+            assert_eq!(y, want, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn f32_fused_threaded_is_bit_for_bit_serial() {
+        let a32 = CsrMatrixF32::from_f64(&random_square(31, 140, 15));
+        let mut rng = Xoshiro256pp::seed_from_u64(16);
+        let x = MatF32::from_f64(&Mat::randn(31, 6, &mut rng));
+        let z = MatF32::from_f64(&Mat::randn(31, 6, &mut rng));
+        let mut serial = MatF32::zeros(0, 0);
+        a32.spmm_fused_into(1.25, &x, -0.5, 0.75, &z, &mut serial, 1);
+        for threads in [2usize, 3, 7] {
+            let mut y = MatF32::zeros(0, 0);
+            a32.spmm_fused_into(1.25, &x, -0.5, 0.75, &z, &mut y, threads);
+            assert_eq!(y, serial, "threads = {threads}");
+        }
+        // Windowed call touches only the window.
+        let mut y = MatF32::zeros(31, 6);
+        for r in 0..31 {
+            y.row_mut(r).fill(7.0);
+        }
+        a32.spmm_fused_cols_into(1.25, &x, -0.5, 0.75, &z, &mut y, 2, 4, 3);
+        for r in 0..31 {
+            assert_eq!(y.row(r)[0], 7.0);
+            assert_eq!(y.row(r)[5], 7.0);
+            assert_eq!(y.row(r)[2], serial.row(r)[2]);
+            assert_eq!(y.row(r)[3], serial.row(r)[3]);
         }
     }
 

@@ -7,5 +7,7 @@
 //! hottest kernel in the library (see EXPERIMENTS.md §Perf).
 
 pub mod csr;
+pub mod sell;
 
-pub use csr::{CooBuilder, CsrMatrix};
+pub use csr::{CooBuilder, CsrMatrix, CsrMatrixF32};
+pub use sell::{SellMatrix, SellMatrixF32, SELL_CHUNK};

@@ -1,0 +1,847 @@
+//! SELL-C-σ sliced-CSR storage and its SpMM kernels.
+//!
+//! CSR's per-row pointer chasing gives the autovectorizer irregular trip
+//! counts: FEM/elliptic assemblies mix 5- and 13-entry rows, so the
+//! inner AXPY loop length changes row to row. SELL-C-σ (Kreutzer et al.,
+//! SIAM J. Sci. Comput. 2014) packs `C` consecutive rows into a *slice*
+//! padded to the slice's maximum row length and stored column-major
+//! within the slice, so the kernel walks `width × C` rectangles with
+//! explicit-width lane loops the compiler can keep in registers.
+//!
+//! Choices here (DESIGN.md §Precision & sparse-layout backends):
+//!
+//! - `C = 8` ([`SELL_CHUNK`]): one AVX-512 f64 vector / two NEON or SSE
+//!   vectors per lane column, and small enough that stencil matrices
+//!   waste little padding.
+//! - σ = the natural row order. The classic scheme sorts rows by length
+//!   within windows of σ rows to cut padding; the paper's operators are
+//!   grid stencils whose row lengths are already nearly uniform inside
+//!   any contiguous index run (the same locality the similarity sort
+//!   exploits at the problem level), so reordering would buy ~nothing
+//!   and cost the output-permutation bookkeeping.
+//! - Padding entries store value `0.0` at column 0: they contribute
+//!   exactly `+0.0` to every accumulation, so results equal the CSR
+//!   kernels' and are bit-for-bit identical across thread counts (each
+//!   row keeps its serial accumulation order).
+//! - `u32` column indices, like CSR — half the index traffic of `usize`.
+
+use crate::linalg::dense::{Mat, MatF32};
+use crate::linalg::flops;
+use crate::sparse::csr::CsrMatrix;
+
+/// Slice height `C` of the SELL-C-σ layout.
+pub const SELL_CHUNK: usize = 8;
+
+/// SELL-C-σ sparse matrix with `f64` values.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SellMatrix {
+    rows: usize,
+    cols: usize,
+    nnz: usize,
+    /// Per-slice start offsets into `values`/`indices` (padded entries;
+    /// slice `s` occupies `slice_ptr[s]..slice_ptr[s+1]`, a
+    /// `width × SELL_CHUNK` rectangle stored column-major).
+    slice_ptr: Vec<usize>,
+    /// True non-zero count of each row (padding is excluded from
+    /// [`SellMatrix::to_dense`] so explicit stored zeros round-trip).
+    row_nnz: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f64>,
+}
+
+/// Shared packing: returns `(slice_ptr, row_nnz, indices, values)` with
+/// values produced by `cast` (identity for f64, rounding for f32).
+#[allow(clippy::type_complexity)]
+fn pack_from_csr<T: Copy + Default>(
+    a: &CsrMatrix,
+    cast: impl Fn(f64) -> T,
+) -> (Vec<usize>, Vec<usize>, Vec<u32>, Vec<T>) {
+    let rows = a.rows();
+    let n_slices = rows.div_ceil(SELL_CHUNK);
+    let mut slice_ptr = Vec::with_capacity(n_slices + 1);
+    slice_ptr.push(0usize);
+    let mut row_nnz = Vec::with_capacity(rows);
+    for i in 0..rows {
+        row_nnz.push(a.row(i).0.len());
+    }
+    let mut indices: Vec<u32> = Vec::new();
+    let mut values: Vec<T> = Vec::new();
+    for s in 0..n_slices {
+        let r0 = s * SELL_CHUNK;
+        let h = SELL_CHUNK.min(rows - r0);
+        let width = (0..h).map(|l| row_nnz[r0 + l]).max().unwrap_or(0);
+        let off = values.len();
+        indices.resize(off + width * SELL_CHUNK, 0);
+        values.resize(off + width * SELL_CHUNK, T::default());
+        for lane in 0..h {
+            let (cols, vals) = a.row(r0 + lane);
+            for (j, (c, v)) in cols.iter().zip(vals).enumerate() {
+                indices[off + j * SELL_CHUNK + lane] = *c;
+                values[off + j * SELL_CHUNK + lane] = cast(*v);
+            }
+        }
+        slice_ptr.push(values.len());
+    }
+    (slice_ptr, row_nnz, indices, values)
+}
+
+/// Slice-granular analogue of the CSR nnz partition: boundary `t` of an
+/// `nt`-way split of `[0, n_slices)` balancing *padded* entries (the
+/// actual work), monotone past `prev`.
+fn slice_split_at(slice_ptr: &[usize], t: usize, nt: usize, prev: usize) -> usize {
+    let n_slices = slice_ptr.len() - 1;
+    if t >= nt {
+        return n_slices;
+    }
+    let target = slice_ptr[n_slices] * t / nt;
+    slice_ptr
+        .partition_point(|&x| x < target)
+        .min(n_slices)
+        .max(prev)
+}
+
+impl SellMatrix {
+    /// Pack a CSR matrix into SELL-C-σ form (values copied verbatim).
+    pub fn from_csr(a: &CsrMatrix) -> Self {
+        let (slice_ptr, row_nnz, indices, values) = pack_from_csr(a, |v| v);
+        Self {
+            rows: a.rows(),
+            cols: a.cols(),
+            nnz: a.nnz(),
+            slice_ptr,
+            row_nnz,
+            indices,
+            values,
+        }
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// True (unpadded) non-zero count.
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Stored entries including slice padding.
+    pub fn padded_len(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Dense copy — padding is skipped, so this equals the source CSR
+    /// matrix's [`CsrMatrix::to_dense`] exactly.
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for s in 0..self.slice_ptr.len() - 1 {
+            let off = self.slice_ptr[s];
+            let r0 = s * SELL_CHUNK;
+            let h = SELL_CHUNK.min(self.rows - r0);
+            for lane in 0..h {
+                for j in 0..self.row_nnz[r0 + lane] {
+                    let e = off + j * SELL_CHUNK + lane;
+                    m[(r0 + lane, self.indices[e] as usize)] = self.values[e];
+                }
+            }
+        }
+        m
+    }
+
+    /// Sparse matrix–vector product `y = A x` with optional
+    /// slice-partitioned threading; lane-parallel accumulators,
+    /// bit-for-bit deterministic for any thread count.
+    pub fn spmv_into(&self, x: &[f64], y: &mut [f64], threads: usize) {
+        assert_eq!(x.len(), self.cols);
+        assert_eq!(y.len(), self.rows);
+        if self.rows == 0 {
+            return;
+        }
+        flops::add(2 * self.nnz as u64);
+        let n_slices = self.slice_ptr.len() - 1;
+        let nt = threads.max(1).min(n_slices);
+        if nt <= 1 {
+            self.spmv_slices(x, y, 0, n_slices);
+            return;
+        }
+        std::thread::scope(|scope| {
+            let mut rest = &mut y[..];
+            let mut s0 = 0usize;
+            for t in 1..=nt {
+                let s1 = slice_split_at(&self.slice_ptr, t, nt, s0);
+                let rows0 = (s0 * SELL_CHUNK).min(self.rows);
+                let rows1 = (s1 * SELL_CHUNK).min(self.rows);
+                let (ychunk, tail) = rest.split_at_mut(rows1 - rows0);
+                rest = tail;
+                let a0 = s0;
+                s0 = s1;
+                if s1 == a0 {
+                    continue;
+                }
+                scope.spawn(move || self.spmv_slices(x, ychunk, a0, s1));
+            }
+        });
+    }
+
+    /// One slice-range of the SpMV: `C`-wide accumulator array, lane
+    /// loop of explicit width [`SELL_CHUNK`].
+    fn spmv_slices(&self, x: &[f64], ychunk: &mut [f64], s0: usize, s1: usize) {
+        for s in s0..s1 {
+            let off = self.slice_ptr[s];
+            let width = (self.slice_ptr[s + 1] - off) / SELL_CHUNK;
+            let r0 = s * SELL_CHUNK;
+            let h = SELL_CHUNK.min(self.rows - r0);
+            let mut acc = [0.0f64; SELL_CHUNK];
+            for j in 0..width {
+                let e0 = off + j * SELL_CHUNK;
+                for lane in 0..SELL_CHUNK {
+                    // Padding lanes multiply by 0.0: exact no-ops.
+                    acc[lane] += self.values[e0 + lane] * x[self.indices[e0 + lane] as usize];
+                }
+            }
+            let base = r0 - s0 * SELL_CHUNK;
+            ychunk[base..base + h].copy_from_slice(&acc[..h]);
+        }
+    }
+
+    /// Non-allocating SpMM `Y = A X` — the SELL sibling of
+    /// [`CsrMatrix::spmm_into`], deterministic for any thread count.
+    pub fn spmm_into(&self, x: &Mat, y: &mut Mat, threads: usize) {
+        let k = x.cols();
+        y.set_shape(self.rows, k);
+        if self.rows == 0 || k == 0 {
+            return;
+        }
+        self.spmm_cols_into(x, y, 0, k, threads);
+    }
+
+    /// Column-windowed SpMM: `Y[:, j0..j1] = (A X)[:, j0..j1]`, columns
+    /// outside the window untouched — the SELL sibling of
+    /// [`CsrMatrix::spmm_cols_into`].
+    pub fn spmm_cols_into(&self, x: &Mat, y: &mut Mat, j0: usize, j1: usize, threads: usize) {
+        let k = x.cols();
+        assert_eq!(x.rows(), self.cols, "spmm shape: A.cols == X.rows");
+        assert_eq!((y.rows(), y.cols()), (self.rows, k), "spmm_cols_into output shape");
+        assert!(j0 <= j1 && j1 <= k, "column window out of range");
+        if j0 == j1 || self.rows == 0 {
+            return;
+        }
+        flops::add(2 * (self.nnz * (j1 - j0)) as u64);
+        let n_slices = self.slice_ptr.len() - 1;
+        let nt = threads.max(1).min(n_slices);
+        let yd = y.data_mut();
+        if nt <= 1 {
+            self.spmm_slices(x, yd, 0, n_slices, j0, j1, k);
+            return;
+        }
+        std::thread::scope(|scope| {
+            let mut rest = yd;
+            let mut s0 = 0usize;
+            for t in 1..=nt {
+                let s1 = slice_split_at(&self.slice_ptr, t, nt, s0);
+                let rows0 = (s0 * SELL_CHUNK).min(self.rows);
+                let rows1 = (s1 * SELL_CHUNK).min(self.rows);
+                let (ychunk, tail) = rest.split_at_mut((rows1 - rows0) * k);
+                rest = tail;
+                let a0 = s0;
+                s0 = s1;
+                if s1 == a0 {
+                    continue;
+                }
+                scope.spawn(move || self.spmm_slices(x, ychunk, a0, s1, j0, j1, k));
+            }
+        });
+    }
+
+    /// One slice-range of the windowed SpMM (shared serial/threaded).
+    #[allow(clippy::too_many_arguments)]
+    fn spmm_slices(
+        &self,
+        x: &Mat,
+        ychunk: &mut [f64],
+        s0: usize,
+        s1: usize,
+        j0: usize,
+        j1: usize,
+        k: usize,
+    ) {
+        let w = j1 - j0;
+        let xd = x.data();
+        for s in s0..s1 {
+            let off = self.slice_ptr[s];
+            let width = (self.slice_ptr[s + 1] - off) / SELL_CHUNK;
+            let r0 = s * SELL_CHUNK;
+            let h = SELL_CHUNK.min(self.rows - r0);
+            let base = (r0 - s0 * SELL_CHUNK) * k;
+            for lane in 0..h {
+                ychunk[base + lane * k + j0..base + lane * k + j1].fill(0.0);
+            }
+            for j in 0..width {
+                let e0 = off + j * SELL_CHUNK;
+                for lane in 0..h {
+                    let v = self.values[e0 + lane];
+                    let col = self.indices[e0 + lane] as usize;
+                    let xr = &xd[col * k + j0..col * k + j1];
+                    let yr = &mut ychunk[base + lane * k + j0..base + lane * k + j1];
+                    for t in 0..w {
+                        yr[t] += v * xr[t];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Threaded fused filter step `Y = a·(A X) + b·X + c·Z` — the SELL
+    /// sibling of [`CsrMatrix::spmm_fused_into`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn spmm_fused_into(
+        &self,
+        a: f64,
+        x: &Mat,
+        b: f64,
+        c: f64,
+        z: &Mat,
+        y: &mut Mat,
+        threads: usize,
+    ) {
+        let k = x.cols();
+        y.set_shape(self.rows, k);
+        if self.rows == 0 || k == 0 {
+            return;
+        }
+        self.spmm_fused_cols_into(a, x, b, c, z, y, 0, k, threads);
+    }
+
+    /// Column-windowed fused filter step — the SELL sibling of
+    /// [`CsrMatrix::spmm_fused_cols_into`]: columns outside the window
+    /// untouched, bit-for-bit deterministic for any thread count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spmm_fused_cols_into(
+        &self,
+        a: f64,
+        x: &Mat,
+        b: f64,
+        c: f64,
+        z: &Mat,
+        y: &mut Mat,
+        j0: usize,
+        j1: usize,
+        threads: usize,
+    ) {
+        let k = x.cols();
+        assert_eq!(x.rows(), self.cols);
+        assert_eq!(z.rows(), self.rows);
+        assert!(z.cols() == k);
+        assert_eq!(
+            (y.rows(), y.cols()),
+            (self.rows, k),
+            "spmm_fused_cols_into output shape"
+        );
+        assert!(j0 <= j1 && j1 <= k, "column window out of range");
+        if j0 == j1 || self.rows == 0 {
+            return;
+        }
+        flops::add((2 * self.nnz * (j1 - j0) + 4 * self.rows * (j1 - j0)) as u64);
+        let n_slices = self.slice_ptr.len() - 1;
+        let nt = threads.max(1).min(n_slices);
+        let xd = x.data();
+        let yd = y.data_mut();
+        if nt <= 1 {
+            self.fused_slices(a, xd, b, c, z, yd, 0, n_slices, j0, j1, k);
+            return;
+        }
+        std::thread::scope(|scope| {
+            let mut rest = yd;
+            let mut s0 = 0usize;
+            for t in 1..=nt {
+                let s1 = slice_split_at(&self.slice_ptr, t, nt, s0);
+                let rows0 = (s0 * SELL_CHUNK).min(self.rows);
+                let rows1 = (s1 * SELL_CHUNK).min(self.rows);
+                let (ychunk, tail) = rest.split_at_mut((rows1 - rows0) * k);
+                rest = tail;
+                let a0 = s0;
+                s0 = s1;
+                if s1 == a0 {
+                    continue;
+                }
+                scope.spawn(move || {
+                    self.fused_slices(a, xd, b, c, z, ychunk, a0, s1, j0, j1, k)
+                });
+            }
+        });
+    }
+
+    /// One slice-range of the windowed fused step.
+    #[allow(clippy::too_many_arguments)]
+    fn fused_slices(
+        &self,
+        a: f64,
+        xd: &[f64],
+        b: f64,
+        c: f64,
+        z: &Mat,
+        ychunk: &mut [f64],
+        s0: usize,
+        s1: usize,
+        j0: usize,
+        j1: usize,
+        k: usize,
+    ) {
+        let w = j1 - j0;
+        for s in s0..s1 {
+            let off = self.slice_ptr[s];
+            let width = (self.slice_ptr[s + 1] - off) / SELL_CHUNK;
+            let r0 = s * SELL_CHUNK;
+            let h = SELL_CHUNK.min(self.rows - r0);
+            let base = (r0 - s0 * SELL_CHUNK) * k;
+            for lane in 0..h {
+                let i = r0 + lane;
+                let xr = &xd[i * k + j0..i * k + j1];
+                let zr = &z.row(i)[j0..j1];
+                let yr = &mut ychunk[base + lane * k + j0..base + lane * k + j1];
+                for t in 0..w {
+                    yr[t] = b * xr[t] + c * zr[t];
+                }
+            }
+            for j in 0..width {
+                let e0 = off + j * SELL_CHUNK;
+                for lane in 0..h {
+                    let s_av = a * self.values[e0 + lane];
+                    let col = self.indices[e0 + lane] as usize;
+                    let xr = &xd[col * k + j0..col * k + j1];
+                    let yr = &mut ychunk[base + lane * k + j0..base + lane * k + j1];
+                    for t in 0..w {
+                        yr[t] += s_av * xr[t];
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// SELL-C-σ sparse matrix with `f32` values — the layout of
+/// [`SellMatrix`] at half the value traffic, for the mixed-precision
+/// filter sweeps.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SellMatrixF32 {
+    rows: usize,
+    cols: usize,
+    nnz: usize,
+    slice_ptr: Vec<usize>,
+    row_nnz: Vec<usize>,
+    indices: Vec<u32>,
+    values: Vec<f32>,
+}
+
+impl SellMatrixF32 {
+    /// Pack a CSR matrix into f32 SELL-C-σ form (round-to-nearest
+    /// values, identical slice structure to [`SellMatrix::from_csr`]).
+    pub fn from_csr(a: &CsrMatrix) -> Self {
+        let (slice_ptr, row_nnz, indices, values) = pack_from_csr(a, |v| v as f32);
+        Self {
+            rows: a.rows(),
+            cols: a.cols(),
+            nnz: a.nnz(),
+            slice_ptr,
+            row_nnz,
+            indices,
+            values,
+        }
+    }
+
+    /// Number of rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Number of columns.
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// True (unpadded) non-zero count.
+    pub fn nnz(&self) -> usize {
+        self.nnz
+    }
+
+    /// Dense (f64-upcast) copy, padding skipped — test helper.
+    pub fn to_dense(&self) -> Mat {
+        let mut m = Mat::zeros(self.rows, self.cols);
+        for s in 0..self.slice_ptr.len() - 1 {
+            let off = self.slice_ptr[s];
+            let r0 = s * SELL_CHUNK;
+            let h = SELL_CHUNK.min(self.rows - r0);
+            for lane in 0..h {
+                for j in 0..self.row_nnz[r0 + lane] {
+                    let e = off + j * SELL_CHUNK + lane;
+                    m[(r0 + lane, self.indices[e] as usize)] = self.values[e] as f64;
+                }
+            }
+        }
+        m
+    }
+
+    /// Non-allocating f32 SpMM `Y = A X` — deterministic for any thread
+    /// count.
+    pub fn spmm_into(&self, x: &MatF32, y: &mut MatF32, threads: usize) {
+        let k = x.cols();
+        y.set_shape(self.rows, k);
+        if self.rows == 0 || k == 0 {
+            return;
+        }
+        self.spmm_cols_into(x, y, 0, k, threads);
+    }
+
+    /// Column-windowed f32 SpMM, columns outside the window untouched.
+    pub fn spmm_cols_into(&self, x: &MatF32, y: &mut MatF32, j0: usize, j1: usize, threads: usize) {
+        let k = x.cols();
+        assert_eq!(x.rows(), self.cols, "spmm shape: A.cols == X.rows");
+        assert_eq!((y.rows(), y.cols()), (self.rows, k), "spmm_cols_into output shape");
+        assert!(j0 <= j1 && j1 <= k, "column window out of range");
+        if j0 == j1 || self.rows == 0 {
+            return;
+        }
+        flops::add(2 * (self.nnz * (j1 - j0)) as u64);
+        let n_slices = self.slice_ptr.len() - 1;
+        let nt = threads.max(1).min(n_slices);
+        let yd = y.data_mut();
+        if nt <= 1 {
+            self.spmm_slices(x, yd, 0, n_slices, j0, j1, k);
+            return;
+        }
+        std::thread::scope(|scope| {
+            let mut rest = yd;
+            let mut s0 = 0usize;
+            for t in 1..=nt {
+                let s1 = slice_split_at(&self.slice_ptr, t, nt, s0);
+                let rows0 = (s0 * SELL_CHUNK).min(self.rows);
+                let rows1 = (s1 * SELL_CHUNK).min(self.rows);
+                let (ychunk, tail) = rest.split_at_mut((rows1 - rows0) * k);
+                rest = tail;
+                let a0 = s0;
+                s0 = s1;
+                if s1 == a0 {
+                    continue;
+                }
+                scope.spawn(move || self.spmm_slices(x, ychunk, a0, s1, j0, j1, k));
+            }
+        });
+    }
+
+    /// One slice-range of the windowed f32 SpMM.
+    #[allow(clippy::too_many_arguments)]
+    fn spmm_slices(
+        &self,
+        x: &MatF32,
+        ychunk: &mut [f32],
+        s0: usize,
+        s1: usize,
+        j0: usize,
+        j1: usize,
+        k: usize,
+    ) {
+        let w = j1 - j0;
+        let xd = x.data();
+        for s in s0..s1 {
+            let off = self.slice_ptr[s];
+            let width = (self.slice_ptr[s + 1] - off) / SELL_CHUNK;
+            let r0 = s * SELL_CHUNK;
+            let h = SELL_CHUNK.min(self.rows - r0);
+            let base = (r0 - s0 * SELL_CHUNK) * k;
+            for lane in 0..h {
+                ychunk[base + lane * k + j0..base + lane * k + j1].fill(0.0);
+            }
+            for j in 0..width {
+                let e0 = off + j * SELL_CHUNK;
+                for lane in 0..h {
+                    let v = self.values[e0 + lane];
+                    let col = self.indices[e0 + lane] as usize;
+                    let xr = &xd[col * k + j0..col * k + j1];
+                    let yr = &mut ychunk[base + lane * k + j0..base + lane * k + j1];
+                    for t in 0..w {
+                        yr[t] += v * xr[t];
+                    }
+                }
+            }
+        }
+    }
+
+    /// Threaded f32 fused filter step `Y = a·(A X) + b·X + c·Z`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spmm_fused_into(
+        &self,
+        a: f32,
+        x: &MatF32,
+        b: f32,
+        c: f32,
+        z: &MatF32,
+        y: &mut MatF32,
+        threads: usize,
+    ) {
+        let k = x.cols();
+        y.set_shape(self.rows, k);
+        if self.rows == 0 || k == 0 {
+            return;
+        }
+        self.spmm_fused_cols_into(a, x, b, c, z, y, 0, k, threads);
+    }
+
+    /// Column-windowed f32 fused filter step, columns outside the window
+    /// untouched, bit-for-bit deterministic for any thread count.
+    #[allow(clippy::too_many_arguments)]
+    pub fn spmm_fused_cols_into(
+        &self,
+        a: f32,
+        x: &MatF32,
+        b: f32,
+        c: f32,
+        z: &MatF32,
+        y: &mut MatF32,
+        j0: usize,
+        j1: usize,
+        threads: usize,
+    ) {
+        let k = x.cols();
+        assert_eq!(x.rows(), self.cols);
+        assert_eq!(z.rows(), self.rows);
+        assert!(z.cols() == k);
+        assert_eq!(
+            (y.rows(), y.cols()),
+            (self.rows, k),
+            "spmm_fused_cols_into output shape"
+        );
+        assert!(j0 <= j1 && j1 <= k, "column window out of range");
+        if j0 == j1 || self.rows == 0 {
+            return;
+        }
+        flops::add((2 * self.nnz * (j1 - j0) + 4 * self.rows * (j1 - j0)) as u64);
+        let n_slices = self.slice_ptr.len() - 1;
+        let nt = threads.max(1).min(n_slices);
+        let xd = x.data();
+        let yd = y.data_mut();
+        if nt <= 1 {
+            self.fused_slices(a, xd, b, c, z, yd, 0, n_slices, j0, j1, k);
+            return;
+        }
+        std::thread::scope(|scope| {
+            let mut rest = yd;
+            let mut s0 = 0usize;
+            for t in 1..=nt {
+                let s1 = slice_split_at(&self.slice_ptr, t, nt, s0);
+                let rows0 = (s0 * SELL_CHUNK).min(self.rows);
+                let rows1 = (s1 * SELL_CHUNK).min(self.rows);
+                let (ychunk, tail) = rest.split_at_mut((rows1 - rows0) * k);
+                rest = tail;
+                let a0 = s0;
+                s0 = s1;
+                if s1 == a0 {
+                    continue;
+                }
+                scope.spawn(move || {
+                    self.fused_slices(a, xd, b, c, z, ychunk, a0, s1, j0, j1, k)
+                });
+            }
+        });
+    }
+
+    /// One slice-range of the windowed f32 fused step.
+    #[allow(clippy::too_many_arguments)]
+    fn fused_slices(
+        &self,
+        a: f32,
+        xd: &[f32],
+        b: f32,
+        c: f32,
+        z: &MatF32,
+        ychunk: &mut [f32],
+        s0: usize,
+        s1: usize,
+        j0: usize,
+        j1: usize,
+        k: usize,
+    ) {
+        let w = j1 - j0;
+        for s in s0..s1 {
+            let off = self.slice_ptr[s];
+            let width = (self.slice_ptr[s + 1] - off) / SELL_CHUNK;
+            let r0 = s * SELL_CHUNK;
+            let h = SELL_CHUNK.min(self.rows - r0);
+            let base = (r0 - s0 * SELL_CHUNK) * k;
+            for lane in 0..h {
+                let i = r0 + lane;
+                let xr = &xd[i * k + j0..i * k + j1];
+                let zr = &z.row(i)[j0..j1];
+                let yr = &mut ychunk[base + lane * k + j0..base + lane * k + j1];
+                for t in 0..w {
+                    yr[t] = b * xr[t] + c * zr[t];
+                }
+            }
+            for j in 0..width {
+                let e0 = off + j * SELL_CHUNK;
+                for lane in 0..h {
+                    let s_av = a * self.values[e0 + lane];
+                    let col = self.indices[e0 + lane] as usize;
+                    let xr = &xd[col * k + j0..col * k + j1];
+                    let yr = &mut ychunk[base + lane * k + j0..base + lane * k + j1];
+                    for t in 0..w {
+                        yr[t] += s_av * xr[t];
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+    use crate::sparse::csr::CooBuilder;
+
+    fn random_square(n: usize, nnz: usize, seed: u64) -> CsrMatrix {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut b = CooBuilder::new(n, n);
+        for _ in 0..nnz {
+            b.push(rng.next_below(n), rng.next_below(n), rng.normal());
+        }
+        for i in 0..n {
+            b.push(i, i, 4.0);
+        }
+        b.build()
+    }
+
+    #[test]
+    fn roundtrip_matches_csr_dense() {
+        // Sizes straddle slice boundaries: multiple of C, off-by-one,
+        // and smaller than one slice.
+        for (n, nnz, seed) in [(24usize, 150usize, 1u64), (29, 180, 2), (5, 12, 3)] {
+            let a = random_square(n, nnz, seed);
+            let s = SellMatrix::from_csr(&a);
+            assert_eq!(s.nnz(), a.nnz());
+            assert!(s.padded_len() >= s.nnz());
+            assert_eq!(s.to_dense(), a.to_dense(), "n={n}");
+        }
+    }
+
+    #[test]
+    fn empty_and_uneven_rows_pad_with_exact_zeros() {
+        // One dense row per slice, everything else empty: maximal
+        // padding. The padded kernel must still produce exact zeros for
+        // the empty rows.
+        let mut b = CooBuilder::new(20, 20);
+        for j in 0..20 {
+            b.push(0, j, 1.0 + j as f64);
+            b.push(9, j, -2.0);
+        }
+        let a = b.build();
+        let s = SellMatrix::from_csr(&a);
+        assert_eq!(s.to_dense(), a.to_dense());
+        let mut rng = Xoshiro256pp::seed_from_u64(7);
+        let x = Mat::randn(20, 3, &mut rng);
+        let mut y = Mat::zeros(0, 0);
+        s.spmm_into(&x, &mut y, 1);
+        for i in 0..20 {
+            if i != 0 && i != 9 {
+                assert_eq!(y.row(i), &[0.0, 0.0, 0.0], "row {i} must be exactly zero");
+            }
+        }
+        assert_eq!(y, a.spmm_alloc(&x));
+    }
+
+    #[test]
+    fn spmm_into_is_bit_for_bit_across_thread_counts() {
+        let a = random_square(37, 260, 4);
+        let s = SellMatrix::from_csr(&a);
+        let mut rng = Xoshiro256pp::seed_from_u64(5);
+        let x = Mat::randn(37, 6, &mut rng);
+        let mut serial = Mat::zeros(0, 0);
+        s.spmm_into(&x, &mut serial, 1);
+        for threads in [2usize, 7, 64] {
+            let mut y = Mat::zeros(0, 0);
+            s.spmm_into(&x, &mut y, threads);
+            assert_eq!(y, serial, "threads = {threads}");
+        }
+        // And it agrees with the CSR kernel (same per-row order;
+        // padding contributes exactly +0.0).
+        assert_eq!(serial, a.spmm_alloc(&x));
+    }
+
+    #[test]
+    fn spmv_matches_csr() {
+        let a = random_square(43, 300, 6);
+        let s = SellMatrix::from_csr(&a);
+        let mut rng = Xoshiro256pp::seed_from_u64(8);
+        let mut x = vec![0.0; 43];
+        rng.fill_normal(&mut x);
+        let want = a.spmv_alloc(&x);
+        for threads in [1usize, 2, 7] {
+            let mut y = vec![0.0; 43];
+            s.spmv_into(&x, &mut y, threads);
+            assert_eq!(y, want, "threads = {threads}");
+        }
+    }
+
+    #[test]
+    fn fused_matches_csr_fused_and_respects_window() {
+        let a = random_square(29, 160, 9);
+        let s = SellMatrix::from_csr(&a);
+        let mut rng = Xoshiro256pp::seed_from_u64(10);
+        let x = Mat::randn(29, 6, &mut rng);
+        let z = Mat::randn(29, 6, &mut rng);
+        let mut want = Mat::zeros(29, 6);
+        a.spmm_fused(1.3, &x, -0.7, 0.4, &z, &mut want);
+        for threads in [1usize, 3, 7] {
+            let mut y = Mat::zeros(0, 0);
+            s.spmm_fused_into(1.3, &x, -0.7, 0.4, &z, &mut y, threads);
+            assert_eq!(y, want, "threads = {threads}");
+        }
+        // Window: untouched outside, equal inside.
+        let mut y = Mat::from_fn(29, 6, |i, j| -((i + j) as f64));
+        s.spmm_fused_cols_into(1.3, &x, -0.7, 0.4, &z, &mut y, 2, 5, 3);
+        for i in 0..29 {
+            for j in 0..6 {
+                let exp = if (2..5).contains(&j) {
+                    want[(i, j)]
+                } else {
+                    -((i + j) as f64)
+                };
+                assert_eq!(y[(i, j)], exp, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_sell_matches_f32_reference_and_thread_counts() {
+        let a = random_square(26, 130, 11);
+        let s32 = SellMatrixF32::from_csr(&a);
+        assert_eq!(s32.nnz(), a.nnz());
+        let mut rng = Xoshiro256pp::seed_from_u64(12);
+        let xf = Mat::randn(26, 4, &mut rng);
+        let zf = Mat::randn(26, 4, &mut rng);
+        let x = MatF32::from_f64(&xf);
+        let z = MatF32::from_f64(&zf);
+        let mut serial = MatF32::zeros(0, 0);
+        s32.spmm_fused_into(1.5, &x, -0.25, 0.5, &z, &mut serial, 1);
+        for threads in [2usize, 7] {
+            let mut y = MatF32::zeros(0, 0);
+            s32.spmm_fused_into(1.5, &x, -0.25, 0.5, &z, &mut y, threads);
+            assert_eq!(y, serial, "threads = {threads}");
+        }
+        // Against the exact f64 result: error bounded by f32 roundoff.
+        let mut want = Mat::zeros(26, 4);
+        a.spmm_fused(1.5, &xf, -0.25, 0.5, &zf, &mut want);
+        assert!(serial.to_f64().max_abs_diff(&want) < 1e-4);
+        // Plain SpMM agrees with the CSR f32 kernel's arithmetic.
+        let a32 = crate::sparse::csr::CsrMatrixF32::from_f64(&a);
+        let mut ys = MatF32::zeros(0, 0);
+        let mut yc = MatF32::zeros(0, 0);
+        s32.spmm_into(&x, &mut ys, 1);
+        a32.spmm_into(&x, &mut yc, 1);
+        assert_eq!(ys, yc);
+    }
+}

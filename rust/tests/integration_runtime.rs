@@ -66,7 +66,7 @@ fn xla_filter_matches_native_filter() {
         upper: a.norm1() * 1.1,
         target: 10.0,
     };
-    let mut native = NativeFilter;
+    let mut native = NativeFilter::new();
     let mut xla = XlaFilter::new(rt);
     let out_n = native.filter(a, &y, &params);
     let out_x = xla.filter(a, &y, &params);
@@ -126,7 +126,7 @@ fn unmatched_shapes_fall_back_to_native() {
     let mut xla = XlaFilter::new(rt);
     let out = xla.filter(&p.matrix, &y, &params);
     assert_eq!(xla.native_fallbacks, 1);
-    let mut native = NativeFilter;
+    let mut native = NativeFilter::new();
     let want = native.filter(&p.matrix, &y, &params);
     assert!(out.max_abs_diff(&want) == 0.0, "fallback must be bit-identical");
 }

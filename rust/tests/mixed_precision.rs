@@ -1,0 +1,261 @@
+//! Integration tests for the mixed-precision filter path and the
+//! SELL-C-σ backend (ISSUE 6): accuracy across every operator family
+//! under `precision: mixed` on both sparse layouts, the byte-for-bit
+//! default regression, and the manifest echo of knobs and counters.
+
+use scsf::coordinator::config::GenConfig;
+use scsf::coordinator::dataset::DatasetReader;
+use scsf::coordinator::pipeline::generate_dataset;
+use scsf::eig::chebyshev::{FilterBackendKind, Precision};
+use scsf::eig::chfsi::ChfsiOptions;
+use scsf::eig::scsf::{solve_sequence, ScsfOptions, SequenceResult};
+use scsf::eig::EigOptions;
+use scsf::linalg::symeig::sym_eig;
+use scsf::operators::{self, FamilyRegistry, GenOptions, OperatorKind, Problem};
+use scsf::sort::SortMethod;
+use scsf::util::json::Value;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("scsf_mixed_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn sequence(
+    problems: &[Problem],
+    l: usize,
+    tol: f64,
+    precision: Precision,
+    backend: FilterBackendKind,
+) -> SequenceResult {
+    let mut chfsi = ChfsiOptions::from_eig(&EigOptions {
+        n_eigs: l,
+        tol,
+        max_iters: 600,
+        seed: 0,
+    });
+    chfsi.precision = precision;
+    chfsi.filter_backend = backend;
+    solve_sequence(
+        problems,
+        &ScsfOptions {
+            chfsi,
+            sort: SortMethod::TruncatedFft { p0: 6 },
+            warm_start: true,
+        },
+    )
+}
+
+/// Property: across all five built-in families and both sparse
+/// layouts, `precision: mixed` returns every wanted residual ≤ tol
+/// and matches the dense reference eigenvalues — the knob trades
+/// kernel bandwidth, never accuracy. Mixed runs must also actually
+/// route filter sweeps through the f32 kernels.
+#[test]
+fn mixed_precision_meets_tolerance_across_all_families() {
+    for kind in OperatorKind::ALL {
+        let tol = kind.default_tol();
+        let problems = operators::generate(
+            kind,
+            GenOptions {
+                grid: 10,
+                ..Default::default()
+            },
+            3,
+            29,
+        );
+        let l = 5;
+        for backend in [FilterBackendKind::Csr, FilterBackendKind::Sell] {
+            let seq = sequence(&problems, l, tol, Precision::Mixed, backend);
+            assert!(
+                seq.all_converged(),
+                "{kind:?}/{} did not converge",
+                backend.name()
+            );
+            assert!(
+                seq.f32_matvecs() > 0,
+                "{kind:?}/{}: mixed precision ran no f32 filter work",
+                backend.name()
+            );
+            assert!(
+                seq.f32_matvecs() <= seq.filter_matvecs(),
+                "{kind:?}/{}: more f32 matvecs than filter matvecs",
+                backend.name()
+            );
+            for (pos, &pid) in seq.order.iter().enumerate() {
+                let r = &seq.results[pos];
+                for res in &r.residuals {
+                    assert!(
+                        *res <= tol,
+                        "{kind:?}/{} problem {pid}: residual {res} > {tol}",
+                        backend.name()
+                    );
+                }
+                let want = sym_eig(&problems[pid].matrix.to_dense());
+                for (got, w) in r.values.iter().zip(&want.values[..l]) {
+                    assert!(
+                        (got - w).abs() / w.abs().max(1.0) < 1e-6,
+                        "{kind:?}/{} problem {pid}: {got} vs {w}",
+                        backend.name()
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The SELL backend at full f64 precision is a pure layout change: it
+/// must converge to the same tolerances with zero f32 work, on every
+/// family.
+#[test]
+fn sell_layout_is_accuracy_neutral_in_f64() {
+    for kind in OperatorKind::ALL {
+        let tol = kind.default_tol();
+        let problems = operators::generate(
+            kind,
+            GenOptions {
+                grid: 10,
+                ..Default::default()
+            },
+            2,
+            31,
+        );
+        let seq = sequence(&problems, 5, tol, Precision::F64, FilterBackendKind::Sell);
+        assert!(seq.all_converged(), "{kind:?} did not converge under sell");
+        assert_eq!(seq.f32_matvecs(), 0, "{kind:?}: f64 run counted f32 work");
+        for r in &seq.results {
+            for res in &r.residuals {
+                assert!(*res <= tol, "{kind:?}: residual {res} > {tol}");
+            }
+        }
+    }
+}
+
+/// Bit-for-bit regression: a config that never mentions `precision`
+/// or `filter_backend` and one that pins the defaults (`"f64"`,
+/// `"csr"`) must produce byte-identical `eigs.bin` files and
+/// identical manifest record indexes — the knobs' compatibility
+/// contract at the pipeline level.
+#[test]
+fn default_precision_reproduces_legacy_dataset_exactly() {
+    let d_legacy = tmpdir("legacy");
+    let d_explicit = tmpdir("explicit");
+    // A config JSON with neither new key (the historical form).
+    let legacy_json = r#"{
+        "families": [{"family": "helmholtz", "count": 5}],
+        "grid": 8, "n_eigs": 4, "tol": 1e-8, "seed": 11,
+        "shards": 2, "channel_capacity": 2,
+        "sort": {"method": "truncated_fft", "p0": 6}
+    }"#;
+    let cfg_legacy = GenConfig::from_json(legacy_json).unwrap();
+    assert_eq!(cfg_legacy.precision, Precision::F64);
+    assert_eq!(cfg_legacy.filter_backend, FilterBackendKind::Csr);
+    let explicit_json = legacy_json.replace(
+        "\"grid\": 8,",
+        "\"grid\": 8, \"precision\": \"f64\", \"filter_backend\": \"csr\",",
+    );
+    let cfg_explicit = GenConfig::from_json(&explicit_json).unwrap();
+    assert_eq!(cfg_explicit.precision, Precision::F64);
+    assert_eq!(cfg_explicit.filter_backend, FilterBackendKind::Csr);
+
+    generate_dataset(&cfg_legacy, &d_legacy).unwrap();
+    generate_dataset(&cfg_explicit, &d_explicit).unwrap();
+    let bin1 = std::fs::read(d_legacy.join("eigs.bin")).unwrap();
+    let bin2 = std::fs::read(d_explicit.join("eigs.bin")).unwrap();
+    assert_eq!(bin1, bin2, "eigs.bin must be byte-identical");
+    let r1 = DatasetReader::open(&d_legacy).unwrap();
+    let r2 = DatasetReader::open(&d_explicit).unwrap();
+    assert_eq!(r1.index(), r2.index(), "manifest record indexes differ");
+    let _ = std::fs::remove_dir_all(&d_legacy);
+    let _ = std::fs::remove_dir_all(&d_explicit);
+}
+
+/// End-to-end mixed-precision dataset on the SELL layout: converges
+/// at tolerance, echoes both knobs in the manifest config, and rolls
+/// the f32 matvec / promotion counters up from per-record index
+/// entries to the report totals.
+#[test]
+fn mixed_sell_dataset_end_to_end() {
+    let dir = tmpdir("e2e");
+    let mut cfg = GenConfig::from_json(
+        r#"{
+        "families": [{"family": "poisson", "count": 4}],
+        "grid": 8, "n_eigs": 4, "tol": 1e-8, "seed": 3,
+        "shards": 2, "precision": "mixed", "filter_backend": "sell",
+        "sort": {"method": "truncated_fft", "p0": 6}
+    }"#,
+    )
+    .unwrap();
+    cfg.channel_capacity = 2;
+    let report = generate_dataset(&cfg, &dir).unwrap();
+    assert!(report.all_converged);
+    assert!(report.max_residual <= 1e-8 * 10.0);
+    assert!(report.f32_matvecs > 0, "no f32 filter work recorded");
+    assert!(report.f32_matvecs <= report.filter_matvecs);
+    let manifest = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    let v = scsf::util::json::parse(&manifest).unwrap();
+    let cfg_echo = v.get("config").unwrap();
+    assert_eq!(
+        cfg_echo.get("precision").and_then(Value::as_str),
+        Some("mixed")
+    );
+    assert_eq!(
+        cfg_echo.get("filter_backend").and_then(Value::as_str),
+        Some("sell")
+    );
+    // The report echo carries the totals, and the per-record index
+    // entries sum back up to them.
+    let rep = v.get("report").unwrap();
+    assert_eq!(
+        rep.get("f32_matvecs").and_then(Value::as_f64),
+        Some(report.f32_matvecs as f64)
+    );
+    let reader = DatasetReader::open(&dir).unwrap();
+    let rec_f32: usize = reader.index().iter().map(|r| r.f32_matvecs).sum();
+    let rec_promotions: usize = reader.index().iter().map(|r| r.promotions).sum();
+    assert_eq!(rec_f32, report.f32_matvecs, "per-record f32 sum != total");
+    assert_eq!(rec_promotions, report.promotions, "promotion sum != total");
+    // Values still match dense references.
+    let problems = scsf::coordinator::pipeline::generate_problems(&cfg);
+    let mut reader = DatasetReader::open(&dir).unwrap();
+    for p in &problems {
+        let rec = reader.read(p.id).unwrap();
+        let want = sym_eig(&p.matrix.to_dense());
+        for (got, w) in rec.values.iter().zip(&want.values[..4]) {
+            assert!((got - w).abs() / w.abs().max(1.0) < 1e-6, "problem {}", p.id);
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The knobs are rejected everywhere the XLA backend could see them:
+/// config resolution fails before any pipeline work happens.
+#[test]
+fn xla_backend_rejects_knobs_at_config_resolution() {
+    let reg = FamilyRegistry::builtin();
+    let base = r#"{
+        "families": [{"family": "helmholtz", "count": 2}],
+        "grid": 8, "n_eigs": 4, "tol": 1e-8, "seed": 1,
+        "backend": {"kind": "xla", "artifacts_dir": "/nonexistent"},
+        "sort": {"method": "truncated_fft", "p0": 6}
+    }"#;
+    let mixed = base.replace("\"grid\": 8,", "\"grid\": 8, \"precision\": \"mixed\",");
+    let err = GenConfig::from_json(&mixed)
+        .unwrap()
+        .resolve(&reg)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("precision"), "unexpected error: {err}");
+    let sell = base.replace("\"grid\": 8,", "\"grid\": 8, \"filter_backend\": \"sell\",");
+    let err = GenConfig::from_json(&sell)
+        .unwrap()
+        .resolve(&reg)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("filter_backend"), "unexpected error: {err}");
+    // Unknown knob values hard-error at parse time.
+    let bad = base.replace("\"grid\": 8,", "\"grid\": 8, \"precision\": \"f16\",");
+    assert!(GenConfig::from_json(&bad).is_err());
+    let bad = base.replace("\"grid\": 8,", "\"grid\": 8, \"filter_backend\": \"ellpack\",");
+    assert!(GenConfig::from_json(&bad).is_err());
+}

@@ -103,7 +103,7 @@ fn workspace_reused_across_sequence_matches_fresh_allocation() {
     let mut fresh_results = Vec::new();
     let sort = scsf::sort::sort_problems(&problems, opts.sort);
     for &idx in &sort.order {
-        let mut backend = NativeFilter;
+        let mut backend = NativeFilter::new();
         let r = chfsi::solve_with_backend(
             &problems[idx].matrix,
             &opts.chfsi,
@@ -115,7 +115,7 @@ fn workspace_reused_across_sequence_matches_fresh_allocation() {
     }
 
     // One shared workspace for the whole sequence.
-    let mut backend = NativeFilter;
+    let mut backend = NativeFilter::new();
     let mut ws = Workspace::new(1);
     let seq = solve_sequence_in(&problems, &opts, &mut backend, &mut ws);
 
