@@ -1,0 +1,165 @@
+//! Cross-solve subspace recycling bench (ISSUE 7's deflation chains).
+//!
+//! Runs the paper's similarity regime — a 5 %-perturbed Helmholtz
+//! chain solved in chain order — three ways and reports instrumented
+//! matvecs per solve **vs chain position**:
+//!
+//! * `cold`    — every solve from a random block (`warm_start: false`)
+//! * `warm`    — each solve seeded from its predecessor's Ritz block
+//! * `deflate` — warm plus `recycling: deflate`: the chain carries a
+//!   compressed recycle space, seed-locks inherited pairs, and parks
+//!   resolved columns out of the filter mid-solve
+//!
+//! Every arm must converge with all residuals ≤ tol — recycling trades
+//! work, never accuracy. Emits `BENCH_recycling.json` (working
+//! directory) with per-position matvec profiles and arm totals; the
+//! repo root carries the committed baseline. The run asserts the
+//! tentpole target: warm+deflate cuts total matvecs by ≥ 15 % over
+//! warm-only on this chain.
+
+use scsf::eig::chfsi::{ChfsiOptions, Recycling};
+use scsf::eig::scsf::{solve_sequence, ScsfOptions, SequenceResult};
+use scsf::eig::EigOptions;
+use scsf::operators::{self, GenOptions, Problem};
+use scsf::sort::SortMethod;
+use scsf::util::json::Value;
+
+const GRID: usize = 16;
+const N_PROBLEMS: usize = 10;
+const N_EIGS: usize = 16;
+const GUARD: usize = 12;
+const TOL: f64 = 1e-8;
+const EPS: f64 = 0.05;
+const SEED: u64 = 44;
+
+fn run(chain: &[Problem], warm: bool, recycling: Recycling, label: &str) -> SequenceResult {
+    let mut chfsi = ChfsiOptions::from_eig(&EigOptions {
+        n_eigs: N_EIGS,
+        tol: TOL,
+        max_iters: 600,
+        seed: 0,
+    });
+    chfsi.guard = Some(GUARD);
+    chfsi.recycling = recycling;
+    let opts = ScsfOptions {
+        chfsi,
+        // Chain order IS the similarity order here — no re-sorting, so
+        // "position" means distance travelled along the perturbations.
+        sort: SortMethod::None,
+        warm_start: warm,
+    };
+    let seq = solve_sequence(chain, &opts);
+    assert!(seq.all_converged(), "{label} arm failed to converge");
+    for (pos, r) in seq.results.iter().enumerate() {
+        for res in &r.residuals {
+            assert!(*res <= TOL, "{label} arm, position {pos}: residual {res} > {TOL}");
+        }
+    }
+    seq
+}
+
+fn arm_record(seq: &SequenceResult) -> Value {
+    let by_position: Vec<Value> = seq
+        .results
+        .iter()
+        .map(|r| Value::from(r.stats.matvecs))
+        .collect();
+    Value::obj(vec![
+        ("total_matvecs", seq.total_matvecs().into()),
+        ("filter_matvecs", seq.filter_matvecs().into()),
+        ("deflated_cols", seq.deflated_cols().into()),
+        ("recycle_matvecs", seq.recycle_matvecs().into()),
+        ("avg_solve_secs", seq.avg_secs().into()),
+        ("matvecs_by_position", Value::Arr(by_position)),
+    ])
+}
+
+fn main() {
+    let chain = operators::helmholtz::generate_perturbed_chain(
+        GenOptions {
+            grid: GRID,
+            ..Default::default()
+        },
+        N_PROBLEMS,
+        EPS,
+        SEED,
+    );
+    let cold = run(&chain, false, Recycling::Off, "cold");
+    let warm = run(&chain, true, Recycling::Off, "warm");
+    let deflate = run(&chain, true, Recycling::Deflate, "warm+deflate");
+
+    println!("matvecs/solve vs chain position (5% Helmholtz chain, grid {GRID}, tol {TOL:.0e}):");
+    println!(
+        "{:>4} {:>8} {:>8} {:>9} {:>9} {:>9}",
+        "pos", "cold", "warm", "deflate", "defl_cols", "rec_dim"
+    );
+    for (i, ((c, w), d)) in cold
+        .results
+        .iter()
+        .zip(&warm.results)
+        .zip(&deflate.results)
+        .enumerate()
+    {
+        println!(
+            "{i:>4} {:>8} {:>8} {:>9} {:>9} {:>9}",
+            c.stats.matvecs,
+            w.stats.matvecs,
+            d.stats.matvecs,
+            d.stats.deflated_cols,
+            d.stats.recycle_dim,
+        );
+    }
+    let warm_total = warm.total_matvecs();
+    let deflate_total = deflate.total_matvecs();
+    let cut_vs_warm = 1.0 - deflate_total as f64 / warm_total.max(1) as f64;
+    let cut_vs_cold = 1.0 - deflate_total as f64 / cold.total_matvecs().max(1) as f64;
+    println!(
+        "TOTAL: matvecs cold {} / warm {warm_total} / warm+deflate {deflate_total} \
+         ({:+.1}% vs warm, {:+.1}% vs cold), {} column-sweeps deflated, \
+         {} matvecs on recycle upkeep",
+        cold.total_matvecs(),
+        -100.0 * cut_vs_warm,
+        -100.0 * cut_vs_cold,
+        deflate.deflated_cols(),
+        deflate.recycle_matvecs(),
+    );
+
+    let doc = Value::obj(vec![
+        ("bench", "recycling".into()),
+        ("version", 1usize.into()),
+        ("grid", GRID.into()),
+        ("n_problems", N_PROBLEMS.into()),
+        ("n_eigs", N_EIGS.into()),
+        ("guard", GUARD.into()),
+        ("tol", TOL.into()),
+        ("chain_perturbation", EPS.into()),
+        ("seed", SEED.into()),
+        ("cold", arm_record(&cold)),
+        ("warm", arm_record(&warm)),
+        ("warm_deflate", arm_record(&deflate)),
+        (
+            "totals",
+            Value::obj(vec![
+                ("matvecs_cold", cold.total_matvecs().into()),
+                ("matvecs_warm", warm_total.into()),
+                ("matvecs_warm_deflate", deflate_total.into()),
+                ("matvec_reduction_vs_warm", cut_vs_warm.into()),
+                ("matvec_reduction_vs_cold", cut_vs_cold.into()),
+                ("deflated_cols", deflate.deflated_cols().into()),
+                ("recycle_matvecs", deflate.recycle_matvecs().into()),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_recycling.json";
+    match std::fs::write(path, doc.to_string_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    assert!(
+        deflate_total as f64 <= 0.85 * warm_total as f64,
+        "recycling must cut total matvecs by >= 15% vs warm-only \
+         (warm {warm_total}, warm+deflate {deflate_total}, cut {:.1}%)",
+        100.0 * cut_vs_warm
+    );
+}

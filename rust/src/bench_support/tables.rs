@@ -46,19 +46,29 @@ fn avg_solver_secs(problems: &[Problem], solver: SolverKind, l: usize, tol: f64)
     total / problems.len() as f64
 }
 
-/// Mean seconds per problem for a *warm-started* baseline (Table 2's
-/// `*` variants): problems are first sorted, then each solve seeds from
-/// the previous result.
-fn avg_solver_secs_warm(problems: &[Problem], solver: SolverKind, l: usize, tol: f64, p0: usize) -> f64 {
+/// Warm-started baseline sweep (Table 2's `*` variants): problems are
+/// first sorted, then each solve seeds from the previous result.
+/// Returns (avg seconds, avg matvecs) per problem — the matvec count is
+/// the instrumented [`crate::eig::SolveStats::matvecs`] counter, the
+/// machine-independent cost that recycling results compare against.
+fn warm_solver_stats(
+    problems: &[Problem],
+    solver: SolverKind,
+    l: usize,
+    tol: f64,
+    p0: usize,
+) -> (f64, f64) {
     let order = sort::sort_problems(problems, SortMethod::TruncatedFft { p0 }).order;
     let mut warm: Option<WarmStart> = None;
-    let mut total = 0.0;
+    let mut secs = 0.0;
+    let mut matvecs = 0usize;
     for &i in &order {
         let r = solver.solve(&problems[i].matrix, &eig_opts(l, tol, i as u64), warm.as_ref());
-        total += r.stats.secs;
+        secs += r.stats.secs;
+        matvecs += r.stats.matvecs;
         warm = Some(r.as_warm_start());
     }
-    total / problems.len() as f64
+    (secs / problems.len() as f64, matvecs as f64 / problems.len() as f64)
 }
 
 fn scsf_opts(l: usize, tol: f64, sort: SortMethod, warm: bool) -> ScsfOptions {
@@ -129,17 +139,22 @@ pub fn table1(scale: &Scale) -> Vec<Table> {
     out
 }
 
-/// Table 2: initial-subspace modification (`*` = warm-started baselines).
+/// Table 2: initial-subspace modification (`*` = warm-started
+/// baselines). Each warm variant and SCSF also reports its instrumented
+/// average matvecs/problem (`mv` columns) so warm-init and recycling
+/// wins are comparable in one table — wall clock is machine-dependent,
+/// matvec counts are not.
 pub fn table2(scale: &Scale) -> Table {
     let tol = 1e-8;
     let problems = gen(OperatorKind::Helmholtz, scale, 2);
     let mut t = Table::new(
         &format!(
-            "Table 2 [helmholtz dim={} tol=1e-8] warm-started baselines (avg s)",
+            "Table 2 [helmholtz dim={} tol=1e-8] warm-started baselines (avg s | avg mv)",
             scale.grid * scale.grid
         ),
         &[
-            "L", "Eigsh", "Eigsh*", "LOBPCG", "LOBPCG*", "KS", "KS*", "JD", "JD*", "SCSF",
+            "L", "Eigsh", "Eigsh*", "Eigsh*mv", "LOBPCG", "LOBPCG*", "LOBPCG*mv", "KS", "KS*",
+            "KS*mv", "JD", "JD*", "JD*mv", "SCSF", "SCSFmv",
         ],
     );
     for &l in &scale.ls {
@@ -151,14 +166,20 @@ pub fn table2(scale: &Scale) -> Table {
             SolverKind::JacobiDavidson,
         ] {
             if solver == SolverKind::JacobiDavidson && !scale.include_jd {
-                row.push("-".to_string());
-                row.push("-".to_string());
+                row.extend(["-".to_string(), "-".to_string(), "-".to_string()]);
                 continue;
             }
             row.push(fmt_sig4(avg_solver_secs(&problems, solver, l, tol)));
-            row.push(fmt_sig4(avg_solver_secs_warm(&problems, solver, l, tol, scale.p0)));
+            let (secs, mv) = warm_solver_stats(&problems, solver, l, tol, scale.p0);
+            row.push(fmt_sig4(secs));
+            row.push(format!("{mv:.0}"));
         }
-        row.push(fmt_sig4(scsf_avg_secs(&problems, l, tol, scale.p0)));
+        let seq = scsf::solve_sequence(
+            &problems,
+            &scsf_opts(l, tol, SortMethod::TruncatedFft { p0: scale.p0 }, true),
+        );
+        row.push(fmt_sig4(seq.avg_secs()));
+        row.push(format!("{:.0}", seq.total_matvecs() as f64 / problems.len() as f64));
         t.row(row);
     }
     t

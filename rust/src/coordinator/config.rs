@@ -12,7 +12,7 @@
 use super::scheduler::{FamilyGroup, SortScope};
 use crate::anyhow;
 use crate::eig::chebyshev::{FilterBackendKind, FilterSchedule, Precision};
-use crate::eig::chfsi::ChfsiOptions;
+use crate::eig::chfsi::{ChfsiOptions, Recycling};
 use crate::eig::scsf::ScsfOptions;
 use crate::eig::EigOptions;
 use crate::grf::GrfParams;
@@ -277,6 +277,14 @@ pub struct GenConfig {
     /// `sell` (SELL-C-σ sliced layout, better on uneven row lengths).
     /// Native backends only — the XLA path rejects `sell`.
     pub filter_backend: FilterBackendKind,
+    /// Cross-solve subspace recycling: `off` (warm starts only —
+    /// bit-for-bit the historical output, the default) or `deflate`
+    /// (each chain carries a compressed basis of previously-converged
+    /// directions; solves seed locking from it and park resolved
+    /// columns out of filter sweeps — fewer matvecs, deterministic,
+    /// but numerically distinct). Native backends only — the XLA path
+    /// rejects `deflate`.
+    pub recycling: Recycling,
     /// Sorting method (paper default: truncated FFT, p₀ = 20).
     pub sort: SortMethod,
     /// Where the similarity sort runs: one global order per family
@@ -329,6 +337,7 @@ impl Default for GenConfig {
             filter_schedule: FilterSchedule::Fixed,
             precision: Precision::F64,
             filter_backend: FilterBackendKind::Csr,
+            recycling: Recycling::Off,
             sort: SortMethod::TruncatedFft { p0: 20 },
             sort_scope: SortScope::Global,
             handoff_threshold: None,
@@ -405,6 +414,13 @@ impl GenConfig {
                     self.filter_backend.name()
                 ));
             }
+            if self.recycling != Recycling::Off {
+                return Err(anyhow!(
+                    "recycling {:?} requires a native backend: the xla backend has no \
+                     deflation path (set recycling: \"off\" or backend kind: \"native\")",
+                    self.recycling.name()
+                ));
+            }
         }
         let mut out = Vec::with_capacity(self.families.len());
         let mut start = 0usize;
@@ -463,6 +479,7 @@ impl GenConfig {
         chfsi.schedule = self.filter_schedule;
         chfsi.precision = self.precision;
         chfsi.filter_backend = self.filter_backend;
+        chfsi.recycling = self.recycling;
         ScsfOptions {
             chfsi,
             sort: self.sort,
@@ -513,6 +530,7 @@ impl GenConfig {
             ("filter_schedule", self.filter_schedule.name().into()),
             ("precision", self.precision.name().into()),
             ("filter_backend", self.filter_backend.name().into()),
+            ("recycling", self.recycling.name().into()),
             ("sort", sort),
             ("sort_scope", self.sort_scope.name().into()),
             (
@@ -650,6 +668,14 @@ impl GenConfig {
                 anyhow!("unknown filter_backend {name} (expected \"csr\" or \"sell\")")
             })?;
         }
+        if let Some(s) = v.get("recycling") {
+            let name = s
+                .as_str()
+                .ok_or_else(|| anyhow!("recycling must be a string"))?;
+            cfg.recycling = Recycling::parse(name).ok_or_else(|| {
+                anyhow!("unknown recycling {name} (expected \"off\" or \"deflate\")")
+            })?;
+        }
         if let Some(sort) = v.get("sort") {
             cfg.sort = match sort.get("method").and_then(Value::as_str) {
                 Some("none") => SortMethod::None,
@@ -766,6 +792,7 @@ mod tests {
             filter_schedule: FilterSchedule::Adaptive,
             precision: Precision::Mixed,
             filter_backend: FilterBackendKind::Sell,
+            recycling: Recycling::Deflate,
             sort: SortMethod::Greedy,
             sort_scope: SortScope::Shard,
             handoff_threshold: Some(0.75),
@@ -1071,6 +1098,32 @@ mod tests {
     }
 
     #[test]
+    fn recycling_knob_roundtrips_and_validates() {
+        // Default is off, and a missing key parses as off — the
+        // bit-for-bit compatibility contract for existing configs.
+        assert_eq!(GenConfig::default().recycling, Recycling::Off);
+        let parsed = GenConfig::from_json("{}").unwrap();
+        assert_eq!(parsed.recycling, Recycling::Off);
+        // Round-trips through JSON and propagates into solver options.
+        let deflate = GenConfig {
+            recycling: Recycling::Deflate,
+            ..Default::default()
+        };
+        let back = GenConfig::from_json(&deflate.to_json()).unwrap();
+        assert_eq!(back, deflate);
+        assert_eq!(
+            deflate.scsf_options_with_tol(1e-8).chfsi.recycling,
+            Recycling::Deflate
+        );
+        // The bare string form parses too.
+        let from_key = GenConfig::from_json(r#"{"recycling": "deflate"}"#).unwrap();
+        assert_eq!(from_key.recycling, Recycling::Deflate);
+        // Bad values fail loudly (a typo must not silently run off).
+        assert!(GenConfig::from_json(r#"{"recycling": "deflat"}"#).is_err());
+        assert!(GenConfig::from_json(r#"{"recycling": true}"#).is_err());
+    }
+
+    #[test]
     fn xla_backend_rejects_mixed_precision_and_sell_layout() {
         let reg = FamilyRegistry::builtin();
         let xla = Backend::Xla {
@@ -1090,10 +1143,20 @@ mod tests {
         };
         let err = sell.resolve(&reg).unwrap_err().to_string();
         assert!(err.contains("filter_backend"), "{err}");
-        // Native accepts both knobs.
+        let deflate = GenConfig {
+            recycling: Recycling::Deflate,
+            backend: Backend::Xla {
+                artifacts_dir: "artifacts".to_string(),
+            },
+            ..GenConfig::single("poisson", 2)
+        };
+        let err = deflate.resolve(&reg).unwrap_err().to_string();
+        assert!(err.contains("recycling") && err.contains("deflate"), "{err}");
+        // Native accepts all three knobs.
         let native = GenConfig {
             precision: Precision::Mixed,
             filter_backend: FilterBackendKind::Sell,
+            recycling: Recycling::Deflate,
             ..GenConfig::single("poisson", 2)
         };
         assert!(native.resolve(&reg).is_ok());

@@ -64,6 +64,14 @@ pub struct RecordMeta {
     pub f32_matvecs: usize,
     /// Columns promoted from the f32 lane back to f64 during the solve.
     pub promotions: usize,
+    /// Columns deflated out of filter sweeps during the solve (0 for
+    /// datasets written before the recycling knob, and under
+    /// `recycling: off`).
+    pub deflated_cols: usize,
+    /// Recycle-space basis columns the solve started with.
+    pub recycle_dim: usize,
+    /// `A·x` products the recycling layer spent (subset of `matvecs`).
+    pub recycle_matvecs: usize,
 }
 
 /// Streaming dataset writer (single-writer; the pipeline funnels all
@@ -132,6 +140,9 @@ impl DatasetWriter {
             filter_matvecs: result.stats.filter_matvecs,
             f32_matvecs: result.stats.f32_matvecs,
             promotions: result.stats.promotions,
+            deflated_cols: result.stats.deflated_cols,
+            recycle_dim: result.stats.recycle_dim,
+            recycle_matvecs: result.stats.recycle_matvecs,
         });
         Ok(())
     }
@@ -168,6 +179,9 @@ impl DatasetWriter {
                 ("filter_matvecs", r.filter_matvecs.into()),
                 ("f32_matvecs", r.f32_matvecs.into()),
                 ("promotions", r.promotions.into()),
+                ("deflated_cols", r.deflated_cols.into()),
+                ("recycle_dim", r.recycle_dim.into()),
+                ("recycle_matvecs", r.recycle_matvecs.into()),
             ]));
         }
         let mut root = vec![
@@ -246,6 +260,9 @@ impl DatasetReader {
                 filter_matvecs: gu("filter_matvecs"),
                 f32_matvecs: gu("f32_matvecs"),
                 promotions: gu("promotions"),
+                deflated_cols: gu("deflated_cols"),
+                recycle_dim: gu("recycle_dim"),
+                recycle_matvecs: gu("recycle_matvecs"),
             });
         }
         let file = BufReader::new(File::open(dir.join("eigs.bin"))?);
@@ -316,6 +333,9 @@ mod tests {
                 filter_matvecs: 256,
                 f32_matvecs: 128,
                 promotions: 2,
+                deflated_cols: 4,
+                recycle_dim: 9,
+                recycle_matvecs: 21,
                 ..Default::default()
             },
         }
@@ -349,6 +369,9 @@ mod tests {
         assert_eq!(reader.index()[0].filter_matvecs, 256);
         assert_eq!(reader.index()[0].f32_matvecs, 128);
         assert_eq!(reader.index()[0].promotions, 2);
+        assert_eq!(reader.index()[0].deflated_cols, 4);
+        assert_eq!(reader.index()[0].recycle_dim, 9);
+        assert_eq!(reader.index()[0].recycle_matvecs, 21);
         for (id, want) in [(0usize, &r0), (1, &r1)] {
             let rec = reader.read(id).unwrap();
             assert_eq!(rec.values, want.values);

@@ -42,6 +42,11 @@ pub struct FamilyReport {
     /// Columns promoted from the f32 lane back to f64 across the
     /// family's solves.
     pub promotions: usize,
+    /// Columns deflated out of filter sweeps across the family's
+    /// solves (nonzero only under `recycling: deflate`).
+    pub deflated_cols: usize,
+    /// `A·x` products the recycling layer spent (subset of `matvecs`).
+    pub recycle_matvecs: usize,
     /// Mean outer iterations per solve.
     pub avg_iterations: f64,
     /// Seconds in eigensolves for this family's problems.
@@ -67,6 +72,8 @@ impl FamilyReport {
             ("filter_matvecs", self.filter_matvecs.into()),
             ("f32_matvecs", self.f32_matvecs.into()),
             ("promotions", self.promotions.into()),
+            ("deflated_cols", self.deflated_cols.into()),
+            ("recycle_matvecs", self.recycle_matvecs.into()),
             ("avg_iterations", self.avg_iterations.into()),
             ("solve_secs", self.solve_secs.into()),
             ("max_residual", self.max_residual.into()),
@@ -95,6 +102,11 @@ pub struct ShardReport {
     pub f32_matvecs: usize,
     /// Columns promoted from the f32 lane back to f64.
     pub promotions: usize,
+    /// Columns deflated out of filter sweeps across the run's solves
+    /// (nonzero only under `recycling: deflate`).
+    pub deflated_cols: usize,
+    /// `A·x` products the recycling layer spent (subset of `matvecs`).
+    pub recycle_matvecs: usize,
     /// Whether the run's first solve inherited the previous run's tail
     /// eigenpairs (a granted boundary handoff that actually arrived).
     pub warm_handoff: bool,
@@ -122,6 +134,8 @@ impl ShardReport {
             ("filter_matvecs", self.filter_matvecs.into()),
             ("f32_matvecs", self.f32_matvecs.into()),
             ("promotions", self.promotions.into()),
+            ("deflated_cols", self.deflated_cols.into()),
+            ("recycle_matvecs", self.recycle_matvecs.into()),
             ("warm_handoff", self.warm_handoff.into()),
             ("cold_starts", self.cold_starts.into()),
             ("handoff_wait_secs", self.handoff_wait_secs.into()),
@@ -176,6 +190,14 @@ pub struct GenReport {
     /// solves (each promotion is one column leaving the f32 group
     /// between consecutive sweeps).
     pub promotions: usize,
+    /// Columns deflated out of filter sweeps across all solves —
+    /// seed-locked inherited pairs plus per-sweep parked columns
+    /// (0 under the default `recycling: off`).
+    pub deflated_cols: usize,
+    /// `A·x` products the recycling layer itself spent (residual
+    /// pricing it alone caused plus thick-restart compression; subset
+    /// of `total_matvecs`).
+    pub recycle_matvecs: usize,
     /// Merged per-column filter-degree histogram: `degree_hist[m]` is
     /// the number of (column, sweep) pairs filtered at degree `m`
     /// across the whole run. Fixed schedules put everything in the
@@ -231,6 +253,8 @@ impl GenReport {
             ("filter_matvecs", self.filter_matvecs.into()),
             ("f32_matvecs", self.f32_matvecs.into()),
             ("promotions", self.promotions.into()),
+            ("deflated_cols", self.deflated_cols.into()),
+            ("recycle_matvecs", self.recycle_matvecs.into()),
             ("degree_hist", degree_hist_pairs(&self.degree_hist)),
             ("max_residual", self.max_residual.into()),
             ("all_converged", self.all_converged.into()),
@@ -299,6 +323,8 @@ mod tests {
         assert!(v.get("filter_matvecs").is_some());
         assert!(v.get("f32_matvecs").is_some());
         assert!(v.get("promotions").is_some());
+        assert!(v.get("deflated_cols").is_some());
+        assert!(v.get("recycle_matvecs").is_some());
         assert_eq!(v.get("sort_scope").and_then(Value::as_str), Some("global"));
         assert_eq!(v.get("sort_quality").and_then(Value::as_f64), Some(2.25));
         assert!(v.get("signature_secs").is_some());
@@ -319,6 +345,8 @@ mod tests {
                 filter_matvecs: 4100,
                 f32_matvecs: 2600,
                 promotions: 3,
+                deflated_cols: 17,
+                recycle_matvecs: 120,
                 avg_iterations: 10.0,
                 solve_secs: 1.25,
                 max_residual: 1e-13,
@@ -345,6 +373,14 @@ mod tests {
             Some(2600)
         );
         assert_eq!(fams[0].get("promotions").and_then(Value::as_usize), Some(3));
+        assert_eq!(
+            fams[0].get("deflated_cols").and_then(Value::as_usize),
+            Some(17)
+        );
+        assert_eq!(
+            fams[0].get("recycle_matvecs").and_then(Value::as_usize),
+            Some(120)
+        );
         assert_eq!(fams[0].get("tol").and_then(Value::as_f64), Some(1e-12));
         assert_eq!(
             fams[0].get("sort_quality").and_then(Value::as_f64),

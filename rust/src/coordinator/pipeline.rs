@@ -25,6 +25,7 @@ use super::metrics::{FamilyReport, GenReport, ShardReport};
 use super::scheduler::{self, Schedule, SortScope};
 use crate::anyhow;
 use crate::eig::chebyshev::{FilterBackend, FilterBackendKind, NativeFilter, Precision, SellFilter};
+use crate::eig::chfsi::Recycling;
 use crate::eig::scsf::Chain;
 use crate::eig::solver::Workspace;
 use crate::eig::WarmStart;
@@ -58,6 +59,11 @@ fn make_backend(cfg: &GenConfig) -> Result<Box<dyn FilterBackend>> {
             if cfg.filter_backend != FilterBackendKind::Csr {
                 return Err(anyhow!(
                     "filter_backend \"sell\" requires a native backend (xla runs csr only)"
+                ));
+            }
+            if cfg.recycling != Recycling::Off {
+                return Err(anyhow!(
+                    "recycling \"deflate\" requires a native backend (xla has no deflation path)"
                 ));
             }
             let rt = XlaRuntime::load(Path::new(artifacts_dir))?;
@@ -112,6 +118,15 @@ fn generate_in_order(
     Ok(())
 }
 
+/// Payload of a boundary-handoff channel: the predecessor's run index
+/// and family ride along with its tail eigenpairs so the receiver can
+/// validate the tail (dimension + family agreement) before adopting it
+/// via [`Chain::try_adopt`]. The tail's [`WarmStart`] also carries the
+/// predecessor chain's recycle space when `recycling: deflate` is on —
+/// seams transport deflation state exactly like iterate blocks, behind
+/// the same distance-threshold gating.
+type Handoff = (usize, Arc<str>, WarmStart);
+
 /// Everything one solve worker needs for its similarity run: the
 /// problems in solve order, the family's solve tolerance, plus the
 /// boundary-handoff wiring.
@@ -125,9 +140,9 @@ struct RunPlan {
     /// Problems in solve order.
     problems: Vec<Problem>,
     /// Receive the predecessor run's tail eigenpairs before solving.
-    handoff_rx: Option<Receiver<WarmStart>>,
+    handoff_rx: Option<Receiver<Handoff>>,
     /// Publish this run's tail eigenpairs for the successor.
-    handoff_tx: Option<SyncSender<WarmStart>>,
+    handoff_tx: Option<SyncSender<Handoff>>,
 }
 
 /// Scheduler-stage outcome recorded into the report.
@@ -148,6 +163,8 @@ struct FamilyAccum {
     filter_matvecs: usize,
     f32_matvecs: usize,
     promotions: usize,
+    deflated_cols: usize,
+    recycle_matvecs: usize,
     solve_secs: f64,
     max_residual: f64,
 }
@@ -456,13 +473,13 @@ pub fn generate_dataset_with_registry(
                         // iff the scheduler granted it a warm start.
                         // Family boundaries have no seam, hence never a
                         // handoff.
-                        let mut handoff_rxs: Vec<Option<Receiver<WarmStart>>> =
+                        let mut handoff_rxs: Vec<Option<Receiver<Handoff>>> =
                             (0..n_runs).map(|_| None).collect();
-                        let mut handoff_txs: Vec<Option<SyncSender<WarmStart>>> =
+                        let mut handoff_txs: Vec<Option<SyncSender<Handoff>>> =
                             (0..n_runs).map(|_| None).collect();
                         for b in &schedule.boundaries {
                             if b.warm {
-                                let (tx, rx) = sync_channel::<WarmStart>(1);
+                                let (tx, rx) = sync_channel::<Handoff>(1);
                                 handoff_txs[b.from_run] = Some(tx);
                                 handoff_rxs[b.to_run] = Some(rx);
                             }
@@ -513,11 +530,24 @@ pub fn generate_dataset_with_registry(
                     if let Some(rx) = plan.handoff_rx {
                         // Deterministic handoff: block for the
                         // predecessor's tail (a dropped sender means the
-                        // predecessor failed — detected cold start).
+                        // predecessor failed — detected cold start). The
+                        // tail is validated before adoption: a dimension
+                        // or family disagreement means the scheduler's
+                        // seam wiring is broken, and silently adopting
+                        // would corrupt every solve in this run.
                         let t0 = Instant::now();
-                        if let Ok(tail) = rx.recv() {
-                            chain.adopt(tail);
-                            stats.warm_handoff = true;
+                        if let Ok((from, fam, tail)) = rx.recv() {
+                            if let Some(first) = plan.problems.first() {
+                                chain
+                                    .try_adopt(&plan.family, first.matrix.rows(), &fam, tail)
+                                    .map_err(|e| {
+                                        anyhow!(
+                                            "handoff from run {from} to run {} rejected: {e}",
+                                            plan.index
+                                        )
+                                    })?;
+                                stats.warm_handoff = true;
+                            }
                         }
                         stats.handoff_wait_secs = t0.elapsed().as_secs_f64();
                     }
@@ -537,6 +567,8 @@ pub fn generate_dataset_with_registry(
                         stats.filter_matvecs += r.stats.filter_matvecs;
                         stats.f32_matvecs += r.stats.f32_matvecs;
                         stats.promotions += r.stats.promotions;
+                        stats.deflated_cols += r.stats.deflated_cols;
+                        stats.recycle_matvecs += r.stats.recycle_matvecs;
                         if res_tx.send((problem.id, plan.index, r)).is_err() {
                             writer_gone = true;
                             break;
@@ -548,7 +580,7 @@ pub fn generate_dataset_with_registry(
                     // on a writer failure — never strand the next run.
                     if let Some(tx) = plan.handoff_tx {
                         if let Some(tail) = chain.into_tail() {
-                            let _ = tx.send(tail);
+                            let _ = tx.send((plan.index, plan.family.clone(), tail));
                         }
                     }
                     let (xla, fallback) = backend.counters();
@@ -583,6 +615,8 @@ pub fn generate_dataset_with_registry(
             let mut filter_matvec_sum = 0usize;
             let mut f32_matvec_sum = 0usize;
             let mut promotion_sum = 0usize;
+            let mut deflated_sum = 0usize;
+            let mut recycle_matvec_sum = 0usize;
             let mut degree_hist: Vec<usize> = Vec::new();
             let mut all_converged = true;
             let mut count = 0usize;
@@ -602,6 +636,8 @@ pub fn generate_dataset_with_registry(
                 filter_matvec_sum += result.stats.filter_matvecs;
                 f32_matvec_sum += result.stats.f32_matvecs;
                 promotion_sum += result.stats.promotions;
+                deflated_sum += result.stats.deflated_cols;
+                recycle_matvec_sum += result.stats.recycle_matvecs;
                 crate::eig::merge_degree_hist(&mut degree_hist, &result.stats.degree_hist);
                 let spec = spec_of(resolved, id);
                 let acc = &mut fam_accum[spec];
@@ -611,6 +647,8 @@ pub fn generate_dataset_with_registry(
                 acc.filter_matvecs += result.stats.filter_matvecs;
                 acc.f32_matvecs += result.stats.f32_matvecs;
                 acc.promotions += result.stats.promotions;
+                acc.deflated_cols += result.stats.deflated_cols;
+                acc.recycle_matvecs += result.stats.recycle_matvecs;
                 acc.solve_secs += result.stats.secs;
                 acc.max_residual = acc.max_residual.max(worst);
                 if let Ok(writer) = writer_res.as_mut() {
@@ -648,6 +686,8 @@ pub fn generate_dataset_with_registry(
             report.filter_matvecs = filter_matvec_sum;
             report.f32_matvecs = f32_matvec_sum;
             report.promotions = promotion_sum;
+            report.deflated_cols = deflated_sum;
+            report.recycle_matvecs = recycle_matvec_sum;
             report.degree_hist = degree_hist;
             Ok((writer, write_secs, count, fam_accum))
         });
@@ -688,6 +728,8 @@ pub fn generate_dataset_with_registry(
                 filter_matvecs: acc.filter_matvecs,
                 f32_matvecs: acc.f32_matvecs,
                 promotions: acc.promotions,
+                deflated_cols: acc.deflated_cols,
+                recycle_matvecs: acc.recycle_matvecs,
                 avg_iterations: acc.iterations as f64 / acc.problems.max(1) as f64,
                 solve_secs: acc.solve_secs,
                 max_residual: acc.max_residual,
@@ -1126,11 +1168,75 @@ mod tests {
         let err = generate_dataset(&cfg, &dir).unwrap_err().to_string();
         assert!(err.contains("precision"), "{err}");
         let mut cfg = small_cfg();
-        cfg.backend = xla;
+        cfg.backend = xla.clone();
         cfg.filter_backend = FilterBackendKind::Sell;
         let err = generate_dataset(&cfg, &dir).unwrap_err().to_string();
         assert!(err.contains("filter_backend"), "{err}");
+        let mut cfg = small_cfg();
+        cfg.backend = xla;
+        cfg.recycling = Recycling::Deflate;
+        let err = generate_dataset(&cfg, &dir).unwrap_err().to_string();
+        assert!(err.contains("recycling"), "{err}");
         assert!(!dir.exists(), "nothing written for an invalid config");
+    }
+
+    #[test]
+    fn deflating_pipeline_converges_and_rolls_up_recycle_counters() {
+        let dir = tmpdir("deflate");
+        let mut cfg = small_cfg();
+        cfg.shards = 3;
+        cfg.handoff_threshold = Some(f64::INFINITY);
+        cfg.recycling = Recycling::Deflate;
+        let report = generate_dataset(&cfg, &dir).unwrap();
+        assert!(report.all_converged, "{report:?}");
+        assert!(report.max_residual <= 1e-8 * 10.0);
+        // Handoffs still chain every run — the tagged payload passes the
+        // try_adopt validation (same family, same dimension).
+        assert_eq!(report.warm_handoffs, 2, "{:?}", report.boundaries);
+        // Per-run and per-family rollups sum to the run totals.
+        let shard_defl: usize = report.shards.iter().map(|s| s.deflated_cols).sum();
+        assert_eq!(shard_defl, report.deflated_cols);
+        let fam_defl: usize = report.families.iter().map(|f| f.deflated_cols).sum();
+        assert_eq!(fam_defl, report.deflated_cols);
+        let shard_rm: usize = report.shards.iter().map(|s| s.recycle_matvecs).sum();
+        assert_eq!(shard_rm, report.recycle_matvecs);
+        let fam_rm: usize = report.families.iter().map(|f| f.recycle_matvecs).sum();
+        assert_eq!(fam_rm, report.recycle_matvecs);
+        // Per-record counters in the manifest sum to the report totals,
+        // and at least one warm solve actually carried a recycle space.
+        let reader = DatasetReader::open(&dir).unwrap();
+        let rec_defl: usize = reader.index().iter().map(|r| r.deflated_cols).sum();
+        assert_eq!(rec_defl, report.deflated_cols);
+        let rec_rm: usize = reader.index().iter().map(|r| r.recycle_matvecs).sum();
+        assert_eq!(rec_rm, report.recycle_matvecs);
+        assert!(
+            reader.index().iter().any(|r| r.recycle_dim > 0),
+            "no solve carried a recycle space"
+        );
+        // The manifest echoes the knob.
+        let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let v = crate::util::json::parse(&text).unwrap();
+        assert_eq!(
+            v.get("config")
+                .and_then(|c| c.get("recycling"))
+                .and_then(crate::util::json::Value::as_str),
+            Some("deflate")
+        );
+        // Values still match dense references at solver accuracy.
+        let problems = generate_problems(&cfg);
+        let mut reader = DatasetReader::open(&dir).unwrap();
+        for p in &problems {
+            let rec = reader.read(p.id).unwrap();
+            let want = sym_eig(&p.matrix.to_dense());
+            for (got, w) in rec.values.iter().zip(&want.values[..cfg.n_eigs]) {
+                assert!(
+                    (got - w).abs() / w.abs().max(1.0) < 1e-6,
+                    "problem {}: {got} vs {w}",
+                    p.id
+                );
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

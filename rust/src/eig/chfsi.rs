@@ -20,6 +20,42 @@ use crate::rng::Xoshiro256pp;
 use crate::sparse::CsrMatrix;
 use std::time::Instant;
 
+/// Cross-solve subspace recycling mode: whether a similarity chain
+/// carries a deflation space ([`super::RecycleSpace`]) along its solves.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Recycling {
+    /// No recycling — bit-for-bit identical to the historical output
+    /// (the default).
+    #[default]
+    Off,
+    /// Deflation chains: converged directions are carried across
+    /// solves, seeding locking, replacing random guard padding, and
+    /// excluding already-resolved columns from the filter sweeps.
+    /// Thick-restart compression keeps the space bounded as the chain
+    /// drifts. Same residual ≤ tol acceptance, not bit-for-bit equal
+    /// to [`Recycling::Off`].
+    Deflate,
+}
+
+impl Recycling {
+    /// Config/CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            Recycling::Off => "off",
+            Recycling::Deflate => "deflate",
+        }
+    }
+
+    /// Parse a config/CLI name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "off" => Some(Recycling::Off),
+            "deflate" => Some(Recycling::Deflate),
+            _ => None,
+        }
+    }
+}
+
 /// ChFSI-specific options.
 #[derive(Debug, Clone, Copy)]
 pub struct ChfsiOptions {
@@ -59,6 +95,17 @@ pub struct ChfsiOptions {
     /// [`FilterBackendKind::Csr`] (bit-for-bit historical, the default)
     /// or [`FilterBackendKind::Sell`] (SELL-C-σ sliced layout).
     pub filter_backend: FilterBackendKind,
+    /// Cross-solve subspace recycling: [`Recycling::Off`] (bit-for-bit
+    /// historical, the default) or [`Recycling::Deflate`] (deflation
+    /// chains with thick-restart compression).
+    pub recycling: Recycling,
+    /// Maximum recycled-basis size before thick-restart compression
+    /// fires (`recycling: deflate` only; 0 → auto, twice the iterate
+    /// block width).
+    pub recycle_dim: usize,
+    /// Ritz pairs retained by each thick-restart compression
+    /// (`recycling: deflate` only; 0 → auto, the iterate block width).
+    pub recycle_keep: usize,
 }
 
 impl ChfsiOptions {
@@ -75,6 +122,9 @@ impl ChfsiOptions {
             warm_bound_steps: 4,
             precision: Precision::F64,
             filter_backend: FilterBackendKind::Csr,
+            recycling: Recycling::Off,
+            recycle_dim: 0,
+            recycle_keep: 0,
         }
     }
 
@@ -152,6 +202,14 @@ pub fn solve_in(
     let tol = opts.eig.tol;
     let adaptive = opts.schedule == FilterSchedule::Adaptive;
     let mixed = opts.precision == Precision::Mixed;
+    let deflating = opts.recycling == Recycling::Deflate;
+    // The deflation space inherited from the chain (None under `off`,
+    // on cold starts, or when the chain has not produced one yet).
+    let recycle = if deflating {
+        init.and_then(|w| w.recycle.as_ref())
+    } else {
+        None
+    };
 
     // ---- Initial block and spectral estimates --------------------------
     // Warm-chain bound reuse (adaptive schedule only): seed the filter
@@ -183,15 +241,30 @@ pub fn solve_in(
 
     // Iterate block: inherited subspace padded with random columns, or
     // fully random (ChFSI baseline / first problem in a sequence).
+    // Deflation chains pad from the recycled basis before falling back
+    // to random: the spare basis directions (older converged/drifted
+    // pairs kept by thick-restart compression) give the guard block a
+    // near-resolved start, so it qualifies for filter exclusion sweeps
+    // earlier than a random guard ever could.
+    let mut recycled_pad = 0usize;
     let mut v = match init {
         Some(w) => {
             let have = w.vectors.cols().min(block);
-            let inherited = w.vectors.cols_range(0, have);
+            let mut v = w.vectors.cols_range(0, have);
             if have < block {
-                inherited.hcat(&Mat::randn(n, block - have, &mut rng))
-            } else {
-                inherited
+                if let Some(space) = recycle {
+                    let spare = space.basis.cols().min(space.values.len());
+                    if space.basis.rows() == n && spare > have {
+                        let take = (spare - have).min(block - have);
+                        v = v.hcat(&space.basis.cols_range(have, have + take));
+                        recycled_pad = take;
+                    }
+                }
+                if v.cols() < block {
+                    v = v.hcat(&Mat::randn(n, block - v.cols(), &mut rng));
+                }
             }
+            v
         }
         None => Mat::randn(n, block, &mut rng),
     };
@@ -199,7 +272,10 @@ pub fn solve_in(
     // Initial interval estimates: warm starts reuse the previous
     // spectrum (paper: λ ≈ λ'₁, [α, β] from (λ'₂ … λ'_L)); cold starts
     // take one Rayleigh–Ritz on the random block.
-    let mut stats = SolveStats::default();
+    let mut stats = SolveStats {
+        recycle_dim: recycle.map_or(0, |s| s.basis.cols()),
+        ..SolveStats::default()
+    };
     let (mut target, mut alpha) = match init {
         Some(w) if w.values.len() >= 2 => {
             let lam1 = w.values[0];
@@ -242,22 +318,65 @@ pub fn solve_in(
     // filter the whole block at the full degree).
     ws.col_theta.clear();
     ws.col_res.clear();
-    if adaptive || mixed {
+    if adaptive || mixed || deflating {
         if let Some(w) = init {
             // Price the inherited columns' residuals on the *new*
             // matrix with one block SpMM: `block` matvecs that let the
             // very first sweep run scheduled degrees instead of the
-            // cap (adaptive) and pick each column's precision lane
-            // (mixed) — the dominant saving on warm chains.
+            // cap (adaptive), pick each column's precision lane
+            // (mixed), and seed locking / filter exclusion (deflate)
+            // — the dominant saving on warm chains.
             let have = w.values.len().min(v.cols());
-            let res =
-                super::rel_residuals_into(a, &w.values[..have], &v, &mut ws.ax, ws.threads);
+            if recycled_pad > 0 {
+                // Recycled guard columns carry trusted Rayleigh
+                // quotients too: price them alongside the inherited
+                // pairs so sweep-one exclusion can see them.
+                let space = recycle.expect("recycled_pad implies a recycle space");
+                let mut vals = w.values[..have].to_vec();
+                vals.extend_from_slice(&space.values[have..have + recycled_pad]);
+                let res = super::rel_residuals_into(a, &vals, &v, &mut ws.ax, ws.threads);
+                ws.col_theta.extend_from_slice(&vals);
+                ws.col_res.extend_from_slice(&res);
+            } else {
+                let res =
+                    super::rel_residuals_into(a, &w.values[..have], &v, &mut ws.ax, ws.threads);
+                ws.col_theta.extend_from_slice(&w.values[..have]);
+                ws.col_res.extend_from_slice(&res);
+            }
             stats.matvecs += v.cols();
-            ws.col_theta.extend_from_slice(&w.values[..have]);
-            ws.col_res.extend_from_slice(&res);
+            if deflating && !(adaptive || mixed) {
+                // The adaptive/mixed paths would have priced anyway;
+                // only a pricing run deflation alone caused is charged
+                // as recycling overhead.
+                stats.recycle_matvecs += v.cols();
+            }
             // Random padding columns carry no pair: filter at the cap.
             ws.col_theta.resize(v.cols(), f64::INFINITY);
             ws.col_res.resize(v.cols(), f64::INFINITY);
+        }
+    }
+
+    // Seed locking from the chain (deflate only): inherited pairs whose
+    // priced residual already meets the tolerance on *this* operator
+    // lock before the first sweep and leave the iterate block — on
+    // tight chains whole solves reduce to a residual check.
+    if deflating && !ws.col_res.is_empty() {
+        if let Some(w) = init {
+            let have = w.values.len().min(v.cols());
+            let mut seed = 0usize;
+            while seed < have.min(l) && ws.col_res[seed] <= tol {
+                seed += 1;
+            }
+            if seed > 0 {
+                ws.locked.set_cols_from(0, &v, 0, seed);
+                locked_count = seed;
+                locked_vals.extend_from_slice(&w.values[..seed]);
+                stats.deflated_cols += seed;
+                std::mem::swap(&mut v, &mut ws.t4);
+                v.assign_cols(&ws.t4, seed, ws.t4.cols());
+                ws.col_theta.drain(..seed);
+                ws.col_res.drain(..seed);
+            }
         }
     }
 
@@ -283,6 +402,57 @@ pub fn solve_in(
 
         // (line 3) filter the active block into ws.t1
         let t_phase = Instant::now();
+
+        // ---- Deflation pre-pass (recycling: deflate only) ------------
+        // Columns the chain has already resolved skip the filter this
+        // sweep: converged wanted columns awaiting their prefix lock
+        // (residual ≤ tol) and guard columns at the relaxed guard
+        // target — the accuracy where the adaptive schedule stops
+        // spending degree on them. They park in ws.defl and rejoin the
+        // block before orthonormalization, so they still stabilize the
+        // Rayleigh–Ritz step; they cost residual checks instead of
+        // filter sweeps.
+        let mut parked = 0usize;
+        if deflating && !ws.col_res.is_empty() && ws.col_res.len() == v.cols() {
+            let k = v.cols();
+            let want_here = l - locked_vals.len();
+            let guard_bar = chebyshev::guard_target(tol);
+            ws.perm.clear();
+            for j in 0..k {
+                let bar = if j < want_here { tol } else { guard_bar };
+                if !(ws.col_res[j] <= bar) {
+                    ws.perm.push(j);
+                }
+            }
+            let kept = ws.perm.len();
+            // The leading wanted column always has residual > tol
+            // (otherwise the previous sweep would have locked it), so
+            // the filter set never empties; keep the guard anyway.
+            if kept < k && kept >= 1 {
+                for j in 0..k {
+                    let bar = if j < want_here { tol } else { guard_bar };
+                    if ws.col_res[j] <= bar {
+                        ws.perm.push(j);
+                    }
+                }
+                parked = k - kept;
+                ws.defl.gather_cols_into(&v, &ws.perm[kept..]);
+                // Compact the per-column state onto the kept prefix
+                // (perm[..kept] ascends, so the forward copy never
+                // clobbers) and shrink the active block.
+                for dst in 0..kept {
+                    let src = ws.perm[dst];
+                    ws.col_theta[dst] = ws.col_theta[src];
+                    ws.col_res[dst] = ws.col_res[src];
+                }
+                ws.col_theta.truncate(kept);
+                ws.col_res.truncate(kept);
+                ws.t4.gather_cols_into(&v, &ws.perm[..kept]);
+                std::mem::swap(&mut v, &mut ws.t4);
+                stats.deflated_cols += parked;
+            }
+        }
+
         if mixed {
             // ---- Mixed-precision path (both schedules) --------------
             // Each active column runs the f32 lane while its residual
@@ -506,6 +676,14 @@ pub fn solve_in(
             stats.filter_matvecs += v.cols() * opts.degree;
             bump_degree_hist(&mut stats.degree_hist, opts.degree, v.cols());
         }
+        if parked > 0 {
+            // Rejoin the parked columns: ws.t1 = [filtered | deflated].
+            let kept = ws.t1.cols();
+            ws.t4.set_shape(n, kept + parked);
+            ws.t4.set_cols_from(0, &ws.t1, 0, kept);
+            ws.t4.set_cols_from(kept, &ws.defl, 0, parked);
+            std::mem::swap(&mut ws.t1, &mut ws.t4);
+        }
         stats.filter_secs += t_phase.elapsed().as_secs_f64();
 
         // (line 4) orthonormalize [locked | filtered] in place: q = ws.t1
@@ -539,7 +717,7 @@ pub fn solve_in(
         // per-column reduction grows. The matvec counter charges the
         // actual full-block product under both schedules, so the new
         // manifest counters are comparable across schedules.
-        let res = if adaptive || mixed {
+        let res = if adaptive || mixed || deflating {
             super::rel_residuals_into(a, &ws.eig.values, &ws.t4, &mut ws.ax, ws.threads)
         } else {
             super::rel_residuals_into(a, &ws.eig.values[..cut], &ws.t4, &mut ws.ax, ws.threads)
@@ -560,7 +738,7 @@ pub fn solve_in(
         // Active block for the next sweep: non-locked Ritz vectors.
         last_theta.clear();
         last_theta.extend_from_slice(&ws.eig.values[newly..]);
-        if adaptive || mixed {
+        if adaptive || mixed || deflating {
             ws.col_theta.clear();
             ws.col_theta.extend_from_slice(&ws.eig.values[newly..]);
             ws.col_res.clear();

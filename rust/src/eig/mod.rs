@@ -69,6 +69,27 @@ pub struct WarmStart {
     /// a cheap few-step bound refresh instead of a full
     /// [`spectral_bounds::lanczos_bounds`] run.
     pub upper: Option<f64>,
+    /// Deflation subspace accumulated along the chain (`recycling:
+    /// deflate` only; `None` under the default `off`). Travels with
+    /// the warm start through seam handoffs so the space survives
+    /// shard boundaries under the same distance gating.
+    pub recycle: Option<RecycleSpace>,
+}
+
+/// An orthonormal basis of previously-converged spectral directions
+/// plus their Rayleigh quotients, carried across the solves of a
+/// similarity chain (`recycling: deflate`). The basis is always f64 —
+/// under `precision: mixed` only filter sweeps run in f32, and a
+/// recycled direction must stay accurate across many solves, so it
+/// never round-trips through the f32 lane.
+#[derive(Debug, Clone)]
+pub struct RecycleSpace {
+    /// Orthonormal basis, `n × k` (k bounded by `recycle_dim`).
+    pub basis: Mat,
+    /// Rayleigh quotient of each basis column against the operator it
+    /// was last compressed/converged on (ascending with the column
+    /// order produced by thick-restart compression).
+    pub values: Vec<f64>,
 }
 
 /// Work and convergence accounting for one eigensolve.
@@ -94,6 +115,20 @@ pub struct SolveStats {
     /// mixes the block), so this counts the per-sweep shrinkage of the
     /// f32 group (`precision: mixed` only).
     pub promotions: usize,
+    /// Columns this solve never ran through the Chebyshev filter
+    /// because the recycled deflation space already resolved them:
+    /// pairs seed-locked from the inherited block before the first
+    /// sweep, plus per-sweep guard columns excluded from filtering
+    /// (`recycling: deflate` only).
+    pub deflated_cols: usize,
+    /// Size of the recycled deflation basis available to this solve
+    /// (columns of [`RecycleSpace::basis`] at solve start; 0 when
+    /// recycling is off or the chain is cold).
+    pub recycle_dim: usize,
+    /// `A·x` products spent maintaining the recycle space: warm-block
+    /// pricing attributable to deflation plus thick-restart
+    /// compression of the basis (subset of `matvecs`).
+    pub recycle_matvecs: usize,
     /// Histogram of per-column filter degrees: `degree_hist[m]` counts
     /// columns filtered at degree `m`, summed over sweeps (SCSF/ChFSI
     /// only; the fixed schedule puts everything in one bucket).
@@ -160,6 +195,7 @@ impl EigResult {
             values: self.values.clone(),
             vectors: self.vectors.clone(),
             upper: (self.stats.spectral_upper > 0.0).then_some(self.stats.spectral_upper),
+            recycle: None,
         }
     }
 }

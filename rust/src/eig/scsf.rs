@@ -6,12 +6,15 @@
 //! gives the paper's "SCSF w/o sort" ablation; a fresh random start per
 //! problem (no warm start at all) is the plain ChFSI baseline.
 
-use super::chebyshev::FilterBackend;
-use super::chfsi::{self, ChfsiOptions};
+use super::chebyshev::{self, FilterBackend};
+use super::chfsi::{self, ChfsiOptions, Recycling};
 use super::solver::Workspace;
-use super::{EigResult, WarmStart};
+use super::{EigResult, RecycleSpace, WarmStart};
+use crate::linalg::symeig::sym_eig;
+use crate::linalg::Mat;
 use crate::operators::Problem;
 use crate::sort::{self, SortMethod, SortOutcome};
+use crate::sparse::CsrMatrix;
 
 /// Options for a sequence solve.
 #[derive(Debug, Clone, Copy)]
@@ -125,6 +128,20 @@ impl SequenceResult {
         self.results.iter().map(|r| r.stats.promotions).sum()
     }
 
+    /// Columns deflated out of filter sweeps across the sequence —
+    /// seed-locked inherited pairs plus per-sweep parked columns.
+    /// Nonzero only under `recycling: deflate`.
+    pub fn deflated_cols(&self) -> usize {
+        self.results.iter().map(|r| r.stats.deflated_cols).sum()
+    }
+
+    /// `A·x` products the recycling layer itself spent (residual
+    /// pricing that deflation alone caused, plus thick-restart
+    /// compression); subset of [`Self::total_matvecs`].
+    pub fn recycle_matvecs(&self) -> usize {
+        self.results.iter().map(|r| r.stats.recycle_matvecs).sum()
+    }
+
     /// Merged per-column filter-degree histogram across the sequence
     /// (`hist[m]` = columns filtered at degree `m`).
     pub fn degree_hist(&self) -> Vec<usize> {
@@ -235,6 +252,35 @@ impl Chain {
         self.warm = Some(tail);
     }
 
+    /// [`Chain::adopt`] with the agreement checks a seam handoff needs:
+    /// the tail must come from the same operator family and matrix
+    /// dimension the chain is about to solve. On a mismatch the tail is
+    /// *not* adopted and the error names the disagreement — callers
+    /// (the pipeline's run handoff) wrap it with the run ids involved —
+    /// instead of silently carrying a shape-mismatched warm start.
+    pub fn try_adopt(
+        &mut self,
+        family: &std::sync::Arc<str>,
+        n: usize,
+        tail_family: &std::sync::Arc<str>,
+        tail: WarmStart,
+    ) -> Result<(), String> {
+        if tail_family.as_ref() != family.as_ref() {
+            return Err(format!(
+                "family mismatch (tail from family '{tail_family}', chain solves '{family}')"
+            ));
+        }
+        if tail.vectors.rows() != n {
+            return Err(format!(
+                "dimension mismatch (tail has n={}, chain solves n={n})",
+                tail.vectors.rows()
+            ));
+        }
+        self.family = Some(family.clone());
+        self.warm = Some(tail);
+        Ok(())
+    }
+
     /// Drop any carried subspace and family tag: the next solve starts
     /// cold (the explicit family-boundary reset).
     pub fn reset(&mut self) {
@@ -302,9 +348,24 @@ impl Chain {
             self.warm_solves += 1;
         }
         let init = if cold { None } else { self.warm.as_ref() };
-        let r = chfsi::solve_in(a, &opts.chfsi, init, backend, ws);
+        let mut r = chfsi::solve_in(a, &opts.chfsi, init, backend, ws);
         if opts.warm_start {
-            self.warm = Some(r.as_warm_start());
+            // Under `recycling: deflate` the chain also carries the
+            // recycle space forward: fold this solve's pairs in, compress
+            // via thick restart when it overflows `recycle_dim`, and
+            // charge the compression matvecs to this solve's counters.
+            let recycle = if opts.chfsi.recycling == Recycling::Deflate {
+                let prev = self.warm.take().and_then(|w| w.recycle);
+                let (space, extra) = update_recycle_space(prev, &r, a, &opts.chfsi);
+                r.stats.matvecs += extra;
+                r.stats.recycle_matvecs += extra;
+                space
+            } else {
+                None
+            };
+            let mut next = r.as_warm_start();
+            next.recycle = recycle;
+            self.warm = Some(next);
         }
         r
     }
@@ -319,6 +380,109 @@ impl Chain {
     pub fn into_tail(self) -> Option<WarmStart> {
         self.warm
     }
+}
+
+/// Fold a deflating solve's converged pairs into the chain's carried
+/// [`RecycleSpace`] and bound its size (DESIGN.md §Subspace-recycling).
+///
+/// The refreshed space leads with the current solve's eigenpairs (the
+/// freshest directions); carried directions join behind them after a
+/// 2×DGKS re-orthogonalization, dropped when the new pairs already span
+/// them. When the combined basis exceeds `recycle_dim` (auto: twice the
+/// iterate-block width) a thick restart runs: Rayleigh–Ritz against the
+/// *current* operator, then the `recycle_keep` (auto: block width) Ritz
+/// pairs most aligned with the target window survive — pairs whose
+/// relative residual stays under the staleness bar
+/// ([`chebyshev::guard_target`] of the solve tolerance) rank ahead of
+/// stale ones, ascending in Ritz value within each class. The basis
+/// stays f64 end to end regardless of the filter precision policy.
+///
+/// Returns the refreshed space plus the `A·x` products the compression
+/// spent (`basis.cols()` when a thick restart ran, zero otherwise) so
+/// the caller can charge them to the solve's matvec counters.
+fn update_recycle_space(
+    prev: Option<RecycleSpace>,
+    r: &EigResult,
+    a: &CsrMatrix,
+    opts: &ChfsiOptions,
+) -> (Option<RecycleSpace>, usize) {
+    let n = a.rows();
+    if r.vectors.rows() != n || r.vectors.cols() == 0 {
+        return (prev.filter(|s| s.basis.rows() == n), 0);
+    }
+    let block = opts.block_width(n);
+    let dim_cap = if opts.recycle_dim == 0 {
+        2 * block
+    } else {
+        opts.recycle_dim
+    }
+    .max(1);
+    let keep = if opts.recycle_keep == 0 {
+        block
+    } else {
+        opts.recycle_keep
+    }
+    .clamp(1, dim_cap);
+
+    let fresh = r.vectors.cols().min(r.values.len());
+    let mut cols: Vec<Vec<f64>> = (0..fresh).map(|j| r.vectors.col(j)).collect();
+    let mut vals: Vec<f64> = r.values[..fresh].to_vec();
+    if let Some(prev) = prev.as_ref().filter(|s| s.basis.rows() == n) {
+        let old = prev.basis.cols().min(prev.values.len());
+        for j in 0..old {
+            let mut v = prev.basis.col(j);
+            for _ in 0..2 {
+                for q in &cols {
+                    let d: f64 = q.iter().zip(&v).map(|(qi, vi)| qi * vi).sum();
+                    for (vi, qi) in v.iter_mut().zip(q) {
+                        *vi -= d * qi;
+                    }
+                }
+            }
+            let nrm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if nrm > 1e-8 {
+                for x in &mut v {
+                    *x /= nrm;
+                }
+                cols.push(v);
+                vals.push(prev.values[j]);
+            }
+        }
+    }
+
+    let m = cols.len();
+    let basis = Mat::from_fn(n, m, |i, j| cols[j][i]);
+    if m <= dim_cap {
+        return (Some(RecycleSpace { basis, values: vals }), 0);
+    }
+
+    // Thick restart against the current operator: W = A·B, G = BᵀW,
+    // sym_eig(G) → (μ, Y); Ritz pairs (μᵢ, B·yᵢ), residuals ‖W·yᵢ − μᵢB·yᵢ‖.
+    let mut w = Mat::zeros(0, 0);
+    a.spmm_into(&basis, &mut w, opts.threads.max(1));
+    let g = basis.t_matmul(&w);
+    let eig = sym_eig(&g);
+    let by = basis.matmul(&eig.vectors);
+    let wy = w.matmul(&eig.vectors);
+    let stale_bar = chebyshev::guard_target(opts.eig.tol);
+    let res: Vec<f64> = (0..m)
+        .map(|i| {
+            let mu = eig.values[i];
+            let mut r2 = 0.0;
+            for row in 0..n {
+                let d = wy[(row, i)] - mu * by[(row, i)];
+                r2 += d * d;
+            }
+            r2.sqrt() / mu.abs().max(1.0)
+        })
+        .collect();
+    let mut kept: Vec<usize> = (0..m).filter(|&i| res[i] <= stale_bar).collect();
+    kept.extend((0..m).filter(|&i| res[i] > stale_bar));
+    kept.truncate(keep);
+    let mut kb = Mat::zeros(0, 0);
+    kb.gather_cols_into(&by, &kept);
+    let kv: Vec<f64> = kept.iter().map(|&i| eig.values[i]).collect();
+    (Some(RecycleSpace { basis: kb, values: kv }), m)
 }
 
 #[cfg(test)]
@@ -595,6 +759,121 @@ mod tests {
             sorted.filter_mflops(),
             unsorted.filter_mflops()
         );
+    }
+
+    #[test]
+    fn try_adopt_rejects_mismatched_tails() {
+        let gen_opts = GenOptions {
+            grid: 8,
+            ..Default::default()
+        };
+        let helm = operators::generate(OperatorKind::Helmholtz, gen_opts, 1, 9);
+        let pois = operators::generate(OperatorKind::Poisson, gen_opts, 1, 9);
+        let small = operators::generate(
+            OperatorKind::Helmholtz,
+            GenOptions {
+                grid: 6,
+                ..Default::default()
+            },
+            1,
+            9,
+        );
+        let o = opts(3, 1e-8);
+        let mut backend = crate::eig::chebyshev::NativeFilter::new();
+        let mut ws = Workspace::new(1);
+        let mut donor = Chain::new();
+        donor.solve_next_for(&helm[0].family, &helm[0].matrix, &o, &mut backend, &mut ws);
+        let tail = donor.into_tail().expect("warm chain has a tail");
+        let n = helm[0].matrix.rows();
+
+        // Family mismatch: rejected, nothing adopted.
+        let mut c = Chain::new();
+        let err = c
+            .try_adopt(&pois[0].family, pois[0].matrix.rows(), &helm[0].family, tail.clone())
+            .unwrap_err();
+        assert!(err.contains("family mismatch"), "{err}");
+        assert!(c.next_is_cold(&o));
+
+        // Dimension mismatch: rejected, nothing adopted.
+        let err = c
+            .try_adopt(&small[0].family, small[0].matrix.rows(), &helm[0].family, tail.clone())
+            .unwrap_err();
+        assert!(err.contains("dimension mismatch"), "{err}");
+        assert!(c.next_is_cold(&o));
+
+        // Agreement: adopted, the next solve starts warm.
+        c.try_adopt(&helm[0].family, n, &helm[0].family, tail).expect("matching tail adopts");
+        assert!(!c.next_is_cold(&o));
+    }
+
+    #[test]
+    fn deflate_chain_converges_and_carries_a_bounded_recycle_space() {
+        let chain = operators::helmholtz::generate_perturbed_chain(
+            GenOptions {
+                grid: 10,
+                ..Default::default()
+            },
+            5,
+            0.05,
+            3,
+        );
+        let mut o = opts(5, 1e-8);
+        o.sort = crate::sort::SortMethod::None;
+        o.chfsi.recycling = Recycling::Deflate;
+        let seq = solve_sequence(&chain, &o);
+        assert!(seq.all_converged());
+        for (pos, &pid) in seq.order.iter().enumerate() {
+            let want = sym_eig(&chain[pid].matrix.to_dense());
+            for (got, wv) in seq.results[pos].values.iter().zip(&want.values[..5]) {
+                assert!(
+                    (got - wv).abs() / wv.abs().max(1.0) < 1e-6,
+                    "problem {pid}: {got} vs {wv}"
+                );
+            }
+        }
+        // Every warm solve saw a carried recycle space, and the space
+        // stayed under the auto cap (twice the iterate-block width).
+        let block = o.chfsi.block_width(chain[0].matrix.rows());
+        assert!(seq.results[1..].iter().all(|r| r.stats.recycle_dim > 0));
+        assert!(seq.results.iter().all(|r| r.stats.recycle_dim <= 2 * block));
+        assert!(seq.recycle_matvecs() <= seq.total_matvecs());
+    }
+
+    #[test]
+    fn deflate_seed_locks_along_a_tight_chain() {
+        // Identical matrices down the chain: from the second solve on,
+        // every inherited pair prices at its converged residual and
+        // seed-locks, so warm solves cost residual checks, not sweeps.
+        let chain = operators::helmholtz::generate_perturbed_chain(
+            GenOptions {
+                grid: 10,
+                ..Default::default()
+            },
+            4,
+            0.0,
+            7,
+        );
+        let mut o = opts(5, 1e-8);
+        o.sort = crate::sort::SortMethod::None;
+        o.chfsi.recycling = Recycling::Deflate;
+        let seq = solve_sequence(&chain, &o);
+        assert!(seq.all_converged());
+        for r in &seq.results[1..] {
+            assert!(
+                r.stats.deflated_cols >= 5,
+                "tight-chain warm solve deflated only {} columns",
+                r.stats.deflated_cols
+            );
+        }
+        assert_eq!(seq.results[0].stats.deflated_cols, 0, "cold solve deflates nothing");
+
+        // Off stays off: no deflation accounting under the default.
+        let mut off = o;
+        off.chfsi.recycling = Recycling::Off;
+        let base = solve_sequence(&chain, &off);
+        assert_eq!(base.deflated_cols(), 0);
+        assert_eq!(base.recycle_matvecs(), 0);
+        assert!(base.results.iter().all(|r| r.stats.recycle_dim == 0));
     }
 
     #[test]

@@ -80,6 +80,9 @@ pub struct Workspace {
     pub degrees: Vec<usize>,
     /// Adaptive-schedule scratch: column permutation matching `degrees`.
     pub perm: Vec<usize>,
+    /// Deflation scratch: columns parked out of the iterate block for
+    /// one sweep (`recycling: deflate` only; stays empty under `off`).
+    pub defl: Mat,
     /// Mixed-precision scratch: downcast f32 lane of the iterate block.
     pub y32: MatF32,
     /// Mixed-precision scratch: f32 filter output block.
@@ -115,6 +118,7 @@ impl Workspace {
             deg_pairs: Vec::new(),
             degrees: Vec::new(),
             perm: Vec::new(),
+            defl: Mat::zeros(0, 0),
             y32: MatF32::zeros(0, 0),
             o32: MatF32::zeros(0, 0),
             ta32: MatF32::zeros(0, 0),
@@ -173,6 +177,7 @@ impl Workspace {
             + self.locked.capacity()
             + self.col_theta.capacity()
             + self.col_res.capacity()
+            + self.defl.capacity()
     }
 }
 

@@ -10,6 +10,7 @@
 //!               [--warm true|false] [--degree 20]
 //!               [--filter-schedule fixed|adaptive]
 //!               [--precision f64|mixed] [--filter-backend csr|sell]
+//!               [--recycling off|deflate]
 //!               [--backend native|xla] [--artifacts DIR] --out DIR
 //! scsf families                  # list registered operator families
 //! scsf repro <table1|table2|table3|table4|table5|fig3|table11|table12|
@@ -169,6 +170,14 @@ fn print_help() {
          \x20 csr       row-partitioned CSR (default)\n\
          \x20 sell      SELL-C-\u{3c3} sliced layout, faster on uneven rows\n\
          \n\
+         subspace recycling (--recycling off|deflate):\n\
+         \x20 off       every solve iterates its full block\n\
+         \x20           (default; bit-for-bit the historical output)\n\
+         \x20 deflate   warm chains carry converged directions between\n\
+         \x20           solves, seed-lock them, and park resolved columns\n\
+         \x20           out of the filter — fewer matvecs per chain (see\n\
+         \x20           manifest deflated_cols / recycle_matvecs)\n\
+         \n\
          see `rust/src/main.rs` docs for all flags"
     );
 }
@@ -270,6 +279,10 @@ fn cmd_generate(args: &Args) -> Result<()> {
         cfg.filter_backend = scsf::eig::chebyshev::FilterBackendKind::parse(s)
             .ok_or_else(|| anyhow!("unknown filter backend {s} (csr|sell)"))?;
     }
+    if let Some(s) = args.get("recycling") {
+        cfg.recycling = scsf::eig::chfsi::Recycling::parse(s)
+            .ok_or_else(|| anyhow!("unknown recycling {s} (off|deflate)"))?;
+    }
     if let Some(p0) = args.get_usize("p0")? {
         cfg.sort = SortMethod::TruncatedFft { p0 };
     }
@@ -346,6 +359,12 @@ fn cmd_generate(args: &Args) -> Result<()> {
             println!(
                 "    mixed precision: {} filter matvecs in f32, {} column promotions",
                 f.f32_matvecs, f.promotions
+            );
+        }
+        if f.deflated_cols > 0 || f.recycle_matvecs > 0 {
+            println!(
+                "    recycling: {} column-sweeps deflated, {} matvecs spent on recycle upkeep",
+                f.deflated_cols, f.recycle_matvecs
             );
         }
     }

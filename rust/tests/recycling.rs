@@ -1,0 +1,186 @@
+//! Integration tests for cross-solve subspace recycling (ISSUE 7):
+//! the `recycling: off` bit-for-bit default regression across every
+//! operator family, the deflation accuracy property (residuals ≤ tol,
+//! dense cross-checks), monotone deflation along a tight chain, and
+//! knob rejection on the XLA backend.
+
+use scsf::coordinator::config::GenConfig;
+use scsf::coordinator::dataset::DatasetReader;
+use scsf::coordinator::pipeline::generate_dataset;
+use scsf::eig::chfsi::{ChfsiOptions, Recycling};
+use scsf::eig::scsf::{solve_sequence, ScsfOptions, SequenceResult};
+use scsf::eig::EigOptions;
+use scsf::linalg::symeig::sym_eig;
+use scsf::operators::{self, FamilyRegistry, GenOptions, OperatorKind, Problem};
+use scsf::sort::SortMethod;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("scsf_recycle_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn sequence(problems: &[Problem], l: usize, tol: f64, recycling: Recycling) -> SequenceResult {
+    let mut chfsi = ChfsiOptions::from_eig(&EigOptions {
+        n_eigs: l,
+        tol,
+        max_iters: 600,
+        seed: 0,
+    });
+    chfsi.recycling = recycling;
+    solve_sequence(
+        problems,
+        &ScsfOptions {
+            chfsi,
+            sort: SortMethod::TruncatedFft { p0: 6 },
+            warm_start: true,
+        },
+    )
+}
+
+/// Bit-for-bit regression: a config that never mentions `recycling`
+/// and one that pins the default (`"off"`) must produce byte-identical
+/// `eigs.bin` files and identical manifest record indexes, across all
+/// five built-in families in one dataset — the knob's compatibility
+/// contract at the pipeline level.
+#[test]
+fn off_default_reproduces_legacy_dataset_exactly() {
+    let d_legacy = tmpdir("legacy");
+    let d_explicit = tmpdir("explicit");
+    let fam_json: Vec<String> = OperatorKind::ALL
+        .iter()
+        .map(|k| format!("{{\"family\": \"{}\", \"count\": 2}}", k.name()))
+        .collect();
+    // A config JSON without the new key (the historical form).
+    let legacy_json = format!(
+        r#"{{
+        "families": [{}],
+        "grid": 8, "n_eigs": 4, "tol": 1e-8, "seed": 11,
+        "shards": 2, "channel_capacity": 2,
+        "sort": {{"method": "truncated_fft", "p0": 6}}
+    }}"#,
+        fam_json.join(", ")
+    );
+    let cfg_legacy = GenConfig::from_json(&legacy_json).unwrap();
+    assert_eq!(cfg_legacy.recycling, Recycling::Off);
+    let explicit_json = legacy_json.replace("\"grid\": 8,", "\"grid\": 8, \"recycling\": \"off\",");
+    let cfg_explicit = GenConfig::from_json(&explicit_json).unwrap();
+    assert_eq!(cfg_explicit.recycling, Recycling::Off);
+
+    generate_dataset(&cfg_legacy, &d_legacy).unwrap();
+    generate_dataset(&cfg_explicit, &d_explicit).unwrap();
+    let bin1 = std::fs::read(d_legacy.join("eigs.bin")).unwrap();
+    let bin2 = std::fs::read(d_explicit.join("eigs.bin")).unwrap();
+    assert_eq!(bin1, bin2, "eigs.bin must be byte-identical");
+    let r1 = DatasetReader::open(&d_legacy).unwrap();
+    let r2 = DatasetReader::open(&d_explicit).unwrap();
+    assert_eq!(r1.index(), r2.index(), "manifest record indexes differ");
+    // An `off` run never deflates and never prices a recycle space.
+    assert!(r1.index().iter().all(|r| r.deflated_cols == 0));
+    assert!(r1.index().iter().all(|r| r.recycle_dim == 0));
+    assert!(r1.index().iter().all(|r| r.recycle_matvecs == 0));
+    let _ = std::fs::remove_dir_all(&d_legacy);
+    let _ = std::fs::remove_dir_all(&d_explicit);
+}
+
+/// Property: across all five built-in families, `recycling: deflate`
+/// returns every wanted residual ≤ tol and matches the dense reference
+/// eigenvalues — deflation trades filter work, never accuracy.
+#[test]
+fn deflate_meets_tolerance_across_all_families() {
+    for kind in OperatorKind::ALL {
+        let tol = kind.default_tol();
+        let problems = operators::generate(
+            kind,
+            GenOptions {
+                grid: 10,
+                ..Default::default()
+            },
+            3,
+            29,
+        );
+        let l = 5;
+        let seq = sequence(&problems, l, tol, Recycling::Deflate);
+        assert!(seq.all_converged(), "{kind:?} did not converge under deflate");
+        for (pos, &pid) in seq.order.iter().enumerate() {
+            let r = &seq.results[pos];
+            for res in &r.residuals {
+                assert!(*res <= tol, "{kind:?} problem {pid}: residual {res} > {tol}");
+            }
+            let want = sym_eig(&problems[pid].matrix.to_dense());
+            for (got, w) in r.values.iter().zip(&want.values[..l]) {
+                assert!(
+                    (got - w).abs() / w.abs().max(1.0) < 1e-6,
+                    "{kind:?} problem {pid}: {got} vs {w}"
+                );
+            }
+        }
+    }
+}
+
+/// Along a tight chain (identical operators) every warm solve inherits
+/// a fully-accurate recycle space: the cold solve deflates nothing,
+/// and the deflated-direction count never shrinks from one warm solve
+/// to the next.
+#[test]
+fn deflation_is_monotone_along_a_tight_chain() {
+    let chain = operators::helmholtz::generate_perturbed_chain(
+        GenOptions {
+            grid: 10,
+            ..Default::default()
+        },
+        4,
+        0.0,
+        7,
+    );
+    let mut chfsi = ChfsiOptions::from_eig(&EigOptions {
+        n_eigs: 6,
+        tol: 1e-8,
+        max_iters: 600,
+        seed: 0,
+    });
+    chfsi.recycling = Recycling::Deflate;
+    let opts = ScsfOptions {
+        chfsi,
+        sort: SortMethod::None,
+        warm_start: true,
+    };
+    let seq = solve_sequence(&chain, &opts);
+    assert!(seq.all_converged());
+    let counts: Vec<usize> = seq.results.iter().map(|r| r.stats.deflated_cols).collect();
+    assert_eq!(counts[0], 0, "cold solve has nothing to deflate");
+    for w in counts[1..].windows(2) {
+        assert!(w[1] >= w[0], "deflated counts shrank along the chain: {counts:?}");
+    }
+    assert!(
+        counts[1..].iter().all(|&c| c >= opts.chfsi.eig.n_eigs),
+        "warm solves must seed-lock the full inherited block: {counts:?}"
+    );
+    // Every warm solve had a recycle space to project against.
+    assert!(seq.results[1..].iter().all(|r| r.stats.recycle_dim > 0));
+}
+
+/// The knob is rejected everywhere the XLA backend could see it:
+/// config resolution fails before any pipeline work happens, and an
+/// unknown value hard-errors at parse time.
+#[test]
+fn xla_backend_rejects_recycling_at_config_resolution() {
+    let reg = FamilyRegistry::builtin();
+    let base = r#"{
+        "families": [{"family": "helmholtz", "count": 2}],
+        "grid": 8, "n_eigs": 4, "tol": 1e-8, "seed": 1,
+        "backend": {"kind": "xla", "artifacts_dir": "/nonexistent"},
+        "sort": {"method": "truncated_fft", "p0": 6}
+    }"#;
+    let deflate = base.replace("\"grid\": 8,", "\"grid\": 8, \"recycling\": \"deflate\",");
+    let err = GenConfig::from_json(&deflate)
+        .unwrap()
+        .resolve(&reg)
+        .unwrap_err()
+        .to_string();
+    assert!(err.contains("recycling"), "unexpected error: {err}");
+    let bad = base.replace("\"grid\": 8,", "\"grid\": 8, \"recycling\": \"thick\",");
+    assert!(GenConfig::from_json(&bad).is_err());
+    let bad = base.replace("\"grid\": 8,", "\"grid\": 8, \"recycling\": true,");
+    assert!(GenConfig::from_json(&bad).is_err());
+}
