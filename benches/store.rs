@@ -1,0 +1,255 @@
+//! Streaming-store bench (ISSUE 8's chunked manifests): write a
+//! 10^5-record chunked dataset, reopen it (index parse via the
+//! zero-allocation pull parser), and stream every record payload back
+//! through the buffer-reusing [`RecordStream`].
+//!
+//! A counting global allocator measures cumulative bytes allocated per
+//! record for each phase. The run asserts the tentpole claim two ways:
+//!
+//! * absolute — writing stays under 8 KiB allocated per record and
+//!   reading under 1 KiB (a `Value`-tree parse of a 17-key record
+//!   allocates several KiB on its own);
+//! * asymptotic — per-record allocation at 10^5 records stays within
+//!   2x of the 10^4-record run, i.e. O(chunk)/O(record), not
+//!   O(dataset).
+//!
+//! Emits `BENCH_store.json` (working directory) with records/sec and
+//! bytes/record per phase at both sizes; the repo root carries the
+//! committed schema seed.
+
+use scsf::coordinator::dataset::{DatasetReader, DatasetWriter};
+use scsf::eig::{EigResult, SolveStats};
+use scsf::linalg::Mat;
+use scsf::util::json::Value;
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+const N_RECORDS: usize = 100_000;
+const N_SMALL: usize = 10_000;
+const CHUNK_RECORDS: usize = 1024;
+const N_DIM: usize = 8;
+const N_EIGS: usize = 3;
+const WRITE_BYTES_PER_RECORD_MAX: f64 = 8192.0;
+const READ_BYTES_PER_RECORD_MAX: f64 = 1024.0;
+const SCALING_SLACK: f64 = 2.0;
+
+/// System allocator wrapped in cumulative counters. Counts every
+/// allocation (and the grown tail of reallocations) — a cheap,
+/// deterministic proxy for allocator pressure.
+struct CountingAlloc;
+
+static BYTES: AtomicU64 = AtomicU64::new(0);
+static CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        BYTES.fetch_add(layout.size() as u64, Ordering::Relaxed);
+        CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        if new_size > layout.size() {
+            BYTES.fetch_add((new_size - layout.size()) as u64, Ordering::Relaxed);
+        }
+        CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+}
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+/// One phase's measurements.
+#[derive(Clone, Copy)]
+struct Phase {
+    records_per_sec: f64,
+    bytes_per_record: f64,
+    allocs_per_record: f64,
+}
+
+fn measure<T>(n: usize, f: impl FnOnce() -> T) -> (T, Phase) {
+    let b0 = BYTES.load(Ordering::Relaxed);
+    let c0 = CALLS.load(Ordering::Relaxed);
+    let t0 = Instant::now();
+    let out = f();
+    let secs = t0.elapsed().as_secs_f64();
+    let bytes = BYTES.load(Ordering::Relaxed) - b0;
+    let calls = CALLS.load(Ordering::Relaxed) - c0;
+    let phase = Phase {
+        records_per_sec: n as f64 / secs.max(1e-9),
+        bytes_per_record: bytes as f64 / n as f64,
+        allocs_per_record: calls as f64 / n as f64,
+    };
+    (out, phase)
+}
+
+fn phase_record(p: &Phase) -> Value {
+    Value::obj(vec![
+        ("records_per_sec", p.records_per_sec.into()),
+        ("bytes_per_record", p.bytes_per_record.into()),
+        ("allocs_per_record", p.allocs_per_record.into()),
+    ])
+}
+
+fn fake_result() -> EigResult {
+    EigResult {
+        values: (0..N_EIGS).map(|i| 1.0 + i as f64).collect(),
+        vectors: Mat::from_vec(
+            N_DIM,
+            N_EIGS,
+            (0..N_DIM * N_EIGS).map(|i| (i as f64 * 0.37).sin()).collect(),
+        ),
+        residuals: vec![1e-9; N_EIGS],
+        stats: SolveStats {
+            iterations: 7,
+            matvecs: 123,
+            filter_matvecs: 100,
+            secs: 1e-3,
+            spectral_upper: 8.75,
+            ..Default::default()
+        },
+    }
+}
+
+/// Write + open + stream one dataset of `n` records; return the three
+/// phase measurements.
+fn run_size(n: usize) -> (Phase, Phase, Phase) {
+    let dir = std::env::temp_dir().join(format!("scsf_bench_store_{}_{n}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let config = Value::obj(vec![("bench", "store".into())]);
+    let result = fake_result();
+
+    let (count, write) = measure(n, || {
+        let mut writer = DatasetWriter::create_chunked(&dir, CHUNK_RECORDS, &config)
+            .expect("create chunked writer");
+        for id in 0..n {
+            writer
+                .write_record(id, id % 4, "bench", &result)
+                .expect("write record");
+        }
+        writer.finalize(Vec::new()).expect("finalize")
+    });
+    assert_eq!(count, n, "writer must commit every record");
+
+    let (reader, open) = measure(n, || {
+        DatasetReader::open(&dir).expect("open chunked dataset")
+    });
+    assert_eq!(reader.index().len(), n);
+    assert!(reader.layout().expect("v3 layout").complete);
+
+    let (streamed, stream) = measure(n, || {
+        let mut stream = reader.stream().expect("record stream");
+        let mut seen = 0usize;
+        let mut checksum = 0.0f64;
+        while let Some(view) = stream.next_record().expect("stream record") {
+            seen += 1;
+            // Touch the payload so the read is not optimized away.
+            checksum += view.values[0] + view.vectors[view.vectors.len() - 1];
+        }
+        assert!(checksum.is_finite());
+        seen
+    });
+    assert_eq!(streamed, n, "stream must visit every record");
+
+    let _ = std::fs::remove_dir_all(&dir);
+    (write, open, stream)
+}
+
+fn main() {
+    println!(
+        "streaming store bench: chunk {CHUNK_RECORDS}, record n={N_DIM} l={N_EIGS} \
+         ({} payload bytes/record)",
+        3 * 8 + N_EIGS * 8 + N_DIM * N_EIGS * 8
+    );
+    let (w_small, o_small, s_small) = run_size(N_SMALL);
+    let (w_big, o_big, s_big) = run_size(N_RECORDS);
+
+    println!(
+        "{:>9} {:>7} {:>13} {:>11} {:>9}",
+        "phase", "records", "records/sec", "bytes/rec", "allocs/rec"
+    );
+    for (label, n, p) in [
+        ("write", N_SMALL, &w_small),
+        ("open", N_SMALL, &o_small),
+        ("stream", N_SMALL, &s_small),
+        ("write", N_RECORDS, &w_big),
+        ("open", N_RECORDS, &o_big),
+        ("stream", N_RECORDS, &s_big),
+    ] {
+        println!(
+            "{label:>9} {n:>7} {:>13.0} {:>11.1} {:>9.2}",
+            p.records_per_sec, p.bytes_per_record, p.allocs_per_record
+        );
+    }
+
+    let doc = Value::obj(vec![
+        ("bench", "store".into()),
+        ("version", 1usize.into()),
+        ("chunk_records", CHUNK_RECORDS.into()),
+        ("record_n", N_DIM.into()),
+        ("record_l", N_EIGS.into()),
+        (
+            "small",
+            Value::obj(vec![
+                ("records", N_SMALL.into()),
+                ("write", phase_record(&w_small)),
+                ("open", phase_record(&o_small)),
+                ("stream", phase_record(&s_small)),
+            ]),
+        ),
+        (
+            "large",
+            Value::obj(vec![
+                ("records", N_RECORDS.into()),
+                ("write", phase_record(&w_big)),
+                ("open", phase_record(&o_big)),
+                ("stream", phase_record(&s_big)),
+            ]),
+        ),
+    ]);
+    let path = "BENCH_store.json";
+    match std::fs::write(path, doc.to_string_pretty()) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    // Absolute bounds: constant-memory I/O means allocation per record
+    // is a small constant, not proportional to a Value tree.
+    assert!(
+        w_big.bytes_per_record <= WRITE_BYTES_PER_RECORD_MAX,
+        "write allocated {:.1} bytes/record (max {WRITE_BYTES_PER_RECORD_MAX})",
+        w_big.bytes_per_record
+    );
+    assert!(
+        o_big.bytes_per_record <= READ_BYTES_PER_RECORD_MAX,
+        "manifest open allocated {:.1} bytes/record (max {READ_BYTES_PER_RECORD_MAX})",
+        o_big.bytes_per_record
+    );
+    assert!(
+        s_big.bytes_per_record <= READ_BYTES_PER_RECORD_MAX,
+        "record stream allocated {:.1} bytes/record (max {READ_BYTES_PER_RECORD_MAX})",
+        s_big.bytes_per_record
+    );
+    // Asymptotic bound: 10x the records must not change the per-record
+    // allocation beyond noise — O(chunk), not O(dataset).
+    for (label, small, big) in [
+        ("write", &w_small, &w_big),
+        ("open", &o_small, &o_big),
+        ("stream", &s_small, &s_big),
+    ] {
+        assert!(
+            big.bytes_per_record <= SCALING_SLACK * small.bytes_per_record.max(64.0),
+            "{label}: bytes/record grew from {:.1} at {N_SMALL} records to {:.1} at \
+             {N_RECORDS} — allocation scales with dataset size",
+            small.bytes_per_record,
+            big.bytes_per_record
+        );
+    }
+    println!("allocation bounds hold: O(chunk) write, O(record) read");
+}

@@ -317,6 +317,12 @@ pub struct GenConfig {
     pub threads: usize,
     /// Bounded-channel capacity between stages (backpressure depth).
     pub channel_capacity: usize,
+    /// Checkpoint cadence of the chunked (schema v3) manifest: the
+    /// writer fsyncs and checkpoints every this-many records, making
+    /// the run crash-resumable (`--resume`). `None` (the default)
+    /// writes the legacy single-document manifest, bit-for-bit
+    /// identical to earlier builds.
+    pub chunk_records: Option<usize>,
     /// Filter backend.
     pub backend: Backend,
     /// Default GRF smoothness parameters for coefficient fields; family
@@ -345,6 +351,7 @@ impl Default for GenConfig {
             shards: 2,
             threads: 1,
             channel_capacity: 8,
+            chunk_records: None,
             backend: Backend::Native,
             grf: GrfParams::default(),
         }
@@ -551,6 +558,10 @@ impl GenConfig {
             ("shards", self.shards.into()),
             ("threads", self.threads.into()),
             ("channel_capacity", self.channel_capacity.into()),
+            (
+                "chunk_records",
+                self.chunk_records.map(Value::from).unwrap_or(Value::Null),
+            ),
             ("backend", backend),
             (
                 "grf",
@@ -730,6 +741,18 @@ impl GenConfig {
         if let Some(x) = get("channel_capacity") {
             cfg.channel_capacity = x.max(1);
         }
+        if let Some(c) = v.get("chunk_records") {
+            cfg.chunk_records = match c {
+                Value::Null => None,
+                _ => {
+                    let x = c
+                        .as_usize()
+                        .filter(|x| *x >= 1)
+                        .ok_or_else(|| anyhow!("chunk_records must be >= 1 or null"))?;
+                    Some(x)
+                }
+            };
+        }
         if let Some(b) = v.get("backend") {
             cfg.backend = match b.get("kind").and_then(Value::as_str) {
                 Some("native") | None => Backend::Native,
@@ -800,6 +823,7 @@ mod tests {
             shards: 4,
             threads: 3,
             channel_capacity: 3,
+            chunk_records: Some(64),
             backend: Backend::Native,
             grf: GrfParams {
                 alpha: 3.0,
@@ -844,6 +868,7 @@ mod tests {
         );
         assert!(GenConfig::from_json(r#"{"families": [{"family": "poisson", "count": 0}]}"#)
             .is_err());
+        assert!(GenConfig::from_json(r#"{"chunk_records": 0}"#).is_err());
         // Partial per-family grf overrides are rejected, not silently
         // filled from the global default.
         assert!(GenConfig::from_json(

@@ -11,28 +11,58 @@
 //!
 //! Vectors are stored row-major `n × l` (column `j` pairs with value `j`)
 //! — the same layout as [`crate::linalg::Mat`].
+//!
+//! Two manifest families share that layout:
+//!
+//! * **Legacy (schema v1/v2)** — one pretty-printed JSON document,
+//!   written at `finalize` (now crash-safe: temp file, fsync, atomic
+//!   rename). The default; byte-identical to what earlier builds wrote.
+//! * **Chunked (schema v3)** — an append-only sequence of checksummed
+//!   frames ([`crate::store::chunk`]): a header frame, then per-chunk
+//!   record blocks each followed by a checkpoint frame, then a footer
+//!   frame on completion. Each chunk is fsync'd after the eigenpair
+//!   bytes it indexes, so a crash at any byte loses at most one
+//!   in-flight chunk and [`scan_resumable`] can truncate the torn tail
+//!   and report the exact resume point. Enabled by `--chunk-records`.
+//!
+//! Reads run on the streaming pull parser ([`crate::store::pull`]) in
+//! constant memory per record; writes run on the streaming emitter
+//! ([`crate::store::emit`]). See DESIGN.md §Streaming store.
 
 use crate::anyhow;
 use crate::eig::EigResult;
+use crate::store::chunk::{FrameScanner, FrameWriter};
+use crate::store::emit::JsonEmitter;
+use crate::store::pull::{Event, PullParser};
 use crate::util::error::{Context, Result};
 use crate::util::json::{self, Value};
-use std::fs::File;
+use std::collections::BTreeMap;
+use std::fs::{File, OpenOptions};
 use std::io::{BufReader, BufWriter, Read, Seek, SeekFrom, Write};
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
-/// Manifest schema version this build writes.
+/// Highest manifest schema version this build reads.
 ///
 /// - **1** (implicit — pre-versioning manifests have no
 ///   `schema_version` field): records carry `id/shard/offset/n/l/…`.
 /// - **2**: adds the root `schema_version` field and the per-record
 ///   `family` field (operator-family name; mixed-family datasets).
+/// - **3**: the chunked frame format ([`crate::store::chunk`]) with
+///   checkpoints, crash-resume, and the per-record `spectral_upper`
+///   field (the Chebyshev upper bound, needed to re-seed warm chains).
 ///
 /// [`DatasetReader::open`] reads versions `<= SCHEMA_VERSION` and
 /// rejects newer ones with an actionable error.
-pub const SCHEMA_VERSION: usize = 2;
+pub const SCHEMA_VERSION: usize = 3;
+
+/// Schema version written by the legacy (single-document) path — the
+/// default when `--chunk-records` is not given. Kept at 2 so default
+/// output stays byte-identical across this change.
+pub const LEGACY_SCHEMA_VERSION: usize = 2;
 
 /// Index entry for one stored record.
-#[derive(Debug, Clone, PartialEq)]
+#[derive(Debug, Clone, Default, PartialEq)]
 pub struct RecordMeta {
     /// Problem id (generation order).
     pub id: usize,
@@ -72,6 +102,82 @@ pub struct RecordMeta {
     pub recycle_dim: usize,
     /// `A·x` products the recycling layer spent (subset of `matvecs`).
     pub recycle_matvecs: usize,
+    /// Chebyshev spectral upper bound the solve ended with (0 for
+    /// pre-v3 datasets). Resume re-seeds warm chains from this.
+    pub spectral_upper: f64,
+}
+
+/// Length in bytes of a record's `eigs.bin` region.
+fn record_len(n: usize, l: usize) -> u64 {
+    (3 * 8 + l * 8 + n * l * 8) as u64
+}
+
+/// Emit one record's manifest object. Keys are written in the same
+/// (alphabetical) order the legacy `BTreeMap` serializer produced, so
+/// the legacy path stays byte-identical. `with_upper` gates the
+/// v3-only `spectral_upper` field.
+fn emit_record<W: std::io::Write>(
+    e: &mut JsonEmitter<W>,
+    r: &RecordMeta,
+    with_upper: bool,
+) -> std::io::Result<()> {
+    e.obj_start()?;
+    e.key("deflated_cols")?;
+    e.usize_val(r.deflated_cols)?;
+    e.key("f32_matvecs")?;
+    e.usize_val(r.f32_matvecs)?;
+    e.key("family")?;
+    e.str_val(&r.family)?;
+    e.key("filter_matvecs")?;
+    e.usize_val(r.filter_matvecs)?;
+    e.key("id")?;
+    e.usize_val(r.id)?;
+    e.key("iterations")?;
+    e.usize_val(r.iterations)?;
+    e.key("l")?;
+    e.usize_val(r.l)?;
+    e.key("matvecs")?;
+    e.usize_val(r.matvecs)?;
+    e.key("max_residual")?;
+    e.num(r.max_residual)?;
+    e.key("n")?;
+    e.usize_val(r.n)?;
+    e.key("offset")?;
+    e.u64_val(r.offset)?;
+    e.key("promotions")?;
+    e.usize_val(r.promotions)?;
+    e.key("recycle_dim")?;
+    e.usize_val(r.recycle_dim)?;
+    e.key("recycle_matvecs")?;
+    e.usize_val(r.recycle_matvecs)?;
+    e.key("secs")?;
+    e.num(r.secs)?;
+    e.key("shard")?;
+    e.usize_val(r.shard)?;
+    if with_upper {
+        e.key("spectral_upper")?;
+        e.num(r.spectral_upper)?;
+    }
+    e.obj_end()
+}
+
+/// How the writer persists its manifest.
+enum Mode {
+    /// Single pretty JSON document written whole at `finalize`.
+    Legacy { records: Vec<RecordMeta> },
+    /// Append-only v3 frames, checkpointed every `chunk_records`.
+    Chunked {
+        frames: FrameWriter,
+        chunk_records: usize,
+        /// Records since the last checkpoint (arrival order).
+        pending: Vec<RecordMeta>,
+        /// Records covered by checkpoints + pending flushed chunks.
+        count: usize,
+        /// Next chunk sequence number.
+        seq: usize,
+        /// Reused frame-payload buffer — the O(chunk) working set.
+        payload: Vec<u8>,
+    },
 }
 
 /// Streaming dataset writer (single-writer; the pipeline funnels all
@@ -80,11 +186,12 @@ pub struct DatasetWriter {
     dir: PathBuf,
     file: BufWriter<File>,
     offset: u64,
-    records: Vec<RecordMeta>,
+    mode: Mode,
 }
 
 impl DatasetWriter {
-    /// Create `<dir>` (if needed) and open `eigs.bin` for writing.
+    /// Create `<dir>` (if needed) and open `eigs.bin` for writing, with
+    /// the legacy single-document manifest written at `finalize`.
     pub fn create(dir: &Path) -> Result<Self> {
         std::fs::create_dir_all(dir)
             .with_context(|| format!("creating {}", dir.display()))?;
@@ -93,7 +200,85 @@ impl DatasetWriter {
             dir: dir.to_path_buf(),
             file: BufWriter::new(file),
             offset: 0,
-            records: Vec::new(),
+            mode: Mode::Legacy {
+                records: Vec::new(),
+            },
+        })
+    }
+
+    /// Create a chunked (schema v3) dataset: the manifest is appended
+    /// frame by frame, fsync'd every `chunk_records` records, and
+    /// `config` is persisted up front in the header frame so a resumed
+    /// run can replay the exact same schedule.
+    pub fn create_chunked(dir: &Path, chunk_records: usize, config: &Value) -> Result<Self> {
+        if chunk_records == 0 {
+            return Err(anyhow!("chunk_records must be >= 1"));
+        }
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {}", dir.display()))?;
+        let file = File::create(dir.join("eigs.bin"))?;
+        let mut frames = FrameWriter::create(&dir.join("manifest.json"))?;
+        let mut payload = Vec::new();
+        {
+            let mut e = JsonEmitter::compact(&mut payload);
+            e.obj_start()?;
+            e.key("chunk_records")?;
+            e.usize_val(chunk_records)?;
+            e.key("config")?;
+            e.value(config)?;
+            e.key("format")?;
+            e.str_val("scsf-eigs-v3")?;
+            e.key("frame")?;
+            e.str_val("header")?;
+            e.key("schema_version")?;
+            e.usize_val(SCHEMA_VERSION)?;
+            e.obj_end()?;
+            e.finish()?;
+        }
+        payload.push(b'\n');
+        frames.write_frame(&payload)?;
+        frames.sync()?;
+        payload.clear();
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            file: BufWriter::new(file),
+            offset: 0,
+            mode: Mode::Chunked {
+                frames,
+                chunk_records,
+                pending: Vec::new(),
+                count: 0,
+                seq: 0,
+                payload,
+            },
+        })
+    }
+
+    /// Reopen a chunked dataset at a checkpointed resume point: both
+    /// files are truncated to the checkpoint's coverage (discarding any
+    /// torn tail) and writing continues where the checkpoint left off.
+    pub fn resume_chunked(dir: &Path, point: &ResumePoint) -> Result<Self> {
+        let eigs = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(dir.join("eigs.bin"))?;
+        eigs.set_len(point.eigs_bytes)?;
+        let mut eigs = eigs;
+        eigs.seek(SeekFrom::End(0))?;
+        let frames =
+            FrameWriter::open_append(&dir.join("manifest.json"), point.manifest_bytes)?;
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            file: BufWriter::new(eigs),
+            offset: point.eigs_bytes,
+            mode: Mode::Chunked {
+                frames,
+                chunk_records: point.chunk_records,
+                pending: Vec::new(),
+                count: point.records_done,
+                seq: point.next_seq,
+                payload: Vec::new(),
+            },
         })
     }
 
@@ -124,9 +309,9 @@ impl DatasetWriter {
                 self.file.write_all(&result.vectors[(i, j)].to_le_bytes())?;
             }
         }
-        self.offset += (3 * 8 + l * 8 + n * l * 8) as u64;
+        self.offset += record_len(n, l);
         let max_residual = result.residuals.iter().cloned().fold(0.0, f64::max);
-        self.records.push(RecordMeta {
+        let meta = RecordMeta {
             id,
             family: family.to_string(),
             shard,
@@ -143,58 +328,201 @@ impl DatasetWriter {
             deflated_cols: result.stats.deflated_cols,
             recycle_dim: result.stats.recycle_dim,
             recycle_matvecs: result.stats.recycle_matvecs,
-        });
+            spectral_upper: result.stats.spectral_upper,
+        };
+        match &mut self.mode {
+            Mode::Legacy { records } => records.push(meta),
+            Mode::Chunked {
+                pending,
+                chunk_records,
+                ..
+            } => {
+                pending.push(meta);
+                if pending.len() >= *chunk_records {
+                    self.flush_chunk()?;
+                }
+            }
+        }
         Ok(())
     }
 
-    /// Number of records written so far.
+    /// Durably commit pending records: fsync the eigenpair bytes they
+    /// index, then append (and fsync) a chunk frame plus a checkpoint
+    /// frame. Ordering matters — the checkpoint only ever names data
+    /// already on stable storage.
+    fn flush_chunk(&mut self) -> Result<()> {
+        let Mode::Chunked {
+            frames,
+            pending,
+            count,
+            seq,
+            payload,
+            ..
+        } = &mut self.mode
+        else {
+            unreachable!("flush_chunk on a legacy writer");
+        };
+        if pending.is_empty() {
+            return Ok(());
+        }
+        self.file.flush()?;
+        self.file.get_ref().sync_data()?;
+
+        payload.clear();
+        {
+            let mut e = JsonEmitter::compact(&mut *payload);
+            e.obj_start()?;
+            e.key("first")?;
+            e.usize_val(*count)?;
+            e.key("frame")?;
+            e.str_val("chunk")?;
+            e.key("records")?;
+            e.arr_start()?;
+            for r in pending.iter() {
+                emit_record(&mut e, r, true)?;
+            }
+            e.arr_end()?;
+            e.key("seq")?;
+            e.usize_val(*seq)?;
+            e.obj_end()?;
+            e.finish()?;
+        }
+        payload.push(b'\n');
+        frames.write_frame(payload)?;
+
+        *count += pending.len();
+        *seq += 1;
+        pending.clear();
+
+        payload.clear();
+        {
+            let mut e = JsonEmitter::compact(&mut *payload);
+            e.obj_start()?;
+            e.key("eigs_bytes")?;
+            e.u64_val(self.offset)?;
+            e.key("frame")?;
+            e.str_val("checkpoint")?;
+            e.key("records")?;
+            e.usize_val(*count)?;
+            e.obj_end()?;
+            e.finish()?;
+        }
+        payload.push(b'\n');
+        frames.write_frame(payload)?;
+        frames.sync()?;
+        Ok(())
+    }
+
+    /// Number of records this writer covers (including, on a resumed
+    /// writer, the checkpointed records it took over).
     pub fn len(&self) -> usize {
-        self.records.len()
+        match &self.mode {
+            Mode::Legacy { records } => records.len(),
+            Mode::Chunked { count, pending, .. } => count + pending.len(),
+        }
     }
 
     /// True if nothing has been written.
     pub fn is_empty(&self) -> bool {
-        self.records.is_empty()
+        self.len() == 0
     }
 
-    /// Flush data and write `manifest.json`. `extra` is merged into the
-    /// manifest root (the pipeline puts the run config + report there).
-    pub fn finalize(mut self, extra: Vec<(&str, Value)>) -> Result<Vec<RecordMeta>> {
+    /// Flush data and complete the manifest. `extra` is merged into the
+    /// manifest root / footer (the pipeline puts the run config +
+    /// report there). Returns the number of records covered.
+    ///
+    /// Legacy path: the manifest is streamed to a temp file, fsync'd,
+    /// and atomically renamed into place — a crash mid-finalize leaves
+    /// either the old manifest or the new one, never a torn hybrid.
+    pub fn finalize(mut self, extra: Vec<(&str, Value)>) -> Result<usize> {
         self.file.flush()?;
-        let mut recs: Vec<Value> = Vec::new();
-        // Manifest index is sorted by id for deterministic output.
-        self.records.sort_by_key(|r| r.id);
-        for r in &self.records {
-            recs.push(Value::obj(vec![
-                ("id", r.id.into()),
-                ("family", r.family.as_str().into()),
-                ("shard", r.shard.into()),
-                ("offset", r.offset.into()),
-                ("n", r.n.into()),
-                ("l", r.l.into()),
-                ("max_residual", r.max_residual.into()),
-                ("secs", r.secs.into()),
-                ("iterations", r.iterations.into()),
-                ("matvecs", r.matvecs.into()),
-                ("filter_matvecs", r.filter_matvecs.into()),
-                ("f32_matvecs", r.f32_matvecs.into()),
-                ("promotions", r.promotions.into()),
-                ("deflated_cols", r.deflated_cols.into()),
-                ("recycle_dim", r.recycle_dim.into()),
-                ("recycle_matvecs", r.recycle_matvecs.into()),
-            ]));
+        self.file.get_ref().sync_data()?;
+        match self.mode {
+            Mode::Legacy { mut records } => {
+                // Manifest index is sorted by id for deterministic output.
+                records.sort_by_key(|r| r.id);
+                // Root key set = base ∪ extra with extra overriding,
+                // emitted in BTreeMap (alphabetical) order — the same
+                // semantics the old tree builder had, minus the
+                // O(dataset) Value tree.
+                enum Root {
+                    Records,
+                    Val(Value),
+                }
+                let mut root: BTreeMap<String, Root> = BTreeMap::new();
+                root.insert("format".into(), Root::Val(Value::from("scsf-eigs-v1")));
+                root.insert(
+                    "schema_version".into(),
+                    Root::Val(LEGACY_SCHEMA_VERSION.into()),
+                );
+                root.insert("records".into(), Root::Records);
+                for (k, v) in extra {
+                    root.insert(k.to_string(), Root::Val(v));
+                }
+
+                let tmp = self.dir.join("manifest.json.tmp");
+                let out = BufWriter::new(File::create(&tmp)?);
+                let mut e = JsonEmitter::pretty(out);
+                e.obj_start()?;
+                for (k, entry) in &root {
+                    e.key(k)?;
+                    match entry {
+                        Root::Val(v) => e.value(v)?,
+                        Root::Records => {
+                            e.arr_start()?;
+                            for r in &records {
+                                emit_record(&mut e, r, false)?;
+                            }
+                            e.arr_end()?;
+                        }
+                    }
+                }
+                e.obj_end()?;
+                let out = e.finish()?;
+                let file = out.into_inner().map_err(|e| e.into_error())?;
+                file.sync_all()?;
+                drop(file);
+                std::fs::rename(&tmp, self.dir.join("manifest.json"))?;
+                // Make the rename itself durable where the platform
+                // allows directory fsync; best-effort elsewhere.
+                let _ = File::open(&self.dir).and_then(|d| d.sync_all());
+                Ok(records.len())
+            }
+            Mode::Chunked { .. } => {
+                self.flush_chunk()?;
+                let Mode::Chunked {
+                    mut frames,
+                    count,
+                    mut payload,
+                    ..
+                } = self.mode
+                else {
+                    unreachable!();
+                };
+                let mut root: BTreeMap<String, Value> = BTreeMap::new();
+                root.insert("complete".into(), Value::Bool(true));
+                root.insert("frame".into(), Value::from("footer"));
+                root.insert("records".into(), count.into());
+                for (k, v) in extra {
+                    root.insert(k.to_string(), v);
+                }
+                payload.clear();
+                {
+                    let mut e = JsonEmitter::compact(&mut payload);
+                    e.obj_start()?;
+                    for (k, v) in &root {
+                        e.key(k)?;
+                        e.value(v)?;
+                    }
+                    e.obj_end()?;
+                    e.finish()?;
+                }
+                payload.push(b'\n');
+                frames.write_frame(&payload)?;
+                frames.sync()?;
+                Ok(count)
+            }
         }
-        let mut root = vec![
-            ("format", Value::from("scsf-eigs-v1")),
-            ("schema_version", SCHEMA_VERSION.into()),
-            ("records", Value::Arr(recs)),
-        ];
-        root.extend(extra);
-        std::fs::write(
-            self.dir.join("manifest.json"),
-            Value::obj(root).to_string_pretty(),
-        )?;
-        Ok(self.records)
     }
 }
 
@@ -209,69 +537,130 @@ pub struct Record {
     pub vectors: crate::linalg::Mat,
 }
 
+/// One chunk frame's place in a v3 manifest (for `inspect`).
+#[derive(Debug, Clone)]
+pub struct ChunkInfo {
+    /// Chunk sequence number.
+    pub seq: usize,
+    /// Records in this chunk.
+    pub records: usize,
+    /// Dataset-order index of the chunk's first record.
+    pub first_record: usize,
+    /// Byte offset of the chunk frame in `manifest.json`.
+    pub manifest_offset: u64,
+}
+
+/// Physical layout of a chunked (v3) manifest.
+#[derive(Debug, Clone)]
+pub struct ChunkLayout {
+    /// Checkpoint cadence the dataset was written with.
+    pub chunk_records: usize,
+    /// Chunk frames, in file order.
+    pub chunks: Vec<ChunkInfo>,
+    /// Checkpoint frames seen.
+    pub checkpoints: usize,
+    /// A footer frame marked the dataset complete.
+    pub complete: bool,
+    /// Validated manifest prefix, in bytes.
+    pub manifest_valid_bytes: u64,
+    /// Bytes past the validated prefix (a torn tail; 0 when clean).
+    pub manifest_torn_bytes: u64,
+}
+
+fn read_record_at(
+    file: &mut BufReader<File>,
+    meta: &RecordMeta,
+) -> Result<Record> {
+    file.seek(SeekFrom::Start(meta.offset))?;
+    let mut u64buf = [0u8; 8];
+    let mut get_u64 = |f: &mut BufReader<File>| -> Result<u64> {
+        f.read_exact(&mut u64buf)?;
+        Ok(u64::from_le_bytes(u64buf))
+    };
+    let rid = get_u64(file)? as usize;
+    let n = get_u64(file)? as usize;
+    let l = get_u64(file)? as usize;
+    if rid != meta.id || n != meta.n || l != meta.l {
+        return Err(anyhow!("record header mismatch for id {}", meta.id));
+    }
+    let mut f64buf = [0u8; 8];
+    let mut values = Vec::with_capacity(l);
+    for _ in 0..l {
+        file.read_exact(&mut f64buf)?;
+        values.push(f64::from_le_bytes(f64buf));
+    }
+    let mut data = Vec::with_capacity(n * l);
+    for _ in 0..n * l {
+        file.read_exact(&mut f64buf)?;
+        data.push(f64::from_le_bytes(f64buf));
+    }
+    Ok(Record {
+        id: meta.id,
+        values,
+        vectors: crate::linalg::Mat::from_vec(n, l, data),
+    })
+}
+
+/// Read one record of `dir`'s `eigs.bin` straight from its manifest
+/// metadata — the resume path's seed loader. The caller got `meta`
+/// from [`scan_resumable`], so the bytes are checkpoint-covered; no
+/// reader index round-trip is needed (or possible: resume runs before
+/// the dataset is complete).
+pub fn read_record_direct(dir: &Path, meta: &RecordMeta) -> Result<Record> {
+    let mut file = BufReader::new(File::open(dir.join("eigs.bin"))?);
+    read_record_at(&mut file, meta)
+}
+
 /// Dataset reader.
 pub struct DatasetReader {
+    dir: PathBuf,
     file: BufReader<File>,
     index: Vec<RecordMeta>,
+    schema: usize,
+    layout: Option<ChunkLayout>,
 }
 
 impl DatasetReader {
     /// Open a dataset directory. Reads manifests up to
     /// [`SCHEMA_VERSION`] (a missing `schema_version` field means
     /// version 1); newer versions are rejected with an actionable
-    /// error rather than silently misread.
+    /// error rather than silently misread. Chunked (v3) manifests with
+    /// a torn tail open cleanly with the torn frames excluded — the
+    /// index covers exactly the checkpointed prefix.
     pub fn open(dir: &Path) -> Result<Self> {
-        let manifest = std::fs::read_to_string(dir.join("manifest.json"))?;
-        let v = json::parse(&manifest).map_err(|e| anyhow!("manifest: {e}"))?;
-        let version = v
-            .get("schema_version")
-            .and_then(Value::as_usize)
-            .unwrap_or(1);
-        if version > SCHEMA_VERSION {
-            return Err(anyhow!(
-                "dataset {} has manifest schema_version {version}, newer than this \
-                 build supports ({SCHEMA_VERSION}) — upgrade scsf or regenerate the \
-                 dataset with this version",
-                dir.display()
-            ));
-        }
-        let recs = v
-            .get("records")
-            .and_then(Value::as_arr)
-            .ok_or_else(|| anyhow!("manifest missing records"))?;
-        let mut index = Vec::new();
-        for r in recs {
-            let gu = |k: &str| r.get(k).and_then(Value::as_usize).unwrap_or(0);
-            index.push(RecordMeta {
-                id: gu("id"),
-                family: r
-                    .get("family")
-                    .and_then(Value::as_str)
-                    .unwrap_or("")
-                    .to_string(),
-                shard: gu("shard"),
-                offset: r.get("offset").and_then(Value::as_f64).unwrap_or(0.0) as u64,
-                n: gu("n"),
-                l: gu("l"),
-                max_residual: r.get("max_residual").and_then(Value::as_f64).unwrap_or(0.0),
-                secs: r.get("secs").and_then(Value::as_f64).unwrap_or(0.0),
-                iterations: gu("iterations"),
-                matvecs: gu("matvecs"),
-                filter_matvecs: gu("filter_matvecs"),
-                f32_matvecs: gu("f32_matvecs"),
-                promotions: gu("promotions"),
-                deflated_cols: gu("deflated_cols"),
-                recycle_dim: gu("recycle_dim"),
-                recycle_matvecs: gu("recycle_matvecs"),
-            });
-        }
+        let manifest_path = dir.join("manifest.json");
+        let (mut index, schema, layout) = match try_open_v3(&manifest_path)? {
+            Some((index, layout)) => (index, SCHEMA_VERSION, Some(layout)),
+            None => {
+                let text = std::fs::read_to_string(&manifest_path)?;
+                let (index, schema) = parse_legacy_manifest(&text, dir)?;
+                (index, schema, None)
+            }
+        };
+        index.sort_by_key(|r| r.id);
         let file = BufReader::new(File::open(dir.join("eigs.bin"))?);
-        Ok(Self { file, index })
+        Ok(Self {
+            dir: dir.to_path_buf(),
+            file,
+            index,
+            schema,
+            layout,
+        })
     }
 
     /// The record index (sorted by id).
     pub fn index(&self) -> &[RecordMeta] {
         &self.index
+    }
+
+    /// Manifest schema version this dataset was written with.
+    pub fn schema_version(&self) -> usize {
+        self.schema
+    }
+
+    /// Chunk/checkpoint layout — `Some` only for chunked (v3) datasets.
+    pub fn layout(&self) -> Option<&ChunkLayout> {
+        self.layout.as_ref()
     }
 
     /// Read the record with the given problem id.
@@ -282,35 +671,695 @@ impl DatasetReader {
             .find(|r| r.id == id)
             .ok_or_else(|| anyhow!("no record with id {id}"))?
             .clone();
-        self.file.seek(SeekFrom::Start(meta.offset))?;
+        read_record_at(&mut self.file, &meta)
+    }
+
+    /// A streaming pass over every record in storage order, reusing one
+    /// values/vectors buffer — O(record) memory however large the
+    /// dataset, with `skip_record` costing a seek rather than a read.
+    pub fn stream(&self) -> Result<RecordStream> {
+        let mut metas = self.index.clone();
+        metas.sort_by_key(|r| r.offset);
+        let file = BufReader::new(File::open(self.dir.join("eigs.bin"))?);
+        Ok(RecordStream {
+            file,
+            metas,
+            next: 0,
+            pos: 0,
+            values: Vec::new(),
+            vectors: Vec::new(),
+        })
+    }
+
+    /// Convert into a cheaply-cloneable shared handle whose cursors can
+    /// read concurrently from independent threads.
+    pub fn into_shared(self) -> SharedDataset {
+        SharedDataset {
+            eigs_path: self.dir.join("eigs.bin"),
+            index: Arc::new(self.index),
+        }
+    }
+}
+
+/// Try to read `path` as a v3 chunked manifest. `Ok(None)` means the
+/// file is not in frame format (legacy manifest); errors are reserved
+/// for I/O failures and version rejection.
+fn try_open_v3(path: &Path) -> Result<Option<(Vec<RecordMeta>, ChunkLayout)>> {
+    let mut scanner = FrameScanner::open(path)?;
+    let mut scratch = String::new();
+
+    // Header frame.
+    let Some(payload) = scanner.next_frame()? else {
+        return Ok(None);
+    };
+    let Some(header) = parse_frame_header(payload)? else {
+        return Ok(None);
+    };
+    if header.schema_version > SCHEMA_VERSION {
+        return Err(anyhow!(
+            "dataset manifest has schema_version {}, newer than this build \
+             supports ({SCHEMA_VERSION}) — upgrade scsf or regenerate the \
+             dataset with this version",
+            header.schema_version
+        ));
+    }
+
+    let mut index = Vec::new();
+    let mut layout = ChunkLayout {
+        chunk_records: header.chunk_records,
+        chunks: Vec::new(),
+        checkpoints: 0,
+        complete: false,
+        manifest_valid_bytes: scanner.valid_bytes(),
+        manifest_torn_bytes: 0,
+    };
+    // Records are only trusted once a checkpoint covers them.
+    let mut committed_records = 0usize;
+    let mut committed_chunks = 0usize;
+    loop {
+        let frame_start = scanner.valid_bytes();
+        let Some(payload) = scanner.next_frame()? else {
+            break;
+        };
+        let mut p = PullParser::new(payload);
+        let kind = frame_kind(&mut p, &mut scratch)
+            .map_err(|e| anyhow!("manifest frame: {e}"))?;
+        match kind {
+            FrameKind::Chunk { first, seq } => {
+                let n_before = index.len();
+                parse_chunk_records(payload, &mut index, &mut scratch)?;
+                layout.chunks.push(ChunkInfo {
+                    seq,
+                    records: index.len() - n_before,
+                    first_record: first,
+                    manifest_offset: frame_start,
+                });
+            }
+            FrameKind::Checkpoint { records } => {
+                layout.checkpoints += 1;
+                committed_records = records;
+                committed_chunks = layout.chunks.len();
+            }
+            FrameKind::Footer => layout.complete = true,
+            FrameKind::Header => {
+                return Err(anyhow!("manifest: duplicate header frame"));
+            }
+        }
+        layout.manifest_valid_bytes = scanner.valid_bytes();
+    }
+    layout.manifest_torn_bytes = scanner.file_len() - scanner.valid_bytes();
+    // Drop any chunk not yet covered by a checkpoint (its eigenpair
+    // bytes may not have survived the crash either).
+    if !layout.complete {
+        index.truncate(committed_records);
+        layout.chunks.truncate(committed_chunks);
+    }
+    Ok(Some((index, layout)))
+}
+
+struct FrameHeader {
+    schema_version: usize,
+    chunk_records: usize,
+}
+
+/// Parse a candidate header frame. `Ok(None)` = not a header (so: not a
+/// v3 manifest).
+fn parse_frame_header(payload: &[u8]) -> Result<Option<FrameHeader>> {
+    let mut p = PullParser::new(payload);
+    if !matches!(p.next_event(), Ok(Some(Event::ObjStart))) {
+        return Ok(None);
+    }
+    let mut is_header = false;
+    let mut schema_version = 0usize;
+    let mut chunk_records = 0usize;
+    loop {
+        match p.next_event() {
+            Ok(Some(Event::ObjEnd)) => break,
+            Ok(Some(Event::Key(k))) => {
+                if k.eq_str("frame") {
+                    match p.next_event() {
+                        Ok(Some(Event::Str(s))) => {
+                            is_header = s.eq_str("header");
+                        }
+                        _ => return Ok(None),
+                    }
+                } else if k.eq_str("schema_version") {
+                    match p.next_event() {
+                        Ok(Some(Event::Num(x))) => schema_version = x.round() as usize,
+                        _ => return Ok(None),
+                    }
+                } else if k.eq_str("chunk_records") {
+                    match p.next_event() {
+                        Ok(Some(Event::Num(x))) => chunk_records = x.round() as usize,
+                        _ => return Ok(None),
+                    }
+                } else if p.skip_value().is_err() {
+                    return Ok(None);
+                }
+            }
+            _ => return Ok(None),
+        }
+    }
+    if !is_header || chunk_records == 0 {
+        return Ok(None);
+    }
+    Ok(Some(FrameHeader {
+        schema_version,
+        chunk_records,
+    }))
+}
+
+enum FrameKind {
+    Header,
+    Chunk { first: usize, seq: usize },
+    Checkpoint { records: usize },
+    Footer,
+}
+
+/// Identify a frame and pull out its bookkeeping fields (a first pass
+/// that skips the record array; chunk records are parsed separately).
+fn frame_kind(p: &mut PullParser, scratch: &mut String) -> Result<FrameKind> {
+    match p.next_event().map_err(|e| anyhow!("{e}"))? {
+        Some(Event::ObjStart) => {}
+        _ => return Err(anyhow!("frame payload is not an object")),
+    }
+    let mut kind = String::new();
+    let mut first = 0usize;
+    let mut seq = 0usize;
+    let mut records = 0usize;
+    loop {
+        match p.next_event().map_err(|e| anyhow!("{e}"))? {
+            Some(Event::ObjEnd) => break,
+            Some(Event::Key(k)) => {
+                if k.eq_str("frame") {
+                    match p.next_event().map_err(|e| anyhow!("{e}"))? {
+                        Some(Event::Str(s)) => {
+                            kind = s.decode_into(scratch).map_err(|e| anyhow!("{e}"))?.to_string();
+                        }
+                        _ => return Err(anyhow!("frame field must be a string")),
+                    }
+                } else if k.eq_str("first") {
+                    match p.next_event().map_err(|e| anyhow!("{e}"))? {
+                        Some(Event::Num(x)) => first = x.round() as usize,
+                        _ => return Err(anyhow!("first must be numeric")),
+                    }
+                } else if k.eq_str("seq") {
+                    match p.next_event().map_err(|e| anyhow!("{e}"))? {
+                        Some(Event::Num(x)) => seq = x.round() as usize,
+                        _ => return Err(anyhow!("seq must be numeric")),
+                    }
+                } else if k.eq_str("records") {
+                    // In a checkpoint this is the covered-record count;
+                    // in a chunk it is the record array (skipped here).
+                    match p.next_event().map_err(|e| anyhow!("{e}"))? {
+                        Some(Event::Num(x)) => records = x.round() as usize,
+                        Some(Event::ArrStart) => {
+                            p.skip_container().map_err(|e| anyhow!("{e}"))?
+                        }
+                        _ => return Err(anyhow!("records must be numeric or an array")),
+                    }
+                } else {
+                    p.skip_value().map_err(|e| anyhow!("{e}"))?;
+                }
+            }
+            _ => return Err(anyhow!("malformed frame object")),
+        }
+    }
+    match kind.as_str() {
+        "header" => Ok(FrameKind::Header),
+        "chunk" => Ok(FrameKind::Chunk { first, seq }),
+        "checkpoint" => Ok(FrameKind::Checkpoint { records }),
+        "footer" => Ok(FrameKind::Footer),
+        other => Err(anyhow!("unknown frame kind {other:?}")),
+    }
+}
+
+/// Second pass over a chunk frame: stream its record array into `out`.
+fn parse_chunk_records(
+    payload: &[u8],
+    out: &mut Vec<RecordMeta>,
+    scratch: &mut String,
+) -> Result<()> {
+    let mut p = PullParser::new(payload);
+    match p.next_event().map_err(|e| anyhow!("chunk frame: {e}"))? {
+        Some(Event::ObjStart) => {}
+        _ => return Err(anyhow!("chunk frame is not an object")),
+    }
+    loop {
+        match p.next_event().map_err(|e| anyhow!("chunk frame: {e}"))? {
+            Some(Event::ObjEnd) => return Ok(()),
+            Some(Event::Key(k)) => {
+                if k.eq_str("records") {
+                    match p.next_event().map_err(|e| anyhow!("chunk frame: {e}"))? {
+                        Some(Event::ArrStart) => {}
+                        _ => return Err(anyhow!("chunk records must be an array")),
+                    }
+                    loop {
+                        // Peek: end of array or another record object.
+                        match p.next_event().map_err(|e| anyhow!("chunk frame: {e}"))? {
+                            Some(Event::ArrEnd) => break,
+                            Some(Event::ObjStart) => {
+                                // Re-enter record parsing with ObjStart
+                                // already consumed: collect fields here.
+                                let r = read_record_body(&mut p, scratch)?;
+                                out.push(r);
+                            }
+                            _ => return Err(anyhow!("chunk records must be objects")),
+                        }
+                    }
+                } else {
+                    p.skip_value().map_err(|e| anyhow!("chunk frame: {e}"))?;
+                }
+            }
+            _ => return Err(anyhow!("malformed chunk frame")),
+        }
+    }
+}
+
+/// Record-object field loop, for callers that already consumed the
+/// `ObjStart` (see [`read_record`] for the from-the-top variant).
+fn read_record_body(p: &mut PullParser, scratch: &mut String) -> Result<RecordMeta> {
+    let mut r = RecordMeta::default();
+    loop {
+        match p.next_event().map_err(|e| anyhow!("manifest: {e}"))? {
+            Some(Event::ObjEnd) => return Ok(r),
+            Some(Event::Key(k)) => read_record_field(p, &k, &mut r, scratch)?,
+            _ => return Err(anyhow!("manifest: malformed record object")),
+        }
+    }
+}
+
+/// Dispatch one record field by key.
+fn read_record_field(
+    p: &mut PullParser,
+    k: &crate::store::pull::RawStr,
+    r: &mut RecordMeta,
+    scratch: &mut String,
+) -> Result<()> {
+    if k.eq_str("family") {
+        match p.next_event().map_err(|e| anyhow!("manifest: {e}"))? {
+            Some(Event::Str(s)) => {
+                r.family = s
+                    .decode_into(scratch)
+                    .map_err(|e| anyhow!("manifest: {e}"))?
+                    .to_string();
+            }
+            _ => return Err(anyhow!("manifest: family must be a string")),
+        }
+        return Ok(());
+    }
+    let num = |p: &mut PullParser| -> Result<f64> {
+        match p.next_event().map_err(|e| anyhow!("manifest: {e}"))? {
+            Some(Event::Num(x)) => Ok(x),
+            _ => Err(anyhow!("manifest: record field must be numeric")),
+        }
+    };
+    // Same numeric conventions as the legacy tree reader: counters
+    // round, the byte offset truncates.
+    if k.eq_str("id") {
+        r.id = num(p)?.round() as usize;
+    } else if k.eq_str("shard") {
+        r.shard = num(p)?.round() as usize;
+    } else if k.eq_str("offset") {
+        r.offset = num(p)? as u64;
+    } else if k.eq_str("n") {
+        r.n = num(p)?.round() as usize;
+    } else if k.eq_str("l") {
+        r.l = num(p)?.round() as usize;
+    } else if k.eq_str("max_residual") {
+        r.max_residual = num(p)?;
+    } else if k.eq_str("secs") {
+        r.secs = num(p)?;
+    } else if k.eq_str("iterations") {
+        r.iterations = num(p)?.round() as usize;
+    } else if k.eq_str("matvecs") {
+        r.matvecs = num(p)?.round() as usize;
+    } else if k.eq_str("filter_matvecs") {
+        r.filter_matvecs = num(p)?.round() as usize;
+    } else if k.eq_str("f32_matvecs") {
+        r.f32_matvecs = num(p)?.round() as usize;
+    } else if k.eq_str("promotions") {
+        r.promotions = num(p)?.round() as usize;
+    } else if k.eq_str("deflated_cols") {
+        r.deflated_cols = num(p)?.round() as usize;
+    } else if k.eq_str("recycle_dim") {
+        r.recycle_dim = num(p)?.round() as usize;
+    } else if k.eq_str("recycle_matvecs") {
+        r.recycle_matvecs = num(p)?.round() as usize;
+    } else if k.eq_str("spectral_upper") {
+        r.spectral_upper = num(p)?;
+    } else {
+        p.skip_value().map_err(|e| anyhow!("manifest: {e}"))?;
+    }
+    Ok(())
+}
+
+/// Parse a legacy (v1/v2) single-document manifest with the pull parser
+/// — the whole document is in memory (it arrived as one JSON value) but
+/// no `Value` tree is built; records stream straight into the index.
+fn parse_legacy_manifest(text: &str, dir: &Path) -> Result<(Vec<RecordMeta>, usize)> {
+    let mut p = PullParser::new(text.as_bytes());
+    let mut scratch = String::new();
+    match p.next_event().map_err(|e| anyhow!("manifest: {e}"))? {
+        Some(Event::ObjStart) => {}
+        _ => return Err(anyhow!("manifest: root must be an object")),
+    }
+    let mut index = Vec::new();
+    let mut saw_records = false;
+    let mut version = 1usize;
+    loop {
+        match p.next_event().map_err(|e| anyhow!("manifest: {e}"))? {
+            Some(Event::ObjEnd) => break,
+            Some(Event::Key(k)) => {
+                if k.eq_str("records") {
+                    saw_records = true;
+                    match p.next_event().map_err(|e| anyhow!("manifest: {e}"))? {
+                        Some(Event::ArrStart) => {}
+                        _ => return Err(anyhow!("manifest: records must be an array")),
+                    }
+                    loop {
+                        match p.next_event().map_err(|e| anyhow!("manifest: {e}"))? {
+                            Some(Event::ArrEnd) => break,
+                            Some(Event::ObjStart) => {
+                                index.push(read_record_body(&mut p, &mut scratch)?);
+                            }
+                            _ => return Err(anyhow!("manifest: records must be objects")),
+                        }
+                    }
+                } else if k.eq_str("schema_version") {
+                    match p.next_event().map_err(|e| anyhow!("manifest: {e}"))? {
+                        Some(Event::Num(x)) => version = x.round() as usize,
+                        _ => return Err(anyhow!("manifest: schema_version must be numeric")),
+                    }
+                } else {
+                    p.skip_value().map_err(|e| anyhow!("manifest: {e}"))?;
+                }
+            }
+            _ => return Err(anyhow!("manifest: malformed root object")),
+        }
+    }
+    if version > SCHEMA_VERSION {
+        return Err(anyhow!(
+            "dataset {} has manifest schema_version {version}, newer than this \
+             build supports ({SCHEMA_VERSION}) — upgrade scsf or regenerate the \
+             dataset with this version",
+            dir.display()
+        ));
+    }
+    if !saw_records {
+        return Err(anyhow!("manifest missing records"));
+    }
+    Ok((index, version))
+}
+
+/// A borrowed view of one record during a streaming pass — valid until
+/// the next [`RecordStream::next_record`] call.
+#[derive(Debug)]
+pub struct RecordView<'a> {
+    /// Problem id.
+    pub id: usize,
+    /// Matrix dimension.
+    pub n: usize,
+    /// Number of eigenpairs.
+    pub l: usize,
+    /// Eigenvalues (ascending), borrowed from the stream's buffer.
+    pub values: &'a [f64],
+    /// Eigenvectors (`n × l` row-major), borrowed likewise.
+    pub vectors: &'a [f64],
+    /// The record's manifest entry.
+    pub meta: &'a RecordMeta,
+}
+
+/// Streaming record iterator over `eigs.bin` in storage order. One
+/// reused buffer pair regardless of dataset size; see
+/// [`DatasetReader::stream`].
+pub struct RecordStream {
+    file: BufReader<File>,
+    /// Index sorted by byte offset (storage order).
+    metas: Vec<RecordMeta>,
+    next: usize,
+    /// Current file position (to turn in-order reads into no-op seeks).
+    pos: u64,
+    values: Vec<f64>,
+    vectors: Vec<f64>,
+}
+
+impl RecordStream {
+    /// The next record's manifest entry, without reading its payload.
+    pub fn peek_meta(&self) -> Option<&RecordMeta> {
+        self.metas.get(self.next)
+    }
+
+    /// Skip the next record without reading its eigenvectors — O(1),
+    /// the read path pays a relative seek later.
+    pub fn skip_record(&mut self) {
+        self.next += 1;
+    }
+
+    /// Read the next record into the reused buffers and return a
+    /// borrowed view, or `None` past the last record.
+    pub fn next_record(&mut self) -> Result<Option<RecordView<'_>>> {
+        if self.next >= self.metas.len() {
+            return Ok(None);
+        }
+        let (id, n, l, offset) = {
+            let m = &self.metas[self.next];
+            (m.id, m.n, m.l, m.offset)
+        };
+        if self.pos != offset {
+            self.file
+                .seek_relative(offset as i64 - self.pos as i64)?;
+            self.pos = offset;
+        }
         let mut u64buf = [0u8; 8];
         let mut get_u64 = |f: &mut BufReader<File>| -> Result<u64> {
             f.read_exact(&mut u64buf)?;
             Ok(u64::from_le_bytes(u64buf))
         };
         let rid = get_u64(&mut self.file)? as usize;
-        let n = get_u64(&mut self.file)? as usize;
-        let l = get_u64(&mut self.file)? as usize;
-        if rid != id || n != meta.n || l != meta.l {
+        let rn = get_u64(&mut self.file)? as usize;
+        let rl = get_u64(&mut self.file)? as usize;
+        if rid != id || rn != n || rl != l {
             return Err(anyhow!("record header mismatch for id {id}"));
         }
+        self.values.resize(l, 0.0);
+        self.vectors.resize(n * l, 0.0);
         let mut f64buf = [0u8; 8];
-        let mut values = Vec::with_capacity(l);
-        for _ in 0..l {
+        for v in self.values.iter_mut() {
             self.file.read_exact(&mut f64buf)?;
-            values.push(f64::from_le_bytes(f64buf));
+            *v = f64::from_le_bytes(f64buf);
         }
-        let mut data = Vec::with_capacity(n * l);
-        for _ in 0..n * l {
+        for v in self.vectors.iter_mut() {
             self.file.read_exact(&mut f64buf)?;
-            data.push(f64::from_le_bytes(f64buf));
+            *v = f64::from_le_bytes(f64buf);
         }
-        Ok(Record {
+        self.pos = offset + record_len(n, l);
+        let meta = &self.metas[self.next];
+        self.next += 1;
+        Ok(Some(RecordView {
             id,
-            values,
-            vectors: crate::linalg::Mat::from_vec(n, l, data),
+            n,
+            l,
+            values: &self.values,
+            vectors: &self.vectors,
+            meta,
+        }))
+    }
+}
+
+/// A cheaply-cloneable dataset handle sharing one parsed index.
+/// Each [`SharedDataset::cursor`] opens its own file descriptor, so
+/// cursors on different threads read concurrently without locking.
+#[derive(Clone)]
+pub struct SharedDataset {
+    eigs_path: PathBuf,
+    index: Arc<Vec<RecordMeta>>,
+}
+
+impl SharedDataset {
+    /// Open a dataset directory directly into a shared handle.
+    pub fn open(dir: &Path) -> Result<Self> {
+        Ok(DatasetReader::open(dir)?.into_shared())
+    }
+
+    /// The shared record index (sorted by id).
+    pub fn index(&self) -> &[RecordMeta] {
+        &self.index
+    }
+
+    /// A new independent read cursor.
+    pub fn cursor(&self) -> Result<DatasetCursor> {
+        Ok(DatasetCursor {
+            file: BufReader::new(File::open(&self.eigs_path)?),
+            index: Arc::clone(&self.index),
         })
     }
+}
+
+/// One thread's read cursor into a [`SharedDataset`].
+pub struct DatasetCursor {
+    file: BufReader<File>,
+    index: Arc<Vec<RecordMeta>>,
+}
+
+impl DatasetCursor {
+    /// Read the record with the given problem id.
+    pub fn read(&mut self, id: usize) -> Result<Record> {
+        let meta = self
+            .index
+            .iter()
+            .find(|r| r.id == id)
+            .ok_or_else(|| anyhow!("no record with id {id}"))?
+            .clone();
+        read_record_at(&mut self.file, &meta)
+    }
+}
+
+/// Where a crashed chunked run can safely restart.
+#[derive(Debug, Clone)]
+pub struct ResumePoint {
+    /// `eigs.bin` length covered by the last checkpoint; both files are
+    /// truncated to their coverage before appending.
+    pub eigs_bytes: u64,
+    /// Validated `manifest.json` prefix ending at that checkpoint.
+    pub manifest_bytes: u64,
+    /// Checkpoint cadence from the header frame.
+    pub chunk_records: usize,
+    /// Records durably committed before the crash.
+    pub records_done: usize,
+    /// Sequence number the next chunk frame must carry.
+    pub next_seq: usize,
+}
+
+/// Everything [`scan_resumable`] learns about an interrupted run.
+#[derive(Debug, Clone)]
+pub struct ResumeScan {
+    /// The checkpointed restart point.
+    pub point: ResumePoint,
+    /// The generation config persisted in the header frame.
+    pub config: Value,
+    /// Committed records, in chunk (solve-arrival) order.
+    pub records: Vec<RecordMeta>,
+    /// A footer frame was found — the run already finished.
+    pub complete: bool,
+}
+
+/// Scan a chunked dataset directory for its resume point: validate the
+/// manifest's frame chain, stop at the first torn frame, and report the
+/// state as of the last checkpoint. Legacy datasets and manifests torn
+/// before the header are clean errors.
+pub fn scan_resumable(dir: &Path) -> Result<ResumeScan> {
+    let manifest_path = dir.join("manifest.json");
+    let mut scanner = FrameScanner::open(&manifest_path)
+        .with_context(|| format!("opening {}", manifest_path.display()))?;
+    let mut scratch = String::new();
+
+    let header_frame = scanner.next_frame()?.map(<[u8]>::to_vec);
+    let header = header_frame
+        .as_deref()
+        .and_then(|p| parse_frame_header(p).transpose())
+        .transpose()?;
+    let Some(header) = header else {
+        // Not a valid v3 header. A parseable legacy manifest gets the
+        // actionable message; anything else is torn beyond recovery.
+        let text = std::fs::read_to_string(&manifest_path).unwrap_or_default();
+        if json::parse(&text).is_ok() {
+            return Err(anyhow!(
+                "dataset {} was written without --chunk-records (legacy \
+                 schema <= {LEGACY_SCHEMA_VERSION} manifest); only chunked \
+                 (schema 3) datasets are resumable — regenerate with \
+                 --chunk-records to make runs resumable",
+                dir.display()
+            ));
+        }
+        return Err(anyhow!(
+            "dataset {} manifest is torn before its header frame; nothing \
+             checkpointed survives to resume from",
+            dir.display()
+        ));
+    };
+    if header.schema_version > SCHEMA_VERSION {
+        return Err(anyhow!(
+            "dataset manifest has schema_version {}, newer than this build \
+             supports ({SCHEMA_VERSION}) — upgrade scsf to resume it",
+            header.schema_version
+        ));
+    }
+    // Re-extract the config from the header frame (small, parse once).
+    let header_text = std::str::from_utf8(header_frame.as_deref().unwrap())
+        .map_err(|_| anyhow!("manifest header frame is not UTF-8"))?;
+    let header_val = json::parse(header_text).map_err(|e| anyhow!("manifest header: {e}"))?;
+    let config = header_val
+        .get("config")
+        .cloned()
+        .ok_or_else(|| anyhow!("manifest header frame carries no config; cannot resume"))?;
+
+    let mut records: Vec<RecordMeta> = Vec::new();
+    let mut chunks_seen = 0usize;
+    let mut complete = false;
+    // State as of the last checkpoint — the only state we trust.
+    let mut committed = ResumePoint {
+        eigs_bytes: 0,
+        manifest_bytes: scanner.valid_bytes(),
+        chunk_records: header.chunk_records,
+        records_done: 0,
+        next_seq: 0,
+    };
+    while let Some(payload) = scanner.next_frame()? {
+        let mut p = PullParser::new(payload);
+        match frame_kind(&mut p, &mut scratch).map_err(|e| anyhow!("manifest frame: {e}"))? {
+            FrameKind::Chunk { seq, .. } => {
+                parse_chunk_records(payload, &mut records, &mut scratch)?;
+                chunks_seen = chunks_seen.max(seq + 1);
+            }
+            FrameKind::Checkpoint {
+                records: records_done,
+            } => {
+                // The payload carries eigs_bytes too; re-read it.
+                let text = std::str::from_utf8(payload)
+                    .map_err(|_| anyhow!("checkpoint frame is not UTF-8"))?;
+                let v = json::parse(text).map_err(|e| anyhow!("checkpoint frame: {e}"))?;
+                let eigs_bytes = v
+                    .get("eigs_bytes")
+                    .and_then(Value::as_f64)
+                    .ok_or_else(|| anyhow!("checkpoint frame missing eigs_bytes"))?
+                    as u64;
+                committed = ResumePoint {
+                    eigs_bytes,
+                    manifest_bytes: scanner.valid_bytes(),
+                    chunk_records: header.chunk_records,
+                    records_done,
+                    next_seq: chunks_seen,
+                };
+            }
+            FrameKind::Footer => complete = true,
+            FrameKind::Header => {
+                return Err(anyhow!("manifest: duplicate header frame"));
+            }
+        }
+    }
+    records.truncate(committed.records_done);
+
+    // The checkpointed eigenpair bytes must actually exist; a shorter
+    // eigs.bin means the data file was damaged beyond the tail.
+    let eigs_len = std::fs::metadata(dir.join("eigs.bin"))
+        .with_context(|| format!("dataset {} has no eigs.bin", dir.display()))?
+        .len();
+    if eigs_len < committed.eigs_bytes {
+        return Err(anyhow!(
+            "eigs.bin is {eigs_len} bytes but the last checkpoint covers {} — \
+             the data file was truncated below checkpointed state and cannot \
+             be resumed",
+            committed.eigs_bytes
+        ));
+    }
+
+    Ok(ResumeScan {
+        point: committed,
+        config,
+        records,
+        complete,
+    })
 }
 
 #[cfg(test)]
@@ -336,29 +1385,40 @@ mod tests {
                 deflated_cols: 4,
                 recycle_dim: 9,
                 recycle_matvecs: 21,
+                spectral_upper: 8.75,
                 ..Default::default()
             },
         }
     }
 
+    fn tmpdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "scsf_ds_{tag}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
     #[test]
     fn roundtrip_multiple_records() {
-        let dir = std::env::temp_dir().join(format!("scsf_ds_{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
+        let dir = tmpdir("roundtrip");
         let mut w = DatasetWriter::create(&dir).unwrap();
         let r0 = fake_result(10, 3, 1);
         let r1 = fake_result(10, 3, 2);
         // Write out of id order to exercise the index sort.
         w.write_record(1, 1, "helmholtz", &r1).unwrap();
         w.write_record(0, 0, "poisson", &r0).unwrap();
-        let recs = w
+        let count = w
             .finalize(vec![("note", Value::from("test"))])
             .unwrap();
-        assert_eq!(recs.len(), 2);
-        assert_eq!(recs[0].id, 0);
+        assert_eq!(count, 2);
 
         let mut reader = DatasetReader::open(&dir).unwrap();
         assert_eq!(reader.index().len(), 2);
+        assert_eq!(reader.schema_version(), LEGACY_SCHEMA_VERSION);
+        assert!(reader.layout().is_none());
         // Shard and family assignments round-trip through the manifest.
         assert_eq!(reader.index()[0].shard, 0);
         assert_eq!(reader.index()[1].shard, 1);
@@ -377,13 +1437,14 @@ mod tests {
             assert_eq!(rec.values, want.values);
             assert_eq!(rec.vectors, want.vectors);
         }
+        // No temp file left behind by the atomic-rename finalize.
+        assert!(!dir.join("manifest.json.tmp").exists());
         let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
     fn manifest_carries_extra_fields() {
-        let dir = std::env::temp_dir().join(format!("scsf_ds2_{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
+        let dir = tmpdir("extra");
         let mut w = DatasetWriter::create(&dir).unwrap();
         w.write_record(0, 0, "poisson", &fake_result(6, 2, 3)).unwrap();
         w.finalize(vec![("config", Value::from("xyz"))]).unwrap();
@@ -396,15 +1457,17 @@ mod tests {
         );
         assert_eq!(
             v.get("schema_version").and_then(Value::as_usize),
-            Some(SCHEMA_VERSION)
+            Some(LEGACY_SCHEMA_VERSION)
         );
+        // The legacy manifest does not gain the v3-only field.
+        let rec = &v.get("records").unwrap().as_arr().unwrap()[0];
+        assert!(rec.get("spectral_upper").is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]
     fn version1_manifests_still_read_and_future_versions_are_rejected() {
-        let dir = std::env::temp_dir().join(format!("scsf_ds_ver_{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
+        let dir = tmpdir("ver");
         let mut w = DatasetWriter::create(&dir).unwrap();
         let r = fake_result(4, 2, 9);
         w.write_record(0, 0, "poisson", &r).unwrap();
@@ -423,6 +1486,7 @@ mod tests {
         std::fs::write(dir.join("manifest.json"), v1).unwrap();
         let mut reader = DatasetReader::open(&dir).unwrap();
         assert_eq!(reader.index()[0].family, "");
+        assert_eq!(reader.schema_version(), 1);
         let rec = reader.read(0).unwrap();
         assert_eq!(rec.values, r.values);
 
@@ -444,14 +1508,184 @@ mod tests {
 
     #[test]
     fn unknown_id_is_an_error() {
-        let dir = std::env::temp_dir().join(format!("scsf_ds3_{}", std::process::id()));
-        let _ = std::fs::remove_dir_all(&dir);
+        let dir = tmpdir("unknown");
         let mut w = DatasetWriter::create(&dir).unwrap();
         w.write_record(5, 2, "vibration", &fake_result(4, 1, 4)).unwrap();
         w.finalize(vec![]).unwrap();
         let mut r = DatasetReader::open(&dir).unwrap();
         assert!(r.read(99).is_err());
         assert!(r.read(5).is_ok());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn chunked_roundtrip_matches_legacy_reads() {
+        let dir = tmpdir("chunked");
+        let cfg = Value::obj(vec![("grid", 8usize.into())]);
+        let mut w = DatasetWriter::create_chunked(&dir, 2, &cfg).unwrap();
+        let results: Vec<EigResult> = (0..5).map(|i| fake_result(6, 2, 40 + i)).collect();
+        for (i, r) in results.iter().enumerate() {
+            w.write_record(i, i % 2, "poisson", r).unwrap();
+        }
+        let count = w.finalize(vec![("note", Value::from("done"))]).unwrap();
+        assert_eq!(count, 5);
+
+        let mut reader = DatasetReader::open(&dir).unwrap();
+        assert_eq!(reader.schema_version(), SCHEMA_VERSION);
+        assert_eq!(reader.index().len(), 5);
+        assert_eq!(reader.index()[0].spectral_upper, 8.75);
+        let layout = reader.layout().unwrap().clone();
+        assert_eq!(layout.chunk_records, 2);
+        // 5 records at cadence 2 → chunks of 2, 2, 1 (finalize flush).
+        assert_eq!(layout.chunks.len(), 3);
+        assert_eq!(
+            layout.chunks.iter().map(|c| c.records).collect::<Vec<_>>(),
+            vec![2, 2, 1]
+        );
+        assert_eq!(layout.checkpoints, 3);
+        assert!(layout.complete);
+        assert_eq!(layout.manifest_torn_bytes, 0);
+        for (i, want) in results.iter().enumerate() {
+            let rec = reader.read(i).unwrap();
+            assert_eq!(rec.values, want.values);
+            assert_eq!(rec.vectors, want.vectors);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stream_yields_records_in_storage_order_with_skips() {
+        let dir = tmpdir("stream");
+        let mut w = DatasetWriter::create(&dir).unwrap();
+        let results: Vec<EigResult> = (0..4).map(|i| fake_result(5, 2, 60 + i)).collect();
+        for (i, r) in results.iter().enumerate() {
+            w.write_record(i, 0, "poisson", r).unwrap();
+        }
+        w.finalize(vec![]).unwrap();
+
+        let reader = DatasetReader::open(&dir).unwrap();
+        let mut s = reader.stream().unwrap();
+        let mut seen = Vec::new();
+        // Skip record 1 to exercise the seek path.
+        let v0 = s.next_record().unwrap().unwrap();
+        assert_eq!(v0.id, 0);
+        assert_eq!(v0.values, results[0].values.as_slice());
+        seen.push(v0.id);
+        assert_eq!(s.peek_meta().unwrap().id, 1);
+        s.skip_record();
+        while let Some(v) = s.next_record().unwrap() {
+            assert_eq!(v.values.len(), v.l);
+            assert_eq!(v.vectors.len(), v.n * v.l);
+            seen.push(v.id);
+        }
+        assert_eq!(seen, vec![0, 2, 3]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn shared_cursors_read_concurrently() {
+        let dir = tmpdir("shared");
+        let mut w = DatasetWriter::create(&dir).unwrap();
+        let results: Vec<EigResult> = (0..6).map(|i| fake_result(5, 2, 80 + i)).collect();
+        for (i, r) in results.iter().enumerate() {
+            w.write_record(i, 0, "poisson", r).unwrap();
+        }
+        w.finalize(vec![]).unwrap();
+
+        let shared = SharedDataset::open(&dir).unwrap();
+        std::thread::scope(|scope| {
+            for t in 0..2 {
+                let shared = shared.clone();
+                let results = &results;
+                scope.spawn(move || {
+                    let mut cur = shared.cursor().unwrap();
+                    // One thread reads forward, the other backward, so
+                    // the cursors interleave on different offsets.
+                    for i in 0..results.len() {
+                        let id = if t == 0 { i } else { results.len() - 1 - i };
+                        let rec = cur.read(id).unwrap();
+                        assert_eq!(rec.values, results[id].values);
+                        assert_eq!(rec.vectors, results[id].vectors);
+                    }
+                });
+            }
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scan_resumable_recovers_the_last_checkpoint_from_a_torn_manifest() {
+        let dir = tmpdir("resume_scan");
+        let cfg = Value::obj(vec![("seed", 11usize.into())]);
+        let mut w = DatasetWriter::create_chunked(&dir, 2, &cfg).unwrap();
+        let results: Vec<EigResult> = (0..6).map(|i| fake_result(4, 2, 100 + i)).collect();
+        for (i, r) in results.iter().enumerate() {
+            w.write_record(i, 0, "poisson", r).unwrap();
+        }
+        // Drop without finalize: three chunks of two are checkpointed,
+        // no footer.
+        drop(w);
+
+        let full = std::fs::read(dir.join("manifest.json")).unwrap();
+        let scan = scan_resumable(&dir).unwrap();
+        assert!(!scan.complete);
+        assert_eq!(scan.point.records_done, 6);
+        assert_eq!(scan.point.next_seq, 3);
+        assert_eq!(scan.records.len(), 6);
+        assert_eq!(scan.config.get("seed").and_then(Value::as_usize), Some(11));
+
+        // Tear the manifest mid-way through the last chunk frame: the
+        // scan must fall back to the previous checkpoint.
+        std::fs::write(dir.join("manifest.json"), &full[..full.len() - 7]).unwrap();
+        let scan = scan_resumable(&dir).unwrap();
+        assert_eq!(scan.point.records_done, 4);
+        assert_eq!(scan.point.next_seq, 2);
+        assert_eq!(scan.records.len(), 4);
+        assert_eq!(scan.records.last().unwrap().id, 3);
+        // The reader agrees: only checkpointed records are indexed.
+        let reader = DatasetReader::open(&dir).unwrap();
+        assert_eq!(reader.index().len(), 4);
+        assert!(reader.layout().unwrap().manifest_torn_bytes > 0);
+
+        // Legacy datasets are a clean, actionable error.
+        let legacy = tmpdir("resume_legacy");
+        let mut w = DatasetWriter::create(&legacy).unwrap();
+        w.write_record(0, 0, "poisson", &results[0]).unwrap();
+        w.finalize(vec![]).unwrap();
+        let err = scan_resumable(&legacy).unwrap_err().to_string();
+        assert!(err.contains("--chunk-records"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&legacy);
+    }
+
+    #[test]
+    fn resumed_writer_continues_where_the_checkpoint_left_off() {
+        let dir = tmpdir("resume_write");
+        let cfg = Value::obj(vec![("seed", 1usize.into())]);
+        let results: Vec<EigResult> = (0..5).map(|i| fake_result(4, 2, 200 + i)).collect();
+
+        let mut w = DatasetWriter::create_chunked(&dir, 2, &cfg).unwrap();
+        for (i, r) in results.iter().enumerate().take(4) {
+            w.write_record(i, 0, "poisson", r).unwrap();
+        }
+        drop(w); // crash: 4 records checkpointed, none pending
+
+        let scan = scan_resumable(&dir).unwrap();
+        assert_eq!(scan.point.records_done, 4);
+        let mut w = DatasetWriter::resume_chunked(&dir, &scan.point).unwrap();
+        assert_eq!(w.len(), 4);
+        w.write_record(4, 0, "poisson", &results[4]).unwrap();
+        let count = w.finalize(vec![]).unwrap();
+        assert_eq!(count, 5);
+
+        let mut reader = DatasetReader::open(&dir).unwrap();
+        assert_eq!(reader.index().len(), 5);
+        assert!(reader.layout().unwrap().complete);
+        for (i, want) in results.iter().enumerate() {
+            let rec = reader.read(i).unwrap();
+            assert_eq!(rec.values, want.values);
+            assert_eq!(rec.vectors, want.vectors);
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -223,6 +223,11 @@ pub struct GenReport {
     /// live in each run's [`ShardReport::cold_starts`] — different
     /// unit, hence the different name.)
     pub cold_runs: usize,
+    /// Records taken over from a checkpointed earlier run (`--resume`);
+    /// 0 for uninterrupted runs. Their solve work is counted in the
+    /// totals above (the report describes the dataset, not one process
+    /// lifetime).
+    pub resumed_records: usize,
     /// Seam reports of the global order (empty for shard scope).
     pub boundaries: Vec<Boundary>,
     /// Per-family rollup, one entry per family spec in generation
@@ -264,6 +269,7 @@ impl GenReport {
             ("sort_quality", self.sort_quality.into()),
             ("warm_handoffs", self.warm_handoffs.into()),
             ("cold_runs", self.cold_runs.into()),
+            ("resumed_records", self.resumed_records.into()),
             (
                 "boundaries",
                 Value::Arr(self.boundaries.iter().map(Boundary::to_json).collect()),
@@ -329,6 +335,7 @@ mod tests {
         assert_eq!(v.get("sort_quality").and_then(Value::as_f64), Some(2.25));
         assert!(v.get("signature_secs").is_some());
         assert!(v.get("schedule_secs").is_some());
+        assert_eq!(v.get("resumed_records").and_then(Value::as_usize), Some(0));
         assert!(v.get("boundaries").and_then(Value::as_arr).is_some());
         assert!(v.get("families").and_then(Value::as_arr).is_some());
     }

@@ -20,7 +20,7 @@
 //! over a family's signatures needs all of that family's signatures.
 
 use super::config::{Backend, GenConfig, ResolvedFamily};
-use super::dataset::DatasetWriter;
+use super::dataset::{self, DatasetWriter, RecordMeta, ResumePoint};
 use super::metrics::{FamilyReport, GenReport, ShardReport};
 use super::scheduler::{self, Schedule, SortScope};
 use crate::anyhow;
@@ -139,10 +139,38 @@ struct RunPlan {
     tol: f64,
     /// Problems in solve order.
     problems: Vec<Problem>,
+    /// Leading problems of the solve order already on disk from an
+    /// interrupted run (crash-resume; 0 for a fresh generation). The
+    /// worker re-enters the chain at `problems[skip]`.
+    skip: usize,
+    /// Warm chain state re-read from the run's last checkpointed
+    /// record (crash-resume with `warm_start: true` only) — adopted in
+    /// place of the within-run chaining the interrupted process had
+    /// built up, so the resumed solves match the uninterrupted ones
+    /// bit for bit.
+    seed: Option<WarmStart>,
     /// Receive the predecessor run's tail eigenpairs before solving.
     handoff_rx: Option<Receiver<Handoff>>,
     /// Publish this run's tail eigenpairs for the successor.
     handoff_tx: Option<SyncSender<Handoff>>,
+}
+
+/// Pre-computed crash-resume state for [`run_pipeline`], built by
+/// [`resume_dataset_with_registry`] from a [`dataset::scan_resumable`]
+/// pass plus a deterministic schedule replay.
+struct ResumeInfo {
+    /// Durable state of the interrupted run (the writer reopens the
+    /// dataset exactly at this checkpoint, truncating any torn tail).
+    point: ResumePoint,
+    /// Per run: how many leading problems of its solve order are
+    /// already covered by a checkpoint.
+    skips: Vec<usize>,
+    /// Per run: warm chain state re-read from its last completed
+    /// record (`None` for untouched runs or `warm_start: false`).
+    /// Behind a mutex because the scheduler thread takes them.
+    seeds: Mutex<Vec<Option<WarmStart>>>,
+    /// Checkpoint-covered records in arrival order (report prefill).
+    completed: Vec<RecordMeta>,
 }
 
 /// Scheduler-stage outcome recorded into the report.
@@ -188,6 +216,194 @@ pub fn generate_dataset_with_registry(
     out_dir: &Path,
     registry: &FamilyRegistry,
 ) -> Result<GenReport> {
+    run_pipeline(cfg, out_dir, registry, None)
+}
+
+/// Resume an interrupted chunked generation run in `dir` using the
+/// built-in family registry. See [`resume_dataset_with_registry`].
+pub fn resume_dataset(dir: &Path) -> Result<GenReport> {
+    resume_dataset_with_registry(dir, &FamilyRegistry::builtin())
+}
+
+/// Resume an interrupted chunked (schema-3) generation run: recover
+/// the last durable checkpoint from `dir`'s manifest (via
+/// [`dataset::scan_resumable`]), replay the deterministic schedule
+/// from the stored config, verify every checkpointed record sits where that
+/// schedule put it, then re-enter the pipeline at the first missing
+/// record of each run — re-seeding each partially-complete run's warm
+/// chain from its last completed record so the remaining solves are
+/// bit-for-bit identical to an uninterrupted run's (`eigs.bin` record
+/// bytes and manifest record fields, minus arrival-dependent `offset`
+/// and wall-clock `secs`).
+///
+/// Only `recycling: off` datasets are resumable — a deflation basis
+/// is chain state that records don't store. Wall-clock report rollups
+/// (`*_secs`, `*_mflops`, `degree_hist`) cover the new work only;
+/// counter totals fold the checkpointed records back in, and
+/// [`GenReport::resumed_records`] says how many were taken over.
+pub fn resume_dataset_with_registry(dir: &Path, registry: &FamilyRegistry) -> Result<GenReport> {
+    let scan = dataset::scan_resumable(dir)?;
+    if scan.complete {
+        return Err(anyhow!(
+            "dataset {} is already complete (footer present); nothing to resume",
+            dir.display()
+        ));
+    }
+    let cfg = GenConfig::from_json(&scan.config.to_string_compact())?;
+    if cfg.recycling != Recycling::Off {
+        return Err(anyhow!(
+            "dataset {} was generated with recycling \"deflate\", whose chain state \
+             (the deflation basis) is not stored in records — only recycling \"off\" \
+             datasets are resumable",
+            dir.display()
+        ));
+    }
+    let resolved = cfg.resolve(registry)?;
+    let n = cfg.n_problems();
+    // Replay the schedule the interrupted process ran: regenerate the
+    // signatures (matrices are dropped immediately — this pass is
+    // keys-only) and re-derive each run's solve order from them.
+    let keyed = cfg.sort != SortMethod::None;
+    let mut key_slots: Vec<Option<Vec<f64>>> = (0..n).map(|_| None).collect();
+    {
+        let mut engine = SignatureEngine::new(cfg.sort);
+        generate_in_order(&resolved, cfg.seed, |_fam, p| {
+            key_slots[p.id] = engine.tagged_signature(&p).map(|s| s.key);
+            true
+        })?;
+    }
+    let keys: Option<Vec<Vec<f64>>> =
+        keyed.then(|| key_slots.into_iter().map(|k| k.unwrap()).collect());
+    let groups = cfg.family_groups(&resolved);
+    let orders = replay_orders(&cfg, keys.as_deref(), n, &groups)?;
+    let n_runs = orders.len();
+
+    // Checkpointed records arrive in manifest order; per-sender FIFO
+    // through the bounded result channel means each run's records land
+    // in its solve order — so per run they must form a prefix of the
+    // replayed order, or the dataset wasn't produced by this config.
+    let mut per_run: Vec<Vec<usize>> = vec![Vec::new(); n_runs];
+    for rec in &scan.records {
+        if rec.shard >= n_runs {
+            return Err(anyhow!(
+                "dataset {}: record {} claims run {} but the config lays out {} runs \
+                 — manifest inconsistent with its stored config; cannot resume",
+                dir.display(),
+                rec.id,
+                rec.shard,
+                n_runs
+            ));
+        }
+        per_run[rec.shard].push(rec.id);
+    }
+    let mut skips = vec![0usize; n_runs];
+    let mut seeds: Vec<Option<WarmStart>> = (0..n_runs).map(|_| None).collect();
+    for (r, done) in per_run.iter().enumerate() {
+        let order = &orders[r];
+        if done.len() > order.len() || done[..] != order[..done.len()] {
+            return Err(anyhow!(
+                "dataset {}: run {r}'s checkpointed records are inconsistent with its \
+                 deterministic schedule (expected a prefix of {:?}, found {:?}) — the \
+                 config or seed changed, or the manifest was edited; cannot resume",
+                dir.display(),
+                order,
+                done
+            ));
+        }
+        skips[r] = done.len();
+        if cfg.warm_start && !done.is_empty() {
+            // Re-create the chain state the interrupted process held
+            // after this run's last checkpointed solve. Also built for
+            // fully-complete runs: their worker republishes it as the
+            // successor's boundary handoff.
+            let last = *done.last().unwrap();
+            let meta = scan
+                .records
+                .iter()
+                .find(|m| m.shard == r && m.id == last)
+                .expect("last completed id comes from this run's records");
+            let rec = dataset::read_record_direct(dir, meta)?;
+            seeds[r] = Some(WarmStart {
+                values: rec.values,
+                vectors: rec.vectors,
+                upper: (meta.spectral_upper > 0.0).then_some(meta.spectral_upper),
+                recycle: None,
+            });
+        }
+    }
+    let info = ResumeInfo {
+        point: scan.point,
+        skips,
+        seeds: Mutex::new(seeds),
+        completed: scan.records,
+    };
+    run_pipeline(&cfg, dir, registry, Some(info))
+}
+
+/// Re-derive each run's solve order from the signatures alone — the
+/// same per-scope computation the live scheduler stage performs, so
+/// resume's replay can never drift from it. Returns one id order per
+/// run, indexed by run.
+fn replay_orders(
+    cfg: &GenConfig,
+    keys: Option<&[Vec<f64>]>,
+    n: usize,
+    groups: &[scheduler::FamilyGroup],
+) -> Result<Vec<Vec<usize>>> {
+    let (_, run_spans) = scheduler::run_layout(n, cfg.shards, groups);
+    let handoff_threshold = if cfg.warm_start {
+        cfg.handoff_threshold
+    } else {
+        None
+    };
+    match cfg.sort_scope {
+        SortScope::Shard => {
+            let mut scratch = crate::sort::greedy::GreedyScratch::default();
+            let mut order_buf: Vec<usize> = Vec::new();
+            let mut orders = Vec::with_capacity(run_spans.len());
+            for span in &run_spans {
+                let span_keys = keys.map(|k| &k[span.start..span.end]);
+                let (order, _) = scheduler::order_chunk(
+                    span_keys,
+                    span.start,
+                    span.end - span.start,
+                    &mut scratch,
+                    &mut order_buf,
+                )?;
+                orders.push(order);
+            }
+            Ok(orders)
+        }
+        SortScope::Global => {
+            let schedule = scheduler::build_schedule(
+                keys,
+                n,
+                SortScope::Global,
+                cfg.shards,
+                handoff_threshold,
+                groups,
+            )?;
+            let mut orders = vec![Vec::new(); schedule.runs.len()];
+            for run in schedule.runs {
+                orders[run.index] = run.order;
+            }
+            Ok(orders)
+        }
+    }
+}
+
+/// The five-stage pipeline itself, shared by fresh generation
+/// ([`generate_dataset_with_registry`], `resume: None`) and
+/// crash-resume ([`resume_dataset_with_registry`]). With a
+/// [`ResumeInfo`], the writer reopens the dataset at its checkpoint
+/// and each solve worker skips its run's checkpointed prefix.
+fn run_pipeline(
+    cfg: &GenConfig,
+    out_dir: &Path,
+    registry: &FamilyRegistry,
+    resume: Option<ResumeInfo>,
+) -> Result<GenReport> {
+    let resume_ref = resume.as_ref();
     let resolved = cfg.resolve(registry)?;
     let n = cfg.n_problems();
     assert!(n >= 1);
@@ -240,7 +456,11 @@ pub fn generate_dataset_with_registry(
     };
 
     let resolved = &resolved;
-    let writer_out: Result<(DatasetWriter, f64, usize, Vec<FamilyAccum>)> =
+    // The config echo, needed up front by the chunked writer (header
+    // frame) and again at finalize.
+    let config_value =
+        crate::util::json::parse(&cfg.to_json()).expect("config serializes to valid JSON");
+    let writer_out: Result<(DatasetWriter, f64, usize, usize, Vec<FamilyAccum>)> =
         std::thread::scope(|scope| {
             // ---- Stage 1 · producer: parameters → operators -----------
             let producer_err = &producer_err;
@@ -344,13 +564,24 @@ pub fn generate_dataset_with_registry(
                         )
                     })
                 };
-                let make_plan = |index: usize, group: usize, problems: Vec<Problem>| RunPlan {
-                    index,
-                    family: resolved[group].name.clone(),
-                    tol: resolved[group].tol,
-                    problems,
-                    handoff_rx: None,
-                    handoff_tx: None,
+                let make_plan = |index: usize, group: usize, problems: Vec<Problem>| {
+                    // Crash-resume: each run knows how much of its
+                    // solve order is already checkpointed, and takes
+                    // the warm seed re-read from its last record.
+                    let (skip, seed) = match resume_ref {
+                        Some(ri) => (ri.skips[index], ri.seeds.lock().unwrap()[index].take()),
+                        None => (0, None),
+                    };
+                    RunPlan {
+                        index,
+                        family: resolved[group].name.clone(),
+                        tol: resolved[group].tol,
+                        problems,
+                        skip,
+                        seed,
+                        handoff_rx: None,
+                        handoff_tx: None,
+                    }
                 };
                 match cfg.sort_scope {
                     SortScope::Shard => {
@@ -511,10 +742,13 @@ pub fn generate_dataset_with_registry(
                 let res_tx = res_tx.clone();
                 let shard_stats = &shard_stats;
                 let handle = scope.spawn(move || -> Result<()> {
-                    let plan = match plan_rx.recv() {
+                    let mut plan = match plan_rx.recv() {
                         Ok(p) => p,
                         Err(_) => return Ok(()), // scheduler aborted
                     };
+                    let n_probs = plan.problems.len();
+                    let skip = plan.skip.min(n_probs);
+                    let mut seed = plan.seed.take();
                     let mut backend = make_backend(cfg)?;
                     // One workspace per run, reused across every problem
                     // this worker solves — the steady state allocates
@@ -527,6 +761,28 @@ pub fn generate_dataset_with_registry(
                         ..Default::default()
                     };
                     let mut chain = Chain::new();
+                    if skip > 0 {
+                        // Crash-resume mid-run: the predecessor's
+                        // handoff was consumed by the interrupted
+                        // process, and the warm state now comes from
+                        // the checkpointed seed. Dropping the receiver
+                        // cannot strand a live predecessor — its send
+                        // just errors on the hung-up channel.
+                        plan.handoff_rx = None;
+                        if skip < n_probs {
+                            if let Some(tail) = seed.take() {
+                                let first = &plan.problems[skip];
+                                chain
+                                    .try_adopt(&plan.family, first.matrix.rows(), &plan.family, tail)
+                                    .map_err(|e| {
+                                        anyhow!(
+                                            "resume seed for run {} rejected: {e}",
+                                            plan.index
+                                        )
+                                    })?;
+                            }
+                        }
+                    }
                     if let Some(rx) = plan.handoff_rx {
                         // Deterministic handoff: block for the
                         // predecessor's tail (a dropped sender means the
@@ -553,7 +809,7 @@ pub fn generate_dataset_with_registry(
                     }
                     let t_solve = Instant::now();
                     let mut writer_gone = false;
-                    for problem in &plan.problems {
+                    for problem in &plan.problems[skip..] {
                         let r = chain.solve_next_for(
                             &problem.family,
                             &problem.matrix,
@@ -578,8 +834,17 @@ pub fn generate_dataset_with_registry(
                     stats.cold_starts = chain.cold_starts;
                     // Publish the tail for the successor's handoff even
                     // on a writer failure — never strand the next run.
+                    // A fully-checkpointed run never built a chain;
+                    // republish the seed re-read from its last record
+                    // so the successor's warm handoff matches the
+                    // uninterrupted run.
                     if let Some(tx) = plan.handoff_tx {
-                        if let Some(tail) = chain.into_tail() {
+                        let tail = if skip == n_probs {
+                            seed
+                        } else {
+                            chain.into_tail()
+                        };
+                        if let Some(tail) = tail {
                             let _ = tx.send((plan.index, plan.family.clone(), tail));
                         }
                     }
@@ -603,7 +868,14 @@ pub fn generate_dataset_with_registry(
             // (owned by the outer frame) is still alive — an early `?`
             // here would deadlock the whole pipeline. Errors are
             // recorded and propagated after EOF instead.
-            let mut writer_res = DatasetWriter::create(out_dir);
+            let mut writer_res = match (resume_ref, cfg.chunk_records) {
+                // Crash-resume: reopen at the checkpoint — eigs.bin is
+                // truncated to its durable length and the manifest's
+                // torn tail (if any) is cut before appending.
+                (Some(ri), _) => DatasetWriter::resume_chunked(out_dir, &ri.point),
+                (None, Some(c)) => DatasetWriter::create_chunked(out_dir, c, &config_value),
+                (None, None) => DatasetWriter::create(out_dir),
+            };
             let mut write_err: Option<crate::util::error::Error> = None;
             let mut write_secs = 0.0f64;
             let mut max_residual: f64 = 0.0;
@@ -620,7 +892,38 @@ pub fn generate_dataset_with_registry(
             let mut degree_hist: Vec<usize> = Vec::new();
             let mut all_converged = true;
             let mut count = 0usize;
+            let mut resumed = 0usize;
             let mut fam_accum: Vec<FamilyAccum> = vec![FamilyAccum::default(); resolved.len()];
+            if let Some(ri) = resume_ref {
+                // Fold the checkpoint-covered records back into the
+                // totals so the resumed report covers the whole
+                // dataset. Rollups not stored per record (mflops,
+                // degree_hist, convergence flags) stay new-work-only.
+                for r in &ri.completed {
+                    max_residual = max_residual.max(r.max_residual);
+                    solve_secs_sum += r.secs;
+                    iter_sum += r.iterations;
+                    matvec_sum += r.matvecs;
+                    filter_matvec_sum += r.filter_matvecs;
+                    f32_matvec_sum += r.f32_matvecs;
+                    promotion_sum += r.promotions;
+                    deflated_sum += r.deflated_cols;
+                    recycle_matvec_sum += r.recycle_matvecs;
+                    let acc = &mut fam_accum[spec_of(resolved, r.id)];
+                    acc.problems += 1;
+                    acc.iterations += r.iterations;
+                    acc.matvecs += r.matvecs;
+                    acc.filter_matvecs += r.filter_matvecs;
+                    acc.f32_matvecs += r.f32_matvecs;
+                    acc.promotions += r.promotions;
+                    acc.deflated_cols += r.deflated_cols;
+                    acc.recycle_matvecs += r.recycle_matvecs;
+                    acc.solve_secs += r.secs;
+                    acc.max_residual = acc.max_residual.max(r.max_residual);
+                }
+                resumed = ri.completed.len();
+                count = resumed;
+            }
             for (id, run, result) in res_rx.iter() {
                 // Validation stage: every stored pair re-checked against
                 // the tolerance (the dataset-reliability guarantee of
@@ -689,13 +992,16 @@ pub fn generate_dataset_with_registry(
             report.deflated_cols = deflated_sum;
             report.recycle_matvecs = recycle_matvec_sum;
             report.degree_hist = degree_hist;
-            Ok((writer, write_secs, count, fam_accum))
+            Ok((writer, write_secs, count, resumed, fam_accum))
         });
 
-    let (writer, write_secs, count, fam_accum) = writer_out?;
+    let (writer, write_secs, count, resumed, fam_accum) = writer_out?;
     if count != n {
-        return Err(anyhow!("pipeline lost problems: wrote {count} of {n}"));
+        return Err(anyhow!(
+            "pipeline lost problems: {count} of {n} accounted for ({resumed} resumed)"
+        ));
     }
+    report.resumed_records = resumed;
 
     let mut stats = shard_stats.into_inner().unwrap();
     // Worker completion order is nondeterministic; the manifest lists
@@ -741,10 +1047,7 @@ pub fn generate_dataset_with_registry(
     report.shards = stats;
     report.total_secs = t_start.elapsed().as_secs_f64();
 
-    writer.finalize(vec![
-        ("config", crate::util::json::parse(&cfg.to_json()).unwrap()),
-        ("report", report.to_json()),
-    ])?;
+    writer.finalize(vec![("config", config_value), ("report", report.to_json())])?;
     Ok(report)
 }
 
@@ -1294,6 +1597,99 @@ mod tests {
         let err = generate_dataset(&cfg, &dir).unwrap_err().to_string();
         assert!(err.contains("unknown operator family"), "{err}");
         assert!(!dir.exists(), "nothing written for an invalid config");
+    }
+
+    #[test]
+    fn chunked_config_writes_schema_3_with_identical_values() {
+        let d_leg = tmpdir("chunk_leg");
+        let d_chk = tmpdir("chunk_v3");
+        let cfg = small_cfg();
+        generate_dataset(&cfg, &d_leg).unwrap();
+        let mut ccfg = small_cfg();
+        ccfg.chunk_records = Some(2);
+        let report = generate_dataset(&ccfg, &d_chk).unwrap();
+        assert_eq!(report.resumed_records, 0);
+        let mut leg = DatasetReader::open(&d_leg).unwrap();
+        let mut chk = DatasetReader::open(&d_chk).unwrap();
+        assert_eq!(chk.schema_version(), 3);
+        let layout = chk.layout().expect("chunked dataset has a layout").clone();
+        assert!(layout.complete);
+        assert_eq!(layout.chunk_records, 2);
+        assert_eq!(layout.chunks.iter().map(|c| c.records).sum::<usize>(), 6);
+        // The store mode is orthogonal to solving: same values, same
+        // vectors, record for record.
+        for id in 0..6 {
+            let a = leg.read(id).unwrap();
+            let b = chk.read(id).unwrap();
+            assert_eq!(a.values, b.values, "id {id}");
+            assert_eq!(a.vectors, b.vectors, "id {id}");
+        }
+        let _ = std::fs::remove_dir_all(&d_leg);
+        let _ = std::fs::remove_dir_all(&d_chk);
+    }
+
+    #[test]
+    fn resume_completes_a_torn_chunked_run_bit_for_bit() {
+        let d_full = tmpdir("resume_full");
+        let d_torn = tmpdir("resume_torn");
+        let mut cfg = small_cfg();
+        cfg.chunk_records = Some(2);
+        generate_dataset(&cfg, &d_full).unwrap();
+        generate_dataset(&cfg, &d_torn).unwrap();
+        // Tear the second manifest mid-file, as a crash would: the
+        // footer and at least the last checkpoint are gone.
+        let manifest = d_torn.join("manifest.json");
+        let bytes = std::fs::read(&manifest).unwrap();
+        std::fs::write(&manifest, &bytes[..bytes.len() * 3 / 5]).unwrap();
+        let report = resume_dataset(&d_torn).unwrap();
+        assert_eq!(report.n_problems, 6);
+        assert!(
+            report.resumed_records >= 1 && report.resumed_records < 6,
+            "truncation at 60% must leave a checkpointed prefix, got {}",
+            report.resumed_records
+        );
+        let mut full = DatasetReader::open(&d_full).unwrap();
+        let mut resumed = DatasetReader::open(&d_torn).unwrap();
+        assert!(resumed.layout().unwrap().complete);
+        assert_eq!(resumed.index().len(), 6);
+        for id in 0..6 {
+            let a = full.read(id).unwrap();
+            let b = resumed.read(id).unwrap();
+            assert_eq!(a.values, b.values, "id {id}");
+            assert_eq!(a.vectors, b.vectors, "id {id}");
+        }
+        let _ = std::fs::remove_dir_all(&d_full);
+        let _ = std::fs::remove_dir_all(&d_torn);
+    }
+
+    #[test]
+    fn resume_rejects_complete_legacy_and_deflating_datasets() {
+        // A finished chunked dataset has nothing to resume.
+        let d_done = tmpdir("resume_done");
+        let mut cfg = small_cfg();
+        cfg.chunk_records = Some(2);
+        generate_dataset(&cfg, &d_done).unwrap();
+        let err = resume_dataset(&d_done).unwrap_err().to_string();
+        assert!(err.contains("nothing to resume"), "{err}");
+        let _ = std::fs::remove_dir_all(&d_done);
+        // Legacy (schema <= 2) manifests carry no checkpoints.
+        let d_leg = tmpdir("resume_leg");
+        generate_dataset(&small_cfg(), &d_leg).unwrap();
+        let err = resume_dataset(&d_leg).unwrap_err().to_string();
+        assert!(err.contains("--chunk-records"), "{err}");
+        let _ = std::fs::remove_dir_all(&d_leg);
+        // Deflation chains carry state records don't store.
+        let d_defl = tmpdir("resume_defl");
+        let mut cfg = small_cfg();
+        cfg.chunk_records = Some(2);
+        cfg.recycling = Recycling::Deflate;
+        generate_dataset(&cfg, &d_defl).unwrap();
+        let manifest = d_defl.join("manifest.json");
+        let bytes = std::fs::read(&manifest).unwrap();
+        std::fs::write(&manifest, &bytes[..bytes.len() * 3 / 5]).unwrap();
+        let err = resume_dataset(&d_defl).unwrap_err().to_string();
+        assert!(err.contains("recycling"), "{err}");
+        let _ = std::fs::remove_dir_all(&d_defl);
     }
 
     #[test]

@@ -18,8 +18,9 @@
 //! algebra ([`linalg`], [`sparse`]), FFTs ([`fft`]), Gaussian random
 //! fields ([`grf`]), the four PDE operator families ([`operators`]), five
 //! baseline eigensolvers ([`eig`]), the streaming dataset-generation
-//! pipeline ([`coordinator`]), and the PJRT bridge to the AOT-compiled
-//! JAX/Pallas filter kernel ([`runtime`]).
+//! pipeline ([`coordinator`]), the crash-safe chunked dataset store
+//! ([`store`]), and the PJRT bridge to the AOT-compiled JAX/Pallas
+//! filter kernel ([`runtime`]).
 //!
 //! ## Quickstart
 //!
@@ -57,5 +58,6 @@ pub mod rng;
 pub mod runtime;
 pub mod sort;
 pub mod sparse;
+pub mod store;
 pub mod testing;
 pub mod util;

@@ -11,7 +11,9 @@
 //!               [--filter-schedule fixed|adaptive]
 //!               [--precision f64|mixed] [--filter-backend csr|sell]
 //!               [--recycling off|deflate]
+//!               [--chunk-records N]                     # checkpointed v3 store
 //!               [--backend native|xla] [--artifacts DIR] --out DIR
+//! scsf generate --resume DIR     # continue an interrupted chunked run
 //! scsf families                  # list registered operator families
 //! scsf repro <table1|table2|table3|table4|table5|fig3|table11|table12|
 //!             table13|table14|table17|table18|table19|table20|all>
@@ -28,11 +30,19 @@
 //! scsf generate --family poisson:64 --family helmholtz:64 --out ds/
 //! scsf generate --family poisson:32:16:1e-10 --family vibration:32 --out ds/
 //! ```
+//!
+//! `--chunk-records N` switches the writer to the chunked (schema-3)
+//! manifest: records are committed in fsync'd, checksummed chunks of
+//! `N`, so a killed run loses at most the last uncheckpointed chunk
+//! and `scsf generate --resume DIR` continues it bit-for-bit from the
+//! last checkpoint. Without the flag the writer produces the legacy
+//! (schema-2) manifest, byte-identical to earlier builds.
 
 use scsf::bench_support::{tables, Scale};
 use scsf::coordinator::config::{Backend, FamilySpec, GenConfig};
 use scsf::coordinator::dataset::DatasetReader;
-use scsf::coordinator::pipeline::generate_dataset;
+use scsf::coordinator::metrics::GenReport;
+use scsf::coordinator::pipeline::{generate_dataset, resume_dataset};
 use scsf::operators::FamilyRegistry;
 use scsf::sort::SortMethod;
 use scsf::util::error::Result;
@@ -178,11 +188,38 @@ fn print_help() {
          \x20           out of the filter — fewer matvecs per chain (see\n\
          \x20           manifest deflated_cols / recycle_matvecs)\n\
          \n\
+         streaming store (--chunk-records N / --resume DIR):\n\
+         \x20 default   legacy one-shot manifest, bit-for-bit the\n\
+         \x20           historical output\n\
+         \x20 --chunk-records N   chunked (schema-3) manifest: records\n\
+         \x20           committed in fsync'd checksummed chunks of N; a\n\
+         \x20           killed run loses at most the last chunk\n\
+         \x20 --resume DIR        continue an interrupted chunked run\n\
+         \x20           from its last checkpoint (no other flags; the\n\
+         \x20           dataset's stored config wins)\n\
+         \n\
          see `rust/src/main.rs` docs for all flags"
     );
 }
 
 fn cmd_generate(args: &Args) -> Result<()> {
+    if let Some(dir) = args.get("resume") {
+        // Everything about a resumed run comes from the dataset's own
+        // stored config — mixing in fresh flags would silently fork
+        // the schedule the completed records were solved under.
+        if args.flags.len() > 1 || !args.positional.is_empty() {
+            bail!("--resume takes no other flags or arguments (the dataset's stored config wins)");
+        }
+        println!("resuming dataset at {dir}");
+        let report = resume_dataset(Path::new(dir))?;
+        println!(
+            "resume took over {} checkpointed records; solved the remaining {}",
+            report.resumed_records,
+            report.n_problems - report.resumed_records
+        );
+        print_report(&report, dir);
+        return Ok(());
+    }
     let registry = FamilyRegistry::builtin();
     let mut cfg = match args.get("config") {
         Some(path) => GenConfig::from_json(&std::fs::read_to_string(path)?)?,
@@ -264,6 +301,12 @@ fn cmd_generate(args: &Args) -> Result<()> {
     if let Some(x) = args.get_usize("threads")? {
         cfg.threads = x.max(1);
     }
+    if let Some(x) = args.get_usize("chunk-records")? {
+        if x == 0 {
+            bail!("--chunk-records must be >= 1");
+        }
+        cfg.chunk_records = Some(x);
+    }
     if let Some(x) = args.get_usize("degree")? {
         cfg.degree = x;
     }
@@ -338,6 +381,12 @@ fn cmd_generate(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("generate needs --out DIR"))?;
     println!("config:\n{}", cfg.to_json());
     let report = generate_dataset(&cfg, Path::new(out))?;
+    print_report(&report, out);
+    Ok(())
+}
+
+/// Per-run/per-family report lines shared by `generate` and `--resume`.
+fn print_report(report: &GenReport, out: &str) {
     println!("{}", report.summary());
     for f in &report.families {
         println!(
@@ -369,7 +418,6 @@ fn cmd_generate(args: &Args) -> Result<()> {
         }
     }
     println!("dataset written to {out}");
-    Ok(())
 }
 
 fn cmd_repro(args: &Args) -> Result<()> {
@@ -481,7 +529,11 @@ fn cmd_inspect(args: &Args) -> Result<()> {
         .ok_or_else(|| anyhow!("inspect needs a dataset directory"))?;
     let mut reader = DatasetReader::open(Path::new(dir))?;
     let index = reader.index().to_vec();
-    println!("dataset {dir}: {} records", index.len());
+    println!(
+        "dataset {dir}: {} records (manifest schema v{})",
+        index.len(),
+        reader.schema_version()
+    );
     let mut worst: f64 = 0.0;
     let mut secs = 0.0;
     for r in &index {
@@ -513,6 +565,40 @@ fn cmd_inspect(args: &Args) -> Result<()> {
     if families.len() > 1 || families.first().is_some_and(|(f, _)| f != "(untagged)") {
         for (family, count) in &families {
             println!("  family {family}: {count} records");
+        }
+    }
+    // Chunked (schema-3) datasets expose their physical layout.
+    if let Some(layout) = reader.layout() {
+        println!(
+            "chunked store: {} chunks of up to {} records, {} checkpoints, {}",
+            layout.chunks.len(),
+            layout.chunk_records,
+            layout.checkpoints,
+            if layout.complete {
+                "complete (footer present)"
+            } else {
+                "INCOMPLETE — continue with `scsf generate --resume`"
+            }
+        );
+        const SHOW: usize = 12;
+        for c in layout.chunks.iter().take(SHOW) {
+            println!(
+                "  chunk {:>4}: records {}..{} at manifest byte {}",
+                c.seq,
+                c.first_record,
+                c.first_record + c.records,
+                c.manifest_offset
+            );
+        }
+        if layout.chunks.len() > SHOW {
+            println!("  … and {} more chunks", layout.chunks.len() - SHOW);
+        }
+        if layout.manifest_torn_bytes > 0 {
+            println!(
+                "  torn tail: {} bytes past the last valid frame (ignored; \
+                 truncated on resume)",
+                layout.manifest_torn_bytes
+            );
         }
     }
     // Spot check: first record's smallest eigenvalues.

@@ -1,0 +1,323 @@
+//! Length+checksum frame layer for append-only chunked manifests.
+//!
+//! A v3 manifest is a flat sequence of *frame pairs*:
+//!
+//! ```text
+//! <payload bytes, one JSON object per line, ends '\n'>
+//! {"crc":"xxxxxxxx","end":N}\n        <- the trailer line
+//! ```
+//!
+//! where `N` is the payload length in bytes (newline included) and
+//! `crc` is the lowercase 8-hex CRC-32 ([`super::crc32`]) of exactly
+//! those `N` bytes. A frame is valid iff its trailer line parses, `end`
+//! matches, and the checksum matches. The first invalid pair marks the
+//! *torn tail*: everything before it is trusted, everything from it on
+//! is discarded by truncation on resume. Because the trailer is written
+//! after the payload and the pair is fsync'd as a unit, a crash at any
+//! byte leaves at most one torn frame.
+//!
+//! This layer is deliberately ignorant of what the payloads mean —
+//! framing and integrity here, manifest semantics in
+//! [`crate::coordinator::dataset`].
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufRead, BufReader, Read, Seek, SeekFrom, Write};
+use std::path::Path;
+
+use super::crc32::crc32;
+use crate::util::error::Result;
+use crate::util::json;
+
+/// Appends checksummed frames to a manifest file.
+pub struct FrameWriter {
+    file: File,
+    written: u64,
+}
+
+impl FrameWriter {
+    /// Create (truncating) a new frame file.
+    pub fn create(path: &Path) -> Result<Self> {
+        let file = File::create(path)?;
+        Ok(Self { file, written: 0 })
+    }
+
+    /// Reopen an existing frame file for appending, first truncating it
+    /// to `truncate_to` bytes (the last trusted frame boundary from a
+    /// torn-tail scan).
+    pub fn open_append(path: &Path, truncate_to: u64) -> Result<Self> {
+        let file = OpenOptions::new().read(true).write(true).open(path)?;
+        file.set_len(truncate_to)?;
+        let mut file = file;
+        file.seek(SeekFrom::End(0))?;
+        Ok(Self {
+            file,
+            written: truncate_to,
+        })
+    }
+
+    /// Append one frame pair: the payload followed by its trailer line.
+    /// The payload must be newline-terminated and contain no interior
+    /// newlines only if its consumer requires line structure — the
+    /// frame layer itself checks just the terminator.
+    pub fn write_frame(&mut self, payload: &[u8]) -> Result<()> {
+        assert!(
+            payload.last() == Some(&b'\n'),
+            "frame payloads must end with a newline"
+        );
+        let trailer = format!("{{\"crc\":\"{:08x}\",\"end\":{}}}\n", crc32(payload), payload.len());
+        self.file.write_all(payload)?;
+        self.file.write_all(trailer.as_bytes())?;
+        self.written += payload.len() as u64 + trailer.len() as u64;
+        Ok(())
+    }
+
+    /// Force written frames to stable storage (`fdatasync`).
+    pub fn sync(&mut self) -> Result<()> {
+        self.file.sync_data()?;
+        Ok(())
+    }
+
+    /// Total bytes written through this writer (equals the file length
+    /// when created fresh or after `open_append` truncation).
+    pub fn written(&self) -> u64 {
+        self.written
+    }
+}
+
+/// Walks the frame pairs of a manifest file, validating each and
+/// stopping at the first torn one.
+pub struct FrameScanner {
+    reader: BufReader<File>,
+    payload: Vec<u8>,
+    trailer: Vec<u8>,
+    /// Byte length of the valid prefix (end of the last good frame).
+    valid_bytes: u64,
+    /// A torn tail was seen: bytes exist past `valid_bytes` that do not
+    /// form a complete valid frame.
+    torn: bool,
+    file_len: u64,
+}
+
+impl FrameScanner {
+    /// Open a frame file for scanning.
+    pub fn open(path: &Path) -> Result<Self> {
+        let file = File::open(path)?;
+        let file_len = file.metadata()?.len();
+        Ok(Self {
+            reader: BufReader::new(file),
+            payload: Vec::new(),
+            trailer: Vec::new(),
+            valid_bytes: 0,
+            torn: false,
+            file_len,
+        })
+    }
+
+    /// The next valid frame's payload (borrowed from internal scratch),
+    /// or `None` at end of input *or* at a torn tail — check
+    /// [`FrameScanner::torn`] to distinguish. Never errors on torn
+    /// data; I/O failures only.
+    pub fn next_frame(&mut self) -> Result<Option<&[u8]>> {
+        if self.torn || self.valid_bytes == self.file_len {
+            return Ok(None);
+        }
+        self.payload.clear();
+        self.trailer.clear();
+        let got = self.reader.read_until(b'\n', &mut self.payload)?;
+        if got == 0 {
+            return Ok(None);
+        }
+        if self.payload.last() != Some(&b'\n') {
+            self.torn = true;
+            return Ok(None);
+        }
+        let got_trailer = self.reader.read_until(b'\n', &mut self.trailer)?;
+        if got_trailer == 0 || self.trailer.last() != Some(&b'\n') {
+            self.torn = true;
+            return Ok(None);
+        }
+        if !Self::trailer_matches(&self.trailer, &self.payload) {
+            self.torn = true;
+            return Ok(None);
+        }
+        self.valid_bytes += (self.payload.len() + self.trailer.len()) as u64;
+        Ok(Some(&self.payload))
+    }
+
+    fn trailer_matches(trailer: &[u8], payload: &[u8]) -> bool {
+        let Ok(text) = std::str::from_utf8(trailer) else {
+            return false;
+        };
+        let Ok(v) = json::parse(text) else {
+            return false;
+        };
+        let Some(end) = v.get("end").and_then(|x| x.as_f64()) else {
+            return false;
+        };
+        if end as u64 != payload.len() as u64 {
+            return false;
+        }
+        let Some(crc_hex) = v.get("crc").and_then(|x| x.as_str()) else {
+            return false;
+        };
+        let Ok(want) = u32::from_str_radix(crc_hex, 16) else {
+            return false;
+        };
+        crc32(payload) == want
+    }
+
+    /// Bytes of validated prefix so far (a safe truncation point).
+    pub fn valid_bytes(&self) -> u64 {
+        self.valid_bytes
+    }
+
+    /// Whether scanning stopped at invalid/incomplete trailing data.
+    pub fn torn(&self) -> bool {
+        self.torn
+    }
+
+    /// Total length of the underlying file.
+    pub fn file_len(&self) -> u64 {
+        self.file_len
+    }
+}
+
+/// Convenience: scan a whole file into owned payloads plus tear state.
+/// Used by readers of modest manifests and by tests; the streaming
+/// paths drive [`FrameScanner`] directly.
+pub fn scan_all(path: &Path) -> Result<(Vec<Vec<u8>>, u64, bool)> {
+    let mut scanner = FrameScanner::open(path)?;
+    let mut frames = Vec::new();
+    while let Some(p) = scanner.next_frame()? {
+        frames.push(p.to_vec());
+    }
+    Ok((frames, scanner.valid_bytes(), scanner.torn()))
+}
+
+/// Read the first `len` bytes of a file (tests and tear diagnostics).
+pub fn read_prefix(path: &Path, len: u64) -> Result<Vec<u8>> {
+    let mut f = File::open(path)?;
+    let mut buf = vec![0u8; len as usize];
+    f.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "scsf_chunk_{tag}_{}_{:?}",
+            std::process::id(),
+            std::thread::current().id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn roundtrip_preserves_payloads_in_order() {
+        let dir = tmpdir("roundtrip");
+        let path = dir.join("frames");
+        let payloads: Vec<Vec<u8>> = (0..5)
+            .map(|i| format!("{{\"frame\":\"chunk\",\"seq\":{i}}}\n").into_bytes())
+            .collect();
+        let mut w = FrameWriter::create(&path).unwrap();
+        for p in &payloads {
+            w.write_frame(p).unwrap();
+        }
+        w.sync().unwrap();
+        let file_len = std::fs::metadata(&path).unwrap().len();
+        assert_eq!(w.written(), file_len);
+
+        let (frames, valid, torn) = scan_all(&path).unwrap();
+        assert_eq!(frames, payloads);
+        assert_eq!(valid, file_len);
+        assert!(!torn);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn truncation_at_every_byte_yields_a_valid_prefix() {
+        let dir = tmpdir("trunc");
+        let full = dir.join("full");
+        let payloads: Vec<Vec<u8>> =
+            (0..4).map(|i| format!("{{\"seq\":{i},\"x\":\"abc\"}}\n").into_bytes()).collect();
+        let mut w = FrameWriter::create(&full).unwrap();
+        let mut boundaries = vec![0u64];
+        for p in &payloads {
+            w.write_frame(p).unwrap();
+            boundaries.push(w.written());
+        }
+        let bytes = std::fs::read(&full).unwrap();
+
+        for cut in 0..=bytes.len() {
+            let path = dir.join("cut");
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            let (frames, valid, torn) = scan_all(&path).unwrap();
+            // The valid prefix is the largest frame boundary <= cut.
+            let want_valid = *boundaries
+                .iter()
+                .filter(|&&b| b <= cut as u64)
+                .max()
+                .unwrap();
+            assert_eq!(valid, want_valid, "cut at {cut}");
+            let want_frames = boundaries.iter().filter(|&&b| b != 0 && b <= cut as u64).count();
+            assert_eq!(frames.len(), want_frames, "cut at {cut}");
+            assert_eq!(torn, (cut as u64) != want_valid, "cut at {cut}");
+            assert_eq!(&frames[..], &payloads[..want_frames], "cut at {cut}");
+        }
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn corruption_mid_file_stops_the_scan_there() {
+        let dir = tmpdir("corrupt");
+        let path = dir.join("frames");
+        let mut w = FrameWriter::create(&path).unwrap();
+        let p0 = b"{\"seq\":0}\n".to_vec();
+        let p1 = b"{\"seq\":1}\n".to_vec();
+        w.write_frame(&p0).unwrap();
+        let boundary = w.written();
+        w.write_frame(&p1).unwrap();
+        drop(w);
+        // Flip one payload byte of the second frame.
+        let mut bytes = std::fs::read(&path).unwrap();
+        let idx = boundary as usize + 2;
+        bytes[idx] ^= 0x01;
+        std::fs::write(&path, &bytes).unwrap();
+
+        let (frames, valid, torn) = scan_all(&path).unwrap();
+        assert_eq!(frames, vec![p0]);
+        assert_eq!(valid, boundary);
+        assert!(torn);
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+
+    #[test]
+    fn open_append_truncates_then_extends() {
+        let dir = tmpdir("append");
+        let path = dir.join("frames");
+        let mut w = FrameWriter::create(&path).unwrap();
+        w.write_frame(b"{\"seq\":0}\n").unwrap();
+        let boundary = w.written();
+        w.write_frame(b"{\"seq\":1}\n").unwrap();
+        drop(w);
+        // Tear the second frame, then resume from the first boundary.
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..boundary as usize + 3]).unwrap();
+
+        let mut w = FrameWriter::open_append(&path, boundary).unwrap();
+        w.write_frame(b"{\"seq\":1,\"retry\":true}\n").unwrap();
+        w.sync().unwrap();
+
+        let (frames, _, torn) = scan_all(&path).unwrap();
+        assert!(!torn);
+        assert_eq!(frames.len(), 2);
+        assert_eq!(frames[0], b"{\"seq\":0}\n");
+        assert_eq!(frames[1], b"{\"seq\":1,\"retry\":true}\n");
+        std::fs::remove_dir_all(&dir).unwrap();
+    }
+}

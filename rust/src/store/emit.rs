@@ -1,0 +1,362 @@
+//! Streaming JSON writer — the write-side dual of [`super::pull`].
+//!
+//! The legacy path builds a full [`crate::util::json::Value`] tree and
+//! serializes it in one shot; for manifests with 10⁵⁺ records that is
+//! an O(dataset) allocation before a single byte hits disk. This
+//! emitter writes tokens straight to any [`std::io::Write`] as the
+//! caller walks its data, holding only a per-level frame stack and one
+//! reused scratch `String` — O(depth) state regardless of document
+//! size.
+//!
+//! Byte-compatibility is load-bearing: the pretty mode reproduces
+//! [`crate::util::json::Value::to_string_pretty`] exactly (2-space
+//! indent, `": "` separators, compact empty containers) and the compact
+//! mode reproduces `to_string_compact`, so the legacy manifest path can
+//! switch
+//! to streaming without changing a single output byte. Number and
+//! string formatting are delegated to the same `write_num` /
+//! `write_escaped` the tree serializer uses — one formatter, one truth.
+
+use std::io::{self, Write};
+
+use crate::util::json::{write_escaped, write_num, Value};
+
+/// One open container on the emitter's stack.
+struct Frame {
+    is_obj: bool,
+    /// Entries written so far (keys count the member, not the value).
+    count: usize,
+    /// In an object: a key was written and its value is pending.
+    awaiting_value: bool,
+}
+
+/// A push-based JSON token writer. Call `obj_start`/`key`/scalar/
+/// `obj_end` in document order; [`JsonEmitter::finish`] flushes and
+/// returns the inner writer.
+///
+/// Misuse (a value at a key position, closing the wrong container,
+/// finishing mid-document) panics: emitter call sequences are
+/// program-structure bugs, not data errors.
+pub struct JsonEmitter<W: Write> {
+    out: W,
+    stack: Vec<Frame>,
+    scratch: String,
+    pretty: bool,
+    /// Number of root values written (exactly 1 allowed).
+    root_done: bool,
+}
+
+impl<W: Write> JsonEmitter<W> {
+    /// Pretty printer: byte-identical to `Value::to_string_pretty`
+    /// (including the trailing newline appended by `finish`).
+    pub fn pretty(out: W) -> Self {
+        Self::new(out, true)
+    }
+
+    /// Compact printer: byte-identical to `Value::to_string_compact`.
+    pub fn compact(out: W) -> Self {
+        Self::new(out, false)
+    }
+
+    fn new(out: W, pretty: bool) -> Self {
+        Self {
+            out,
+            stack: Vec::new(),
+            scratch: String::new(),
+            pretty,
+            root_done: false,
+        }
+    }
+
+    fn depth(&self) -> usize {
+        self.stack.len()
+    }
+
+    fn pad(&mut self, levels: usize) -> io::Result<()> {
+        for _ in 0..levels {
+            self.out.write_all(b"  ")?;
+        }
+        Ok(())
+    }
+
+    /// Write whatever separator/indent the current position demands,
+    /// then mark one more entry in the enclosing frame.
+    fn pre_entry(&mut self) -> io::Result<()> {
+        if let Some(top) = self.stack.last_mut() {
+            if top.awaiting_value {
+                // Key already wrote the separator and the `: `.
+                top.awaiting_value = false;
+                return Ok(());
+            }
+            assert!(
+                !top.is_obj,
+                "JsonEmitter: value inside an object needs a key first"
+            );
+            let first = top.count == 0;
+            top.count += 1;
+            if self.pretty {
+                let depth = self.depth();
+                if first {
+                    self.out.write_all(b"\n")?;
+                } else {
+                    self.out.write_all(b",\n")?;
+                }
+                self.pad(depth)?;
+            } else if !first {
+                self.out.write_all(b",")?;
+            }
+        } else {
+            assert!(!self.root_done, "JsonEmitter: multiple root values");
+            self.root_done = true;
+        }
+        Ok(())
+    }
+
+    /// Write an object member's key; its value must follow next.
+    pub fn key(&mut self, k: &str) -> io::Result<()> {
+        let top = self.stack.last_mut().expect("JsonEmitter: key at root");
+        assert!(top.is_obj, "JsonEmitter: key inside an array");
+        assert!(!top.awaiting_value, "JsonEmitter: key after key");
+        let first = top.count == 0;
+        top.count += 1;
+        top.awaiting_value = true;
+        let pretty = self.pretty;
+        let depth = self.depth();
+        if pretty {
+            if first {
+                self.out.write_all(b"\n")?;
+            } else {
+                self.out.write_all(b",\n")?;
+            }
+            self.pad(depth)?;
+        } else if !first {
+            self.out.write_all(b",")?;
+        }
+        self.scratch.clear();
+        write_escaped(k, &mut self.scratch);
+        self.out.write_all(self.scratch.as_bytes())?;
+        self.out
+            .write_all(if pretty { b": " } else { b":" })
+    }
+
+    /// Open an object (`{`).
+    pub fn obj_start(&mut self) -> io::Result<()> {
+        self.pre_entry()?;
+        self.stack.push(Frame {
+            is_obj: true,
+            count: 0,
+            awaiting_value: false,
+        });
+        self.out.write_all(b"{")
+    }
+
+    /// Close the innermost object (`}`).
+    pub fn obj_end(&mut self) -> io::Result<()> {
+        let top = self.stack.pop().expect("JsonEmitter: obj_end at root");
+        assert!(top.is_obj, "JsonEmitter: obj_end closes an array");
+        assert!(!top.awaiting_value, "JsonEmitter: obj_end after bare key");
+        if self.pretty && top.count > 0 {
+            self.out.write_all(b"\n")?;
+            self.pad(self.depth())?;
+        }
+        self.out.write_all(b"}")
+    }
+
+    /// Open an array (`[`).
+    pub fn arr_start(&mut self) -> io::Result<()> {
+        self.pre_entry()?;
+        self.stack.push(Frame {
+            is_obj: false,
+            count: 0,
+            awaiting_value: false,
+        });
+        self.out.write_all(b"[")
+    }
+
+    /// Close the innermost array (`]`).
+    pub fn arr_end(&mut self) -> io::Result<()> {
+        let top = self.stack.pop().expect("JsonEmitter: arr_end at root");
+        assert!(!top.is_obj, "JsonEmitter: arr_end closes an object");
+        if self.pretty && top.count > 0 {
+            self.out.write_all(b"\n")?;
+            self.pad(self.depth())?;
+        }
+        self.out.write_all(b"]")
+    }
+
+    /// A number value — same formatting (and same non-finite panic) as
+    /// the tree serializer.
+    pub fn num(&mut self, x: f64) -> io::Result<()> {
+        self.pre_entry()?;
+        self.scratch.clear();
+        write_num(x, &mut self.scratch);
+        self.out.write_all(self.scratch.as_bytes())
+    }
+
+    /// A `usize` value (manifests carry counters as JSON numbers).
+    pub fn usize_val(&mut self, x: usize) -> io::Result<()> {
+        self.num(x as f64)
+    }
+
+    /// A `u64` value (byte offsets; exact below 2⁵³ like the tree path).
+    pub fn u64_val(&mut self, x: u64) -> io::Result<()> {
+        self.num(x as f64)
+    }
+
+    /// A string value.
+    pub fn str_val(&mut self, s: &str) -> io::Result<()> {
+        self.pre_entry()?;
+        self.scratch.clear();
+        write_escaped(s, &mut self.scratch);
+        self.out.write_all(self.scratch.as_bytes())
+    }
+
+    /// A boolean value.
+    pub fn bool_val(&mut self, b: bool) -> io::Result<()> {
+        self.pre_entry()?;
+        self.out.write_all(if b { b"true" } else { b"false" })
+    }
+
+    /// A `null` value.
+    pub fn null(&mut self) -> io::Result<()> {
+        self.pre_entry()?;
+        self.out.write_all(b"null")
+    }
+
+    /// Bridge: emit an already-built [`Value`] subtree at the current
+    /// position. Lets streaming documents embed small tree-built parts
+    /// (config echoes, reports) without re-plumbing them.
+    pub fn value(&mut self, v: &Value) -> io::Result<()> {
+        match v {
+            Value::Null => self.null(),
+            Value::Bool(b) => self.bool_val(*b),
+            Value::Num(x) => self.num(*x),
+            Value::Str(s) => self.str_val(s),
+            Value::Arr(xs) => {
+                self.arr_start()?;
+                for x in xs {
+                    self.value(x)?;
+                }
+                self.arr_end()
+            }
+            Value::Obj(m) => {
+                self.obj_start()?;
+                for (k, x) in m {
+                    self.key(k)?;
+                    self.value(x)?;
+                }
+                self.obj_end()
+            }
+        }
+    }
+
+    /// Finish the document: asserts it is complete, appends the
+    /// trailing newline in pretty mode, flushes, and returns the inner
+    /// writer (so callers can fsync the file handle).
+    pub fn finish(mut self) -> io::Result<W> {
+        assert!(
+            self.stack.is_empty() && self.root_done,
+            "JsonEmitter: finish before the document is complete"
+        );
+        if self.pretty {
+            self.out.write_all(b"\n")?;
+        }
+        self.out.flush()?;
+        Ok(self.out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn sample() -> Value {
+        parse(
+            r#"{
+  "arr": [1, 2.5, "three", null, true],
+  "empty_arr": [],
+  "empty_obj": {},
+  "nested": {"a": {"b": [{"c": -4}]}},
+  "big": 12345678901234,
+  "esc": "tab\t \"q\" \\ nl\n"
+}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn pretty_matches_tree_serializer_byte_for_byte() {
+        let v = sample();
+        let mut e = JsonEmitter::pretty(Vec::new());
+        e.value(&v).unwrap();
+        let bytes = e.finish().unwrap();
+        assert_eq!(String::from_utf8(bytes).unwrap(), v.to_string_pretty());
+    }
+
+    #[test]
+    fn compact_matches_tree_serializer_byte_for_byte() {
+        let v = sample();
+        let mut e = JsonEmitter::compact(Vec::new());
+        e.value(&v).unwrap();
+        let bytes = e.finish().unwrap();
+        assert_eq!(String::from_utf8(bytes).unwrap(), v.to_string_compact());
+    }
+
+    #[test]
+    fn manual_token_stream_matches_tree_equivalent() {
+        // Built token by token, as the manifest writer does.
+        let mut e = JsonEmitter::pretty(Vec::new());
+        e.obj_start().unwrap();
+        e.key("format").unwrap();
+        e.str_val("scsf-eigs-v1").unwrap();
+        e.key("records").unwrap();
+        e.arr_start().unwrap();
+        for id in 0..3usize {
+            e.obj_start().unwrap();
+            e.key("id").unwrap();
+            e.usize_val(id).unwrap();
+            e.key("secs").unwrap();
+            e.num(0.125 * (id as f64 + 1.0)).unwrap();
+            e.obj_end().unwrap();
+        }
+        e.arr_end().unwrap();
+        e.key("schema_version").unwrap();
+        e.usize_val(2).unwrap();
+        e.obj_end().unwrap();
+        let got = String::from_utf8(e.finish().unwrap()).unwrap();
+
+        let tree = parse(
+            r#"{"format": "scsf-eigs-v1", "records": [
+                 {"id": 0, "secs": 0.125}, {"id": 1, "secs": 0.25},
+                 {"id": 2, "secs": 0.375}], "schema_version": 2}"#,
+        )
+        .unwrap();
+        assert_eq!(got, tree.to_string_pretty());
+    }
+
+    #[test]
+    fn roundtrips_through_the_parser() {
+        let v = sample();
+        let mut e = JsonEmitter::compact(Vec::new());
+        e.value(&v).unwrap();
+        let s = String::from_utf8(e.finish().unwrap()).unwrap();
+        assert_eq!(parse(&s).unwrap(), v);
+    }
+
+    #[test]
+    #[should_panic(expected = "needs a key")]
+    fn value_without_key_in_object_panics() {
+        let mut e = JsonEmitter::compact(Vec::new());
+        e.obj_start().unwrap();
+        let _ = e.num(1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "finish before the document is complete")]
+    fn finish_mid_document_panics() {
+        let mut e = JsonEmitter::compact(Vec::new());
+        e.arr_start().unwrap();
+        let _ = e.finish();
+    }
+}

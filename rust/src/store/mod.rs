@@ -1,0 +1,27 @@
+//! Streaming, resumable dataset store.
+//!
+//! The layers, bottom-up — each ignorant of the ones above it:
+//!
+//! * [`crc32`] — the checksum sealing every manifest frame.
+//! * [`pull`] — zero-allocation pull/event JSON parser (caller-owned
+//!   scratch, borrowed strings, no intermediate `Value` tree).
+//! * [`emit`] — streaming JSON writer, byte-compatible with the tree
+//!   serializer in [`crate::util::json`].
+//! * [`chunk`] — length+checksum frame pairs over an append-only file:
+//!   write, fsync, scan, torn-tail detection.
+//!
+//! Manifest *semantics* — the schema-v3 chunked format, checkpoints,
+//! crash-resume, and the streaming reader — live in
+//! [`crate::coordinator::dataset`], built on these layers. The resume
+//! protocol (deterministic schedule replay, per-run warm-chain
+//! re-seeding) is in [`crate::coordinator::pipeline`]. See DESIGN.md
+//! §Streaming store for the on-disk layout and compat matrix.
+
+pub mod chunk;
+pub mod crc32;
+pub mod emit;
+pub mod pull;
+
+pub use chunk::{FrameScanner, FrameWriter};
+pub use emit::JsonEmitter;
+pub use pull::{Event, PullParser, RawStr};

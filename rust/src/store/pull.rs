@@ -1,0 +1,636 @@
+//! Zero-allocation pull/event JSON parser.
+//!
+//! The legacy tree parser ([`crate::util::json::parse`]) materializes a
+//! full [`crate::util::json::Value`] per document — fine for configs,
+//! wrong for manifests indexing 10⁵⁺ records. This parser walks the
+//! same grammar as a stream of [`Event`]s over a borrowed byte slice:
+//! no intermediate tree, no per-token allocation, caller-owned scratch
+//! for string decoding (the picojson/smoljson idiom). Strings come back
+//! as [`RawStr`] slices of the input; escape-free strings can be
+//! borrowed directly ([`RawStr::as_borrowed`]), and decoding copies
+//! into a reusable `String` only when escapes force it.
+//!
+//! Container depth is tracked in a fixed bitstack — one bit per level,
+//! [`crate::util::json::MAX_DEPTH`] levels — so deeply nested input is
+//! a hard [`ParseError`], never a stack overflow, and the parser itself
+//! is recursion-free.
+//!
+//! Grammar and escape semantics match the tree parser exactly
+//! (including its lenient `\uXXXX` handling: surrogate halves decode to
+//! U+FFFD). The manifest read paths in
+//! [`crate::coordinator::dataset`] run on this parser in constant
+//! memory per record.
+
+use crate::util::json::{ParseError, MAX_DEPTH};
+
+/// A raw (still-escaped) string slice of the input document.
+#[derive(Debug, Clone, Copy)]
+pub struct RawStr<'a> {
+    /// The bytes between the quotes, escapes intact.
+    raw: &'a [u8],
+    /// Absolute byte offset of `raw` in the document (for errors).
+    start: usize,
+    /// Whether any backslash escape occurs in `raw`.
+    escaped: bool,
+}
+
+impl<'a> RawStr<'a> {
+    /// The string borrowed straight from the input — available iff it
+    /// contains no escapes (and is valid UTF-8). The zero-copy path.
+    pub fn as_borrowed(&self) -> Option<&'a str> {
+        if self.escaped {
+            return None;
+        }
+        std::str::from_utf8(self.raw).ok()
+    }
+
+    /// Decode into caller-owned scratch (cleared first) and return the
+    /// decoded slice. Escape-free strings are a single copy; escaped
+    /// ones are unescaped byte by byte. The scratch's capacity is
+    /// reused across calls — the steady state allocates nothing.
+    pub fn decode_into<'s>(&self, scratch: &'s mut String) -> Result<&'s str, ParseError> {
+        scratch.clear();
+        let err = |off: usize, msg: &str| ParseError {
+            at: self.start + off,
+            msg: msg.to_string(),
+        };
+        if !self.escaped {
+            let s = std::str::from_utf8(self.raw).map_err(|_| err(0, "invalid UTF-8"))?;
+            scratch.push_str(s);
+            return Ok(scratch.as_str());
+        }
+        let b = self.raw;
+        let mut i = 0;
+        while i < b.len() {
+            if b[i] == b'\\' {
+                i += 1;
+                match b.get(i) {
+                    Some(b'"') => scratch.push('"'),
+                    Some(b'\\') => scratch.push('\\'),
+                    Some(b'/') => scratch.push('/'),
+                    Some(b'n') => scratch.push('\n'),
+                    Some(b't') => scratch.push('\t'),
+                    Some(b'r') => scratch.push('\r'),
+                    Some(b'b') => scratch.push('\u{8}'),
+                    Some(b'f') => scratch.push('\u{c}'),
+                    Some(b'u') => {
+                        if i + 4 >= b.len() {
+                            return Err(err(i, "truncated \\u escape"));
+                        }
+                        let hex = std::str::from_utf8(&b[i + 1..i + 5])
+                            .map_err(|_| err(i, "bad \\u escape"))?;
+                        let code = u32::from_str_radix(hex, 16)
+                            .map_err(|_| err(i, "bad \\u escape"))?;
+                        // Same leniency as the tree parser: surrogate
+                        // halves map to the replacement character.
+                        scratch.push(char::from_u32(code).unwrap_or('\u{FFFD}'));
+                        i += 4;
+                    }
+                    _ => return Err(err(i, "bad escape")),
+                }
+                i += 1;
+            } else {
+                let rest =
+                    std::str::from_utf8(&b[i..]).map_err(|_| err(i, "invalid UTF-8"))?;
+                let c = rest.chars().next().unwrap();
+                scratch.push(c);
+                i += c.len_utf8();
+            }
+        }
+        Ok(scratch.as_str())
+    }
+
+    /// Compare against a literal without allocating on the common
+    /// (escape-free) path — the key-dispatch primitive of manifest
+    /// readers. Escaped strings fall back to a decode.
+    pub fn eq_str(&self, s: &str) -> bool {
+        if !self.escaped {
+            return self.raw == s.as_bytes();
+        }
+        let mut scratch = String::new();
+        self.decode_into(&mut scratch)
+            .map(|d| d == s)
+            .unwrap_or(false)
+    }
+}
+
+/// One parse event. `Key` carries an object member's name; the member's
+/// value follows as the next event(s).
+#[derive(Debug, Clone, Copy)]
+pub enum Event<'a> {
+    /// `{` — object opened.
+    ObjStart,
+    /// `}` — object closed.
+    ObjEnd,
+    /// `[` — array opened.
+    ArrStart,
+    /// `]` — array closed.
+    ArrEnd,
+    /// An object member's key (its value is the next event).
+    Key(RawStr<'a>),
+    /// A string value.
+    Str(RawStr<'a>),
+    /// A number value.
+    Num(f64),
+    /// `true` / `false`.
+    Bool(bool),
+    /// `null`.
+    Null,
+}
+
+/// What the grammar permits at the current position.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Expect {
+    /// A value (document start, after `:`, after `,` in an array).
+    Value,
+    /// First member of a just-opened object: a key or `}`.
+    FirstKeyOrEnd,
+    /// A key (after `,` in an object; trailing commas are rejected).
+    Key,
+    /// First element of a just-opened array: a value or `]`.
+    FirstItemOrEnd,
+    /// After a value inside a container: `,` or the closing bracket.
+    CommaOrEnd,
+    /// Root value consumed: only trailing whitespace remains.
+    Done,
+}
+
+/// The pull parser. Create with [`PullParser::new`], drive with
+/// [`PullParser::next_event`] until it yields `None` (end of a
+/// well-formed document).
+pub struct PullParser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+    /// Container bitstack: bit set ⇒ that level is an object.
+    stack: [u64; MAX_DEPTH / 64],
+    depth: usize,
+    expect: Expect,
+}
+
+impl<'a> PullParser<'a> {
+    /// Parser over a document held in memory (or one manifest frame).
+    pub fn new(input: &'a [u8]) -> Self {
+        Self {
+            bytes: input,
+            pos: 0,
+            stack: [0; MAX_DEPTH / 64],
+            depth: 0,
+            expect: Expect::Value,
+        }
+    }
+
+    /// Current byte offset — frame readers use the span around
+    /// [`PullParser::skip_value`] to capture a value's raw text.
+    pub fn byte_pos(&self) -> usize {
+        self.pos
+    }
+
+    fn err(&self, msg: &str) -> ParseError {
+        ParseError {
+            at: self.pos,
+            msg: msg.to_string(),
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn push(&mut self, is_obj: bool) -> Result<(), ParseError> {
+        if self.depth >= MAX_DEPTH {
+            return Err(self.err(&format!(
+                "nesting deeper than {MAX_DEPTH} levels"
+            )));
+        }
+        let (w, b) = (self.depth / 64, self.depth % 64);
+        if is_obj {
+            self.stack[w] |= 1 << b;
+        } else {
+            self.stack[w] &= !(1 << b);
+        }
+        self.depth += 1;
+        Ok(())
+    }
+
+    fn top_is_obj(&self) -> bool {
+        let d = self.depth - 1;
+        (self.stack[d / 64] >> (d % 64)) & 1 == 1
+    }
+
+    fn pop(&mut self) {
+        self.depth -= 1;
+        self.expect = if self.depth == 0 {
+            Expect::Done
+        } else {
+            Expect::CommaOrEnd
+        };
+    }
+
+    fn after_value(&mut self) {
+        self.expect = if self.depth == 0 {
+            Expect::Done
+        } else {
+            Expect::CommaOrEnd
+        };
+    }
+
+    /// The next event, `None` at the clean end of the document.
+    /// Trailing garbage after the root value is an error, as in the
+    /// tree parser.
+    pub fn next_event(&mut self) -> Result<Option<Event<'a>>, ParseError> {
+        loop {
+            self.skip_ws();
+            match self.expect {
+                Expect::Done => {
+                    return if self.pos == self.bytes.len() {
+                        Ok(None)
+                    } else {
+                        Err(self.err("trailing garbage"))
+                    };
+                }
+                Expect::Value => return self.value_event().map(Some),
+                Expect::FirstItemOrEnd => {
+                    if self.peek() == Some(b']') {
+                        self.pos += 1;
+                        self.pop();
+                        return Ok(Some(Event::ArrEnd));
+                    }
+                    return self.value_event().map(Some);
+                }
+                Expect::FirstKeyOrEnd => {
+                    if self.peek() == Some(b'}') {
+                        self.pos += 1;
+                        self.pop();
+                        return Ok(Some(Event::ObjEnd));
+                    }
+                    return self.key_event().map(Some);
+                }
+                Expect::Key => return self.key_event().map(Some),
+                Expect::CommaOrEnd => match self.peek() {
+                    Some(b',') => {
+                        self.pos += 1;
+                        self.expect = if self.top_is_obj() {
+                            Expect::Key
+                        } else {
+                            Expect::Value
+                        };
+                        // Commas are not events; continue to the token.
+                    }
+                    Some(b'}') if self.top_is_obj() => {
+                        self.pos += 1;
+                        self.pop();
+                        return Ok(Some(Event::ObjEnd));
+                    }
+                    Some(b']') if !self.top_is_obj() => {
+                        self.pos += 1;
+                        self.pop();
+                        return Ok(Some(Event::ArrEnd));
+                    }
+                    _ => {
+                        return Err(self.err(if self.top_is_obj() {
+                            "expected ',' or '}'"
+                        } else {
+                            "expected ',' or ']'"
+                        }))
+                    }
+                },
+            }
+        }
+    }
+
+    fn key_event(&mut self) -> Result<Event<'a>, ParseError> {
+        if self.peek() != Some(b'"') {
+            return Err(self.err("expected object key"));
+        }
+        let key = self.raw_string()?;
+        self.skip_ws();
+        if self.peek() != Some(b':') {
+            return Err(self.err("expected ':'"));
+        }
+        self.pos += 1;
+        self.expect = Expect::Value;
+        Ok(Event::Key(key))
+    }
+
+    fn value_event(&mut self) -> Result<Event<'a>, ParseError> {
+        match self.peek() {
+            Some(b'{') => {
+                self.push(true)?;
+                self.pos += 1;
+                self.expect = Expect::FirstKeyOrEnd;
+                Ok(Event::ObjStart)
+            }
+            Some(b'[') => {
+                self.push(false)?;
+                self.pos += 1;
+                self.expect = Expect::FirstItemOrEnd;
+                Ok(Event::ArrStart)
+            }
+            Some(b'"') => {
+                let s = self.raw_string()?;
+                self.after_value();
+                Ok(Event::Str(s))
+            }
+            Some(b't') => self.lit("true", Event::Bool(true)),
+            Some(b'f') => self.lit("false", Event::Bool(false)),
+            Some(b'n') => self.lit("null", Event::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(self.err("expected a JSON value")),
+        }
+    }
+
+    fn lit(&mut self, word: &str, ev: Event<'a>) -> Result<Event<'a>, ParseError> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            self.after_value();
+            Ok(ev)
+        } else {
+            Err(self.err(&format!("expected '{word}'")))
+        }
+    }
+
+    fn number(&mut self) -> Result<Event<'a>, ParseError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let s = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        let x = s
+            .parse::<f64>()
+            .map_err(|_| self.err("invalid number"))?;
+        self.after_value();
+        Ok(Event::Num(x))
+    }
+
+    /// Scan a string token, recording only whether it needs unescaping.
+    /// Escape validity is checked at decode time, exactly once.
+    fn raw_string(&mut self) -> Result<RawStr<'a>, ParseError> {
+        debug_assert_eq!(self.peek(), Some(b'"'));
+        self.pos += 1;
+        let start = self.pos;
+        let mut escaped = false;
+        loop {
+            match self.bytes.get(self.pos) {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    let raw = &self.bytes[start..self.pos];
+                    self.pos += 1;
+                    return Ok(RawStr {
+                        raw,
+                        start,
+                        escaped,
+                    });
+                }
+                Some(b'\\') => {
+                    escaped = true;
+                    self.pos += 2; // the escaped byte can never close the string
+                    if self.pos > self.bytes.len() {
+                        return Err(self.err("unterminated string"));
+                    }
+                }
+                Some(_) => self.pos += 1,
+            }
+        }
+    }
+
+    /// Consume one whole value at a value position (scalars in one
+    /// event, containers to their matching close) without decoding any
+    /// of it — how readers skip fields they don't care about.
+    pub fn skip_value(&mut self) -> Result<(), ParseError> {
+        match self.next_event()? {
+            Some(Event::ObjStart | Event::ArrStart) => self.skip_container(),
+            Some(Event::Key(_)) => Err(self.err("expected a value, found a key")),
+            Some(_) => Ok(()),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+
+    /// Finish skipping a container whose opening event was already
+    /// consumed (the unknown-field case of event-loop readers).
+    pub fn skip_container(&mut self) -> Result<(), ParseError> {
+        let mut open = 1usize;
+        while open > 0 {
+            match self.next_event()? {
+                Some(Event::ObjStart | Event::ArrStart) => open += 1,
+                Some(Event::ObjEnd | Event::ArrEnd) => open -= 1,
+                Some(_) => {}
+                None => return Err(self.err("unexpected end of input")),
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::{self, Value};
+
+    /// Rebuild a tree from events — the equivalence oracle against the
+    /// tree parser.
+    fn to_value(input: &str) -> Result<Value, ParseError> {
+        let mut p = PullParser::new(input.as_bytes());
+        let mut scratch = String::new();
+        let v = build(&mut p, &mut scratch, None)?;
+        match p.next_event()? {
+            None => Ok(v),
+            Some(_) => Err(ParseError {
+                at: 0,
+                msg: "extra events".to_string(),
+            }),
+        }
+    }
+
+    fn build(
+        p: &mut PullParser,
+        scratch: &mut String,
+        seed: Option<Event>,
+    ) -> Result<Value, ParseError> {
+        let eof = || ParseError {
+            at: 0,
+            msg: "unexpected eof".to_string(),
+        };
+        let ev = match seed {
+            Some(e) => e,
+            None => p.next_event()?.ok_or_else(eof)?,
+        };
+        Ok(match ev {
+            Event::Null => Value::Null,
+            Event::Bool(b) => Value::Bool(b),
+            Event::Num(x) => Value::Num(x),
+            Event::Str(s) => Value::Str(s.decode_into(scratch)?.to_string()),
+            Event::ArrStart => {
+                let mut xs = Vec::new();
+                loop {
+                    match p.next_event()?.ok_or_else(eof)? {
+                        Event::ArrEnd => break,
+                        other => xs.push(build(p, scratch, Some(other))?),
+                    }
+                }
+                Value::Arr(xs)
+            }
+            Event::ObjStart => {
+                let mut m = std::collections::BTreeMap::new();
+                loop {
+                    match p.next_event()?.ok_or_else(eof)? {
+                        Event::ObjEnd => break,
+                        Event::Key(k) => {
+                            let key = k.decode_into(scratch)?.to_string();
+                            m.insert(key, build(p, scratch, None)?);
+                        }
+                        _ => {
+                            return Err(ParseError {
+                                at: 0,
+                                msg: "expected key".to_string(),
+                            })
+                        }
+                    }
+                }
+                Value::Obj(m)
+            }
+            Event::Key(_) | Event::ObjEnd | Event::ArrEnd => {
+                return Err(ParseError {
+                    at: 0,
+                    msg: "unexpected event".to_string(),
+                })
+            }
+        })
+    }
+
+    #[test]
+    fn agrees_with_tree_parser_on_valid_docs() {
+        for src in [
+            "null",
+            "true",
+            "-1.5",
+            "1e3",
+            "\"hi\"",
+            "[]",
+            "{}",
+            "[1, 2, 3]",
+            r#"{"a": [1, 2, {"b": null}], "c": "x\ny", "d": true}"#,
+            r#"{"records": [{"id": 0, "family": "poisson", "secs": 0.25}], "schema_version": 2}"#,
+            r#"[[[]], [[], [1]], {"k": {"kk": [true, false, null]}}]"#,
+            r#""esc Aé \"q\" \\ /""#,
+        ] {
+            let tree = json::parse(src).unwrap();
+            let pulled = to_value(src).unwrap_or_else(|e| panic!("{src}: {e}"));
+            assert_eq!(pulled, tree, "{src}");
+        }
+    }
+
+    #[test]
+    fn rejects_what_the_tree_parser_rejects() {
+        for src in [
+            "{} x",
+            "[1,]",
+            "{\"a\":}",
+            "\"unterminated",
+            "[1 2]",
+            "{\"a\" 1}",
+            "{1: 2}",
+            "",
+            "[",
+            "{\"a\": 1,}",
+        ] {
+            assert!(json::parse(src).is_err(), "oracle accepts {src:?}");
+            assert!(to_value(src).is_err(), "pull parser accepts {src:?}");
+        }
+    }
+
+    #[test]
+    fn depth_limit_is_an_error_not_an_overflow() {
+        // Well past any plausible stack budget if this recursed.
+        let deep = "[".repeat(100_000);
+        let err = to_value(&deep).unwrap_err();
+        assert!(err.msg.contains("nesting"), "{err}");
+        // Exactly at the limit still parses.
+        let n = MAX_DEPTH;
+        let ok = format!("{}{}", "[".repeat(n), "]".repeat(n));
+        assert!(to_value(&ok).is_ok());
+        let over = format!("{}{}", "[".repeat(n + 1), "]".repeat(n + 1));
+        assert!(to_value(&over).is_err());
+    }
+
+    #[test]
+    fn borrowed_strings_avoid_copies() {
+        let doc = r#"{"family": "helmholtz", "esc": "a\tb"}"#;
+        let mut p = PullParser::new(doc.as_bytes());
+        assert!(matches!(p.next_event().unwrap(), Some(Event::ObjStart)));
+        let Some(Event::Key(k)) = p.next_event().unwrap() else {
+            panic!("expected key");
+        };
+        assert!(k.eq_str("family"));
+        assert_eq!(k.as_borrowed(), Some("family"));
+        let Some(Event::Str(v)) = p.next_event().unwrap() else {
+            panic!("expected str");
+        };
+        assert_eq!(v.as_borrowed(), Some("helmholtz"));
+        let Some(Event::Key(k2)) = p.next_event().unwrap() else {
+            panic!("expected key");
+        };
+        assert!(k2.eq_str("esc"));
+        let Some(Event::Str(v2)) = p.next_event().unwrap() else {
+            panic!("expected str");
+        };
+        // Escaped: no borrow, but scratch decoding works.
+        assert_eq!(v2.as_borrowed(), None);
+        let mut scratch = String::new();
+        assert_eq!(v2.decode_into(&mut scratch).unwrap(), "a\tb");
+    }
+
+    #[test]
+    fn skip_value_jumps_whole_subtrees() {
+        let doc = r#"{"big": [[1,2],[3,{"x":[4]}]], "tail": 7}"#;
+        let mut p = PullParser::new(doc.as_bytes());
+        assert!(matches!(p.next_event().unwrap(), Some(Event::ObjStart)));
+        let Some(Event::Key(_)) = p.next_event().unwrap() else {
+            panic!("expected key");
+        };
+        p.skip_value().unwrap();
+        let Some(Event::Key(k)) = p.next_event().unwrap() else {
+            panic!("expected key");
+        };
+        assert!(k.eq_str("tail"));
+        assert!(matches!(p.next_event().unwrap(), Some(Event::Num(x)) if x == 7.0));
+        assert!(matches!(p.next_event().unwrap(), Some(Event::ObjEnd)));
+        assert!(p.next_event().unwrap().is_none());
+    }
+
+    #[test]
+    fn byte_pos_brackets_skipped_values() {
+        let doc = r#"{"config": {"grid": 8}, "z": 1}"#;
+        let mut p = PullParser::new(doc.as_bytes());
+        p.next_event().unwrap(); // {
+        p.next_event().unwrap(); // "config"
+        let start = p.byte_pos();
+        p.skip_value().unwrap();
+        let end = p.byte_pos();
+        let raw = &doc[start..end];
+        assert_eq!(raw.trim(), r#"{"grid": 8}"#);
+    }
+}

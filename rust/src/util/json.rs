@@ -9,6 +9,12 @@
 use std::collections::BTreeMap;
 use std::fmt;
 
+/// Maximum container nesting accepted by both this tree parser and the
+/// streaming pull parser ([`crate::store::pull`]). Deeper input is a
+/// hard [`ParseError`] — never a stack overflow. Generously above
+/// anything a manifest or config produces (which nest < 10 deep).
+pub const MAX_DEPTH: usize = 128;
+
 /// A JSON value. Objects use a `BTreeMap` so serialization is
 /// deterministic (stable key order) — important for reproducible
 /// manifests and golden-file tests.
@@ -125,7 +131,9 @@ impl<T: Into<Value>> From<Vec<T>> for Value {
     }
 }
 
-fn write_escaped(s: &str, out: &mut String) {
+/// Escape and quote a string. Shared with the streaming emitter
+/// ([`crate::store::emit`]) so both serializers produce identical bytes.
+pub(crate) fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
     for c in s.chars() {
         match c {
@@ -141,7 +149,10 @@ fn write_escaped(s: &str, out: &mut String) {
     out.push('"');
 }
 
-fn write_num(x: f64, out: &mut String) {
+/// Format a number the way every manifest writer must: integral values
+/// below 2⁵³ print as integers, everything else via f64 `Display`.
+/// Shared with the streaming emitter for byte-identical output.
+pub(crate) fn write_num(x: f64, out: &mut String) {
     if !x.is_finite() {
         // JSON has no Inf/NaN; fail loudly rather than emit invalid JSON.
         panic!("non-finite number cannot be serialized to JSON: {x}");
@@ -240,7 +251,11 @@ impl std::error::Error for ParseError {}
 /// garbage is an error.
 pub fn parse(input: &str) -> Result<Value, ParseError> {
     let bytes = input.as_bytes();
-    let mut p = Parser { bytes, pos: 0 };
+    let mut p = Parser {
+        bytes,
+        pos: 0,
+        depth: 0,
+    };
     p.skip_ws();
     let v = p.value()?;
     p.skip_ws();
@@ -253,6 +268,10 @@ pub fn parse(input: &str) -> Result<Value, ParseError> {
 struct Parser<'a> {
     bytes: &'a [u8],
     pos: usize,
+    /// Current container nesting; bounded by [`MAX_DEPTH`] so malicious
+    /// or corrupt input errors out instead of overflowing the stack
+    /// (this parser recurses once per level).
+    depth: usize,
 }
 
 impl<'a> Parser<'a> {
@@ -384,12 +403,22 @@ impl<'a> Parser<'a> {
         }
     }
 
+    fn enter(&mut self) -> Result<(), ParseError> {
+        if self.depth >= MAX_DEPTH {
+            return Err(self.err(&format!("nesting deeper than {MAX_DEPTH} levels")));
+        }
+        self.depth += 1;
+        Ok(())
+    }
+
     fn array(&mut self) -> Result<Value, ParseError> {
         self.expect(b'[')?;
+        self.enter()?;
         let mut xs = Vec::new();
         self.skip_ws();
         if self.peek() == Some(b']') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Value::Arr(xs));
         }
         loop {
@@ -400,6 +429,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b']') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Value::Arr(xs));
                 }
                 _ => return Err(self.err("expected ',' or ']'")),
@@ -409,10 +439,12 @@ impl<'a> Parser<'a> {
 
     fn object(&mut self) -> Result<Value, ParseError> {
         self.expect(b'{')?;
+        self.enter()?;
         let mut m = BTreeMap::new();
         self.skip_ws();
         if self.peek() == Some(b'}') {
             self.pos += 1;
+            self.depth -= 1;
             return Ok(Value::Obj(m));
         }
         loop {
@@ -428,6 +460,7 @@ impl<'a> Parser<'a> {
                 Some(b',') => self.pos += 1,
                 Some(b'}') => {
                     self.pos += 1;
+                    self.depth -= 1;
                     return Ok(Value::Obj(m));
                 }
                 _ => return Err(self.err("expected ',' or '}'")),
@@ -493,6 +526,26 @@ mod tests {
         ]);
         let s = v.to_string_pretty();
         assert_eq!(parse(&s).unwrap(), v);
+    }
+
+    #[test]
+    fn deeply_nested_input_is_an_error_not_a_stack_overflow() {
+        // 100k levels would blow the stack if the limit were missing.
+        let deep_arr = "[".repeat(100_000);
+        let err = parse(&deep_arr).unwrap_err();
+        assert!(err.msg.contains("nesting"), "{err}");
+        let deep_obj = "{\"k\":".repeat(100_000);
+        let err = parse(&deep_obj).unwrap_err();
+        assert!(err.msg.contains("nesting"), "{err}");
+        // The boundary: MAX_DEPTH parses, MAX_DEPTH + 1 does not.
+        let ok = format!("{}{}", "[".repeat(MAX_DEPTH), "]".repeat(MAX_DEPTH));
+        assert!(parse(&ok).is_ok());
+        let over = format!(
+            "{}{}",
+            "[".repeat(MAX_DEPTH + 1),
+            "]".repeat(MAX_DEPTH + 1)
+        );
+        assert!(parse(&over).is_err());
     }
 
     #[test]

@@ -1,0 +1,279 @@
+//! End-to-end tests of the streaming, resumable dataset store: the
+//! chunked (schema-3) manifest, crash-resume from arbitrary torn
+//! states, and the streaming/shared readers.
+//!
+//! The centerpiece is a kill-at-any-byte property test: generate a
+//! chunked dataset per operator family, truncate its manifest at a
+//! spread of byte offsets (frame boundaries, mid-payload, mid-header),
+//! optionally tear `eigs.bin` back to the checkpoint too, resume, and
+//! demand the result is indistinguishable from the uninterrupted run —
+//! byte-identical `eigs.bin` records and manifest record fields (minus
+//! arrival-dependent `offset` and wall-clock `secs`).
+
+use scsf::coordinator::config::{FamilySpec, GenConfig};
+use scsf::coordinator::dataset::{scan_resumable, DatasetReader, RecordMeta};
+use scsf::coordinator::pipeline::{generate_dataset, resume_dataset};
+use scsf::sort::SortMethod;
+use std::path::{Path, PathBuf};
+
+/// The five built-in operator families.
+const FAMILIES: [&str; 5] = [
+    "poisson",
+    "elliptic",
+    "helmholtz",
+    "vibration",
+    "helmholtz_fem",
+];
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "scsf_stream_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Small-but-real chunked config: two shards (so resume must reconcile
+/// interleaved runs), warm chains on (so resume must re-seed them),
+/// checkpoint every 2 records.
+fn chunked_cfg(family: &str) -> GenConfig {
+    GenConfig {
+        families: vec![FamilySpec::new(family, 6)],
+        grid: 8,
+        n_eigs: 3,
+        tol: Some(1e-7),
+        seed: 23,
+        shards: 2,
+        channel_capacity: 2,
+        sort: SortMethod::TruncatedFft { p0: 6 },
+        chunk_records: Some(2),
+        ..Default::default()
+    }
+}
+
+fn copy_dataset(src: &Path, dst: &Path) {
+    let _ = std::fs::remove_dir_all(dst);
+    std::fs::create_dir_all(dst).unwrap();
+    for f in ["eigs.bin", "manifest.json"] {
+        std::fs::copy(src.join(f), dst.join(f)).unwrap();
+    }
+}
+
+fn truncate_file(path: &Path, len: u64) {
+    let f = std::fs::OpenOptions::new().write(true).open(path).unwrap();
+    f.set_len(len).unwrap();
+}
+
+/// A record's exact byte span in `eigs.bin`.
+fn record_bytes<'a>(bin: &'a [u8], meta: &RecordMeta) -> &'a [u8] {
+    let len = 3 * 8 + meta.l * 8 + meta.n * meta.l * 8;
+    &bin[meta.offset as usize..meta.offset as usize + len]
+}
+
+/// Strip the fields a resumed run may legitimately change: `offset`
+/// depends on nondeterministic arrival interleave, `secs` on the clock.
+fn normalized(meta: &RecordMeta) -> RecordMeta {
+    let mut m = meta.clone();
+    m.offset = 0;
+    m.secs = 0.0;
+    m
+}
+
+/// Assert the dataset in `got` stores exactly the records of `want`:
+/// identical per-id record bytes in `eigs.bin`, identical manifest
+/// record fields modulo `offset`/`secs`.
+fn assert_same_dataset(want: &Path, got: &Path, ctx: &str) {
+    let want_reader = DatasetReader::open(want).unwrap();
+    let got_reader = DatasetReader::open(got).unwrap();
+    assert_eq!(
+        want_reader.index().len(),
+        got_reader.index().len(),
+        "{ctx}: record count"
+    );
+    let want_bin = std::fs::read(want.join("eigs.bin")).unwrap();
+    let got_bin = std::fs::read(got.join("eigs.bin")).unwrap();
+    // Both indexes are sorted by id.
+    for (a, b) in want_reader.index().iter().zip(got_reader.index()) {
+        assert_eq!(normalized(a), normalized(b), "{ctx}: record {} meta", a.id);
+        assert_eq!(
+            record_bytes(&want_bin, a),
+            record_bytes(&got_bin, b),
+            "{ctx}: record {} bytes differ",
+            a.id
+        );
+    }
+}
+
+/// Byte offsets at which to kill the manifest: the file start, inside
+/// the header, every frame boundary, and mid-payload points between
+/// them. A frame is a payload line plus a trailer line, so frame
+/// boundaries sit after every second newline.
+fn kill_offsets(manifest: &[u8]) -> Vec<u64> {
+    let newlines: Vec<usize> = manifest
+        .iter()
+        .enumerate()
+        .filter_map(|(i, b)| (*b == b'\n').then_some(i))
+        .collect();
+    let boundaries: Vec<u64> = newlines
+        .iter()
+        .skip(1)
+        .step_by(2)
+        .map(|&i| (i + 1) as u64)
+        .collect();
+    let mut offsets = vec![0, 1, boundaries[0] - 1];
+    offsets.extend(boundaries.iter().copied());
+    // Mid-payload: halfway into each frame after the header.
+    for w in boundaries.windows(2) {
+        offsets.push((w[0] + w[1]) / 2);
+    }
+    offsets.push(manifest.len() as u64 - 1);
+    offsets.sort_unstable();
+    offsets.dedup();
+    // Never include the untouched length: a complete dataset is not
+    // resumable (by design), which a separate test asserts.
+    offsets.retain(|&o| o < manifest.len() as u64);
+    offsets
+}
+
+#[test]
+fn kill_at_any_byte_then_resume_reproduces_the_dataset() {
+    for family in FAMILIES {
+        let base = tmpdir(&format!("kill_base_{family}"));
+        let cfg = chunked_cfg(family);
+        generate_dataset(&cfg, &base).unwrap();
+        let manifest_bytes = std::fs::read(base.join("manifest.json")).unwrap();
+        // Header frame = first payload line + first trailer line, so
+        // it ends right after the second newline.
+        let header_len = manifest_bytes
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| **b == b'\n')
+            .nth(1)
+            .map(|(i, _)| i as u64 + 1)
+            .unwrap();
+        let work = tmpdir(&format!("kill_work_{family}"));
+        for (i, off) in kill_offsets(&manifest_bytes).into_iter().enumerate() {
+            let ctx = format!("{family} killed at byte {off}");
+            copy_dataset(&base, &work);
+            truncate_file(&work.join("manifest.json"), off);
+            if off < header_len {
+                // Nothing durable survives without a header: resume
+                // must fail cleanly, not corrupt or invent data.
+                let err = resume_dataset(&work).unwrap_err().to_string();
+                assert!(
+                    err.contains("torn before its header frame"),
+                    "{ctx}: {err}"
+                );
+                continue;
+            }
+            // Alternate between a crash that also tore eigs.bin back
+            // to the checkpoint and one that left extra (undurable)
+            // eigenpair bytes for the writer to truncate.
+            let scan = scan_resumable(&work).unwrap();
+            assert!(!scan.complete, "{ctx}: footer must be gone");
+            if i % 2 == 0 {
+                truncate_file(&work.join("eigs.bin"), scan.point.eigs_bytes);
+            }
+            let report = resume_dataset(&work).unwrap();
+            assert_eq!(report.n_problems, 6, "{ctx}");
+            assert_eq!(report.resumed_records, scan.records.len(), "{ctx}");
+            assert_same_dataset(&base, &work, &ctx);
+            let reader = DatasetReader::open(&work).unwrap();
+            assert!(reader.layout().unwrap().complete, "{ctx}");
+            // A resumed dataset is complete: resuming again is an error.
+            let err = resume_dataset(&work).unwrap_err().to_string();
+            assert!(err.contains("nothing to resume"), "{ctx}: {err}");
+        }
+        let _ = std::fs::remove_dir_all(&base);
+        let _ = std::fs::remove_dir_all(&work);
+    }
+}
+
+#[test]
+fn streaming_reader_matches_random_access() {
+    let dir = tmpdir("stream_match");
+    let cfg = chunked_cfg("helmholtz");
+    generate_dataset(&cfg, &dir).unwrap();
+    let mut reader = DatasetReader::open(&dir).unwrap();
+    let metas: Vec<RecordMeta> = reader.index().to_vec();
+    // Stream in storage order, skipping every third record.
+    let mut stream = reader.stream().unwrap();
+    let mut seen = 0usize;
+    let mut pos = 0usize;
+    while let Some(meta) = stream.peek_meta().cloned() {
+        if pos % 3 == 2 {
+            stream.skip_record();
+            pos += 1;
+            continue;
+        }
+        let view = stream.next_record().unwrap().unwrap();
+        assert_eq!(view.id, meta.id);
+        let rec = reader.read(meta.id).unwrap();
+        assert_eq!(view.values, &rec.values[..]);
+        assert_eq!(view.vectors, rec.vectors.data());
+        seen += 1;
+        pos += 1;
+    }
+    assert_eq!(pos, metas.len());
+    assert_eq!(seen, metas.len() - metas.len() / 3);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn shared_readers_serve_concurrent_threads() {
+    let dir = tmpdir("shared_conc");
+    let cfg = chunked_cfg("poisson");
+    generate_dataset(&cfg, &dir).unwrap();
+    let mut reader = DatasetReader::open(&dir).unwrap();
+    let want: Vec<_> = (0..6).map(|id| reader.read(id).unwrap()).collect();
+    let shared = reader.into_shared();
+    std::thread::scope(|scope| {
+        for t in 0..3usize {
+            let shared = shared.clone();
+            let want = &want;
+            scope.spawn(move || {
+                let mut cursor = shared.cursor().unwrap();
+                let ids: Vec<usize> = if t % 2 == 0 {
+                    (0..6).collect()
+                } else {
+                    (0..6).rev().collect()
+                };
+                for id in ids {
+                    let rec = cursor.read(id).unwrap();
+                    assert_eq!(rec.values, want[id].values, "thread {t} id {id}");
+                    assert_eq!(rec.vectors, want[id].vectors, "thread {t} id {id}");
+                }
+            });
+        }
+    });
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn legacy_default_is_untouched_and_not_resumable() {
+    let dir = tmpdir("legacy_shape");
+    let mut cfg = chunked_cfg("helmholtz");
+    cfg.chunk_records = None; // the default: legacy one-shot manifest
+    generate_dataset(&cfg, &dir).unwrap();
+    assert!(
+        !dir.join("manifest.json.tmp").exists(),
+        "finalize must clean up its temp file"
+    );
+    let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    let v = scsf::util::json::parse(&text).unwrap();
+    assert_eq!(
+        v.get("schema_version")
+            .and_then(scsf::util::json::Value::as_usize),
+        Some(2)
+    );
+    let mut reader = DatasetReader::open(&dir).unwrap();
+    assert_eq!(reader.schema_version(), 2);
+    assert!(reader.layout().is_none(), "legacy manifests have no layout");
+    assert_eq!(reader.index().len(), 6);
+    let _ = reader.read(0).unwrap();
+    let err = resume_dataset(&dir).unwrap_err().to_string();
+    assert!(err.contains("--chunk-records"), "{err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
