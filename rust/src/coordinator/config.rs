@@ -13,6 +13,7 @@ use super::scheduler::{FamilyGroup, SortScope};
 use crate::anyhow;
 use crate::eig::chebyshev::{FilterBackendKind, FilterSchedule, Precision};
 use crate::eig::chfsi::{ChfsiOptions, Recycling};
+use crate::eig::op::{ProblemKind, Transform};
 use crate::eig::scsf::ScsfOptions;
 use crate::eig::EigOptions;
 use crate::grf::GrfParams;
@@ -285,6 +286,19 @@ pub struct GenConfig {
     /// but numerically distinct). Native backends only — the XLA path
     /// rejects `deflate`.
     pub recycling: Recycling,
+    /// Eigenproblem shape: `standard` (`Ax = λx` — bit-for-bit the
+    /// historical output, the default) or `generalized` (`Ax = λMx`
+    /// with the family's consistent mass matrix; only families that
+    /// carry one — `helmholtz_fem`, `vibration` — are accepted).
+    /// Native backends only — the XLA path rejects `generalized`.
+    pub problem: ProblemKind,
+    /// Spectral transformation applied before filtering: `none`
+    /// (extremal eigenvalues — bit-for-bit the historical output, the
+    /// default) or `shift_invert:σ` (the `L` eigenvalues just above σ;
+    /// each solve factors `A − σM` once). Native backends only — the
+    /// XLA path rejects transforms, and `mixed` precision / `deflate`
+    /// recycling are incompatible with them.
+    pub transform: Transform,
     /// Sorting method (paper default: truncated FFT, p₀ = 20).
     pub sort: SortMethod,
     /// Where the similarity sort runs: one global order per family
@@ -344,6 +358,8 @@ impl Default for GenConfig {
             precision: Precision::F64,
             filter_backend: FilterBackendKind::Csr,
             recycling: Recycling::Off,
+            problem: ProblemKind::Standard,
+            transform: Transform::None,
             sort: SortMethod::TruncatedFft { p0: 20 },
             sort_scope: SortScope::Global,
             handoff_threshold: None,
@@ -428,6 +444,46 @@ impl GenConfig {
                     self.recycling.name()
                 ));
             }
+            if self.problem != ProblemKind::Standard {
+                return Err(anyhow!(
+                    "problem {:?} requires a native backend: the xla backend only solves \
+                     standard problems (set problem: \"standard\" or backend kind: \"native\")",
+                    self.problem.name()
+                ));
+            }
+            if !self.transform.is_none() {
+                return Err(anyhow!(
+                    "transform {:?} requires a native backend: the xla backend has no \
+                     spectral-transformation path (set transform: \"none\" or backend kind: \
+                     \"native\")",
+                    self.transform.name()
+                ));
+            }
+        }
+        // Transformed operators run every matvec through triangular
+        // solves in f64 coordinates: the f32 filter downcast and the
+        // deflation chain's plain-A recycle updates have no meaning
+        // there, so reject the combinations up front.
+        let transformed = self.problem != ProblemKind::Standard || !self.transform.is_none();
+        if transformed && self.precision != Precision::F64 {
+            return Err(anyhow!(
+                "precision {:?} is incompatible with problem {:?} / transform {:?}: \
+                 mixed-precision filtering only runs on plain (untransformed) operators \
+                 (set precision: \"f64\")",
+                self.precision.name(),
+                self.problem.name(),
+                self.transform.name()
+            ));
+        }
+        if transformed && self.recycling != Recycling::Off {
+            return Err(anyhow!(
+                "recycling {:?} is incompatible with problem {:?} / transform {:?}: \
+                 subspace recycling only runs on plain (untransformed) operators \
+                 (set recycling: \"off\")",
+                self.recycling.name(),
+                self.problem.name(),
+                self.transform.name()
+            ));
         }
         let mut out = Vec::with_capacity(self.families.len());
         let mut start = 0usize;
@@ -444,6 +500,22 @@ impl GenConfig {
                 return Err(anyhow!("family spec {:?}: grid must be >= 1", spec.family));
             }
             let tol = self.spec_tol(spec, handle.as_ref());
+            if self.problem == ProblemKind::Generalized && !handle.has_mass_matrix() {
+                return Err(anyhow!(
+                    "family {:?} carries no mass matrix: problem \"generalized\" needs one \
+                     (families with consistent masses: {})",
+                    spec.family,
+                    registry
+                        .names()
+                        .iter()
+                        .filter(|n| registry
+                            .get(n)
+                            .is_some_and(|f| f.has_mass_matrix()))
+                        .cloned()
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ));
+            }
             let end = start + spec.count;
             out.push(ResolvedFamily {
                 handle,
@@ -487,6 +559,8 @@ impl GenConfig {
         chfsi.precision = self.precision;
         chfsi.filter_backend = self.filter_backend;
         chfsi.recycling = self.recycling;
+        chfsi.problem = self.problem;
+        chfsi.transform = self.transform;
         ScsfOptions {
             chfsi,
             sort: self.sort,
@@ -518,7 +592,7 @@ impl GenConfig {
                 ("artifacts_dir", artifacts_dir.as_str().into()),
             ]),
         };
-        Value::obj(vec![
+        let mut fields: Vec<(&str, Value)> = vec![
             (
                 "families",
                 Value::Arr(self.families.iter().map(FamilySpec::to_json).collect()),
@@ -538,6 +612,16 @@ impl GenConfig {
             ("precision", self.precision.name().into()),
             ("filter_backend", self.filter_backend.name().into()),
             ("recycling", self.recycling.name().into()),
+        ];
+        // Emitted only when non-default so default configs (and their
+        // manifest echoes) stay byte-identical to historical builds.
+        if self.problem != ProblemKind::Standard {
+            fields.push(("problem", self.problem.name().into()));
+        }
+        if !self.transform.is_none() {
+            fields.push(("transform", self.transform.name().as_str().into()));
+        }
+        fields.extend([
             ("sort", sort),
             ("sort_scope", self.sort_scope.name().into()),
             (
@@ -570,8 +654,8 @@ impl GenConfig {
                     ("tau", self.grf.tau.into()),
                 ]),
             ),
-        ])
-        .to_string_pretty()
+        ]);
+        Value::obj(fields).to_string_pretty()
     }
 
     /// Parse from JSON (inverse of [`GenConfig::to_json`]; missing keys
@@ -685,6 +769,25 @@ impl GenConfig {
                 .ok_or_else(|| anyhow!("recycling must be a string"))?;
             cfg.recycling = Recycling::parse(name).ok_or_else(|| {
                 anyhow!("unknown recycling {name} (expected \"off\" or \"deflate\")")
+            })?;
+        }
+        if let Some(s) = v.get("problem") {
+            let name = s
+                .as_str()
+                .ok_or_else(|| anyhow!("problem must be a string"))?;
+            cfg.problem = ProblemKind::parse(name).ok_or_else(|| {
+                anyhow!("unknown problem {name} (expected \"standard\" or \"generalized\")")
+            })?;
+        }
+        if let Some(s) = v.get("transform") {
+            let name = s
+                .as_str()
+                .ok_or_else(|| anyhow!("transform must be a string"))?;
+            cfg.transform = Transform::parse(name).ok_or_else(|| {
+                anyhow!(
+                    "unknown transform {name} (expected \"none\" or \"shift_invert:SIGMA\" \
+                     with finite SIGMA)"
+                )
             })?;
         }
         if let Some(sort) = v.get("sort") {
@@ -1146,6 +1249,107 @@ mod tests {
         // Bad values fail loudly (a typo must not silently run off).
         assert!(GenConfig::from_json(r#"{"recycling": "deflat"}"#).is_err());
         assert!(GenConfig::from_json(r#"{"recycling": true}"#).is_err());
+    }
+
+    #[test]
+    fn problem_and_transform_knobs_roundtrip_and_validate() {
+        // Defaults are standard/none, missing keys parse as defaults,
+        // and — the byte-identity contract — default configs do not
+        // even *emit* the keys.
+        let cfg = GenConfig::default();
+        assert_eq!(cfg.problem, ProblemKind::Standard);
+        assert!(cfg.transform.is_none());
+        assert!(!cfg.to_json().contains("\"problem\""));
+        assert!(!cfg.to_json().contains("\"transform\""));
+        let parsed = GenConfig::from_json("{}").unwrap();
+        assert_eq!(parsed.problem, ProblemKind::Standard);
+        assert!(parsed.transform.is_none());
+        // Non-default values round-trip and propagate into solver opts.
+        let gen = GenConfig {
+            problem: ProblemKind::Generalized,
+            transform: Transform::ShiftInvert { sigma: 2.5 },
+            ..GenConfig::single("vibration", 2)
+        };
+        let back = GenConfig::from_json(&gen.to_json()).unwrap();
+        assert_eq!(back, gen);
+        let o = gen.scsf_options_with_tol(1e-8);
+        assert_eq!(o.chfsi.problem, ProblemKind::Generalized);
+        assert_eq!(o.chfsi.transform, Transform::ShiftInvert { sigma: 2.5 });
+        // The bare string forms parse too.
+        let from_key =
+            GenConfig::from_json(r#"{"problem": "generalized", "transform": "shift_invert:1.5"}"#)
+                .unwrap();
+        assert_eq!(from_key.problem, ProblemKind::Generalized);
+        assert_eq!(from_key.transform, Transform::ShiftInvert { sigma: 1.5 });
+        // Bad values fail loudly.
+        assert!(GenConfig::from_json(r#"{"problem": "general"}"#).is_err());
+        assert!(GenConfig::from_json(r#"{"problem": 2}"#).is_err());
+        assert!(GenConfig::from_json(r#"{"transform": "shift_invert:nan"}"#).is_err());
+        assert!(GenConfig::from_json(r#"{"transform": "invert"}"#).is_err());
+    }
+
+    #[test]
+    fn generalized_requires_a_family_with_a_mass_matrix() {
+        let reg = FamilyRegistry::builtin();
+        let bad = GenConfig {
+            problem: ProblemKind::Generalized,
+            ..GenConfig::single("poisson", 2)
+        };
+        let err = bad.resolve(&reg).unwrap_err().to_string();
+        assert!(err.contains("mass matrix"), "{err}");
+        assert!(err.contains("helmholtz_fem") && err.contains("vibration"), "{err}");
+        for fam in ["helmholtz_fem", "vibration"] {
+            let ok = GenConfig {
+                problem: ProblemKind::Generalized,
+                ..GenConfig::single(fam, 2)
+            };
+            assert!(ok.resolve(&reg).is_ok(), "{fam}");
+        }
+    }
+
+    #[test]
+    fn transforms_reject_mixed_precision_deflation_and_xla() {
+        let reg = FamilyRegistry::builtin();
+        let si = Transform::ShiftInvert { sigma: 1.0 };
+        let mixed = GenConfig {
+            transform: si,
+            precision: Precision::Mixed,
+            ..GenConfig::single("poisson", 2)
+        };
+        let err = mixed.resolve(&reg).unwrap_err().to_string();
+        assert!(err.contains("precision") && err.contains("incompatible"), "{err}");
+        let deflate = GenConfig {
+            problem: ProblemKind::Generalized,
+            recycling: Recycling::Deflate,
+            ..GenConfig::single("vibration", 2)
+        };
+        let err = deflate.resolve(&reg).unwrap_err().to_string();
+        assert!(err.contains("recycling") && err.contains("incompatible"), "{err}");
+        // The XLA path rejects both new knobs by name.
+        let xla = Backend::Xla {
+            artifacts_dir: "artifacts".to_string(),
+        };
+        let gen_xla = GenConfig {
+            problem: ProblemKind::Generalized,
+            backend: xla.clone(),
+            ..GenConfig::single("vibration", 2)
+        };
+        let err = gen_xla.resolve(&reg).unwrap_err().to_string();
+        assert!(err.contains("problem") && err.contains("generalized"), "{err}");
+        let si_xla = GenConfig {
+            transform: si,
+            backend: xla,
+            ..GenConfig::single("poisson", 2)
+        };
+        let err = si_xla.resolve(&reg).unwrap_err().to_string();
+        assert!(err.contains("transform") && err.contains("shift_invert"), "{err}");
+        // Native f64/off accepts both.
+        let native = GenConfig {
+            problem: ProblemKind::Generalized,
+            transform: si,
+            ..GenConfig::single("vibration", 2)
+        };
+        assert!(native.resolve(&reg).is_ok());
     }
 
     #[test]

@@ -105,6 +105,14 @@ pub struct RecordMeta {
     /// Chebyshev spectral upper bound the solve ended with (0 for
     /// pre-v3 datasets). Resume re-seeds warm chains from this.
     pub spectral_upper: f64,
+    /// Seconds spent factorizing the shifted operator for this solve
+    /// (0 under `transform: none`, and for datasets written before the
+    /// spectral-transform knob).
+    pub factor_secs: f64,
+    /// Triangular solves the spectral transform spent — every
+    /// `(A − σM)⁻¹` application is one forward + one backward sweep
+    /// (0 under `transform: none` and for older datasets).
+    pub trisolve_count: usize,
 }
 
 /// Length in bytes of a record's `eigs.bin` region.
@@ -115,7 +123,9 @@ fn record_len(n: usize, l: usize) -> u64 {
 /// Emit one record's manifest object. Keys are written in the same
 /// (alphabetical) order the legacy `BTreeMap` serializer produced, so
 /// the legacy path stays byte-identical. `with_upper` gates the
-/// v3-only `spectral_upper` field.
+/// v3-only `spectral_upper` field. The spectral-transform fields
+/// (`factor_secs`, `trisolve_count`) are emitted only when nonzero —
+/// untransformed datasets stay byte-identical to historical output.
 fn emit_record<W: std::io::Write>(
     e: &mut JsonEmitter<W>,
     r: &RecordMeta,
@@ -126,6 +136,10 @@ fn emit_record<W: std::io::Write>(
     e.usize_val(r.deflated_cols)?;
     e.key("f32_matvecs")?;
     e.usize_val(r.f32_matvecs)?;
+    if r.factor_secs > 0.0 {
+        e.key("factor_secs")?;
+        e.num(r.factor_secs)?;
+    }
     e.key("family")?;
     e.str_val(&r.family)?;
     e.key("filter_matvecs")?;
@@ -157,6 +171,10 @@ fn emit_record<W: std::io::Write>(
     if with_upper {
         e.key("spectral_upper")?;
         e.num(r.spectral_upper)?;
+    }
+    if r.trisolve_count > 0 {
+        e.key("trisolve_count")?;
+        e.usize_val(r.trisolve_count)?;
     }
     e.obj_end()
 }
@@ -329,6 +347,8 @@ impl DatasetWriter {
             recycle_dim: result.stats.recycle_dim,
             recycle_matvecs: result.stats.recycle_matvecs,
             spectral_upper: result.stats.spectral_upper,
+            factor_secs: result.stats.factor_secs,
+            trisolve_count: result.stats.trisolve_count,
         };
         match &mut self.mode {
             Mode::Legacy { records } => records.push(meta),
@@ -1008,6 +1028,10 @@ fn read_record_field(
         r.recycle_matvecs = num(p)?.round() as usize;
     } else if k.eq_str("spectral_upper") {
         r.spectral_upper = num(p)?;
+    } else if k.eq_str("factor_secs") {
+        r.factor_secs = num(p)?;
+    } else if k.eq_str("trisolve_count") {
+        r.trisolve_count = num(p)?.round() as usize;
     } else {
         p.skip_value().map_err(|e| anyhow!("manifest: {e}"))?;
     }
@@ -1439,6 +1463,35 @@ mod tests {
         }
         // No temp file left behind by the atomic-rename finalize.
         assert!(!dir.join("manifest.json.tmp").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn transform_counters_round_trip_and_stay_absent_by_default() {
+        let dir = tmpdir("transform");
+        let mut w = DatasetWriter::create(&dir).unwrap();
+        let mut r = fake_result(6, 2, 5);
+        r.stats.factor_secs = 0.125;
+        r.stats.trisolve_count = 77;
+        w.write_record(0, 0, "helmholtz", &r).unwrap();
+        w.write_record(1, 0, "helmholtz", &fake_result(6, 2, 6)).unwrap();
+        w.finalize(vec![]).unwrap();
+        let reader = DatasetReader::open(&dir).unwrap();
+        assert_eq!(reader.index()[0].factor_secs, 0.125);
+        assert_eq!(reader.index()[0].trisolve_count, 77);
+        // Records written without the keys read back as zero — the
+        // legacy-manifest compatibility contract.
+        assert_eq!(reader.index()[1].factor_secs, 0.0);
+        assert_eq!(reader.index()[1].trisolve_count, 0);
+        // Untransformed records don't even carry the keys, keeping
+        // default manifests byte-identical to historical output.
+        let manifest = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let v = json::parse(&manifest).unwrap();
+        let recs = v.get("records").unwrap().as_arr().unwrap();
+        assert!(recs[0].get("factor_secs").is_some());
+        assert!(recs[0].get("trisolve_count").is_some());
+        assert!(recs[1].get("factor_secs").is_none());
+        assert!(recs[1].get("trisolve_count").is_none());
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -47,6 +47,12 @@ pub struct FamilyReport {
     pub deflated_cols: usize,
     /// `A·x` products the recycling layer spent (subset of `matvecs`).
     pub recycle_matvecs: usize,
+    /// Triangular solves the spectral transform spent across the
+    /// family's solves (nonzero only under `transform: shift_invert`).
+    pub trisolve_count: usize,
+    /// Seconds factorizing shifted operators for the family's runs
+    /// (one LDLᵀ per distinct matrix; 0 under `transform: none`).
+    pub factor_secs: f64,
     /// Mean outer iterations per solve.
     pub avg_iterations: f64,
     /// Seconds in eigensolves for this family's problems.
@@ -61,9 +67,11 @@ pub struct FamilyReport {
 }
 
 impl FamilyReport {
-    /// JSON object for the manifest.
+    /// JSON object for the manifest. The spectral-transform counters
+    /// are emitted only when nonzero so manifests of untransformed
+    /// runs stay byte-identical to historical output.
     pub fn to_json(&self) -> Value {
-        Value::obj(vec![
+        let mut fields: Vec<(&str, Value)> = vec![
             ("family", self.family.as_str().into()),
             ("problems", self.problems.into()),
             ("runs", self.runs.into()),
@@ -74,12 +82,21 @@ impl FamilyReport {
             ("promotions", self.promotions.into()),
             ("deflated_cols", self.deflated_cols.into()),
             ("recycle_matvecs", self.recycle_matvecs.into()),
+        ];
+        if self.trisolve_count > 0 {
+            fields.push(("trisolve_count", self.trisolve_count.into()));
+        }
+        if self.factor_secs > 0.0 {
+            fields.push(("factor_secs", self.factor_secs.into()));
+        }
+        fields.extend([
             ("avg_iterations", self.avg_iterations.into()),
             ("solve_secs", self.solve_secs.into()),
             ("max_residual", self.max_residual.into()),
             ("tol", self.tol.into()),
             ("sort_quality", self.sort_quality.into()),
-        ])
+        ]);
+        Value::obj(fields)
     }
 }
 
@@ -107,6 +124,12 @@ pub struct ShardReport {
     pub deflated_cols: usize,
     /// `A·x` products the recycling layer spent (subset of `matvecs`).
     pub recycle_matvecs: usize,
+    /// Triangular solves the spectral transform spent across the run's
+    /// solves (nonzero only under `transform: shift_invert`).
+    pub trisolve_count: usize,
+    /// Seconds factorizing shifted operators across the run's solves
+    /// (0 under `transform: none`).
+    pub factor_secs: f64,
     /// Whether the run's first solve inherited the previous run's tail
     /// eigenpairs (a granted boundary handoff that actually arrived).
     pub warm_handoff: bool,
@@ -123,9 +146,11 @@ pub struct ShardReport {
 }
 
 impl ShardReport {
-    /// JSON object for the manifest.
+    /// JSON object for the manifest. The spectral-transform counters
+    /// are emitted only when nonzero so manifests of untransformed
+    /// runs stay byte-identical to historical output.
     pub fn to_json(&self) -> Value {
-        Value::obj(vec![
+        let mut fields: Vec<(&str, Value)> = vec![
             ("run", self.run.into()),
             ("family", self.family.as_str().into()),
             ("problems", self.problems.into()),
@@ -136,13 +161,22 @@ impl ShardReport {
             ("promotions", self.promotions.into()),
             ("deflated_cols", self.deflated_cols.into()),
             ("recycle_matvecs", self.recycle_matvecs.into()),
+        ];
+        if self.trisolve_count > 0 {
+            fields.push(("trisolve_count", self.trisolve_count.into()));
+        }
+        if self.factor_secs > 0.0 {
+            fields.push(("factor_secs", self.factor_secs.into()));
+        }
+        fields.extend([
             ("warm_handoff", self.warm_handoff.into()),
             ("cold_starts", self.cold_starts.into()),
             ("handoff_wait_secs", self.handoff_wait_secs.into()),
             ("solve_secs", self.solve_secs.into()),
             ("xla_calls", self.xla_calls.into()),
             ("native_fallbacks", self.native_fallbacks.into()),
-        ])
+        ]);
+        Value::obj(fields)
     }
 }
 
@@ -198,6 +232,13 @@ pub struct GenReport {
     /// pricing it alone caused plus thick-restart compression; subset
     /// of `total_matvecs`).
     pub recycle_matvecs: usize,
+    /// Triangular solves the spectral transform spent across all
+    /// solves — every `(A − σM)⁻¹` application is one forward + one
+    /// backward sweep (0 under the default `transform: none`).
+    pub trisolve_count: usize,
+    /// Seconds spent factorizing shifted operators (one sparse LDLᵀ
+    /// per distinct matrix; 0 under the default `transform: none`).
+    pub factor_secs: f64,
     /// Merged per-column filter-degree histogram: `degree_hist[m]` is
     /// the number of (column, sweep) pairs filtered at degree `m`
     /// across the whole run. Fixed schedules put everything in the
@@ -239,9 +280,12 @@ pub struct GenReport {
 }
 
 impl GenReport {
-    /// JSON object for the manifest / CLI output.
+    /// JSON object for the manifest / CLI output. The spectral-transform
+    /// rollups (`trisolve_count`, `factor_secs`) are emitted only when
+    /// nonzero so manifests of untransformed runs stay byte-identical
+    /// to historical output.
     pub fn to_json(&self) -> Value {
-        Value::obj(vec![
+        let mut fields: Vec<(&str, Value)> = vec![
             ("n_problems", self.n_problems.into()),
             ("total_secs", self.total_secs.into()),
             ("gen_secs", self.gen_secs.into()),
@@ -260,6 +304,14 @@ impl GenReport {
             ("promotions", self.promotions.into()),
             ("deflated_cols", self.deflated_cols.into()),
             ("recycle_matvecs", self.recycle_matvecs.into()),
+        ];
+        if self.trisolve_count > 0 {
+            fields.push(("trisolve_count", self.trisolve_count.into()));
+        }
+        if self.factor_secs > 0.0 {
+            fields.push(("factor_secs", self.factor_secs.into()));
+        }
+        fields.extend([
             ("degree_hist", degree_hist_pairs(&self.degree_hist)),
             ("max_residual", self.max_residual.into()),
             ("all_converged", self.all_converged.into()),
@@ -282,7 +334,8 @@ impl GenReport {
                 "shards",
                 Value::Arr(self.shards.iter().map(ShardReport::to_json).collect()),
             ),
-        ])
+        ]);
+        Value::obj(fields)
     }
 
     /// Compact human-readable summary line.
@@ -392,6 +445,45 @@ mod tests {
         assert_eq!(
             fams[0].get("sort_quality").and_then(Value::as_f64),
             Some(3.5)
+        );
+    }
+
+    #[test]
+    fn transform_counters_emit_only_when_nonzero() {
+        // Untransformed runs must serialize byte-identically to
+        // pre-transform builds: the keys simply don't appear.
+        let off = GenReport::default().to_json();
+        assert!(off.get("trisolve_count").is_none());
+        assert!(off.get("factor_secs").is_none());
+        assert!(FamilyReport::default().to_json().get("trisolve_count").is_none());
+        assert!(ShardReport::default().to_json().get("factor_secs").is_none());
+        let on = GenReport {
+            trisolve_count: 42,
+            factor_secs: 0.5,
+            families: vec![FamilyReport {
+                trisolve_count: 42,
+                factor_secs: 0.5,
+                ..Default::default()
+            }],
+            shards: vec![ShardReport {
+                trisolve_count: 42,
+                factor_secs: 0.5,
+                ..Default::default()
+            }],
+            ..Default::default()
+        };
+        let v = on.to_json();
+        assert_eq!(v.get("trisolve_count").and_then(Value::as_usize), Some(42));
+        assert_eq!(v.get("factor_secs").and_then(Value::as_f64), Some(0.5));
+        let fams = v.get("families").and_then(Value::as_arr).unwrap();
+        assert_eq!(
+            fams[0].get("trisolve_count").and_then(Value::as_usize),
+            Some(42)
+        );
+        let shards = v.get("shards").and_then(Value::as_arr).unwrap();
+        assert_eq!(
+            shards[0].get("factor_secs").and_then(Value::as_f64),
+            Some(0.5)
         );
     }
 

@@ -26,6 +26,7 @@ use super::scheduler::{self, Schedule, SortScope};
 use crate::anyhow;
 use crate::eig::chebyshev::{FilterBackend, FilterBackendKind, NativeFilter, Precision, SellFilter};
 use crate::eig::chfsi::Recycling;
+use crate::eig::op::{OpTag, ProblemKind};
 use crate::eig::scsf::Chain;
 use crate::eig::solver::Workspace;
 use crate::eig::WarmStart;
@@ -64,6 +65,19 @@ fn make_backend(cfg: &GenConfig) -> Result<Box<dyn FilterBackend>> {
             if cfg.recycling != Recycling::Off {
                 return Err(anyhow!(
                     "recycling \"deflate\" requires a native backend (xla has no deflation path)"
+                ));
+            }
+            if cfg.problem != ProblemKind::Standard {
+                return Err(anyhow!(
+                    "problem \"{}\" requires a native backend (xla has no generalized path)",
+                    cfg.problem.name()
+                ));
+            }
+            if !cfg.transform.is_none() {
+                return Err(anyhow!(
+                    "transform \"{}\" requires a native backend (xla has no \
+                     spectral-transformation path)",
+                    cfg.transform.name()
                 ));
             }
             let rt = XlaRuntime::load(Path::new(artifacts_dir))?;
@@ -193,6 +207,8 @@ struct FamilyAccum {
     promotions: usize,
     deflated_cols: usize,
     recycle_matvecs: usize,
+    trisolve_count: usize,
+    factor_secs: f64,
     solve_secs: f64,
     max_residual: f64,
 }
@@ -455,6 +471,20 @@ fn run_pipeline(
         ..Default::default()
     };
 
+    // One consistent mass matrix per family spec when the run solves
+    // the generalized pencil — masses are grid-only deterministic
+    // ([`crate::operators::OperatorFamily::mass_matrix`]), so a single
+    // assembly serves every problem of the spec. `resolve()` already
+    // guaranteed every spec's family carries one.
+    let masses: Vec<Option<crate::sparse::CsrMatrix>> = resolved
+        .iter()
+        .map(|f| {
+            (cfg.problem == ProblemKind::Generalized)
+                .then(|| f.handle.mass_matrix(&f.opts))
+                .flatten()
+        })
+        .collect();
+    let masses = &masses;
     let resolved = &resolved;
     // The config echo, needed up front by the chunked writer (header
     // frame) and again at finalize.
@@ -472,7 +502,10 @@ fn run_pipeline(
                 // scheduler; id violations error right here.)
                 let prob_tx = prob_tx;
                 let t0 = Instant::now();
-                let res = generate_in_order(resolved, cfg.seed, |_fam, p| {
+                let res = generate_in_order(resolved, cfg.seed, |_fam, mut p| {
+                    if let Some(m) = &masses[spec_of(resolved, p.id)] {
+                        p.mass = Some(m.clone());
+                    }
                     if prob_tx.send(p).is_err() {
                         *producer_err.lock().unwrap() =
                             Some("signature stage hung up early".to_string());
@@ -755,6 +788,12 @@ fn run_pipeline(
                     // nothing in solver loops.
                     let mut ws = Workspace::new(cfg.threads.max(1));
                     let opts = cfg.scsf_options_with_tol(plan.tol);
+                    // Every run of a generation shares one operator
+                    // mode, so chain and tail tags coincide — but the
+                    // seam validation still runs, so a future scheduler
+                    // that mixes configs cannot silently hand a
+                    // shift-invert tail to a plain chain.
+                    let op_tag = OpTag::new(cfg.problem, cfg.transform);
                     let mut stats = ShardReport {
                         run: plan.index,
                         family: plan.family.to_string(),
@@ -773,7 +812,14 @@ fn run_pipeline(
                             if let Some(tail) = seed.take() {
                                 let first = &plan.problems[skip];
                                 chain
-                                    .try_adopt(&plan.family, first.matrix.rows(), &plan.family, tail)
+                                    .try_adopt(
+                                        &plan.family,
+                                        first.matrix.rows(),
+                                        op_tag,
+                                        &plan.family,
+                                        op_tag,
+                                        tail,
+                                    )
                                     .map_err(|e| {
                                         anyhow!(
                                             "resume seed for run {} rejected: {e}",
@@ -795,7 +841,14 @@ fn run_pipeline(
                         if let Ok((from, fam, tail)) = rx.recv() {
                             if let Some(first) = plan.problems.first() {
                                 chain
-                                    .try_adopt(&plan.family, first.matrix.rows(), &fam, tail)
+                                    .try_adopt(
+                                        &plan.family,
+                                        first.matrix.rows(),
+                                        op_tag,
+                                        &fam,
+                                        op_tag,
+                                        tail,
+                                    )
                                     .map_err(|e| {
                                         anyhow!(
                                             "handoff from run {from} to run {} rejected: {e}",
@@ -810,9 +863,10 @@ fn run_pipeline(
                     let t_solve = Instant::now();
                     let mut writer_gone = false;
                     for problem in &plan.problems[skip..] {
-                        let r = chain.solve_next_for(
+                        let r = chain.solve_next_for_mass(
                             &problem.family,
                             &problem.matrix,
+                            problem.mass.as_ref(),
                             &opts,
                             backend.as_mut(),
                             &mut ws,
@@ -825,6 +879,8 @@ fn run_pipeline(
                         stats.promotions += r.stats.promotions;
                         stats.deflated_cols += r.stats.deflated_cols;
                         stats.recycle_matvecs += r.stats.recycle_matvecs;
+                        stats.trisolve_count += r.stats.trisolve_count;
+                        stats.factor_secs += r.stats.factor_secs;
                         if res_tx.send((problem.id, plan.index, r)).is_err() {
                             writer_gone = true;
                             break;
@@ -889,6 +945,8 @@ fn run_pipeline(
             let mut promotion_sum = 0usize;
             let mut deflated_sum = 0usize;
             let mut recycle_matvec_sum = 0usize;
+            let mut trisolve_sum = 0usize;
+            let mut factor_secs_sum = 0.0f64;
             let mut degree_hist: Vec<usize> = Vec::new();
             let mut all_converged = true;
             let mut count = 0usize;
@@ -909,6 +967,8 @@ fn run_pipeline(
                     promotion_sum += r.promotions;
                     deflated_sum += r.deflated_cols;
                     recycle_matvec_sum += r.recycle_matvecs;
+                    trisolve_sum += r.trisolve_count;
+                    factor_secs_sum += r.factor_secs;
                     let acc = &mut fam_accum[spec_of(resolved, r.id)];
                     acc.problems += 1;
                     acc.iterations += r.iterations;
@@ -918,6 +978,8 @@ fn run_pipeline(
                     acc.promotions += r.promotions;
                     acc.deflated_cols += r.deflated_cols;
                     acc.recycle_matvecs += r.recycle_matvecs;
+                    acc.trisolve_count += r.trisolve_count;
+                    acc.factor_secs += r.factor_secs;
                     acc.solve_secs += r.secs;
                     acc.max_residual = acc.max_residual.max(r.max_residual);
                 }
@@ -941,6 +1003,8 @@ fn run_pipeline(
                 promotion_sum += result.stats.promotions;
                 deflated_sum += result.stats.deflated_cols;
                 recycle_matvec_sum += result.stats.recycle_matvecs;
+                trisolve_sum += result.stats.trisolve_count;
+                factor_secs_sum += result.stats.factor_secs;
                 crate::eig::merge_degree_hist(&mut degree_hist, &result.stats.degree_hist);
                 let spec = spec_of(resolved, id);
                 let acc = &mut fam_accum[spec];
@@ -952,6 +1016,8 @@ fn run_pipeline(
                 acc.promotions += result.stats.promotions;
                 acc.deflated_cols += result.stats.deflated_cols;
                 acc.recycle_matvecs += result.stats.recycle_matvecs;
+                acc.trisolve_count += result.stats.trisolve_count;
+                acc.factor_secs += result.stats.factor_secs;
                 acc.solve_secs += result.stats.secs;
                 acc.max_residual = acc.max_residual.max(worst);
                 if let Ok(writer) = writer_res.as_mut() {
@@ -991,6 +1057,8 @@ fn run_pipeline(
             report.promotions = promotion_sum;
             report.deflated_cols = deflated_sum;
             report.recycle_matvecs = recycle_matvec_sum;
+            report.trisolve_count = trisolve_sum;
+            report.factor_secs = factor_secs_sum;
             report.degree_hist = degree_hist;
             Ok((writer, write_secs, count, resumed, fam_accum))
         });
@@ -1036,6 +1104,8 @@ fn run_pipeline(
                 promotions: acc.promotions,
                 deflated_cols: acc.deflated_cols,
                 recycle_matvecs: acc.recycle_matvecs,
+                trisolve_count: acc.trisolve_count,
+                factor_secs: acc.factor_secs,
                 avg_iterations: acc.iterations as f64 / acc.problems.max(1) as f64,
                 solve_secs: acc.solve_secs,
                 max_residual: acc.max_residual,
@@ -1067,8 +1137,12 @@ pub fn generate_problems_with_registry(
     registry: &FamilyRegistry,
 ) -> Result<Vec<Problem>> {
     let resolved = cfg.resolve(registry)?;
+    let generalized = cfg.problem == ProblemKind::Generalized;
     let mut out = Vec::with_capacity(cfg.n_problems());
-    generate_in_order(&resolved, cfg.seed, |_fam, p| {
+    generate_in_order(&resolved, cfg.seed, |fam, mut p| {
+        if generalized {
+            p.mass = fam.handle.mass_matrix(&fam.opts);
+        }
         out.push(p);
         true
     })?;

@@ -11,6 +11,7 @@
 //! The σ-scaling normalizes `p_m` at the target eigenvalue `λ` to avoid
 //! overflow (Zhou et al. 2006).
 
+use crate::eig::op::SpectralOp;
 use crate::linalg::{flops, Mat, MatF32};
 use crate::sparse::{CsrMatrix, CsrMatrixF32, SellMatrix, SellMatrixF32};
 
@@ -191,6 +192,12 @@ impl FilterParams {
 }
 
 /// Where the filter's block products are executed.
+///
+/// Every entry point takes the solve's [`SpectralOp`]; backends with
+/// specialized kernels (CSR/SELL/f32, the XLA route) dispatch on
+/// [`SpectralOp::plain`] — `Some(A)` recovers the historical layout and
+/// bit-for-bit arithmetic, `None` (generalized / shift-invert modes)
+/// routes through the operator-generic recurrence.
 pub trait FilterBackend {
     /// Called once at the start of every eigensolve with the operator
     /// that all subsequent `filter*` calls will use. Backends that
@@ -199,10 +206,10 @@ pub trait FilterBackend {
     /// backend across problems with identical sparsity but different
     /// values, so skipping this hook would silently filter with a stale
     /// operator. The default does nothing.
-    fn begin_solve(&mut self, _a: &CsrMatrix) {}
+    fn begin_solve(&mut self, _op: &SpectralOp) {}
 
     /// Apply the degree-`m` filter to `y`, returning the filtered block.
-    fn filter(&mut self, a: &CsrMatrix, y: &Mat, params: &FilterParams) -> Mat;
+    fn filter(&mut self, op: &SpectralOp, y: &Mat, params: &FilterParams) -> Mat;
 
     /// Zero-alloc variant: write the filtered block into `out`, using
     /// `tmp1`/`tmp2` as the recurrence's other two ping-pong buffers and
@@ -213,7 +220,7 @@ pub trait FilterBackend {
     #[allow(clippy::too_many_arguments)]
     fn filter_into(
         &mut self,
-        a: &CsrMatrix,
+        op: &SpectralOp,
         y: &Mat,
         params: &FilterParams,
         out: &mut Mat,
@@ -222,7 +229,7 @@ pub trait FilterBackend {
         threads: usize,
     ) {
         let _ = (tmp1, tmp2, threads);
-        let r = self.filter(a, y, params);
+        let r = self.filter(op, y, params);
         out.copy_from(&r);
     }
 
@@ -237,7 +244,7 @@ pub trait FilterBackend {
     #[allow(clippy::too_many_arguments)]
     fn filter_window_into(
         &mut self,
-        a: &CsrMatrix,
+        op: &SpectralOp,
         y: &Mat,
         params: &FilterParams,
         degrees: &[usize],
@@ -248,7 +255,7 @@ pub trait FilterBackend {
     ) -> usize {
         let mut p = *params;
         p.degree = degrees.first().copied().unwrap_or(params.degree).max(1);
-        self.filter_into(a, y, &p, out, tmp1, tmp2, threads);
+        self.filter_into(op, y, &p, out, tmp1, tmp2, threads);
         y.cols() * p.degree
     }
 
@@ -259,11 +266,12 @@ pub trait FilterBackend {
     /// backend's f64 window filter, and downcasts the result — correct
     /// for every backend (the XLA route keeps working, just without the
     /// f32 speedup); the native backends override it with true f32
-    /// kernels.
+    /// kernels. Only ever called with a plain operator (`resolve()`
+    /// rejects `precision: mixed` for transformed problems).
     #[allow(clippy::too_many_arguments)]
     fn filter_window_f32_into(
         &mut self,
-        a: &CsrMatrix,
+        op: &SpectralOp,
         y32: &MatF32,
         params: &FilterParams,
         degrees: &[usize],
@@ -276,7 +284,7 @@ pub trait FilterBackend {
         let y = y32.to_f64();
         let mut out = Mat::zeros(0, 0);
         let (mut t1, mut t2) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
-        let applied = self.filter_window_into(a, &y, params, degrees, &mut out, &mut t1, &mut t2, threads);
+        let applied = self.filter_window_into(op, &y, params, degrees, &mut out, &mut t1, &mut t2, threads);
         out32.downcast_from(&out);
         applied
     }
@@ -310,18 +318,21 @@ impl NativeFilter {
 }
 
 impl FilterBackend for NativeFilter {
-    fn begin_solve(&mut self, _a: &CsrMatrix) {
+    fn begin_solve(&mut self, _op: &SpectralOp) {
         self.a32 = None;
     }
 
-    fn filter(&mut self, a: &CsrMatrix, y: &Mat, params: &FilterParams) -> Mat {
-        chebyshev_filter(a, y, params)
+    fn filter(&mut self, op: &SpectralOp, y: &Mat, params: &FilterParams) -> Mat {
+        match op.plain() {
+            Some(a) => chebyshev_filter(a, y, params),
+            None => op_chebyshev_filter(op, y, params),
+        }
     }
 
     #[allow(clippy::too_many_arguments)]
     fn filter_into(
         &mut self,
-        a: &CsrMatrix,
+        op: &SpectralOp,
         y: &Mat,
         params: &FilterParams,
         out: &mut Mat,
@@ -329,13 +340,16 @@ impl FilterBackend for NativeFilter {
         tmp2: &mut Mat,
         threads: usize,
     ) {
-        chebyshev_filter_into(a, y, params, out, tmp1, tmp2, threads);
+        match op.plain() {
+            Some(a) => chebyshev_filter_into(a, y, params, out, tmp1, tmp2, threads),
+            None => op_chebyshev_filter_into(op, y, params, out, tmp1, tmp2, threads),
+        }
     }
 
     #[allow(clippy::too_many_arguments)]
     fn filter_window_into(
         &mut self,
-        a: &CsrMatrix,
+        op: &SpectralOp,
         y: &Mat,
         params: &FilterParams,
         degrees: &[usize],
@@ -344,13 +358,16 @@ impl FilterBackend for NativeFilter {
         tmp2: &mut Mat,
         threads: usize,
     ) -> usize {
-        chebyshev_filter_window_into(a, y, params, degrees, out, tmp1, tmp2, threads)
+        match op.plain() {
+            Some(a) => chebyshev_filter_window_into(a, y, params, degrees, out, tmp1, tmp2, threads),
+            None => op_filter_window_into(op, y, params, degrees, out, tmp1, tmp2, threads),
+        }
     }
 
     #[allow(clippy::too_many_arguments)]
     fn filter_window_f32_into(
         &mut self,
-        a: &CsrMatrix,
+        op: &SpectralOp,
         y32: &MatF32,
         params: &FilterParams,
         degrees: &[usize],
@@ -359,6 +376,9 @@ impl FilterBackend for NativeFilter {
         tmp2: &mut MatF32,
         threads: usize,
     ) -> usize {
+        let a = op
+            .plain()
+            .expect("mixed-precision filtering requires a plain (untransformed) operator");
         let a32 = self.a32.get_or_insert_with(|| CsrMatrixF32::from_f64(a));
         chebyshev_filter_window_f32_into(a32, y32, params, degrees, out32, tmp1, tmp2, threads)
     }
@@ -388,22 +408,22 @@ impl SellFilter {
 }
 
 impl FilterBackend for SellFilter {
-    fn begin_solve(&mut self, _a: &CsrMatrix) {
+    fn begin_solve(&mut self, _op: &SpectralOp) {
         self.sell = None;
         self.sell32 = None;
     }
 
-    fn filter(&mut self, a: &CsrMatrix, y: &Mat, params: &FilterParams) -> Mat {
+    fn filter(&mut self, op: &SpectralOp, y: &Mat, params: &FilterParams) -> Mat {
         let mut out = Mat::zeros(0, 0);
         let (mut t1, mut t2) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
-        self.filter_into(a, y, params, &mut out, &mut t1, &mut t2, 1);
+        self.filter_into(op, y, params, &mut out, &mut t1, &mut t2, 1);
         out
     }
 
     #[allow(clippy::too_many_arguments)]
     fn filter_into(
         &mut self,
-        a: &CsrMatrix,
+        op: &SpectralOp,
         y: &Mat,
         params: &FilterParams,
         out: &mut Mat,
@@ -411,14 +431,21 @@ impl FilterBackend for SellFilter {
         tmp2: &mut Mat,
         threads: usize,
     ) {
-        let sell = self.sell.get_or_insert_with(|| SellMatrix::from_csr(a));
-        sell_chebyshev_filter_into(sell, y, params, out, tmp1, tmp2, threads);
+        match op.plain() {
+            Some(a) => {
+                let sell = self.sell.get_or_insert_with(|| SellMatrix::from_csr(a));
+                sell_chebyshev_filter_into(sell, y, params, out, tmp1, tmp2, threads);
+            }
+            // Transformed operators have no sparse layout to repack —
+            // the factor solves dominate; use the generic recurrence.
+            None => op_chebyshev_filter_into(op, y, params, out, tmp1, tmp2, threads),
+        }
     }
 
     #[allow(clippy::too_many_arguments)]
     fn filter_window_into(
         &mut self,
-        a: &CsrMatrix,
+        op: &SpectralOp,
         y: &Mat,
         params: &FilterParams,
         degrees: &[usize],
@@ -427,14 +454,19 @@ impl FilterBackend for SellFilter {
         tmp2: &mut Mat,
         threads: usize,
     ) -> usize {
-        let sell = self.sell.get_or_insert_with(|| SellMatrix::from_csr(a));
-        sell_filter_window_into(sell, y, params, degrees, out, tmp1, tmp2, threads)
+        match op.plain() {
+            Some(a) => {
+                let sell = self.sell.get_or_insert_with(|| SellMatrix::from_csr(a));
+                sell_filter_window_into(sell, y, params, degrees, out, tmp1, tmp2, threads)
+            }
+            None => op_filter_window_into(op, y, params, degrees, out, tmp1, tmp2, threads),
+        }
     }
 
     #[allow(clippy::too_many_arguments)]
     fn filter_window_f32_into(
         &mut self,
-        a: &CsrMatrix,
+        op: &SpectralOp,
         y32: &MatF32,
         params: &FilterParams,
         degrees: &[usize],
@@ -443,6 +475,9 @@ impl FilterBackend for SellFilter {
         tmp2: &mut MatF32,
         threads: usize,
     ) -> usize {
+        let a = op
+            .plain()
+            .expect("mixed-precision filtering requires a plain (untransformed) operator");
         let sell32 = self.sell32.get_or_insert_with(|| SellMatrixF32::from_csr(a));
         sell_filter_window_f32_into(sell32, y32, params, degrees, out32, tmp1, tmp2, threads)
     }
@@ -932,6 +967,90 @@ fn window_driver_f32(
     degrees.iter().sum()
 }
 
+/// Operator-generic Chebyshev filter: [`chebyshev_filter`] with the
+/// fused products dispatched through [`SpectralOp::apply_fused_cols_into`]
+/// — the path generalized and shift-inverted solves take (for a plain
+/// op it reproduces the CSR kernel arithmetic, but backends dispatch to
+/// the specialized kernels before reaching here).
+pub fn op_chebyshev_filter(op: &SpectralOp, y0: &Mat, params: &FilterParams) -> Mat {
+    let mut out = Mat::zeros(0, 0);
+    let (mut t1, mut t2) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
+    op_chebyshev_filter_into(op, y0, params, &mut out, &mut t1, &mut t2, 1);
+    out
+}
+
+/// Zero-alloc operator-generic filter — the [`chebyshev_filter_into`]
+/// recurrence over a [`SpectralOp`].
+#[allow(clippy::too_many_arguments)]
+pub fn op_chebyshev_filter_into(
+    op: &SpectralOp,
+    y0: &Mat,
+    params: &FilterParams,
+    out: &mut Mat,
+    tmp1: &mut Mat,
+    tmp2: &mut Mat,
+    threads: usize,
+) {
+    let p = params.sanitized();
+    assert!(p.degree >= 1, "filter degree must be ≥ 1");
+    let (n, k) = (op.n(), y0.cols());
+    let c = p.center();
+    let e = p.half_width();
+    let sigma1 = e / (p.target - c);
+    let mut sigma = sigma1;
+
+    tmp1.copy_from(y0);
+    out.set_shape(n, k);
+    tmp2.set_shape(n, k);
+    op.apply_fused_cols_into(sigma1 / e, y0, -c * sigma1 / e, 0.0, y0, out, 0, k, threads);
+
+    for _i in 1..p.degree {
+        let sigma_new = 1.0 / (2.0 / sigma1 - sigma);
+        op.apply_fused_cols_into(
+            2.0 * sigma_new / e,
+            out,
+            -2.0 * c * sigma_new / e,
+            -sigma * sigma_new,
+            tmp1,
+            tmp2,
+            0,
+            k,
+            threads,
+        );
+        std::mem::swap(tmp1, out);
+        std::mem::swap(out, tmp2);
+        sigma = sigma_new;
+    }
+}
+
+/// Operator-generic shrinking-window filter: the exact
+/// [`window_driver_f64`] engine of the CSR/SELL paths with the fused
+/// products dispatched through the [`SpectralOp`] — the schedule,
+/// retirement bookkeeping, and coefficient sequence cannot drift from
+/// the specialized backends because they share the driver.
+#[allow(clippy::too_many_arguments)]
+pub fn op_filter_window_into(
+    op: &SpectralOp,
+    y0: &Mat,
+    params: &FilterParams,
+    degrees: &[usize],
+    out: &mut Mat,
+    tmp1: &mut Mat,
+    tmp2: &mut Mat,
+    threads: usize,
+) -> usize {
+    window_driver_f64(
+        op.n(),
+        y0,
+        params,
+        degrees,
+        out,
+        tmp1,
+        tmp2,
+        &mut |ca, x, cb, cc, z, y, j0, j1| op.apply_fused_cols_into(ca, x, cb, cc, z, y, j0, j1, threads),
+    )
+}
+
 /// Flop cost of one filter application (used by benches and to report
 /// the paper's "Filter Flops" column without re-instrumenting).
 pub fn filter_flop_cost(a: &CsrMatrix, k: usize, degree: usize) -> u64 {
@@ -954,12 +1073,12 @@ pub fn filter_flop_cost_schedule(a: &CsrMatrix, degrees: &[usize]) -> u64 {
 /// Returns `(filtered, filter_flops)`.
 pub fn filtered_with_flops(
     backend: &mut dyn FilterBackend,
-    a: &CsrMatrix,
+    op: &SpectralOp,
     y: &Mat,
     params: &FilterParams,
 ) -> (Mat, u64) {
     let before = flops::read();
-    let out = backend.filter(a, y, params);
+    let out = backend.filter(op, y, params);
     (out, flops::read().wrapping_sub(before))
 }
 
@@ -968,7 +1087,7 @@ pub fn filtered_with_flops(
 #[allow(clippy::too_many_arguments)]
 pub fn filtered_into_with_flops(
     backend: &mut dyn FilterBackend,
-    a: &CsrMatrix,
+    op: &SpectralOp,
     y: &Mat,
     params: &FilterParams,
     out: &mut Mat,
@@ -977,7 +1096,7 @@ pub fn filtered_into_with_flops(
     threads: usize,
 ) -> u64 {
     let before = flops::read();
-    backend.filter_into(a, y, params, out, tmp1, tmp2, threads);
+    backend.filter_into(op, y, params, out, tmp1, tmp2, threads);
     flops::read().wrapping_sub(before)
 }
 
@@ -1152,11 +1271,21 @@ mod tests {
             assert_eq!(out, want, "threads = {threads}");
         }
         // The backend default path agrees too.
+        let op = SpectralOp::standard(&a);
         let mut backend = NativeFilter::new();
         let mut out = Mat::zeros(0, 0);
         let (mut t1, mut t2) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
-        backend.filter_into(&a, &y, &params, &mut out, &mut t1, &mut t2, 2);
+        backend.filter_into(&op, &y, &params, &mut out, &mut t1, &mut t2, 2);
         assert_eq!(out, want);
+        // And the operator-generic recurrence reproduces the CSR
+        // arithmetic for the plain op (full and window paths).
+        let mut gout = Mat::zeros(0, 0);
+        op_chebyshev_filter_into(&op, &y, &params, &mut gout, &mut t1, &mut t2, 2);
+        assert_eq!(gout, want);
+        let applied =
+            op_filter_window_into(&op, &y, &params, &[9; 5], &mut gout, &mut t1, &mut t2, 2);
+        assert_eq!(applied, 45);
+        assert_eq!(gout, want);
     }
 
     #[test]
@@ -1227,14 +1356,15 @@ mod tests {
         // degree and reports the full matvec count.
         struct Plain;
         impl FilterBackend for Plain {
-            fn filter(&mut self, a: &CsrMatrix, y: &Mat, params: &FilterParams) -> Mat {
-                chebyshev_filter(a, y, params)
+            fn filter(&mut self, op: &SpectralOp, y: &Mat, params: &FilterParams) -> Mat {
+                chebyshev_filter(op.plain().unwrap(), y, params)
             }
             fn name(&self) -> &'static str {
                 "plain"
             }
         }
         let a = test_problem();
+        let op = SpectralOp::standard(&a);
         let params = FilterParams {
             degree: 9,
             lower: 5.0,
@@ -1247,7 +1377,7 @@ mod tests {
         let (mut t1, mut t2) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
         let mut backend = Plain;
         let applied = backend
-            .filter_window_into(&a, &y, &params, &[7, 5, 3, 2], &mut out, &mut t1, &mut t2, 1);
+            .filter_window_into(&op, &y, &params, &[7, 5, 3, 2], &mut out, &mut t1, &mut t2, 1);
         assert_eq!(applied, 4 * 7);
         let p7 = FilterParams { degree: 7, ..params };
         assert_eq!(out, chebyshev_filter(&a, &y, &p7));
@@ -1368,9 +1498,10 @@ mod tests {
         let mut rng = Xoshiro256pp::seed_from_u64(31);
         let y = Mat::randn(a.rows(), 5, &mut rng);
         let want = chebyshev_filter(&a, &y, &params);
+        let op = SpectralOp::standard(&a);
         let mut sell = SellFilter::new();
-        sell.begin_solve(&a);
-        let got = sell.filter(&a, &y, &params);
+        sell.begin_solve(&op);
+        let got = sell.filter(&op, &y, &params);
         let scale = want.fro_norm().max(1.0);
         assert!(got.max_abs_diff(&want) < 1e-10 * scale);
         // Window path with uniform degrees equals the full filter
@@ -1378,7 +1509,7 @@ mod tests {
         let mut out = Mat::zeros(0, 0);
         let (mut t1, mut t2) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
         let applied =
-            sell.filter_window_into(&a, &y, &params, &[9; 5], &mut out, &mut t1, &mut t2, 2);
+            sell.filter_window_into(&op, &y, &params, &[9; 5], &mut out, &mut t1, &mut t2, 2);
         assert_eq!(applied, 45);
         assert_eq!(out, got);
     }
@@ -1399,15 +1530,16 @@ mod tests {
         let (mut t1, mut t2) = (Mat::zeros(0, 0), Mat::zeros(0, 0));
         chebyshev_filter_window_into(&a, &y, &params, &degrees, &mut want, &mut t1, &mut t2, 1);
         let y32 = MatF32::from_f64(&y);
+        let op = SpectralOp::standard(&a);
         for (label, mut backend) in [
             ("csr", Box::new(NativeFilter::new()) as Box<dyn FilterBackend>),
             ("sell", Box::new(SellFilter::new()) as Box<dyn FilterBackend>),
         ] {
-            backend.begin_solve(&a);
+            backend.begin_solve(&op);
             let mut o32 = MatF32::zeros(0, 0);
             let (mut a32, mut b32) = (MatF32::zeros(0, 0), MatF32::zeros(0, 0));
             let applied = backend.filter_window_f32_into(
-                &a, &y32, &params, &degrees, &mut o32, &mut a32, &mut b32, 2,
+                &op, &y32, &params, &degrees, &mut o32, &mut a32, &mut b32, 2,
             );
             assert_eq!(applied, 23, "{label}");
             let got = o32.to_f64();
@@ -1427,14 +1559,15 @@ mod tests {
         // its own f64 fallback rounded to f32.
         struct Plain;
         impl FilterBackend for Plain {
-            fn filter(&mut self, a: &CsrMatrix, y: &Mat, params: &FilterParams) -> Mat {
-                chebyshev_filter(a, y, params)
+            fn filter(&mut self, op: &SpectralOp, y: &Mat, params: &FilterParams) -> Mat {
+                chebyshev_filter(op.plain().unwrap(), y, params)
             }
             fn name(&self) -> &'static str {
                 "plain"
             }
         }
         let a = test_problem();
+        let op = SpectralOp::standard(&a);
         let params = FilterParams {
             degree: 7,
             lower: 5.0,
@@ -1448,7 +1581,7 @@ mod tests {
         let mut o32 = MatF32::zeros(0, 0);
         let (mut a32, mut b32) = (MatF32::zeros(0, 0), MatF32::zeros(0, 0));
         let applied = plain
-            .filter_window_f32_into(&a, &y32, &params, &[7, 4, 2], &mut o32, &mut a32, &mut b32, 1);
+            .filter_window_f32_into(&op, &y32, &params, &[7, 4, 2], &mut o32, &mut a32, &mut b32, 1);
         // Default ignores the schedule: max degree × columns.
         assert_eq!(applied, 21);
         let p7 = FilterParams { degree: 7, ..params };
@@ -1474,10 +1607,11 @@ mod tests {
         let y32 = MatF32::from_f64(&y);
         let degrees = [6usize, 6, 6];
         let run = |backend: &mut NativeFilter, m: &CsrMatrix| {
-            backend.begin_solve(m);
+            let op = SpectralOp::standard(m);
+            backend.begin_solve(&op);
             let mut o32 = MatF32::zeros(0, 0);
             let (mut t1, mut t2) = (MatF32::zeros(0, 0), MatF32::zeros(0, 0));
-            backend.filter_window_f32_into(m, &y32, &params, &degrees, &mut o32, &mut t1, &mut t2, 1);
+            backend.filter_window_f32_into(&op, &y32, &params, &degrees, &mut o32, &mut t1, &mut t2, 1);
             o32.to_f64()
         };
         let mut fresh = NativeFilter::new();
@@ -1499,8 +1633,9 @@ mod tests {
         };
         let mut rng = Xoshiro256pp::seed_from_u64(5);
         let y = Mat::randn(a.rows(), 4, &mut rng);
+        let op = SpectralOp::standard(&a);
         let mut backend = NativeFilter::new();
-        let (_, counted) = filtered_with_flops(&mut backend, &a, &y, &params);
+        let (_, counted) = filtered_with_flops(&mut backend, &op, &y, &params);
         let predicted = filter_flop_cost(&a, 4, 7);
         // The clone of Y0 and swaps cost nothing; counts must match.
         assert_eq!(counted, predicted);

@@ -10,8 +10,9 @@ use super::chebyshev::{
     self, FilterBackend, FilterBackendKind, FilterParams, FilterSchedule, NativeFilter, Precision,
     SellFilter,
 };
+use super::op::{ProblemKind, SpectralOp, Transform};
 use super::solver::Workspace;
-use super::spectral_bounds::{lanczos_bounds, SpectralBounds};
+use super::spectral_bounds::{lanczos_bounds_op, SpectralBounds};
 use super::{EigOptions, EigResult, SolveStats, WarmStart};
 use crate::linalg::qr::{ortho_against_cols_inplace, ortho_against_inplace};
 use crate::linalg::symeig::sym_eig_into;
@@ -106,6 +107,15 @@ pub struct ChfsiOptions {
     /// Ritz pairs retained by each thick-restart compression
     /// (`recycling: deflate` only; 0 → auto, the iterate block width).
     pub recycle_keep: usize,
+    /// Eigenproblem kind: [`ProblemKind::Standard`] (`Ax = λx`, the
+    /// bit-for-bit historical default) or [`ProblemKind::Generalized`]
+    /// (`Ax = λMx`; the mass matrix rides on the [`SpectralOp`], so
+    /// generalized solves enter through [`solve_op_in`]).
+    pub problem: ProblemKind,
+    /// Spectral transformation: [`Transform::None`] (the bit-for-bit
+    /// historical default) or [`Transform::ShiftInvert`] (interior
+    /// windows near a shift σ via a sparse LDLᵀ of `A − σM`).
+    pub transform: Transform,
 }
 
 impl ChfsiOptions {
@@ -125,6 +135,8 @@ impl ChfsiOptions {
             recycling: Recycling::Off,
             recycle_dim: 0,
             recycle_keep: 0,
+            problem: ProblemKind::Standard,
+            transform: Transform::None,
         }
     }
 
@@ -174,11 +186,11 @@ pub fn solve_with_backend(
     solve_in(a, opts, init, backend, &mut ws)
 }
 
-/// The ChFSI engine (paper Algorithm 3) running inside a caller-owned
-/// [`Workspace`]: all block-sized buffers of the iteration loop (filter
-/// ping-pong, `A·Q`, Gram matrix, Ritz rotation, projected eigenproblem)
-/// live in `ws` and are reused across calls — allocation happens only at
-/// workspace-growth time, never per iteration.
+/// Build a [`SpectralOp`] from the matrix and `opts.problem` /
+/// `opts.transform` and run the engine. `opts.problem` must be
+/// [`ProblemKind::Standard`] here — generalized solves carry a mass
+/// matrix and enter through [`solve_op_in`] with a caller-built
+/// operator.
 pub fn solve_in(
     a: &CsrMatrix,
     opts: &ChfsiOptions,
@@ -186,6 +198,63 @@ pub fn solve_in(
     backend: &mut dyn FilterBackend,
     ws: &mut Workspace,
 ) -> EigResult {
+    let op = SpectralOp::build(a, None, opts.problem, opts.transform)
+        .expect("operator construction failed (generalized solves need solve_op_in with a mass matrix)");
+    solve_op_in(&op, opts, init, backend, ws)
+}
+
+/// Solve an explicit [`SpectralOp`] with the native filter backend
+/// selected by `opts.filter_backend`, using a fresh workspace.
+pub fn solve_op(op: &SpectralOp, opts: &ChfsiOptions, init: Option<&WarmStart>) -> EigResult {
+    let mut ws = Workspace::new(opts.threads);
+    match opts.filter_backend {
+        FilterBackendKind::Csr => solve_op_in(op, opts, init, &mut NativeFilter::new(), &mut ws),
+        FilterBackendKind::Sell => solve_op_in(op, opts, init, &mut SellFilter::new(), &mut ws),
+    }
+}
+
+/// The ChFSI engine (paper Algorithm 3) running inside a caller-owned
+/// [`Workspace`]: all block-sized buffers of the iteration loop (filter
+/// ping-pong, `Ô·Q`, Gram matrix, Ritz rotation, projected eigenproblem)
+/// live in `ws` and are reused across calls — allocation happens only at
+/// workspace-growth time, never per iteration.
+///
+/// The engine iterates in *operator coordinates*: for a plain operator
+/// that is `A` itself (bit-for-bit the historical path), for generalized
+/// or shift-inverted operators it is the congruent/spectrally-mapped
+/// standard form `Ô` (see [`SpectralOp`]). Warm-start pairs arrive in
+/// problem coordinates and are mapped at entry
+/// ([`SpectralOp::to_op_block`] / [`SpectralOp::to_op_value`]); the
+/// finalize step maps the converged pairs back and re-checks explicit
+/// pencil residuals ([`EigResult::finalize_op`]).
+pub fn solve_op_in(
+    op: &SpectralOp,
+    opts: &ChfsiOptions,
+    init: Option<&WarmStart>,
+    backend: &mut dyn FilterBackend,
+    ws: &mut Workspace,
+) -> EigResult {
+    // Mixed-precision sweeps and deflation chains are coordinate-bound
+    // to plain operators; `resolve()` rejects these combinations at
+    // config level, the asserts keep direct API users honest.
+    if !op.is_plain() {
+        assert!(
+            opts.precision == Precision::F64,
+            "mixed-precision filtering requires a plain (untransformed) operator"
+        );
+        assert!(
+            opts.recycling == Recycling::Off,
+            "subspace recycling requires a plain (untransformed) operator"
+        );
+    }
+    // Transformed operators iterate in op coordinates: map inherited
+    // warm-start pairs there (vectors through Wᵀ, values through the
+    // spectral map).
+    let converted: Option<WarmStart> = match init {
+        Some(w) if !op.is_plain() => Some(w.to_op(op)),
+        _ => None,
+    };
+    let init = converted.as_ref().or(init);
     let t0 = Instant::now();
     flops::take();
     // The options are the single source of truth for the thread count;
@@ -194,8 +263,8 @@ pub fn solve_in(
     // Invalidate any operator representation cached from a previous
     // solve (chained solves reuse the backend across problems with
     // identical sparsity but different values).
-    backend.begin_solve(a);
-    let n = a.rows();
+    backend.begin_solve(op);
+    let n = op.n();
     let l = opts.eig.n_eigs;
     assert!(l >= 1 && l < n, "need 1 ≤ L < n (L={l}, n={n})");
     let block = opts.block_width(n);
@@ -222,7 +291,7 @@ pub fn solve_in(
     // `bound_steps` estimate (bit-for-bit stability).
     let (bounds, chain_upper) = match init.and_then(|w| w.upper) {
         Some(prev_upper) if adaptive => {
-            let refresh = lanczos_bounds(a, opts.warm_bound_steps.max(2), opts.eig.seed);
+            let refresh = lanczos_bounds_op(op, opts.warm_bound_steps.max(2), opts.eig.seed);
             (
                 SpectralBounds {
                     lower_est: refresh.lower_est,
@@ -232,7 +301,7 @@ pub fn solve_in(
             )
         }
         _ => {
-            let b = lanczos_bounds(a, opts.bound_steps, opts.eig.seed);
+            let b = lanczos_bounds_op(op, opts.bound_steps, opts.eig.seed);
             (b, b.upper)
         }
     };
@@ -288,7 +357,7 @@ pub fn solve_in(
         }
         _ => {
             ortho_against_inplace(None, &mut v, &mut ws.gram, &mut ws.t2);
-            a.spmm_into(&v, &mut ws.ax, ws.threads);
+            op.apply_block_into(&v, &mut ws.ax, ws.threads);
             stats.matvecs += v.cols();
             v.t_matmul_into(&ws.ax, &mut ws.gram);
             sym_eig_into(&ws.gram, &mut ws.eig);
@@ -334,12 +403,12 @@ pub fn solve_in(
                 let space = recycle.expect("recycled_pad implies a recycle space");
                 let mut vals = w.values[..have].to_vec();
                 vals.extend_from_slice(&space.values[have..have + recycled_pad]);
-                let res = super::rel_residuals_into(a, &vals, &v, &mut ws.ax, ws.threads);
+                let res = super::rel_residuals_op_into(op, &vals, &v, &mut ws.ax, ws.threads);
                 ws.col_theta.extend_from_slice(&vals);
                 ws.col_res.extend_from_slice(&res);
             } else {
                 let res =
-                    super::rel_residuals_into(a, &w.values[..have], &v, &mut ws.ax, ws.threads);
+                    super::rel_residuals_op_into(op, &w.values[..have], &v, &mut ws.ax, ws.threads);
                 ws.col_theta.extend_from_slice(&w.values[..have]);
                 ws.col_res.extend_from_slice(&res);
             }
@@ -533,7 +602,7 @@ pub fn solve_in(
                 // Downcast + permute the f32 group in one pass.
                 ws.y32.downcast_gather(&v, &ws.perm[..n32]);
                 applied32 = backend.filter_window_f32_into(
-                    a,
+                    op,
                     &ws.y32,
                     &params,
                     &ws.degrees[..n32],
@@ -547,7 +616,7 @@ pub fn solve_in(
             if n32 < k {
                 ws.t4.gather_cols_into(&v, &ws.perm[n32..]);
                 applied64 = backend.filter_window_into(
-                    a,
+                    op,
                     &ws.t4,
                     &params,
                     &ws.degrees[n32..],
@@ -635,7 +704,7 @@ pub fn solve_in(
             std::mem::swap(&mut v, &mut ws.t4);
             let before = flops::read();
             let applied = backend.filter_window_into(
-                a,
+                op,
                 &v,
                 &params,
                 &ws.degrees,
@@ -663,7 +732,7 @@ pub fn solve_in(
         } else {
             let ff = chebyshev::filtered_into_with_flops(
                 backend,
-                a,
+                op,
                 &v,
                 &params,
                 &mut ws.t1,
@@ -698,7 +767,7 @@ pub fn solve_in(
 
         // (line 5-6) Rayleigh–Ritz on the active subspace
         let t_phase = Instant::now();
-        a.spmm_into(&ws.t1, &mut ws.ax, ws.threads);
+        op.apply_block_into(&ws.t1, &mut ws.ax, ws.threads);
         stats.matvecs += ws.t1.cols();
         ws.t1.t_matmul_into(&ws.ax, &mut ws.gram);
         sym_eig_into(&ws.gram, &mut ws.eig);
@@ -718,9 +787,9 @@ pub fn solve_in(
         // actual full-block product under both schedules, so the new
         // manifest counters are comparable across schedules.
         let res = if adaptive || mixed || deflating {
-            super::rel_residuals_into(a, &ws.eig.values, &ws.t4, &mut ws.ax, ws.threads)
+            super::rel_residuals_op_into(op, &ws.eig.values, &ws.t4, &mut ws.ax, ws.threads)
         } else {
-            super::rel_residuals_into(a, &ws.eig.values[..cut], &ws.t4, &mut ws.ax, ws.threads)
+            super::rel_residuals_op_into(op, &ws.eig.values[..cut], &ws.t4, &mut ws.ax, ws.threads)
         };
         stats.matvecs += ws.t4.cols();
         let mut newly = 0;
@@ -788,7 +857,7 @@ pub fn solve_in(
         values.push(locked_vals[src]);
         vectors.set_col(dst, &ws.locked.col(src));
     }
-    EigResult::finalize(a, values, vectors, stats, tol)
+    EigResult::finalize_op(op, values, vectors, stats, tol)
 }
 
 #[cfg(test)]
@@ -1244,6 +1313,64 @@ mod tests {
             assert_eq!(r1.vectors, fresh1.vectors, "threads {threads}");
             assert_eq!(r2.values, fresh2.values, "threads {threads}");
             assert_eq!(r2.vectors, fresh2.vectors, "threads {threads}");
+        }
+    }
+
+    #[test]
+    fn shift_invert_targets_an_interior_window() {
+        // σ between λ₄ and λ₅: the solve must return λ₅..λ₈ (the window
+        // just above the shift) in ascending order, with the transform
+        // counters populated.
+        let a = problem(OperatorKind::Poisson, 10, 3);
+        let dense = sym_eig(&a.to_dense()).values;
+        let sigma = 0.5 * (dense[3] + dense[4]);
+        let mut opts = ChfsiOptions::from_eig(&EigOptions {
+            n_eigs: 4,
+            tol: 1e-9,
+            max_iters: 300,
+            seed: 0,
+        });
+        opts.transform = Transform::ShiftInvert { sigma };
+        let r = solve(&a, &opts, None);
+        assert!(r.stats.converged, "{:?}", r.residuals);
+        for (got, want) in r.values.iter().zip(&dense[4..8]) {
+            assert!(
+                (got - want).abs() / want.abs().max(1.0) < 1e-7,
+                "{got} vs {want}"
+            );
+        }
+        for res in &r.residuals {
+            assert!(*res <= 1e-8, "residual {res}");
+        }
+        assert!(r.stats.trisolve_count > 0, "no triangular solves counted");
+    }
+
+    #[test]
+    fn shift_invert_warm_start_converges() {
+        // Warm pairs arrive in problem coordinates; the engine must map
+        // them into operator coordinates and still converge fast.
+        let a = problem(OperatorKind::Poisson, 10, 3);
+        let dense = sym_eig(&a.to_dense()).values;
+        let sigma = 0.5 * (dense[3] + dense[4]);
+        let mut opts = ChfsiOptions::from_eig(&EigOptions {
+            n_eigs: 4,
+            tol: 1e-9,
+            max_iters: 300,
+            seed: 0,
+        });
+        opts.transform = Transform::ShiftInvert { sigma };
+        let r1 = solve(&a, &opts, None);
+        assert!(r1.stats.converged);
+        let r2 = solve(&a, &opts, Some(&r1.as_warm_start()));
+        assert!(r2.stats.converged, "{:?}", r2.residuals);
+        assert!(
+            r2.stats.iterations <= r1.stats.iterations,
+            "warm {} vs cold {}",
+            r2.stats.iterations,
+            r1.stats.iterations
+        );
+        for (x, y) in r2.values.iter().zip(&r1.values) {
+            assert!((x - y).abs() / y.abs().max(1.0) < 1e-7, "{x} vs {y}");
         }
     }
 

@@ -9,6 +9,7 @@
 //! iteration and hypersensitive to the initial-subspace dimension —
 //! both effects reproduce here (Tables 1 and 2).
 
+use super::op::SpectralOp;
 use super::solver::Workspace;
 use super::{EigOptions, EigResult, SolveStats, WarmStart};
 use crate::linalg::dense::norm2;
@@ -35,16 +36,34 @@ pub fn solve_in(
     init: Option<&WarmStart>,
     ws: &mut Workspace,
 ) -> EigResult {
+    solve_op_in(&SpectralOp::standard(a), opts, init, ws)
+}
+
+/// [`solve_in`] on an abstract [`SpectralOp`] (plain, generalized or
+/// shift-inverted); bit-for-bit the historical path for plain operators.
+/// The Olsen-style diagonal correction uses the operator diagonal when
+/// one is available ([`SpectralOp::diagonal_or_ones`]).
+pub fn solve_op_in(
+    op: &SpectralOp,
+    opts: &EigOptions,
+    init: Option<&WarmStart>,
+    ws: &mut Workspace,
+) -> EigResult {
+    let converted: Option<WarmStart> = match init {
+        Some(w) if !op.is_plain() => Some(w.to_op(op)),
+        _ => None,
+    };
+    let init = converted.as_ref().or(init);
     let t0 = Instant::now();
     flops::take();
-    let n = a.rows();
+    let n = op.n();
     let l = opts.n_eigs;
     assert!(l >= 1 && l < n);
     let g = super::guard_size(l);
     let maxdim = (2 * (l + g) + 8).min(n - 1);
     let block = 8.min(l); // expansion vectors per outer iteration
     let tol = opts.tol;
-    let diag = a.diagonal();
+    let diag = op.diagonal_or_ones();
     let mut rng = Xoshiro256pp::seed_from_u64(opts.seed);
     let mut stats = SolveStats::default();
 
@@ -65,7 +84,7 @@ pub fn solve_in(
     while stats.iterations < opts.max_iters {
         stats.iterations += 1;
         // Rayleigh–Ritz on the search space.
-        a.spmm_into(&v, &mut ws.ax, ws.threads);
+        op.apply_block_into(&v, &mut ws.ax, ws.threads);
         stats.matvecs += v.cols();
         v.t_matmul_into(&ws.ax, &mut ws.gram);
         sym_eig_into(&ws.gram, &mut ws.eig);
@@ -74,7 +93,7 @@ pub fn solve_in(
         v.matmul_cols_into(&ws.eig.vectors, 0, ucols, &mut ws.t1);
 
         // Residuals of the wanted pairs (block held in ws.t3).
-        a.spmm_into(&ws.t1, &mut ws.t2, ws.threads);
+        op.apply_block_into(&ws.t1, &mut ws.t2, ws.threads);
         stats.matvecs += ws.t1.cols();
         let mut n_conv = 0;
         let mut rel: Vec<f64> = Vec::with_capacity(ucols);
@@ -172,7 +191,7 @@ pub fn solve_in(
     stats.flops = flops::take();
     stats.secs = t0.elapsed().as_secs_f64();
     let (values, vectors) = best.expect("JD made no iterations");
-    EigResult::finalize(a, values, vectors, stats, tol)
+    EigResult::finalize_op(op, values, vectors, stats, tol)
 }
 
 #[cfg(test)]

@@ -9,6 +9,7 @@
 //! default `mpd`-style sizing — which produces the distinct convergence
 //! profile visible in the reproduced Table 1.
 
+use super::op::SpectralOp;
 use super::solver::Workspace;
 use super::{EigOptions, EigResult, WarmStart};
 use crate::sparse::CsrMatrix;
@@ -27,11 +28,22 @@ pub fn solve_in(
     init: Option<&WarmStart>,
     ws: &mut Workspace,
 ) -> EigResult {
+    solve_op_in(&SpectralOp::standard(a), opts, init, ws)
+}
+
+/// [`solve_in`] on an abstract [`SpectralOp`] (plain, generalized or
+/// shift-inverted); bit-for-bit the historical path for plain operators.
+pub fn solve_op_in(
+    op: &SpectralOp,
+    opts: &EigOptions,
+    init: Option<&WarmStart>,
+    ws: &mut Workspace,
+) -> EigResult {
     let l = opts.n_eigs;
     let g = super::guard_size(l);
     let keep = l + (g / 2).max(2);
-    let m = (l + g + ((l + g) / 2).max(8)).min(a.rows() - 1);
-    super::lanczos::thick_restart_engine(a, opts, init, m, keep, ws)
+    let m = (l + g + ((l + g) / 2).max(8)).min(op.n() - 1);
+    super::lanczos::thick_restart_engine(op, opts, init, m, keep, ws)
 }
 
 #[cfg(test)]

@@ -7,6 +7,7 @@
 //! the roomy ARPACK-style subspace here, and the lean
 //! Krylov–Schur-style subspace in [`super::krylov_schur`].
 
+use super::op::SpectralOp;
 use super::solver::Workspace;
 use super::{EigOptions, EigResult, SolveStats, WarmStart};
 use crate::linalg::dense::{dot, norm2, vaxpy};
@@ -29,10 +30,21 @@ pub fn solve_in(
     init: Option<&WarmStart>,
     ws: &mut Workspace,
 ) -> EigResult {
+    solve_op_in(&SpectralOp::standard(a), opts, init, ws)
+}
+
+/// [`solve_in`] on an abstract [`SpectralOp`] (plain, generalized or
+/// shift-inverted); bit-for-bit the historical path for plain operators.
+pub fn solve_op_in(
+    op: &SpectralOp,
+    opts: &EigOptions,
+    init: Option<&WarmStart>,
+    ws: &mut Workspace,
+) -> EigResult {
     let l = opts.n_eigs;
     let keep = l + super::guard_size(l);
-    let m = (2 * keep).max(keep + 12).min(a.rows() - 1);
-    thick_restart_engine(a, opts, init, m, keep, ws)
+    let m = (2 * keep).max(keep + 12).min(op.n() - 1);
+    thick_restart_engine(op, opts, init, m, keep, ws)
 }
 
 /// The shared thick-restart Lanczos engine.
@@ -45,16 +57,23 @@ pub fn solve_in(
 /// *and* across solves; the only per-solve allocation is the returned
 /// Ritz block.
 pub(crate) fn thick_restart_engine(
-    a: &CsrMatrix,
+    op: &SpectralOp,
     opts: &EigOptions,
     init: Option<&WarmStart>,
     m_dim: usize,
     keep: usize,
     ws: &mut Workspace,
 ) -> EigResult {
+    // Transformed operators iterate in op coordinates: map inherited
+    // warm-start vectors there before collapsing them into v0.
+    let converted: Option<WarmStart> = match init {
+        Some(w) if !op.is_plain() => Some(w.to_op(op)),
+        _ => None,
+    };
+    let init = converted.as_ref().or(init);
     let t0 = Instant::now();
     flops::take();
-    let n = a.rows();
+    let n = op.n();
     let l = opts.n_eigs;
     assert!(l >= 1 && l < n);
     let m_dim = m_dim.min(n - 1).max(l + 2);
@@ -100,8 +119,8 @@ pub(crate) fn thick_restart_engine(
         stats.iterations += 1;
         // ---- Lanczos expansion from `start` to `m_dim` -----------------
         for j in start..m_dim {
-            // w = A q_j (ws.vec1 is the matvec target).
-            a.spmv_into(&ws.basis[j], &mut ws.vec1, ws.threads);
+            // w = Ô q_j (ws.vec1 is the matvec target).
+            op.apply_into(&ws.basis[j], &mut ws.vec1, ws.threads);
             stats.matvecs += 1;
             // Full reorthogonalization (two MGS passes); only the
             // (arrowhead-)tridiagonal coefficients enter T.
@@ -180,7 +199,7 @@ pub(crate) fn thick_restart_engine(
             stats.flops = flops::take();
             stats.secs = t0.elapsed().as_secs_f64();
             let values = ws.eig.values[..l].to_vec();
-            return EigResult::finalize(a, values, y, stats, tol);
+            return EigResult::finalize_op(op, values, y, stats, tol);
         }
 
         // ---- Thick restart --------------------------------------------

@@ -6,6 +6,7 @@
 //! residual, conjugate direction) and extracts the new iterate and the
 //! implicit CG direction from the Ritz coefficients.
 
+use super::op::SpectralOp;
 use super::solver::Workspace;
 use super::{EigOptions, EigResult, SolveStats, WarmStart};
 use crate::linalg::qr::householder_qr;
@@ -30,9 +31,28 @@ pub fn solve_in(
     init: Option<&WarmStart>,
     ws: &mut Workspace,
 ) -> EigResult {
+    solve_op_in(&SpectralOp::standard(a), opts, init, ws)
+}
+
+/// [`solve_in`] on an abstract [`SpectralOp`] (plain, generalized or
+/// shift-inverted); bit-for-bit the historical path for plain operators.
+/// The clamped Jacobi preconditioner uses the operator diagonal when one
+/// is available ([`SpectralOp::diagonal_or_ones`]) and degrades to the
+/// unpreconditioned iteration otherwise.
+pub fn solve_op_in(
+    op: &SpectralOp,
+    opts: &EigOptions,
+    init: Option<&WarmStart>,
+    ws: &mut Workspace,
+) -> EigResult {
+    let converted: Option<WarmStart> = match init {
+        Some(w) if !op.is_plain() => Some(w.to_op(op)),
+        _ => None,
+    };
+    let init = converted.as_ref().or(init);
     let t0 = Instant::now();
     flops::take();
-    let n = a.rows();
+    let n = op.n();
     let l = opts.n_eigs;
     assert!(l >= 1 && l < n);
     // Block size: wanted + guard, but the 3k-column frame must fit in n.
@@ -42,7 +62,7 @@ pub fn solve_in(
         "LOBPCG frame does not fit: need 3(L+g) ≤ n (L={l}, n={n})"
     );
     let tol = opts.tol;
-    let diag = a.diagonal();
+    let diag = op.diagonal_or_ones();
     let mut rng = Xoshiro256pp::seed_from_u64(opts.seed);
     let mut stats = SolveStats::default();
 
@@ -71,7 +91,7 @@ pub fn solve_in(
     // Ritz-coefficient slice.
     while stats.iterations < opts.max_iters {
         stats.iterations += 1;
-        a.spmm_into(&x, &mut ws.ax, ws.threads);
+        op.apply_block_into(&x, &mut ws.ax, ws.threads);
         stats.matvecs += x.cols();
         // Rayleigh quotients per column (X has orthonormal columns).
         for j in 0..k {
@@ -143,7 +163,7 @@ pub fn solve_in(
         }
         let s = householder_qr(&ws.t1);
         // Rayleigh–Ritz on the frame.
-        a.spmm_into(&s, &mut ws.ax, ws.threads);
+        op.apply_block_into(&s, &mut ws.ax, ws.threads);
         stats.matvecs += s.cols();
         s.t_matmul_into(&ws.ax, &mut ws.gram);
         sym_eig_into(&ws.gram, &mut ws.eig);
@@ -180,7 +200,7 @@ pub fn solve_in(
     stats.flops = flops::take();
     stats.secs = t0.elapsed().as_secs_f64();
     let (values, vectors) = best.expect("LOBPCG made no iterations");
-    EigResult::finalize(a, values, vectors, stats, tol)
+    EigResult::finalize_op(op, values, vectors, stats, tol)
 }
 
 #[cfg(test)]

@@ -21,10 +21,12 @@ pub mod jacobi_davidson;
 pub mod krylov_schur;
 pub mod lanczos;
 pub mod lobpcg;
+pub mod op;
 pub mod scsf;
 pub mod solver;
 pub mod spectral_bounds;
 
+pub use op::{OpTag, ProblemKind, SpectralOp, Transform};
 pub use solver::{EigSolver, Solver, Workspace};
 
 use crate::linalg::{flops, Mat};
@@ -74,6 +76,22 @@ pub struct WarmStart {
     /// the warm start through seam handoffs so the space survives
     /// shard boundaries under the same distance gating.
     pub recycle: Option<RecycleSpace>,
+}
+
+impl WarmStart {
+    /// Map a problem-coordinate warm start into the coordinates of a
+    /// transformed [`SpectralOp`]: vectors through `Wᵀ`, values through
+    /// the spectral map. The carried bound and recycle space are
+    /// coordinate artifacts of the predecessor's operator and do not
+    /// transfer. Callers skip this for plain operators (identity map).
+    pub fn to_op(&self, op: &SpectralOp) -> WarmStart {
+        WarmStart {
+            values: self.values.iter().map(|&x| op.to_op_value(x)).collect(),
+            vectors: op.to_op_block(&self.vectors),
+            upper: None,
+            recycle: None,
+        }
+    }
 }
 
 /// An orthonormal basis of previously-converged spectral directions
@@ -155,6 +173,12 @@ pub struct SolveStats {
     pub rr_secs: f64,
     /// Seconds in residual evaluation / locking (line 7).
     pub resid_secs: f64,
+    /// Seconds spent factoring (mass LDLᵀ and/or the shifted pencil)
+    /// before iterating — 0 for plain standard solves.
+    pub factor_secs: f64,
+    /// Triangular-substitution passes through the LDLᵀ factors
+    /// (generalized / shift-invert solves only; 0 otherwise).
+    pub trisolve_count: usize,
 }
 
 /// Result of one eigensolve.
@@ -181,6 +205,36 @@ impl EigResult {
     ) -> Self {
         let residuals = rel_residuals(a, &values, &vectors);
         stats.converged = residuals.iter().all(|&r| r <= tol * 10.0);
+        Self {
+            values,
+            vectors,
+            residuals,
+            stats,
+        }
+    }
+
+    /// [`EigResult::finalize`] generalized to a [`SpectralOp`]: plain
+    /// operators take the historical path verbatim (bit-for-bit);
+    /// transformed operators back-map op-space pairs to problem space
+    /// (`λ = σ − 1/ν̂`, `x = W⁻ᵀy`, λ re-sorted ascending) and report
+    /// pencil residuals — Euclidean for standard problems, M⁻¹-norm for
+    /// generalized ones. Factor time and triangular-solve counts are
+    /// harvested from the op into the stats.
+    pub fn finalize_op(
+        op: &SpectralOp,
+        values: Vec<f64>,
+        vectors: Mat,
+        mut stats: SolveStats,
+        tol: f64,
+    ) -> Self {
+        if let Some(a) = op.plain() {
+            return Self::finalize(a, values, vectors, stats, tol);
+        }
+        let (values, vectors) = op.back_transform(values, vectors);
+        let residuals = op.pencil_residuals(&values, &vectors, 1);
+        stats.converged = residuals.iter().all(|&r| r <= tol * 10.0);
+        stats.factor_secs += op.factor_secs();
+        stats.trisolve_count += op.take_trisolves();
         Self {
             values,
             vectors,
@@ -232,7 +286,28 @@ pub fn rel_residuals_into(
 ) -> Vec<f64> {
     assert!(values.len() <= vectors.cols());
     a.spmm_into(vectors, av, threads);
-    let av = &*av;
+    residuals_from_products(values, vectors, av)
+}
+
+/// [`rel_residuals_into`] against a [`SpectralOp`]: the op-space
+/// relative residual `‖Ôv − ν̂v‖ / ‖Ôv‖`. For the plain operator this is
+/// byte-identical to the historical path; for generalized modes it
+/// equals the M⁻¹-norm pencil residual of the back-transformed pair
+/// (`W⁻¹(Ax − λMx) = Ãy − λy`), so in-loop locking gates on exactly the
+/// quantity the manifest reports.
+pub fn rel_residuals_op_into(
+    op: &SpectralOp,
+    values: &[f64],
+    vectors: &Mat,
+    av: &mut Mat,
+    threads: usize,
+) -> Vec<f64> {
+    assert!(values.len() <= vectors.cols());
+    op.apply_block_into(vectors, av, threads);
+    residuals_from_products(values, vectors, av)
+}
+
+fn residuals_from_products(values: &[f64], vectors: &Mat, av: &Mat) -> Vec<f64> {
     let n = vectors.rows();
     values
         .iter()
@@ -312,8 +387,9 @@ impl SolverKind {
         init: Option<&WarmStart>,
     ) -> EigResult {
         let solver = self.instance(opts);
-        let mut ws = solver.prepare(a);
-        solver.solve(a, &mut ws, init)
+        let op = SpectralOp::standard(a);
+        let mut ws = solver.prepare(&op);
+        solver.solve(&op, &mut ws, init)
     }
 }
 

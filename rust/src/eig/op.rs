@@ -1,0 +1,787 @@
+//! The spectral linear-operator abstraction behind every solver.
+//!
+//! [`SpectralOp`] is the one thing ChFSI, the Chebyshev filter backends,
+//! the Lanczos bound estimators, and the baseline solvers apply: a
+//! symmetric linear map `y ← Ôx` with a dimension and block-apply into
+//! preallocated scratch. Concrete shapes (`problem` × `transform`):
+//!
+//! | mode | operator `Ô` | op-space eigenvalue ν̂ | back-map |
+//! |---|---|---|---|
+//! | plain | `A` | λ | identity |
+//! | generalized | `W⁻¹AW⁻ᵀ`, `M = WWᵀ` | λ | `x = W⁻ᵀy` |
+//! | shift-invert (std) | `−(A−σI)⁻¹` | `1/(σ−λ)` | `λ = σ − 1/ν̂` |
+//! | shift-invert (gen) | `−Wᵀ(A−σM)⁻¹W` | `1/(σ−λ)` | `λ = σ − 1/ν̂`, `x = W⁻ᵀy` |
+//!
+//! `W = P·L·D^{1/2}` comes from a sparse LDLᵀ of the SPD mass matrix
+//! ([`crate::sparse::LdltFactor`]); splitting `M` this way makes the
+//! generalized pencil a *standard symmetric* problem in `y = Wᵀx`
+//! coordinates, so the whole ChFSI machinery (Householder QR,
+//! Rayleigh–Ritz, locking) applies unchanged — Euclidean orthogonality
+//! of op-space vectors **is** M-orthogonality of the returned `x`.
+//!
+//! The shift-invert operators are *negated* inverses: with σ placed just
+//! below a wanted interior window, eigenvalues λ > σ map to
+//! ν̂ = 1/(σ−λ) < 0, ordered ascending in ν̂ exactly as ascending in λ —
+//! so the existing "smallest `L` pairs" filter targets the window
+//! nearest σ from above with no solver changes. [`EigResult`] values are
+//! always back-transformed, problem-space λ sorted ascending.
+//!
+//! All solves route through the cached LDLᵀ factors; the op counts each
+//! triangular-substitution pass ([`SpectralOp::take_trisolves`]) and the
+//! factorization wall-clock ([`SpectralOp::factor_secs`]) for the
+//! manifest's `trisolve_count` / `factor_secs` rollups.
+
+use std::cell::{Cell, RefCell};
+use std::time::Instant;
+
+use crate::linalg::{flops, Mat};
+use crate::sparse::{CsrMatrix, LdltFactor};
+
+/// Eigenproblem shape: standard `Ax = λx` or generalized `Ax = λMx`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ProblemKind {
+    /// Standard symmetric problem (the historical default).
+    #[default]
+    Standard,
+    /// Generalized symmetric-definite pencil `(A, M)` with SPD mass `M`
+    /// supplied by the operator family.
+    Generalized,
+}
+
+impl ProblemKind {
+    /// Config/CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ProblemKind::Standard => "standard",
+            ProblemKind::Generalized => "generalized",
+        }
+    }
+
+    /// Parse a config/CLI name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "standard" => Some(ProblemKind::Standard),
+            "generalized" => Some(ProblemKind::Generalized),
+            _ => None,
+        }
+    }
+}
+
+/// Spectral transformation applied before filtering.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum Transform {
+    /// No transform: filter the low end of the spectrum (historical
+    /// default).
+    #[default]
+    None,
+    /// Shift-invert about σ: the solve targets the `L` eigenvalues
+    /// nearest σ *from above* (place σ just below the wanted window).
+    ShiftInvert {
+        /// The shift σ (problem-space units).
+        sigma: f64,
+    },
+}
+
+impl Transform {
+    /// True for the identity transform.
+    pub fn is_none(self) -> bool {
+        matches!(self, Transform::None)
+    }
+
+    /// Config/CLI name: `none` or `shift_invert:σ`.
+    pub fn name(self) -> String {
+        match self {
+            Transform::None => "none".to_string(),
+            Transform::ShiftInvert { sigma } => format!("shift_invert:{sigma}"),
+        }
+    }
+
+    /// Parse a config/CLI name (`none`, `shift_invert:σ`).
+    pub fn parse(s: &str) -> Option<Self> {
+        if s == "none" {
+            return Some(Transform::None);
+        }
+        let rest = s.strip_prefix("shift_invert:")?;
+        let sigma: f64 = rest.parse().ok()?;
+        sigma.is_finite().then_some(Transform::ShiftInvert { sigma })
+    }
+}
+
+/// Compact identity of an operator mode — what a warm chain must agree
+/// on before adopting a predecessor's subspace. A shift-inverted basis
+/// approximates interior eigenvectors and a generalized basis lives in
+/// `Wᵀ`-coordinates of a *specific* mass matrix; silently mixing either
+/// with a plain chain would poison every solve downstream, so
+/// `Chain::try_adopt` hard-errors on any [`OpTag`] mismatch.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OpTag {
+    /// Problem shape.
+    pub kind: ProblemKind,
+    /// Shift-invert σ, if any.
+    pub shift: Option<f64>,
+}
+
+impl OpTag {
+    /// Tag for a `problem` × `transform` pair.
+    pub fn new(kind: ProblemKind, transform: Transform) -> Self {
+        let shift = match transform {
+            Transform::None => None,
+            Transform::ShiftInvert { sigma } => Some(sigma),
+        };
+        Self { kind, shift }
+    }
+
+    /// Human-readable form for seam-validation errors.
+    pub fn describe(&self) -> String {
+        match self.shift {
+            Some(s) => format!("{}+shift_invert:{s}", self.kind.name()),
+            None => self.kind.name().to_string(),
+        }
+    }
+}
+
+enum Mode {
+    Plain,
+    Gen {
+        w: LdltFactor,
+    },
+    ShiftStd {
+        k: LdltFactor,
+        sigma: f64,
+    },
+    ShiftGen {
+        w: LdltFactor,
+        k: LdltFactor,
+        sigma: f64,
+    },
+}
+
+#[derive(Default)]
+struct OpScratch {
+    xcol: Vec<f64>,
+    ycol: Vec<f64>,
+    t1: Vec<f64>,
+    t2: Vec<f64>,
+    work: Vec<f64>,
+}
+
+/// A symmetric spectral operator (see module docs). Borrow-based: holds
+/// references to the problem matrices and owns only the factorizations
+/// and apply scratch. Interior mutability (scratch + counters) keeps
+/// `apply` callable through `&self` like the sparse kernels it wraps;
+/// the op is consequently single-threaded *externally* (each solve
+/// worker builds its own), while `apply` itself still row-partitions the
+/// inner SpMV across `threads`.
+pub struct SpectralOp<'a> {
+    a: &'a CsrMatrix,
+    mass: Option<&'a CsrMatrix>,
+    mode: Mode,
+    factor_secs: f64,
+    trisolves: Cell<usize>,
+    scratch: RefCell<OpScratch>,
+}
+
+impl<'a> SpectralOp<'a> {
+    /// The untransformed standard operator — `apply` is exactly `A·x`
+    /// and every consumer takes its historical fast path.
+    pub fn standard(a: &'a CsrMatrix) -> Self {
+        Self {
+            a,
+            mass: None,
+            mode: Mode::Plain,
+            factor_secs: 0.0,
+            trisolves: Cell::new(0),
+            scratch: RefCell::new(OpScratch::default()),
+        }
+    }
+
+    /// Build the operator for a `problem` × `transform` pair, factoring
+    /// the mass matrix and/or shifted pencil as needed. Errors if a
+    /// generalized problem has no mass matrix, if the mass is not SPD,
+    /// or if the LDLᵀ of `A − σM` breaks down (σ on the spectrum).
+    pub fn build(
+        a: &'a CsrMatrix,
+        mass: Option<&'a CsrMatrix>,
+        problem: ProblemKind,
+        transform: Transform,
+    ) -> Result<Self, String> {
+        if problem == ProblemKind::Standard && transform.is_none() {
+            return Ok(Self::standard(a));
+        }
+        let t0 = Instant::now();
+        let mode = match (problem, transform) {
+            (ProblemKind::Standard, Transform::None) => unreachable!(),
+            (ProblemKind::Standard, Transform::ShiftInvert { sigma }) => {
+                let k = LdltFactor::factor(&a.shift(-sigma))
+                    .map_err(|e| format!("shift_invert factorization failed: {e}"))?;
+                Mode::ShiftStd { k, sigma }
+            }
+            (ProblemKind::Generalized, transform) => {
+                let m = mass.ok_or_else(|| {
+                    "generalized problem requires a mass matrix, but the operator family \
+                     provides none"
+                        .to_string()
+                })?;
+                assert_eq!(m.rows(), a.rows(), "mass matrix dimension mismatch");
+                let w = LdltFactor::factor_spd(m)
+                    .map_err(|e| format!("mass matrix factorization failed: {e}"))?;
+                match transform {
+                    Transform::None => Mode::Gen { w },
+                    Transform::ShiftInvert { sigma } => {
+                        let k = LdltFactor::factor(&a.add_scaled(-sigma, m))
+                            .map_err(|e| format!("shift_invert factorization failed: {e}"))?;
+                        Mode::ShiftGen { w, k, sigma }
+                    }
+                }
+            }
+        };
+        Ok(Self {
+            a,
+            mass: if problem == ProblemKind::Generalized {
+                mass
+            } else {
+                None
+            },
+            mode,
+            factor_secs: t0.elapsed().as_secs_f64(),
+            trisolves: Cell::new(0),
+            scratch: RefCell::new(OpScratch::default()),
+        })
+    }
+
+    /// Operator dimension.
+    pub fn n(&self) -> usize {
+        self.a.rows()
+    }
+
+    /// `Some(A)` iff this is the untransformed standard operator — the
+    /// hook every backend uses to dispatch to its historical (and for
+    /// defaults, bit-for-bit identical) CSR/SELL/f32 kernels.
+    pub fn plain(&self) -> Option<&'a CsrMatrix> {
+        match self.mode {
+            Mode::Plain => Some(self.a),
+            _ => None,
+        }
+    }
+
+    /// True iff [`SpectralOp::plain`] is `Some`.
+    pub fn is_plain(&self) -> bool {
+        matches!(self.mode, Mode::Plain)
+    }
+
+    /// Mode identity for warm-chain seam validation.
+    pub fn tag(&self) -> OpTag {
+        match &self.mode {
+            Mode::Plain => OpTag {
+                kind: ProblemKind::Standard,
+                shift: None,
+            },
+            Mode::Gen { .. } => OpTag {
+                kind: ProblemKind::Generalized,
+                shift: None,
+            },
+            Mode::ShiftStd { sigma, .. } => OpTag {
+                kind: ProblemKind::Standard,
+                shift: Some(*sigma),
+            },
+            Mode::ShiftGen { sigma, .. } => OpTag {
+                kind: ProblemKind::Generalized,
+                shift: Some(*sigma),
+            },
+        }
+    }
+
+    /// Wall-clock seconds spent factoring (0 for the plain operator).
+    pub fn factor_secs(&self) -> f64 {
+        self.factor_secs
+    }
+
+    /// Drain the triangular-solve counter (each forward or backward
+    /// substitution pass counts one; multiplies by `W`/`Wᵀ` don't).
+    pub fn take_trisolves(&self) -> usize {
+        self.trisolves.replace(0)
+    }
+
+    fn count_trisolves(&self, k: usize) {
+        self.trisolves.set(self.trisolves.get() + k);
+    }
+
+    /// Operator diagonal when cheaply available (plain mode), else ones
+    /// — the Jacobi-preconditioner hook of the LOBPCG/JD baselines.
+    pub fn diagonal_or_ones(&self) -> Vec<f64> {
+        match self.mode {
+            Mode::Plain => self.a.diagonal(),
+            _ => vec![1.0; self.n()],
+        }
+    }
+
+    /// Single-vector apply `y ← Ôx`. Plain mode is exactly
+    /// `A.spmv_into` (same arithmetic, same flop accounting).
+    pub fn apply_into(&self, x: &[f64], y: &mut [f64], threads: usize) {
+        if let Mode::Plain = self.mode {
+            self.a.spmv_into(x, y, threads);
+            return;
+        }
+        let mut guard = self.scratch.borrow_mut();
+        let OpScratch { t1, t2, work, .. } = &mut *guard;
+        self.apply_raw(x, y, t1, t2, work, threads);
+    }
+
+    /// The mode-dispatched apply core. `x`/`y` must not alias the
+    /// passed scratch vectors.
+    fn apply_raw(
+        &self,
+        x: &[f64],
+        y: &mut [f64],
+        t1: &mut Vec<f64>,
+        t2: &mut Vec<f64>,
+        work: &mut Vec<f64>,
+        threads: usize,
+    ) {
+        let n = self.n();
+        match &self.mode {
+            Mode::Plain => self.a.spmv_into(x, y, threads),
+            Mode::Gen { w } => {
+                // y = W⁻¹ A W⁻ᵀ x.
+                t1.resize(n, 0.0);
+                t2.resize(n, 0.0);
+                w.wt_inv_apply(x, t1, work);
+                self.a.spmv_into(t1, t2, threads);
+                w.w_inv_apply(t2, y);
+                self.count_trisolves(2);
+            }
+            Mode::ShiftStd { k, .. } => {
+                // y = −(A − σI)⁻¹ x.
+                k.solve_into(x, y, work);
+                for v in y.iter_mut() {
+                    *v = -*v;
+                }
+                flops::add(n as u64);
+                self.count_trisolves(2);
+            }
+            Mode::ShiftGen { w, k, .. } => {
+                // y = −Wᵀ (A − σM)⁻¹ W x.
+                t1.resize(n, 0.0);
+                t2.resize(n, 0.0);
+                w.w_apply(x, t1, work);
+                k.solve_into(t1, t2, work);
+                w.wt_apply(t2, y);
+                for v in y.iter_mut() {
+                    *v = -*v;
+                }
+                flops::add(n as u64);
+                self.count_trisolves(2);
+            }
+        }
+    }
+
+    /// Block apply `Y ← ÔX` (reshapes `Y`). Plain mode is exactly
+    /// `A.spmm_into`; transformed modes apply column-by-column through
+    /// the factor solves.
+    pub fn apply_block_into(&self, x: &Mat, y: &mut Mat, threads: usize) {
+        if let Mode::Plain = self.mode {
+            self.a.spmm_into(x, y, threads);
+            return;
+        }
+        let (n, k) = (self.n(), x.cols());
+        assert_eq!(x.rows(), n);
+        y.set_shape(n, k);
+        let mut guard = self.scratch.borrow_mut();
+        let OpScratch {
+            xcol,
+            ycol,
+            t1,
+            t2,
+            work,
+        } = &mut *guard;
+        xcol.resize(n, 0.0);
+        ycol.resize(n, 0.0);
+        for j in 0..k {
+            for i in 0..n {
+                xcol[i] = x[(i, j)];
+            }
+            self.apply_raw(xcol, ycol, t1, t2, work, threads);
+            for i in 0..n {
+                y[(i, j)] = ycol[i];
+            }
+        }
+    }
+
+    /// Fused filter step on a column window:
+    /// `Y[:, j0..j1] = ca·(Ô X) + cb·X + cc·Z` (columns outside the
+    /// window untouched; `Y` keeps its shape). Plain mode is exactly
+    /// [`CsrMatrix::spmm_fused_cols_into`].
+    #[allow(clippy::too_many_arguments)]
+    pub fn apply_fused_cols_into(
+        &self,
+        ca: f64,
+        x: &Mat,
+        cb: f64,
+        cc: f64,
+        z: &Mat,
+        y: &mut Mat,
+        j0: usize,
+        j1: usize,
+        threads: usize,
+    ) {
+        if let Mode::Plain = self.mode {
+            self.a
+                .spmm_fused_cols_into(ca, x, cb, cc, z, y, j0, j1, threads);
+            return;
+        }
+        let n = self.n();
+        let k = x.cols();
+        assert_eq!(x.rows(), n);
+        assert!(z.cols() == k && y.cols() == k && j1 <= k && j0 <= j1);
+        let mut guard = self.scratch.borrow_mut();
+        let OpScratch {
+            xcol,
+            ycol,
+            t1,
+            t2,
+            work,
+        } = &mut *guard;
+        xcol.resize(n, 0.0);
+        ycol.resize(n, 0.0);
+        for j in j0..j1 {
+            for i in 0..n {
+                xcol[i] = x[(i, j)];
+            }
+            self.apply_raw(xcol, ycol, t1, t2, work, threads);
+            for i in 0..n {
+                y[(i, j)] = ca * ycol[i] + cb * x[(i, j)] + cc * z[(i, j)];
+            }
+        }
+        flops::add((4 * n * (j1 - j0)) as u64);
+    }
+
+    /// Map problem-space vectors to op-space coordinates (`y = Wᵀx` per
+    /// column for generalized modes; clone otherwise). Warm starts are
+    /// stored in problem space, so ChFSI runs inherited blocks through
+    /// this before seeding the iteration.
+    pub fn to_op_block(&self, x: &Mat) -> Mat {
+        let w = match &self.mode {
+            Mode::Gen { w } | Mode::ShiftGen { w, .. } => w,
+            _ => return x.clone(),
+        };
+        let (n, k) = (x.rows(), x.cols());
+        assert_eq!(n, self.n());
+        let mut y = Mat::zeros(n, k);
+        let mut guard = self.scratch.borrow_mut();
+        let OpScratch { xcol, ycol, .. } = &mut *guard;
+        xcol.resize(n, 0.0);
+        ycol.resize(n, 0.0);
+        for j in 0..k {
+            for i in 0..n {
+                xcol[i] = x[(i, j)];
+            }
+            w.wt_apply(xcol, ycol);
+            for i in 0..n {
+                y[(i, j)] = ycol[i];
+            }
+        }
+        y
+    }
+
+    /// Map a problem-space eigenvalue guess to the op-space spectrum
+    /// (warm-start values travel problem-space; identity unless
+    /// shift-inverted).
+    pub fn to_op_value(&self, lam: f64) -> f64 {
+        match &self.mode {
+            Mode::Plain | Mode::Gen { .. } => lam,
+            Mode::ShiftStd { sigma, .. } | Mode::ShiftGen { sigma, .. } => 1.0 / (sigma - lam),
+        }
+    }
+
+    /// Back-transform converged op-space pairs to problem space:
+    /// `λ = σ − 1/ν̂` under shift-invert (then re-sorted ascending in λ,
+    /// vectors following), `x = W⁻ᵀy` per column for generalized modes
+    /// (which leaves the first `values.len()` columns M-orthonormal).
+    /// Guard columns beyond `values.len()` are mapped but not reordered.
+    pub fn back_transform(&self, values: Vec<f64>, vectors: Mat) -> (Vec<f64>, Mat) {
+        let (mut values, mut vectors) = (values, vectors);
+        if let Mode::Gen { w } | Mode::ShiftGen { w, .. } = &self.mode {
+            let (n, k) = (vectors.rows(), vectors.cols());
+            let mut x = Mat::zeros(n, k);
+            let mut guard = self.scratch.borrow_mut();
+            let OpScratch {
+                xcol, ycol, work, ..
+            } = &mut *guard;
+            xcol.resize(n, 0.0);
+            ycol.resize(n, 0.0);
+            for j in 0..k {
+                for i in 0..n {
+                    ycol[i] = vectors[(i, j)];
+                }
+                w.wt_inv_apply(ycol, xcol, work);
+                self.count_trisolves(1);
+                for i in 0..n {
+                    x[(i, j)] = xcol[i];
+                }
+            }
+            vectors = x;
+        }
+        if let Mode::ShiftStd { sigma, .. } | Mode::ShiftGen { sigma, .. } = &self.mode {
+            let sigma = *sigma;
+            for v in values.iter_mut() {
+                *v = sigma - 1.0 / *v;
+            }
+            let l = values.len();
+            let mut order: Vec<usize> = (0..l).collect();
+            order.sort_by(|&i, &j| values[i].total_cmp(&values[j]));
+            if order.iter().enumerate().any(|(pos, &i)| pos != i) {
+                let sorted_vals: Vec<f64> = order.iter().map(|&i| values[i]).collect();
+                let n = vectors.rows();
+                let mut sorted_vecs = vectors.clone();
+                for (pos, &src) in order.iter().enumerate() {
+                    for i in 0..n {
+                        sorted_vecs[(i, pos)] = vectors[(i, src)];
+                    }
+                }
+                values = sorted_vals;
+                vectors = sorted_vecs;
+            }
+        }
+        (values, vectors)
+    }
+
+    /// Problem-space pencil residuals `‖Ax − λMx‖ / ‖Ax‖` for
+    /// back-transformed pairs — Euclidean norms for standard problems,
+    /// M⁻¹-norms (`‖W⁻¹·‖₂`) for generalized ones, which is exactly the
+    /// op-space relative residual the in-loop locking tests.
+    pub fn pencil_residuals(&self, values: &[f64], vectors: &Mat, threads: usize) -> Vec<f64> {
+        let n = self.n();
+        assert!(values.len() <= vectors.cols());
+        let w = match &self.mode {
+            Mode::Gen { w } | Mode::ShiftGen { w, .. } => Some(w),
+            _ => None,
+        };
+        let mut guard = self.scratch.borrow_mut();
+        let OpScratch {
+            xcol,
+            ycol,
+            t1,
+            t2,
+            ..
+        } = &mut *guard;
+        xcol.resize(n, 0.0);
+        ycol.resize(n, 0.0);
+        t1.resize(n, 0.0);
+        t2.resize(n, 0.0);
+        let mut res = Vec::with_capacity(values.len());
+        for (j, &lam) in values.iter().enumerate() {
+            for i in 0..n {
+                xcol[i] = vectors[(i, j)];
+            }
+            // ycol = A x;  t1 = r = A x − λ M x.
+            self.a.spmv_into(xcol, ycol, threads);
+            if let Some(m) = self.mass {
+                m.spmv_into(xcol, t1, threads);
+                for i in 0..n {
+                    t1[i] = ycol[i] - lam * t1[i];
+                }
+            } else {
+                for i in 0..n {
+                    t1[i] = ycol[i] - lam * xcol[i];
+                }
+            }
+            flops::add(2 * n as u64);
+            let (num, den) = if let Some(w) = w {
+                // M⁻¹-norm: ‖W⁻¹r‖ / ‖W⁻¹Ax‖.
+                w.w_inv_apply(t1, t2);
+                let num = norm2_sq(t2);
+                w.w_inv_apply(ycol, t2);
+                self.count_trisolves(2);
+                (num, norm2_sq(t2))
+            } else {
+                (norm2_sq(t1), norm2_sq(ycol))
+            };
+            res.push(if den == 0.0 {
+                if lam == 0.0 {
+                    0.0
+                } else {
+                    f64::INFINITY
+                }
+            } else {
+                (num / den).sqrt()
+            });
+        }
+        res
+    }
+}
+
+fn norm2_sq(v: &[f64]) -> f64 {
+    flops::add(2 * v.len() as u64);
+    v.iter().map(|&x| x * x).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::symeig::sym_eig;
+    use crate::operators::{self, GenOptions, OperatorKind};
+    use crate::rng::Xoshiro256pp;
+    use crate::sparse::CooBuilder;
+
+    fn poisson(grid: usize) -> CsrMatrix {
+        operators::generate(
+            OperatorKind::Poisson,
+            GenOptions {
+                grid,
+                ..Default::default()
+            },
+            1,
+            7,
+        )
+        .remove(0)
+        .matrix
+    }
+
+    /// Tridiagonal SPD mass (1-D tent-mass pattern scaled to stay well
+    /// conditioned).
+    fn toy_mass(n: usize) -> CsrMatrix {
+        let mut b = CooBuilder::new(n, n);
+        for i in 0..n {
+            b.push(i, i, 4.0);
+            if i + 1 < n {
+                b.push(i, i + 1, 1.0);
+                b.push(i + 1, i, 1.0);
+            }
+        }
+        b.build()
+    }
+
+    #[test]
+    fn transform_names_roundtrip() {
+        assert_eq!(ProblemKind::parse("standard"), Some(ProblemKind::Standard));
+        assert_eq!(
+            ProblemKind::parse("generalized"),
+            Some(ProblemKind::Generalized)
+        );
+        assert_eq!(ProblemKind::parse("other"), None);
+        for t in [
+            Transform::None,
+            Transform::ShiftInvert { sigma: 2.5 },
+            Transform::ShiftInvert { sigma: -0.125 },
+        ] {
+            assert_eq!(Transform::parse(&t.name()), Some(t));
+        }
+        assert_eq!(Transform::parse("shift_invert:nan"), None);
+        assert_eq!(Transform::parse("polynomial"), None);
+    }
+
+    #[test]
+    fn plain_apply_matches_spmv() {
+        let a = poisson(6);
+        let op = SpectralOp::standard(&a);
+        assert!(op.is_plain());
+        assert_eq!(op.tag(), OpTag::new(ProblemKind::Standard, Transform::None));
+        let mut rng = Xoshiro256pp::seed_from_u64(1);
+        let mut x = vec![0.0; a.rows()];
+        rng.fill_normal(&mut x);
+        let mut y = vec![0.0; a.rows()];
+        op.apply_into(&x, &mut y, 1);
+        let want = a.spmv_alloc(&x);
+        assert_eq!(y, want);
+    }
+
+    #[test]
+    fn generalized_apply_is_congruent_standard_form() {
+        // Eigenvalues of W⁻¹AW⁻ᵀ must equal the pencil eigenvalues of
+        // (A, M): check Ô applied to a dense basis reproduces them.
+        let a = poisson(4);
+        let n = a.rows();
+        let m = toy_mass(n);
+        let op = SpectralOp::build(&a, Some(&m), ProblemKind::Generalized, Transform::None)
+            .unwrap();
+        assert!(!op.is_plain());
+        // Densify Ô column by column.
+        let mut dense = Mat::zeros(n, n);
+        let mut e = vec![0.0; n];
+        let mut col = vec![0.0; n];
+        for j in 0..n {
+            e.fill(0.0);
+            e[j] = 1.0;
+            op.apply_into(&e, &mut col, 1);
+            for i in 0..n {
+                dense[(i, j)] = col[i];
+            }
+        }
+        // Symmetry of the transformed operator.
+        for i in 0..n {
+            for j in 0..n {
+                assert!(
+                    (dense[(i, j)] - dense[(j, i)]).abs() < 1e-9,
+                    "asymmetry at ({i},{j})"
+                );
+            }
+        }
+        let got = sym_eig(&dense);
+        let oracle = crate::linalg::symeig::sym_eig_generalized(&a.to_dense(), &m.to_dense());
+        for (g, o) in got.values.iter().zip(&oracle.values) {
+            assert!((g - o).abs() < 1e-8 * o.abs().max(1.0), "{g} vs {o}");
+        }
+    }
+
+    #[test]
+    fn shift_invert_back_transform_orders_by_lambda() {
+        let a = poisson(5);
+        let n = a.rows();
+        let dense = sym_eig(&a.to_dense());
+        // σ between the 4th and 5th eigenvalues.
+        let sigma = 0.5 * (dense.values[3] + dense.values[4]);
+        let op = SpectralOp::build(
+            &a,
+            None,
+            ProblemKind::Standard,
+            Transform::ShiftInvert { sigma },
+        )
+        .unwrap();
+        // Apply to an eigenvector v_j of A: Ô v = (1/(σ−λ_j)) v.
+        let mut v = vec![0.0; n];
+        let mut y = vec![0.0; n];
+        for j in [4usize, 6] {
+            for i in 0..n {
+                v[i] = dense.vectors[(i, j)];
+            }
+            op.apply_into(&v, &mut y, 1);
+            let nu = 1.0 / (sigma - dense.values[j]);
+            for i in 0..n {
+                assert!((y[i] - nu * v[i]).abs() < 1e-8, "col {j} row {i}");
+            }
+            assert!((op.back_value_check(nu) - dense.values[j]).abs() < 1e-8);
+        }
+        // back_transform re-sorts ascending in λ.
+        let nus = vec![op.to_op_value(dense.values[6]), op.to_op_value(dense.values[4])];
+        let mut vecs = Mat::zeros(n, 2);
+        for i in 0..n {
+            vecs[(i, 0)] = dense.vectors[(i, 6)];
+            vecs[(i, 1)] = dense.vectors[(i, 4)];
+        }
+        let (lams, xs) = op.back_transform(nus, vecs);
+        assert!((lams[0] - dense.values[4]).abs() < 1e-9);
+        assert!((lams[1] - dense.values[6]).abs() < 1e-9);
+        for i in 0..n {
+            assert!((xs[(i, 0)] - dense.vectors[(i, 4)]).abs() < 1e-12);
+        }
+        assert!(op.take_trisolves() > 0);
+    }
+
+    #[test]
+    fn build_rejects_generalized_without_mass() {
+        let a = poisson(4);
+        let err =
+            SpectralOp::build(&a, None, ProblemKind::Generalized, Transform::None).unwrap_err();
+        assert!(err.contains("mass matrix"), "{err}");
+    }
+
+    impl SpectralOp<'_> {
+        /// Test helper: scalar back-map.
+        fn back_value_check(&self, nu: f64) -> f64 {
+            match &self.mode {
+                Mode::ShiftStd { sigma, .. } | Mode::ShiftGen { sigma, .. } => sigma - 1.0 / nu,
+                _ => nu,
+            }
+        }
+    }
+}

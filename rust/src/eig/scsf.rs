@@ -8,6 +8,7 @@
 
 use super::chebyshev::{self, FilterBackend};
 use super::chfsi::{self, ChfsiOptions, Recycling};
+use super::op::{OpTag, SpectralOp};
 use super::solver::Workspace;
 use super::{EigResult, RecycleSpace, WarmStart};
 use crate::linalg::symeig::sym_eig;
@@ -201,9 +202,10 @@ pub fn solve_sequence_in(
     let mut results = Vec::with_capacity(problems.len());
     let mut chain = Chain::new();
     for &idx in &sort.order {
-        results.push(chain.solve_next_for(
+        results.push(chain.solve_next_for_mass(
             &problems[idx].family,
             &problems[idx].matrix,
+            problems[idx].mass.as_ref(),
             opts,
             backend,
             ws,
@@ -231,6 +233,10 @@ pub struct Chain {
     warm: Option<WarmStart>,
     /// Family tag of the last solve (what the reset compares against).
     family: Option<std::sync::Arc<str>>,
+    /// Operator tag (problem kind + shift) the carried subspace was
+    /// solved under — seam handoffs must agree on it
+    /// ([`Chain::try_adopt`]); `None` until something is carried.
+    tag: Option<OpTag>,
     /// Solves that started cold (no inherited subspace).
     pub cold_starts: usize,
     /// Solves that inherited a subspace (chained or handed off).
@@ -253,16 +259,21 @@ impl Chain {
     }
 
     /// [`Chain::adopt`] with the agreement checks a seam handoff needs:
-    /// the tail must come from the same operator family and matrix
-    /// dimension the chain is about to solve. On a mismatch the tail is
-    /// *not* adopted and the error names the disagreement — callers
-    /// (the pipeline's run handoff) wrap it with the run ids involved —
-    /// instead of silently carrying a shape-mismatched warm start.
+    /// the tail must come from the same operator family, matrix
+    /// dimension, *and operator mode* ([`OpTag`]: problem kind plus
+    /// shift-invert σ) the chain is about to solve. On a mismatch the
+    /// tail is *not* adopted and the error names the disagreement —
+    /// callers (the pipeline's run handoff) wrap it with the run ids
+    /// involved — instead of silently carrying a shape- or
+    /// coordinate-mismatched warm start: a shift-inverted or
+    /// `Wᵀ`-coordinate basis is poison to a plain chain and vice versa.
     pub fn try_adopt(
         &mut self,
         family: &std::sync::Arc<str>,
         n: usize,
+        tag: OpTag,
         tail_family: &std::sync::Arc<str>,
+        tail_tag: OpTag,
         tail: WarmStart,
     ) -> Result<(), String> {
         if tail_family.as_ref() != family.as_ref() {
@@ -276,7 +287,26 @@ impl Chain {
                 tail.vectors.rows()
             ));
         }
+        if tail_tag.kind != tag.kind {
+            return Err(format!(
+                "problem-type mismatch (tail solved '{}', chain solves '{}')",
+                tail_tag.kind.name(),
+                tag.kind.name()
+            ));
+        }
+        if tail_tag.shift != tag.shift {
+            let fmt = |s: Option<f64>| match s {
+                Some(v) => format!("shift_invert:{v}"),
+                None => "none".to_string(),
+            };
+            return Err(format!(
+                "shift mismatch (tail solved under transform '{}', chain solves under '{}')",
+                fmt(tail_tag.shift),
+                fmt(tag.shift)
+            ));
+        }
         self.family = Some(family.clone());
+        self.tag = Some(tag);
         self.warm = Some(tail);
         Ok(())
     }
@@ -286,6 +316,7 @@ impl Chain {
     pub fn reset(&mut self) {
         self.warm = None;
         self.family = None;
+        self.tag = None;
     }
 
     /// [`Chain::solve_next`] with a family tag: if the tag (or the
@@ -296,6 +327,22 @@ impl Chain {
         &mut self,
         family: &std::sync::Arc<str>,
         a: &crate::sparse::CsrMatrix,
+        opts: &ScsfOptions,
+        backend: &mut dyn FilterBackend,
+        ws: &mut Workspace,
+    ) -> EigResult {
+        self.solve_next_for_mass(family, a, None, opts, backend, ws)
+    }
+
+    /// [`Chain::solve_next_for`] with an optional consistent mass
+    /// matrix — the generalized path (`problem: generalized` in
+    /// `opts.chfsi`) factors `M = WWᵀ` per solve and works in operator
+    /// coordinates; `mass` is ignored for standard problems.
+    pub fn solve_next_for_mass(
+        &mut self,
+        family: &std::sync::Arc<str>,
+        a: &crate::sparse::CsrMatrix,
+        mass: Option<&crate::sparse::CsrMatrix>,
         opts: &ScsfOptions,
         backend: &mut dyn FilterBackend,
         ws: &mut Workspace,
@@ -316,7 +363,7 @@ impl Chain {
             self.family_resets += 1;
         }
         self.family = Some(family.clone());
-        self.solve_next(a, opts, backend, ws)
+        self.solve_next_mass(a, mass, opts, backend, ws)
     }
 
     /// True if the *next* solve would start cold — the chain's
@@ -341,6 +388,30 @@ impl Chain {
         backend: &mut dyn FilterBackend,
         ws: &mut Workspace,
     ) -> EigResult {
+        self.solve_next_mass(a, None, opts, backend, ws)
+    }
+
+    /// [`Chain::solve_next`] with an optional mass matrix: the operator
+    /// (plain, generalized, or shift-inverted — per `opts.chfsi`) is
+    /// built here, and if its [`OpTag`] differs from the one the carried
+    /// subspace was solved under, the subspace is dropped first — the
+    /// basis lives in mode-specific coordinates and must not leak across
+    /// a transform boundary.
+    pub fn solve_next_mass(
+        &mut self,
+        a: &crate::sparse::CsrMatrix,
+        mass: Option<&crate::sparse::CsrMatrix>,
+        opts: &ScsfOptions,
+        backend: &mut dyn FilterBackend,
+        ws: &mut Workspace,
+    ) -> EigResult {
+        let op = SpectralOp::build(a, mass, opts.chfsi.problem, opts.chfsi.transform)
+            .unwrap_or_else(|e| panic!("operator construction failed: {e}"));
+        if self.warm.is_some() && self.tag.is_some_and(|t| t != op.tag()) {
+            self.warm = None;
+            self.family_resets += 1;
+        }
+        self.tag = Some(op.tag());
         let cold = self.next_is_cold(opts);
         if cold {
             self.cold_starts += 1;
@@ -348,7 +419,7 @@ impl Chain {
             self.warm_solves += 1;
         }
         let init = if cold { None } else { self.warm.as_ref() };
-        let mut r = chfsi::solve_in(a, &opts.chfsi, init, backend, ws);
+        let mut r = chfsi::solve_op_in(&op, &opts.chfsi, init, backend, ws);
         if opts.warm_start {
             // Under `recycling: deflate` the chain also carries the
             // recycle space forward: fold this solve's pairs in, compress
@@ -786,23 +857,101 @@ mod tests {
         let tail = donor.into_tail().expect("warm chain has a tail");
         let n = helm[0].matrix.rows();
 
+        let plain = OpTag::new(
+            crate::eig::op::ProblemKind::Standard,
+            crate::eig::op::Transform::None,
+        );
+
         // Family mismatch: rejected, nothing adopted.
         let mut c = Chain::new();
         let err = c
-            .try_adopt(&pois[0].family, pois[0].matrix.rows(), &helm[0].family, tail.clone())
+            .try_adopt(
+                &pois[0].family,
+                pois[0].matrix.rows(),
+                plain,
+                &helm[0].family,
+                plain,
+                tail.clone(),
+            )
             .unwrap_err();
         assert!(err.contains("family mismatch"), "{err}");
         assert!(c.next_is_cold(&o));
 
         // Dimension mismatch: rejected, nothing adopted.
         let err = c
-            .try_adopt(&small[0].family, small[0].matrix.rows(), &helm[0].family, tail.clone())
+            .try_adopt(
+                &small[0].family,
+                small[0].matrix.rows(),
+                plain,
+                &helm[0].family,
+                plain,
+                tail.clone(),
+            )
             .unwrap_err();
         assert!(err.contains("dimension mismatch"), "{err}");
         assert!(c.next_is_cold(&o));
 
         // Agreement: adopted, the next solve starts warm.
-        c.try_adopt(&helm[0].family, n, &helm[0].family, tail).expect("matching tail adopts");
+        c.try_adopt(&helm[0].family, n, plain, &helm[0].family, plain, tail)
+            .expect("matching tail adopts");
+        assert!(!c.next_is_cold(&o));
+    }
+
+    #[test]
+    fn try_adopt_rejects_mismatched_operator_modes() {
+        // The transform-aware seam checks: a tail solved as a standard
+        // problem must not seed a generalized chain (problem-type
+        // mismatch), and two shift-inverted runs must agree on σ
+        // (shift mismatch). Both reject hard, leaving the chain cold.
+        use crate::eig::op::{ProblemKind, Transform};
+        let helm = operators::generate(
+            OperatorKind::Helmholtz,
+            GenOptions {
+                grid: 8,
+                ..Default::default()
+            },
+            1,
+            9,
+        );
+        let o = opts(3, 1e-8);
+        let mut backend = crate::eig::chebyshev::NativeFilter::new();
+        let mut ws = Workspace::new(1);
+        let mut donor = Chain::new();
+        donor.solve_next_for(&helm[0].family, &helm[0].matrix, &o, &mut backend, &mut ws);
+        let tail = donor.into_tail().expect("warm chain has a tail");
+        let n = helm[0].matrix.rows();
+        let fam = &helm[0].family;
+        let plain = OpTag::new(ProblemKind::Standard, Transform::None);
+        let gen = OpTag::new(ProblemKind::Generalized, Transform::None);
+        let si = |sigma| OpTag::new(ProblemKind::Standard, Transform::ShiftInvert { sigma });
+
+        // Standard tail into a generalized chain: problem-type mismatch.
+        let mut c = Chain::new();
+        let err = c
+            .try_adopt(fam, n, gen, fam, plain, tail.clone())
+            .unwrap_err();
+        assert!(err.contains("problem-type mismatch"), "{err}");
+        assert!(err.contains("standard") && err.contains("generalized"), "{err}");
+        assert!(c.next_is_cold(&o));
+
+        // Plain tail into a shift-inverted chain: shift mismatch.
+        let err = c
+            .try_adopt(fam, n, si(1.5), fam, plain, tail.clone())
+            .unwrap_err();
+        assert!(err.contains("shift mismatch"), "{err}");
+        assert!(c.next_is_cold(&o));
+
+        // Two shift-inverted runs with different σ: shift mismatch too.
+        let err = c
+            .try_adopt(fam, n, si(1.5), fam, si(2.5), tail.clone())
+            .unwrap_err();
+        assert!(err.contains("shift mismatch"), "{err}");
+        assert!(err.contains("shift_invert:2.5") && err.contains("shift_invert:1.5"), "{err}");
+        assert!(c.next_is_cold(&o));
+
+        // Same σ on both sides agrees.
+        c.try_adopt(fam, n, si(1.5), fam, si(1.5), tail)
+            .expect("matching modes adopt");
         assert!(!c.next_is_cold(&o));
     }
 

@@ -14,17 +14,19 @@
 //!
 //! ```no_run
 //! use scsf::eig::solver::EigSolver;
-//! use scsf::eig::{EigOptions, SolverKind};
+//! use scsf::eig::{EigOptions, SolverKind, SpectralOp};
 //! # let a = scsf::sparse::CsrMatrix::eye(64);
+//! let op = SpectralOp::standard(&a);
 //! let solver = SolverKind::Chfsi.instance(&EigOptions::default());
-//! let mut ws = solver.prepare(&a);
-//! let r1 = solver.solve(&a, &mut ws, None);
+//! let mut ws = solver.prepare(&op);
+//! let r1 = solver.solve(&op, &mut ws, None);
 //! let warm = r1.as_warm_start();
-//! let r2 = solver.solve(&a, &mut ws, Some(&warm)); // zero new blocks
+//! let r2 = solver.solve(&op, &mut ws, Some(&warm)); // zero new blocks
 //! ```
 
 use super::chebyshev::{FilterBackendKind, NativeFilter, SellFilter};
 use super::chfsi::{self, ChfsiOptions};
+use super::op::SpectralOp;
 use super::{
     jacobi_davidson, krylov_schur, lanczos, lobpcg, EigOptions, EigResult, SolverKind, WarmStart,
 };
@@ -184,14 +186,19 @@ impl Workspace {
 /// The unified solver interface every [`SolverKind`] routes through:
 /// size a reusable [`Workspace`] for a problem shape, then solve any
 /// number of (same-shaped) problems in it, optionally warm-started.
+///
+/// Solvers see only the [`SpectralOp`] linear-operator abstraction —
+/// plain sparse matrices, generalized pencils and shift-inverted
+/// operators all enter through the same interface; warm starts arrive
+/// in problem coordinates and are mapped by the engines.
 pub trait EigSolver {
-    /// Build a workspace sized for `a` (allocation happens here and at
+    /// Build a workspace sized for `op` (allocation happens here and at
     /// workspace growth, never inside the iteration loops).
-    fn prepare(&self, a: &CsrMatrix) -> Workspace;
+    fn prepare(&self, op: &SpectralOp) -> Workspace;
 
     /// Solve one problem inside `ws`, optionally warm-started from a
     /// previous, similar problem's eigenpairs.
-    fn solve(&self, a: &CsrMatrix, ws: &mut Workspace, init: Option<&WarmStart>) -> EigResult;
+    fn solve(&self, op: &SpectralOp, ws: &mut Workspace, init: Option<&WarmStart>) -> EigResult;
 
     /// Display label (matches the paper-table column names).
     fn label(&self) -> &'static str;
@@ -234,28 +241,28 @@ impl Solver {
 }
 
 impl EigSolver for Solver {
-    fn prepare(&self, a: &CsrMatrix) -> Workspace {
+    fn prepare(&self, op: &SpectralOp) -> Workspace {
         let mut ws = Workspace::new(self.opts.threads);
-        ws.reserve(a.rows(), self.block_width(a.rows()));
+        ws.reserve(op.n(), self.block_width(op.n()));
         ws
     }
 
-    fn solve(&self, a: &CsrMatrix, ws: &mut Workspace, init: Option<&WarmStart>) -> EigResult {
+    fn solve(&self, op: &SpectralOp, ws: &mut Workspace, init: Option<&WarmStart>) -> EigResult {
         match self.kind {
-            SolverKind::Eigsh => lanczos::solve_in(a, &self.opts.eig, init, ws),
-            SolverKind::Lobpcg => lobpcg::solve_in(a, &self.opts.eig, init, ws),
-            SolverKind::KrylovSchur => krylov_schur::solve_in(a, &self.opts.eig, init, ws),
+            SolverKind::Eigsh => lanczos::solve_op_in(op, &self.opts.eig, init, ws),
+            SolverKind::Lobpcg => lobpcg::solve_op_in(op, &self.opts.eig, init, ws),
+            SolverKind::KrylovSchur => krylov_schur::solve_op_in(op, &self.opts.eig, init, ws),
             SolverKind::JacobiDavidson => {
-                jacobi_davidson::solve_in(a, &self.opts.eig, init, ws)
+                jacobi_davidson::solve_op_in(op, &self.opts.eig, init, ws)
             }
             SolverKind::Chfsi | SolverKind::Scsf => match self.opts.filter_backend {
                 FilterBackendKind::Csr => {
                     let mut backend = NativeFilter::new();
-                    chfsi::solve_in(a, &self.opts, init, &mut backend, ws)
+                    chfsi::solve_op_in(op, &self.opts, init, &mut backend, ws)
                 }
                 FilterBackendKind::Sell => {
                     let mut backend = SellFilter::new();
-                    chfsi::solve_in(a, &self.opts, init, &mut backend, ws)
+                    chfsi::solve_op_in(op, &self.opts, init, &mut backend, ws)
                 }
             },
         }
@@ -304,8 +311,9 @@ mod tests {
         ] {
             let direct = kind.solve(&a, &opts, None);
             let solver = kind.instance(&opts);
-            let mut ws = solver.prepare(&a);
-            let via_trait = solver.solve(&a, &mut ws, None);
+            let op = SpectralOp::standard(&a);
+            let mut ws = solver.prepare(&op);
+            let via_trait = solver.solve(&op, &mut ws, None);
             assert_eq!(direct.values, via_trait.values, "{kind:?}");
             assert_eq!(direct.vectors, via_trait.vectors, "{kind:?}");
         }
@@ -322,11 +330,12 @@ mod tests {
         };
         for kind in [SolverKind::Chfsi, SolverKind::Eigsh, SolverKind::Lobpcg] {
             let solver = kind.instance(&opts);
-            let mut ws = solver.prepare(&a);
-            let r = solver.solve(&a, &mut ws, None);
+            let op = SpectralOp::standard(&a);
+            let mut ws = solver.prepare(&op);
+            let r = solver.solve(&op, &mut ws, None);
             let cap_after_first = ws.capacity_f64();
             let warm = r.as_warm_start();
-            let _ = solver.solve(&a, &mut ws, Some(&warm));
+            let _ = solver.solve(&op, &mut ws, Some(&warm));
             assert_eq!(
                 ws.capacity_f64(),
                 cap_after_first,

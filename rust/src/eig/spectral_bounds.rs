@@ -12,6 +12,7 @@
 //! where `θ_i` are the Ritz values of the k-step tridiagonal and `f_k`
 //! the last residual.
 
+use super::op::SpectralOp;
 use crate::linalg::dense::{dot, norm2, vaxpy};
 use crate::linalg::symeig::tridiag_eig;
 use crate::rng::Xoshiro256pp;
@@ -29,7 +30,15 @@ pub struct SpectralBounds {
 
 /// Safeguarded k-step Lanczos bound (default `k = 12`, matching ChASE).
 pub fn lanczos_bounds(a: &CsrMatrix, steps: usize, seed: u64) -> SpectralBounds {
-    let n = a.rows();
+    lanczos_bounds_op(&SpectralOp::standard(a), steps, seed)
+}
+
+/// [`lanczos_bounds`] on an abstract [`SpectralOp`]: the same safeguarded
+/// estimate on whatever operator the filter will actually sweep (plain
+/// `A`, the congruent generalized form, or a shift-inverted map). For a
+/// plain operator this is bit-for-bit the historical serial recurrence.
+pub fn lanczos_bounds_op(op: &SpectralOp, steps: usize, seed: u64) -> SpectralBounds {
+    let n = op.n();
     let k = steps.min(n).max(2);
     let mut rng = Xoshiro256pp::seed_from_u64(seed ^ 0x5CAD_B0CE);
     let mut v = vec![0.0f64; n];
@@ -43,7 +52,7 @@ pub fn lanczos_bounds(a: &CsrMatrix, steps: usize, seed: u64) -> SpectralBounds 
     let mut w = vec![0.0f64; n];
     let mut beta_last = 0.0;
     for j in 0..k {
-        a.spmv(&v, &mut w);
+        op.apply_into(&v, &mut w, 1);
         if j > 0 {
             vaxpy(-betas[j - 1], &v_prev, &mut w);
         }
@@ -130,6 +139,48 @@ mod tests {
         let b = lanczos_bounds(&a, 8, 1);
         assert!((b.upper - 1.0).abs() < 1e-8);
         assert!(b.lower_est <= 1.0 + 1e-12);
+    }
+
+    #[test]
+    fn op_variant_is_bit_for_bit_on_plain_operators() {
+        let opts = GenOptions {
+            grid: 10,
+            ..Default::default()
+        };
+        let p = &operators::generate(OperatorKind::Helmholtz, opts, 1, 5)[0];
+        let want = lanczos_bounds(&p.matrix, 12, 5);
+        let op = SpectralOp::standard(&p.matrix);
+        let got = lanczos_bounds_op(&op, 12, 5);
+        assert_eq!(want.upper.to_bits(), got.upper.to_bits());
+        assert_eq!(want.lower_est.to_bits(), got.lower_est.to_bits());
+    }
+
+    #[test]
+    fn bounds_a_shift_inverted_operator() {
+        use crate::eig::op::{ProblemKind, Transform};
+        let opts = GenOptions {
+            grid: 8,
+            ..Default::default()
+        };
+        let p = &operators::generate(OperatorKind::Poisson, opts, 1, 2)[0];
+        let dense = sym_eig(&p.matrix.to_dense());
+        let sigma = 0.5 * (dense.values[2] + dense.values[3]);
+        let op = SpectralOp::build(
+            &p.matrix,
+            None,
+            ProblemKind::Standard,
+            Transform::ShiftInvert { sigma },
+        )
+        .unwrap();
+        // Op spectrum is ν̂ = 1/(σ−λ); its true max over the dense λ's
+        // must sit under the safeguarded bound.
+        let nu_max = dense
+            .values
+            .iter()
+            .map(|&l| 1.0 / (sigma - l))
+            .fold(f64::NEG_INFINITY, f64::max);
+        let b = lanczos_bounds_op(&op, 12, 2);
+        assert!(b.upper >= nu_max, "bound {} < ν̂max {nu_max}", b.upper);
     }
 
     #[test]

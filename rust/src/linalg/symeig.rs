@@ -67,6 +67,84 @@ pub fn sym_eig_into(a: &Mat, out: &mut SymEig) {
     E_SCRATCH.with(|c| *c.borrow_mut() = e);
 }
 
+/// All eigenpairs of the symmetric-definite generalized problem
+/// `A x = λ M x` (`M` symmetric positive definite): dense Cholesky
+/// `M = C Cᵀ`, reduction to the standard problem `C⁻¹ A C⁻ᵀ y = λ y`,
+/// then back-substitution `x = C⁻ᵀ y`. Eigenvalues ascend; eigenvectors
+/// are M-orthonormal (`xᵢᵀ M xⱼ = δᵢⱼ`), *not* Euclidean-orthonormal.
+/// This is the small dense oracle the generalized property tests compare
+/// the sparse solvers against. Panics on non-SPD `M`.
+pub fn sym_eig_generalized(a: &Mat, m: &Mat) -> SymEig {
+    let n = a.rows();
+    assert_eq!(n, a.cols(), "sym_eig_generalized expects square A");
+    assert_eq!(n, m.rows(), "A and M dimensions must agree");
+    assert_eq!(n, m.cols(), "A and M dimensions must agree");
+    if n == 0 {
+        return SymEig {
+            values: vec![],
+            vectors: Mat::zeros(0, 0),
+        };
+    }
+    // Lower-triangular Cholesky of the symmetrized M.
+    let mut c = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..=i {
+            let mij = 0.5 * (m[(i, j)] + m[(j, i)]);
+            let mut s = mij;
+            for k in 0..j {
+                s -= c[(i, k)] * c[(j, k)];
+            }
+            if i == j {
+                assert!(s > 0.0, "mass matrix is not positive definite (pivot {i})");
+                c[(i, i)] = s.sqrt();
+            } else {
+                c[(i, j)] = s / c[(j, j)];
+            }
+        }
+    }
+    flops::add((2 * n * n * n) as u64);
+    // B = C⁻¹ A: forward-solve C b_col = a_col for every column.
+    let mut b = Mat::zeros(n, n);
+    for j in 0..n {
+        for i in 0..n {
+            let mut s = 0.5 * (a[(i, j)] + a[(j, i)]);
+            for k in 0..i {
+                s -= c[(i, k)] * b[(k, j)];
+            }
+            b[(i, j)] = s / c[(i, i)];
+        }
+    }
+    // S = B C⁻ᵀ = C⁻¹ A C⁻ᵀ: forward-solve on the rows (Sᵀ = C⁻¹ Bᵀ).
+    let mut s_red = Mat::zeros(n, n);
+    for i in 0..n {
+        for j in 0..n {
+            let mut s = b[(i, j)];
+            for k in 0..j {
+                s -= c[(j, k)] * s_red[(i, k)];
+            }
+            s_red[(i, j)] = s / c[(j, j)];
+        }
+    }
+    flops::add((2 * n * n * n) as u64);
+    let eig = sym_eig(&s_red);
+    // Back-substitute every eigenvector: x = C⁻ᵀ y.
+    let mut vectors = Mat::zeros(n, n);
+    for j in 0..n {
+        for i in (0..n).rev() {
+            let mut s = eig.vectors[(i, j)];
+            for k in (i + 1)..n {
+                s -= c[(k, i)] * vectors[(k, j)];
+            }
+            vectors[(i, j)] = s / c[(i, i)];
+        }
+    }
+    flops::add((n * n * n) as u64);
+    SymEig {
+        values: eig.values,
+        vectors,
+    }
+}
+
 /// Eigenvalues and eigenvectors of a symmetric tridiagonal matrix with
 /// diagonal `d` and sub-diagonal `e` (`e[0]` unused). Used directly by the
 /// Lanczos solvers to avoid forming the dense T.
@@ -390,6 +468,71 @@ mod tests {
             let fresh = sym_eig(&a);
             assert_eq!(out.values, fresh.values);
             assert_eq!(out.vectors, fresh.vectors);
+        }
+    }
+
+    #[test]
+    fn generalized_reduces_to_standard_for_identity_mass() {
+        let a = random_symmetric(16, 21);
+        let m = Mat::eye(16);
+        let gen = sym_eig_generalized(&a, &m);
+        let std = sym_eig(&a);
+        for j in 0..16 {
+            assert!((gen.values[j] - std.values[j]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn generalized_pencil_residuals_and_m_orthonormality() {
+        let n = 14;
+        let a = random_symmetric(n, 22);
+        // SPD mass: Mᵀ M + I from a random square factor.
+        let r = random_symmetric(n, 23);
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..n {
+                let mut s = if i == j { 1.0 } else { 0.0 };
+                for k in 0..n {
+                    s += r[(k, i)] * r[(k, j)];
+                }
+                m[(i, j)] = s;
+            }
+        }
+        let eig = sym_eig_generalized(&a, &m);
+        // A x = λ M x for every pair.
+        for j in 0..n {
+            let x = eig.vectors.col(j);
+            for i in 0..n {
+                let mut ax = 0.0;
+                let mut mx = 0.0;
+                for k in 0..n {
+                    ax += a[(i, k)] * x[k];
+                    mx += m[(i, k)] * x[k];
+                }
+                let err = (ax - eig.values[j] * mx).abs();
+                assert!(err < 1e-8, "pencil residual {err} at pair {j}");
+            }
+        }
+        // M-orthonormal columns: Xᵀ M X = I.
+        for p in 0..n {
+            for q in 0..n {
+                let xp = eig.vectors.col(p);
+                let xq = eig.vectors.col(q);
+                let mut s = 0.0;
+                for i in 0..n {
+                    let mut mxq = 0.0;
+                    for k in 0..n {
+                        mxq += m[(i, k)] * xq[k];
+                    }
+                    s += xp[i] * mxq;
+                }
+                let want = if p == q { 1.0 } else { 0.0 };
+                assert!((s - want).abs() < 1e-9, "XᵀMX[{p},{q}] = {s}");
+            }
+        }
+        // Ascending order.
+        for j in 1..n {
+            assert!(eig.values[j] >= eig.values[j - 1] - 1e-12);
         }
     }
 

@@ -11,6 +11,8 @@
 //!               [--filter-schedule fixed|adaptive]
 //!               [--precision f64|mixed] [--filter-backend csr|sell]
 //!               [--recycling off|deflate]
+//!               [--problem standard|generalized]
+//!               [--transform none|shift_invert:SIGMA]
 //!               [--chunk-records N]                     # checkpointed v3 store
 //!               [--backend native|xla] [--artifacts DIR] --out DIR
 //! scsf generate --resume DIR     # continue an interrupted chunked run
@@ -125,7 +127,15 @@ fn run() -> Result<()> {
             println!("registered operator families:");
             for name in registry.names() {
                 let f = registry.get(name).unwrap();
-                println!("  {name:<16} default tol {:.0e}", f.default_tol());
+                println!(
+                    "  {name:<16} default tol {:.0e}{}",
+                    f.default_tol(),
+                    if f.has_mass_matrix() {
+                        "  [mass matrix: supports --problem generalized]"
+                    } else {
+                        ""
+                    }
+                );
             }
             Ok(())
         }
@@ -187,6 +197,19 @@ fn print_help() {
          \x20           solves, seed-lock them, and park resolved columns\n\
          \x20           out of the filter — fewer matvecs per chain (see\n\
          \x20           manifest deflated_cols / recycle_matvecs)\n\
+         \n\
+         operator mode (--problem standard|generalized,\n\
+         \x20               --transform none|shift_invert:SIGMA):\n\
+         \x20 standard     solve A x = λ x (default; bit-for-bit the\n\
+         \x20              historical output)\n\
+         \x20 generalized  solve A x = λ M x with the family's consistent\n\
+         \x20              mass matrix ('scsf families' marks which\n\
+         \x20              families carry one)\n\
+         \x20 shift_invert:SIGMA  filter (A − σM)⁻¹ instead of A: returns\n\
+         \x20              the L eigenvalues just above σ (interior\n\
+         \x20              windows; see manifest factor_secs /\n\
+         \x20              trisolve_count). Native backend only; not\n\
+         \x20              combinable with mixed precision or deflation\n\
          \n\
          streaming store (--chunk-records N / --resume DIR):\n\
          \x20 default   legacy one-shot manifest, bit-for-bit the\n\
@@ -326,6 +349,15 @@ fn cmd_generate(args: &Args) -> Result<()> {
         cfg.recycling = scsf::eig::chfsi::Recycling::parse(s)
             .ok_or_else(|| anyhow!("unknown recycling {s} (off|deflate)"))?;
     }
+    if let Some(s) = args.get("problem") {
+        cfg.problem = scsf::eig::op::ProblemKind::parse(s)
+            .ok_or_else(|| anyhow!("unknown problem {s} (standard|generalized)"))?;
+    }
+    if let Some(s) = args.get("transform") {
+        cfg.transform = scsf::eig::op::Transform::parse(s).ok_or_else(|| {
+            anyhow!("unknown transform {s} (none|shift_invert:SIGMA with finite SIGMA)")
+        })?;
+    }
     if let Some(p0) = args.get_usize("p0")? {
         cfg.sort = SortMethod::TruncatedFft { p0 };
     }
@@ -414,6 +446,12 @@ fn print_report(report: &GenReport, out: &str) {
             println!(
                 "    recycling: {} column-sweeps deflated, {} matvecs spent on recycle upkeep",
                 f.deflated_cols, f.recycle_matvecs
+            );
+        }
+        if f.trisolve_count > 0 || f.factor_secs > 0.0 {
+            println!(
+                "    spectral transform: {} triangular solves, {:.2}s factorizing",
+                f.trisolve_count, f.factor_secs
             );
         }
     }

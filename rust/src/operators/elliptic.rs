@@ -138,6 +138,7 @@ pub fn generate(opts: GenOptions, id: usize, rng: &mut Xoshiro256pp) -> Problem 
         id,
         family: NAME.into(),
         matrix,
+        mass: None,
         sort_key: SortKey::Coeffs(vec![c.a11, c.a12, c.a22, c.a1, c.a2, c.a0]),
     }
 }

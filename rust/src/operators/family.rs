@@ -35,6 +35,7 @@
 use super::{GenOptions, Problem, SortKeyShape};
 use crate::anyhow;
 use crate::rng::Xoshiro256pp;
+use crate::sparse::CsrMatrix;
 use crate::util::error::Result;
 use std::sync::Arc;
 
@@ -58,6 +59,28 @@ pub trait OperatorFamily: Send + Sync {
     /// Generate the problem with dataset index `id` from an explicit
     /// per-problem RNG stream (steps 1–3 of the paper's Figure 1).
     fn generate_one(&self, opts: GenOptions, id: usize, rng: &mut Xoshiro256pp) -> Problem;
+
+    /// The family's consistent mass matrix `M` for the generalized
+    /// problem `A x = λ M x`, or `None` when the family's discretization
+    /// has no non-identity mass (FDM families: the identity mass is
+    /// already folded in, so generalized solves are meaningless there).
+    ///
+    /// The mass depends only on the grid (never on the sampled
+    /// coefficients), so one matrix serves every problem of a family
+    /// spec; it must be symmetric positive definite with the same
+    /// dimension [`OperatorFamily::generate_one`] produces under `opts`.
+    /// The default returns `None`.
+    fn mass_matrix(&self, opts: &GenOptions) -> Option<CsrMatrix> {
+        let _ = opts;
+        None
+    }
+
+    /// True when [`OperatorFamily::mass_matrix`] returns a matrix — the
+    /// cheap capability probe the CLI's `families` listing and the
+    /// pipeline's generalized-mode validation use.
+    fn has_mass_matrix(&self) -> bool {
+        false
+    }
 }
 
 /// Name-indexed set of operator families: the five built-ins plus any

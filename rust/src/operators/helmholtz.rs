@@ -77,6 +77,7 @@ pub fn generate(opts: GenOptions, id: usize, rng: &mut Xoshiro256pp) -> Problem 
         id,
         family: NAME.into(),
         matrix,
+        mass: None,
         sort_key: SortKey::Fields(vec![
             Field { p: g, data: pf },
             Field { p: g, data: kf },
@@ -107,6 +108,7 @@ pub fn generate_perturbed_chain(
                 id,
                 family: NAME.into(),
                 matrix: assemble(g, &pf, &kf),
+                mass: None,
                 sort_key: SortKey::Fields(vec![
                     Field {
                         p: g,

@@ -249,6 +249,12 @@ pub struct Problem {
     pub family: Arc<str>,
     /// The assembled symmetric sparse matrix.
     pub matrix: CsrMatrix,
+    /// Consistent mass matrix `M` for the generalized problem
+    /// `A x = λ M x`; `None` for standard problems (families assemble
+    /// with `mass: None` — the pipeline attaches the family's
+    /// [`OperatorFamily::mass_matrix`] when a run asks for
+    /// `problem: generalized`).
+    pub mass: Option<CsrMatrix>,
     /// Parameter data used by the sorting algorithms.
     pub sort_key: SortKey,
 }

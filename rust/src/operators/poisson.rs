@@ -107,6 +107,7 @@ pub fn generate(opts: GenOptions, id: usize, rng: &mut Xoshiro256pp) -> Problem 
         id,
         family: NAME.into(),
         matrix,
+        mass: None,
         sort_key: SortKey::Fields(vec![Field { p: g, data: k }]),
     }
 }

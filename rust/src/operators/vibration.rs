@@ -48,6 +48,14 @@ impl OperatorFamily for Vibration {
     fn generate_one(&self, opts: GenOptions, id: usize, rng: &mut Xoshiro256pp) -> Problem {
         generate(opts, id, rng)
     }
+
+    fn mass_matrix(&self, opts: &GenOptions) -> Option<CsrMatrix> {
+        Some(consistent_mass(opts.grid))
+    }
+
+    fn has_mass_matrix(&self) -> bool {
+        true
+    }
 }
 
 /// Bounds for the rigidity field `D`.
@@ -108,6 +116,36 @@ pub fn assemble(g: usize, d: &[f64], rho: &[f64]) -> CsrMatrix {
     coo.build()
 }
 
+/// Consistent mass matrix for the generalized plate problem: the
+/// tensor-product bilinear mass `M = m₁ ⊗ m₁` with the 1-D consistent
+/// mass `m₁ = h/6 · tridiag(1, 4, 1)` on the interior grid
+/// (`h = 1/(g+1)`). Symmetric positive definite, 9-point stencil,
+/// grid-only deterministic — one matrix serves every problem of a spec.
+pub fn consistent_mass(g: usize) -> CsrMatrix {
+    let h = 1.0 / (g as f64 + 1.0);
+    let m1 = |i: usize, j: usize| -> f64 {
+        if i == j {
+            4.0 * h / 6.0
+        } else if i.abs_diff(j) == 1 {
+            h / 6.0
+        } else {
+            0.0
+        }
+    };
+    let mut coo = CooBuilder::new(g * g, g * g);
+    for i1 in 0..g {
+        for j1 in 0..g {
+            let row = idx(g, i1, j1);
+            for i2 in i1.saturating_sub(1)..(i1 + 2).min(g) {
+                for j2 in j1.saturating_sub(1)..(j1 + 2).min(g) {
+                    coo.push(row, idx(g, i2, j2), m1(i1, i2) * m1(j1, j2));
+                }
+            }
+        }
+    }
+    coo.build()
+}
+
 /// Sample one plate-vibration problem (GRF rigidity + density fields).
 pub fn generate(opts: GenOptions, id: usize, rng: &mut Xoshiro256pp) -> Problem {
     let g = opts.grid;
@@ -118,6 +156,7 @@ pub fn generate(opts: GenOptions, id: usize, rng: &mut Xoshiro256pp) -> Problem 
         id,
         family: NAME.into(),
         matrix,
+        mass: None,
         sort_key: SortKey::Fields(vec![
             Field { p: g, data: d },
             Field { p: g, data: rho },
@@ -172,6 +211,23 @@ mod tests {
         assert!(p.matrix.asymmetry() < 1e-8, "{}", p.matrix.asymmetry());
         let eig = sym_eig(&p.matrix.to_dense());
         assert!(eig.values[0] > 0.0);
+    }
+
+    #[test]
+    fn consistent_mass_is_spd_tensor_product() {
+        let g = 6;
+        let m = consistent_mass(g);
+        assert_eq!(m.rows(), g * g);
+        assert!(m.asymmetry() < 1e-12);
+        // Interior rows carry the full 9-point tensor stencil.
+        let mid = idx(g, g / 2, g / 2);
+        assert_eq!(m.row(mid).0.len(), 9);
+        let eig = sym_eig(&m.to_dense());
+        assert!(eig.values[0] > 0.0, "λ_min {}", eig.values[0]);
+        // Tensor-product structure: the largest eigenvalue equals
+        // (max eig of m₁)², bounded by h² = 1/(g+1)².
+        let h = 1.0 / (g as f64 + 1.0);
+        assert!(*eig.values.last().unwrap() <= h * h + 1e-12);
     }
 
     #[test]

@@ -10,6 +10,7 @@
 use super::artifact::XlaRuntime;
 use super::xla_stub as xla;
 use crate::eig::chebyshev::{chebyshev_filter, FilterBackend, FilterParams};
+use crate::eig::op::SpectralOp;
 use crate::linalg::{flops, Mat};
 use crate::sparse::CsrMatrix;
 use std::rc::Rc;
@@ -43,7 +44,13 @@ impl XlaFilter {
 }
 
 impl FilterBackend for XlaFilter {
-    fn filter(&mut self, a: &CsrMatrix, y: &Mat, params: &FilterParams) -> Mat {
+    fn filter(&mut self, op: &SpectralOp, y: &Mat, params: &FilterParams) -> Mat {
+        // The compiled executable implements the plain-CSR recurrence;
+        // generalized / shift-invert operators never reach this backend
+        // (config resolution rejects the combination by name).
+        let a = op
+            .plain()
+            .expect("xla backend requires a plain (untransformed) operator");
         let p = params.sanitized();
         let (n, k) = (y.rows(), y.cols());
         let Some(meta) = self.runtime.find_filter(n, k, p.degree) else {

@@ -545,6 +545,26 @@ impl CsrMatrix {
         b.build()
     }
 
+    /// `A + alpha·B` with sparsity-union structure (the shifted pencil
+    /// `K = A − σM` of the shift-invert transform). Both operands must
+    /// share dimensions.
+    pub fn add_scaled(&self, alpha: f64, other: &CsrMatrix) -> CsrMatrix {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        let mut b = CooBuilder::new(self.rows, self.cols);
+        for i in 0..self.rows {
+            let (cols, vals) = self.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                b.push(i, *c as usize, *v);
+            }
+            let (cols, vals) = other.row(i);
+            for (c, v) in cols.iter().zip(vals) {
+                b.push(i, *c as usize, alpha * *v);
+            }
+        }
+        b.build()
+    }
+
     /// Scale all values by `alpha`.
     pub fn scaled(&self, alpha: f64) -> CsrMatrix {
         let mut out = self.clone();

@@ -1,0 +1,573 @@
+//! Dependency-free sparse LDLᵀ factorization: fill-reducing
+//! minimum-degree ordering, symbolic analysis (elimination tree + column
+//! counts), an up-looking numeric factorization, and the triangular
+//! solves / multiplies the spectral-transform layer needs.
+//!
+//! The factorization computes `PᵀMP = L·D·Lᵀ` with `L` unit lower
+//! triangular (stored by columns), `D` diagonal, and `P` a fill-reducing
+//! permutation. Two consumers in [`crate::eig::op`]:
+//!
+//! - **Mass splitting** (generalized problems `Ax = λMx`): for SPD `M`,
+//!   `W := P·L·D^{1/2}` gives `M = W·Wᵀ`, so the standard-form operator
+//!   `Ã = W⁻¹·A·W⁻ᵀ` is symmetric and Euclidean orthogonality in
+//!   `y = Wᵀx` coordinates is exactly M-orthogonality in `x`.
+//! - **Shift-invert** (`transform: shift_invert(σ)`): `K = A − σM` is
+//!   factored indefinite (no pivoting — fine for σ away from the pencil
+//!   spectrum; breakdown is detected and reported, not silently folded).
+//!
+//! The symbolic/numeric pass is the classic up-looking LDL algorithm
+//! (Davis, *Algorithm 849*): one elimination-tree walk per column gives
+//! the pattern, a sparse triangular solve gives the values. The ordering
+//! is a plain minimum-degree with clique merging — O(n²+fill) worst
+//! case, which is ample for the PDE stencils here (5–13 nnz/row); it
+//! cuts biharmonic/FEM fill by an order of magnitude vs natural order.
+
+use crate::linalg::flops;
+use crate::sparse::CsrMatrix;
+
+/// Sparse LDLᵀ factors of a symmetric matrix (see module docs).
+#[derive(Debug, Clone)]
+pub struct LdltFactor {
+    n: usize,
+    /// `perm[k]` = original index of permuted row/column `k`.
+    perm: Vec<usize>,
+    /// Column pointers of `L` (length `n + 1`).
+    lp: Vec<usize>,
+    /// Row indices per column of `L` (strictly below the diagonal,
+    /// ascending within each column — the numeric pass appends rows in
+    /// increasing elimination order).
+    li: Vec<u32>,
+    /// Values of `L` matching [`LdltFactor::li`].
+    lx: Vec<f64>,
+    /// The diagonal `D`.
+    d: Vec<f64>,
+    /// `D^{1/2}` — filled only by [`LdltFactor::factor_spd`] (the `W`
+    /// multiplies need it; indefinite factors only ever solve).
+    sqrt_d: Vec<f64>,
+}
+
+impl LdltFactor {
+    /// Factor a symmetric matrix (lower/upper both read; the matrix must
+    /// actually be symmetric). Errors on a zero/non-finite pivot —
+    /// for shift-invert that means σ is (numerically) on the pencil
+    /// spectrum and the caller should perturb it.
+    pub fn factor(m: &CsrMatrix) -> Result<Self, String> {
+        Self::factor_impl(m, false)
+    }
+
+    /// Factor a symmetric *positive definite* matrix, additionally
+    /// checking `D > 0` and precomputing `D^{1/2}` so the `W`-multiply
+    /// family ([`LdltFactor::wt_apply`] …) is available.
+    pub fn factor_spd(m: &CsrMatrix) -> Result<Self, String> {
+        Self::factor_impl(m, true)
+    }
+
+    fn factor_impl(m: &CsrMatrix, spd: bool) -> Result<Self, String> {
+        let n = m.rows();
+        if n != m.cols() {
+            return Err(format!("LDLT needs a square matrix, got {}x{}", n, m.cols()));
+        }
+        let perm = min_degree_order(m);
+        let mut iperm = vec![0usize; n];
+        for (k, &p) in perm.iter().enumerate() {
+            iperm[p] = k;
+        }
+        // Upper triangle of the permuted matrix B = PᵀMP, stored by
+        // column: bcols[k] lists (row, value) with row <= k, rows
+        // ascending. Each symmetric off-diagonal pair of M lands here
+        // exactly once (whichever orientation maps above the diagonal).
+        let mut bcols: Vec<Vec<(usize, f64)>> = vec![Vec::new(); n];
+        for r in 0..n {
+            let (cols, vals) = m.row(r);
+            for (c, v) in cols.iter().zip(vals) {
+                let (i, j) = (iperm[r], iperm[*c as usize]);
+                if i <= j {
+                    bcols[j].push((i, *v));
+                }
+            }
+        }
+        for col in &mut bcols {
+            col.sort_unstable_by_key(|&(i, _)| i);
+        }
+
+        // Symbolic: elimination tree + per-column nonzero counts in one
+        // flag-marked tree walk per column (Davis LDL).
+        const NONE: usize = usize::MAX;
+        let mut parent = vec![NONE; n];
+        let mut lnz = vec![0usize; n];
+        let mut flag = vec![NONE; n];
+        for k in 0..n {
+            flag[k] = k;
+            for &(i0, _) in &bcols[k] {
+                let mut i = i0;
+                while i < k && flag[i] != k {
+                    if parent[i] == NONE {
+                        parent[i] = k;
+                    }
+                    lnz[i] += 1;
+                    flag[i] = k;
+                    i = parent[i];
+                }
+            }
+        }
+        let mut lp = vec![0usize; n + 1];
+        for k in 0..n {
+            lp[k + 1] = lp[k] + lnz[k];
+        }
+        let nnzl = lp[n];
+
+        // Numeric: up-looking pass. `y` is the dense scatter of the
+        // current column, `pattern[top..]` the etree-ordered nonzero
+        // pattern, `fill[i]` the number of entries already stored in
+        // column i of L.
+        let mut li = vec![0u32; nnzl];
+        let mut lx = vec![0f64; nnzl];
+        let mut d = vec![0f64; n];
+        let mut y = vec![0f64; n];
+        let mut pattern = vec![0usize; n];
+        let mut fill = vec![0usize; n];
+        for f in flag.iter_mut() {
+            *f = NONE;
+        }
+        flops::add((4 * nnzl + 2 * m.nnz()) as u64);
+        for k in 0..n {
+            let mut top = n;
+            flag[k] = k;
+            for &(i0, v) in &bcols[k] {
+                y[i0] += v;
+                let mut len = 0;
+                let mut i = i0;
+                while i < k && flag[i] != k {
+                    pattern[len] = i;
+                    len += 1;
+                    flag[i] = k;
+                    i = parent[i];
+                }
+                while len > 0 {
+                    len -= 1;
+                    top -= 1;
+                    pattern[top] = pattern[len];
+                }
+            }
+            d[k] = y[k];
+            y[k] = 0.0;
+            for s in top..n {
+                let i = pattern[s];
+                let yi = y[i];
+                y[i] = 0.0;
+                let (p0, p1) = (lp[i], lp[i] + fill[i]);
+                for p in p0..p1 {
+                    y[li[p] as usize] -= lx[p] * yi;
+                }
+                let lki = yi / d[i];
+                d[k] -= lki * yi;
+                li[p1] = k as u32;
+                lx[p1] = lki;
+                fill[i] += 1;
+            }
+            if !d[k].is_finite() || d[k].abs() < 1e-300 {
+                return Err(format!(
+                    "LDLT breakdown at pivot {k} (d = {}): matrix is singular or the \
+                     shift sits on the pencil spectrum — perturb sigma",
+                    d[k]
+                ));
+            }
+            if spd && d[k] <= 0.0 {
+                return Err(format!(
+                    "matrix is not positive definite (pivot {k} has d = {})",
+                    d[k]
+                ));
+            }
+        }
+        let sqrt_d = if spd { d.iter().map(|&x| x.sqrt()).collect() } else { Vec::new() };
+        Ok(Self {
+            n,
+            perm,
+            lp,
+            li,
+            lx,
+            d,
+            sqrt_d,
+        })
+    }
+
+    /// Matrix dimension.
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Stored strictly-lower nonzeros of `L` (fill included).
+    pub fn nnz_l(&self) -> usize {
+        self.lx.len()
+    }
+
+    /// True if this factor was built with [`LdltFactor::factor_spd`]
+    /// (the `W` multiply/solve family is available).
+    pub fn is_spd(&self) -> bool {
+        !self.sqrt_d.is_empty()
+    }
+
+    /// Fill-reducing permutation: `perm()[k]` is the original index of
+    /// permuted row `k`.
+    pub fn perm(&self) -> &[usize] {
+        &self.perm
+    }
+
+    /// Flop cost of one triangular solve or multiply pass (used for the
+    /// machine-independent accounting of the transform layer).
+    pub fn trisolve_flops(&self) -> u64 {
+        (2 * self.lx.len() + self.n) as u64
+    }
+
+    /// In-place `z ← L⁻¹ z` (unit lower triangular forward solve).
+    fn lsolve(&self, z: &mut [f64]) {
+        for j in 0..self.n {
+            let zj = z[j];
+            if zj != 0.0 {
+                for p in self.lp[j]..self.lp[j + 1] {
+                    z[self.li[p] as usize] -= self.lx[p] * zj;
+                }
+            }
+        }
+    }
+
+    /// In-place `z ← L⁻ᵀ z` (backward solve).
+    fn ltsolve(&self, z: &mut [f64]) {
+        for j in (0..self.n).rev() {
+            let mut zj = z[j];
+            for p in self.lp[j]..self.lp[j + 1] {
+                zj -= self.lx[p] * z[self.li[p] as usize];
+            }
+            z[j] = zj;
+        }
+    }
+
+    /// In-place `z ← Lᵀ z` (multiply; reads only rows above the current
+    /// one, so ascending order is safe).
+    fn ltmul(&self, z: &mut [f64]) {
+        for j in 0..self.n {
+            let mut zj = z[j];
+            for p in self.lp[j]..self.lp[j + 1] {
+                zj += self.lx[p] * z[self.li[p] as usize];
+            }
+            z[j] = zj;
+        }
+    }
+
+    /// In-place `z ← L z` (multiply; descending column order keeps the
+    /// multiplicand entries unread-after-write).
+    fn lmul(&self, z: &mut [f64]) {
+        for j in (0..self.n).rev() {
+            let zj = z[j];
+            if zj != 0.0 {
+                for p in self.lp[j]..self.lp[j + 1] {
+                    z[self.li[p] as usize] += self.lx[p] * zj;
+                }
+            }
+        }
+    }
+
+    /// Solve `M x = b` through the factors: `x = P L⁻ᵀ D⁻¹ L⁻¹ Pᵀ b`.
+    /// `work` is caller scratch (resized to `n`); counts as two
+    /// triangular solves.
+    pub fn solve_into(&self, b: &[f64], x: &mut [f64], work: &mut Vec<f64>) {
+        assert_eq!(b.len(), self.n);
+        assert_eq!(x.len(), self.n);
+        work.clear();
+        work.resize(self.n, 0.0);
+        for k in 0..self.n {
+            work[k] = b[self.perm[k]];
+        }
+        self.lsolve(work);
+        for k in 0..self.n {
+            work[k] /= self.d[k];
+        }
+        self.ltsolve(work);
+        for k in 0..self.n {
+            x[self.perm[k]] = work[k];
+        }
+        flops::add(2 * self.trisolve_flops());
+    }
+
+    /// `y ← Wᵀ x = D^{1/2} Lᵀ Pᵀ x` (SPD factors only). The output lives
+    /// in permuted ("op-space") coordinates; its mate is
+    /// [`LdltFactor::wt_inv_apply`].
+    pub fn wt_apply(&self, x: &[f64], y: &mut [f64]) {
+        assert!(self.is_spd(), "W multiplies need an SPD factor");
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        for k in 0..self.n {
+            y[k] = x[self.perm[k]];
+        }
+        self.ltmul(y);
+        for k in 0..self.n {
+            y[k] *= self.sqrt_d[k];
+        }
+        flops::add(self.trisolve_flops());
+    }
+
+    /// `x ← W⁻ᵀ y = P L⁻ᵀ D^{-1/2} y` (SPD factors only): maps op-space
+    /// eigenvectors back to problem coordinates. One triangular solve.
+    pub fn wt_inv_apply(&self, y: &[f64], x: &mut [f64], work: &mut Vec<f64>) {
+        assert!(self.is_spd(), "W solves need an SPD factor");
+        assert_eq!(y.len(), self.n);
+        assert_eq!(x.len(), self.n);
+        work.clear();
+        work.resize(self.n, 0.0);
+        for k in 0..self.n {
+            work[k] = y[k] / self.sqrt_d[k];
+        }
+        self.ltsolve(work);
+        for k in 0..self.n {
+            x[self.perm[k]] = work[k];
+        }
+        flops::add(self.trisolve_flops());
+    }
+
+    /// `z ← W y = P L D^{1/2} y` (SPD factors only).
+    pub fn w_apply(&self, y: &[f64], z: &mut [f64], work: &mut Vec<f64>) {
+        assert!(self.is_spd(), "W multiplies need an SPD factor");
+        assert_eq!(y.len(), self.n);
+        assert_eq!(z.len(), self.n);
+        work.clear();
+        work.resize(self.n, 0.0);
+        for k in 0..self.n {
+            work[k] = y[k] * self.sqrt_d[k];
+        }
+        self.lmul(work);
+        for k in 0..self.n {
+            z[self.perm[k]] = work[k];
+        }
+        flops::add(self.trisolve_flops());
+    }
+
+    /// `y ← W⁻¹ z = D^{-1/2} L⁻¹ Pᵀ z` (SPD factors only) — the M⁻¹-norm
+    /// half-map (`‖W⁻¹r‖₂ = ‖r‖_{M⁻¹}`). One triangular solve.
+    pub fn w_inv_apply(&self, z: &[f64], y: &mut [f64]) {
+        assert!(self.is_spd(), "W solves need an SPD factor");
+        assert_eq!(z.len(), self.n);
+        assert_eq!(y.len(), self.n);
+        for k in 0..self.n {
+            y[k] = z[self.perm[k]];
+        }
+        self.lsolve(y);
+        for k in 0..self.n {
+            y[k] /= self.sqrt_d[k];
+        }
+        flops::add(self.trisolve_flops());
+    }
+}
+
+/// Minimum-degree ordering with clique merging on the adjacency graph
+/// of a symmetric sparse matrix. Deterministic (ties break to the
+/// smallest vertex index). Returns `perm` with `perm[k]` = original
+/// index eliminated at step `k`.
+fn min_degree_order(m: &CsrMatrix) -> Vec<usize> {
+    let n = m.rows();
+    let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for i in 0..n {
+        let (cols, _) = m.row(i);
+        for c in cols {
+            let j = *c as usize;
+            if j != i {
+                adj[i].push(j);
+                adj[j].push(i);
+            }
+        }
+    }
+    for v in &mut adj {
+        v.sort_unstable();
+        v.dedup();
+    }
+    let mut eliminated = vec![false; n];
+    let mut order = Vec::with_capacity(n);
+    let mut merged: Vec<usize> = Vec::new();
+    for _ in 0..n {
+        let mut best = usize::MAX;
+        let mut best_deg = usize::MAX;
+        for v in 0..n {
+            if !eliminated[v] && adj[v].len() < best_deg {
+                best_deg = adj[v].len();
+                best = v;
+            }
+        }
+        let p = best;
+        eliminated[p] = true;
+        order.push(p);
+        let nbrs: Vec<usize> = std::mem::take(&mut adj[p])
+            .into_iter()
+            .filter(|&u| !eliminated[u])
+            .collect();
+        for &u in &nbrs {
+            merged.clear();
+            merged.extend(adj[u].iter().copied().filter(|&w| !eliminated[w]));
+            merged.extend(nbrs.iter().copied().filter(|&w| w != u));
+            merged.sort_unstable();
+            merged.dedup();
+            std::mem::swap(&mut adj[u], &mut merged);
+        }
+    }
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Xoshiro256pp;
+    use crate::sparse::CooBuilder;
+
+    /// 2-D 5-point Laplacian (SPD), g×g grid.
+    fn laplacian(g: usize) -> CsrMatrix {
+        let n = g * g;
+        let mut b = CooBuilder::new(n, n);
+        for i in 0..g {
+            for j in 0..g {
+                let me = i * g + j;
+                b.push(me, me, 4.0);
+                if i > 0 {
+                    b.push(me, me - g, -1.0);
+                }
+                if i + 1 < g {
+                    b.push(me, me + g, -1.0);
+                }
+                if j > 0 {
+                    b.push(me, me - 1, -1.0);
+                }
+                if j + 1 < g {
+                    b.push(me, me + 1, -1.0);
+                }
+            }
+        }
+        b.build()
+    }
+
+    fn rand_vec(n: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Xoshiro256pp::seed_from_u64(seed);
+        let mut v = vec![0.0; n];
+        rng.fill_normal(&mut v);
+        v
+    }
+
+    #[test]
+    fn ordering_is_a_permutation() {
+        let a = laplacian(7);
+        let f = LdltFactor::factor_spd(&a).unwrap();
+        let mut seen = vec![false; a.rows()];
+        for &p in f.perm() {
+            assert!(!seen[p]);
+            seen[p] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn solve_inverts_spd_matrix() {
+        for g in [1usize, 2, 5, 9] {
+            let a = laplacian(g);
+            let n = a.rows();
+            let f = LdltFactor::factor_spd(&a).unwrap();
+            let b = rand_vec(n, 3 + g as u64);
+            let mut x = vec![0.0; n];
+            let mut work = Vec::new();
+            f.solve_into(&b, &mut x, &mut work);
+            let ax = a.spmv_alloc(&x);
+            for i in 0..n {
+                assert!((ax[i] - b[i]).abs() < 1e-9, "g={g} row {i}: {} vs {}", ax[i], b[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn w_split_reconstructs_mass_matrix() {
+        // W Wᵀ x == M x for the SPD factor.
+        let m = laplacian(6);
+        let n = m.rows();
+        let f = LdltFactor::factor_spd(&m).unwrap();
+        let x = rand_vec(n, 11);
+        let mut wt = vec![0.0; n];
+        let mut wwt = vec![0.0; n];
+        let mut work = Vec::new();
+        f.wt_apply(&x, &mut wt);
+        f.w_apply(&wt, &mut wwt, &mut work);
+        let mx = m.spmv_alloc(&x);
+        for i in 0..n {
+            assert!((wwt[i] - mx[i]).abs() < 1e-10, "row {i}");
+        }
+    }
+
+    #[test]
+    fn w_inverses_roundtrip() {
+        let m = laplacian(5);
+        let n = m.rows();
+        let f = LdltFactor::factor_spd(&m).unwrap();
+        let x = rand_vec(n, 21);
+        let mut t = vec![0.0; n];
+        let mut back = vec![0.0; n];
+        let mut work = Vec::new();
+        // Wᵀ then W⁻ᵀ.
+        f.wt_apply(&x, &mut t);
+        f.wt_inv_apply(&t, &mut back, &mut work);
+        for i in 0..n {
+            assert!((back[i] - x[i]).abs() < 1e-10);
+        }
+        // W then W⁻¹.
+        f.w_apply(&x, &mut t, &mut work);
+        f.w_inv_apply(&t, &mut back);
+        for i in 0..n {
+            assert!((back[i] - x[i]).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn indefinite_shifted_factor_solves() {
+        // K = A − σI with σ strictly inside the spectrum: LDLT without
+        // pivoting still solves it (D picks up negative entries).
+        let a = laplacian(6);
+        let n = a.rows();
+        let k = a.shift(-3.1); // σ = 3.1 sits inside [~0.4, ~7.6]
+        let f = LdltFactor::factor(&k).unwrap();
+        assert!(!f.is_spd());
+        assert!(f.d.iter().any(|&d| d < 0.0), "shifted factor should be indefinite");
+        let b = rand_vec(n, 31);
+        let mut x = vec![0.0; n];
+        let mut work = Vec::new();
+        f.solve_into(&b, &mut x, &mut work);
+        let kx = k.spmv_alloc(&x);
+        for i in 0..n {
+            assert!((kx[i] - b[i]).abs() < 1e-8, "row {i}");
+        }
+    }
+
+    #[test]
+    fn spd_check_rejects_indefinite_input() {
+        let a = laplacian(4).shift(-3.0);
+        assert!(LdltFactor::factor_spd(&a).is_err());
+    }
+
+    #[test]
+    fn singular_matrix_reports_breakdown() {
+        // Exactly singular: shift by a true eigenvalue of the 1-D chain.
+        let mut b = CooBuilder::new(2, 2);
+        b.push(0, 0, 1.0);
+        b.push(0, 1, 1.0);
+        b.push(1, 0, 1.0);
+        b.push(1, 1, 1.0);
+        let err = LdltFactor::factor(&b.build()).unwrap_err();
+        assert!(err.contains("breakdown"), "{err}");
+    }
+
+    #[test]
+    fn fill_reducing_order_beats_natural_order_on_grid() {
+        // Sanity: min-degree fill on a 12×12 grid Laplacian stays well
+        // below the dense lower triangle.
+        let a = laplacian(12);
+        let f = LdltFactor::factor_spd(&a).unwrap();
+        let n = a.rows();
+        assert!(
+            f.nnz_l() < n * n / 8,
+            "fill {} too close to dense {}",
+            f.nnz_l(),
+            n * (n - 1) / 2
+        );
+    }
+}

@@ -7,7 +7,9 @@
 //! hottest kernel in the library (see EXPERIMENTS.md §Perf).
 
 pub mod csr;
+pub mod ldlt;
 pub mod sell;
 
 pub use csr::{CooBuilder, CsrMatrix, CsrMatrixF32};
+pub use ldlt::LdltFactor;
 pub use sell::{SellMatrix, SellMatrixF32, SELL_CHUNK};

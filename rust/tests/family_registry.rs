@@ -66,6 +66,7 @@ impl OperatorFamily for ToyFamily {
             id,
             family: Arc::from(self.name.as_str()),
             matrix: coo.build(),
+            mass: None,
             sort_key: SortKey::Coeffs(vec![base, slope, coupling]),
         }
     }

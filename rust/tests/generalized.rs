@@ -1,0 +1,444 @@
+//! Integration tests for the operator-abstraction refactor (ISSUE 9):
+//! generalized eigenproblems `Ax = λMx`, shift-invert spectral
+//! transforms for interior windows, the bit-for-bit default regression
+//! across every operator family, XLA / incompatible-knob rejection at
+//! config resolution, and the legacy-manifest read-back contract for
+//! the new `factor_secs` / `trisolve_count` counters.
+
+use scsf::coordinator::config::GenConfig;
+use scsf::coordinator::dataset::DatasetReader;
+use scsf::coordinator::pipeline::{generate_dataset, generate_problems};
+use scsf::eig::chfsi::{self, ChfsiOptions};
+use scsf::eig::op::{ProblemKind, SpectralOp, Transform};
+use scsf::eig::EigOptions;
+use scsf::linalg::symeig::{sym_eig, sym_eig_generalized};
+use scsf::operators::{self, FamilyRegistry, GenOptions, OperatorKind};
+use scsf::sparse::CsrMatrix;
+
+fn tmpdir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("scsf_genrl_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// The family's mass matrix through the [`OperatorFamily`] hook — the
+/// same path the pipeline's producer uses.
+fn mass_of(kind: OperatorKind, grid: usize) -> CsrMatrix {
+    let opts = GenOptions {
+        grid,
+        ..Default::default()
+    };
+    let reg = FamilyRegistry::builtin();
+    let fam = reg.get(kind.name()).expect("builtin family");
+    fam.mass_matrix(&opts).expect("family carries a mass matrix")
+}
+
+/// σ in the widest spectral gap among indices `lo..hi` of `dense`
+/// (ascending): interior by construction and safely away from both
+/// neighbours. Returns `(σ, first wanted index)` — the solver's window
+/// under shift-invert is the eigenvalues just above σ.
+fn interior_shift(dense: &[f64], lo: usize, hi: usize) -> (f64, usize) {
+    let mut best = lo;
+    for g in lo..hi {
+        if dense[g + 1] - dense[g] > dense[best + 1] - dense[best] {
+            best = g;
+        }
+    }
+    (0.5 * (dense[best] + dense[best + 1]), best + 1)
+}
+
+/// Property: on both mass-carrying families the generalized solve
+/// matches the dense `Ax = λMx` oracle, meets tolerance in the B-norm
+/// residual the engine reports, and returns an M-orthonormal basis
+/// (the W-transform's coordinate contract).
+#[test]
+fn generalized_matches_dense_oracle_on_mass_families() {
+    for kind in [OperatorKind::Vibration, OperatorKind::HelmholtzFem] {
+        let grid = 8;
+        let tol = kind.default_tol();
+        let problems = operators::generate(
+            kind,
+            GenOptions {
+                grid,
+                ..Default::default()
+            },
+            2,
+            13,
+        );
+        let m = mass_of(kind, grid);
+        let l = 4;
+        let mut opts = ChfsiOptions::from_eig(&EigOptions {
+            n_eigs: l,
+            tol,
+            max_iters: 600,
+            seed: 0,
+        });
+        opts.problem = ProblemKind::Generalized;
+        for p in &problems {
+            let op = SpectralOp::build(&p.matrix, Some(&m), opts.problem, opts.transform);
+            let op = op.unwrap();
+            let r = chfsi::solve_op(&op, &opts, None);
+            assert!(r.stats.converged, "{kind:?}: {:?}", r.residuals);
+            for res in &r.residuals {
+                assert!(*res <= tol, "{kind:?}: residual {res} > {tol}");
+            }
+            assert!(r.stats.trisolve_count > 0, "{kind:?}: no trisolves counted");
+            let want = sym_eig_generalized(&p.matrix.to_dense(), &m.to_dense());
+            for (got, w) in r.values.iter().zip(&want.values[..l]) {
+                assert!(
+                    (got - w).abs() / w.abs().max(1.0) < 1e-6,
+                    "{kind:?}: {got} vs dense {w}"
+                );
+            }
+            // VᵀMV = I: back-transformed vectors are M-orthonormal.
+            let n = p.matrix.rows();
+            let mut xj = vec![0.0; n];
+            let mut mx = vec![0.0; n];
+            for j in 0..l {
+                for i in 0..n {
+                    xj[i] = r.vectors[(i, j)];
+                }
+                m.spmv_into(&xj, &mut mx, 1);
+                for c in 0..l {
+                    let mut dot = 0.0;
+                    for i in 0..n {
+                        dot += r.vectors[(i, c)] * mx[i];
+                    }
+                    let want = if c == j { 1.0 } else { 0.0 };
+                    assert!(
+                        (dot - want).abs() < 1e-7,
+                        "{kind:?}: (VᵀMV)[{c},{j}] = {dot}, want {want}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// The acceptance property: shift-invert on Helmholtz converges every
+/// wanted pair of an interior window (σ in a spectral gap, window = the
+/// eigenvalues just above σ) to residual ≤ tol against the dense
+/// oracle, with the transform counters populated.
+#[test]
+fn shift_invert_converges_interior_helmholtz_windows() {
+    let problems = operators::generate(
+        OperatorKind::Helmholtz,
+        GenOptions {
+            grid: 10,
+            ..Default::default()
+        },
+        3,
+        17,
+    );
+    let tol = 1e-9;
+    for p in &problems {
+        let dense = sym_eig(&p.matrix.to_dense()).values;
+        let (sigma, first) = interior_shift(&dense, 3, 8);
+        let mut opts = ChfsiOptions::from_eig(&EigOptions {
+            n_eigs: 4,
+            tol,
+            max_iters: 400,
+            seed: 0,
+        });
+        opts.transform = Transform::ShiftInvert { sigma };
+        let r = chfsi::solve(&p.matrix, &opts, None);
+        assert!(r.stats.converged, "window at σ={sigma}: {:?}", r.residuals);
+        for res in &r.residuals {
+            assert!(*res <= tol, "residual {res} > {tol}");
+        }
+        for (got, want) in r.values.iter().zip(&dense[first..first + 4]) {
+            assert!(
+                (got - want).abs() / want.abs().max(1.0) < 1e-7,
+                "window at σ={sigma}: {got} vs dense {want}"
+            );
+        }
+        assert!(r.stats.trisolve_count > 0, "no triangular solves counted");
+        assert!(r.stats.factor_secs > 0.0, "factorization time not recorded");
+    }
+}
+
+/// Generalized + shift-invert combined: an interior window of the
+/// vibration pencil `Kx = λMx`, checked against the dense generalized
+/// oracle.
+#[test]
+fn generalized_shift_invert_targets_interior_pencil_window() {
+    let grid = 8;
+    let p = operators::generate(
+        OperatorKind::Vibration,
+        GenOptions {
+            grid,
+            ..Default::default()
+        },
+        1,
+        23,
+    )
+    .remove(0);
+    let m = mass_of(OperatorKind::Vibration, grid);
+    let dense = sym_eig_generalized(&p.matrix.to_dense(), &m.to_dense()).values;
+    let (sigma, first) = interior_shift(&dense, 3, 8);
+    let tol = 1e-8;
+    let mut opts = ChfsiOptions::from_eig(&EigOptions {
+        n_eigs: 4,
+        tol,
+        max_iters: 600,
+        seed: 0,
+    });
+    opts.problem = ProblemKind::Generalized;
+    opts.transform = Transform::ShiftInvert { sigma };
+    let op = SpectralOp::build(&p.matrix, Some(&m), opts.problem, opts.transform).unwrap();
+    let r = chfsi::solve_op(&op, &opts, None);
+    assert!(r.stats.converged, "σ={sigma}: {:?}", r.residuals);
+    for res in &r.residuals {
+        assert!(*res <= tol, "residual {res} > {tol}");
+    }
+    for (got, want) in r.values.iter().zip(&dense[first..first + 4]) {
+        assert!(
+            (got - want).abs() / want.abs().max(1.0) < 1e-6,
+            "σ={sigma}: {got} vs dense {want}"
+        );
+    }
+    assert!(r.stats.trisolve_count > 0);
+}
+
+/// The new knobs are rejected by name wherever they cannot run: the
+/// XLA backend (no generalized or spectral-transformation path),
+/// mass-less families under `problem: generalized`, and the
+/// mixed-precision / deflation combinations that are coordinate-bound
+/// to plain operators.
+#[test]
+fn incompatible_operator_mode_knobs_are_rejected_at_resolution() {
+    let reg = FamilyRegistry::builtin();
+    let xla = r#"{
+        "families": [{"family": "vibration", "count": 2}],
+        "grid": 8, "n_eigs": 4, "tol": 1e-8, "seed": 1,
+        "backend": {"kind": "xla", "artifacts_dir": "/nonexistent"},
+        "sort": {"method": "truncated_fft", "p0": 6}
+    }"#;
+    let resolve_err = |json: &str| -> String {
+        GenConfig::from_json(json)
+            .unwrap()
+            .resolve(&reg)
+            .unwrap_err()
+            .to_string()
+    };
+    fn ins(json: &str, key: &str) -> String {
+        json.replace("\"grid\": 8,", &format!("\"grid\": 8, {key},"))
+    }
+
+    let err = resolve_err(&ins(xla, "\"problem\": \"generalized\""));
+    assert!(err.contains("problem"), "unexpected error: {err}");
+    assert!(err.contains("native backend"), "unexpected error: {err}");
+    let err = resolve_err(&ins(xla, "\"transform\": \"shift_invert:1.5\""));
+    assert!(err.contains("transform"), "unexpected error: {err}");
+    assert!(err.contains("native backend"), "unexpected error: {err}");
+
+    let native = xla.replace(
+        "\"backend\": {\"kind\": \"xla\", \"artifacts_dir\": \"/nonexistent\"},",
+        "",
+    );
+    // Generalized needs a mass matrix; poisson provides none.
+    let massless = native.replace("\"vibration\"", "\"poisson\"");
+    let err = resolve_err(&ins(&massless, "\"problem\": \"generalized\""));
+    assert!(err.contains("mass matrix"), "unexpected error: {err}");
+    // Transformed operators reject mixed precision and deflation.
+    let knobs = "\"problem\": \"generalized\", \"precision\": \"mixed\"";
+    let err = resolve_err(&ins(&native, knobs));
+    assert!(err.contains("precision"), "unexpected error: {err}");
+    let knobs = "\"transform\": \"shift_invert:2.0\", \"recycling\": \"deflate\"";
+    let err = resolve_err(&ins(&native, knobs));
+    assert!(err.contains("recycling"), "unexpected error: {err}");
+
+    // Unknown values hard-error at parse time.
+    let bad = ins(&native, "\"problem\": \"general\"");
+    assert!(GenConfig::from_json(&bad).is_err());
+    let bad = ins(&native, "\"transform\": \"shift_invert:nan\"");
+    assert!(GenConfig::from_json(&bad).is_err());
+    let bad = ins(&native, "\"transform\": \"cayley\"");
+    assert!(GenConfig::from_json(&bad).is_err());
+}
+
+/// Bit-for-bit regression: a config that never mentions the new knobs
+/// and one that pins the defaults (`problem: standard`, `transform:
+/// none`) must produce byte-identical `eigs.bin` files, identical
+/// record indexes, and identical config echoes — across all five
+/// built-in families, including the mixed-precision and SELL-backend
+/// variants. The manifest must not grow any new keys.
+#[test]
+fn standard_defaults_are_bit_identical_with_explicit_mode_keys() {
+    for (tag, extra) in [
+        ("default", ""),
+        ("mixed", "\"precision\": \"mixed\","),
+        ("sell", "\"filter_backend\": \"sell\","),
+    ] {
+        let d_legacy = tmpdir(&format!("legacy_{tag}"));
+        let d_explicit = tmpdir(&format!("explicit_{tag}"));
+        let fam_json: Vec<String> = OperatorKind::ALL
+            .iter()
+            .map(|k| format!("{{\"family\": \"{}\", \"count\": 2}}", k.name()))
+            .collect();
+        let legacy_json = format!(
+            r#"{{
+            "families": [{}],
+            "grid": 8, "n_eigs": 4, "tol": 1e-8, "seed": 11, {}
+            "shards": 2, "channel_capacity": 2,
+            "sort": {{"method": "truncated_fft", "p0": 6}}
+        }}"#,
+            fam_json.join(", "),
+            extra
+        );
+        let explicit_json = legacy_json.replace(
+            "\"grid\": 8,",
+            "\"grid\": 8, \"problem\": \"standard\", \"transform\": \"none\",",
+        );
+        let cfg_legacy = GenConfig::from_json(&legacy_json).unwrap();
+        let cfg_explicit = GenConfig::from_json(&explicit_json).unwrap();
+        assert_eq!(cfg_explicit.problem, ProblemKind::Standard);
+        assert!(cfg_explicit.transform.is_none());
+        let echo = cfg_legacy.to_json();
+        assert_eq!(echo, cfg_explicit.to_json(), "{tag}: config echoes differ");
+
+        generate_dataset(&cfg_legacy, &d_legacy).unwrap();
+        generate_dataset(&cfg_explicit, &d_explicit).unwrap();
+        let bin1 = std::fs::read(d_legacy.join("eigs.bin")).unwrap();
+        let bin2 = std::fs::read(d_explicit.join("eigs.bin")).unwrap();
+        assert_eq!(bin1, bin2, "{tag}: eigs.bin must be byte-identical");
+        let r1 = DatasetReader::open(&d_legacy).unwrap();
+        let r2 = DatasetReader::open(&d_explicit).unwrap();
+        assert_eq!(r1.index(), r2.index(), "{tag}: record indexes differ");
+        let text = std::fs::read_to_string(d_explicit.join("manifest.json")).unwrap();
+        for key in ["\"problem\"", "\"transform\"", "\"factor_secs\"", "\"trisolve_count\""] {
+            assert!(!text.contains(key), "{tag}: default manifest grew {key}");
+        }
+        let _ = std::fs::remove_dir_all(&d_legacy);
+        let _ = std::fs::remove_dir_all(&d_explicit);
+    }
+}
+
+/// Read-back contract: standard datasets (including every pre-refactor
+/// dataset, which this run is byte-compatible with) read back zero
+/// transform counters, and the manifest never mentions them.
+#[test]
+fn standard_datasets_read_back_zero_transform_counters() {
+    let dir = tmpdir("legacy_readback");
+    let cfg = GenConfig::from_json(
+        r#"{
+        "families": [{"family": "helmholtz", "count": 3}],
+        "grid": 8, "n_eigs": 4, "tol": 1e-8, "seed": 3,
+        "shards": 2, "channel_capacity": 2,
+        "sort": {"method": "truncated_fft", "p0": 6}
+    }"#,
+    )
+    .unwrap();
+    let report = generate_dataset(&cfg, &dir).unwrap();
+    assert_eq!(report.trisolve_count, 0);
+    assert_eq!(report.factor_secs, 0.0);
+    let reader = DatasetReader::open(&dir).unwrap();
+    assert!(reader
+        .index()
+        .iter()
+        .all(|r| r.trisolve_count == 0 && r.factor_secs == 0.0));
+    let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    assert!(!text.contains("\"factor_secs\""));
+    assert!(!text.contains("\"trisolve_count\""));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// End-to-end generalized run through the pipeline: the producer
+/// attaches the family mass matrices, every record converges, the
+/// read-back eigenvalues match the dense pencil oracle, and the
+/// transform counters surface in records, report rollups, and the
+/// manifest config echo.
+#[test]
+fn generalized_pipeline_matches_dense_pencil_oracle() {
+    let dir = tmpdir("gen_pipeline");
+    let cfg = GenConfig::from_json(
+        r#"{
+        "families": [{"family": "vibration", "count": 2},
+                     {"family": "helmholtz_fem", "count": 2}],
+        "grid": 8, "n_eigs": 4, "tol": 1e-8, "seed": 5,
+        "shards": 2, "channel_capacity": 2,
+        "problem": "generalized",
+        "sort": {"method": "truncated_fft", "p0": 6}
+    }"#,
+    )
+    .unwrap();
+    let problems = generate_problems(&cfg);
+    assert!(
+        problems.iter().all(|p| p.mass.is_some()),
+        "producer must attach mass matrices under problem: generalized"
+    );
+    let report = generate_dataset(&cfg, &dir).unwrap();
+    assert!(report.trisolve_count > 0, "report rollup lost trisolves");
+    assert!(report.factor_secs > 0.0, "report rollup lost factor time");
+    let mut reader = DatasetReader::open(&dir).unwrap();
+    assert_eq!(reader.index().len(), 4);
+    let metas: Vec<_> = reader.index().to_vec();
+    for meta in &metas {
+        assert!(meta.max_residual <= 1e-8, "record {}: {}", meta.id, meta.max_residual);
+        assert!(meta.trisolve_count > 0, "record {} counted no trisolves", meta.id);
+    }
+    for p in &problems {
+        let rec = reader.read(p.id).unwrap();
+        let m = p.mass.as_ref().unwrap();
+        let want = sym_eig_generalized(&p.matrix.to_dense(), &m.to_dense());
+        for (got, w) in rec.values.iter().zip(&want.values[..rec.values.len()]) {
+            assert!(
+                (got - w).abs() / w.abs().max(1.0) < 1e-6,
+                "record {}: {got} vs dense {w}",
+                p.id
+            );
+        }
+    }
+    let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    let v = scsf::util::json::parse(&text).unwrap();
+    assert_eq!(
+        v.get("config")
+            .and_then(|c| c.get("problem"))
+            .and_then(scsf::util::json::Value::as_str),
+        Some("generalized")
+    );
+    assert!(text.contains("\"trisolve_count\""));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// End-to-end shift-invert run through the pipeline: the dataset's
+/// records carry the interior window above σ and the per-record /
+/// rollup counters are populated. σ is derived from the standard twin
+/// of the same config — `generate_problems` replays the producer
+/// exactly, so the matrices agree.
+#[test]
+fn shift_invert_pipeline_emits_interior_window_and_counters() {
+    let dir = tmpdir("shift_pipeline");
+    let mut cfg = GenConfig::from_json(
+        r#"{
+        "families": [{"family": "helmholtz", "count": 1}],
+        "grid": 8, "n_eigs": 4, "tol": 1e-8, "seed": 7,
+        "shards": 1, "channel_capacity": 2,
+        "sort": {"method": "truncated_fft", "p0": 6}
+    }"#,
+    )
+    .unwrap();
+    let p = generate_problems(&cfg).remove(0);
+    let dense = sym_eig(&p.matrix.to_dense()).values;
+    let (sigma, first) = interior_shift(&dense, 3, 8);
+    cfg.transform = Transform::ShiftInvert { sigma };
+    let report = generate_dataset(&cfg, &dir).unwrap();
+    assert!(report.trisolve_count > 0);
+    assert!(report.factor_secs > 0.0);
+    let mut reader = DatasetReader::open(&dir).unwrap();
+    let meta = reader.index()[0].clone();
+    assert!(meta.trisolve_count > 0);
+    assert!(meta.factor_secs > 0.0);
+    assert!(meta.max_residual <= 1e-8);
+    let rec = reader.read(0).unwrap();
+    for (got, want) in rec.values.iter().zip(&dense[first..first + 4]) {
+        assert!(
+            (got - want).abs() / want.abs().max(1.0) < 1e-6,
+            "σ={sigma}: {got} vs dense {want}"
+        );
+    }
+    let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+    assert!(text.contains("shift_invert"));
+    assert!(text.contains("\"factor_secs\""));
+    let _ = std::fs::remove_dir_all(&dir);
+}

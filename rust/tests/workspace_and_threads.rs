@@ -9,7 +9,7 @@ use scsf::eig::chebyshev::NativeFilter;
 use scsf::eig::chfsi::{self, ChfsiOptions};
 use scsf::eig::scsf::{solve_sequence, solve_sequence_in, ScsfOptions};
 use scsf::eig::solver::EigSolver;
-use scsf::eig::{EigOptions, SolverKind, Workspace};
+use scsf::eig::{EigOptions, SolverKind, SpectralOp, Workspace};
 use scsf::linalg::Mat;
 use scsf::operators::{self, GenOptions, OperatorKind};
 use scsf::rng::Xoshiro256pp;
@@ -179,9 +179,10 @@ fn every_solver_kind_reuses_a_workspace_correctly() {
         let fresh_cold = kind.solve(&a, &opts, None);
         let fresh_warm = kind.solve(&a, &opts, Some(&fresh_cold.as_warm_start()));
         let solver = kind.instance(&opts);
-        let mut ws = solver.prepare(&a);
-        let cold = solver.solve(&a, &mut ws, None);
-        let warm = solver.solve(&a, &mut ws, Some(&cold.as_warm_start()));
+        let op = SpectralOp::standard(&a);
+        let mut ws = solver.prepare(&op);
+        let cold = solver.solve(&op, &mut ws, None);
+        let warm = solver.solve(&op, &mut ws, Some(&cold.as_warm_start()));
         assert_eq!(cold.values, fresh_cold.values, "{kind:?} cold");
         assert_eq!(warm.values, fresh_warm.values, "{kind:?} warm");
         assert_eq!(warm.vectors, fresh_warm.vectors, "{kind:?} warm vectors");
