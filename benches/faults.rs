@@ -1,0 +1,183 @@
+//! Supervision-layer cost bench (ISSUE 10's fault tolerance).
+//!
+//! Two questions, one number each:
+//!
+//! * **Clean overhead** — what does the always-on escalation ladder
+//!   cost a run that never faults? Interleaved repeats of the same
+//!   pipeline run under `escalation: off` and `escalation: ladder`
+//!   (everything else identical), min-of-repeats per arm. The ladder's
+//!   first attempt *is* the historical solve, so the honest answer is
+//!   "a branch per record"; the run asserts the headline: ≤ 2 %
+//!   wall-clock overhead.
+//! * **Recovery cost per fault class** — with one fault injected per
+//!   run, how much wall-clock does surviving it cost over the clean
+//!   baseline? Covers the ladder rung (`nonconvergence`), panic
+//!   quarantine + cold chain restart (`panic`), pivot-breakdown
+//!   recovery under shift-invert (`factorization`), and the watchdog
+//!   timeout (`timeout` — dominated by the configured deadline, by
+//!   design).
+//!
+//! Emits `BENCH_faults.json` (working directory); the repo root
+//! carries the committed schema seed.
+
+use scsf::coordinator::config::{FamilySpec, GenConfig};
+use scsf::coordinator::pipeline::generate_dataset;
+use scsf::eig::chfsi::Escalation;
+use scsf::eig::op::Transform;
+use scsf::sort::SortMethod;
+use scsf::testing::faults::{Fault, FaultPlan};
+use scsf::util::json::Value;
+use std::path::PathBuf;
+use std::time::Instant;
+
+const GRID: usize = 16;
+const N_PROBLEMS: usize = 8;
+const N_EIGS: usize = 8;
+const SEED: u64 = 71;
+const REPEATS: usize = 5;
+/// Watchdog deadline for the timeout arm — its recovery cost is the
+/// deadline itself plus one cold re-entry.
+const TIMEOUT_SECS: f64 = 0.5;
+
+fn base_cfg() -> GenConfig {
+    GenConfig {
+        families: vec![FamilySpec::new("poisson", N_PROBLEMS)],
+        grid: GRID,
+        n_eigs: N_EIGS,
+        seed: SEED,
+        sort: SortMethod::TruncatedFft { p0: 6 },
+        ..Default::default()
+    }
+}
+
+fn bench_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("scsf_bench_faults_{tag}_{}", std::process::id()))
+}
+
+/// One timed pipeline run into a throwaway dataset directory.
+fn timed_run(cfg: &GenConfig, tag: &str) -> (f64, scsf::coordinator::metrics::GenReport) {
+    let dir = bench_dir(tag);
+    let _ = std::fs::remove_dir_all(&dir);
+    let t = Instant::now();
+    let report = generate_dataset(cfg, &dir).expect("bench run failed");
+    let secs = t.elapsed().as_secs_f64();
+    let _ = std::fs::remove_dir_all(&dir);
+    (secs, report)
+}
+
+fn main() {
+    // --- Clean overhead: escalation off vs ladder, interleaved. ---
+    let mut cfg_off = base_cfg();
+    cfg_off.escalation = Escalation::Off;
+    let cfg_ladder = base_cfg();
+    let mut off_min = f64::INFINITY;
+    let mut ladder_min = f64::INFINITY;
+    for _ in 0..REPEATS {
+        off_min = off_min.min(timed_run(&cfg_off, "off").0);
+        ladder_min = ladder_min.min(timed_run(&cfg_ladder, "ladder").0);
+    }
+    let overhead = ladder_min / off_min - 1.0;
+    println!(
+        "clean run ({N_PROBLEMS} poisson records, grid {GRID}, min of {REPEATS}):\n\
+         escalation off    {:.1} ms\n\
+         escalation ladder {:.1} ms  ({:+.2}% overhead)",
+        1e3 * off_min,
+        1e3 * ladder_min,
+        100.0 * overhead,
+    );
+
+    // --- Recovery cost per fault class, one injected fault per run. ---
+    let mut classes: Vec<Value> = Vec::new();
+    println!(
+        "\n{:>16} {:>10} {:>10} {:>8} {:>12} {:>12}",
+        "class", "secs", "delta_ms", "retries", "escalations", "quarantined"
+    );
+    let arms: Vec<(&str, GenConfig, FaultPlan)> = vec![
+        (
+            "nonconvergence",
+            base_cfg(),
+            FaultPlan::single(2, Fault::NonConvergence { times: 1 }),
+        ),
+        ("panic", base_cfg(), FaultPlan::single(2, Fault::Panic)),
+        (
+            "factorization",
+            {
+                let mut c = base_cfg();
+                c.transform = Transform::ShiftInvert { sigma: 0.0 };
+                c
+            },
+            FaultPlan::single(2, Fault::PivotBreakdown),
+        ),
+        (
+            "timeout",
+            {
+                let mut c = base_cfg();
+                c.solve_timeout_secs = Some(TIMEOUT_SECS);
+                c
+            },
+            FaultPlan::single(2, Fault::Stall { secs: 60.0 }),
+        ),
+    ];
+    for (class, mut cfg, plan) in arms {
+        // Each arm's baseline is its own config minus the injection
+        // (shift-invert and the watchdog have clean costs of their own).
+        let clean = (0..REPEATS)
+            .map(|_| timed_run(&cfg, class).0)
+            .fold(f64::INFINITY, f64::min);
+        cfg.fault_injection = Some(plan);
+        let (secs, report) = timed_run(&cfg, class);
+        let delta = secs - clean;
+        println!(
+            "{class:>16} {secs:>10.3} {:>10.1} {:>8} {:>12} {:>12}",
+            1e3 * delta,
+            report.retries,
+            report.escalations,
+            report.quarantined,
+        );
+        classes.push(Value::obj(vec![
+            ("class", class.into()),
+            ("secs", secs.into()),
+            ("clean_secs", clean.into()),
+            ("delta_secs", delta.into()),
+            ("retries", report.retries.into()),
+            ("escalations", report.escalations.into()),
+            ("fallbacks", report.fallbacks.into()),
+            ("quarantined", report.quarantined.into()),
+        ]));
+    }
+
+    let doc = Value::obj(vec![
+        ("bench", "faults".into()),
+        ("version", 1usize.into()),
+        ("grid", GRID.into()),
+        ("n_problems", N_PROBLEMS.into()),
+        ("n_eigs", N_EIGS.into()),
+        ("seed", SEED.into()),
+        ("repeats", REPEATS.into()),
+        ("timeout_secs", TIMEOUT_SECS.into()),
+        (
+            "clean_overhead",
+            Value::obj(vec![
+                ("escalation_off_secs", off_min.into()),
+                ("escalation_ladder_secs", ladder_min.into()),
+                ("overhead_frac", overhead.into()),
+            ]),
+        ),
+        ("recovery", Value::Arr(classes)),
+    ]);
+    let path = "BENCH_faults.json";
+    match std::fs::write(path, doc.to_string_pretty()) {
+        Ok(()) => println!("\nwrote {path}"),
+        Err(e) => eprintln!("could not write {path}: {e}"),
+    }
+
+    // Headline: the always-on ladder must be free on clean runs. The
+    // small absolute floor keeps sub-millisecond scheduler jitter from
+    // failing a sub-second workload.
+    assert!(
+        ladder_min <= 1.02 * off_min + 0.02,
+        "supervision overhead on a clean run must be <= 2% \
+         (off {off_min:.4}s, ladder {ladder_min:.4}s, {:+.2}%)",
+        100.0 * overhead
+    );
+}

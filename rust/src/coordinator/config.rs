@@ -12,13 +12,14 @@
 use super::scheduler::{FamilyGroup, SortScope};
 use crate::anyhow;
 use crate::eig::chebyshev::{FilterBackendKind, FilterSchedule, Precision};
-use crate::eig::chfsi::{ChfsiOptions, Recycling};
+use crate::eig::chfsi::{ChfsiOptions, Escalation, Recycling};
 use crate::eig::op::{ProblemKind, Transform};
 use crate::eig::scsf::ScsfOptions;
 use crate::eig::EigOptions;
 use crate::grf::GrfParams;
 use crate::operators::{FamilyRegistry, GenOptions, OperatorFamily};
 use crate::sort::SortMethod;
+use crate::testing::faults::FaultPlan;
 use crate::util::error::Result;
 use crate::util::json::{self, Value};
 use std::sync::Arc;
@@ -299,6 +300,30 @@ pub struct GenConfig {
     /// XLA path rejects transforms, and `mixed` precision / `deflate`
     /// recycling are incompatible with them.
     pub transform: Transform,
+    /// What a non-converging solve does: `ladder` (retry with escalated
+    /// parameters — degree/guard bump, then cold restart, then a dense
+    /// fallback for small plain operators — the default; a clean,
+    /// converging run is bit-for-bit the historical output because the
+    /// first rung *is* the historical solve) or `off` (the historical
+    /// single attempt: best-effort unconverged records are written
+    /// as-is).
+    pub escalation: Escalation,
+    /// Retry rungs the escalation ladder may climb per record before
+    /// the dense fallback / quarantine (ignored under
+    /// `escalation: off`).
+    pub max_retries: usize,
+    /// Watchdog wall-clock budget per record solve. `None` (the
+    /// default) disables the watchdog; with a budget set, each solve
+    /// runs on a supervised thread and a record exceeding it is
+    /// abandoned and quarantined with `fault: timeout` (the run
+    /// continues). Native backends only — the XLA runtime cannot cross
+    /// the watchdog's solve threads.
+    pub solve_timeout_secs: Option<f64>,
+    /// Test-only deterministic fault injection (see
+    /// [`crate::testing::faults`]). Never serialized: configs echoed
+    /// into manifests are always clean, and resumed runs replay
+    /// without faults.
+    pub fault_injection: Option<FaultPlan>,
     /// Sorting method (paper default: truncated FFT, p₀ = 20).
     pub sort: SortMethod,
     /// Where the similarity sort runs: one global order per family
@@ -360,6 +385,10 @@ impl Default for GenConfig {
             recycling: Recycling::Off,
             problem: ProblemKind::Standard,
             transform: Transform::None,
+            escalation: Escalation::Ladder,
+            max_retries: 2,
+            solve_timeout_secs: None,
+            fault_injection: None,
             sort: SortMethod::TruncatedFft { p0: 20 },
             sort_scope: SortScope::Global,
             handoff_threshold: None,
@@ -457,6 +486,21 @@ impl GenConfig {
                      spectral-transformation path (set transform: \"none\" or backend kind: \
                      \"native\")",
                     self.transform.name()
+                ));
+            }
+            if self.solve_timeout_secs.is_some() {
+                return Err(anyhow!(
+                    "solve_timeout_secs requires a native backend: the watchdog runs each \
+                     solve on a supervised thread with a rebuilt native backend, which the \
+                     xla runtime cannot cross (unset solve_timeout_secs or set backend kind: \
+                     \"native\")"
+                ));
+            }
+        }
+        if let Some(t) = self.solve_timeout_secs {
+            if !t.is_finite() || t <= 0.0 {
+                return Err(anyhow!(
+                    "solve_timeout_secs must be a finite value > 0, got {t}"
                 ));
             }
         }
@@ -561,6 +605,8 @@ impl GenConfig {
         chfsi.recycling = self.recycling;
         chfsi.problem = self.problem;
         chfsi.transform = self.transform;
+        chfsi.escalation = self.escalation;
+        chfsi.max_retries = self.max_retries;
         ScsfOptions {
             chfsi,
             sort: self.sort,
@@ -621,6 +667,17 @@ impl GenConfig {
         if !self.transform.is_none() {
             fields.push(("transform", self.transform.name().as_str().into()));
         }
+        if self.escalation != Escalation::Ladder {
+            fields.push(("escalation", self.escalation.name().into()));
+        }
+        if self.max_retries != 2 {
+            fields.push(("max_retries", self.max_retries.into()));
+        }
+        if let Some(t) = self.solve_timeout_secs {
+            fields.push(("solve_timeout_secs", t.into()));
+        }
+        // `fault_injection` is deliberately never serialized: manifests
+        // echo clean configs and resumed runs replay without faults.
         fields.extend([
             ("sort", sort),
             ("sort_scope", self.sort_scope.name().into()),
@@ -790,6 +847,25 @@ impl GenConfig {
                 )
             })?;
         }
+        if let Some(s) = v.get("escalation") {
+            let name = s
+                .as_str()
+                .ok_or_else(|| anyhow!("escalation must be a string"))?;
+            cfg.escalation = Escalation::parse(name).ok_or_else(|| {
+                anyhow!("unknown escalation {name} (expected \"off\" or \"ladder\")")
+            })?;
+        }
+        if let Some(x) = get("max_retries") {
+            cfg.max_retries = x;
+        }
+        if let Some(t) = v.get("solve_timeout_secs") {
+            cfg.solve_timeout_secs = match t {
+                Value::Null => None,
+                _ => Some(t.as_f64().filter(|x| x.is_finite() && *x > 0.0).ok_or_else(
+                    || anyhow!("solve_timeout_secs must be a finite value > 0 or null"),
+                )?),
+            };
+        }
         if let Some(sort) = v.get("sort") {
             cfg.sort = match sort.get("method").and_then(Value::as_str) {
                 Some("none") => SortMethod::None,
@@ -919,6 +995,12 @@ mod tests {
             precision: Precision::Mixed,
             filter_backend: FilterBackendKind::Sell,
             recycling: Recycling::Deflate,
+            problem: ProblemKind::Standard,
+            transform: Transform::None,
+            escalation: Escalation::Off,
+            max_retries: 5,
+            solve_timeout_secs: Some(30.0),
+            fault_injection: None,
             sort: SortMethod::Greedy,
             sort_scope: SortScope::Shard,
             handoff_threshold: Some(0.75),
@@ -1389,6 +1471,81 @@ mod tests {
             ..GenConfig::single("poisson", 2)
         };
         assert!(native.resolve(&reg).is_ok());
+    }
+
+    #[test]
+    fn supervision_knobs_roundtrip_and_validate() {
+        // Defaults: ladder with 2 retries, no watchdog — and, the
+        // byte-identity contract, default configs do not even emit the
+        // keys (the first ladder rung IS the historical solve).
+        let cfg = GenConfig::default();
+        assert_eq!(cfg.escalation, Escalation::Ladder);
+        assert_eq!(cfg.max_retries, 2);
+        assert_eq!(cfg.solve_timeout_secs, None);
+        assert!(cfg.fault_injection.is_none());
+        let text = cfg.to_json();
+        assert!(!text.contains("\"escalation\""));
+        assert!(!text.contains("\"max_retries\""));
+        assert!(!text.contains("\"solve_timeout_secs\""));
+        assert!(!text.contains("fault_injection"));
+        let parsed = GenConfig::from_json("{}").unwrap();
+        assert_eq!(parsed.escalation, Escalation::Ladder);
+        assert_eq!(parsed.max_retries, 2);
+        // Non-default values round-trip and propagate into solver opts.
+        let custom = GenConfig {
+            escalation: Escalation::Off,
+            max_retries: 7,
+            solve_timeout_secs: Some(12.5),
+            ..Default::default()
+        };
+        let back = GenConfig::from_json(&custom.to_json()).unwrap();
+        assert_eq!(back, custom);
+        let o = custom.scsf_options_with_tol(1e-8);
+        assert_eq!(o.chfsi.escalation, Escalation::Off);
+        assert_eq!(o.chfsi.max_retries, 7);
+        // A fault plan never survives serialization: resumed runs and
+        // manifest echoes replay clean.
+        let injected = GenConfig {
+            fault_injection: Some(FaultPlan::single(
+                0,
+                crate::testing::faults::Fault::Panic,
+            )),
+            ..Default::default()
+        };
+        let back = GenConfig::from_json(&injected.to_json()).unwrap();
+        assert!(back.fault_injection.is_none());
+        // Bad values fail loudly.
+        assert!(GenConfig::from_json(r#"{"escalation": "ladders"}"#).is_err());
+        assert!(GenConfig::from_json(r#"{"escalation": 1}"#).is_err());
+        assert!(GenConfig::from_json(r#"{"solve_timeout_secs": -2.0}"#).is_err());
+        assert!(GenConfig::from_json(r#"{"solve_timeout_secs": "fast"}"#).is_err());
+        assert_eq!(
+            GenConfig::from_json(r#"{"solve_timeout_secs": null}"#)
+                .unwrap()
+                .solve_timeout_secs,
+            None
+        );
+        // resolve() rejects nonsense budgets and the xla combination.
+        let reg = FamilyRegistry::builtin();
+        let bad = GenConfig {
+            solve_timeout_secs: Some(f64::NAN),
+            ..GenConfig::single("poisson", 2)
+        };
+        assert!(bad.resolve(&reg).is_err());
+        let xla = GenConfig {
+            solve_timeout_secs: Some(5.0),
+            backend: Backend::Xla {
+                artifacts_dir: "artifacts".to_string(),
+            },
+            ..GenConfig::single("poisson", 2)
+        };
+        let err = xla.resolve(&reg).unwrap_err().to_string();
+        assert!(err.contains("solve_timeout_secs"), "{err}");
+        let ok = GenConfig {
+            solve_timeout_secs: Some(5.0),
+            ..GenConfig::single("poisson", 2)
+        };
+        assert!(ok.resolve(&reg).is_ok());
     }
 
     #[test]

@@ -30,6 +30,7 @@
 //! ([`crate::store::emit`]). See DESIGN.md §Streaming store.
 
 use crate::anyhow;
+use crate::eig::scsf::SolveStatus;
 use crate::eig::EigResult;
 use crate::store::chunk::{FrameScanner, FrameWriter};
 use crate::store::emit::JsonEmitter;
@@ -113,6 +114,23 @@ pub struct RecordMeta {
     /// `(A − σM)⁻¹` application is one forward + one backward sweep
     /// (0 under `transform: none` and for older datasets).
     pub trisolve_count: usize,
+    /// Solve attempts beyond the first charged by the supervision
+    /// ladder (0 for clean solves and for datasets written before the
+    /// fault-tolerance layer).
+    pub retries: usize,
+    /// Escalation-ladder rungs climbed for this record (degree/guard
+    /// bump, cold restart, dense fallback).
+    pub escalations: usize,
+    /// The stored pairs came from the dense `sym_eig` fallback rung.
+    pub fallback: bool,
+    /// Supervision outcome (`ok` for clean solves and for datasets
+    /// written before the fault-tolerance layer; `quarantined` records
+    /// store no pairs — `l == 0`).
+    pub status: SolveStatus,
+    /// Fault class when the record was retried or quarantined (`panic`,
+    /// `timeout`, `nonconvergence`, `factorization`, `numeric`; empty
+    /// otherwise).
+    pub fault: String,
 }
 
 /// Length in bytes of a record's `eigs.bin` region.
@@ -124,8 +142,10 @@ fn record_len(n: usize, l: usize) -> u64 {
 /// (alphabetical) order the legacy `BTreeMap` serializer produced, so
 /// the legacy path stays byte-identical. `with_upper` gates the
 /// v3-only `spectral_upper` field. The spectral-transform fields
-/// (`factor_secs`, `trisolve_count`) are emitted only when nonzero —
-/// untransformed datasets stay byte-identical to historical output.
+/// (`factor_secs`, `trisolve_count`) and the supervision fields
+/// (`retries`, `escalations`, `fallback`, `status`, `fault`) are
+/// emitted only when nonzero / non-default — untransformed, fault-free
+/// datasets stay byte-identical to historical output.
 fn emit_record<W: std::io::Write>(
     e: &mut JsonEmitter<W>,
     r: &RecordMeta,
@@ -134,14 +154,26 @@ fn emit_record<W: std::io::Write>(
     e.obj_start()?;
     e.key("deflated_cols")?;
     e.usize_val(r.deflated_cols)?;
+    if r.escalations > 0 {
+        e.key("escalations")?;
+        e.usize_val(r.escalations)?;
+    }
     e.key("f32_matvecs")?;
     e.usize_val(r.f32_matvecs)?;
     if r.factor_secs > 0.0 {
         e.key("factor_secs")?;
         e.num(r.factor_secs)?;
     }
+    if r.fallback {
+        e.key("fallback")?;
+        e.usize_val(1)?;
+    }
     e.key("family")?;
     e.str_val(&r.family)?;
+    if !r.fault.is_empty() {
+        e.key("fault")?;
+        e.str_val(&r.fault)?;
+    }
     e.key("filter_matvecs")?;
     e.usize_val(r.filter_matvecs)?;
     e.key("id")?;
@@ -164,6 +196,10 @@ fn emit_record<W: std::io::Write>(
     e.usize_val(r.recycle_dim)?;
     e.key("recycle_matvecs")?;
     e.usize_val(r.recycle_matvecs)?;
+    if r.retries > 0 {
+        e.key("retries")?;
+        e.usize_val(r.retries)?;
+    }
     e.key("secs")?;
     e.num(r.secs)?;
     e.key("shard")?;
@@ -171,6 +207,10 @@ fn emit_record<W: std::io::Write>(
     if with_upper {
         e.key("spectral_upper")?;
         e.num(r.spectral_upper)?;
+    }
+    if r.status != SolveStatus::Ok {
+        e.key("status")?;
+        e.str_val(r.status.name())?;
     }
     if r.trisolve_count > 0 {
         e.key("trisolve_count")?;
@@ -309,6 +349,22 @@ impl DatasetWriter {
         family: &str,
         result: &EigResult,
     ) -> Result<()> {
+        self.write_record_with(id, shard, family, result, SolveStatus::Ok, "")
+    }
+
+    /// [`DatasetWriter::write_record`] with an explicit supervision
+    /// outcome. Quarantined records carry no pairs (`l == 0`, a
+    /// 24-byte `eigs.bin` header) but still occupy their slot in both
+    /// files, so record counts, resume scans, and `inspect` see them.
+    pub fn write_record_with(
+        &mut self,
+        id: usize,
+        shard: usize,
+        family: &str,
+        result: &EigResult,
+        status: SolveStatus,
+        fault: &str,
+    ) -> Result<()> {
         let n = result.vectors.rows();
         let l = result.values.len();
         let offset = self.offset;
@@ -349,6 +405,11 @@ impl DatasetWriter {
             spectral_upper: result.stats.spectral_upper,
             factor_secs: result.stats.factor_secs,
             trisolve_count: result.stats.trisolve_count,
+            retries: result.stats.retries,
+            escalations: result.stats.escalations,
+            fallback: result.stats.fallback,
+            status,
+            fault: fault.to_string(),
         };
         match &mut self.mode {
             Mode::Legacy { records } => records.push(meta),
@@ -988,6 +1049,32 @@ fn read_record_field(
         }
         return Ok(());
     }
+    if k.eq_str("fault") {
+        match p.next_event().map_err(|e| anyhow!("manifest: {e}"))? {
+            Some(Event::Str(s)) => {
+                r.fault = s
+                    .decode_into(scratch)
+                    .map_err(|e| anyhow!("manifest: {e}"))?
+                    .to_string();
+            }
+            _ => return Err(anyhow!("manifest: fault must be a string")),
+        }
+        return Ok(());
+    }
+    if k.eq_str("status") {
+        match p.next_event().map_err(|e| anyhow!("manifest: {e}"))? {
+            Some(Event::Str(s)) => {
+                let name = s
+                    .decode_into(scratch)
+                    .map_err(|e| anyhow!("manifest: {e}"))?;
+                r.status = SolveStatus::parse(name).ok_or_else(|| {
+                    anyhow!("manifest: unknown record status {name:?}")
+                })?;
+            }
+            _ => return Err(anyhow!("manifest: status must be a string")),
+        }
+        return Ok(());
+    }
     let num = |p: &mut PullParser| -> Result<f64> {
         match p.next_event().map_err(|e| anyhow!("manifest: {e}"))? {
             Some(Event::Num(x)) => Ok(x),
@@ -1032,6 +1119,12 @@ fn read_record_field(
         r.factor_secs = num(p)?;
     } else if k.eq_str("trisolve_count") {
         r.trisolve_count = num(p)?.round() as usize;
+    } else if k.eq_str("retries") {
+        r.retries = num(p)?.round() as usize;
+    } else if k.eq_str("escalations") {
+        r.escalations = num(p)?.round() as usize;
+    } else if k.eq_str("fallback") {
+        r.fallback = num(p)? != 0.0;
     } else {
         p.skip_value().map_err(|e| anyhow!("manifest: {e}"))?;
     }
@@ -1492,6 +1585,63 @@ mod tests {
         assert!(recs[0].get("trisolve_count").is_some());
         assert!(recs[1].get("factor_secs").is_none());
         assert!(recs[1].get("trisolve_count").is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn supervision_fields_round_trip_and_stay_absent_by_default() {
+        let dir = tmpdir("supervision");
+        let mut w = DatasetWriter::create(&dir).unwrap();
+        // A retried record with ladder counters...
+        let mut r = fake_result(6, 2, 5);
+        r.stats.retries = 2;
+        r.stats.escalations = 2;
+        r.stats.fallback = true;
+        w.write_record_with(0, 0, "helmholtz", &r, SolveStatus::Retried, "nonconvergence")
+            .unwrap();
+        // ...a quarantined record with no pairs (l == 0)...
+        let q = EigResult {
+            values: Vec::new(),
+            vectors: Mat::zeros(6, 0),
+            residuals: Vec::new(),
+            stats: SolveStats::default(),
+        };
+        w.write_record_with(1, 0, "helmholtz", &q, SolveStatus::Quarantined, "panic")
+            .unwrap();
+        // ...and a clean record through the historical entry point.
+        w.write_record(2, 1, "helmholtz", &fake_result(6, 2, 6)).unwrap();
+        w.finalize(vec![]).unwrap();
+
+        let mut reader = DatasetReader::open(&dir).unwrap();
+        let idx = reader.index().to_vec();
+        assert_eq!(idx[0].status, SolveStatus::Retried);
+        assert_eq!(idx[0].fault, "nonconvergence");
+        assert_eq!(idx[0].retries, 2);
+        assert_eq!(idx[0].escalations, 2);
+        assert!(idx[0].fallback);
+        assert_eq!(idx[1].status, SolveStatus::Quarantined);
+        assert_eq!(idx[1].fault, "panic");
+        assert_eq!(idx[1].l, 0);
+        assert_eq!(idx[2].status, SolveStatus::Ok);
+        assert_eq!(idx[2].fault, "");
+        // The quarantined slot reads back as an empty record, and its
+        // neighbours read back intact.
+        let rec = reader.read(1).unwrap();
+        assert!(rec.values.is_empty());
+        assert_eq!(rec.vectors.cols(), 0);
+        assert_eq!(reader.read(2).unwrap().values.len(), 2);
+        // Clean records don't even carry the keys, keeping fault-free
+        // manifests byte-identical to historical output.
+        let manifest = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        let v = json::parse(&manifest).unwrap();
+        let recs = v.get("records").unwrap().as_arr().unwrap();
+        assert!(recs[0].get("status").is_some());
+        assert!(recs[0].get("fault").is_some());
+        assert!(recs[0].get("retries").is_some());
+        assert!(recs[0].get("fallback").is_some());
+        for key in ["status", "fault", "retries", "escalations", "fallback"] {
+            assert!(recs[2].get(key).is_none(), "clean record leaks {key}");
+        }
         let _ = std::fs::remove_dir_all(&dir);
     }
 

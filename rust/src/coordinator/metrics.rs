@@ -53,6 +53,15 @@ pub struct FamilyReport {
     /// Seconds factorizing shifted operators for the family's runs
     /// (one LDLᵀ per distinct matrix; 0 under `transform: none`).
     pub factor_secs: f64,
+    /// Solve attempts beyond the first across the family's records
+    /// (0 for clean runs).
+    pub retries: usize,
+    /// Escalation-ladder rungs climbed across the family's records.
+    pub escalations: usize,
+    /// Records whose pairs came from the dense fallback rung.
+    pub fallbacks: usize,
+    /// Records quarantined (no pairs stored; `status: quarantined`).
+    pub quarantined: usize,
     /// Mean outer iterations per solve.
     pub avg_iterations: f64,
     /// Seconds in eigensolves for this family's problems.
@@ -88,6 +97,18 @@ impl FamilyReport {
         }
         if self.factor_secs > 0.0 {
             fields.push(("factor_secs", self.factor_secs.into()));
+        }
+        if self.retries > 0 {
+            fields.push(("retries", self.retries.into()));
+        }
+        if self.escalations > 0 {
+            fields.push(("escalations", self.escalations.into()));
+        }
+        if self.fallbacks > 0 {
+            fields.push(("fallbacks", self.fallbacks.into()));
+        }
+        if self.quarantined > 0 {
+            fields.push(("quarantined", self.quarantined.into()));
         }
         fields.extend([
             ("avg_iterations", self.avg_iterations.into()),
@@ -130,6 +151,14 @@ pub struct ShardReport {
     /// Seconds factorizing shifted operators across the run's solves
     /// (0 under `transform: none`).
     pub factor_secs: f64,
+    /// Solve attempts beyond the first across the run's records.
+    pub retries: usize,
+    /// Escalation-ladder rungs climbed across the run's records.
+    pub escalations: usize,
+    /// Records whose pairs came from the dense fallback rung.
+    pub fallbacks: usize,
+    /// Records quarantined in this run.
+    pub quarantined: usize,
     /// Whether the run's first solve inherited the previous run's tail
     /// eigenpairs (a granted boundary handoff that actually arrived).
     pub warm_handoff: bool,
@@ -167,6 +196,18 @@ impl ShardReport {
         }
         if self.factor_secs > 0.0 {
             fields.push(("factor_secs", self.factor_secs.into()));
+        }
+        if self.retries > 0 {
+            fields.push(("retries", self.retries.into()));
+        }
+        if self.escalations > 0 {
+            fields.push(("escalations", self.escalations.into()));
+        }
+        if self.fallbacks > 0 {
+            fields.push(("fallbacks", self.fallbacks.into()));
+        }
+        if self.quarantined > 0 {
+            fields.push(("quarantined", self.quarantined.into()));
         }
         fields.extend([
             ("warm_handoff", self.warm_handoff.into()),
@@ -239,6 +280,20 @@ pub struct GenReport {
     /// Seconds spent factorizing shifted operators (one sparse LDLᵀ
     /// per distinct matrix; 0 under the default `transform: none`).
     pub factor_secs: f64,
+    /// Solve attempts beyond the first across all records (0 for clean
+    /// runs — the supervision ladder's first rung is the historical
+    /// solve).
+    pub retries: usize,
+    /// Escalation-ladder rungs climbed across all records.
+    pub escalations: usize,
+    /// Records whose stored pairs came from the dense fallback rung.
+    pub fallbacks: usize,
+    /// Records quarantined (slots stored with no pairs).
+    pub quarantined: usize,
+    /// Fault classes seen, with record counts — `panic`, `timeout`,
+    /// `nonconvergence`, `factorization`, `numeric` (empty for clean
+    /// runs; deterministic alphabetical order).
+    pub faults: std::collections::BTreeMap<String, usize>,
     /// Merged per-column filter-degree histogram: `degree_hist[m]` is
     /// the number of (column, sweep) pairs filtered at degree `m`
     /// across the whole run. Fixed schedules put everything in the
@@ -311,6 +366,29 @@ impl GenReport {
         if self.factor_secs > 0.0 {
             fields.push(("factor_secs", self.factor_secs.into()));
         }
+        if self.retries > 0 {
+            fields.push(("retries", self.retries.into()));
+        }
+        if self.escalations > 0 {
+            fields.push(("escalations", self.escalations.into()));
+        }
+        if self.fallbacks > 0 {
+            fields.push(("fallbacks", self.fallbacks.into()));
+        }
+        if self.quarantined > 0 {
+            fields.push(("quarantined", self.quarantined.into()));
+        }
+        if !self.faults.is_empty() {
+            fields.push((
+                "faults",
+                Value::Obj(
+                    self.faults
+                        .iter()
+                        .map(|(k, &c)| (k.clone(), Value::from(c)))
+                        .collect(),
+                ),
+            ));
+        }
         fields.extend([
             ("degree_hist", degree_hist_pairs(&self.degree_hist)),
             ("max_residual", self.max_residual.into()),
@@ -340,7 +418,7 @@ impl GenReport {
 
     /// Compact human-readable summary line.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} problems in {:.2}s (avg solve {:.3}s, avg iters {:.1}, {:.0} Mflop total, {:.0} Mflop filter, {} matvecs ({} filter), max residual {:.2e}, converged: {}, sort {} quality {:.3}, {} warm handoffs / {} cold runs)",
             self.n_problems,
             self.total_secs,
@@ -356,7 +434,16 @@ impl GenReport {
             self.sort_quality,
             self.warm_handoffs,
             self.cold_runs,
-        )
+        );
+        // Fault accounting appears only when something actually went
+        // wrong, keeping clean-run output byte-identical.
+        if self.retries > 0 || self.quarantined > 0 {
+            s.push_str(&format!(
+                " [{} retries, {} quarantined]",
+                self.retries, self.quarantined
+            ));
+        }
+        s
     }
 }
 
@@ -492,6 +579,63 @@ mod tests {
         let r = GenReport::default();
         assert_eq!(r.summary().lines().count(), 1);
         assert!(r.summary().contains("matvecs"));
+        // Clean runs show no fault accounting at all.
+        assert!(!r.summary().contains("quarantined"));
+        let faulted = GenReport {
+            retries: 3,
+            quarantined: 1,
+            ..Default::default()
+        };
+        assert_eq!(faulted.summary().lines().count(), 1);
+        assert!(faulted.summary().contains("3 retries"));
+        assert!(faulted.summary().contains("1 quarantined"));
+    }
+
+    #[test]
+    fn fault_rollups_emit_only_when_nonzero() {
+        // Clean runs must serialize byte-identically to pre-supervision
+        // builds: the keys simply don't appear.
+        let off = GenReport::default().to_json();
+        for key in ["retries", "escalations", "fallbacks", "quarantined", "faults"] {
+            assert!(off.get(key).is_none(), "clean report leaks {key}");
+        }
+        assert!(FamilyReport::default().to_json().get("retries").is_none());
+        assert!(ShardReport::default().to_json().get("quarantined").is_none());
+        let mut faults = std::collections::BTreeMap::new();
+        faults.insert("panic".to_string(), 1usize);
+        faults.insert("timeout".to_string(), 2usize);
+        let on = GenReport {
+            retries: 4,
+            escalations: 3,
+            fallbacks: 1,
+            quarantined: 2,
+            faults,
+            families: vec![FamilyReport {
+                retries: 4,
+                quarantined: 2,
+                ..Default::default()
+            }],
+            shards: vec![ShardReport {
+                escalations: 3,
+                fallbacks: 1,
+                ..Default::default()
+            }],
+            ..Default::default()
+        };
+        let v = on.to_json();
+        assert_eq!(v.get("retries").and_then(Value::as_usize), Some(4));
+        assert_eq!(v.get("escalations").and_then(Value::as_usize), Some(3));
+        assert_eq!(v.get("fallbacks").and_then(Value::as_usize), Some(1));
+        assert_eq!(v.get("quarantined").and_then(Value::as_usize), Some(2));
+        let f = v.get("faults").unwrap();
+        assert_eq!(f.get("panic").and_then(Value::as_usize), Some(1));
+        assert_eq!(f.get("timeout").and_then(Value::as_usize), Some(2));
+        let fams = v.get("families").and_then(Value::as_arr).unwrap();
+        assert_eq!(fams[0].get("retries").and_then(Value::as_usize), Some(4));
+        assert_eq!(fams[0].get("quarantined").and_then(Value::as_usize), Some(2));
+        let shards = v.get("shards").and_then(Value::as_arr).unwrap();
+        assert_eq!(shards[0].get("escalations").and_then(Value::as_usize), Some(3));
+        assert_eq!(shards[0].get("fallbacks").and_then(Value::as_usize), Some(1));
     }
 
     #[test]

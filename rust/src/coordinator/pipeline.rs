@@ -27,20 +27,23 @@ use crate::anyhow;
 use crate::eig::chebyshev::{FilterBackend, FilterBackendKind, NativeFilter, Precision, SellFilter};
 use crate::eig::chfsi::Recycling;
 use crate::eig::op::{OpTag, ProblemKind};
-use crate::eig::scsf::Chain;
+use crate::eig::scsf::{Chain, ScsfOptions, SolveStatus, Supervised};
 use crate::eig::solver::Workspace;
 use crate::eig::WarmStart;
 use crate::operators::{FamilyRegistry, Problem};
 use crate::rng::Xoshiro256pp;
 use crate::runtime::{XlaFilter, XlaRuntime};
 use crate::sort::{signature::Signature, signature::SignatureEngine, SortMethod};
+use crate::testing::faults;
 use crate::util::error::Result;
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::Path;
 use std::rc::Rc;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::sync::Mutex;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 fn make_backend(cfg: &GenConfig) -> Result<Box<dyn FilterBackend>> {
     match &cfg.backend {
@@ -73,6 +76,13 @@ fn make_backend(cfg: &GenConfig) -> Result<Box<dyn FilterBackend>> {
                     cfg.problem.name()
                 ));
             }
+            if cfg.solve_timeout_secs.is_some() {
+                return Err(anyhow!(
+                    "solve_timeout_secs requires a native backend (the watchdog rebuilds \
+                     its filter backend on a supervised thread, which the xla runtime \
+                     handle cannot cross)"
+                ));
+            }
             if !cfg.transform.is_none() {
                 return Err(anyhow!(
                     "transform \"{}\" requires a native backend (xla has no \
@@ -82,6 +92,129 @@ fn make_backend(cfg: &GenConfig) -> Result<Box<dyn FilterBackend>> {
             }
             let rt = XlaRuntime::load(Path::new(artifacts_dir))?;
             Ok(Box::new(XlaFilter::new(Rc::new(rt))))
+        }
+    }
+}
+
+/// One supervised solve on the worker's own thread: arm the record's
+/// injected faults, then run the escalation ladder inside
+/// `catch_unwind` so a panic — injected or real — poisons only this
+/// record, never the run. A panicked record becomes a quarantine
+/// (fault `panic`); because the panic unwound out of solver code the
+/// chain and workspace may be mid-mutation, so both are replaced
+/// wholesale and the next solve re-enters cold (the same seam a
+/// quarantined solve publishes anyway).
+fn solve_isolated(
+    cfg: &GenConfig,
+    chain: &mut Chain,
+    problem: &Problem,
+    opts: &ScsfOptions,
+    backend: &mut dyn FilterBackend,
+    ws: &mut Workspace,
+) -> Supervised {
+    faults::begin_record(problem.id);
+    if let Some(secs) = faults::take_stall_secs() {
+        // Without a watchdog a stall is just latency — sleep it off so
+        // the fault class has defined behavior in every mode.
+        std::thread::sleep(Duration::from_secs_f64(secs));
+    }
+    let out = catch_unwind(AssertUnwindSafe(|| {
+        if faults::take_panic() {
+            panic!("injected solver panic (fault plan)");
+        }
+        chain.solve_next_supervised(
+            &problem.family,
+            &problem.matrix,
+            problem.mass.as_ref(),
+            opts,
+            backend,
+            ws,
+        )
+    }));
+    match out {
+        Ok(sup) => sup,
+        Err(_) => {
+            *chain = Chain::new();
+            *ws = Workspace::new(cfg.threads.max(1));
+            Supervised::quarantined(problem.matrix.rows(), "panic", Default::default())
+        }
+    }
+}
+
+/// One supervised solve under the stall watchdog
+/// ([`GenConfig::solve_timeout_secs`]): the solve runs on a dedicated
+/// plain (non-scoped) thread with its own native filter backend and
+/// workspace — rebuilt per record, the price of the opt-in knob —
+/// while the worker waits on a rendezvous channel with a deadline.
+/// On timeout the helper thread is *abandoned* (it holds no pipeline
+/// lock and dies with the process or when its solve finally returns),
+/// the record is quarantined with fault `timeout`, and the chain
+/// restarts cold — the abandoned thread owns the old chain state.
+/// [`GenConfig::resolve`] rejects the knob under the xla backend
+/// because the runtime handle cannot cross into the helper thread.
+fn solve_with_watchdog(
+    cfg: &GenConfig,
+    chain: &mut Chain,
+    problem: &Problem,
+    opts: &ScsfOptions,
+    limit_secs: f64,
+) -> Supervised {
+    let (done_tx, done_rx) = sync_channel::<(Supervised, Chain)>(1);
+    let mut moved = std::mem::take(chain);
+    let family = problem.family.clone();
+    let matrix = problem.matrix.clone();
+    let mass = problem.mass.clone();
+    let opts = *opts;
+    let fault_plan = cfg.fault_injection.clone();
+    let kind = cfg.filter_backend;
+    let threads = cfg.threads.max(1);
+    let id = problem.id;
+    let n = matrix.rows();
+    std::thread::spawn(move || {
+        // Fault hooks are thread-local — the helper thread installs its
+        // own copy of the plan so injected faults still fire here.
+        if let Some(fp) = fault_plan {
+            faults::install(fp);
+        }
+        faults::begin_record(id);
+        if let Some(secs) = faults::take_stall_secs() {
+            std::thread::sleep(Duration::from_secs_f64(secs));
+        }
+        let mut backend: Box<dyn FilterBackend> = match kind {
+            FilterBackendKind::Csr => Box::new(NativeFilter::new()),
+            FilterBackendKind::Sell => Box::new(SellFilter::new()),
+        };
+        let mut ws = Workspace::new(threads);
+        let out = catch_unwind(AssertUnwindSafe(|| {
+            if faults::take_panic() {
+                panic!("injected solver panic (fault plan)");
+            }
+            moved.solve_next_supervised(
+                &family,
+                &matrix,
+                mass.as_ref(),
+                &opts,
+                backend.as_mut(),
+                &mut ws,
+            )
+        }));
+        let payload = match out {
+            Ok(sup) => (sup, moved),
+            Err(_) => (
+                Supervised::quarantined(n, "panic", Default::default()),
+                Chain::new(),
+            ),
+        };
+        let _ = done_tx.send(payload);
+    });
+    match done_rx.recv_timeout(Duration::from_secs_f64(limit_secs)) {
+        Ok((sup, solved)) => {
+            *chain = solved;
+            sup
+        }
+        Err(_) => {
+            *chain = Chain::new();
+            Supervised::quarantined(n, "timeout", Default::default())
         }
     }
 }
@@ -211,6 +344,10 @@ struct FamilyAccum {
     factor_secs: f64,
     solve_secs: f64,
     max_residual: f64,
+    retries: usize,
+    escalations: usize,
+    fallbacks: usize,
+    quarantined: usize,
 }
 
 /// Generate a full eigenvalue dataset per the config using the built-in
@@ -270,7 +407,10 @@ pub fn resume_dataset_with_registry(dir: &Path, registry: &FamilyRegistry) -> Re
         return Err(anyhow!(
             "dataset {} was generated with recycling \"deflate\", whose chain state \
              (the deflation basis) is not stored in records — only recycling \"off\" \
-             datasets are resumable",
+             datasets are resumable. To finish this dataset, regenerate it from \
+             scratch with the same config; for future runs that must survive \
+             interruption, set \"recycling\": \"off\" in the config (or drop the \
+             --recycling flag) before generating",
             dir.display()
         ));
     }
@@ -338,6 +478,13 @@ pub fn resume_dataset_with_registry(dir: &Path, registry: &FamilyRegistry) -> Re
                 .iter()
                 .find(|m| m.shard == r && m.id == last)
                 .expect("last completed id comes from this run's records");
+            if meta.l == 0 {
+                // The run's last checkpointed record is a quarantine:
+                // it stored no pairs and published a cold seam, so the
+                // uninterrupted process re-entered the chain cold.
+                // Seeding nothing reproduces exactly that.
+                continue;
+            }
             let rec = dataset::read_record_direct(dir, meta)?;
             seeds[r] = Some(WarmStart {
                 values: rec.values,
@@ -455,8 +602,7 @@ fn run_pipeline(
         plan_txs.push(tx);
         plan_rxs.push(rx);
     }
-    let (res_tx, res_rx) =
-        sync_channel::<(usize, usize, crate::eig::EigResult)>(cfg.channel_capacity);
+    let (res_tx, res_rx) = sync_channel::<(usize, usize, Supervised)>(cfg.channel_capacity);
 
     let shard_stats: Mutex<Vec<ShardReport>> = Mutex::new(Vec::new());
     let gen_secs_cell: Mutex<f64> = Mutex::new(0.0);
@@ -860,28 +1006,44 @@ fn run_pipeline(
                         }
                         stats.handoff_wait_secs = t0.elapsed().as_secs_f64();
                     }
+                    if let Some(fp) = &cfg.fault_injection {
+                        // Fault hooks are thread-local: each worker
+                        // installs its own copy of the plan.
+                        faults::install(fp.clone());
+                    }
                     let t_solve = Instant::now();
                     let mut writer_gone = false;
                     for problem in &plan.problems[skip..] {
-                        let r = chain.solve_next_for_mass(
-                            &problem.family,
-                            &problem.matrix,
-                            problem.mass.as_ref(),
-                            &opts,
-                            backend.as_mut(),
-                            &mut ws,
-                        );
+                        let sup = match cfg.solve_timeout_secs {
+                            Some(limit) => {
+                                solve_with_watchdog(cfg, &mut chain, problem, &opts, limit)
+                            }
+                            None => solve_isolated(
+                                cfg,
+                                &mut chain,
+                                problem,
+                                &opts,
+                                backend.as_mut(),
+                                &mut ws,
+                            ),
+                        };
+                        let st = &sup.result.stats;
                         stats.problems += 1;
-                        stats.iterations += r.stats.iterations;
-                        stats.matvecs += r.stats.matvecs;
-                        stats.filter_matvecs += r.stats.filter_matvecs;
-                        stats.f32_matvecs += r.stats.f32_matvecs;
-                        stats.promotions += r.stats.promotions;
-                        stats.deflated_cols += r.stats.deflated_cols;
-                        stats.recycle_matvecs += r.stats.recycle_matvecs;
-                        stats.trisolve_count += r.stats.trisolve_count;
-                        stats.factor_secs += r.stats.factor_secs;
-                        if res_tx.send((problem.id, plan.index, r)).is_err() {
+                        stats.iterations += st.iterations;
+                        stats.matvecs += st.matvecs;
+                        stats.filter_matvecs += st.filter_matvecs;
+                        stats.f32_matvecs += st.f32_matvecs;
+                        stats.promotions += st.promotions;
+                        stats.deflated_cols += st.deflated_cols;
+                        stats.recycle_matvecs += st.recycle_matvecs;
+                        stats.trisolve_count += st.trisolve_count;
+                        stats.factor_secs += st.factor_secs;
+                        stats.retries += st.retries;
+                        stats.escalations += st.escalations;
+                        stats.fallbacks += usize::from(st.fallback);
+                        stats.quarantined +=
+                            usize::from(sup.status == SolveStatus::Quarantined);
+                        if res_tx.send((problem.id, plan.index, sup)).is_err() {
                             writer_gone = true;
                             break;
                         }
@@ -951,6 +1113,11 @@ fn run_pipeline(
             let mut all_converged = true;
             let mut count = 0usize;
             let mut resumed = 0usize;
+            let mut retries_sum = 0usize;
+            let mut escalation_sum = 0usize;
+            let mut fallback_sum = 0usize;
+            let mut quarantined_sum = 0usize;
+            let mut faults_map: BTreeMap<String, usize> = BTreeMap::new();
             let mut fam_accum: Vec<FamilyAccum> = vec![FamilyAccum::default(); resolved.len()];
             if let Some(ri) = resume_ref {
                 // Fold the checkpoint-covered records back into the
@@ -969,6 +1136,13 @@ fn run_pipeline(
                     recycle_matvec_sum += r.recycle_matvecs;
                     trisolve_sum += r.trisolve_count;
                     factor_secs_sum += r.factor_secs;
+                    retries_sum += r.retries;
+                    escalation_sum += r.escalations;
+                    fallback_sum += usize::from(r.fallback);
+                    quarantined_sum += usize::from(r.status == SolveStatus::Quarantined);
+                    if !r.fault.is_empty() {
+                        *faults_map.entry(r.fault.clone()).or_insert(0) += 1;
+                    }
                     let acc = &mut fam_accum[spec_of(resolved, r.id)];
                     acc.problems += 1;
                     acc.iterations += r.iterations;
@@ -982,11 +1156,29 @@ fn run_pipeline(
                     acc.factor_secs += r.factor_secs;
                     acc.solve_secs += r.secs;
                     acc.max_residual = acc.max_residual.max(r.max_residual);
+                    acc.retries += r.retries;
+                    acc.escalations += r.escalations;
+                    acc.fallbacks += usize::from(r.fallback);
+                    acc.quarantined += usize::from(r.status == SolveStatus::Quarantined);
                 }
                 resumed = ri.completed.len();
                 count = resumed;
             }
-            for (id, run, result) in res_rx.iter() {
+            for (id, run, mut sup) in res_rx.iter() {
+                // Defense in depth: nothing non-finite is ever written.
+                // The escalation ladder already quarantines NaN/Inf
+                // outcomes at the solver; this guard catches anything
+                // that slips past it (fault `numeric`).
+                if sup.status != SolveStatus::Quarantined {
+                    let finite = sup.result.values.iter().all(|v| v.is_finite())
+                        && sup.result.residuals.iter().all(|v| v.is_finite())
+                        && sup.result.vectors.data().iter().all(|v| v.is_finite());
+                    if !finite {
+                        let dim = sup.result.vectors.rows();
+                        sup = Supervised::quarantined(dim, "numeric", sup.result.stats.clone());
+                    }
+                }
+                let result = &sup.result;
                 // Validation stage: every stored pair re-checked against
                 // the tolerance (the dataset-reliability guarantee of
                 // paper §E.5).
@@ -1005,6 +1197,13 @@ fn run_pipeline(
                 recycle_matvec_sum += result.stats.recycle_matvecs;
                 trisolve_sum += result.stats.trisolve_count;
                 factor_secs_sum += result.stats.factor_secs;
+                retries_sum += result.stats.retries;
+                escalation_sum += result.stats.escalations;
+                fallback_sum += usize::from(result.stats.fallback);
+                quarantined_sum += usize::from(sup.status == SolveStatus::Quarantined);
+                if !sup.fault.is_empty() {
+                    *faults_map.entry(sup.fault.clone()).or_insert(0) += 1;
+                }
                 crate::eig::merge_degree_hist(&mut degree_hist, &result.stats.degree_hist);
                 let spec = spec_of(resolved, id);
                 let acc = &mut fam_accum[spec];
@@ -1020,10 +1219,21 @@ fn run_pipeline(
                 acc.factor_secs += result.stats.factor_secs;
                 acc.solve_secs += result.stats.secs;
                 acc.max_residual = acc.max_residual.max(worst);
+                acc.retries += result.stats.retries;
+                acc.escalations += result.stats.escalations;
+                acc.fallbacks += usize::from(result.stats.fallback);
+                acc.quarantined += usize::from(sup.status == SolveStatus::Quarantined);
                 if let Ok(writer) = writer_res.as_mut() {
                     if write_err.is_none() {
                         let t_write = Instant::now();
-                        match writer.write_record(id, run, &resolved[spec].name, &result) {
+                        match writer.write_record_with(
+                            id,
+                            run,
+                            &resolved[spec].name,
+                            result,
+                            sup.status,
+                            &sup.fault,
+                        ) {
                             Ok(()) => count += 1,
                             Err(e) => write_err = Some(e),
                         }
@@ -1059,6 +1269,11 @@ fn run_pipeline(
             report.recycle_matvecs = recycle_matvec_sum;
             report.trisolve_count = trisolve_sum;
             report.factor_secs = factor_secs_sum;
+            report.retries = retries_sum;
+            report.escalations = escalation_sum;
+            report.fallbacks = fallback_sum;
+            report.quarantined = quarantined_sum;
+            report.faults = faults_map;
             report.degree_hist = degree_hist;
             Ok((writer, write_secs, count, resumed, fam_accum))
         });
@@ -1106,6 +1321,10 @@ fn run_pipeline(
                 recycle_matvecs: acc.recycle_matvecs,
                 trisolve_count: acc.trisolve_count,
                 factor_secs: acc.factor_secs,
+                retries: acc.retries,
+                escalations: acc.escalations,
+                fallbacks: acc.fallbacks,
+                quarantined: acc.quarantined,
                 avg_iterations: acc.iterations as f64 / acc.problems.max(1) as f64,
                 solve_secs: acc.solve_secs,
                 max_residual: acc.max_residual,
@@ -1763,7 +1982,128 @@ mod tests {
         std::fs::write(&manifest, &bytes[..bytes.len() * 3 / 5]).unwrap();
         let err = resume_dataset(&d_defl).unwrap_err().to_string();
         assert!(err.contains("recycling"), "{err}");
+        // The rejection is actionable: it names the config key setting
+        // that makes a dataset resumable and how to finish this one.
+        assert!(err.contains("\"recycling\": \"off\""), "{err}");
+        assert!(err.contains("regenerate"), "{err}");
+        assert!(err.contains("--recycling"), "{err}");
         let _ = std::fs::remove_dir_all(&d_defl);
+    }
+
+    #[test]
+    fn injected_panic_quarantines_one_record_and_completes_the_run() {
+        use crate::testing::faults::{Fault, FaultPlan};
+        let dir = tmpdir("fault_panic");
+        let mut cfg = small_cfg();
+        cfg.fault_injection = Some(FaultPlan::single(3, Fault::Panic));
+        let report = generate_dataset(&cfg, &dir).unwrap();
+        assert_eq!(report.quarantined, 1);
+        assert_eq!(report.faults.get("panic"), Some(&1));
+        assert!(!report.all_converged);
+        let fam_quar: usize = report.families.iter().map(|f| f.quarantined).sum();
+        assert_eq!(fam_quar, 1);
+        let shard_quar: usize = report.shards.iter().map(|s| s.quarantined).sum();
+        assert_eq!(shard_quar, 1);
+        let mut reader = DatasetReader::open(&dir).unwrap();
+        assert_eq!(reader.index().len(), 6);
+        let meta = reader.index().iter().find(|r| r.id == 3).unwrap().clone();
+        assert_eq!(meta.status, crate::eig::scsf::SolveStatus::Quarantined);
+        assert_eq!(meta.fault, "panic");
+        assert_eq!(meta.l, 0);
+        // Every other record solved normally and validates against
+        // dense references — the panic poisoned exactly one record.
+        let problems = generate_problems(&cfg);
+        for p in problems.iter().filter(|p| p.id != 3) {
+            let rec = reader.read(p.id).unwrap();
+            let want = sym_eig(&p.matrix.to_dense());
+            for (got, w) in rec.values.iter().zip(&want.values[..cfg.n_eigs]) {
+                assert!((got - w).abs() / w.abs().max(1.0) < 1e-6);
+            }
+        }
+        for rec in reader.index().iter().filter(|r| r.id != 3) {
+            assert_eq!(rec.status, crate::eig::scsf::SolveStatus::Ok, "id {}", rec.id);
+            assert!(rec.fault.is_empty(), "id {}", rec.id);
+            assert!(rec.l > 0, "id {}", rec.id);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn watchdog_times_out_a_stalled_record() {
+        use crate::testing::faults::{Fault, FaultPlan};
+        let dir = tmpdir("fault_stall");
+        let mut cfg = small_cfg();
+        cfg.solve_timeout_secs = Some(2.0);
+        cfg.fault_injection = Some(FaultPlan::single(2, Fault::Stall { secs: 30.0 }));
+        let report = generate_dataset(&cfg, &dir).unwrap();
+        assert_eq!(report.quarantined, 1);
+        assert_eq!(report.faults.get("timeout"), Some(&1));
+        let reader = DatasetReader::open(&dir).unwrap();
+        assert_eq!(reader.index().len(), 6);
+        let meta = reader.index().iter().find(|r| r.id == 2).unwrap();
+        assert_eq!(meta.status, crate::eig::scsf::SolveStatus::Quarantined);
+        assert_eq!(meta.fault, "timeout");
+        assert_eq!(meta.l, 0);
+        // The non-stalled records all solved under the watchdog.
+        for rec in reader.index().iter().filter(|r| r.id != 2) {
+            assert_eq!(rec.status, crate::eig::scsf::SolveStatus::Ok, "id {}", rec.id);
+            assert!(rec.l > 0, "id {}", rec.id);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn nonconvergence_fault_climbs_the_ladder_and_marks_retried() {
+        use crate::testing::faults::{Fault, FaultPlan};
+        let dir = tmpdir("fault_retry");
+        let mut cfg = small_cfg();
+        cfg.fault_injection = Some(FaultPlan::single(1, Fault::NonConvergence { times: 1 }));
+        let report = generate_dataset(&cfg, &dir).unwrap();
+        // One forced failure, then the first ladder rung converges: the
+        // record is retried, not quarantined, and the dataset is whole.
+        assert_eq!(report.quarantined, 0, "{:?}", report.faults);
+        assert!(report.retries >= 1, "{report:?}");
+        assert!(report.escalations >= 1, "{report:?}");
+        assert!(report.all_converged, "{report:?}");
+        let mut reader = DatasetReader::open(&dir).unwrap();
+        let meta = reader.index().iter().find(|r| r.id == 1).unwrap().clone();
+        assert_eq!(meta.status, crate::eig::scsf::SolveStatus::Retried);
+        assert!(meta.retries >= 1);
+        assert!(meta.l > 0);
+        // The escalated solve still matches the dense reference.
+        let problems = generate_problems(&cfg);
+        let p = &problems[1];
+        let rec = reader.read(1).unwrap();
+        let want = sym_eig(&p.matrix.to_dense());
+        for (got, w) in rec.values.iter().zip(&want.values[..cfg.n_eigs]) {
+            assert!((got - w).abs() / w.abs().max(1.0) < 1e-6, "{got} vs {w}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn supervised_defaults_leave_manifest_and_report_clean() {
+        let dir = tmpdir("fault_clean");
+        let cfg = small_cfg();
+        let report = generate_dataset(&cfg, &dir).unwrap();
+        assert_eq!(
+            report.retries + report.escalations + report.fallbacks + report.quarantined,
+            0
+        );
+        assert!(report.faults.is_empty());
+        let text = std::fs::read_to_string(dir.join("manifest.json")).unwrap();
+        for key in [
+            "\"status\"",
+            "\"fault\"",
+            "\"faults\"",
+            "\"retries\"",
+            "\"escalations\"",
+            "\"fallback\"",
+            "\"quarantined\"",
+        ] {
+            assert!(!text.contains(key), "clean manifest leaked {key}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

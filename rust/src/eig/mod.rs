@@ -179,6 +179,17 @@ pub struct SolveStats {
     /// Triangular-substitution passes through the LDLᵀ factors
     /// (generalized / shift-invert solves only; 0 otherwise).
     pub trisolve_count: usize,
+    /// Solve attempts beyond the first charged by the supervision
+    /// ladder ([`scsf::Chain::solve_next_supervised`]); 0 on the
+    /// historical single-attempt path.
+    pub retries: usize,
+    /// Escalation-ladder rungs climbed (degree/guard bump, cold
+    /// restart); a subset-equal companion of `retries` under
+    /// `escalation: ladder`.
+    pub escalations: usize,
+    /// Whether the accepted pairs came from the dense `sym_eig`
+    /// fallback rung (small-n last resort of the escalation ladder).
+    pub fallback: bool,
 }
 
 /// Result of one eigensolve.

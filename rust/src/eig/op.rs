@@ -177,6 +177,7 @@ pub struct SpectralOp<'a> {
     mass: Option<&'a CsrMatrix>,
     mode: Mode,
     factor_secs: f64,
+    recovered: bool,
     trisolves: Cell<usize>,
     scratch: RefCell<OpScratch>,
 }
@@ -190,6 +191,7 @@ impl<'a> SpectralOp<'a> {
             mass: None,
             mode: Mode::Plain,
             factor_secs: 0.0,
+            recovered: false,
             trisolves: Cell::new(0),
             scratch: RefCell::new(OpScratch::default()),
         }
@@ -209,11 +211,13 @@ impl<'a> SpectralOp<'a> {
             return Ok(Self::standard(a));
         }
         let t0 = Instant::now();
+        let mut recovered = false;
         let mode = match (problem, transform) {
             (ProblemKind::Standard, Transform::None) => unreachable!(),
             (ProblemKind::Standard, Transform::ShiftInvert { sigma }) => {
-                let k = LdltFactor::factor(&a.shift(-sigma))
+                let (k, rec) = LdltFactor::factor_with_recovery(&a.shift(-sigma))
                     .map_err(|e| format!("shift_invert factorization failed: {e}"))?;
+                recovered |= rec;
                 Mode::ShiftStd { k, sigma }
             }
             (ProblemKind::Generalized, transform) => {
@@ -228,8 +232,10 @@ impl<'a> SpectralOp<'a> {
                 match transform {
                     Transform::None => Mode::Gen { w },
                     Transform::ShiftInvert { sigma } => {
-                        let k = LdltFactor::factor(&a.add_scaled(-sigma, m))
-                            .map_err(|e| format!("shift_invert factorization failed: {e}"))?;
+                        let (k, rec) =
+                            LdltFactor::factor_with_recovery(&a.add_scaled(-sigma, m))
+                                .map_err(|e| format!("shift_invert factorization failed: {e}"))?;
+                        recovered |= rec;
                         Mode::ShiftGen { w, k, sigma }
                     }
                 }
@@ -244,6 +250,7 @@ impl<'a> SpectralOp<'a> {
             },
             mode,
             factor_secs: t0.elapsed().as_secs_f64(),
+            recovered,
             trisolves: Cell::new(0),
             scratch: RefCell::new(OpScratch::default()),
         })
@@ -294,6 +301,14 @@ impl<'a> SpectralOp<'a> {
     /// Wall-clock seconds spent factoring (0 for the plain operator).
     pub fn factor_secs(&self) -> f64 {
         self.factor_secs
+    }
+
+    /// True when a shift-invert factorization only succeeded after the
+    /// bounded diagonal-perturbation retry
+    /// ([`LdltFactor::factor_with_recovery`]) — the supervision layer
+    /// marks such records `status: retried` with fault `factorization`.
+    pub fn recovered(&self) -> bool {
+        self.recovered
     }
 
     /// Drain the triangular-solve counter (each forward or backward

@@ -7,10 +7,10 @@
 //! problem (no warm start at all) is the plain ChFSI baseline.
 
 use super::chebyshev::{self, FilterBackend};
-use super::chfsi::{self, ChfsiOptions, Recycling};
+use super::chfsi::{self, ChfsiOptions, Escalation, Recycling};
 use super::op::{OpTag, SpectralOp};
 use super::solver::Workspace;
-use super::{EigResult, RecycleSpace, WarmStart};
+use super::{EigResult, RecycleSpace, SolveStats, WarmStart};
 use crate::linalg::symeig::sym_eig;
 use crate::linalg::Mat;
 use crate::operators::Problem;
@@ -38,6 +38,108 @@ impl ScsfOptions {
             warm_start: true,
         }
     }
+}
+
+/// Health of one supervised record — what the dataset manifest's
+/// `status` field carries (absent ⇔ `Ok`, the overwhelmingly common
+/// case).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SolveStatus {
+    /// First attempt converged with finite pairs — the historical path.
+    #[default]
+    Ok,
+    /// The record holds validated pairs, but the escalation ladder had
+    /// to retry / fall back / degrade the transform to get them.
+    Retried,
+    /// No rung produced acceptable pairs (or the worker panicked /
+    /// timed out): the record carries no eigenpairs (`l = 0`), only its
+    /// identity and a `fault` class, and the warm chain restarts cold
+    /// after it.
+    Quarantined,
+}
+
+impl SolveStatus {
+    /// Manifest/CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            SolveStatus::Ok => "ok",
+            SolveStatus::Retried => "retried",
+            SolveStatus::Quarantined => "quarantined",
+        }
+    }
+
+    /// Parse a manifest/CLI name.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "ok" => Some(SolveStatus::Ok),
+            "retried" => Some(SolveStatus::Retried),
+            "quarantined" => Some(SolveStatus::Quarantined),
+            _ => None,
+        }
+    }
+}
+
+/// Outcome of a supervised chain solve
+/// ([`Chain::solve_next_supervised`]): the (possibly best-effort empty)
+/// result plus the record health and fault class the manifest stores.
+#[derive(Debug)]
+pub struct Supervised {
+    /// The accepted eigenpairs — empty (`vectors` is `n×0`) when
+    /// `status` is [`SolveStatus::Quarantined`].
+    pub result: EigResult,
+    /// Record health.
+    pub status: SolveStatus,
+    /// Fault class (`""` when none): `nonconvergence`, `numeric`,
+    /// `factorization` — the pipeline adds `panic` and `timeout`.
+    pub fault: String,
+}
+
+impl Supervised {
+    /// A quarantine outcome for an `n`-dimensional problem: no pairs,
+    /// the given fault class, and whatever stats the failed attempts
+    /// accumulated.
+    pub fn quarantined(n: usize, fault: &str, mut stats: SolveStats) -> Self {
+        stats.converged = false;
+        Self {
+            result: EigResult {
+                values: Vec::new(),
+                vectors: Mat::zeros(n, 0),
+                residuals: Vec::new(),
+                stats,
+            },
+            status: SolveStatus::Quarantined,
+            fault: fault.to_string(),
+        }
+    }
+}
+
+/// Largest `n` the escalation ladder's dense `sym_eig` fallback rung
+/// accepts — an O(n³) last resort that must never fire on problems
+/// where it would dwarf the iterative solve budget.
+const DENSE_FALLBACK_MAX_N: usize = 2048;
+
+/// Fold a failed attempt's counters into an accumulator so the accepted
+/// (or quarantined) record prices the *whole* supervised solve, keeping
+/// the `Σ degree·count == filter_matvecs` histogram invariant across
+/// retries.
+fn absorb_stats(into: &mut SolveStats, other: &SolveStats) {
+    into.iterations += other.iterations;
+    into.matvecs += other.matvecs;
+    into.filter_matvecs += other.filter_matvecs;
+    into.f32_matvecs += other.f32_matvecs;
+    into.promotions += other.promotions;
+    into.deflated_cols += other.deflated_cols;
+    into.recycle_matvecs += other.recycle_matvecs;
+    super::merge_degree_hist(&mut into.degree_hist, &other.degree_hist);
+    into.flops += other.flops;
+    into.filter_flops += other.filter_flops;
+    into.secs += other.secs;
+    into.filter_secs += other.filter_secs;
+    into.qr_secs += other.qr_secs;
+    into.rr_secs += other.rr_secs;
+    into.resid_secs += other.resid_secs;
+    into.factor_secs += other.factor_secs;
+    into.trisolve_count += other.trisolve_count;
 }
 
 /// Result of a sequence solve.
@@ -407,11 +509,7 @@ impl Chain {
     ) -> EigResult {
         let op = SpectralOp::build(a, mass, opts.chfsi.problem, opts.chfsi.transform)
             .unwrap_or_else(|e| panic!("operator construction failed: {e}"));
-        if self.warm.is_some() && self.tag.is_some_and(|t| t != op.tag()) {
-            self.warm = None;
-            self.family_resets += 1;
-        }
-        self.tag = Some(op.tag());
+        self.align_tag(&op);
         let cold = self.next_is_cold(opts);
         if cold {
             self.cold_starts += 1;
@@ -420,14 +518,32 @@ impl Chain {
         }
         let init = if cold { None } else { self.warm.as_ref() };
         let mut r = chfsi::solve_op_in(&op, &opts.chfsi, init, backend, ws);
+        self.commit_warm(&mut r, a, opts);
+        r
+    }
+
+    /// Drop the carried subspace if it was solved under a different
+    /// operator mode than `op`, then record `op`'s tag — the basis lives
+    /// in mode-specific coordinates and must not leak across a
+    /// transform boundary.
+    fn align_tag(&mut self, op: &SpectralOp) {
+        if self.warm.is_some() && self.tag.is_some_and(|t| t != op.tag()) {
+            self.warm = None;
+            self.family_resets += 1;
+        }
+        self.tag = Some(op.tag());
+    }
+
+    /// Capture `r`'s eigenpairs as the next solve's warm start (when
+    /// `opts.warm_start`). Under `recycling: deflate` the chain also
+    /// carries the recycle space forward: fold this solve's pairs in,
+    /// compress via thick restart when it overflows `recycle_dim`, and
+    /// charge the compression matvecs to this solve's counters.
+    fn commit_warm(&mut self, r: &mut EigResult, a: &CsrMatrix, opts: &ScsfOptions) {
         if opts.warm_start {
-            // Under `recycling: deflate` the chain also carries the
-            // recycle space forward: fold this solve's pairs in, compress
-            // via thick restart when it overflows `recycle_dim`, and
-            // charge the compression matvecs to this solve's counters.
             let recycle = if opts.chfsi.recycling == Recycling::Deflate {
                 let prev = self.warm.take().and_then(|w| w.recycle);
-                let (space, extra) = update_recycle_space(prev, &r, a, &opts.chfsi);
+                let (space, extra) = update_recycle_space(prev, r, a, &opts.chfsi);
                 r.stats.matvecs += extra;
                 r.stats.recycle_matvecs += extra;
                 space
@@ -438,7 +554,234 @@ impl Chain {
             next.recycle = recycle;
             self.warm = Some(next);
         }
-        r
+    }
+
+    /// [`Chain::solve_next_for_mass`] under the solve supervision layer:
+    /// instead of panicking on operator-construction failure or
+    /// returning unconverged pairs, every problem ends in a structured
+    /// [`Supervised`] outcome.
+    ///
+    /// On a clean, converging solve this is bit-for-bit the historical
+    /// path (the first attempt *is* `solve_next_for_mass`'s solve).
+    /// Otherwise, under `escalation: ladder`:
+    ///
+    /// 1. **Retry rungs** (`max_retries` of them): degree/guard bump
+    ///    keeping the warm start, then a cold restart with a bigger
+    ///    bump and a reseeded random block.
+    /// 2. **Dense fallback**: plain operators with
+    ///    `n ≤ 2048` fall back to [`sym_eig`].
+    /// 3. **Factorization degrade**: if the shift-inverted operator
+    ///    cannot be factored (σ on the pencil spectrum), the record is
+    ///    solved on the extremal (untransformed) path instead, with
+    ///    `fault: factorization`.
+    /// 4. **Quarantine**: anything still failing (or non-finite) yields
+    ///    an empty record with a fault class, and the chain restarts
+    ///    cold — downstream solves and seam handoffs proceed.
+    ///
+    /// Failed attempts' work is absorbed into the final record's
+    /// [`SolveStats`], with the ladder charged to
+    /// `retries`/`escalations`/`fallback`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn solve_next_supervised(
+        &mut self,
+        family: &std::sync::Arc<str>,
+        a: &crate::sparse::CsrMatrix,
+        mass: Option<&crate::sparse::CsrMatrix>,
+        opts: &ScsfOptions,
+        backend: &mut dyn FilterBackend,
+        ws: &mut Workspace,
+    ) -> Supervised {
+        // Family/dimension reset — same policy as solve_next_for_mass.
+        let family_changed = self
+            .family
+            .as_ref()
+            .is_some_and(|prev| prev.as_ref() != family.as_ref());
+        let dim_changed = self
+            .warm
+            .as_ref()
+            .is_some_and(|w| w.vectors.rows() != a.rows());
+        if self.warm.is_some() && (family_changed || dim_changed) {
+            self.warm = None;
+            self.family_resets += 1;
+        }
+        self.family = Some(family.clone());
+
+        let chf = opts.chfsi;
+        // Operator construction is fallible here: an LDLᵀ breakdown of
+        // `A − σM` degrades this record to the extremal path (the chain
+        // keeps carrying its shift-invert subspace for later records);
+        // a mass-factorization failure has no degraded form and
+        // quarantines outright.
+        let (op, degraded) = match SpectralOp::build(a, mass, chf.problem, chf.transform) {
+            Ok(op) => (op, false),
+            Err(_) if !chf.transform.is_none() => {
+                match SpectralOp::build(a, mass, chf.problem, super::op::Transform::None) {
+                    Ok(op) => (op, true),
+                    Err(_) => {
+                        self.warm = None;
+                        return Supervised::quarantined(
+                            a.rows(),
+                            "factorization",
+                            SolveStats::default(),
+                        );
+                    }
+                }
+            }
+            Err(_) => {
+                self.warm = None;
+                return Supervised::quarantined(a.rows(), "factorization", SolveStats::default());
+            }
+        };
+        // A perturbed-refactor recovery kept the shift-invert operator
+        // usable but not pristine — surface it as a retried record.
+        let recovered = op.recovered();
+        if !degraded {
+            self.align_tag(&op);
+        }
+        let cold = degraded || self.next_is_cold(opts);
+        if cold {
+            self.cold_starts += 1;
+        } else {
+            self.warm_solves += 1;
+        }
+
+        let ladder = chf.escalation == Escalation::Ladder;
+        let budget = if ladder { chf.max_retries } else { 0 };
+        let g0 = chf.block_width(op.n()).saturating_sub(chf.eig.n_eigs);
+        let mut attempt = chf;
+        let mut use_warm = !cold;
+        let mut retries = 0usize;
+        let mut escalations = 0usize;
+        let mut spent = SolveStats::default();
+        let mut last_numeric = false;
+        let mut accepted: Option<EigResult> = None;
+        let mut last_failed: Option<EigResult> = None;
+        loop {
+            let init = if use_warm { self.warm.as_ref() } else { None };
+            let r = chfsi::solve_op_in(&op, &attempt, init, backend, ws);
+            let finite = r.values.iter().all(|v| v.is_finite())
+                && r.residuals.iter().all(|v| v.is_finite());
+            if r.stats.converged && finite {
+                accepted = Some(r);
+                break;
+            }
+            last_numeric = !finite;
+            if retries >= budget {
+                last_failed = Some(r);
+                break;
+            }
+            absorb_stats(&mut spent, &r.stats);
+            retries += 1;
+            escalations += 1;
+            if retries == 1 {
+                // Rung 1: more filter degree and a wider guard block,
+                // warm start kept — the cheap fix for a too-shallow
+                // filter or a cluster straddling the block edge.
+                attempt.degree = chf.degree + (chf.degree / 2).max(4);
+                attempt.guard = Some(g0 + 4);
+            } else {
+                // Rung 2+: the inherited subspace may itself be the
+                // problem — discard it and cold-restart from a reseeded
+                // random block with a still-bigger bump.
+                use_warm = false;
+                attempt.degree = chf.degree * 2;
+                attempt.guard = Some(g0 + 8);
+                attempt.eig.seed = chf
+                    .eig
+                    .seed
+                    .wrapping_add(0x9e37_79b9_7f4a_7c15u64.wrapping_mul(retries as u64));
+            }
+        }
+
+        // Last rung: dense fallback for small plain operators.
+        let mut fallback = false;
+        if accepted.is_none() && ladder && op.is_plain() && op.n() <= DENSE_FALLBACK_MAX_N {
+            if let Some(r) = last_failed.take() {
+                absorb_stats(&mut spent, &r.stats);
+            }
+            retries += 1;
+            escalations += 1;
+            let t0 = std::time::Instant::now();
+            let dense = sym_eig(&a.to_dense());
+            let l = chf.eig.n_eigs.min(dense.values.len());
+            let values = dense.values[..l].to_vec();
+            let vectors = dense.vectors.cols_range(0, l);
+            let stats = SolveStats {
+                secs: t0.elapsed().as_secs_f64(),
+                ..SolveStats::default()
+            };
+            let r = EigResult::finalize(a, values, vectors, stats, chf.eig.tol);
+            let finite = r.values.iter().all(|v| v.is_finite())
+                && r.residuals.iter().all(|v| v.is_finite());
+            if r.stats.converged && finite {
+                fallback = true;
+                accepted = Some(r);
+            } else {
+                last_numeric = !finite;
+                last_failed = Some(r);
+            }
+        }
+
+        match accepted {
+            Some(mut r) => {
+                absorb_stats(&mut r.stats, &spent);
+                r.stats.retries = retries;
+                r.stats.escalations = escalations;
+                r.stats.fallback = fallback;
+                if !degraded {
+                    self.commit_warm(&mut r, a, opts);
+                }
+                let status = if retries > 0 || degraded || recovered {
+                    SolveStatus::Retried
+                } else {
+                    SolveStatus::Ok
+                };
+                Supervised {
+                    result: r,
+                    status,
+                    fault: if degraded || recovered {
+                        "factorization".into()
+                    } else {
+                        String::new()
+                    },
+                }
+            }
+            None => {
+                if !ladder && !last_numeric {
+                    // escalation: off — historical behavior: the
+                    // best-effort unconverged pairs are the record
+                    // (finalize already set `converged = false`); only
+                    // the NaN/Inf guard quarantines.
+                    let mut r = last_failed.expect("a zero-budget loop records its attempt");
+                    if !degraded {
+                        self.commit_warm(&mut r, a, opts);
+                    }
+                    let status = if degraded || recovered {
+                        SolveStatus::Retried
+                    } else {
+                        SolveStatus::Ok
+                    };
+                    return Supervised {
+                        result: r,
+                        status,
+                        fault: if degraded || recovered {
+                            "factorization".into()
+                        } else {
+                            String::new()
+                        },
+                    };
+                }
+                // Every rung failed: quarantine the record and publish
+                // a cold seam so downstream solves are unperturbed.
+                let mut stats = last_failed.map(|r| r.stats).unwrap_or_default();
+                absorb_stats(&mut stats, &spent);
+                stats.retries = retries;
+                stats.escalations = escalations;
+                self.warm = None;
+                let fault = if last_numeric { "numeric" } else { "nonconvergence" };
+                Supervised::quarantined(a.rows(), fault, stats)
+            }
+        }
     }
 
     /// The chain's tail eigenpairs — what a boundary handoff publishes

@@ -13,6 +13,8 @@
 //!               [--recycling off|deflate]
 //!               [--problem standard|generalized]
 //!               [--transform none|shift_invert:SIGMA]
+//!               [--escalation off|ladder] [--max-retries N]
+//!               [--solve-timeout-secs T]                # stall watchdog
 //!               [--chunk-records N]                     # checkpointed v3 store
 //!               [--backend native|xla] [--artifacts DIR] --out DIR
 //! scsf generate --resume DIR     # continue an interrupted chunked run
@@ -45,6 +47,7 @@ use scsf::coordinator::config::{Backend, FamilySpec, GenConfig};
 use scsf::coordinator::dataset::DatasetReader;
 use scsf::coordinator::metrics::GenReport;
 use scsf::coordinator::pipeline::{generate_dataset, resume_dataset};
+use scsf::eig::scsf::SolveStatus;
 use scsf::operators::FamilyRegistry;
 use scsf::sort::SortMethod;
 use scsf::util::error::Result;
@@ -211,6 +214,22 @@ fn print_help() {
          \x20              trisolve_count). Native backend only; not\n\
          \x20              combinable with mixed precision or deflation\n\
          \n\
+         fault supervision (--escalation off|ladder, --max-retries N,\n\
+         \x20                  --solve-timeout-secs T):\n\
+         \x20 ladder    non-converged solves retry with escalated filter\n\
+         \x20           parameters, then a cold restart, then a dense\n\
+         \x20           fallback for small problems (default; clean runs\n\
+         \x20           stay bit-for-bit the historical output). Records\n\
+         \x20           that exhaust the ladder — or panic, or time out\n\
+         \x20           under the watchdog — are quarantined: stored with\n\
+         \x20           no eigenpairs, a status and a fault class in the\n\
+         \x20           manifest, never silently dropped\n\
+         \x20 off       single attempt per record; non-converged results\n\
+         \x20           are stored best-effort (the historical behavior)\n\
+         \x20 --solve-timeout-secs T   watchdog: abandon any single solve\n\
+         \x20           after T seconds and quarantine just that record\n\
+         \x20           (fault 'timeout'); native backend only\n\
+         \n\
          streaming store (--chunk-records N / --resume DIR):\n\
          \x20 default   legacy one-shot manifest, bit-for-bit the\n\
          \x20           historical output\n\
@@ -349,6 +368,19 @@ fn cmd_generate(args: &Args) -> Result<()> {
         cfg.recycling = scsf::eig::chfsi::Recycling::parse(s)
             .ok_or_else(|| anyhow!("unknown recycling {s} (off|deflate)"))?;
     }
+    if let Some(s) = args.get("escalation") {
+        cfg.escalation = scsf::eig::chfsi::Escalation::parse(s)
+            .ok_or_else(|| anyhow!("unknown escalation {s} (off|ladder)"))?;
+    }
+    if let Some(x) = args.get_usize("max-retries")? {
+        cfg.max_retries = x;
+    }
+    if let Some(t) = args.get_f64("solve-timeout-secs")? {
+        if !t.is_finite() || t <= 0.0 {
+            bail!("--solve-timeout-secs must be a finite value > 0");
+        }
+        cfg.solve_timeout_secs = Some(t);
+    }
     if let Some(s) = args.get("problem") {
         cfg.problem = scsf::eig::op::ProblemKind::parse(s)
             .ok_or_else(|| anyhow!("unknown problem {s} (standard|generalized)"))?;
@@ -454,6 +486,21 @@ fn print_report(report: &GenReport, out: &str) {
                 f.trisolve_count, f.factor_secs
             );
         }
+        if f.retries > 0 || f.escalations > 0 || f.fallbacks > 0 || f.quarantined > 0 {
+            println!(
+                "    supervision: {} retries, {} escalations, {} dense fallbacks, \
+                 {} quarantined",
+                f.retries, f.escalations, f.fallbacks, f.quarantined
+            );
+        }
+    }
+    if !report.faults.is_empty() {
+        let classes: Vec<String> = report
+            .faults
+            .iter()
+            .map(|(class, count)| format!("{class}: {count}"))
+            .collect();
+        println!("faults: {}", classes.join(", "));
     }
     println!("dataset written to {out}");
 }
@@ -639,6 +686,32 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             );
         }
     }
+    // Supervision outcomes: quarantined records hold no eigenpairs and
+    // make `inspect` exit nonzero below — a dataset with holes must
+    // not look healthy to scripts.
+    let quarantined: Vec<_> = index
+        .iter()
+        .filter(|r| r.status == SolveStatus::Quarantined)
+        .collect();
+    let retried = index
+        .iter()
+        .filter(|r| r.status == SolveStatus::Retried)
+        .count();
+    if retried > 0 {
+        println!("{retried} records retried by the escalation ladder");
+    }
+    if !quarantined.is_empty() {
+        println!("QUARANTINED {}", quarantined.len());
+        for r in &quarantined {
+            println!(
+                "  record {} (family {}, run {}): fault {}",
+                r.id,
+                if r.family.is_empty() { "?" } else { &r.family },
+                r.shard,
+                if r.fault.is_empty() { "unknown" } else { &r.fault }
+            );
+        }
+    }
     // Spot check: first record's smallest eigenvalues.
     if let Some(first) = index.first() {
         let rec = reader.read(first.id)?;
@@ -646,6 +719,22 @@ fn cmd_inspect(args: &Args) -> Result<()> {
             "record {}: λ₁..λ₃ = {:?}",
             first.id,
             &rec.values[..rec.values.len().min(3)]
+        );
+    }
+    // Exit nonzero after printing every diagnostic: scripts gating on
+    // `scsf inspect` must not mistake a torn or hole-riddled dataset
+    // for a healthy one.
+    if reader.layout().is_some_and(|l| !l.complete) {
+        bail!(
+            "dataset {dir} is incomplete (manifest footer missing) — continue it \
+             with `scsf generate --resume {dir}`"
+        );
+    }
+    if !quarantined.is_empty() {
+        bail!(
+            "dataset {dir} contains {} quarantined record(s) with no eigenpairs \
+             (listed above)",
+            quarantined.len()
         );
     }
     Ok(())

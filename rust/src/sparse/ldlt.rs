@@ -52,7 +52,42 @@ impl LdltFactor {
     /// for shift-invert that means σ is (numerically) on the pencil
     /// spectrum and the caller should perturb it.
     pub fn factor(m: &CsrMatrix) -> Result<Self, String> {
+        // Test-only fault injection (a thread-local Option check — free
+        // when no injector is installed): forces the pivot-breakdown
+        // recovery/degrade paths without crafting a singular pencil.
+        if crate::testing::faults::take_pivot_breakdown() {
+            return Err("LDLT breakdown injected by the fault plan (pivot fault)".to_string());
+        }
         Self::factor_impl(m, false)
+    }
+
+    /// [`LdltFactor::factor`] with bounded-perturbation recovery: on a
+    /// pivot breakdown (σ numerically on the pencil spectrum), nudge the
+    /// whole diagonal by `τ = 10⁻¹⁰·max|diag|` — spectrally a shift of σ
+    /// by τ, far below solver tolerance — and refactor once. Returns the
+    /// factor plus whether the recovery fired; the original breakdown
+    /// error survives if the perturbed factorization also breaks down.
+    /// `factor` itself stays strict so callers that *want* breakdown
+    /// reporting (and the breakdown tests) keep it.
+    pub fn factor_with_recovery(m: &CsrMatrix) -> Result<(Self, bool), String> {
+        match Self::factor(m) {
+            Ok(f) => Ok((f, false)),
+            Err(first) => {
+                let mut dmax = 1.0f64;
+                for r in 0..m.rows() {
+                    let (cols, vals) = m.row(r);
+                    for (c, v) in cols.iter().zip(vals) {
+                        if *c as usize == r {
+                            dmax = dmax.max(v.abs());
+                        }
+                    }
+                }
+                let tau = 1e-10 * dmax;
+                Self::factor(&m.shift(tau))
+                    .map(|f| (f, true))
+                    .map_err(|_| first)
+            }
+        }
     }
 
     /// Factor a symmetric *positive definite* matrix, additionally
@@ -554,6 +589,42 @@ mod tests {
         b.push(1, 1, 1.0);
         let err = LdltFactor::factor(&b.build()).unwrap_err();
         assert!(err.contains("breakdown"), "{err}");
+    }
+
+    #[test]
+    fn recovery_perturbs_through_an_exact_breakdown() {
+        // The singular all-ones 2×2: plain factor reports breakdown
+        // (tested above); the recovery path perturbs the diagonal and
+        // factors, reporting that it did.
+        let mut b = CooBuilder::new(2, 2);
+        b.push(0, 0, 1.0);
+        b.push(0, 1, 1.0);
+        b.push(1, 0, 1.0);
+        b.push(1, 1, 1.0);
+        let m = b.build();
+        let (f, recovered) = LdltFactor::factor_with_recovery(&m).unwrap();
+        assert!(recovered, "exact singularity must trip the recovery");
+        assert_eq!(f.n(), 2);
+        // A healthy indefinite factor never perturbs.
+        let (_, recovered) = LdltFactor::factor_with_recovery(&laplacian(6).shift(-3.1)).unwrap();
+        assert!(!recovered);
+    }
+
+    #[test]
+    fn injected_pivot_breakdown_recovers() {
+        // A one-shot injected breakdown errors the first factorization;
+        // the recovery's refactor then succeeds on the healthy matrix.
+        crate::testing::faults::install(crate::testing::faults::FaultPlan::single(
+            0,
+            crate::testing::faults::Fault::PivotBreakdown,
+        ));
+        crate::testing::faults::begin_record(0);
+        let k = laplacian(6).shift(-3.1);
+        let (_, recovered) = LdltFactor::factor_with_recovery(&k).unwrap();
+        assert!(recovered, "injected breakdown must be visible as a recovery");
+        crate::testing::faults::clear();
+        let (_, recovered) = LdltFactor::factor_with_recovery(&k).unwrap();
+        assert!(!recovered);
     }
 
     #[test]

@@ -1,0 +1,193 @@
+//! Deterministic per-record fault injection for the solve supervision
+//! layer (`GenConfig.fault_injection`).
+//!
+//! A [`FaultPlan`] names record ids and the fault to force on each:
+//! a worker panic, a non-converging solve (exercises the escalation
+//! ladder), an LDLᵀ pivot breakdown (exercises the factorization
+//! recovery/degrade path), or a stall (exercises the watchdog). Solve
+//! workers [`install`] the plan into a thread-local and call
+//! [`begin_record`] before each solve; the solver/factorization hooks
+//! ([`take_nonconvergence`], [`take_pivot_breakdown`], …) then fire for
+//! exactly the armed record.
+//!
+//! The hooks are compiled unconditionally (no `#[cfg(test)]` seams in
+//! production code paths) but cost a single thread-local `Option` check
+//! when no plan is installed — the supervision bench
+//! (`benches/faults.rs`) holds the clean-run overhead under 2 %.
+
+use std::cell::RefCell;
+
+/// One fault class an injected record is forced through.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Fault {
+    /// Panic inside the solve worker (caught by the pipeline's
+    /// `catch_unwind` isolation → quarantine record, fault `panic`).
+    Panic,
+    /// Force the next `times` solve attempts to return
+    /// `converged = false` (the escalation ladder then retries;
+    /// `times > max_retries + 1` ends in quarantine, fault
+    /// `nonconvergence`).
+    NonConvergence {
+        /// Consecutive solve attempts to fail before behaving normally.
+        times: usize,
+    },
+    /// Force the next LDLᵀ factorization to report a pivot breakdown
+    /// (the recovery path perturbs + refactors, then degrades
+    /// `shift_invert` to the extremal path, fault `factorization`).
+    PivotBreakdown,
+    /// Sleep for `secs` before the solve (with `solve_timeout_secs` set
+    /// the watchdog abandons the record, fault `timeout`).
+    Stall {
+        /// Seconds to sleep inside the solve stage.
+        secs: f64,
+    },
+}
+
+/// Which records of a generation run are forced through which fault —
+/// carried on `GenConfig.fault_injection` (never serialized; resumed
+/// runs replay clean).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct FaultPlan {
+    /// `(record id, fault)` pairs; a record id may appear once.
+    pub records: Vec<(usize, Fault)>,
+}
+
+impl FaultPlan {
+    /// Plan with a single faulted record.
+    pub fn single(id: usize, fault: Fault) -> Self {
+        Self {
+            records: vec![(id, fault)],
+        }
+    }
+}
+
+/// Faults armed for the record currently being solved on this thread.
+#[derive(Default)]
+struct Armed {
+    panic: bool,
+    nonconvergence: usize,
+    pivot_breakdown: bool,
+    stall_secs: Option<f64>,
+}
+
+thread_local! {
+    static PLAN: RefCell<Option<FaultPlan>> = const { RefCell::new(None) };
+    static ARMED: RefCell<Armed> = RefCell::new(Armed::default());
+}
+
+/// Install a fault plan on the current (worker) thread. Replaces any
+/// previous plan and disarms the current record.
+pub fn install(plan: FaultPlan) {
+    PLAN.with(|p| *p.borrow_mut() = Some(plan));
+    ARMED.with(|a| *a.borrow_mut() = Armed::default());
+}
+
+/// Remove the plan from the current thread (hooks become free no-ops).
+pub fn clear() {
+    PLAN.with(|p| *p.borrow_mut() = None);
+    ARMED.with(|a| *a.borrow_mut() = Armed::default());
+}
+
+/// Arm the faults planned for record `id` (no-op without a plan).
+/// Called by the solve worker immediately before each record's solve.
+pub fn begin_record(id: usize) {
+    PLAN.with(|p| {
+        let p = p.borrow();
+        let Some(plan) = p.as_ref() else { return };
+        let mut armed = Armed::default();
+        for (rid, fault) in &plan.records {
+            if *rid != id {
+                continue;
+            }
+            match fault {
+                Fault::Panic => armed.panic = true,
+                Fault::NonConvergence { times } => armed.nonconvergence = *times,
+                Fault::PivotBreakdown => armed.pivot_breakdown = true,
+                Fault::Stall { secs } => armed.stall_secs = Some(*secs),
+            }
+        }
+        ARMED.with(|a| *a.borrow_mut() = armed);
+    });
+}
+
+/// Whether the armed record must panic now (one-shot).
+pub fn take_panic() -> bool {
+    ARMED.with(|a| std::mem::take(&mut a.borrow_mut().panic))
+}
+
+/// Seconds the armed record must stall before solving (one-shot).
+pub fn take_stall_secs() -> Option<f64> {
+    ARMED.with(|a| a.borrow_mut().stall_secs.take())
+}
+
+/// Whether the next solve attempt must report non-convergence
+/// (decrements the armed attempt count).
+pub fn take_nonconvergence() -> bool {
+    ARMED.with(|a| {
+        let mut a = a.borrow_mut();
+        if a.nonconvergence > 0 {
+            a.nonconvergence -= 1;
+            true
+        } else {
+            false
+        }
+    })
+}
+
+/// Whether the next LDLᵀ factorization must report a pivot breakdown
+/// (one-shot).
+pub fn take_pivot_breakdown() -> bool {
+    ARMED.with(|a| std::mem::take(&mut a.borrow_mut().pivot_breakdown))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hooks_are_inert_without_a_plan() {
+        clear();
+        begin_record(3);
+        assert!(!take_panic());
+        assert!(!take_nonconvergence());
+        assert!(!take_pivot_breakdown());
+        assert!(take_stall_secs().is_none());
+    }
+
+    #[test]
+    fn arms_only_the_planned_record_and_fires_once() {
+        install(FaultPlan {
+            records: vec![
+                (2, Fault::Panic),
+                (2, Fault::NonConvergence { times: 2 }),
+                (5, Fault::PivotBreakdown),
+            ],
+        });
+        begin_record(1);
+        assert!(!take_panic());
+        begin_record(2);
+        assert!(take_panic());
+        assert!(!take_panic(), "panic fault must be one-shot");
+        assert!(take_nonconvergence());
+        assert!(take_nonconvergence());
+        assert!(!take_nonconvergence(), "times budget exhausted");
+        assert!(!take_pivot_breakdown(), "armed for a different record");
+        begin_record(5);
+        assert!(take_pivot_breakdown());
+        assert!(!take_pivot_breakdown());
+        clear();
+        begin_record(2);
+        assert!(!take_panic());
+    }
+
+    #[test]
+    fn stall_is_one_shot_per_record() {
+        install(FaultPlan::single(7, Fault::Stall { secs: 0.25 }));
+        begin_record(7);
+        assert_eq!(take_stall_secs(), Some(0.25));
+        assert_eq!(take_stall_secs(), None);
+        begin_record(7);
+        assert_eq!(take_stall_secs(), Some(0.25), "re-arms per begin_record");
+        clear();
+    }
+}

@@ -15,6 +15,8 @@
 //! });
 //! ```
 
+pub mod faults;
+
 use crate::rng::Xoshiro256pp;
 
 /// Run `prop` over `cases` independently seeded RNG streams derived from

@@ -1,0 +1,341 @@
+//! End-to-end tests of the fault-tolerant solve supervision layer:
+//! every injectable fault class, against every built-in operator
+//! family, through the full two-shard pipeline.
+//!
+//! Three properties are demanded. (1) A faulted record never takes the
+//! run down: the dataset completes with the injected record carrying
+//! the documented `status`/`fault` pair. (2) A fault poisons only its
+//! own record: with the faulted record placed at the tail of its warm
+//! chain, every other record is byte-identical to a clean run's.
+//! (3) Crash-resume works across a dataset containing quarantined
+//! records, reproducing the faulted run bit for bit.
+
+use scsf::coordinator::config::{FamilySpec, GenConfig};
+use scsf::coordinator::dataset::{DatasetReader, RecordMeta};
+use scsf::coordinator::pipeline::{generate_dataset, resume_dataset};
+use scsf::eig::op::Transform;
+use scsf::eig::scsf::SolveStatus;
+use scsf::sort::SortMethod;
+use scsf::testing::faults::{Fault, FaultPlan};
+use std::path::{Path, PathBuf};
+
+/// The five built-in operator families.
+const FAMILIES: [&str; 5] = [
+    "poisson",
+    "elliptic",
+    "helmholtz",
+    "vibration",
+    "helmholtz_fem",
+];
+
+fn tmpdir(tag: &str) -> PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "scsf_fault_{tag}_{}_{:?}",
+        std::process::id(),
+        std::thread::current().id()
+    ));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+/// Small-but-real two-shard config (the supervision layer must work
+/// across concurrent runs, not just a single chain).
+fn base_cfg(family: &str) -> GenConfig {
+    GenConfig {
+        families: vec![FamilySpec::new(family, 6)],
+        grid: 8,
+        n_eigs: 3,
+        tol: Some(1e-7),
+        seed: 23,
+        shards: 2,
+        channel_capacity: 2,
+        sort: SortMethod::TruncatedFft { p0: 6 },
+        ..Default::default()
+    }
+}
+
+/// A record's exact byte span in `eigs.bin`.
+fn record_bytes<'a>(bin: &'a [u8], meta: &RecordMeta) -> &'a [u8] {
+    let len = 3 * 8 + meta.l * 8 + meta.n * meta.l * 8;
+    &bin[meta.offset as usize..meta.offset as usize + len]
+}
+
+/// Strip the fields two otherwise-identical runs may legitimately
+/// disagree on: `offset` depends on nondeterministic arrival
+/// interleave, `secs` on the clock.
+fn normalized(meta: &RecordMeta) -> RecordMeta {
+    let mut m = meta.clone();
+    m.offset = 0;
+    m.secs = 0.0;
+    m
+}
+
+fn meta_of(reader: &DatasetReader, id: usize) -> RecordMeta {
+    reader
+        .index()
+        .iter()
+        .find(|r| r.id == id)
+        .unwrap_or_else(|| panic!("record {id} missing from the manifest"))
+        .clone()
+}
+
+/// Fault classes that run on the plain (untransformed) operator:
+/// a worker panic quarantines its record; one forced non-convergence
+/// climbs the ladder and lands `retried`; an unbounded forced
+/// non-convergence exhausts the iterative rungs and is rescued by the
+/// dense fallback (small plain operators only).
+#[test]
+fn plain_fault_matrix_covers_every_family() {
+    for family in FAMILIES {
+        let dir = tmpdir(&format!("plain_{family}"));
+        let mut cfg = base_cfg(family);
+        cfg.fault_injection = Some(FaultPlan {
+            records: vec![
+                (1, Fault::NonConvergence { times: 1 }),
+                (3, Fault::Panic),
+                (5, Fault::NonConvergence { times: 99 }),
+            ],
+        });
+        let report = generate_dataset(&cfg, &dir).unwrap();
+        assert_eq!(report.n_problems, 6, "{family}");
+        assert_eq!(report.quarantined, 1, "{family}: {:?}", report.faults);
+        assert_eq!(report.faults.get("panic"), Some(&1), "{family}");
+        assert!(report.retries >= 1, "{family}: {report:?}");
+        assert!(report.fallbacks >= 1, "{family}: {report:?}");
+
+        let reader = DatasetReader::open(&dir).unwrap();
+        assert_eq!(reader.index().len(), 6, "{family}");
+
+        let retried = meta_of(&reader, 1);
+        assert_eq!(retried.status, SolveStatus::Retried, "{family}");
+        assert!(retried.retries >= 1, "{family}");
+        assert!(retried.fault.is_empty(), "{family}: {}", retried.fault);
+        assert!(retried.l > 0, "{family}");
+
+        let panicked = meta_of(&reader, 3);
+        assert_eq!(panicked.status, SolveStatus::Quarantined, "{family}");
+        assert_eq!(panicked.fault, "panic", "{family}");
+        assert_eq!(panicked.l, 0, "{family}");
+
+        let rescued = meta_of(&reader, 5);
+        assert_eq!(rescued.status, SolveStatus::Retried, "{family}");
+        assert!(rescued.fallback, "{family}: dense fallback must rescue");
+        assert!(rescued.l > 0, "{family}");
+
+        for rec in reader.index().iter().filter(|r| ![1, 3, 5].contains(&r.id)) {
+            assert_ne!(
+                rec.status,
+                SolveStatus::Quarantined,
+                "{family}: record {} must be untouched",
+                rec.id
+            );
+            assert!(rec.l > 0, "{family}: record {}", rec.id);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// Fault classes that need a factorization in the loop (shift-invert):
+/// an injected pivot breakdown is recovered by the bounded diagonal
+/// perturbation (`retried`, fault `factorization`); a non-convergence
+/// that outlasts the ladder quarantines, because transformed operators
+/// have no dense fallback rung.
+#[test]
+fn factorization_fault_matrix_covers_every_family() {
+    for family in FAMILIES {
+        let dir = tmpdir(&format!("factor_{family}"));
+        let mut cfg = base_cfg(family);
+        cfg.transform = Transform::ShiftInvert { sigma: 0.0 };
+        cfg.fault_injection = Some(FaultPlan {
+            records: vec![
+                (2, Fault::PivotBreakdown),
+                (4, Fault::NonConvergence { times: 99 }),
+            ],
+        });
+        let report = generate_dataset(&cfg, &dir).unwrap();
+        assert_eq!(report.n_problems, 6, "{family}");
+        assert_eq!(report.quarantined, 1, "{family}: {:?}", report.faults);
+        assert_eq!(report.faults.get("factorization"), Some(&1), "{family}");
+        assert_eq!(report.faults.get("nonconvergence"), Some(&1), "{family}");
+
+        let reader = DatasetReader::open(&dir).unwrap();
+        assert_eq!(reader.index().len(), 6, "{family}");
+
+        let recovered = meta_of(&reader, 2);
+        assert_eq!(recovered.status, SolveStatus::Retried, "{family}");
+        assert_eq!(recovered.fault, "factorization", "{family}");
+        assert!(recovered.l > 0, "{family}");
+
+        let exhausted = meta_of(&reader, 4);
+        assert_eq!(exhausted.status, SolveStatus::Quarantined, "{family}");
+        assert_eq!(exhausted.fault, "nonconvergence", "{family}");
+        assert_eq!(exhausted.l, 0, "{family}");
+
+        for rec in reader.index().iter().filter(|r| ![2, 4].contains(&r.id)) {
+            assert_ne!(
+                rec.status,
+                SolveStatus::Quarantined,
+                "{family}: record {} must be untouched",
+                rec.id
+            );
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// The stall class: with the watchdog armed, a stalled record is
+/// abandoned after the timeout and quarantined with fault `timeout`;
+/// every other record still solves (on the watchdog's per-record
+/// supervised threads).
+#[test]
+fn stall_fault_matrix_covers_every_family() {
+    for family in FAMILIES {
+        let dir = tmpdir(&format!("stall_{family}"));
+        let mut cfg = base_cfg(family);
+        cfg.solve_timeout_secs = Some(2.0);
+        cfg.fault_injection = Some(FaultPlan::single(0, Fault::Stall { secs: 30.0 }));
+        let report = generate_dataset(&cfg, &dir).unwrap();
+        assert_eq!(report.quarantined, 1, "{family}: {:?}", report.faults);
+        assert_eq!(report.faults.get("timeout"), Some(&1), "{family}");
+
+        let reader = DatasetReader::open(&dir).unwrap();
+        assert_eq!(reader.index().len(), 6, "{family}");
+        let stalled = meta_of(&reader, 0);
+        assert_eq!(stalled.status, SolveStatus::Quarantined, "{family}");
+        assert_eq!(stalled.fault, "timeout", "{family}");
+        assert_eq!(stalled.l, 0, "{family}");
+        for rec in reader.index().iter().filter(|r| r.id != 0) {
+            assert_eq!(
+                rec.status,
+                SolveStatus::Ok,
+                "{family}: record {} must solve cleanly under the watchdog",
+                rec.id
+            );
+            assert!(rec.l > 0, "{family}: record {}", rec.id);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}
+
+/// A fault poisons only its own record. The victim is the record its
+/// shard solves *last* (per-sender FIFO through the result channel
+/// means the shard's max-offset record closes its solve order), so
+/// quarantining it perturbs no downstream solve in either warm chain —
+/// every other record must be byte-identical to the clean run's.
+#[test]
+fn panic_on_a_chain_tail_leaves_every_other_record_byte_identical() {
+    let d_clean = tmpdir("bytes_clean");
+    let d_fault = tmpdir("bytes_fault");
+    let cfg = base_cfg("helmholtz");
+    generate_dataset(&cfg, &d_clean).unwrap();
+    let clean = DatasetReader::open(&d_clean).unwrap();
+    let clean_index = clean.index().to_vec();
+    let victim = clean_index
+        .iter()
+        .filter(|r| r.shard == 0)
+        .max_by_key(|r| r.offset)
+        .unwrap()
+        .id;
+    let mut fcfg = cfg.clone();
+    fcfg.fault_injection = Some(FaultPlan::single(victim, Fault::Panic));
+    let report = generate_dataset(&fcfg, &d_fault).unwrap();
+    assert_eq!(report.quarantined, 1);
+    let faulted = DatasetReader::open(&d_fault).unwrap();
+    let bin_clean = std::fs::read(d_clean.join("eigs.bin")).unwrap();
+    let bin_fault = std::fs::read(d_fault.join("eigs.bin")).unwrap();
+    for rc in clean_index.iter().filter(|r| r.id != victim) {
+        let rf = meta_of(&faulted, rc.id);
+        assert_eq!(normalized(rc), normalized(&rf), "id {}", rc.id);
+        assert_eq!(
+            record_bytes(&bin_clean, rc),
+            record_bytes(&bin_fault, &rf),
+            "id {}: record bytes must match the clean run",
+            rc.id
+        );
+    }
+    let q = meta_of(&faulted, victim);
+    assert_eq!(q.status, SolveStatus::Quarantined);
+    assert_eq!(q.fault, "panic");
+    assert_eq!(q.l, 0);
+    let _ = std::fs::remove_dir_all(&d_clean);
+    let _ = std::fs::remove_dir_all(&d_fault);
+}
+
+fn copy_dataset(src: &Path, dst: &Path) {
+    let _ = std::fs::remove_dir_all(dst);
+    std::fs::create_dir_all(dst).unwrap();
+    for f in ["eigs.bin", "manifest.json"] {
+        std::fs::copy(src.join(f), dst.join(f)).unwrap();
+    }
+}
+
+/// Crash-resume across a dataset that already contains a quarantined
+/// record. The manifest is torn *after* the quarantine's checkpoint
+/// (fault plans are never serialized, so a resumed re-solve of the
+/// faulted record would succeed and fork the dataset); resume must
+/// skip the quarantined record, re-enter the chain cold after it, and
+/// reproduce the uninterrupted faulted run bit for bit.
+#[test]
+fn resume_crosses_a_quarantined_record() {
+    let d_full = tmpdir("resq_full");
+    let d_torn = tmpdir("resq_torn");
+    let mut cfg = base_cfg("helmholtz");
+    cfg.chunk_records = Some(2);
+    cfg.fault_injection = Some(FaultPlan::single(0, Fault::Panic));
+    let report = generate_dataset(&cfg, &d_full).unwrap();
+    assert_eq!(report.quarantined, 1);
+
+    let full = DatasetReader::open(&d_full).unwrap();
+    let full_index = full.index().to_vec();
+    let layout = full.layout().expect("chunked dataset has a layout").clone();
+    // Cut the manifest at the start of the chunk after the one holding
+    // the quarantined record — the quarantine stays checkpointed, the
+    // tail must be re-solved. When the quarantine sits in the last
+    // chunk, tear only the footer instead (everything checkpointed).
+    let qpos = full_index
+        .iter()
+        .position(|r| r.status == SolveStatus::Quarantined)
+        .expect("one record is quarantined");
+    let chunk_idx = layout
+        .chunks
+        .iter()
+        .position(|c| qpos < c.first_record + c.records)
+        .unwrap();
+    let manifest = d_torn.join("manifest.json");
+    copy_dataset(&d_full, &d_torn);
+    let cut = match layout.chunks.get(chunk_idx + 1) {
+        Some(next) => next.manifest_offset,
+        None => std::fs::metadata(&manifest).unwrap().len() - 1,
+    };
+    let f = std::fs::OpenOptions::new()
+        .write(true)
+        .open(&manifest)
+        .unwrap();
+    f.set_len(cut).unwrap();
+    drop(f);
+
+    let resumed_report = resume_dataset(&d_torn).unwrap();
+    assert_eq!(resumed_report.n_problems, 6);
+    assert!(resumed_report.resumed_records >= 1);
+    // The checkpointed quarantine folds back into the resumed rollups.
+    assert_eq!(resumed_report.quarantined, 1, "{:?}", resumed_report.faults);
+    assert_eq!(resumed_report.faults.get("panic"), Some(&1));
+
+    let resumed = DatasetReader::open(&d_torn).unwrap();
+    assert!(resumed.layout().unwrap().complete);
+    assert_eq!(resumed.index().len(), 6);
+    let bin_full = std::fs::read(d_full.join("eigs.bin")).unwrap();
+    let bin_res = std::fs::read(d_torn.join("eigs.bin")).unwrap();
+    for rf in &full_index {
+        let rr = meta_of(&resumed, rf.id);
+        assert_eq!(normalized(rf), normalized(&rr), "id {}", rf.id);
+        assert_eq!(
+            record_bytes(&bin_full, rf),
+            record_bytes(&bin_res, &rr),
+            "id {}: resumed record bytes must match the uninterrupted run",
+            rf.id
+        );
+    }
+    let _ = std::fs::remove_dir_all(&d_full);
+    let _ = std::fs::remove_dir_all(&d_torn);
+}
